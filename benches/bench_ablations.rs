@@ -1,0 +1,110 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. **Overlap boost (eq. 7)** — the paper's Sec. III-B claim: the 2× step
+//!    on overlapping layers improves the global model. On/off accuracy, real
+//!    training.
+//! 2. **Cost-profile fidelity** — Table I under the paper's uniform-F layer
+//!    model vs the per-layer ResNet-18 profile (does the greedy conclusion
+//!    survive cost-model refinement?).
+//! 3. **α/β objective weights** — round-time across the eq. (5) tradeoff.
+//!
+//! Requires `make artifacts` for ablation 1 (2 and 3 always run).
+
+#[path = "common.rs"]
+mod common;
+
+use fedpairing::config::{Algorithm, ExperimentConfig, PairingStrategy};
+use fedpairing::coordinator::run_experiment;
+use fedpairing::pairing::pair_clients;
+use fedpairing::sim::channel::Channel;
+use fedpairing::sim::latency::{fedpairing_round, Fleet, Schedule};
+use fedpairing::sim::profile::ModelProfile;
+use fedpairing::util::rng::Rng;
+
+fn main() {
+    // --- 1. overlap boost on/off ---
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("== ablation 1: eq.(7) overlap 2x step ==");
+        // Unequal splits (heterogeneous freqs) guarantee overlapping layers.
+        let mut accs = Vec::new();
+        for boost in [true, false] {
+            let mut cfg = ExperimentConfig::preset("fig2").unwrap();
+            cfg.algorithm = Algorithm::FedPairing;
+            cfg.n_clients = 8;
+            cfg.samples_per_client = 160;
+            cfg.rounds = 12;
+            cfg.test_samples = 600;
+            cfg.seed = 17;
+            cfg.overlap_boost = boost;
+            let res = run_experiment(cfg).expect("run");
+            println!(
+                "  overlap_boost={boost:<5} final={:.4} best={:.4}",
+                res.final_acc(),
+                res.best_acc()
+            );
+            accs.push(res.final_acc());
+        }
+        println!(
+            "  delta (boost - no-boost): {:+.2}pp (paper claims positive)",
+            (accs[0] - accs[1]) * 100.0
+        );
+    } else {
+        println!("== ablation 1 SKIPPED (no artifacts) ==");
+    }
+
+    // --- 2. uniform-F vs per-layer ResNet profile ---
+    println!("== ablation 2: cost-profile fidelity (Table I under uniform F) ==");
+    let cfg = ExperimentConfig::default();
+    let resnet = ModelProfile::resnet18_cifar();
+    // Uniform profile with the same totals: W=10 equal layers.
+    let uniform = ModelProfile::uniform(
+        resnet.w(),
+        resnet.fwd_flops(0, resnet.w()) / resnet.w() as f64,
+        resnet.layers.iter().map(|l| l.act_bytes).sum::<f64>() / resnet.w() as f64,
+    );
+    for (name, profile) in [("resnet18 (per-layer)", &resnet), ("uniform-F (paper model)", &uniform)] {
+        let mut rng = Rng::new(17);
+        let fleet = Fleet::sample(&cfg, &mut rng);
+        let ch = Channel::new(cfg.channel);
+        let sched = Schedule { batch_size: 32, epochs: 2 };
+        print!("  {name:<26}");
+        for strat in [
+            PairingStrategy::Greedy,
+            PairingStrategy::Random,
+            PairingStrategy::Location,
+            PairingStrategy::Compute,
+        ] {
+            let pairs = pair_clients(strat, &fleet, &ch, cfg.alpha, cfg.beta, &mut rng.fork(7));
+            let t = fedpairing_round(&fleet, &pairs, profile, &sched, &ch, &cfg.compute, true).total_s;
+            print!(" {}={:.0}s", strat.name(), t);
+        }
+        println!();
+    }
+    println!("  (shape check: greedy < random under BOTH cost models)");
+
+    // --- 3. α/β sweep ---
+    println!("== ablation 3: eq.(5) objective weights ==");
+    let mut rng = Rng::new(17);
+    let fleet = Fleet::sample(&cfg, &mut rng);
+    let ch = Channel::new(cfg.channel);
+    let sched = Schedule { batch_size: 32, epochs: 2 };
+    let profile = ModelProfile::resnet18_cifar();
+    for &(alpha, beta) in &[
+        (1.0, 0.0),
+        (1.0, 1e-10),
+        (1.0, 5e-10),
+        (1.0, 2e-9),
+        (0.0, 1.0),
+    ] {
+        let pairs = pair_clients(
+            PairingStrategy::Greedy,
+            &fleet,
+            &ch,
+            alpha,
+            beta,
+            &mut rng.fork(3),
+        );
+        let t = fedpairing_round(&fleet, &pairs, &profile, &sched, &ch, &cfg.compute, true).total_s;
+        println!("  alpha={alpha:<4} beta={beta:<8.0e} round={t:>7.0}s");
+    }
+}

@@ -1,0 +1,107 @@
+//! L3 hot path microbenchmarks: artifact execution latency and the host-side
+//! parameter math. This is the bench that drives the §Perf iteration log in
+//! EXPERIMENTS.md (before/after per optimization).
+//!
+//! Requires `make artifacts`.
+
+#[path = "common.rs"]
+mod common;
+
+use fedpairing::nn;
+use fedpairing::runtime::Engine;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let mut e = Engine::load("artifacts").expect("engine");
+    let meta = e.meta().clone();
+    println!(
+        "== runtime hot path (W={}, {} params, train_batch={}) ==",
+        meta.layers, meta.n_params, meta.train_batch
+    );
+    let params = e.init_params(1).unwrap();
+    let b = meta.train_batch;
+    let x: Vec<f32> = (0..b * meta.input_dim)
+        .map(|i| ((i * 2654435761usize) % 1000) as f32 / 500.0 - 1.0)
+        .collect();
+    let mut y = vec![0f32; b * meta.classes];
+    for r in 0..b {
+        y[r * meta.classes + r % meta.classes] = 1.0;
+    }
+    let xe = vec![0.05f32; meta.eval_batch * meta.input_dim];
+    let mut ye = vec![0f32; meta.eval_batch * meta.classes];
+    for r in 0..meta.eval_batch {
+        ye[r * meta.classes + r % meta.classes] = 1.0;
+    }
+
+    common::report_header();
+    common::bench("full_step (FL local step)", 3, 30, || {
+        common::black_box(e.full_step(&params, &x, &y).unwrap());
+    })
+    .report();
+
+    let k = meta.layers / 2;
+    let pf = params[..2 * k].to_vec();
+    let pb = params[2 * k..].to_vec();
+    common::bench("front_fwd (k=W/2)", 3, 30, || {
+        common::black_box(e.front_fwd(k, &pf, &x).unwrap());
+    })
+    .report();
+    let act = e.front_fwd(k, &pf, &x).unwrap();
+    common::bench("back_fwd", 3, 30, || {
+        common::black_box(e.back_fwd(k, &pb, &act).unwrap());
+    })
+    .report();
+    let logits = e.back_fwd(k, &pb, &act).unwrap();
+    common::bench("loss_grad", 3, 30, || {
+        common::black_box(e.loss_grad(&logits, &y).unwrap());
+    })
+    .report();
+    let (_, gl) = e.loss_grad(&logits, &y).unwrap();
+    common::bench("back_bwd", 3, 30, || {
+        common::black_box(e.back_bwd(k, &pb, &act, &gl).unwrap());
+    })
+    .report();
+    let (_, ga) = e.back_bwd(k, &pb, &act, &gl).unwrap();
+    common::bench("front_bwd", 3, 30, || {
+        common::black_box(e.front_bwd(k, &pf, &x, &ga).unwrap());
+    })
+    .report();
+    let five = common::bench("split 5-step (one direction)", 2, 15, || {
+        let act = e.front_fwd(k, &pf, &x).unwrap();
+        let logits = e.back_fwd(k, &pb, &act).unwrap();
+        let (_, gl) = e.loss_grad(&logits, &y).unwrap();
+        let (_gb, ga) = e.back_bwd(k, &pb, &act, &gl).unwrap();
+        common::black_box(e.front_bwd(k, &pf, &x, &ga).unwrap());
+    });
+    five.report();
+    println!(
+        "  => split-direction throughput: {:.0} samples/s",
+        b as f64 / five.mean_s
+    );
+    common::bench("eval_batch (256 rows)", 2, 15, || {
+        common::black_box(e.eval_batch(&params, &xe, &ye).unwrap());
+    })
+    .report();
+
+    println!("-- host-side parameter math (1.2M params) --");
+    let grads = params.clone();
+    let mut model = params.clone();
+    common::bench("sgd_apply", 3, 50, || {
+        nn::sgd_apply(&mut model, &grads, 1e-6);
+    })
+    .report();
+    let locals: Vec<nn::Params> = (0..20).map(|_| params.clone()).collect();
+    let mut global = params.clone();
+    common::bench("aggregate_deltas (20 clients)", 2, 10, || {
+        nn::aggregate_deltas(&mut global, &locals);
+    })
+    .report();
+    let weights = vec![0.05f64; 20];
+    common::bench("fedavg_weighted (20 clients)", 2, 10, || {
+        common::black_box(nn::fedavg_weighted(&locals, &weights));
+    })
+    .report();
+}

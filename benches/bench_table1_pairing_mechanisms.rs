@@ -1,0 +1,100 @@
+//! Paper Table I: average round time under different pairing mechanisms.
+//!
+//! Workload: the paper's setup — 20 clients in a 50 m disk, CPU ~ U[0.1,2] GHz,
+//! ResNet-18 cost profile on 3×32×32, 2500 samples/client, 2 local epochs,
+//! eq. (3) channel. Reports the single-draw table (the paper reports one
+//! fleet realization) and a 20-draw mean, plus the wall-cost of the pairing
+//! algorithms themselves.
+//!
+//! Paper row: greedy 1553 s < compute 1807 s < random 4063 s < location 7275 s.
+
+#[path = "common.rs"]
+mod common;
+
+use fedpairing::config::{ExperimentConfig, PairingStrategy};
+use fedpairing::pairing::pair_clients;
+use fedpairing::sim::channel::Channel;
+use fedpairing::sim::latency::{fedpairing_round, Fleet, Schedule};
+use fedpairing::sim::profile::ModelProfile;
+use fedpairing::util::rng::Rng;
+use fedpairing::util::stats::Summary;
+
+const STRATEGIES: [(PairingStrategy, Option<f64>); 5] = [
+    (PairingStrategy::Greedy, Some(1553.0)),
+    (PairingStrategy::Random, Some(4063.0)),
+    (PairingStrategy::Location, Some(7275.0)),
+    (PairingStrategy::Compute, Some(1807.0)),
+    (PairingStrategy::Exact, None),
+];
+
+fn round_time(cfg: &ExperimentConfig, seed: u64, strat: PairingStrategy) -> f64 {
+    let mut cfg = cfg.clone();
+    cfg.seed = seed;
+    let mut rng = Rng::new(seed);
+    let fleet = Fleet::sample(&cfg, &mut rng);
+    let ch = Channel::new(cfg.channel);
+    let sched = Schedule {
+        batch_size: 32,
+        epochs: cfg.local_epochs,
+    };
+    let profile = ModelProfile::resnet18_cifar();
+    let pairs = pair_clients(strat, &fleet, &ch, cfg.alpha, cfg.beta, &mut rng.fork(7));
+    fedpairing_round(&fleet, &pairs, &profile, &sched, &ch, &cfg.compute, true).total_s
+}
+
+fn main() {
+    let cfg = ExperimentConfig::default();
+    println!("== Table I: avg round time by pairing mechanism ==");
+    println!("-- single draw (seed 17), paper-comparable --");
+    let mut single = Vec::new();
+    for (strat, paper) in STRATEGIES {
+        let t = round_time(&cfg, 17, strat);
+        common::paper_row(strat.name(), t, paper);
+        single.push((strat, t));
+    }
+    let get = |s: PairingStrategy| single.iter().find(|(x, _)| *x == s).unwrap().1;
+    common::check_shape(
+        "greedy beats random",
+        get(PairingStrategy::Greedy) < get(PairingStrategy::Random),
+    );
+    common::check_shape(
+        "greedy beats location",
+        get(PairingStrategy::Greedy) < get(PairingStrategy::Location),
+    );
+    common::check_shape(
+        "greedy within 10% of compute-based or better",
+        get(PairingStrategy::Greedy) <= 1.10 * get(PairingStrategy::Compute),
+    );
+    common::check_shape(
+        "random beats location (paper draw)",
+        get(PairingStrategy::Random) < get(PairingStrategy::Location),
+    );
+
+    println!("-- 20-draw mean ± std --");
+    for (strat, _) in STRATEGIES {
+        let mut s = Summary::new();
+        for seed in 0..20 {
+            s.push(round_time(&cfg, 1000 + seed, strat));
+        }
+        println!("  {:<28} {:>9.0} ± {:>5.0} s", strat.name(), s.mean(), s.std());
+    }
+
+    println!("-- pairing algorithm wall cost (N=20, complete graph) --");
+    common::report_header();
+    let mut rng = Rng::new(5);
+    let fleet = Fleet::sample(&cfg, &mut rng);
+    let ch = Channel::new(cfg.channel);
+    for strat in [
+        PairingStrategy::Greedy,
+        PairingStrategy::Random,
+        PairingStrategy::Location,
+        PairingStrategy::Compute,
+        PairingStrategy::Exact,
+    ] {
+        let mut r2 = Rng::new(9);
+        common::bench(strat.name(), 3, 10, || {
+            common::black_box(pair_clients(strat, &fleet, &ch, 1.0, 5e-10, &mut r2));
+        })
+        .report();
+    }
+}

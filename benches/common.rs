@@ -1,0 +1,96 @@
+//! Shared bench harness (substrate — `criterion` is unavailable offline).
+//!
+//! Provides warmup+repeat wall-clock timing with mean/std/min reporting, and
+//! table-printing helpers shared by the paper-table benches. Each bench
+//! target includes this file via `#[path = "common.rs"] mod common;`.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+/// Timing summary of a benched closure.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) {
+        println!(
+            "  {:<36} {:>10} {:>10} {:>10}   ({} iters)",
+            self.name,
+            fmt_time(self.mean_s),
+            fmt_time(self.min_s),
+            fmt_time(self.std_s),
+            self.iters
+        );
+    }
+}
+
+/// Human-friendly seconds formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// Header for `BenchStats::report` rows.
+pub fn report_header() {
+    println!(
+        "  {:<36} {:>10} {:>10} {:>10}",
+        "benchmark", "mean", "min", "std"
+    );
+}
+
+/// Time `f` with `warmup` unmeasured runs then `iters` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / iters as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / iters as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        std_s: var.sqrt(),
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_s: times.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a paper-comparison table row.
+pub fn paper_row(label: &str, measured: f64, paper: Option<f64>) {
+    match paper {
+        Some(p) => println!("  {label:<28} {measured:>9.0} s    (paper: {p:.0} s)"),
+        None => println!("  {label:<28} {measured:>9.0} s    (paper: —)"),
+    }
+}
+
+/// Assert-with-report: prints PASS/FAIL for a shape property without
+/// aborting the bench (benches report, tests enforce).
+pub fn check_shape(what: &str, ok: bool) {
+    println!("  shape[{}]: {}", what, if ok { "PASS" } else { "FAIL (see EXPERIMENTS.md)" });
+}

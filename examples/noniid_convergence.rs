@@ -1,0 +1,103 @@
+//! Figures 2 & 3 regeneration: convergence of FedPairing vs vanilla FL,
+//! vanilla SL, and SplitFed under IID and Non-IID (2-class shard) data.
+//!
+//! Writes one CSV per (figure, algorithm) to `runs/` with the full accuracy
+//! curve, and prints the final-accuracy comparison the paper reports
+//! ("FedPairing improves on FL/SL/SplitFed by …").
+//!
+//! ```bash
+//! cargo run --release --example noniid_convergence            # both figures
+//! cargo run --release --example noniid_convergence -- --fig 3 # Non-IID only
+//! cargo run --release --example noniid_convergence -- --rounds 40 --samples 256
+//! ```
+
+use fedpairing::cli::Command;
+use fedpairing::config::{Algorithm, DataDistribution, ExperimentConfig};
+use fedpairing::coordinator::run_experiment;
+
+fn main() -> anyhow::Result<()> {
+    let cmd = Command::new("noniid_convergence", "paper Figs. 2-3 driver")
+        .flag("rounds", Some('r'), Some("N"), "communication rounds", Some("25"))
+        .flag("samples", None, Some("N"), "samples per client", Some("192"))
+        .flag("clients", Some('n'), Some("N"), "fleet size", Some("12"))
+        .flag("seed", Some('s'), Some("N"), "seed", Some("17"))
+        .flag("fig", None, Some("N"), "2 (IID), 3 (Non-IID), or both", Some("both"));
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let p = match cmd.parse(&args) {
+        Ok(p) => p,
+        Err(e) => {
+            println!("{e}");
+            return Ok(());
+        }
+    };
+    let rounds: usize = p.req("rounds").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let samples: usize = p.req("samples").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let clients: usize = p.req("clients").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let seed: u64 = p.req("seed").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let which = p.get("fig").unwrap_or("both").to_string();
+
+    let figs: Vec<(&str, DataDistribution)> = match which.as_str() {
+        "2" => vec![("fig2", DataDistribution::Iid)],
+        "3" => vec![(
+            "fig3",
+            DataDistribution::ClassShards { classes_per_client: 2 },
+        )],
+        _ => vec![
+            ("fig2", DataDistribution::Iid),
+            (
+                "fig3",
+                DataDistribution::ClassShards { classes_per_client: 2 },
+            ),
+        ],
+    };
+    let algos = [
+        Algorithm::FedPairing,
+        Algorithm::VanillaFL,
+        Algorithm::VanillaSL,
+        Algorithm::SplitFed,
+    ];
+    for (fig, dist) in figs {
+        println!("\n=== {fig}: {} ===", dist.name());
+        let mut finals = Vec::new();
+        for algo in algos {
+            let mut cfg = ExperimentConfig::default();
+            cfg.name = fig.into();
+            cfg.algorithm = algo;
+            cfg.distribution = dist;
+            cfg.rounds = rounds;
+            cfg.samples_per_client = samples;
+            cfg.n_clients = clients;
+            cfg.seed = seed;
+            cfg.test_samples = 600;
+            let res = run_experiment(cfg)?;
+            let (csv, _) = res.save("runs")?;
+            println!(
+                "  {:<12} final={:.4} best={:.4}  ({csv})",
+                algo.name(),
+                res.final_acc(),
+                res.best_acc()
+            );
+            finals.push((algo, res.final_acc()));
+        }
+        let fp = finals[0].1;
+        println!("  -- FedPairing improvement over:");
+        for (algo, acc) in &finals[1..] {
+            println!(
+                "     {:<12} {:+.1} pp (paper {}: {})",
+                algo.name(),
+                (fp - acc) * 100.0,
+                fig,
+                match (fig, algo) {
+                    ("fig2", Algorithm::VanillaFL) => "+4.1",
+                    ("fig2", Algorithm::VanillaSL) => "+1.8",
+                    ("fig2", Algorithm::SplitFed) => "+10.8",
+                    ("fig3", Algorithm::VanillaFL) => "+5.3",
+                    ("fig3", Algorithm::VanillaSL) => "+38.2",
+                    ("fig3", Algorithm::SplitFed) => "+44.6",
+                    _ => "-",
+                }
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Pairing playground: explore the eq. (5) objective.
+//!
+//! * α/β sweep — how the compute/comm tradeoff moves round time;
+//! * greedy-vs-exact matching gap (weight and round-time);
+//! * the split-length rule's balance quality across the fleet.
+//!
+//! ```bash
+//! cargo run --release --example pairing_playground
+//! ```
+
+use fedpairing::config::{ExperimentConfig, PairingStrategy};
+use fedpairing::pairing::{exact::exact_matching, graph::ClientGraph, greedy::greedy_matching, pair_clients};
+use fedpairing::sim::channel::Channel;
+use fedpairing::sim::compute::{split_imbalance, split_lengths};
+use fedpairing::sim::latency::{self, Fleet, Schedule};
+use fedpairing::sim::profile::ModelProfile;
+use fedpairing::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ExperimentConfig::default();
+    let mut rng = Rng::new(17);
+    let fleet = Fleet::sample(&cfg, &mut rng);
+    let ch = Channel::new(cfg.channel);
+    let profile = ModelProfile::resnet18_cifar();
+    let sched = Schedule { batch_size: 32, epochs: 2 };
+
+    println!("=== α/β sweep (greedy round time, 20-client fleet, seed 17) ===");
+    println!("{:>8} {:>10} {:>12} {:>14}", "alpha", "beta", "round s", "matching ε");
+    for &(alpha, beta) in &[
+        (1.0, 0.0),     // compute-only (≡ compute-based baseline)
+        (1.0, 1e-10),
+        (1.0, 5e-10),   // default
+        (1.0, 2e-9),
+        (1.0, 1e-8),
+        (0.0, 1.0),     // rate-only (≈ location-based)
+    ] {
+        let g = ClientGraph::build(&fleet, &ch, alpha, beta);
+        let pairs = greedy_matching(&g);
+        let rt = latency::fedpairing_round(&fleet, &pairs, &profile, &sched, &ch, &cfg.compute, true);
+        println!(
+            "{alpha:>8} {beta:>10.0e} {:>10.0} s {:>14.3}",
+            rt.total_s,
+            g.matching_weight(&pairs)
+        );
+    }
+
+    println!("\n=== greedy vs exact matching across fleet draws ===");
+    println!("{:>6} {:>12} {:>12} {:>9} {:>12} {:>12}", "seed", "greedy ε", "exact ε", "ratio", "greedy s", "exact s");
+    for seed in 0..8u64 {
+        let mut cfg = ExperimentConfig::default();
+        cfg.seed = seed;
+        let mut rng = Rng::new(seed);
+        let fleet = Fleet::sample(&cfg, &mut rng);
+        let g = ClientGraph::build(&fleet, &ch, cfg.alpha, cfg.beta);
+        let mg = greedy_matching(&g);
+        let me = exact_matching(&g);
+        let (wg, we) = (g.matching_weight(&mg), g.matching_weight(&me));
+        let tg = latency::fedpairing_round(&fleet, &mg, &profile, &sched, &ch, &cfg.compute, true).total_s;
+        let te = latency::fedpairing_round(&fleet, &me, &profile, &sched, &ch, &cfg.compute, true).total_s;
+        println!("{seed:>6} {wg:>12.3} {we:>12.3} {:>9.4} {tg:>10.0} s {te:>10.0} s", wg / we);
+    }
+    println!("(note: exact maximizes ε, not round time — weight-optimal can be time-worse,");
+    println!(" which is why the paper's greedy heuristic is not the bottleneck)");
+
+    println!("\n=== split-length balance under the paper's rule (W=10) ===");
+    println!("{:>10} {:>10} {:>8} {:>12}", "f_i GHz", "f_j GHz", "L_i/L_j", "imbalance");
+    let mut rng = Rng::new(3);
+    let pairs = pair_clients(PairingStrategy::Greedy, &fleet, &ch, cfg.alpha, cfg.beta, &mut rng);
+    for &(i, j) in pairs.iter().take(10) {
+        let (fi, fj) = (fleet.freqs_hz[i], fleet.freqs_hz[j]);
+        let (li, lj) = split_lengths(fi, fj, 10);
+        println!(
+            "{:>10.2} {:>10.2} {:>5}/{:<4} {:>11.1}%",
+            fi / 1e9,
+            fj / 1e9,
+            li,
+            lj,
+            100.0 * split_imbalance(fi, fj, 10)
+        );
+    }
+    Ok(())
+}

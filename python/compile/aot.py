@@ -1,0 +1,240 @@
+"""AOT export: lower every L2 entry point to HLO *text* + write the manifest.
+
+This is the only place Python touches the pipeline — ``make artifacts`` runs it
+once; afterwards the Rust coordinator is self-contained (it loads
+``artifacts/*.hlo.txt`` through ``HloModuleProto::from_text_file`` and executes
+via the PJRT CPU client).
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md and aot_recipe).
+
+Artifact set (per DESIGN.md §5), for a ``W``-layer model:
+
+    init_params                      (seed:u32) -> (params…)
+    full_step                        (params…, x, y) -> (grads…, loss)
+    eval_batch                       (params…, x, y) -> (loss_sum, n_correct, n_rows)
+    loss_grad                        (logits, y) -> (loss, g_logits)
+    front_fwd_k / back_fwd_k         k = 1..W-1
+    back_bwd_k / front_bwd_k         k = 1..W-1
+
+``manifest.json`` describes the model config, per-layer parameter shapes and
+every entry's input/output signature, so the Rust side never hardcodes shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+import sys
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    ModelConfig,
+    back_bwd,
+    back_fwd,
+    eval_batch,
+    front_bwd,
+    front_fwd,
+    full_step,
+    init_params,
+    loss_grad,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the rust-loadable format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _spec_dict(s) -> Dict[str, Any]:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def _flatten_specs(tree) -> List[Dict[str, Any]]:
+    return [_spec_dict(leaf) for leaf in jax.tree_util.tree_leaves(tree)]
+
+
+class Exporter:
+    """Collects lowered entries and writes artifacts + manifest."""
+
+    def __init__(self, cfg: ModelConfig, train_batch: int, eval_batch_size: int,
+                 out_dir: str):
+        self.cfg = cfg
+        self.train_batch = train_batch
+        self.eval_batch = eval_batch_size
+        self.out_dir = out_dir
+        self.entries: Dict[str, Dict[str, Any]] = {}
+
+    def param_specs(self, lo: int = 0, hi: int | None = None):
+        hi = self.cfg.layers if hi is None else hi
+        shapes = self.cfg.param_shapes()[lo:hi]
+        out = []
+        for w_shape, b_shape in shapes:
+            out.append(_spec(w_shape))
+            out.append(_spec(b_shape))
+        return out
+
+    def export(self, name: str, fn, arg_specs) -> None:
+        """jit → lower → HLO text → ``artifacts/<name>.hlo.txt`` + entry record.
+
+        ``keep_unused=True`` because the manifest advertises the full input
+        list: without it XLA prunes arguments that are dead in the VJP (e.g.
+        the head bias in ``back_bwd_k``, whose primal output is discarded) and
+        the Rust caller's buffer count no longer matches the executable.
+        """
+        lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_specs = jax.tree_util.tree_leaves(
+            jax.eval_shape(fn, *arg_specs)
+        )
+        self.entries[name] = {
+            "file": fname,
+            "inputs": _flatten_specs(arg_specs),
+            "outputs": [_spec_dict(s) for s in out_specs],
+        }
+        print(f"  exported {name}: {len(text)} chars, "
+              f"{len(self.entries[name]['inputs'])} inputs, "
+              f"{len(out_specs)} outputs")
+
+    def manifest(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        return {
+            "format": "hlo-text-v1",
+            "model": {
+                "family": "resnet-mlp",
+                "input_dim": cfg.input_dim,
+                "hidden": cfg.hidden,
+                "classes": cfg.classes,
+                "layers": cfg.layers,
+                "n_params": cfg.n_params(),
+                "param_shapes": [
+                    {"w": list(w), "b": list(b)} for w, b in cfg.param_shapes()
+                ],
+                "flops_per_layer_fwd_b1": cfg.flops_per_layer(1),
+            },
+            "train_batch": self.train_batch,
+            "eval_batch": self.eval_batch,
+            "entries": self.entries,
+        }
+
+
+def export_all(cfg: ModelConfig, train_batch: int, eval_batch_size: int,
+               out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    ex = Exporter(cfg, train_batch, eval_batch_size, out_dir)
+    W = cfg.layers
+    Bt, Be = train_batch, eval_batch_size
+    x_t = _spec((Bt, cfg.input_dim))
+    y_t = _spec((Bt, cfg.classes))
+    x_e = _spec((Be, cfg.input_dim))
+    y_e = _spec((Be, cfg.classes))
+    logits_t = _spec((Bt, cfg.classes))
+    act_t = _spec((Bt, cfg.hidden))
+
+    print(f"[aot] model: W={W} hidden={cfg.hidden} in={cfg.input_dim} "
+          f"classes={cfg.classes} params={cfg.n_params()}")
+
+    ex.export(
+        "init_params",
+        lambda seed: init_params(cfg, seed),
+        [_spec((), jnp.uint32)],
+    )
+    ex.export(
+        "full_step",
+        lambda *a: full_step(cfg, a[:-2], a[-2], a[-1]),
+        [*ex.param_specs(), x_t, y_t],
+    )
+    ex.export(
+        "eval_batch",
+        lambda *a: eval_batch(cfg, a[:-2], a[-2], a[-1]),
+        [*ex.param_specs(), x_e, y_e],
+    )
+    ex.export("loss_grad", loss_grad, [logits_t, y_t])
+
+    for k in range(1, W):
+        ex.export(
+            f"front_fwd_{k}",
+            functools.partial(
+                lambda k, *a: front_fwd(cfg, k, a[:-1], a[-1]), k
+            ),
+            [*ex.param_specs(0, k), x_t],
+        )
+        ex.export(
+            f"back_fwd_{k}",
+            functools.partial(
+                lambda k, *a: back_fwd(cfg, k, a[:-1], a[-1]), k
+            ),
+            [*ex.param_specs(k, W), act_t],
+        )
+        ex.export(
+            f"back_bwd_{k}",
+            functools.partial(
+                lambda k, *a: back_bwd(cfg, k, a[:-2], a[-2], a[-1]), k
+            ),
+            [*ex.param_specs(k, W), act_t, logits_t],
+        )
+        ex.export(
+            f"front_bwd_{k}",
+            functools.partial(
+                lambda k, *a: front_bwd(cfg, k, a[:-2], a[-2], a[-1]), k
+            ),
+            [*ex.param_specs(0, k), x_t, act_t],
+        )
+
+    manifest = ex.manifest()
+    # Fingerprint the compile inputs so `make artifacts` can skip cleanly.
+    src_dir = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(src_dir)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    manifest["source_fingerprint"] = h.hexdigest()
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(ex.entries)} artifacts + manifest to {out_dir}")
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="artifact directory")
+    p.add_argument("--layers", type=int, default=8, help="model depth W")
+    p.add_argument("--hidden", type=int, default=256)
+    p.add_argument("--input-dim", type=int, default=3072)
+    p.add_argument("--classes", type=int, default=10)
+    p.add_argument("--train-batch", type=int, default=32)
+    p.add_argument("--eval-batch", type=int, default=256)
+    args = p.parse_args()
+    cfg = ModelConfig(
+        input_dim=args.input_dim,
+        hidden=args.hidden,
+        classes=args.classes,
+        layers=args.layers,
+    )
+    export_all(cfg, args.train_batch, args.eval_batch, args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

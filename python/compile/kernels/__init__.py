@@ -1,0 +1,15 @@
+"""L1: Pallas kernels for the FedPairing compute hot spot.
+
+Exports:
+  - :func:`linear.fused_linear` — fused ``act(x@w+b)(+res)`` matmul kernel.
+  - :func:`linear_vjp.fused_linear_ad` — the same kernel wrapped in a
+    ``custom_vjp`` whose backward pass is *also* expressed with the Pallas
+    matmul kernel (so fwd and bwd artifacts both run the L1 hot path).
+  - :func:`softmax_xent.softmax_xent` — fused loss + logit-gradient kernel.
+  - :mod:`ref` — pure-jnp oracles for all of the above.
+"""
+
+from . import ref  # noqa: F401
+from .linear import fused_linear  # noqa: F401
+from .linear_vjp import fused_linear_ad  # noqa: F401
+from .softmax_xent import softmax_xent  # noqa: F401

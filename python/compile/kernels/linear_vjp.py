@@ -1,0 +1,66 @@
+"""``custom_vjp`` wrapper around the Pallas fused-linear kernel.
+
+``pallas_call`` has no general autodiff rule, so the L2 model cannot simply
+``jax.vjp`` through :func:`linear.fused_linear`. This module supplies the
+backward pass explicitly — and expresses it with the *same* Pallas matmul
+kernel, so both the forward and backward HLO artifacts executed by the Rust
+coordinator run the L1 hot path:
+
+    forward:   y = act(x @ w + b) (+ res)
+    backward:  dz = dy ⊙ 1[z > 0]          (relu mask; identity for "none")
+               dx = dz @ wᵀ                (Pallas matmul)
+               dw = xᵀ @ dz                (Pallas matmul)
+               db = Σ_rows dz
+               dres = dy                   (residual is a pass-through)
+
+The relu mask is reconstructed from the saved output: ``relu(z) > 0 ⇔ z > 0``
+and the residual is added *after* the activation, so ``mask = (y - res) > 0``.
+This avoids saving the pre-activation (halves residency — the same trick the
+flash-style TPU kernels use to stay inside VMEM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .linear import fused_linear
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def fused_linear_ad(x, w, b, residual, activation: str = "relu"):
+    """Differentiable fused linear layer.
+
+    Same contract as :func:`linear.fused_linear` but ``residual`` is a
+    positional argument (pass a ``(M, N)`` array or ``None``) so that
+    ``jax.vjp`` can thread cotangents through it.
+    """
+    return fused_linear(x, w, b, residual, activation=activation)
+
+
+def _fwd(x, w, b, residual, activation):
+    y = fused_linear(x, w, b, residual, activation=activation)
+    return y, (x, w, y, residual)
+
+
+def _bwd(activation, saved, dy):
+    x, w, y, residual = saved
+    if activation == "relu":
+        act_out = y if residual is None else y - residual
+        mask = (act_out > 0).astype(dy.dtype)
+        dz = dy * mask
+    else:
+        dz = dy
+    zero_n = jnp.zeros((w.shape[0],), dy.dtype)
+    zero_k = jnp.zeros((w.shape[1],), dy.dtype)
+    # dx = dz @ wᵀ and dw = xᵀ @ dz, both through the Pallas kernel.
+    dx = fused_linear_ad(dz, w.T, zero_n, None, "none")
+    dw = fused_linear_ad(x.T, dz, zero_k, None, "none")
+    db = jnp.sum(dz, axis=0)
+    dres = dy if residual is not None else None
+    return dx, dw, db, dres
+
+
+fused_linear_ad.defvjp(_fwd, _bwd)

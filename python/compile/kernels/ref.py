@@ -1,0 +1,71 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has an exact functional twin here, written
+with plain ``jax.numpy`` ops only. ``pytest python/tests`` asserts
+``allclose(kernel(...), ref(...))`` over hypothesis-driven shape/dtype sweeps —
+this is the core L1 correctness signal for the whole stack (the HLO artifacts
+executed by the Rust coordinator embed the Pallas lowerings, so if the kernel
+matches the ref here, the Rust hot path computes the right numbers).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_linear_ref(x, w, b, activation: str = "relu", residual=None):
+    """Reference for ``fused_linear``: ``act(x @ w + b) (+ residual)``.
+
+    Args:
+      x: ``(M, K)`` input activations.
+      w: ``(K, N)`` weight matrix.
+      b: ``(N,)`` bias.
+      activation: ``"relu"`` or ``"none"``.
+      residual: optional ``(M, N)`` tensor added *after* the activation
+        (pre-activation residual form used by the ResNet-MLP model).
+
+    Returns:
+      ``(M, N)`` output, same dtype as ``x``.
+    """
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b.astype(jnp.float32)
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def softmax_xent_ref(logits, y1hot):
+    """Reference for ``softmax_xent``: per-row loss and logit gradient.
+
+    Numerically-stable softmax cross-entropy. The gradient is for the *mean*
+    loss over the batch, i.e. ``(softmax(logits) - y1hot) / M`` — exactly what
+    the split-learning backward pass feeds to ``back_bwd``.
+
+    Args:
+      logits: ``(M, C)`` raw scores.
+      y1hot: ``(M, C)`` one-hot labels (rows may be all-zero for padding; such
+        rows contribute zero loss and zero gradient).
+
+    Returns:
+      ``(loss_rows, grad)`` where ``loss_rows`` is ``(M,)`` per-row losses and
+      ``grad`` is ``(M, C)``.
+    """
+    logits = logits.astype(jnp.float32)
+    y1hot = y1hot.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1, keepdims=True))
+    logp = shifted - lse
+    row_has_label = jnp.sum(y1hot, axis=-1)  # 1.0 for real rows, 0.0 for pad
+    loss_rows = -jnp.sum(y1hot * logp, axis=-1)
+    n = logits.shape[0]
+    grad = (jnp.exp(logp) * row_has_label[:, None] - y1hot) / jnp.float32(n)
+    return loss_rows, grad
+
+
+def relu_ref(x):
+    """Reference ReLU."""
+    return jnp.maximum(x, 0.0)

@@ -1,0 +1,87 @@
+"""Pallas fused softmax cross-entropy kernel (loss + logit gradient in one pass).
+
+In FedPairing's split backward (paper Sec. II-A.2, adapted for label privacy —
+see DESIGN.md), the data-owning client computes the loss *and* the logit
+gradient locally from the logits its partner returned, then ships only the
+gradient back. This kernel produces both in a single row-blocked pass:
+
+    loss_rows[i] = -log softmax(logits[i])[label_i]
+    grad[i]      = (softmax(logits[i]) - y1hot[i]) / M      (mean-loss gradient)
+
+Rows whose one-hot vector is all-zero (batch padding) contribute zero loss and
+zero gradient, so the Rust coordinator can pad partial batches without
+affecting the update — an invariant tested in python/tests/test_kernels.py.
+
+TPU mapping: grid over row blocks only; each (bm, C) tile performs the
+max/exp/sum reduction entirely in VMEM (C = #classes is tiny), one HBM read of
+logits + labels, one write of loss + grad. For C=10 and bm=128 the working set
+is < 20 KiB.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_xent_kernel(logits_ref, y_ref, loss_ref, grad_ref, *, n_total: int):
+    """One row-block: stable softmax, per-row loss, mean-scaled gradient."""
+    logits = logits_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - m
+    ex = jnp.exp(shifted)
+    denom = jnp.sum(ex, axis=-1, keepdims=True)
+    logp = shifted - jnp.log(denom)
+    row_has_label = jnp.sum(y, axis=-1)  # 1.0 real row, 0.0 padding
+    loss_ref[...] = -jnp.sum(y * logp, axis=-1)
+    grad_ref[...] = (ex / denom * row_has_label[:, None] - y) / jnp.float32(n_total)
+
+
+DEFAULT_BLOCK_M = int(os.environ.get("FEDPAIRING_BLOCK", "4096"))
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def softmax_xent(logits, y1hot, *, block_m: int = DEFAULT_BLOCK_M):
+    """Fused softmax cross-entropy: ``(loss_rows, grad)``.
+
+    Args:
+      logits: ``(M, C)`` raw scores (any float dtype; computed in f32).
+      y1hot: ``(M, C)`` one-hot labels; all-zero rows are treated as padding.
+      block_m: target row-block size (shrunk to a divisor of ``M``).
+
+    Returns:
+      ``loss_rows``: ``(M,)`` f32 per-row losses (0 for padding rows).
+      ``grad``: ``(M, C)`` f32 gradient of the *mean* loss w.r.t. ``logits``.
+
+    Matches :func:`ref.softmax_xent_ref`.
+    """
+    m, c = logits.shape
+    if y1hot.shape != (m, c):
+        raise ValueError(f"labels shape {y1hot.shape} != logits shape {logits.shape}")
+    bm = m if m <= block_m else next(
+        cand for cand in range(block_m, 0, -1) if m % cand == 0
+    )
+    grid = (m // bm,)
+    kernel = functools.partial(_softmax_xent_kernel, n_total=m)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, c), lambda i: (i, 0)),
+            pl.BlockSpec((bm, c), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm, c), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m, c), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(logits, y1hot)

@@ -1,0 +1,229 @@
+"""L2: the FedPairing ResNet-MLP model — full and split forward/backward in JAX.
+
+The paper trains ResNet-18/10 on CIFAR-10; per DESIGN.md §2 we substitute a
+**residual MLP** ("ResNet-MLP") whose depth ``W`` plays the paper's layer-count
+role (the split point ``L_i = ⌊f_i/(f_i+f_j)·W⌋`` slices it anywhere), trained
+on a synthetic CIFAR-like dataset generated on the Rust side. Layer structure:
+
+    layer 0      : fused_linear(input_dim → hidden), relu            (stem)
+    layers 1..W-2: h ← relu(h @ w_k + b_k) + h                       (residual)
+    layer W-1    : fused_linear(hidden → classes), no activation     (head)
+
+All dense math goes through the L1 Pallas kernel (`fused_linear_ad`, a
+custom-vjp wrapper so the backward artifacts run the Pallas matmul too).
+
+Split semantics (paper Sec. II-A.2): for a split point ``k ∈ {1..W-1}``,
+the *front* is layers ``0..k-1`` (owned/computed by the data-owning client on
+its own model) and the *back* is layers ``k..W-1`` (computed by the partner on
+the partner's model). Because every interior activation has shape
+``(B, hidden)``, one activation wire format covers every split point.
+
+Every public function here is pure and shape-static so `aot.py` can lower it
+to a standalone HLO artifact executed by the Rust coordinator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_linear_ad, softmax_xent
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture description (also serialized into the manifest)."""
+
+    input_dim: int = 3072  # 3 x 32 x 32, flattened
+    hidden: int = 256
+    classes: int = 10
+    layers: int = 8  # W — total depth, ≥ 2
+
+    def __post_init__(self):
+        if self.layers < 2:
+            raise ValueError("ResNet-MLP needs at least stem + head (layers >= 2)")
+
+    def layer_dims(self) -> List[Tuple[int, int]]:
+        """Per-layer (fan_in, fan_out) for layers 0..W-1."""
+        dims = [(self.input_dim, self.hidden)]
+        dims += [(self.hidden, self.hidden)] * (self.layers - 2)
+        dims.append((self.hidden, self.classes))
+        return dims
+
+    def param_shapes(self) -> List[Tuple[Tuple[int, ...], Tuple[int, ...]]]:
+        """Per-layer ((w shape), (b shape))."""
+        return [((fi, fo), (fo,)) for fi, fo in self.layer_dims()]
+
+    def n_params(self) -> int:
+        return sum(fi * fo + fo for fi, fo in self.layer_dims())
+
+    def flops_per_layer(self, batch: int) -> List[int]:
+        """Forward MACs×2 per layer for a ``batch``-row input (cost model hook)."""
+        return [2 * batch * fi * fo for fi, fo in self.layer_dims()]
+
+
+# A parameter list is a flat interleaving [w0, b0, w1, b1, ...]; slices of it
+# (front = layers 0..k-1, back = layers k..W-1) are what the split artifacts
+# take as inputs, so the Rust side can ship only the relevant tensors.
+Params = Sequence[jax.Array]
+
+
+def _layer(cfg: ModelConfig, idx: int, w, b, h):
+    """Apply layer ``idx`` to activations ``h`` via the Pallas kernel."""
+    if idx == 0:
+        return fused_linear_ad(h, w, b, None, "relu")
+    if idx == cfg.layers - 1:
+        return fused_linear_ad(h, w, b, None, "none")
+    # interior residual layer: relu(h @ w + b) + h, fused in one kernel call
+    return fused_linear_ad(h, w, b, h, "relu")
+
+
+def _apply_range(cfg: ModelConfig, params: Params, h, lo: int, hi: int):
+    """Apply layers ``lo..hi-1``; ``params`` holds exactly those layers."""
+    assert len(params) == 2 * (hi - lo), (len(params), lo, hi)
+    for i, layer_idx in enumerate(range(lo, hi)):
+        w, b = params[2 * i], params[2 * i + 1]
+        h = _layer(cfg, layer_idx, w, b, h)
+    return h
+
+
+# --------------------------------------------------------------------------
+# Forward entries
+# --------------------------------------------------------------------------
+
+
+def full_fwd(cfg: ModelConfig, params: Params, x):
+    """Full-model logits: layers 0..W-1."""
+    return _apply_range(cfg, params, x, 0, cfg.layers)
+
+
+def front_fwd(cfg: ModelConfig, k: int, params_front: Params, x):
+    """Front slice (layers 0..k-1): the data owner's half. Returns ``act``."""
+    assert 1 <= k <= cfg.layers - 1
+    return _apply_range(cfg, params_front, x, 0, k)
+
+
+def back_fwd(cfg: ModelConfig, k: int, params_back: Params, act):
+    """Back slice (layers k..W-1): the partner's half. Returns logits."""
+    assert 1 <= k <= cfg.layers - 1
+    return _apply_range(cfg, params_back, act, k, cfg.layers)
+
+
+# --------------------------------------------------------------------------
+# Loss
+# --------------------------------------------------------------------------
+
+
+def loss_grad(logits, y1hot):
+    """Mean cross-entropy loss and its logit gradient, via the Pallas kernel.
+
+    Returns ``(loss, g_logits)`` with ``loss`` a scalar mean over *labeled*
+    rows (all-zero one-hot rows are padding) and ``g_logits`` already scaled
+    for the mean, ready to feed ``back_bwd``.
+    """
+    loss_rows, grad = softmax_xent(logits, y1hot)
+    n_rows = jnp.maximum(jnp.sum(y1hot), 1.0)  # number of labeled rows
+    # softmax_xent scales grad by 1/M (padded batch size). Training always
+    # uses full batches (see data::loader on the Rust side), so M == n_rows;
+    # loss uses the true row count either way.
+    loss = jnp.sum(loss_rows) / n_rows
+    return loss, grad
+
+
+# --------------------------------------------------------------------------
+# Backward entries (the split-learning protocol's compute steps)
+# --------------------------------------------------------------------------
+
+
+def back_bwd(cfg: ModelConfig, k: int, params_back: Params, act, g_logits):
+    """Partner-side backward: grads of back params + the activation cotangent.
+
+    Returns ``(*g_params_back, g_act)`` — the gradient list matches the
+    ``params_back`` layout, and ``g_act`` is shipped back to the data owner
+    (the "gradient of the L_i+1-th layer" of paper Sec. II-A.2).
+    """
+    def f(pb, a):
+        return back_fwd(cfg, k, pb, a)
+
+    _, vjp = jax.vjp(f, list(params_back), act)
+    g_params, g_act = vjp(g_logits)
+    return (*g_params, g_act)
+
+
+def front_bwd(cfg: ModelConfig, k: int, params_front: Params, x, g_act):
+    """Data-owner backward: grads of front params given the activation cotangent."""
+    def f(pf):
+        return front_fwd(cfg, k, pf, x)
+
+    _, vjp = jax.vjp(f, list(params_front))
+    (g_params,) = vjp(g_act)
+    return tuple(g_params)
+
+
+def full_step(cfg: ModelConfig, params: Params, x, y1hot):
+    """Vanilla-FL local step: grads of the mean loss for the whole model.
+
+    Returns ``(*g_params, loss)``.
+    """
+    def fwd_only(p):
+        return full_fwd(cfg, p, x)
+
+    logits, vjp = jax.vjp(fwd_only, list(params))
+    loss, g_logits = loss_grad(logits, y1hot)
+    (g_params,) = vjp(g_logits)
+    return (*g_params, loss)
+
+
+# --------------------------------------------------------------------------
+# Evaluation + init
+# --------------------------------------------------------------------------
+
+
+def eval_batch(cfg: ModelConfig, params: Params, x, y1hot):
+    """Test-set batch metrics: ``(loss_sum, n_correct, n_rows)`` as f32 scalars.
+
+    Padding rows (all-zero one-hot) are excluded from all three, so the Rust
+    evaluator can pad the final partial batch and still aggregate exactly.
+    """
+    logits = full_fwd(cfg, params, x)
+    loss_rows, _ = softmax_xent(logits, y1hot)
+    has_label = jnp.sum(y1hot, axis=-1) > 0
+    pred = jnp.argmax(logits, axis=-1)
+    label = jnp.argmax(y1hot, axis=-1)
+    correct = jnp.where(has_label, (pred == label).astype(jnp.float32), 0.0)
+    return (
+        jnp.sum(loss_rows),
+        jnp.sum(correct),
+        jnp.sum(has_label.astype(jnp.float32)),
+    )
+
+
+def init_params(cfg: ModelConfig, seed):
+    """He-initialized parameter list from a scalar ``uint32`` seed.
+
+    Exported as an artifact so the Rust coordinator can materialize the global
+    model without reimplementing the init distribution.
+    """
+    key = jax.random.PRNGKey(seed)
+    params = []
+    dims = cfg.layer_dims()
+    for idx, (fan_in, fan_out) in enumerate(dims):
+        key, wk = jax.random.split(key)
+        if idx == len(dims) - 1:
+            # Zero-init the classifier head: with the residual stack growing
+            # activation magnitude ~O(√W), a He-init head yields huge initial
+            # logits (loss ≫ ln C); zero head starts at exactly ln(classes).
+            w = jnp.zeros((fan_in, fan_out), jnp.float32)
+        else:
+            scale = jnp.sqrt(2.0 / fan_in).astype(jnp.float32)
+            # Interior residual branches are additionally damped so the stem's
+            # signal dominates at init (standard residual-scaling trick).
+            if idx > 0:
+                scale = scale / jnp.sqrt(jnp.float32(cfg.layers))
+            w = jax.random.normal(wk, (fan_in, fan_out), jnp.float32) * scale
+        params.append(w)
+        params.append(jnp.zeros((fan_out,), jnp.float32))
+    return tuple(params)

@@ -1,0 +1,222 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in `ref.py`.
+
+Hypothesis sweeps shapes (and the relu/residual feature matrix) and asserts
+allclose — the core signal that the HLO artifacts the Rust coordinator
+executes compute the right numbers.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.linear import fused_linear, _pick_block
+from compile.kernels.linear_vjp import fused_linear_ad
+from compile.kernels.softmax_xent import softmax_xent
+from compile.kernels.ref import fused_linear_ref, softmax_xent_ref
+
+import jax
+
+RTOL = 2e-5
+ATOL = 2e-5
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape, dtype=np.float32)
+
+
+# ---------------------------------------------------------------------------
+# fused_linear
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 96),
+    n=st.integers(1, 64),
+    activation=st.sampled_from(["relu", "none"]),
+    residual=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_matches_ref(m, k, n, activation, residual, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+    res = rand(rng, m, n) if residual else None
+    got = fused_linear(x, w, b, res, activation=activation)
+    want = fused_linear_ref(x, w, b, activation, res)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    blocks=st.tuples(st.integers(1, 64), st.integers(1, 64), st.integers(1, 64)),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_block_size_invariance(blocks, seed):
+    """Any block configuration computes the same numbers (tiling is pure
+    scheduling — the invariant behind the CPU-vs-TPU block-size choice)."""
+    bm, bn, bk = blocks
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, 24, 36), rand(rng, 36, 20), rand(rng, 20)
+    base = fused_linear(x, w, b, activation="relu")
+    got = fused_linear(x, w, b, activation="relu", block_m=bm, block_n=bn, block_k=bk)
+    # K-blocking changes f32 accumulation order → tiny representation noise.
+    np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_linear_exact_paper_shapes():
+    """The exact shapes the AOT model uses (3072→256, 256→256, 256→10)."""
+    rng = np.random.default_rng(0)
+    for (m, k, n) in [(32, 3072, 256), (32, 256, 256), (32, 256, 10)]:
+        x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+        np.testing.assert_allclose(
+            fused_linear(x, w, b, activation="none"),
+            fused_linear_ref(x, w, b, "none"),
+            rtol=RTOL,
+            atol=ATOL,
+        )
+
+
+def test_fused_linear_residual_after_activation():
+    """Residual must be added *after* relu: relu(0)+res == res exactly."""
+    x = np.zeros((4, 8), np.float32)
+    w = np.zeros((8, 8), np.float32)
+    b = np.zeros(8, np.float32)
+    res = np.full((4, 8), -3.0, np.float32)
+    out = np.asarray(fused_linear(x, w, b, res, activation="relu"))
+    np.testing.assert_array_equal(out, res)
+
+
+def test_fused_linear_rejects_bad_shapes():
+    rng = np.random.default_rng(1)
+    with pytest.raises(ValueError):
+        fused_linear(rand(rng, 4, 5), rand(rng, 6, 7), rand(rng, 7))
+    with pytest.raises(ValueError):
+        fused_linear(rand(rng, 4, 5), rand(rng, 5, 7), rand(rng, 8))
+    with pytest.raises(ValueError):
+        fused_linear(rand(rng, 4, 5), rand(rng, 5, 7), rand(rng, 7),
+                     rand(rng, 3, 7))
+    with pytest.raises(ValueError):
+        fused_linear(rand(rng, 4, 5), rand(rng, 5, 7), rand(rng, 7),
+                     activation="gelu")
+
+
+def test_pick_block_divides():
+    for dim in [1, 7, 32, 96, 3072]:
+        for target in [1, 8, 128, 4096]:
+            blk = _pick_block(dim, target)
+            assert dim % blk == 0
+            assert blk <= max(dim, target)
+
+
+# ---------------------------------------------------------------------------
+# fused_linear_ad (custom VJP)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(2, 16),
+    k=st.integers(2, 24),
+    n=st.integers(2, 16),
+    activation=st.sampled_from(["relu", "none"]),
+    residual=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_vjp_matches_autodiff_of_ref(m, k, n, activation, residual, seed):
+    """Gradients through the Pallas custom-vjp == jax.grad of the jnp ref."""
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+    res = rand(rng, m, n) if residual else None
+
+    def f_kernel(x, w, b, res):
+        return jnp.sum(fused_linear_ad(x, w, b, res, activation) ** 2)
+
+    def f_ref(x, w, b, res):
+        return jnp.sum(fused_linear_ref(x, w, b, activation, res) ** 2)
+
+    args = (x, w, b, res) if residual else (x, w, b, None)
+    argnums = (0, 1, 2, 3) if residual else (0, 1, 2)
+    g_kernel = jax.grad(f_kernel, argnums)(*args)
+    g_ref = jax.grad(f_ref, argnums)(*args)
+    for gk, gr in zip(g_kernel, g_ref):
+        np.testing.assert_allclose(gk, gr, rtol=5e-4, atol=5e-4)
+
+
+def test_vjp_relu_mask_at_zero():
+    """Subgradient convention at relu(0): gradient must be 0, matching jnp."""
+    x = np.zeros((2, 2), np.float32)
+    w = np.zeros((2, 2), np.float32)
+    b = np.zeros(2, np.float32)
+
+    def f(x):
+        return jnp.sum(fused_linear_ad(x, w, b, None, "relu"))
+
+    g = jax.grad(f)(x)
+    np.testing.assert_array_equal(np.asarray(g), np.zeros((2, 2), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# softmax_xent
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    c=st.integers(2, 16),
+    pad=st.integers(0, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_xent_matches_ref(m, c, pad, seed):
+    rng = np.random.default_rng(seed)
+    pad = min(pad, m)
+    logits = rand(rng, m, c) * 5.0
+    labels = rng.integers(0, c, m)
+    y = np.eye(c, dtype=np.float32)[labels]
+    y[m - pad :] = 0.0  # padding rows
+    l1, g1 = softmax_xent(logits, y)
+    l2, g2 = softmax_xent_ref(logits, y)
+    np.testing.assert_allclose(l1, l2, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(g1, g2, rtol=RTOL, atol=ATOL)
+
+
+def test_softmax_xent_padding_rows_zero():
+    rng = np.random.default_rng(3)
+    logits = rand(rng, 8, 10)
+    y = np.zeros((8, 10), np.float32)
+    y[0, 1] = 1.0  # single real row
+    loss_rows, grad = softmax_xent(logits, y)
+    assert float(loss_rows[0]) > 0.0
+    np.testing.assert_array_equal(np.asarray(loss_rows)[1:], 0.0)
+    np.testing.assert_allclose(np.asarray(grad)[1:], 0.0, atol=1e-7)
+
+
+def test_softmax_xent_extreme_logits_stable():
+    """Stability: ±1e4 logits must not overflow (the max-shift trick)."""
+    logits = np.array([[1e4, -1e4, 0.0], [-1e4, 1e4, 0.0]], np.float32)
+    y = np.eye(3, dtype=np.float32)[[0, 0]]
+    loss_rows, grad = softmax_xent(logits, y)
+    assert np.all(np.isfinite(np.asarray(loss_rows)))
+    assert np.all(np.isfinite(np.asarray(grad)))
+    assert float(loss_rows[0]) < 1e-3  # confident-correct ≈ 0 loss
+    assert float(loss_rows[1]) > 1e3  # confident-wrong ≈ 2e4·ln e
+
+
+def test_softmax_xent_grad_is_mean_scaled():
+    """Gradient rows sum to (softmax − y)/M — scale must include M."""
+    rng = np.random.default_rng(5)
+    for m in (4, 32):
+        logits = rand(rng, m, 10)
+        y = np.eye(10, dtype=np.float32)[rng.integers(0, 10, m)]
+        _, g = softmax_xent(logits, y)
+        _, g_ref = softmax_xent_ref(logits, y)
+        np.testing.assert_allclose(g, g_ref, rtol=1e-5, atol=1e-6)
+        # each real row's gradient sums to ~0 (softmax sums 1, y sums 1)
+        np.testing.assert_allclose(np.asarray(g).sum(axis=1), 0.0, atol=1e-6)
+
+
+def test_softmax_xent_rejects_shape_mismatch():
+    with pytest.raises(ValueError):
+        softmax_xent(np.zeros((4, 10), np.float32), np.zeros((4, 9), np.float32))

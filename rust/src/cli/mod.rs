@@ -1,0 +1,339 @@
+//! Command-line parsing (substrate — no `clap` in this environment).
+//!
+//! Supports subcommands, long/short flags, `--key value` and `--key=value`,
+//! repeated flags, typed extraction with defaults, and auto-generated
+//! `--help`. Deliberately small: exactly what the `fedpairing` binary,
+//! examples and benches need.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declared flag (for help text + validation).
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub short: Option<char>,
+    pub value_name: Option<&'static str>, // None => boolean switch
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// A declarative CLI: name, about, flags, positional args, subcommands.
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<FlagSpec>,
+    pub positionals: Vec<(&'static str, &'static str)>, // (name, help)
+    pub subcommands: Vec<Command>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command {
+            name,
+            about,
+            ..Default::default()
+        }
+    }
+
+    pub fn flag(
+        mut self,
+        name: &'static str,
+        short: Option<char>,
+        value_name: Option<&'static str>,
+        help: &'static str,
+        default: Option<&'static str>,
+    ) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            short,
+            value_name,
+            help,
+            default,
+        });
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    pub fn subcommand(mut self, sub: Command) -> Self {
+        self.subcommands.push(sub);
+        self
+    }
+
+    /// Render `--help` text.
+    pub fn help(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.name, self.about);
+        let _ = write!(s, "USAGE: {}", self.name);
+        if !self.subcommands.is_empty() {
+            let _ = write!(s, " <SUBCOMMAND>");
+        }
+        if !self.flags.is_empty() {
+            let _ = write!(s, " [FLAGS]");
+        }
+        for (p, _) in &self.positionals {
+            let _ = write!(s, " <{p}>");
+        }
+        let _ = writeln!(s);
+        if !self.positionals.is_empty() {
+            let _ = writeln!(s, "\nARGS:");
+            for (p, h) in &self.positionals {
+                let _ = writeln!(s, "  <{p}>  {h}");
+            }
+        }
+        if !self.flags.is_empty() {
+            let _ = writeln!(s, "\nFLAGS:");
+            for f in &self.flags {
+                let short = f.short.map(|c| format!("-{c}, ")).unwrap_or_default();
+                let val = f.value_name.map(|v| format!(" <{v}>")).unwrap_or_default();
+                let def = f
+                    .default
+                    .map(|d| format!(" [default: {d}]"))
+                    .unwrap_or_default();
+                let _ = writeln!(s, "  {short}--{}{val}  {}{def}", f.name, f.help);
+            }
+        }
+        if !self.subcommands.is_empty() {
+            let _ = writeln!(s, "\nSUBCOMMANDS:");
+            for sub in &self.subcommands {
+                let _ = writeln!(s, "  {:<18} {}", sub.name, sub.about);
+            }
+        }
+        s
+    }
+
+    /// Parse `args` (exclusive of argv[0]).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, CliError> {
+        let mut parsed = Parsed {
+            command_path: vec![self.name.to_string()],
+            ..Default::default()
+        };
+        // Seed defaults.
+        for f in &self.flags {
+            if let (Some(d), Some(_)) = (f.default, f.value_name) {
+                parsed.values.insert(f.name.to_string(), vec![d.to_string()]);
+            }
+        }
+        self.parse_into(args, &mut parsed)?;
+        Ok(parsed)
+    }
+
+    fn find_flag(&self, token: &str) -> Option<&FlagSpec> {
+        if let Some(name) = token.strip_prefix("--") {
+            let name = name.split('=').next().unwrap();
+            self.flags.iter().find(|f| f.name == name)
+        } else if let Some(rest) = token.strip_prefix('-') {
+            let mut chars = rest.chars();
+            let c = chars.next()?;
+            if chars.next().is_some() {
+                return None; // no combined short flags
+            }
+            self.flags.iter().find(|f| f.short == Some(c))
+        } else {
+            None
+        }
+    }
+
+    fn parse_into(&self, args: &[String], parsed: &mut Parsed) -> Result<(), CliError> {
+        let mut i = 0;
+        while i < args.len() {
+            let tok = &args[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError::HelpRequested(self.help()));
+            }
+            if tok.starts_with('-') && tok != "-" {
+                let spec = self.find_flag(tok).ok_or_else(|| {
+                    CliError::Unknown(format!("unknown flag {tok} for {}", self.name))
+                })?;
+                if spec.value_name.is_some() {
+                    let value = if let Some(eq) = tok.find('=') {
+                        tok[eq + 1..].to_string()
+                    } else {
+                        i += 1;
+                        args.get(i)
+                            .cloned()
+                            .ok_or_else(|| {
+                                CliError::Unknown(format!("flag --{} needs a value", spec.name))
+                            })?
+                    };
+                    parsed
+                        .values
+                        .entry(spec.name.to_string())
+                        .or_default()
+                        .push(value);
+                    // A provided value overrides the default (keep only the last
+                    // non-default unless the flag is repeated by the user).
+                    let vals = parsed.values.get_mut(spec.name).unwrap();
+                    if vals.len() == 2 && spec.default.map(String::from).as_deref() == Some(&vals[0]) {
+                        vals.remove(0);
+                    }
+                } else {
+                    parsed.switches.insert(spec.name.to_string());
+                }
+            } else if let Some(sub) = self.subcommands.iter().find(|s| s.name == *tok) {
+                parsed.command_path.push(sub.name.to_string());
+                for f in &sub.flags {
+                    if let (Some(d), Some(_)) = (f.default, f.value_name) {
+                        parsed
+                            .values
+                            .entry(f.name.to_string())
+                            .or_insert_with(|| vec![d.to_string()]);
+                    }
+                }
+                return sub.parse_into(&args[i + 1..], parsed);
+            } else {
+                parsed.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(())
+    }
+}
+
+/// Parse outcome.
+#[derive(Debug, Default)]
+pub struct Parsed {
+    pub command_path: Vec<String>,
+    pub values: BTreeMap<String, Vec<String>>,
+    pub switches: std::collections::BTreeSet<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn subcommand(&self) -> Option<&str> {
+        self.command_path.get(1).map(|s| s.as_str())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.values.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.contains(name)
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s.parse::<T>().map(Some).map_err(|_| {
+                CliError::Unknown(format!("flag --{name}: cannot parse {s:?}"))
+            }),
+        }
+    }
+
+    /// Typed getter with a required default already registered.
+    pub fn req<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError> {
+        self.get_parsed::<T>(name)?
+            .ok_or_else(|| CliError::Unknown(format!("missing required flag --{name}")))
+    }
+}
+
+/// CLI failure modes.
+#[derive(Debug)]
+pub enum CliError {
+    HelpRequested(String),
+    Unknown(String),
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::HelpRequested(h) => write!(f, "{h}"),
+            CliError::Unknown(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("fp", "test tool")
+            .flag("clients", Some('n'), Some("N"), "number of clients", Some("20"))
+            .flag("verbose", Some('v'), None, "chatty", None)
+            .subcommand(
+                Command::new("run", "run an experiment")
+                    .flag("rounds", Some('r'), Some("N"), "rounds", Some("100"))
+                    .flag("algo", None, Some("NAME"), "algorithm", Some("fedpairing"))
+                    .positional("config", "config file"),
+            )
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = cmd().parse(&argv(&["run"])).unwrap();
+        assert_eq!(p.subcommand(), Some("run"));
+        assert_eq!(p.req::<usize>("rounds").unwrap(), 100);
+        assert_eq!(p.get("algo"), Some("fedpairing"));
+        assert_eq!(p.req::<usize>("clients").unwrap(), 20);
+    }
+
+    #[test]
+    fn overrides_and_equals_syntax() {
+        let p = cmd()
+            .parse(&argv(&["--clients", "8", "run", "--rounds=5", "cfg.json"]))
+            .unwrap();
+        assert_eq!(p.req::<usize>("clients").unwrap(), 8);
+        assert_eq!(p.req::<usize>("rounds").unwrap(), 5);
+        assert_eq!(p.positionals, vec!["cfg.json"]);
+    }
+
+    #[test]
+    fn short_flags() {
+        let p = cmd().parse(&argv(&["-n", "4", "-v", "run", "-r", "7"])).unwrap();
+        assert_eq!(p.req::<usize>("clients").unwrap(), 4);
+        assert!(p.has("verbose"));
+        assert_eq!(p.req::<usize>("rounds").unwrap(), 7);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(cmd().parse(&argv(&["--bogus"])).is_err());
+    }
+
+    #[test]
+    fn help_contains_flags_and_subcommands() {
+        let err = cmd().parse(&argv(&["--help"])).unwrap_err();
+        let CliError::HelpRequested(h) = err else {
+            panic!("expected help");
+        };
+        assert!(h.contains("--clients"));
+        assert!(h.contains("run"));
+    }
+
+    #[test]
+    fn subcommand_help() {
+        let err = cmd().parse(&argv(&["run", "--help"])).unwrap_err();
+        let CliError::HelpRequested(h) = err else {
+            panic!("expected help");
+        };
+        assert!(h.contains("--rounds"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(cmd().parse(&argv(&["--clients"])).is_err());
+    }
+
+    #[test]
+    fn parse_type_error() {
+        let p = cmd().parse(&argv(&["--clients", "abc"])).unwrap();
+        assert!(p.req::<usize>("clients").is_err());
+    }
+}

@@ -1,0 +1,656 @@
+//! Typed experiment configuration: defaults = the paper's Sec. IV simulation
+//! setup, JSON file loading, CLI overrides, validation and named presets.
+//!
+//! Every experiment (examples, benches, the `fedpairing` binary) is driven by
+//! an [`ExperimentConfig`], so a run is fully described by one JSON blob —
+//! which the metrics sink embeds in its output for provenance.
+
+use crate::util::json::{Json, JsonObj};
+use std::fmt;
+
+/// `Display` impl helper shared by the enums below.
+macro_rules! fmt_display_via_name {
+    () => {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "{}", self.name())
+        }
+    };
+}
+
+/// Which FL algorithm drives the round loop (paper Sec. IV benchmarks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// The paper's contribution: client pairing + logical split (Sec. II).
+    FedPairing,
+    /// FedAvg: every client trains the full model locally [McMahan'17].
+    VanillaFL,
+    /// Sequential split learning against the server [Gupta & Raskar'18].
+    VanillaSL,
+    /// Parallel split learning + FedAvg aggregation [Thapa'22].
+    SplitFed,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "fedpairing" | "fed-pairing" | "fp" => Some(Algorithm::FedPairing),
+            "fl" | "fedavg" | "vanilla_fl" | "vanilla-fl" => Some(Algorithm::VanillaFL),
+            "sl" | "vanilla_sl" | "vanilla-sl" => Some(Algorithm::VanillaSL),
+            "splitfed" | "sfl" => Some(Algorithm::SplitFed),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::FedPairing => "fedpairing",
+            Algorithm::VanillaFL => "vanilla_fl",
+            Algorithm::VanillaSL => "vanilla_sl",
+            Algorithm::SplitFed => "splitfed",
+        }
+    }
+}
+
+impl fmt::Display for Algorithm {
+    fmt_display_via_name!();
+}
+
+/// Client-pairing mechanism (paper Table I comparison).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PairingStrategy {
+    /// Algorithm 1: greedy max-weight matching on eq. (5) weights.
+    Greedy,
+    /// Uniform random perfect matching.
+    Random,
+    /// Pair geographically nearest clients (optimizes comm only).
+    Location,
+    /// Pair most compute-imbalanced clients (optimizes compute only).
+    Compute,
+    /// Exact max-weight matching (bitmask DP) — optimality ablation.
+    Exact,
+}
+
+impl PairingStrategy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "greedy" => Some(PairingStrategy::Greedy),
+            "random" => Some(PairingStrategy::Random),
+            "location" | "location_based" | "location-based" => Some(PairingStrategy::Location),
+            "compute" | "computation" | "resource" => Some(PairingStrategy::Compute),
+            "exact" | "optimal" => Some(PairingStrategy::Exact),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PairingStrategy::Greedy => "greedy",
+            PairingStrategy::Random => "random",
+            PairingStrategy::Location => "location",
+            PairingStrategy::Compute => "compute",
+            PairingStrategy::Exact => "exact",
+        }
+    }
+}
+
+impl fmt::Display for PairingStrategy {
+    fmt_display_via_name!();
+}
+
+/// Local-data distribution across clients (paper Sec. IV-A).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DataDistribution {
+    /// Equal share of every class per client.
+    Iid,
+    /// `classes_per_client` randomly-chosen classes per client (paper: 2).
+    ClassShards { classes_per_client: usize },
+    /// Dirichlet(α) label skew (common FL extension; ablation material).
+    Dirichlet { alpha: f64 },
+}
+
+impl DataDistribution {
+    pub fn name(&self) -> String {
+        match self {
+            DataDistribution::Iid => "iid".into(),
+            DataDistribution::ClassShards { classes_per_client } => {
+                format!("shards{classes_per_client}")
+            }
+            DataDistribution::Dirichlet { alpha } => format!("dirichlet{alpha}"),
+        }
+    }
+}
+
+/// Wireless channel parameters — eq. (3) of the paper.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChannelConfig {
+    /// Spectral bandwidth `B` in Hz (paper: 64 MHz).
+    pub bandwidth_hz: f64,
+    /// Transmit power `P` in W (paper: 1 W).
+    pub tx_power_w: f64,
+    /// Noise power `σ²` in W (paper: 1e-9 W).
+    pub noise_w: f64,
+    /// Reference channel gain `h0` at unit distance (paper leaves this free;
+    /// we use −35 dB, calibrated so the comm/compute balance reproduces the Table I/II orderings — see EXPERIMENTS.md).
+    pub ref_gain: f64,
+    /// Reference distance `ζ0` in m.
+    pub ref_dist_m: f64,
+    /// Path-loss exponent `θ` (urban micro ≈ 3).
+    pub pathloss_exp: f64,
+}
+
+impl Default for ChannelConfig {
+    fn default() -> Self {
+        ChannelConfig {
+            bandwidth_hz: 64e6,
+            tx_power_w: 1.0,
+            noise_w: 1e-9,
+            ref_gain: 3e-4,
+            ref_dist_m: 1.0,
+            pathloss_exp: 3.0,
+        }
+    }
+}
+
+/// Client compute heterogeneity (paper: f ~ U[0.1, 2] GHz).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ComputeConfig {
+    pub f_min_ghz: f64,
+    pub f_max_ghz: f64,
+    /// Server CPU frequency for SL/SplitFed offloading ("super computing
+    /// power" in the paper's Sec. IV-D discussion).
+    pub server_freq_ghz: f64,
+    /// Calibration constant: effective cycles per FLOP of the training
+    /// workload. One global scalar; only absolute seconds depend on it,
+    /// never orderings (DESIGN.md §2).
+    pub cycles_per_flop: f64,
+}
+
+impl Default for ComputeConfig {
+    fn default() -> Self {
+        ComputeConfig {
+            f_min_ghz: 0.1,
+            f_max_ghz: 2.0,
+            server_freq_ghz: 100.0,
+            cycles_per_flop: 0.085,
+        }
+    }
+}
+
+/// Top-level experiment description.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub seed: u64,
+    pub algorithm: Algorithm,
+    pub pairing: PairingStrategy,
+
+    // fleet
+    pub n_clients: usize,
+    pub area_radius_m: f64,
+    pub channel: ChannelConfig,
+    pub compute: ComputeConfig,
+
+    // training schedule (paper: 100 rounds × 2 local epochs, lr 0.1)
+    pub rounds: usize,
+    pub local_epochs: usize,
+    pub lr: f32,
+
+    // data (paper: CIFAR-10, 2500 samples/client; we synthesize — DESIGN.md §2)
+    pub samples_per_client: usize,
+    pub test_samples: usize,
+    pub distribution: DataDistribution,
+    pub noise_level: f32,
+
+    // pairing objective weights (eq. 5); α scales (Δf)², β scales r_ij.
+    pub alpha: f64,
+    pub beta: f64,
+
+    // FedPairing mechanics
+    /// Apply the eq. (7) 2× step on overlapping layers.
+    pub overlap_boost: bool,
+    /// Split point for vanilla SL (client keeps layers < cut). SL offloads
+    /// aggressively — the client retains only the input layer (privacy floor).
+    pub sl_cut_layer: usize,
+    /// Split point for SplitFed. SplitFed-style systems keep a deeper client
+    /// prefix (the client-side model that gets FedAvg'd); with the ResNet-18
+    /// profile cut=3 puts ~27% of FLOPs client-side, matching Table II's
+    /// "SplitFed slower than FedPairing" regime.
+    pub splitfed_cut_layer: usize,
+
+    /// Evaluate every `eval_every` rounds (0 = only final).
+    pub eval_every: usize,
+    /// Artifact directory holding manifest.json + *.hlo.txt.
+    pub artifacts_dir: String,
+    /// Metrics/output directory.
+    pub out_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            seed: 17,
+            algorithm: Algorithm::FedPairing,
+            pairing: PairingStrategy::Greedy,
+            n_clients: 20,
+            area_radius_m: 50.0,
+            channel: ChannelConfig::default(),
+            compute: ComputeConfig::default(),
+            rounds: 100,
+            local_epochs: 2,
+            // Paper: 0.1 for ResNet-18 (with batch-norm). The substitute
+            // ResNet-MLP has no normalization layers and diverges at 0.1 on
+            // the shared-dictionary task; 0.05 is its stable equivalent.
+            lr: 0.05,
+            samples_per_client: 2500,
+            test_samples: 2000,
+            distribution: DataDistribution::Iid,
+            noise_level: 1.5,
+            alpha: 1.0,
+            beta: 5e-10,
+            overlap_boost: true,
+            sl_cut_layer: 1,
+            splitfed_cut_layer: 3,
+            eval_every: 1,
+            artifacts_dir: "artifacts".into(),
+            out_dir: "runs".into(),
+        }
+    }
+}
+
+/// Validation failure.
+#[derive(Debug)]
+pub struct ConfigError(pub String);
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err(ConfigError(format!($($arg)*))) };
+}
+
+impl ExperimentConfig {
+    /// Sanity-check invariants the rest of the system assumes.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.n_clients == 0 {
+            bail!("n_clients must be > 0");
+        }
+        if self.n_clients % 2 != 0 && self.algorithm == Algorithm::FedPairing {
+            bail!(
+                "FedPairing pairs clients; n_clients={} must be even \
+                 (the paper's future-work arbitrary-group extension is out of scope)",
+                self.n_clients
+            );
+        }
+        if self.compute.f_min_ghz <= 0.0 || self.compute.f_max_ghz < self.compute.f_min_ghz {
+            bail!(
+                "invalid CPU frequency range [{}, {}]",
+                self.compute.f_min_ghz,
+                self.compute.f_max_ghz
+            );
+        }
+        if self.rounds == 0 {
+            bail!("rounds must be > 0");
+        }
+        if self.local_epochs == 0 {
+            bail!("local_epochs must be > 0");
+        }
+        if !(self.lr > 0.0) {
+            bail!("lr must be > 0, got {}", self.lr);
+        }
+        if self.samples_per_client == 0 {
+            bail!("samples_per_client must be > 0");
+        }
+        if self.area_radius_m <= 0.0 {
+            bail!("area_radius_m must be > 0");
+        }
+        if self.channel.bandwidth_hz <= 0.0
+            || self.channel.noise_w <= 0.0
+            || self.channel.tx_power_w <= 0.0
+        {
+            bail!("channel parameters must be positive");
+        }
+        if self.alpha < 0.0 || self.beta < 0.0 {
+            bail!("pairing weights alpha/beta must be >= 0");
+        }
+        if let DataDistribution::ClassShards { classes_per_client } = self.distribution {
+            if classes_per_client == 0 {
+                bail!("classes_per_client must be > 0");
+            }
+        }
+        if let DataDistribution::Dirichlet { alpha } = self.distribution {
+            if alpha <= 0.0 {
+                bail!("dirichlet alpha must be > 0");
+            }
+        }
+        Ok(())
+    }
+
+    /// Named presets for the paper's experiments.
+    pub fn preset(name: &str) -> Option<ExperimentConfig> {
+        let mut c = ExperimentConfig::default();
+        c.name = name.into();
+        match name {
+            // Fig. 2: IID convergence comparison (algorithm set via CLI/bench).
+            "fig2" => {
+                c.distribution = DataDistribution::Iid;
+                Some(c)
+            }
+            // Fig. 3: Non-IID — 2 random classes per client.
+            "fig3" => {
+                c.distribution = DataDistribution::ClassShards {
+                    classes_per_client: 2,
+                };
+                Some(c)
+            }
+            // Table I: pairing-mechanism timing (latency sim; model = ResNet-18 profile).
+            "table1" => {
+                c.distribution = DataDistribution::Iid;
+                Some(c)
+            }
+            // Table II: algorithm timing.
+            "table2" => {
+                c.distribution = DataDistribution::Iid;
+                Some(c)
+            }
+            // Reduced-scale smoke config used by tests/examples.
+            "quick" => {
+                c.n_clients = 4;
+                c.rounds = 3;
+                c.samples_per_client = 64;
+                c.test_samples = 128;
+                Some(c)
+            }
+            _ => None,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // JSON round-trip
+    // ------------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("name", Json::str(&self.name));
+        o.insert("seed", Json::num(self.seed as f64));
+        o.insert("algorithm", Json::str(self.algorithm.name()));
+        o.insert("pairing", Json::str(self.pairing.name()));
+        o.insert("n_clients", Json::num(self.n_clients as f64));
+        o.insert("area_radius_m", Json::num(self.area_radius_m));
+        let mut ch = JsonObj::new();
+        ch.insert("bandwidth_hz", Json::num(self.channel.bandwidth_hz));
+        ch.insert("tx_power_w", Json::num(self.channel.tx_power_w));
+        ch.insert("noise_w", Json::num(self.channel.noise_w));
+        ch.insert("ref_gain", Json::num(self.channel.ref_gain));
+        ch.insert("ref_dist_m", Json::num(self.channel.ref_dist_m));
+        ch.insert("pathloss_exp", Json::num(self.channel.pathloss_exp));
+        o.insert("channel", Json::Obj(ch));
+        let mut cp = JsonObj::new();
+        cp.insert("f_min_ghz", Json::num(self.compute.f_min_ghz));
+        cp.insert("f_max_ghz", Json::num(self.compute.f_max_ghz));
+        cp.insert("server_freq_ghz", Json::num(self.compute.server_freq_ghz));
+        cp.insert("cycles_per_flop", Json::num(self.compute.cycles_per_flop));
+        o.insert("compute", Json::Obj(cp));
+        o.insert("rounds", Json::num(self.rounds as f64));
+        o.insert("local_epochs", Json::num(self.local_epochs as f64));
+        o.insert("lr", Json::num(self.lr as f64));
+        o.insert("samples_per_client", Json::num(self.samples_per_client as f64));
+        o.insert("test_samples", Json::num(self.test_samples as f64));
+        let mut d = JsonObj::new();
+        match self.distribution {
+            DataDistribution::Iid => {
+                d.insert("kind", Json::str("iid"));
+            }
+            DataDistribution::ClassShards { classes_per_client } => {
+                d.insert("kind", Json::str("class_shards"));
+                d.insert("classes_per_client", Json::num(classes_per_client as f64));
+            }
+            DataDistribution::Dirichlet { alpha } => {
+                d.insert("kind", Json::str("dirichlet"));
+                d.insert("alpha", Json::num(alpha));
+            }
+        }
+        o.insert("distribution", Json::Obj(d));
+        o.insert("noise_level", Json::num(self.noise_level as f64));
+        o.insert("alpha", Json::num(self.alpha));
+        o.insert("beta", Json::num(self.beta));
+        o.insert("overlap_boost", Json::Bool(self.overlap_boost));
+        o.insert("sl_cut_layer", Json::num(self.sl_cut_layer as f64));
+        o.insert("splitfed_cut_layer", Json::num(self.splitfed_cut_layer as f64));
+        o.insert("eval_every", Json::num(self.eval_every as f64));
+        o.insert("artifacts_dir", Json::str(&self.artifacts_dir));
+        o.insert("out_dir", Json::str(&self.out_dir));
+        Json::Obj(o)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ExperimentConfig, ConfigError> {
+        let mut c = ExperimentConfig::default();
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| ConfigError("config must be a JSON object".into()))?;
+        let get_f64 = |k: &str, dv: f64| -> Result<f64, ConfigError> {
+            match obj.get(k) {
+                None => Ok(dv),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| ConfigError(format!("field {k} must be a number"))),
+            }
+        };
+        let get_usize = |k: &str, dv: usize| -> Result<usize, ConfigError> {
+            match obj.get(k) {
+                None => Ok(dv),
+                Some(v) => v
+                    .as_usize()
+                    .ok_or_else(|| ConfigError(format!("field {k} must be a non-negative integer"))),
+            }
+        };
+        if let Some(v) = obj.get("name") {
+            c.name = v
+                .as_str()
+                .ok_or_else(|| ConfigError("name must be a string".into()))?
+                .to_string();
+        }
+        c.seed = get_f64("seed", c.seed as f64)? as u64;
+        if let Some(v) = obj.get("algorithm") {
+            let s = v.as_str().ok_or_else(|| ConfigError("algorithm must be a string".into()))?;
+            c.algorithm = Algorithm::parse(s)
+                .ok_or_else(|| ConfigError(format!("unknown algorithm {s:?}")))?;
+        }
+        if let Some(v) = obj.get("pairing") {
+            let s = v.as_str().ok_or_else(|| ConfigError("pairing must be a string".into()))?;
+            c.pairing = PairingStrategy::parse(s)
+                .ok_or_else(|| ConfigError(format!("unknown pairing strategy {s:?}")))?;
+        }
+        c.n_clients = get_usize("n_clients", c.n_clients)?;
+        c.area_radius_m = get_f64("area_radius_m", c.area_radius_m)?;
+        if let Some(ch) = obj.get("channel").and_then(|v| v.as_obj()) {
+            let g = |k: &str, dv: f64| ch.get(k).and_then(|v| v.as_f64()).unwrap_or(dv);
+            c.channel = ChannelConfig {
+                bandwidth_hz: g("bandwidth_hz", c.channel.bandwidth_hz),
+                tx_power_w: g("tx_power_w", c.channel.tx_power_w),
+                noise_w: g("noise_w", c.channel.noise_w),
+                ref_gain: g("ref_gain", c.channel.ref_gain),
+                ref_dist_m: g("ref_dist_m", c.channel.ref_dist_m),
+                pathloss_exp: g("pathloss_exp", c.channel.pathloss_exp),
+            };
+        }
+        if let Some(cp) = obj.get("compute").and_then(|v| v.as_obj()) {
+            let g = |k: &str, dv: f64| cp.get(k).and_then(|v| v.as_f64()).unwrap_or(dv);
+            c.compute = ComputeConfig {
+                f_min_ghz: g("f_min_ghz", c.compute.f_min_ghz),
+                f_max_ghz: g("f_max_ghz", c.compute.f_max_ghz),
+                server_freq_ghz: g("server_freq_ghz", c.compute.server_freq_ghz),
+                cycles_per_flop: g("cycles_per_flop", c.compute.cycles_per_flop),
+            };
+        }
+        c.rounds = get_usize("rounds", c.rounds)?;
+        c.local_epochs = get_usize("local_epochs", c.local_epochs)?;
+        c.lr = get_f64("lr", c.lr as f64)? as f32;
+        c.samples_per_client = get_usize("samples_per_client", c.samples_per_client)?;
+        c.test_samples = get_usize("test_samples", c.test_samples)?;
+        if let Some(d) = obj.get("distribution").and_then(|v| v.as_obj()) {
+            let kind = d.get("kind").and_then(|v| v.as_str()).unwrap_or("iid");
+            c.distribution = match kind {
+                "iid" => DataDistribution::Iid,
+                "class_shards" => DataDistribution::ClassShards {
+                    classes_per_client: d
+                        .get("classes_per_client")
+                        .and_then(|v| v.as_usize())
+                        .unwrap_or(2),
+                },
+                "dirichlet" => DataDistribution::Dirichlet {
+                    alpha: d.get("alpha").and_then(|v| v.as_f64()).unwrap_or(0.5),
+                },
+                other => bail!("unknown distribution kind {other:?}"),
+            };
+        }
+        c.noise_level = get_f64("noise_level", c.noise_level as f64)? as f32;
+        c.alpha = get_f64("alpha", c.alpha)?;
+        c.beta = get_f64("beta", c.beta)?;
+        if let Some(v) = obj.get("overlap_boost") {
+            c.overlap_boost = v
+                .as_bool()
+                .ok_or_else(|| ConfigError("overlap_boost must be a bool".into()))?;
+        }
+        c.sl_cut_layer = get_usize("sl_cut_layer", c.sl_cut_layer)?;
+        c.splitfed_cut_layer = get_usize("splitfed_cut_layer", c.splitfed_cut_layer)?;
+        c.eval_every = get_usize("eval_every", c.eval_every)?;
+        if let Some(v) = obj.get("artifacts_dir") {
+            c.artifacts_dir = v
+                .as_str()
+                .ok_or_else(|| ConfigError("artifacts_dir must be a string".into()))?
+                .to_string();
+        }
+        if let Some(v) = obj.get("out_dir") {
+            c.out_dir = v
+                .as_str()
+                .ok_or_else(|| ConfigError("out_dir must be a string".into()))?
+                .to_string();
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn load(path: &str) -> Result<ExperimentConfig, Box<dyn std::error::Error>> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text)?;
+        Ok(Self::from_json(&j)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_setup() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.n_clients, 20);
+        assert_eq!(c.area_radius_m, 50.0);
+        assert_eq!(c.channel.bandwidth_hz, 64e6);
+        assert_eq!(c.channel.tx_power_w, 1.0);
+        assert_eq!(c.channel.noise_w, 1e-9);
+        assert_eq!(c.rounds, 100);
+        assert_eq!(c.local_epochs, 2);
+        assert_eq!(c.lr, 0.05);
+        assert_eq!(c.samples_per_client, 2500);
+        assert_eq!(c.compute.f_min_ghz, 0.1);
+        assert_eq!(c.compute.f_max_ghz, 2.0);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let mut c = ExperimentConfig::default();
+        c.algorithm = Algorithm::SplitFed;
+        c.pairing = PairingStrategy::Exact;
+        c.distribution = DataDistribution::Dirichlet { alpha: 0.3 };
+        c.overlap_boost = false;
+        c.seed = 12345;
+        let j = c.to_json();
+        let c2 = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c2.algorithm, Algorithm::SplitFed);
+        assert_eq!(c2.pairing, PairingStrategy::Exact);
+        assert_eq!(c2.distribution, DataDistribution::Dirichlet { alpha: 0.3 });
+        assert!(!c2.overlap_boost);
+        assert_eq!(c2.seed, 12345);
+        // full structural equality via re-serialization
+        assert_eq!(j.to_string(), c2.to_json().to_string());
+    }
+
+    #[test]
+    fn validation_rejects_odd_fedpairing_fleet() {
+        let mut c = ExperimentConfig::default();
+        c.n_clients = 5;
+        assert!(c.validate().is_err());
+        c.algorithm = Algorithm::VanillaFL;
+        assert!(c.validate().is_ok()); // odd fleets fine for FL
+    }
+
+    #[test]
+    fn validation_rejects_bad_ranges() {
+        let mut c = ExperimentConfig::default();
+        c.compute.f_min_ghz = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.rounds = 0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.lr = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.distribution = DataDistribution::Dirichlet { alpha: 0.0 };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn presets_exist_and_validate() {
+        for name in ["fig2", "fig3", "table1", "table2", "quick"] {
+            let c = ExperimentConfig::preset(name).unwrap_or_else(|| panic!("{name}"));
+            c.validate().unwrap();
+        }
+        assert!(ExperimentConfig::preset("nope").is_none());
+    }
+
+    #[test]
+    fn fig3_is_two_class_shards() {
+        let c = ExperimentConfig::preset("fig3").unwrap();
+        assert_eq!(
+            c.distribution,
+            DataDistribution::ClassShards {
+                classes_per_client: 2
+            }
+        );
+    }
+
+    #[test]
+    fn enum_parsers() {
+        assert_eq!(Algorithm::parse("FedPairing"), Some(Algorithm::FedPairing));
+        assert_eq!(Algorithm::parse("fedavg"), Some(Algorithm::VanillaFL));
+        assert_eq!(Algorithm::parse("x"), None);
+        assert_eq!(PairingStrategy::parse("GREEDY"), Some(PairingStrategy::Greedy));
+        assert_eq!(PairingStrategy::parse("x"), None);
+    }
+
+    #[test]
+    fn from_json_partial_uses_defaults() {
+        let j = Json::parse(r#"{"n_clients": 6, "rounds": 2}"#).unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.n_clients, 6);
+        assert_eq!(c.rounds, 2);
+        assert_eq!(c.local_epochs, 2); // default preserved
+    }
+
+    #[test]
+    fn from_json_bad_types_error() {
+        let j = Json::parse(r#"{"rounds": "many"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"algorithm": "quantum"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,526 @@
+//! Algorithm drivers: the full multi-round FL loops for FedPairing and the
+//! three benchmarks (vanilla FL, vanilla SL, SplitFed), all executing the same
+//! AOT artifacts through one [`Engine`] and all charged by the same latency
+//! simulator — so accuracy curves (Figs. 2–3) and round times (Tables I–II)
+//! come from one consistent system.
+
+use crate::config::{Algorithm, ExperimentConfig};
+use crate::coordinator::metrics::{RoundRecord, RunResult};
+use crate::coordinator::split::train_pair;
+use crate::data::loader::{eval_batches, Batch, Loader};
+use crate::data::partition::partition;
+use crate::data::synth::SynthCifar;
+use crate::nn::{self, Params};
+use crate::pairing::pair_clients;
+use crate::runtime::Engine;
+use crate::sim::channel::Channel;
+use crate::sim::compute::{aggregation_weights, split_lengths};
+use crate::sim::latency::{self, Fleet, Schedule};
+use crate::{log_debug, log_info};
+use anyhow::{Context, Result};
+
+/// A fully materialized experiment: fleet, data, engine, channel.
+pub struct Experiment {
+    pub cfg: ExperimentConfig,
+    pub engine: Engine,
+    pub fleet: Fleet,
+    pub channel: Channel,
+    loaders: Vec<Loader>,
+    /// FedAvg weights `a_i`.
+    weights: Vec<f64>,
+    test: Vec<Batch>,
+}
+
+impl Experiment {
+    /// Build everything deterministically from the config.
+    pub fn new(cfg: ExperimentConfig) -> Result<Experiment> {
+        cfg.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let engine = Engine::load(&cfg.artifacts_dir)?;
+        let mut rng = crate::util::rng::Rng::new(cfg.seed);
+        let fleet = Fleet::sample(&cfg, &mut rng);
+        let channel = Channel::new(cfg.channel);
+        let gen = SynthCifar::new(cfg.seed, cfg.noise_level);
+        let shards = partition(
+            &mut rng.fork(1),
+            cfg.n_clients,
+            cfg.samples_per_client,
+            &cfg.distribution,
+        );
+        let train_batch = engine.meta().train_batch;
+        let loaders: Vec<Loader> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                Loader::new(
+                    gen.clone(),
+                    shard,
+                    train_batch,
+                    crate::util::rng::Rng::with_stream(cfg.seed ^ 0xC11E47, i as u64),
+                )
+            })
+            .collect();
+        let weights = aggregation_weights(&fleet.resources());
+        let test = eval_batches(&gen.test_set(cfg.test_samples), engine.meta().eval_batch);
+        Ok(Experiment {
+            cfg,
+            engine,
+            fleet,
+            channel,
+            loaders,
+            weights,
+            test,
+        })
+    }
+
+    fn schedule(&self) -> Schedule {
+        Schedule {
+            batch_size: self.engine.meta().train_batch,
+            epochs: self.cfg.local_epochs,
+        }
+    }
+
+    /// Evaluate a model on the shared test set: `(mean_loss, accuracy)`.
+    pub fn evaluate(&mut self, params: &Params) -> Result<(f64, f64)> {
+        let mut loss_sum = 0f64;
+        let mut correct = 0f64;
+        let mut rows = 0f64;
+        // Upload the model once, reuse the device buffers across test batches.
+        let dev = self.engine.upload_params(params, 0)?;
+        for b in &self.test {
+            let (l, c, n) = self.engine.eval_batch_b(&dev, &b.x, &b.y1hot)?;
+            loss_sum += l as f64;
+            correct += c as f64;
+            rows += n as f64;
+        }
+        anyhow::ensure!(rows > 0.0, "empty test set");
+        Ok((loss_sum / rows, correct / rows))
+    }
+
+    fn should_eval(&self, round: usize) -> bool {
+        round == self.cfg.rounds
+            || (self.cfg.eval_every > 0 && round % self.cfg.eval_every == 0)
+    }
+
+    /// Run the configured algorithm to completion.
+    pub fn run(&mut self) -> Result<RunResult> {
+        let t0 = std::time::Instant::now();
+        let rounds = match self.cfg.algorithm {
+            Algorithm::FedPairing => self.run_fedpairing()?,
+            Algorithm::VanillaFL => self.run_fl()?,
+            Algorithm::VanillaSL => self.run_sl()?,
+            Algorithm::SplitFed => self.run_splitfed()?,
+        };
+        Ok(RunResult {
+            config: self.cfg.clone(),
+            rounds,
+            wall_s: t0.elapsed().as_secs_f64(),
+            total_execs: self.engine.total_execs(),
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // FedPairing (the paper's system)
+    // ------------------------------------------------------------------
+
+    fn run_fedpairing(&mut self) -> Result<Vec<RoundRecord>> {
+        let w = self.engine.meta().layers;
+        let mut pairing_rng = crate::util::rng::Rng::new(self.cfg.seed ^ 0x9A1F);
+        // Initialization phase (paper Sec. II-A.1): pair once, compute
+        // (L_i, a_i), distribute the global model.
+        let pairs = pair_clients(
+            self.cfg.pairing,
+            &self.fleet,
+            &self.channel,
+            self.cfg.alpha,
+            self.cfg.beta,
+            &mut pairing_rng,
+        );
+        log_info!(
+            "fedpairing: {} pairs via {} strategy",
+            pairs.len(),
+            self.cfg.pairing
+        );
+        let splits: Vec<(usize, usize)> = pairs
+            .iter()
+            .map(|&(i, j)| split_lengths(self.fleet.freqs_hz[i], self.fleet.freqs_hz[j], w))
+            .collect();
+        // Static fleet → identical per-round latency; compute once.
+        let round_time = latency::fedpairing_round(
+            &self.fleet,
+            &pairs,
+            &self.engine.meta().profile(),
+            &self.schedule(),
+            &self.channel,
+            &self.cfg.compute,
+            true,
+        )
+        .total_s;
+        let mut global = self.engine.init_params(self.cfg.seed as u32)?;
+        let mut records = Vec::with_capacity(self.cfg.rounds);
+        for round in 1..=self.cfg.rounds {
+            let mut locals: Vec<Params> = Vec::with_capacity(self.cfg.n_clients);
+            let mut loss_sum = 0.0;
+            let mut steps = 0usize;
+            for (pi, &(i, j)) in pairs.iter().enumerate() {
+                let (l_i, l_j) = splits[pi];
+                // Normalized data weights â_i = N·a_i (≡ 1 for equal shards).
+                // The paper's literal eq.(1) scales local grads by a_i ≈ 1/N
+                // *and* averages models at the server — a double shrink that
+                // makes the net step η/N² (inconsistent with its own Fig. 2,
+                // where FedPairing out-converges FL). We keep the *relative*
+                // a_i weighting inside the pair and restore the magnitude at
+                // aggregation via the standard weighted FedAvg, which is the
+                // consistent reading (DESIGN.md §2).
+                let n = self.cfg.n_clients as f32;
+                let (a_i, a_j) = (
+                    self.weights[i] as f32 * n,
+                    self.weights[j] as f32 * n,
+                );
+                // Loaders for i and j (split_at to appease the borrow checker).
+                let (li, lj) = {
+                    let (lo, hi) = (i.min(j), i.max(j));
+                    let (a, b) = self.loaders.split_at_mut(hi);
+                    if i < j {
+                        (&mut a[lo], &mut b[0])
+                    } else {
+                        (&mut b[0], &mut a[lo])
+                    }
+                };
+                let out = train_pair(
+                    &mut self.engine,
+                    &global,
+                    li,
+                    lj,
+                    l_i,
+                    l_j,
+                    a_i,
+                    a_j,
+                    self.cfg.lr,
+                    self.cfg.local_epochs,
+                    self.cfg.overlap_boost,
+                )?;
+                loss_sum += out.mean_loss * out.n_steps as f64;
+                steps += out.n_steps;
+                locals.push(out.model_i);
+                locals.push(out.model_j);
+            }
+            // Model aggregation (Sec. II-A.3): with normalized â_i weighting
+            // above, the consistent server rule is weighted FedAvg of the 2N
+            // local models, each carrying its owner's data weight a_i.
+            let mut agg_weights = Vec::with_capacity(locals.len());
+            for &(i, j) in &pairs {
+                agg_weights.push(self.weights[i]);
+                agg_weights.push(self.weights[j]);
+            }
+            global = nn::fedavg_weighted(&locals, &agg_weights);
+            anyhow::ensure!(nn::all_finite(&global), "global model diverged (NaN/Inf)");
+            records.push(self.record(round, &global, loss_sum / steps.max(1) as f64, round_time)?);
+        }
+        Ok(records)
+    }
+
+    // ------------------------------------------------------------------
+    // Vanilla FL (FedAvg)
+    // ------------------------------------------------------------------
+
+    fn run_fl(&mut self) -> Result<Vec<RoundRecord>> {
+        let round_time = latency::fl_round(
+            &self.fleet,
+            &self.engine.meta().profile(),
+            &self.schedule(),
+            &self.channel,
+            &self.cfg.compute,
+            true,
+        )
+        .total_s;
+        let mut global = self.engine.init_params(self.cfg.seed as u32)?;
+        let mut records = Vec::with_capacity(self.cfg.rounds);
+        for round in 1..=self.cfg.rounds {
+            let mut locals: Vec<Params> = Vec::with_capacity(self.cfg.n_clients);
+            let mut loss_sum = 0.0;
+            let mut steps = 0usize;
+            for c in 0..self.cfg.n_clients {
+                let mut local = global.clone();
+                for _ in 0..self.cfg.local_epochs {
+                    for b in self.loaders[c].epoch() {
+                        let (grads, loss) = self.engine.full_step(&local, &b.x, &b.y1hot)?;
+                        nn::sgd_apply(&mut local, &grads, self.cfg.lr);
+                        loss_sum += loss as f64;
+                        steps += 1;
+                    }
+                }
+                locals.push(local);
+            }
+            global = nn::fedavg_weighted(&locals, &self.weights);
+            anyhow::ensure!(nn::all_finite(&global), "global model diverged (NaN/Inf)");
+            records.push(self.record(round, &global, loss_sum / steps.max(1) as f64, round_time)?);
+        }
+        Ok(records)
+    }
+
+    // ------------------------------------------------------------------
+    // Vanilla SL (sequential relay)
+    // ------------------------------------------------------------------
+
+    fn run_sl(&mut self) -> Result<Vec<RoundRecord>> {
+        let cut = self.cfg.sl_cut_layer.clamp(1, self.engine.meta().layers - 1);
+        let round_time = latency::sl_round(
+            &self.fleet,
+            &self.engine.meta().profile(),
+            &self.schedule(),
+            &self.channel,
+            &self.cfg.compute,
+            cut,
+            self.cfg.compute.server_freq_ghz * 1e9,
+        )
+        .total_s;
+        let global = self.engine.init_params(self.cfg.seed as u32)?;
+        let (mut front, mut back) = split_params(&global, cut);
+        let mut records = Vec::with_capacity(self.cfg.rounds);
+        for round in 1..=self.cfg.rounds {
+            let mut loss_sum = 0.0;
+            let mut steps = 0usize;
+            // Clients take sessions sequentially; the client-side model and
+            // the server-side model both persist across the relay.
+            for c in 0..self.cfg.n_clients {
+                let (l, s) = self.split_session(&mut front, &mut back, cut, c)?;
+                loss_sum += l;
+                steps += s;
+            }
+            let full = join_params(&front, &back);
+            anyhow::ensure!(nn::all_finite(&full), "SL model diverged (NaN/Inf)");
+            records.push(self.record(round, &full, loss_sum / steps.max(1) as f64, round_time)?);
+        }
+        Ok(records)
+    }
+
+    // ------------------------------------------------------------------
+    // SplitFed
+    // ------------------------------------------------------------------
+
+    fn run_splitfed(&mut self) -> Result<Vec<RoundRecord>> {
+        let cut = self
+            .cfg
+            .splitfed_cut_layer
+            .clamp(1, self.engine.meta().layers - 1);
+        let round_time = latency::splitfed_round(
+            &self.fleet,
+            &self.engine.meta().profile(),
+            &self.schedule(),
+            &self.channel,
+            &self.cfg.compute,
+            cut,
+            self.cfg.compute.server_freq_ghz * 1e9,
+            true,
+        )
+        .total_s;
+        let mut global = self.engine.init_params(self.cfg.seed as u32)?;
+        let mut records = Vec::with_capacity(self.cfg.rounds);
+        for round in 1..=self.cfg.rounds {
+            let mut fronts: Vec<Params> = Vec::with_capacity(self.cfg.n_clients);
+            let mut backs: Vec<Params> = Vec::with_capacity(self.cfg.n_clients);
+            let mut loss_sum = 0.0;
+            let mut steps = 0usize;
+            for c in 0..self.cfg.n_clients {
+                // Every client gets a fresh copy of both halves (the server
+                // keeps one server-side instance per client, SplitFed-V1).
+                let (mut front, mut back) = split_params(&global, cut);
+                let (l, s) = self.split_session(&mut front, &mut back, cut, c)?;
+                loss_sum += l;
+                steps += s;
+                fronts.push(front);
+                backs.push(back);
+            }
+            // Fed server averages client-side models; main server averages
+            // server-side models (both weighted by a_i).
+            let front = nn::fedavg_weighted(&fronts, &self.weights);
+            let back = nn::fedavg_weighted(&backs, &self.weights);
+            global = join_params(&front, &back);
+            anyhow::ensure!(nn::all_finite(&global), "SplitFed diverged (NaN/Inf)");
+            records.push(self.record(round, &global, loss_sum / steps.max(1) as f64, round_time)?);
+        }
+        Ok(records)
+    }
+
+    /// One client's split-learning session against the server (shared by SL
+    /// and SplitFed): plain unweighted SGD on both halves, per batch.
+    fn split_session(
+        &mut self,
+        front: &mut Params,
+        back: &mut Params,
+        cut: usize,
+        client: usize,
+    ) -> Result<(f64, usize)> {
+        let mut loss_sum = 0.0;
+        let mut steps = 0usize;
+        let meta = self.engine.meta();
+        let (bt, di, h) = (meta.train_batch, meta.input_dim, meta.hidden);
+        for _ in 0..self.cfg.local_epochs {
+            for b in self.loaders[client].epoch() {
+                // Device buffers shared between the fwd and bwd of this batch.
+                let pf = self.engine.upload_params(front, 0)?;
+                let pb = self.engine.upload_params(back, cut)?;
+                let xb = self.engine.upload_f32(&[bt, di], &b.x)?;
+                let act = self.engine.front_fwd_b(cut, &pf, &xb)?;
+                let ab = self.engine.upload_f32(&[bt, h], &act)?;
+                let logits = self.engine.back_fwd_b(cut, &pb, &ab)?;
+                let (loss, g_logits) = self.engine.loss_grad(&logits, &b.y1hot)?;
+                let (g_back, g_act) = self.engine.back_bwd_b(cut, &pb, &ab, &g_logits)?;
+                let g_front = self.engine.front_bwd_b(cut, &pf, &xb, &g_act)?;
+                for (t, g) in front.iter_mut().zip(&g_front) {
+                    for (p, &gv) in t.iter_mut().zip(g) {
+                        *p -= self.cfg.lr * gv;
+                    }
+                }
+                for (t, g) in back.iter_mut().zip(&g_back) {
+                    for (p, &gv) in t.iter_mut().zip(g) {
+                        *p -= self.cfg.lr * gv;
+                    }
+                }
+                loss_sum += loss as f64;
+                steps += 1;
+            }
+        }
+        Ok((loss_sum, steps))
+    }
+
+    /// Assemble a round record (evaluating if scheduled).
+    fn record(
+        &mut self,
+        round: usize,
+        model: &Params,
+        train_loss: f64,
+        round_time: f64,
+    ) -> Result<RoundRecord> {
+        let (test_loss, test_acc) = if self.should_eval(round) {
+            self.evaluate(model)?
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+        let sim_total = round_time * round as f64;
+        log_debug!(
+            "round {round}: train_loss={train_loss:.4} acc={test_acc:.4} sim={round_time:.1}s"
+        );
+        Ok(RoundRecord {
+            round,
+            train_loss,
+            test_acc,
+            test_loss,
+            sim_round_s: round_time,
+            sim_total_s: sim_total,
+        })
+    }
+}
+
+/// Split a flat model into `(front, back)` at layer `cut`.
+pub fn split_params(params: &Params, cut: usize) -> (Params, Params) {
+    let front = params[..2 * cut].to_vec();
+    let back = params[2 * cut..].to_vec();
+    (front, back)
+}
+
+/// Rejoin `(front, back)` into a flat model.
+pub fn join_params(front: &Params, back: &Params) -> Params {
+    let mut out = front.clone();
+    out.extend(back.iter().cloned());
+    out
+}
+
+/// Convenience: build + run in one call.
+pub fn run_experiment(cfg: ExperimentConfig) -> Result<RunResult> {
+    Experiment::new(cfg)
+        .context("building experiment")?
+        .run()
+        .context("running experiment")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DataDistribution, PairingStrategy};
+
+    fn quick_cfg(algo: Algorithm) -> ExperimentConfig {
+        let mut c = ExperimentConfig::preset("quick").unwrap();
+        c.algorithm = algo;
+        c.rounds = 2;
+        c.samples_per_client = 32;
+        c.test_samples = 64;
+        c
+    }
+
+    fn artifacts_ready() -> bool {
+        let ok = std::path::Path::new("artifacts/manifest.json").exists();
+        if !ok {
+            eprintln!("skipping driver test: artifacts/ not built");
+        }
+        ok
+    }
+
+    #[test]
+    fn split_join_roundtrip() {
+        let p: Params = (0..8).map(|i| vec![i as f32; 3]).collect();
+        let (f, b) = split_params(&p, 3);
+        assert_eq!(f.len(), 6);
+        assert_eq!(b.len(), 2);
+        assert_eq!(join_params(&f, &b), p);
+    }
+
+    #[test]
+    fn fedpairing_quick_run_trains() {
+        if !artifacts_ready() {
+            return;
+        }
+        let res = run_experiment(quick_cfg(Algorithm::FedPairing)).unwrap();
+        assert_eq!(res.rounds.len(), 2);
+        assert!(res.final_acc() > 0.0);
+        assert!(res.rounds[0].sim_round_s > 0.0);
+        assert!(res.total_execs > 0);
+        // loss should be finite and generally decreasing across rounds
+        assert!(res.rounds[1].train_loss.is_finite());
+    }
+
+    #[test]
+    fn all_algorithms_quick_run() {
+        if !artifacts_ready() {
+            return;
+        }
+        let mut accs = Vec::new();
+        for algo in [
+            Algorithm::FedPairing,
+            Algorithm::VanillaFL,
+            Algorithm::VanillaSL,
+            Algorithm::SplitFed,
+        ] {
+            let res = run_experiment(quick_cfg(algo)).unwrap();
+            assert_eq!(res.rounds.len(), 2, "{algo:?}");
+            assert!(res.final_acc().is_finite(), "{algo:?}");
+            accs.push((algo, res.final_acc()));
+        }
+        eprintln!("quick accs: {accs:?}");
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        if !artifacts_ready() {
+            return;
+        }
+        let a = run_experiment(quick_cfg(Algorithm::FedPairing)).unwrap();
+        let b = run_experiment(quick_cfg(Algorithm::FedPairing)).unwrap();
+        assert_eq!(a.final_acc(), b.final_acc());
+        assert_eq!(a.rounds[0].train_loss, b.rounds[0].train_loss);
+    }
+
+    #[test]
+    fn noniid_shards_run() {
+        if !artifacts_ready() {
+            return;
+        }
+        let mut cfg = quick_cfg(Algorithm::FedPairing);
+        cfg.distribution = DataDistribution::ClassShards {
+            classes_per_client: 2,
+        };
+        cfg.pairing = PairingStrategy::Random;
+        let res = run_experiment(cfg).unwrap();
+        assert!(res.final_acc().is_finite());
+    }
+}

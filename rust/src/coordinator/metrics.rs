@@ -1,0 +1,219 @@
+//! Experiment metrics: per-round records, run summaries, CSV/JSON sinks.
+//!
+//! Every driver produces a [`RunResult`]; examples and benches render it, and
+//! `to_csv`/`to_json` persist it under the configured `out_dir` together with
+//! the full config echo for provenance.
+
+use crate::config::ExperimentConfig;
+use crate::util::json::{Json, JsonObj};
+
+/// One communication round's measurements.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Mean training loss across all local batches this round.
+    pub train_loss: f64,
+    /// Top-1 accuracy on the shared test set (NaN when eval skipped).
+    pub test_acc: f64,
+    /// Mean test loss (NaN when eval skipped).
+    pub test_loss: f64,
+    /// Simulated wall-clock seconds this round took (latency model).
+    pub sim_round_s: f64,
+    /// Cumulative simulated seconds since round 1.
+    pub sim_total_s: f64,
+}
+
+/// A full experiment run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub config: ExperimentConfig,
+    pub rounds: Vec<RoundRecord>,
+    /// Host wall-clock seconds the run actually took.
+    pub wall_s: f64,
+    /// Total artifact executions (runtime pressure diagnostic).
+    pub total_execs: u64,
+}
+
+impl RunResult {
+    /// Final evaluated accuracy (last non-NaN).
+    pub fn final_acc(&self) -> f64 {
+        self.rounds
+            .iter()
+            .rev()
+            .find(|r| !r.test_acc.is_nan())
+            .map(|r| r.test_acc)
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Best evaluated accuracy.
+    pub fn best_acc(&self) -> f64 {
+        self.rounds
+            .iter()
+            .filter(|r| !r.test_acc.is_nan())
+            .map(|r| r.test_acc)
+            .fold(f64::NAN, f64::max)
+    }
+
+    /// Mean simulated seconds per round.
+    pub fn mean_round_s(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.rounds.iter().map(|r| r.sim_round_s).sum::<f64>() / self.rounds.len() as f64
+    }
+
+    /// Accuracy trace as `(round, acc)` pairs (evaluated rounds only).
+    pub fn acc_curve(&self) -> Vec<(usize, f64)> {
+        self.rounds
+            .iter()
+            .filter(|r| !r.test_acc.is_nan())
+            .map(|r| (r.round, r.test_acc))
+            .collect()
+    }
+
+    /// CSV rendering (header + one row per round).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("round,train_loss,test_loss,test_acc,sim_round_s,sim_total_s\n");
+        for r in &self.rounds {
+            s.push_str(&format!(
+                "{},{:.6},{:.6},{:.6},{:.3},{:.3}\n",
+                r.round, r.train_loss, r.test_loss, r.test_acc, r.sim_round_s, r.sim_total_s
+            ));
+        }
+        s
+    }
+
+    /// JSON rendering with config echo.
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("config", self.config.to_json());
+        o.insert("wall_s", Json::num(self.wall_s));
+        o.insert("total_execs", Json::num(self.total_execs as f64));
+        o.insert("final_acc", Json::num(self.final_acc()));
+        o.insert("best_acc", Json::num(self.best_acc()));
+        o.insert("mean_round_s", Json::num(self.mean_round_s()));
+        let rounds: Vec<Json> = self
+            .rounds
+            .iter()
+            .map(|r| {
+                let mut ro = JsonObj::new();
+                ro.insert("round", Json::num(r.round as f64));
+                ro.insert("train_loss", Json::num(r.train_loss));
+                ro.insert("test_loss", Json::num(r.test_loss));
+                ro.insert("test_acc", Json::num(r.test_acc));
+                ro.insert("sim_round_s", Json::num(r.sim_round_s));
+                ro.insert("sim_total_s", Json::num(r.sim_total_s));
+                Json::Obj(ro)
+            })
+            .collect();
+        o.insert("rounds", Json::Arr(rounds));
+        Json::Obj(o)
+    }
+
+    /// Persist CSV + JSON under `dir` with the run name; returns the paths.
+    pub fn save(&self, dir: &str) -> std::io::Result<(String, String)> {
+        std::fs::create_dir_all(dir)?;
+        let base = format!(
+            "{dir}/{}_{}_{}",
+            self.config.name,
+            self.config.algorithm.name(),
+            self.config.distribution.name()
+        );
+        let csv_path = format!("{base}.csv");
+        let json_path = format!("{base}.json");
+        std::fs::write(&csv_path, self.to_csv())?;
+        std::fs::write(&json_path, self.to_json().to_string_pretty(1))?;
+        Ok((csv_path, json_path))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result() -> RunResult {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = "t".into();
+        RunResult {
+            config: cfg,
+            rounds: vec![
+                RoundRecord {
+                    round: 1,
+                    train_loss: 2.0,
+                    test_acc: 0.3,
+                    test_loss: 2.1,
+                    sim_round_s: 10.0,
+                    sim_total_s: 10.0,
+                },
+                RoundRecord {
+                    round: 2,
+                    train_loss: 1.5,
+                    test_acc: f64::NAN,
+                    test_loss: f64::NAN,
+                    sim_round_s: 10.0,
+                    sim_total_s: 20.0,
+                },
+                RoundRecord {
+                    round: 3,
+                    train_loss: 1.2,
+                    test_acc: 0.5,
+                    test_loss: 1.4,
+                    sim_round_s: 12.0,
+                    sim_total_s: 32.0,
+                },
+            ],
+            wall_s: 1.0,
+            total_execs: 42,
+        }
+    }
+
+    #[test]
+    fn final_and_best_skip_nan() {
+        let r = result();
+        assert_eq!(r.final_acc(), 0.5);
+        assert_eq!(r.best_acc(), 0.5);
+        assert_eq!(r.acc_curve(), vec![(1, 0.3), (3, 0.5)]);
+    }
+
+    #[test]
+    fn mean_round_time() {
+        assert!((result().mean_round_s() - 32.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_has_all_rounds() {
+        let csv = result().to_csv();
+        assert_eq!(csv.lines().count(), 4);
+        assert!(csv.starts_with("round,"));
+    }
+
+    #[test]
+    fn json_roundtrips_and_has_summary() {
+        let j = result().to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("final_acc").unwrap().as_f64(), Some(0.5));
+        assert_eq!(
+            parsed.get("rounds").unwrap().as_arr().unwrap().len(),
+            3
+        );
+        assert_eq!(
+            parsed
+                .get("config")
+                .unwrap()
+                .get("n_clients")
+                .unwrap()
+                .as_usize(),
+            Some(20)
+        );
+    }
+
+    #[test]
+    fn save_writes_files() {
+        let dir = std::env::temp_dir().join("fp_metrics_test");
+        let dir = dir.to_str().unwrap();
+        let (c, j) = result().save(dir).unwrap();
+        assert!(std::fs::metadata(&c).unwrap().len() > 0);
+        assert!(std::fs::metadata(&j).unwrap().len() > 0);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,15 @@
+//! L3 coordination: the FedPairing server/round loop, the split-training
+//! protocol, the benchmark algorithm drivers, and metrics sinks.
+//!
+//! * [`split`] — paper Algorithm 2's pair trainer (eqs. 1–2, 7).
+//! * [`drivers`] — full multi-round loops: FedPairing / FL / SL / SplitFed.
+//! * [`protocol`] — split-learning message types + byte accounting.
+//! * [`metrics`] — per-round records, CSV/JSON persistence.
+
+pub mod drivers;
+pub mod metrics;
+pub mod protocol;
+pub mod split;
+
+pub use drivers::{run_experiment, Experiment};
+pub use metrics::{RoundRecord, RunResult};

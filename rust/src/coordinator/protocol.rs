@@ -1,0 +1,135 @@
+//! The split-learning wire protocol: message types exchanged inside a pair
+//! (and between client and server for SL/SplitFed), with exact byte-size
+//! accounting.
+//!
+//! The coordinator executes pairs deterministically in virtual time (the
+//! latency simulator charges every message below to the eq.-3 channel), so
+//! these types both document the protocol and anchor the simulation's
+//! byte counts — `tests` assert the latency model and the protocol agree.
+//!
+//! Label privacy (DESIGN.md §2): the *data owner* computes the loss and the
+//! logit gradient locally. Labels never appear in any message.
+
+/// Message kinds of the FedPairing local-training protocol, in order of
+/// appearance within one mini-batch step of one direction.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Owner → helper: the split activation `x̄ = ω_(1,L)(x)`.
+    Activation {
+        batch: usize,
+        hidden: usize,
+        data: Vec<f32>,
+    },
+    /// Helper → owner: logits `ŷ` (the paper's "c_j returns ŷ to c_i").
+    Logits {
+        batch: usize,
+        classes: usize,
+        data: Vec<f32>,
+    },
+    /// Owner → helper: `∂l/∂ŷ` (replaces the paper's underspecified "sends
+    /// the loss value"; a scalar loss cannot drive backprop).
+    LogitGrad {
+        batch: usize,
+        classes: usize,
+        data: Vec<f32>,
+    },
+    /// Helper → owner: activation cotangent `g_act` of the split boundary.
+    ActGrad {
+        batch: usize,
+        hidden: usize,
+        data: Vec<f32>,
+    },
+    /// Client → server: the trained local model (round upload).
+    ModelUpload { n_params: usize },
+    /// Server → client: the aggregated global model.
+    ModelDownload { n_params: usize },
+}
+
+impl Msg {
+    /// Payload size in bytes (f32 tensors; headers ignored, consistent with
+    /// the latency model).
+    pub fn bytes(&self) -> f64 {
+        match self {
+            Msg::Activation { batch, hidden, .. } | Msg::ActGrad { batch, hidden, .. } => {
+                (batch * hidden * 4) as f64
+            }
+            Msg::Logits { batch, classes, .. } | Msg::LogitGrad { batch, classes, .. } => {
+                (batch * classes * 4) as f64
+            }
+            Msg::ModelUpload { n_params } | Msg::ModelDownload { n_params } => {
+                (n_params * 4) as f64
+            }
+        }
+    }
+
+    /// Validate payload length against the declared shape.
+    pub fn validate(&self) -> bool {
+        match self {
+            Msg::Activation { batch, hidden, data } | Msg::ActGrad { batch, hidden, data } => {
+                data.len() == batch * hidden
+            }
+            Msg::Logits { batch, classes, data }
+            | Msg::LogitGrad { batch, classes, data } => data.len() == batch * classes,
+            Msg::ModelUpload { .. } | Msg::ModelDownload { .. } => true,
+        }
+    }
+}
+
+/// Bytes sent owner→helper per mini-batch step (activation + logit-grad).
+pub fn owner_to_helper_bytes(batch: usize, hidden: usize, classes: usize) -> f64 {
+    (batch * hidden * 4 + batch * classes * 4) as f64
+}
+
+/// Bytes sent helper→owner per mini-batch step (logits + act-grad).
+pub fn helper_to_owner_bytes(batch: usize, hidden: usize, classes: usize) -> f64 {
+    (batch * classes * 4 + batch * hidden * 4) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_accounting() {
+        let m = Msg::Activation {
+            batch: 32,
+            hidden: 256,
+            data: vec![0.0; 32 * 256],
+        };
+        assert_eq!(m.bytes(), (32 * 256 * 4) as f64);
+        assert!(m.validate());
+        let m = Msg::Logits {
+            batch: 32,
+            classes: 10,
+            data: vec![0.0; 32 * 10],
+        };
+        assert_eq!(m.bytes(), (32 * 10 * 4) as f64);
+        let m = Msg::ModelUpload { n_params: 1000 };
+        assert_eq!(m.bytes(), 4000.0);
+    }
+
+    #[test]
+    fn validation_catches_wrong_payload() {
+        let m = Msg::ActGrad {
+            batch: 4,
+            hidden: 8,
+            data: vec![0.0; 31],
+        };
+        assert!(!m.validate());
+    }
+
+    #[test]
+    fn per_step_totals_match_latency_model() {
+        // sim::latency's push_split_batches charges act+g_logits up and
+        // logits+g_act down; the protocol totals must agree.
+        let (b, h, c) = (32, 256, 10);
+        let up = owner_to_helper_bytes(b, h, c);
+        let down = helper_to_owner_bytes(b, h, c);
+        let act = (b * h * 4) as f64;
+        let log = (b * c * 4) as f64;
+        assert_eq!(up, act + log);
+        assert_eq!(down, log + act);
+        // symmetric protocol
+        assert_eq!(up, down);
+    }
+}

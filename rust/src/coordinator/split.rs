@@ -1,0 +1,272 @@
+//! The FedPairing pair trainer — paper Algorithm 2's inner loop, executed
+//! against the AOT artifacts.
+//!
+//! For a pair `(c_i, c_j)` with split lengths `(L_i, L_j)`, each mini-batch
+//! step runs two *directions* (both charged concurrently by the latency
+//! model; executed deterministically here):
+//!
+//! ```text
+//!   direction i (data of c_i):           direction j (data of c_j):
+//!     act   = front_fwd_{L_i}(ω^i, x_i)    act   = front_fwd_{L_j}(ω^j, x_j)
+//!     ŷ     = back_fwd_{L_i}(ω^j, act)     ŷ     = back_fwd_{L_j}(ω^i, act)
+//!     l,g_ŷ = loss_grad(ŷ, y_i)   [c_i]    l,g_ŷ = loss_grad(ŷ, y_j)   [c_j]
+//!     g_bk,g_act = back_bwd(ω^j, …)        g_bk,g_act = back_bwd(ω^i, …)
+//!     g_fr  = front_bwd(ω^i, …)            g_fr  = front_bwd(ω^j, …)
+//! ```
+//!
+//! then both models update with eqs. (1)/(2) (+ the eq. (7) overlap boost):
+//! `ω^i ← ω^i − η(a_i·g_front_i  +  a_j·g_back_from_j)` where the back grads
+//! for `ω^i` come from direction *j* (c_j's data flowing through `ω^i`'s back
+//! layers `L_j..W`).
+
+use crate::data::loader::{Batch, Loader};
+use crate::nn::{apply_split_update, Params};
+use crate::runtime::Engine;
+use anyhow::Result;
+
+/// Result of one pair's local-training phase (one round).
+#[derive(Debug)]
+pub struct PairOutcome {
+    pub model_i: Params,
+    pub model_j: Params,
+    /// Mean training loss over all steps of both directions.
+    pub mean_loss: f64,
+    /// Mini-batch steps executed (both directions).
+    pub n_steps: usize,
+}
+
+/// One direction's gradients for one batch.
+struct DirGrads {
+    /// grads for the data-owner's front layers `[0, l_own)`.
+    g_front: Vec<Vec<f32>>,
+    /// grads for the helper's back layers `[l_own, W)` *of the helper model*.
+    g_back: Vec<Vec<f32>>,
+    loss: f64,
+}
+
+/// Run one direction's five protocol steps for one batch.
+fn run_direction(
+    engine: &mut Engine,
+    owner_model: &Params,
+    helper_model: &Params,
+    l_own: usize,
+    batch: &Batch,
+) -> Result<DirGrads> {
+    let meta = engine.meta();
+    let (b, di, h) = (meta.train_batch, meta.input_dim, meta.hidden);
+    // Upload each model slice and the input once; the forward and backward
+    // calls of this batch share the device buffers (§Perf: halves uploads).
+    let pf = engine.upload_params(&owner_model[..2 * l_own], 0)?;
+    let pb = engine.upload_params(&helper_model[2 * l_own..], l_own)?;
+    let xb = engine.upload_f32(&[b, di], &batch.x)?;
+    let act = engine.front_fwd_b(l_own, &pf, &xb)?;
+    let act_b = engine.upload_f32(&[b, h], &act)?;
+    let logits = engine.back_fwd_b(l_own, &pb, &act_b)?;
+    let (loss, g_logits) = engine.loss_grad(&logits, &batch.y1hot)?;
+    let (g_back, g_act) = engine.back_bwd_b(l_own, &pb, &act_b, &g_logits)?;
+    let g_front = engine.front_bwd_b(l_own, &pf, &xb, &g_act)?;
+    Ok(DirGrads {
+        g_front,
+        g_back,
+        loss: loss as f64,
+    })
+}
+
+/// Train a pair for `epochs` local epochs starting from the global model.
+///
+/// `a_i`/`a_j` are the FedAvg weights applied to each *data source's*
+/// gradients (paper: weighted during backward, cached, then applied).
+#[allow(clippy::too_many_arguments)]
+pub fn train_pair(
+    engine: &mut Engine,
+    global: &Params,
+    loader_i: &mut Loader,
+    loader_j: &mut Loader,
+    l_i: usize,
+    l_j: usize,
+    a_i: f32,
+    a_j: f32,
+    lr: f32,
+    epochs: usize,
+    overlap_boost: bool,
+) -> Result<PairOutcome> {
+    let w = engine.meta().layers;
+    assert_eq!(l_i + l_j, w, "split lengths must sum to W");
+    let mut model_i = global.clone();
+    let mut model_j = global.clone();
+    let mut loss_sum = 0.0;
+    let mut n_steps = 0usize;
+    for _ in 0..epochs {
+        let batches_i = loader_i.epoch();
+        let batches_j = loader_j.epoch();
+        let steps = batches_i.len().max(batches_j.len());
+        for t in 0..steps {
+            // Direction i: c_i's data through ω^i front + ω^j back.
+            let dir_i = match batches_i.get(t) {
+                Some(b) => Some(run_direction(engine, &model_i, &model_j, l_i, b)?),
+                None => None,
+            };
+            // Direction j: c_j's data through ω^j front + ω^i back.
+            let dir_j = match batches_j.get(t) {
+                Some(b) => Some(run_direction(engine, &model_j, &model_i, l_j, b)?),
+                None => None,
+            };
+            // Updates (eqs. 1–2, eq. 7). ω^i's front grads come from dir_i,
+            // its back grads (layers L_j..W) from dir_j, and vice versa.
+            if let (Some(di), Some(dj)) = (&dir_i, &dir_j) {
+                apply_split_update(
+                    &mut model_i, w, l_i, l_j, &di.g_front, &dj.g_back, a_i, a_j, lr,
+                    overlap_boost,
+                );
+                apply_split_update(
+                    &mut model_j, w, l_j, l_i, &dj.g_front, &di.g_back, a_j, a_i, lr,
+                    overlap_boost,
+                );
+            } else if let Some(di) = &dir_i {
+                // Unbalanced shards: only c_i had a batch left. Its front
+                // grads update ω^i; its back grads update ω^j. No overlap
+                // boost (single flow).
+                apply_partial(&mut model_i, 0, &di.g_front, a_i, lr);
+                apply_partial(&mut model_j, 2 * l_i, &di.g_back, a_i, lr);
+            } else if let Some(dj) = &dir_j {
+                apply_partial(&mut model_j, 0, &dj.g_front, a_j, lr);
+                apply_partial(&mut model_i, 2 * l_j, &dj.g_back, a_j, lr);
+            }
+            for d in [&dir_i, &dir_j].into_iter().flatten() {
+                loss_sum += d.loss;
+                n_steps += 1;
+            }
+        }
+    }
+    Ok(PairOutcome {
+        model_i,
+        model_j,
+        mean_loss: if n_steps > 0 { loss_sum / n_steps as f64 } else { 0.0 },
+        n_steps,
+    })
+}
+
+/// Apply one flow's gradients to a contiguous tensor range (tail-batch case).
+fn apply_partial(model: &mut Params, tensor_off: usize, grads: &[Vec<f32>], a: f32, lr: f32) {
+    for (gi, g) in grads.iter().enumerate() {
+        let t = &mut model[tensor_off + gi];
+        assert_eq!(t.len(), g.len());
+        for (p, &gv) in t.iter_mut().zip(g) {
+            *p -= lr * a * gv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Artifact-dependent tests (skipped when `artifacts/` is absent).
+    use super::*;
+    use crate::config::DataDistribution;
+    use crate::data::partition::partition;
+    use crate::data::synth::SynthCifar;
+    use crate::util::rng::Rng;
+
+    fn setup(samples: usize) -> Option<(Engine, Loader, Loader, Params)> {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping split test: artifacts/ not built");
+            return None;
+        }
+        let mut engine = Engine::load("artifacts").unwrap();
+        let global = engine.init_params(5).unwrap();
+        let gen = SynthCifar::new(3, 0.5);
+        let mut rng = Rng::new(4);
+        let mut shards = partition(&mut rng, 2, samples, &DataDistribution::Iid);
+        let b = engine.meta().train_batch;
+        let l_j = Loader::new(gen.clone(), shards.pop().unwrap(), b, Rng::new(6));
+        let l_i = Loader::new(gen, shards.pop().unwrap(), b, Rng::new(5));
+        Some((engine, l_i, l_j, global))
+    }
+
+    #[test]
+    fn pair_training_reduces_loss() {
+        let Some((mut engine, mut li, mut lj, global)) = setup(64) else {
+            return;
+        };
+        let w = engine.meta().layers;
+        let (l_i, l_j) = (w / 2, w - w / 2);
+        // a_i = a_j = 0.5 (equal shards); lr boosted since weights scale grads.
+        let out1 = train_pair(
+            &mut engine, &global, &mut li, &mut lj, l_i, l_j, 0.5, 0.5, 0.2, 1, true,
+        )
+        .unwrap();
+        // Second epoch from the updated model must have lower loss.
+        let merged = out1.model_i.clone();
+        let out2 = train_pair(
+            &mut engine, &merged, &mut li, &mut lj, l_i, l_j, 0.5, 0.5, 0.2, 1, true,
+        )
+        .unwrap();
+        assert!(
+            out2.mean_loss < out1.mean_loss,
+            "loss did not drop: {} -> {}",
+            out1.mean_loss,
+            out2.mean_loss
+        );
+        assert!(crate::nn::all_finite(&out1.model_i));
+        assert!(crate::nn::all_finite(&out1.model_j));
+        assert_eq!(out1.n_steps, 2 * 2); // 64 samples / 32 batch × 2 directions
+    }
+
+    #[test]
+    fn asymmetric_split_moves_both_models() {
+        let Some((mut engine, mut li, mut lj, global)) = setup(32) else {
+            return;
+        };
+        let w = engine.meta().layers;
+        let (l_i, l_j) = (1, w - 1); // extreme split
+        let out = train_pair(
+            &mut engine, &global, &mut li, &mut lj, l_i, l_j, 0.5, 0.5, 0.1, 1, true,
+        )
+        .unwrap();
+        let diff_i: f64 = out
+            .model_i
+            .iter()
+            .zip(&global)
+            .map(|(a, b)| {
+                a.iter()
+                    .zip(b)
+                    .map(|(x, y)| (x - y).abs() as f64)
+                    .sum::<f64>()
+            })
+            .sum();
+        let diff_j: f64 = out
+            .model_j
+            .iter()
+            .zip(&global)
+            .map(|(a, b)| {
+                a.iter()
+                    .zip(b)
+                    .map(|(x, y)| (x - y).abs() as f64)
+                    .sum::<f64>()
+            })
+            .sum();
+        assert!(diff_i > 0.0, "model_i unchanged");
+        assert!(diff_j > 0.0, "model_j unchanged");
+    }
+
+    #[test]
+    fn deterministic_pair_training() {
+        let Some((mut engine, mut li, mut lj, global)) = setup(32) else {
+            return;
+        };
+        let w = engine.meta().layers;
+        let out1 = train_pair(
+            &mut engine, &global, &mut li, &mut lj, w / 2, w - w / 2, 0.5, 0.5, 0.1, 1, true,
+        )
+        .unwrap();
+        // Fresh loaders with identical seeds replay identically.
+        let Some((mut engine2, mut li2, mut lj2, global2)) = setup(32) else {
+            return;
+        };
+        let out2 = train_pair(
+            &mut engine2, &global2, &mut li2, &mut lj2, w / 2, w - w / 2, 0.5, 0.5, 0.1, 1, true,
+        )
+        .unwrap();
+        assert_eq!(out1.model_i[0], out2.model_i[0]);
+        assert_eq!(out1.mean_loss, out2.mean_loss);
+    }
+}

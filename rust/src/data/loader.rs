@@ -1,0 +1,206 @@
+//! Mini-batch loader: materializes shard coordinates into batched, padded
+//! f32 tensors ready to become PJRT literals.
+//!
+//! Training batches are always **full** (`batch_size` rows): the epoch
+//! permutation is padded by wrapping around the shard, matching the L2 loss
+//! scaling contract (`loss_grad` divides by the padded batch size — see
+//! `python/compile/model.py`). Evaluation batches instead zero-pad and rely
+//! on the all-zero one-hot convention to mask padding rows exactly.
+
+use crate::data::synth::{Sample, SynthCifar, DIM, NUM_CLASSES};
+use crate::data::partition::Shard;
+use crate::util::rng::Rng;
+
+/// A materialized batch: row-major `x` (`rows × DIM`) and one-hot labels
+/// (`rows × NUM_CLASSES`).
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y1hot: Vec<f32>,
+    pub rows: usize,
+    /// Rows that carry real samples (== `rows` for training batches).
+    pub real_rows: usize,
+}
+
+impl Batch {
+    fn from_samples(samples: &[&Sample], rows: usize) -> Batch {
+        assert!(samples.len() <= rows);
+        let mut x = vec![0f32; rows * DIM];
+        let mut y = vec![0f32; rows * NUM_CLASSES];
+        for (r, s) in samples.iter().enumerate() {
+            x[r * DIM..(r + 1) * DIM].copy_from_slice(&s.x);
+            y[r * NUM_CLASSES + s.label] = 1.0;
+        }
+        Batch {
+            x,
+            y1hot: y,
+            rows,
+            real_rows: samples.len(),
+        }
+    }
+}
+
+/// Epoch iterator over one client's shard.
+pub struct Loader {
+    gen: SynthCifar,
+    shard: Shard,
+    batch_size: usize,
+    rng: Rng,
+    /// Cache of materialized samples (shards are small enough to hold).
+    cache: Vec<Sample>,
+}
+
+impl Loader {
+    pub fn new(gen: SynthCifar, shard: Shard, batch_size: usize, rng: Rng) -> Loader {
+        assert!(batch_size > 0);
+        let cache = shard
+            .coords
+            .iter()
+            .map(|&(label, idx)| gen.sample(label, idx))
+            .collect();
+        Loader {
+            gen,
+            shard,
+            batch_size,
+            rng,
+            cache,
+        }
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Batches per epoch (wrap-padded, so `ceil`).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.n_samples().div_ceil(self.batch_size)
+    }
+
+    /// Produce one epoch of full batches in a fresh random order.
+    ///
+    /// The final partial batch wraps around into the epoch's first samples so
+    /// every batch has exactly `batch_size` real rows.
+    pub fn epoch(&mut self) -> Vec<Batch> {
+        let n = self.cache.len();
+        assert!(n > 0, "empty shard");
+        let mut order: Vec<usize> = (0..n).collect();
+        self.rng.shuffle(&mut order);
+        let mut out = Vec::with_capacity(self.batches_per_epoch());
+        let mut i = 0;
+        while i < n {
+            let mut rows: Vec<&Sample> = Vec::with_capacity(self.batch_size);
+            for k in 0..self.batch_size {
+                // wrap-around padding for the tail batch
+                let idx = order[(i + k) % n];
+                rows.push(&self.cache[idx]);
+            }
+            out.push(Batch::from_samples(&rows, self.batch_size));
+            i += self.batch_size;
+        }
+        out
+    }
+
+    /// Access the generator (e.g. to derive the shared test set).
+    pub fn generator(&self) -> &SynthCifar {
+        &self.gen
+    }
+
+    /// The shard this loader serves.
+    pub fn shard(&self) -> &Shard {
+        &self.shard
+    }
+}
+
+/// Build zero-padded evaluation batches from a flat sample list.
+pub fn eval_batches(samples: &[Sample], batch_size: usize) -> Vec<Batch> {
+    assert!(batch_size > 0);
+    samples
+        .chunks(batch_size)
+        .map(|chunk| {
+            let refs: Vec<&Sample> = chunk.iter().collect();
+            Batch::from_samples(&refs, batch_size)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DataDistribution;
+    use crate::data::partition::partition;
+
+    fn loader(n_samples: usize, batch: usize) -> Loader {
+        let gen = SynthCifar::new(1, 0.5);
+        let mut rng = Rng::new(2);
+        let shard = partition(&mut rng, 1, n_samples, &DataDistribution::Iid).remove(0);
+        Loader::new(gen, shard, batch, Rng::new(3))
+    }
+
+    #[test]
+    fn epoch_covers_all_samples() {
+        let mut l = loader(100, 10);
+        let batches = l.epoch();
+        assert_eq!(batches.len(), 10);
+        for b in &batches {
+            assert_eq!(b.rows, 10);
+            assert_eq!(b.real_rows, 10);
+            assert_eq!(b.x.len(), 10 * DIM);
+            assert_eq!(b.y1hot.len(), 10 * NUM_CLASSES);
+            // every row has exactly one hot label
+            for r in 0..b.rows {
+                let s: f32 = b.y1hot[r * NUM_CLASSES..(r + 1) * NUM_CLASSES].iter().sum();
+                assert_eq!(s, 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn tail_batch_wraps_to_full_size() {
+        let mut l = loader(25, 10);
+        let batches = l.epoch();
+        assert_eq!(batches.len(), 3);
+        for b in &batches {
+            assert_eq!(b.rows, 10);
+            assert_eq!(b.real_rows, 10); // wrap-padded with real samples
+        }
+    }
+
+    #[test]
+    fn epochs_reshuffle() {
+        let mut l = loader(64, 8);
+        let e1: Vec<f32> = l.epoch()[0].x.clone();
+        let e2: Vec<f32> = l.epoch()[0].x.clone();
+        assert_ne!(e1, e2, "epochs should reshuffle");
+    }
+
+    #[test]
+    fn deterministic_given_seeds() {
+        let mut a = loader(32, 8);
+        let mut b = loader(32, 8);
+        assert_eq!(a.epoch()[0].x, b.epoch()[0].x);
+    }
+
+    #[test]
+    fn eval_batches_zero_pad_last() {
+        let gen = SynthCifar::new(4, 0.5);
+        let samples = gen.test_set(23);
+        let batches = eval_batches(&samples, 10);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[2].real_rows, 3);
+        assert_eq!(batches[2].rows, 10);
+        // padding rows are all-zero one-hot
+        for r in 3..10 {
+            let s: f32 = batches[2].y1hot[r * NUM_CLASSES..(r + 1) * NUM_CLASSES]
+                .iter()
+                .sum();
+            assert_eq!(s, 0.0);
+        }
+    }
+
+    #[test]
+    fn batches_per_epoch_formula() {
+        let l = loader(100, 32);
+        assert_eq!(l.batches_per_epoch(), 4);
+        assert_eq!(l.n_samples(), 100);
+    }
+}

@@ -1,0 +1,7 @@
+//! Data substrate: synthetic CIFAR-like generation ([`synth`]), IID/Non-IID
+//! partitioning across clients ([`partition`]) and mini-batch loading
+//! ([`loader`]). See DESIGN.md §2 for the CIFAR-10 substitution rationale.
+
+pub mod loader;
+pub mod partition;
+pub mod synth;

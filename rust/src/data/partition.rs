@@ -1,0 +1,271 @@
+//! Dataset partitioning across clients: IID, the paper's 2-class Non-IID
+//! shards, and Dirichlet label skew.
+//!
+//! A partition assigns each client a list of `(label, index)` generator
+//! coordinates (see [`super::synth`]) — samples are never duplicated across
+//! clients, and every client receives exactly `samples_per_client` samples
+//! (the paper gives each of 20 clients 2500 of CIFAR-10's 50 000).
+
+use crate::config::DataDistribution;
+use crate::data::synth::NUM_CLASSES;
+use crate::util::rng::Rng;
+
+/// One client's shard: generator coordinates of its local dataset.
+#[derive(Clone, Debug, Default)]
+pub struct Shard {
+    pub coords: Vec<(usize, u64)>, // (label, generator index)
+}
+
+impl Shard {
+    pub fn len(&self) -> usize {
+        self.coords.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.coords.is_empty()
+    }
+
+    /// Per-class sample counts (diagnostic + tests).
+    pub fn class_histogram(&self) -> [usize; NUM_CLASSES] {
+        let mut h = [0usize; NUM_CLASSES];
+        for &(label, _) in &self.coords {
+            h[label] += 1;
+        }
+        h
+    }
+}
+
+/// Allocator that hands out fresh generator indices per class, guaranteeing
+/// global no-duplication across all shards it produces.
+#[derive(Debug, Default)]
+struct IndexAllocator {
+    next: [u64; NUM_CLASSES],
+}
+
+impl IndexAllocator {
+    fn take(&mut self, label: usize) -> (usize, u64) {
+        let i = self.next[label];
+        self.next[label] += 1;
+        (label, i)
+    }
+}
+
+/// Partition `n_clients × samples_per_client` samples per `dist`.
+pub fn partition(
+    rng: &mut Rng,
+    n_clients: usize,
+    samples_per_client: usize,
+    dist: &DataDistribution,
+) -> Vec<Shard> {
+    let mut alloc = IndexAllocator::default();
+    let mut shards = vec![Shard::default(); n_clients];
+    match *dist {
+        DataDistribution::Iid => {
+            // Equal per-class counts; remainder spread round-robin from a
+            // random class offset so no class is systematically favored.
+            for shard in shards.iter_mut() {
+                let base = samples_per_client / NUM_CLASSES;
+                let rem = samples_per_client % NUM_CLASSES;
+                let start = rng.below(NUM_CLASSES);
+                for c in 0..NUM_CLASSES {
+                    let extra = ((c + NUM_CLASSES - start) % NUM_CLASSES < rem) as usize;
+                    for _ in 0..base + extra {
+                        shard.coords.push(alloc.take(c));
+                    }
+                }
+                rng.shuffle(&mut shard.coords);
+            }
+        }
+        DataDistribution::ClassShards { classes_per_client } => {
+            let k = classes_per_client.min(NUM_CLASSES);
+            for shard in shards.iter_mut() {
+                // Paper: "samples containing two randomly selected categories".
+                let classes = rng.sample_indices(NUM_CLASSES, k);
+                let base = samples_per_client / k;
+                let rem = samples_per_client % k;
+                for (ci, &c) in classes.iter().enumerate() {
+                    let cnt = base + usize::from(ci < rem);
+                    for _ in 0..cnt {
+                        shard.coords.push(alloc.take(c));
+                    }
+                }
+                rng.shuffle(&mut shard.coords);
+            }
+        }
+        DataDistribution::Dirichlet { alpha } => {
+            for shard in shards.iter_mut() {
+                let props = rng.dirichlet(alpha, NUM_CLASSES);
+                // Largest-remainder apportionment to hit the exact count.
+                let mut counts: Vec<usize> = props
+                    .iter()
+                    .map(|p| (p * samples_per_client as f64).floor() as usize)
+                    .collect();
+                let mut assigned: usize = counts.iter().sum();
+                let mut order: Vec<usize> = (0..NUM_CLASSES).collect();
+                order.sort_by(|&a, &b| {
+                    let ra = props[a] * samples_per_client as f64
+                        - (props[a] * samples_per_client as f64).floor();
+                    let rb = props[b] * samples_per_client as f64
+                        - (props[b] * samples_per_client as f64).floor();
+                    rb.partial_cmp(&ra).unwrap()
+                });
+                let mut oi = 0;
+                while assigned < samples_per_client {
+                    counts[order[oi % NUM_CLASSES]] += 1;
+                    assigned += 1;
+                    oi += 1;
+                }
+                for (c, &cnt) in counts.iter().enumerate() {
+                    for _ in 0..cnt {
+                        shard.coords.push(alloc.take(c));
+                    }
+                }
+                rng.shuffle(&mut shard.coords);
+            }
+        }
+    }
+    shards
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn no_duplicates(shards: &[Shard]) {
+        let mut seen = HashSet::new();
+        for s in shards {
+            for &c in &s.coords {
+                assert!(seen.insert(c), "duplicate coordinate {c:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn iid_exact_sizes_and_balance() {
+        let mut rng = Rng::new(1);
+        let shards = partition(&mut rng, 20, 2500, &DataDistribution::Iid);
+        assert_eq!(shards.len(), 20);
+        for s in &shards {
+            assert_eq!(s.len(), 2500);
+            let h = s.class_histogram();
+            // 2500/10 exactly divisible: perfectly balanced.
+            assert!(h.iter().all(|&c| c == 250), "{h:?}");
+        }
+        no_duplicates(&shards);
+    }
+
+    #[test]
+    fn iid_indivisible_remainder_spread() {
+        let mut rng = Rng::new(2);
+        let shards = partition(&mut rng, 4, 103, &DataDistribution::Iid);
+        for s in &shards {
+            assert_eq!(s.len(), 103);
+            let h = s.class_histogram();
+            assert!(h.iter().all(|&c| c == 10 || c == 11), "{h:?}");
+        }
+        no_duplicates(&shards);
+    }
+
+    #[test]
+    fn class_shards_two_classes_paper() {
+        let mut rng = Rng::new(3);
+        let shards = partition(
+            &mut rng,
+            20,
+            2500,
+            &DataDistribution::ClassShards {
+                classes_per_client: 2,
+            },
+        );
+        for s in &shards {
+            assert_eq!(s.len(), 2500);
+            let h = s.class_histogram();
+            let nonzero = h.iter().filter(|&&c| c > 0).count();
+            assert_eq!(nonzero, 2, "{h:?}");
+            assert!(h.iter().all(|&c| c == 0 || c == 1250));
+        }
+        no_duplicates(&shards);
+    }
+
+    #[test]
+    fn class_shards_k_clamped_to_num_classes() {
+        let mut rng = Rng::new(4);
+        let shards = partition(
+            &mut rng,
+            2,
+            100,
+            &DataDistribution::ClassShards {
+                classes_per_client: 99,
+            },
+        );
+        for s in &shards {
+            assert_eq!(s.len(), 100);
+            assert_eq!(s.class_histogram().iter().filter(|&&c| c > 0).count(), 10);
+        }
+    }
+
+    #[test]
+    fn dirichlet_exact_counts_and_skew() {
+        let mut rng = Rng::new(5);
+        let shards = partition(
+            &mut rng,
+            10,
+            500,
+            &DataDistribution::Dirichlet { alpha: 0.1 },
+        );
+        for s in &shards {
+            assert_eq!(s.len(), 500);
+        }
+        no_duplicates(&shards);
+        // Low alpha → most shards dominated by few classes.
+        let dominated = shards
+            .iter()
+            .filter(|s| {
+                let h = s.class_histogram();
+                *h.iter().max().unwrap() as f64 > 0.5 * 500.0
+            })
+            .count();
+        assert!(dominated >= 5, "dominated={dominated}");
+    }
+
+    #[test]
+    fn dirichlet_high_alpha_near_uniform() {
+        let mut rng = Rng::new(6);
+        let shards = partition(
+            &mut rng,
+            5,
+            1000,
+            &DataDistribution::Dirichlet { alpha: 1000.0 },
+        );
+        for s in &shards {
+            let h = s.class_histogram();
+            assert!(h.iter().all(|&c| (60..=140).contains(&c)), "{h:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic_partition() {
+        let dist = DataDistribution::ClassShards {
+            classes_per_client: 2,
+        };
+        let a = partition(&mut Rng::new(9), 6, 120, &dist);
+        let b = partition(&mut Rng::new(9), 6, 120, &dist);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.coords, y.coords);
+        }
+    }
+
+    #[test]
+    fn shards_shuffled_not_sorted() {
+        let mut rng = Rng::new(10);
+        let shards = partition(&mut rng, 1, 1000, &DataDistribution::Iid);
+        let labels: Vec<usize> = shards[0].coords.iter().map(|&(l, _)| l).collect();
+        let sorted = {
+            let mut s = labels.clone();
+            s.sort_unstable();
+            s
+        };
+        assert_ne!(labels, sorted, "shard order should be shuffled");
+    }
+}

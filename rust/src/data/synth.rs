@@ -1,0 +1,242 @@
+//! Synthetic CIFAR-like dataset (substrate — CIFAR-10 itself is not available
+//! offline; DESIGN.md §2 documents the substitution).
+//!
+//! Generates 10-class, 3×32×32 float images with real class structure so that
+//! classification is learnable but not trivial:
+//!
+//! * each class `c` owns a set of deterministic **basis patterns** — spatial
+//!   sinusoids with class-specific frequencies/phases per channel — mixed with
+//!   per-sample random coefficients (intra-class variation),
+//! * plus isotropic Gaussian pixel noise scaled by `noise_level`,
+//! * normalized to roughly zero mean / unit variance per image.
+//!
+//! The generative process is deterministic given `(seed, index)` so any
+//! client can materialize its shard without storing the whole dataset, and
+//! train/test splits are disjoint by construction (index ranges).
+
+use crate::util::rng::Rng;
+
+/// Image geometry matching CIFAR-10.
+pub const CHANNELS: usize = 3;
+pub const SIDE: usize = 32;
+pub const DIM: usize = CHANNELS * SIDE * SIDE; // 3072
+pub const NUM_CLASSES: usize = 10;
+
+/// Size of the *shared* pattern dictionary. Classes are mixture vectors over
+/// one common dictionary (not private pattern sets): they occupy the same
+/// low-dimensional subspace, so class boundaries interfere — which is what
+/// makes Non-IID training genuinely hard (sequential SL forgets, skewed
+/// clients fight) instead of trivially separable.
+const DICT_PATTERNS: usize = 12;
+
+/// Per-sample jitter on the class mixture coefficients (intra-class spread).
+const COEF_JITTER: f32 = 0.35;
+
+/// A labelled sample: flattened image + class id.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub x: Vec<f32>,
+    pub label: usize,
+}
+
+/// Deterministic synthetic dataset generator.
+#[derive(Clone, Debug)]
+pub struct SynthCifar {
+    seed: u64,
+    noise_level: f32,
+    /// `[pattern][DIM]` shared dictionary, fixed by the seed.
+    dict: Vec<Vec<f32>>,
+    /// `[class][pattern]` mixture coefficients, fixed by the seed.
+    class_coefs: Vec<Vec<f32>>,
+}
+
+impl SynthCifar {
+    /// Build the generator: dictionary + class mixtures derive from `seed`.
+    pub fn new(seed: u64, noise_level: f32) -> Self {
+        let mut rng = Rng::with_stream(seed, 0xBA5E);
+        let dict: Vec<Vec<f32>> = (0..DICT_PATTERNS)
+            .map(|_| Self::make_basis(&mut rng))
+            .collect();
+        let class_coefs: Vec<Vec<f32>> = (0..NUM_CLASSES)
+            .map(|_| {
+                (0..DICT_PATTERNS)
+                    .map(|_| rng.normal() as f32)
+                    .collect()
+            })
+            .collect();
+        SynthCifar {
+            seed,
+            noise_level,
+            dict,
+            class_coefs,
+        }
+    }
+
+    /// One basis pattern: per-channel 2-D sinusoid with random frequency,
+    /// orientation and phase (smooth, class-distinctive spatial structure).
+    fn make_basis(rng: &mut Rng) -> Vec<f32> {
+        let mut img = vec![0f32; DIM];
+        for ch in 0..CHANNELS {
+            let fx = rng.range_f64(0.5, 4.0);
+            let fy = rng.range_f64(0.5, 4.0);
+            let phase = rng.range_f64(0.0, std::f64::consts::TAU);
+            let amp = rng.range_f64(0.5, 1.0);
+            for r in 0..SIDE {
+                for c in 0..SIDE {
+                    let u = r as f64 / SIDE as f64;
+                    let v = c as f64 / SIDE as f64;
+                    let val =
+                        amp * (std::f64::consts::TAU * (fx * u + fy * v) + phase).sin();
+                    img[ch * SIDE * SIDE + r * SIDE + c] = val as f32;
+                }
+            }
+        }
+        img
+    }
+
+    /// Materialize sample `index` of class `label`. Deterministic in
+    /// `(seed, label, index)`.
+    pub fn sample(&self, label: usize, index: u64) -> Sample {
+        assert!(label < NUM_CLASSES);
+        let mut rng = Rng::with_stream(
+            self.seed ^ 0x5A5A_0000,
+            (label as u64) << 40 | index,
+        );
+        let mut x = vec![0f32; DIM];
+        // Class mixture over the shared dictionary + per-sample jitter.
+        for (p, basis) in self.dict.iter().enumerate() {
+            let coef = self.class_coefs[label][p] + COEF_JITTER * rng.normal() as f32;
+            for (xi, bi) in x.iter_mut().zip(basis) {
+                *xi += coef * bi;
+            }
+        }
+        // Pixel noise.
+        let nl = self.noise_level;
+        if nl > 0.0 {
+            for xi in x.iter_mut() {
+                *xi += nl * rng.normal() as f32;
+            }
+        }
+        // Per-image standardization (as CIFAR pipelines normalize).
+        let mean = x.iter().sum::<f32>() / DIM as f32;
+        let var = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / DIM as f32;
+        let std = var.sqrt().max(1e-6);
+        for xi in x.iter_mut() {
+            *xi = (*xi - mean) / std;
+        }
+        Sample { x, label }
+    }
+
+    /// A balanced test set: `n` samples cycling through classes, drawn from a
+    /// dedicated index range disjoint from any training shard.
+    pub fn test_set(&self, n: usize) -> Vec<Sample> {
+        (0..n)
+            .map(|i| self.sample(i % NUM_CLASSES, TEST_INDEX_BASE + (i / NUM_CLASSES) as u64))
+            .collect()
+    }
+}
+
+/// Training shards draw indices `< TEST_INDEX_BASE`; test indices start here.
+pub const TEST_INDEX_BASE: u64 = 1 << 32;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let g1 = SynthCifar::new(7, 0.5);
+        let g2 = SynthCifar::new(7, 0.5);
+        let a = g1.sample(3, 11);
+        let b = g2.sample(3, 11);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.label, 3);
+    }
+
+    #[test]
+    fn different_indices_differ() {
+        let g = SynthCifar::new(7, 0.5);
+        assert_ne!(g.sample(0, 0).x, g.sample(0, 1).x);
+        assert_ne!(g.sample(0, 0).x, g.sample(1, 0).x);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = SynthCifar::new(1, 0.5).sample(0, 0);
+        let b = SynthCifar::new(2, 0.5).sample(0, 0);
+        assert_ne!(a.x, b.x);
+    }
+
+    #[test]
+    fn samples_standardized() {
+        let g = SynthCifar::new(9, 0.6);
+        for label in 0..NUM_CLASSES {
+            let s = g.sample(label, 42);
+            assert_eq!(s.x.len(), DIM);
+            let mean = s.x.iter().sum::<f32>() / DIM as f32;
+            let var = s.x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / DIM as f32;
+            assert!(mean.abs() < 1e-3, "mean={mean}");
+            assert!((var - 1.0).abs() < 1e-2, "var={var}");
+            assert!(s.x.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn classes_are_separable_by_nearest_class_mean() {
+        // The structure test: a trivial nearest-centroid classifier on raw
+        // pixels must beat chance comfortably — i.e. the classes carry signal.
+        let g = SynthCifar::new(5, 0.6);
+        let train_per_class = 20;
+        let mut centroids = vec![vec![0f32; DIM]; NUM_CLASSES];
+        for c in 0..NUM_CLASSES {
+            for i in 0..train_per_class {
+                let s = g.sample(c, i as u64);
+                for (acc, v) in centroids[c].iter_mut().zip(&s.x) {
+                    *acc += v / train_per_class as f32;
+                }
+            }
+        }
+        let test = g.test_set(200);
+        let mut correct = 0;
+        for s in &test {
+            let pred = (0..NUM_CLASSES)
+                .min_by(|&a, &b| {
+                    let da: f32 = centroids[a]
+                        .iter()
+                        .zip(&s.x)
+                        .map(|(c, v)| (c - v) * (c - v))
+                        .sum();
+                    let db: f32 = centroids[b]
+                        .iter()
+                        .zip(&s.x)
+                        .map(|(c, v)| (c - v) * (c - v))
+                        .sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if pred == s.label {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / test.len() as f64;
+        assert!(acc > 0.5, "nearest-centroid accuracy {acc} too low — no class signal");
+    }
+
+    #[test]
+    fn noise_makes_task_harder_not_degenerate() {
+        // With heavy noise samples still standardized and distinct.
+        let g = SynthCifar::new(3, 2.0);
+        let s = g.sample(0, 0);
+        assert!(s.x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn test_set_balanced_and_disjoint_labels() {
+        let g = SynthCifar::new(11, 0.5);
+        let t = g.test_set(100);
+        assert_eq!(t.len(), 100);
+        for c in 0..NUM_CLASSES {
+            assert_eq!(t.iter().filter(|s| s.label == c).count(), 10);
+        }
+    }
+}

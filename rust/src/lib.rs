@@ -1,0 +1,29 @@
+//! # FedPairing
+//!
+//! A production-shaped reproduction of *"Effectively Heterogeneous Federated
+//! Learning: A Pairing and Split Learning Based Approach"* (Shen et al., 2023)
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)** — the coordination contribution: client pairing
+//!   ([`pairing`]), the split-training protocol and round loop
+//!   ([`coordinator`]), the heterogeneity/latency simulator ([`sim`]), data
+//!   synthesis and partitioning ([`data`]), and host-side parameter math
+//!   ([`nn`]).
+//! - **L2/L1 (build-time Python)** — the model's forward/backward (JAX) with
+//!   Pallas kernels at the hot spot, AOT-lowered to HLO text artifacts that
+//!   the [`runtime`] executes via the PJRT CPU client. Python never runs on
+//!   the training path.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod model;
+pub mod nn;
+pub mod pairing;
+pub mod runtime;
+pub mod sim;
+pub mod util;

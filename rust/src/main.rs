@@ -1,0 +1,293 @@
+//! `fedpairing` — the leader binary: run experiments, inspect pairings,
+//! regenerate the paper's timing tables, or dump artifact info.
+//!
+//! ```text
+//! fedpairing run --preset fig2 --algorithm fedpairing --rounds 30
+//! fedpairing pair --clients 20 --strategy greedy
+//! fedpairing latency --samples 2500
+//! fedpairing info
+//! ```
+
+use fedpairing::cli::{CliError, Command, Parsed};
+use fedpairing::config::{Algorithm, DataDistribution, ExperimentConfig, PairingStrategy};
+use fedpairing::coordinator::run_experiment;
+use fedpairing::model::ModelMeta;
+use fedpairing::pairing::{graph::ClientGraph, pair_clients};
+use fedpairing::sim::channel::Channel;
+use fedpairing::sim::compute::split_lengths;
+use fedpairing::sim::latency::{self, Fleet, Schedule};
+use fedpairing::sim::profile::ModelProfile;
+use fedpairing::util::logging;
+use fedpairing::util::rng::Rng;
+
+fn cli() -> Command {
+    Command::new("fedpairing", "client-pairing split federated learning (Shen et al. 2023)")
+        .flag("log-level", None, Some("LEVEL"), "error|warn|info|debug|trace", Some("info"))
+        .subcommand(
+            Command::new("run", "run a full FL experiment against the AOT artifacts")
+                .flag("preset", None, Some("NAME"), "fig2|fig3|table1|table2|quick", Some("quick"))
+                .flag("config", None, Some("FILE"), "JSON config file (overrides preset)", None)
+                .flag("algorithm", Some('a'), Some("ALGO"), "fedpairing|fl|sl|splitfed", None)
+                .flag("pairing", Some('p'), Some("STRAT"), "greedy|random|location|compute|exact", None)
+                .flag("rounds", Some('r'), Some("N"), "communication rounds", None)
+                .flag("clients", Some('n'), Some("N"), "fleet size", None)
+                .flag("samples", None, Some("N"), "samples per client", None)
+                .flag("seed", Some('s'), Some("N"), "experiment seed", None)
+                .flag("noniid", None, None, "2-class shards instead of IID", None)
+                .flag("no-overlap-boost", None, None, "disable the eq.(7) 2x overlap step", None)
+                .flag("artifacts", None, Some("DIR"), "artifact directory", None)
+                .flag("out", Some('o'), Some("DIR"), "metrics output directory", None),
+        )
+        .subcommand(
+            Command::new("pair", "sample a fleet and show the pairing a strategy produces")
+                .flag("clients", Some('n'), Some("N"), "fleet size", Some("20"))
+                .flag("strategy", Some('p'), Some("STRAT"), "greedy|random|location|compute|exact", Some("greedy"))
+                .flag("seed", Some('s'), Some("N"), "fleet seed", Some("17"))
+                .flag("alpha", None, Some("A"), "eq.(5) compute weight", Some("1.0"))
+                .flag("beta", None, Some("B"), "eq.(5) rate weight", Some("2e-9")),
+        )
+        .subcommand(
+            Command::new("latency", "simulated round times for all algorithms + pairings (Tables I/II)")
+                .flag("clients", Some('n'), Some("N"), "fleet size", Some("20"))
+                .flag("samples", None, Some("N"), "samples per client", Some("2500"))
+                .flag("seed", Some('s'), Some("N"), "fleet seed", Some("17"))
+                .flag("profile", None, Some("NAME"), "resnet18|resnet10|mlp", Some("resnet18")),
+        )
+        .subcommand(Command::new("info", "print the AOT manifest summary")
+            .flag("artifacts", None, Some("DIR"), "artifact directory", Some("artifacts")))
+}
+
+fn main() {
+    logging::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = cli();
+    let parsed = match cmd.parse(&args) {
+        Ok(p) => p,
+        Err(CliError::HelpRequested(h)) => {
+            println!("{h}");
+            return;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Some(level) = parsed.get("log-level").and_then(logging::Level::from_str) {
+        logging::set_level(level);
+    }
+    let result = match parsed.subcommand() {
+        Some("run") => cmd_run(&parsed),
+        Some("pair") => cmd_pair(&parsed),
+        Some("latency") => cmd_latency(&parsed),
+        Some("info") => cmd_info(&parsed),
+        _ => {
+            println!("{}", cli().help());
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn req_parsed<T: std::str::FromStr>(p: &Parsed, name: &str) -> anyhow::Result<Option<T>> {
+    p.get_parsed::<T>(name).map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+fn cmd_run(p: &Parsed) -> anyhow::Result<()> {
+    let mut cfg = if let Some(file) = p.get("config") {
+        ExperimentConfig::load(file).map_err(|e| anyhow::anyhow!("{e}"))?
+    } else {
+        let preset = p.get("preset").unwrap_or("quick");
+        ExperimentConfig::preset(preset)
+            .ok_or_else(|| anyhow::anyhow!("unknown preset {preset:?}"))?
+    };
+    if let Some(a) = p.get("algorithm") {
+        cfg.algorithm =
+            Algorithm::parse(a).ok_or_else(|| anyhow::anyhow!("unknown algorithm {a:?}"))?;
+    }
+    if let Some(s) = p.get("pairing") {
+        cfg.pairing =
+            PairingStrategy::parse(s).ok_or_else(|| anyhow::anyhow!("unknown strategy {s:?}"))?;
+    }
+    if let Some(r) = req_parsed::<usize>(p, "rounds")? {
+        cfg.rounds = r;
+    }
+    if let Some(n) = req_parsed::<usize>(p, "clients")? {
+        cfg.n_clients = n;
+    }
+    if let Some(n) = req_parsed::<usize>(p, "samples")? {
+        cfg.samples_per_client = n;
+    }
+    if let Some(s) = req_parsed::<u64>(p, "seed")? {
+        cfg.seed = s;
+    }
+    if p.has("noniid") {
+        cfg.distribution = DataDistribution::ClassShards { classes_per_client: 2 };
+    }
+    if p.has("no-overlap-boost") {
+        cfg.overlap_boost = false;
+    }
+    if let Some(d) = p.get("artifacts") {
+        cfg.artifacts_dir = d.to_string();
+    }
+    if let Some(d) = p.get("out") {
+        cfg.out_dir = d.to_string();
+    }
+    println!(
+        "running {} / {} / {} — {} clients, {} rounds",
+        cfg.algorithm,
+        cfg.pairing,
+        cfg.distribution.name(),
+        cfg.n_clients,
+        cfg.rounds
+    );
+    let res = run_experiment(cfg)?;
+    println!(
+        "done: final_acc={:.4} best_acc={:.4} mean_round={:.1}s wall={:.1}s execs={}",
+        res.final_acc(),
+        res.best_acc(),
+        res.mean_round_s(),
+        res.wall_s,
+        res.total_execs
+    );
+    let (csv, json) = res.save(&res.config.out_dir.clone())?;
+    println!("metrics: {csv} / {json}");
+    Ok(())
+}
+
+fn cmd_pair(p: &Parsed) -> anyhow::Result<()> {
+    let n: usize = p.req("clients").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let seed: u64 = p.req("seed").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let alpha: f64 = p.req("alpha").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let beta: f64 = p.req("beta").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let strat = PairingStrategy::parse(p.get("strategy").unwrap_or("greedy"))
+        .ok_or_else(|| anyhow::anyhow!("unknown strategy"))?;
+    let mut cfg = ExperimentConfig::default();
+    cfg.n_clients = n;
+    cfg.seed = seed;
+    let mut rng = Rng::new(seed);
+    let fleet = Fleet::sample(&cfg, &mut rng);
+    let channel = Channel::new(cfg.channel);
+    let pairs = pair_clients(strat, &fleet, &channel, alpha, beta, &mut rng);
+    let graph = ClientGraph::build(&fleet, &channel, alpha, beta);
+    println!(
+        "strategy={strat} n={n} seed={seed}  total ε = {:.3}",
+        graph.matching_weight(&pairs)
+    );
+    println!(
+        "{:<12} {:>9} {:>9} {:>8} {:>10} {:>7}",
+        "pair", "f_i GHz", "f_j GHz", "dist m", "rate Mb/s", "L_i/L_j"
+    );
+    for &(i, j) in &pairs {
+        let d = fleet.positions[i].dist(&fleet.positions[j]);
+        let r = channel.rate(&fleet.positions[i], &fleet.positions[j]) / 1e6;
+        let (li, lj) = split_lengths(fleet.freqs_hz[i], fleet.freqs_hz[j], 8);
+        println!(
+            "({i:>2},{j:>2})     {:>9.2} {:>9.2} {:>8.1} {:>10.0} {:>4}/{:<4}",
+            fleet.freqs_hz[i] / 1e9,
+            fleet.freqs_hz[j] / 1e9,
+            d,
+            r,
+            li,
+            lj
+        );
+    }
+    Ok(())
+}
+
+fn cmd_latency(p: &Parsed) -> anyhow::Result<()> {
+    let n: usize = p.req("clients").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let samples: usize = p.req("samples").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let seed: u64 = p.req("seed").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let profile = match p.get("profile").unwrap_or("resnet18") {
+        "resnet18" => ModelProfile::resnet18_cifar(),
+        "resnet10" => ModelProfile::resnet10_cifar(),
+        "mlp" => ModelProfile::mlp(3072, 256, 10, 8),
+        other => anyhow::bail!("unknown profile {other:?}"),
+    };
+    let mut cfg = ExperimentConfig::default();
+    cfg.n_clients = n;
+    cfg.samples_per_client = samples;
+    cfg.seed = seed;
+    let mut rng = Rng::new(seed);
+    let fleet = Fleet::sample(&cfg, &mut rng);
+    let channel = Channel::new(cfg.channel);
+    let sched = Schedule {
+        batch_size: 32,
+        epochs: cfg.local_epochs,
+    };
+    println!("— Table I: pairing mechanisms (FedPairing round, {}) —", profile.name);
+    for strat in [
+        PairingStrategy::Greedy,
+        PairingStrategy::Random,
+        PairingStrategy::Location,
+        PairingStrategy::Compute,
+        PairingStrategy::Exact,
+    ] {
+        let pairs = pair_clients(strat, &fleet, &channel, cfg.alpha, cfg.beta, &mut rng.fork(1));
+        let rt = latency::fedpairing_round(&fleet, &pairs, &profile, &sched, &channel, &cfg.compute, true);
+        println!("  {:<10} {:>10.0} s", strat.name(), rt.total_s);
+    }
+    println!("— Table II: algorithms —");
+    let pairs = pair_clients(
+        PairingStrategy::Greedy,
+        &fleet,
+        &channel,
+        cfg.alpha,
+        cfg.beta,
+        &mut rng.fork(2),
+    );
+    let fp = latency::fedpairing_round(&fleet, &pairs, &profile, &sched, &channel, &cfg.compute, true);
+    let fl = latency::fl_round(&fleet, &profile, &sched, &channel, &cfg.compute, true);
+    let sl = latency::sl_round(
+        &fleet,
+        &profile,
+        &sched,
+        &channel,
+        &cfg.compute,
+        cfg.sl_cut_layer,
+        cfg.compute.server_freq_ghz * 1e9,
+    );
+    let sf = latency::splitfed_round(
+        &fleet,
+        &profile,
+        &sched,
+        &channel,
+        &cfg.compute,
+        cfg.splitfed_cut_layer,
+        cfg.compute.server_freq_ghz * 1e9,
+        true,
+    );
+    for (name, t) in [
+        ("fedpairing", fp.total_s),
+        ("splitfed", sf.total_s),
+        ("vanilla_fl", fl.total_s),
+        ("vanilla_sl", sl.total_s),
+    ] {
+        println!("  {:<10} {:>10.0} s", name, t);
+    }
+    Ok(())
+}
+
+fn cmd_info(p: &Parsed) -> anyhow::Result<()> {
+    let dir = p.get("artifacts").unwrap_or("artifacts");
+    let meta = ModelMeta::load(dir).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "model: resnet-mlp W={} hidden={} in={} classes={} params={}",
+        meta.layers, meta.hidden, meta.input_dim, meta.classes, meta.n_params
+    );
+    println!("batches: train={} eval={}", meta.train_batch, meta.eval_batch);
+    println!("entries: {}", meta.entries.len());
+    for (name, e) in &meta.entries {
+        println!(
+            "  {:<14} {} in / {} out — {}",
+            name,
+            e.inputs.len(),
+            e.outputs.len(),
+            e.file
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,341 @@
+//! Host-side model metadata: parses the AOT `manifest.json` so the Rust
+//! coordinator never hardcodes shapes, entry names or parameter layouts.
+//!
+//! The manifest is produced by `python/compile/aot.py` alongside the HLO
+//! artifacts; it describes the ResNet-MLP architecture (depth `W`, widths),
+//! the per-layer parameter shapes (flat `[w0, b0, w1, b1, …]` layout), the
+//! train/eval batch sizes the artifacts were lowered for, and every entry
+//! point's input/output signature.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT entry point.
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub input_dim: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    /// Depth `W` (split points are `1..W-1`).
+    pub layers: usize,
+    pub n_params: usize,
+    /// Per-layer `(w_shape, b_shape)`.
+    pub param_shapes: Vec<(Vec<usize>, Vec<usize>)>,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+/// Manifest parse failure.
+#[derive(Debug)]
+pub struct MetaError(pub String);
+
+impl fmt::Display for MetaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "manifest error: {}", self.0)
+    }
+}
+impl std::error::Error for MetaError {}
+
+macro_rules! field {
+    ($obj:expr, $key:literal, $conv:ident) => {
+        $obj.get($key)
+            .and_then(|v| v.$conv())
+            .ok_or_else(|| MetaError(format!("missing/invalid field {:?}", $key)))?
+    };
+}
+
+impl ModelMeta {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &str) -> Result<ModelMeta, Box<dyn std::error::Error>> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| MetaError(format!("cannot read {path}: {e}")))?;
+        let j = Json::parse(&text)?;
+        Ok(Self::from_json(&j)?)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelMeta, MetaError> {
+        let model = j
+            .get("model")
+            .ok_or_else(|| MetaError("missing model section".into()))?;
+        let param_shapes_j = model
+            .get("param_shapes")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| MetaError("missing param_shapes".into()))?;
+        let mut param_shapes = Vec::with_capacity(param_shapes_j.len());
+        for ps in param_shapes_j {
+            let w = ps
+                .get("w")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| MetaError("param_shapes entry missing w".into()))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| MetaError("bad dim".into())))
+                .collect::<Result<Vec<_>, _>>()?;
+            let b = ps
+                .get("b")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| MetaError("param_shapes entry missing b".into()))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| MetaError("bad dim".into())))
+                .collect::<Result<Vec<_>, _>>()?;
+            param_shapes.push((w, b));
+        }
+        let entries_j = j
+            .get("entries")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| MetaError("missing entries".into()))?;
+        let mut entries = BTreeMap::new();
+        for (name, ent) in entries_j.iter() {
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>, MetaError> {
+                ent.get(key)
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| MetaError(format!("entry {name} missing {key}")))?
+                    .iter()
+                    .map(|s| {
+                        let shape = s
+                            .get("shape")
+                            .and_then(|v| v.as_arr())
+                            .ok_or_else(|| MetaError("spec missing shape".into()))?
+                            .iter()
+                            .map(|x| x.as_usize().ok_or_else(|| MetaError("bad dim".into())))
+                            .collect::<Result<Vec<_>, _>>()?;
+                        let dtype = s
+                            .get("dtype")
+                            .and_then(|v| v.as_str())
+                            .ok_or_else(|| MetaError("spec missing dtype".into()))?
+                            .to_string();
+                        Ok(TensorSpec { shape, dtype })
+                    })
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    name: name.clone(),
+                    file: ent
+                        .get("file")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| MetaError(format!("entry {name} missing file")))?
+                        .to_string(),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                },
+            );
+        }
+        let meta = ModelMeta {
+            input_dim: field!(model, "input_dim", as_usize),
+            hidden: field!(model, "hidden", as_usize),
+            classes: field!(model, "classes", as_usize),
+            layers: field!(model, "layers", as_usize),
+            n_params: field!(model, "n_params", as_usize),
+            param_shapes,
+            train_batch: field!(j, "train_batch", as_usize),
+            eval_batch: field!(j, "eval_batch", as_usize),
+            entries,
+        };
+        meta.validate()?;
+        Ok(meta)
+    }
+
+    fn validate(&self) -> Result<(), MetaError> {
+        if self.param_shapes.len() != self.layers {
+            return Err(MetaError(format!(
+                "param_shapes has {} layers, expected {}",
+                self.param_shapes.len(),
+                self.layers
+            )));
+        }
+        let computed: usize = self
+            .param_shapes
+            .iter()
+            .map(|(w, b)| w.iter().product::<usize>() + b.iter().product::<usize>())
+            .sum();
+        if computed != self.n_params {
+            return Err(MetaError(format!(
+                "n_params {} != computed {}",
+                self.n_params, computed
+            )));
+        }
+        // Every entry the protocol needs must exist.
+        for base in ["init_params", "full_step", "eval_batch", "loss_grad"] {
+            if !self.entries.contains_key(base) {
+                return Err(MetaError(format!("missing entry {base}")));
+            }
+        }
+        for k in 1..self.layers {
+            for prefix in ["front_fwd", "back_fwd", "back_bwd", "front_bwd"] {
+                let name = format!("{prefix}_{k}");
+                if !self.entries.contains_key(&name) {
+                    return Err(MetaError(format!("missing entry {name}")));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Flat-layout tensor count for the whole model (`2·W`).
+    pub fn n_tensors(&self) -> usize {
+        2 * self.layers
+    }
+
+    /// Element count of flat tensor `idx`.
+    pub fn tensor_elems(&self, idx: usize) -> usize {
+        let (w, b) = &self.param_shapes[idx / 2];
+        if idx % 2 == 0 {
+            w.iter().product()
+        } else {
+            b.iter().product()
+        }
+    }
+
+    /// Flat tensor range `[lo, hi)` for layers `[layer_lo, layer_hi)`.
+    pub fn tensor_range(&self, layer_lo: usize, layer_hi: usize) -> std::ops::Range<usize> {
+        2 * layer_lo..2 * layer_hi
+    }
+
+    /// Cost profile of this architecture for the latency simulator.
+    pub fn profile(&self) -> crate::sim::profile::ModelProfile {
+        crate::sim::profile::ModelProfile::mlp(
+            self.input_dim,
+            self.hidden,
+            self.classes,
+            self.layers,
+        )
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec, MetaError> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| MetaError(format!("unknown entry {name:?}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A minimal synthetic manifest for parser tests (W=2).
+    fn manifest_json() -> String {
+        let mut entries = String::new();
+        let mut add = |name: &str| {
+            if !entries.is_empty() {
+                entries.push(',');
+            }
+            entries.push_str(&format!(
+                r#""{name}": {{"file": "{name}.hlo.txt",
+                   "inputs": [{{"shape": [4, 3], "dtype": "float32"}}],
+                   "outputs": [{{"shape": [4, 2], "dtype": "float32"}}]}}"#
+            ));
+        };
+        for n in [
+            "init_params",
+            "full_step",
+            "eval_batch",
+            "loss_grad",
+            "front_fwd_1",
+            "back_fwd_1",
+            "back_bwd_1",
+            "front_bwd_1",
+        ] {
+            add(n);
+        }
+        format!(
+            r#"{{
+            "format": "hlo-text-v1",
+            "model": {{
+                "family": "resnet-mlp", "input_dim": 3, "hidden": 4,
+                "classes": 2, "layers": 2, "n_params": 26,
+                "param_shapes": [{{"w": [3, 4], "b": [4]}}, {{"w": [4, 2], "b": [2]}}]
+            }},
+            "train_batch": 4, "eval_batch": 8,
+            "entries": {{{entries}}}
+        }}"#
+        )
+    }
+
+    #[test]
+    fn parses_synthetic_manifest() {
+        let j = Json::parse(&manifest_json()).unwrap();
+        let m = ModelMeta::from_json(&j).unwrap();
+        assert_eq!(m.layers, 2);
+        assert_eq!(m.input_dim, 3);
+        assert_eq!(m.n_params, 26);
+        assert_eq!(m.train_batch, 4);
+        assert_eq!(m.n_tensors(), 4);
+        assert_eq!(m.tensor_elems(0), 12);
+        assert_eq!(m.tensor_elems(1), 4);
+        assert_eq!(m.tensor_elems(2), 8);
+        assert_eq!(m.tensor_elems(3), 2);
+        assert_eq!(m.tensor_range(0, 1), 0..2);
+        assert_eq!(m.tensor_range(1, 2), 2..4);
+        let e = m.entry("front_fwd_1").unwrap();
+        assert_eq!(e.file, "front_fwd_1.hlo.txt");
+        assert_eq!(e.inputs[0].shape, vec![4, 3]);
+        assert_eq!(e.inputs[0].elems(), 12);
+    }
+
+    #[test]
+    fn rejects_param_count_mismatch() {
+        let bad = manifest_json().replace("\"n_params\": 26", "\"n_params\": 27");
+        let j = Json::parse(&bad).unwrap();
+        assert!(ModelMeta::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_entry() {
+        let bad = manifest_json().replace("front_bwd_1", "front_bwd_9");
+        let j = Json::parse(&bad).unwrap();
+        assert!(ModelMeta::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn profile_matches_architecture() {
+        let j = Json::parse(&manifest_json()).unwrap();
+        let m = ModelMeta::from_json(&j).unwrap();
+        let p = m.profile();
+        assert_eq!(p.w(), 2);
+        assert_eq!(p.params(0, 2), 26);
+    }
+
+    #[test]
+    fn unknown_entry_lookup_errors() {
+        let j = Json::parse(&manifest_json()).unwrap();
+        let m = ModelMeta::from_json(&j).unwrap();
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // Integration-ish: when `make artifacts` has run, the real manifest
+        // must parse and describe a consistent W-layer model.
+        if let Ok(m) = ModelMeta::load("artifacts") {
+            assert!(m.layers >= 2);
+            assert_eq!(m.param_shapes.len(), m.layers);
+            assert_eq!(m.entries.len(), 4 + 4 * (m.layers - 1));
+        }
+    }
+}

@@ -1,0 +1,296 @@
+//! Host-side parameter math: the L3 pieces of the training algebra that
+//! rightly belong to the coordinator (everything batch-shaped runs inside the
+//! AOT artifacts instead).
+//!
+//! Covers the paper's update equations:
+//! * eq. (1)/(2) — paired split update `ω ← ω − η(a_own·g_front + a_peer·g_back)`,
+//! * eq. (7) — the 2× step on overlapping layers,
+//! * FedAvg aggregation (Sec. II-A.3), in two flavors: the classic weighted
+//!   average (for vanilla FL, whose local grads are unweighted) and delta-sum
+//!   aggregation for FedPairing (whose local grads arrive pre-scaled by `a_i`;
+//!   the paper's plain `Σω^i` would multiply the base model by N — see
+//!   DESIGN.md §2 on this paper inconsistency).
+//!
+//! A parameter set is a flat tensor list `[w0, b0, w1, b1, …]` matching the
+//! AOT manifest layout; layer `k` owns tensors `2k` and `2k+1`.
+
+/// Flat tensor list (manifest order).
+pub type Params = Vec<Vec<f32>>;
+
+/// Tensors per layer in the flat layout.
+pub const TENSORS_PER_LAYER: usize = 2;
+
+/// Zero-filled clone of a shape.
+pub fn zeros_like(p: &Params) -> Params {
+    p.iter().map(|t| vec![0.0; t.len()]).collect()
+}
+
+/// `dst += s · src`, elementwise across the whole tensor list.
+pub fn add_scaled(dst: &mut Params, src: &Params, s: f32) {
+    assert_eq!(dst.len(), src.len(), "tensor-count mismatch");
+    for (d, a) in dst.iter_mut().zip(src) {
+        assert_eq!(d.len(), a.len(), "tensor-shape mismatch");
+        for (x, y) in d.iter_mut().zip(a) {
+            *x += s * y;
+        }
+    }
+}
+
+/// Global L2 norm across all tensors.
+pub fn l2_norm(p: &Params) -> f64 {
+    p.iter()
+        .flat_map(|t| t.iter())
+        .map(|&x| (x as f64) * (x as f64))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Plain SGD: `p ← p − lr · g`.
+pub fn sgd_apply(params: &mut Params, grads: &Params, lr: f32) {
+    add_scaled(params, grads, -lr);
+}
+
+/// The paired split update for one client's model (eqs. 1–2 + eq. 7).
+///
+/// * `g_front` — grads from the client's *own-data* flow, covering layers
+///   `[0, l_own)` (tensor list of length `2·l_own`).
+/// * `g_back` — grads from the *partner's-data* flow through this model's
+///   back part, covering layers `[l_partner, w)` (length `2·(w−l_partner)`).
+/// * `a_own`/`a_peer` — FedAvg weights of the data owners of each flow.
+/// * `overlap_boost` — apply eq. (7)'s 2× step where both flows hit a layer
+///   (`l_partner ≤ k < l_own`, possible only when `l_own > l_partner`).
+///
+/// Layers in the *gap* `[l_own, l_partner)` (smaller-`L` client) receive no
+/// gradient this step — exactly the propagation-flow geometry of paper Fig. 1.
+#[allow(clippy::too_many_arguments)]
+pub fn apply_split_update(
+    params: &mut Params,
+    w: usize,
+    l_own: usize,
+    l_partner: usize,
+    g_front: &[Vec<f32>],
+    g_back: &[Vec<f32>],
+    a_own: f32,
+    a_peer: f32,
+    lr: f32,
+    overlap_boost: bool,
+) {
+    assert_eq!(params.len(), TENSORS_PER_LAYER * w, "params/layer mismatch");
+    assert!(l_own >= 1 && l_own <= w);
+    assert!(l_partner >= 1 && l_partner <= w);
+    assert_eq!(g_front.len(), TENSORS_PER_LAYER * l_own, "front grads");
+    assert_eq!(
+        g_back.len(),
+        TENSORS_PER_LAYER * (w - l_partner),
+        "back grads"
+    );
+    for k in 0..w {
+        let in_front = k < l_own;
+        let in_back = k >= l_partner;
+        let boost = if overlap_boost && in_front && in_back {
+            2.0
+        } else {
+            1.0
+        };
+        for t in 0..TENSORS_PER_LAYER {
+            let pi = TENSORS_PER_LAYER * k + t;
+            if in_front {
+                let g = &g_front[pi];
+                assert_eq!(g.len(), params[pi].len());
+                for (p, &gv) in params[pi].iter_mut().zip(g) {
+                    *p -= lr * boost * a_own * gv;
+                }
+            }
+            if in_back {
+                let g = &g_back[TENSORS_PER_LAYER * (k - l_partner) + t];
+                assert_eq!(g.len(), params[pi].len());
+                for (p, &gv) in params[pi].iter_mut().zip(g) {
+                    *p -= lr * boost * a_peer * gv;
+                }
+            }
+        }
+    }
+}
+
+/// Classic weighted FedAvg: `ω_g = Σ a_i · ω^i` (vanilla FL; `Σ a_i = 1`).
+pub fn fedavg_weighted(models: &[Params], weights: &[f64]) -> Params {
+    assert_eq!(models.len(), weights.len());
+    assert!(!models.is_empty());
+    let wsum: f64 = weights.iter().sum();
+    assert!((wsum - 1.0).abs() < 1e-6, "weights must sum to 1, got {wsum}");
+    let mut out = zeros_like(&models[0]);
+    for (m, &a) in models.iter().zip(weights) {
+        add_scaled(&mut out, m, a as f32);
+    }
+    out
+}
+
+/// Delta-sum aggregation for pre-weighted local updates:
+/// `ω_g ← ω_g + Σ_i (ω^i − ω_g)`.
+///
+/// Because FedPairing scales every local gradient by `a_i` before it is
+/// applied (eqs. 1–2) and `Σ a_i = 1`, summing raw deltas yields exactly the
+/// data-weighted average update — the consistent reading of the paper's
+/// Sec. II-A.3 "directly perform averaging".
+pub fn aggregate_deltas(global: &mut Params, locals: &[Params]) {
+    for local in locals {
+        assert_eq!(local.len(), global.len());
+    }
+    // Accumulate Σ(local − global) against a snapshot so the result is exact
+    // regardless of accumulation order.
+    let snapshot = global.clone();
+    for local in locals {
+        for (ti, t) in local.iter().enumerate() {
+            for (vi, &v) in t.iter().enumerate() {
+                global[ti][vi] += v - snapshot[ti][vi];
+            }
+        }
+    }
+}
+
+/// Numerical-health check used by the coordinator each round.
+pub fn all_finite(p: &Params) -> bool {
+    p.iter().all(|t| t.iter().all(|x| x.is_finite()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params3(w: usize, fill: f32) -> Params {
+        (0..TENSORS_PER_LAYER * w).map(|_| vec![fill; 4]).collect()
+    }
+
+    #[test]
+    fn add_scaled_and_norm() {
+        let mut a = params3(2, 1.0);
+        let b = params3(2, 2.0);
+        add_scaled(&mut a, &b, 0.5);
+        assert!(a.iter().all(|t| t.iter().all(|&x| x == 2.0)));
+        let n = l2_norm(&a);
+        assert!((n - (16.0f64 * 4.0).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sgd_moves_against_gradient() {
+        let mut p = params3(1, 0.0);
+        let g = params3(1, 1.0);
+        sgd_apply(&mut p, &g, 0.1);
+        assert!(p.iter().all(|t| t.iter().all(|&x| (x + 0.1).abs() < 1e-7)));
+    }
+
+    #[test]
+    fn split_update_full_coverage_equal_split() {
+        // w=4, l_own=2, l_partner=2: front covers 0..2, back covers 2..4 — no
+        // overlap, no gap; everything moves by its own flow's grad.
+        let w = 4;
+        let mut p = params3(w, 0.0);
+        let g_front: Vec<Vec<f32>> = (0..4).map(|_| vec![1.0; 4]).collect();
+        let g_back: Vec<Vec<f32>> = (0..4).map(|_| vec![1.0; 4]).collect();
+        apply_split_update(&mut p, w, 2, 2, &g_front, &g_back, 0.5, 0.5, 0.1, true);
+        for t in &p {
+            for &x in t {
+                assert!((x + 0.1 * 0.5).abs() < 1e-7, "{x}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_update_overlap_double_steps() {
+        // w=3, l_own=2, l_partner=1 (the larger-L client from paper Fig. 1):
+        // layer 0: front only; layer 1: BOTH (overlap); layer 2: back only.
+        let w = 3;
+        let mut p = params3(w, 0.0);
+        let g_front: Vec<Vec<f32>> = (0..4).map(|_| vec![1.0; 4]).collect(); // layers 0..2
+        let g_back: Vec<Vec<f32>> = (0..4).map(|_| vec![1.0; 4]).collect(); // layers 1..3
+        apply_split_update(&mut p, w, 2, 1, &g_front, &g_back, 0.5, 0.5, 0.1, true);
+        let eta_a = 0.1 * 0.5;
+        assert!((p[0][0] + eta_a).abs() < 1e-7, "layer0 {:?}", p[0][0]);
+        // overlap layer: 2η(a_own·g + a_peer·g) = 2·(0.05+0.05) = 0.2
+        assert!(
+            (p[2][0] + 2.0 * 2.0 * eta_a).abs() < 1e-7,
+            "layer1 {:?}",
+            p[2][0]
+        );
+        assert!((p[4][0] + eta_a).abs() < 1e-7, "layer2 {:?}", p[4][0]);
+    }
+
+    #[test]
+    fn split_update_no_boost_single_steps_overlap() {
+        let w = 3;
+        let mut p = params3(w, 0.0);
+        let g_front: Vec<Vec<f32>> = (0..4).map(|_| vec![1.0; 4]).collect();
+        let g_back: Vec<Vec<f32>> = (0..4).map(|_| vec![1.0; 4]).collect();
+        apply_split_update(&mut p, w, 2, 1, &g_front, &g_back, 0.5, 0.5, 0.1, false);
+        // overlap layer without boost: η(a_own + a_peer)·g = 0.1·1.0
+        assert!((p[2][0] + 0.1).abs() < 1e-7);
+    }
+
+    #[test]
+    fn split_update_gap_untouched() {
+        // Smaller-L client: w=3, l_own=1, l_partner=2 → layer 1 is a gap.
+        let w = 3;
+        let mut p = params3(w, 7.0);
+        let g_front: Vec<Vec<f32>> = (0..2).map(|_| vec![1.0; 4]).collect(); // layer 0
+        let g_back: Vec<Vec<f32>> = (0..2).map(|_| vec![1.0; 4]).collect(); // layer 2
+        apply_split_update(&mut p, w, 1, 2, &g_front, &g_back, 0.5, 0.5, 0.1, true);
+        assert!(p[2].iter().all(|&x| x == 7.0), "gap layer must not move");
+        assert!(p[0].iter().all(|&x| x < 7.0));
+        assert!(p[4].iter().all(|&x| x < 7.0));
+    }
+
+    #[test]
+    fn fedavg_weighted_average() {
+        let a = params3(1, 0.0);
+        let b = params3(1, 10.0);
+        let avg = fedavg_weighted(&[a, b], &[0.25, 0.75]);
+        assert!(avg.iter().all(|t| t.iter().all(|&x| (x - 7.5).abs() < 1e-6)));
+    }
+
+    #[test]
+    #[should_panic(expected = "sum to 1")]
+    fn fedavg_rejects_unnormalized_weights() {
+        let a = params3(1, 0.0);
+        fedavg_weighted(&[a.clone(), a], &[0.5, 0.9]);
+    }
+
+    #[test]
+    fn aggregate_deltas_sums_updates() {
+        let global = params3(1, 1.0);
+        // Two locals, each moved by ±δ from global.
+        let mut l1 = global.clone();
+        add_scaled(&mut l1, &params3(1, 1.0), 0.3); // +0.3
+        let mut l2 = global.clone();
+        add_scaled(&mut l2, &params3(1, 1.0), -0.1); // −0.1
+        let mut g = global.clone();
+        aggregate_deltas(&mut g, &[l1, l2]);
+        // 1.0 + 0.3 − 0.1 = 1.2
+        assert!(g.iter().all(|t| t.iter().all(|&x| (x - 1.2).abs() < 1e-6)));
+    }
+
+    #[test]
+    fn aggregate_deltas_identity_when_no_change() {
+        let global = params3(2, 3.0);
+        let mut g = global.clone();
+        aggregate_deltas(&mut g, &[global.clone(), global.clone()]);
+        assert_eq!(g, global);
+    }
+
+    #[test]
+    fn all_finite_detects_nan() {
+        let mut p = params3(1, 0.0);
+        assert!(all_finite(&p));
+        p[0][2] = f32::NAN;
+        assert!(!all_finite(&p));
+    }
+
+    #[test]
+    #[should_panic]
+    fn split_update_shape_mismatch_panics() {
+        let mut p = params3(3, 0.0);
+        let g_front: Vec<Vec<f32>> = (0..2).map(|_| vec![1.0; 4]).collect();
+        let g_back: Vec<Vec<f32>> = (0..2).map(|_| vec![1.0; 4]).collect();
+        // l_own=2 needs 4 front tensors, only 2 given.
+        apply_split_update(&mut p, 3, 2, 2, &g_front, &g_back, 0.5, 0.5, 0.1, true);
+    }
+}

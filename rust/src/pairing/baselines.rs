@@ -1,0 +1,168 @@
+//! Baseline pairing mechanisms compared in paper Table I:
+//!
+//! * **random** — a uniformly random perfect matching;
+//! * **location-based** — greedily pair geographically nearest clients
+//!   (optimizes communication time only);
+//! * **computation-resource-based** — greedily pair the most
+//!   compute-imbalanced clients, maximizing `(f_i − f_j)²` (optimizes
+//!   compute balance only).
+//!
+//! Both greedy baselines are exactly Algorithm 1 run on a degenerate edge
+//! weight (β=0 resp. α=0 with distance negated), which is how the paper
+//! frames them.
+
+use super::graph::{ClientGraph, Edge};
+use super::greedy::greedy_matching;
+use crate::sim::latency::Fleet;
+use crate::util::rng::Rng;
+
+/// Uniformly random perfect matching.
+pub fn random_matching(rng: &mut Rng, n: usize) -> Vec<(usize, usize)> {
+    assert!(n % 2 == 0, "random matching needs even n");
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    idx.chunks(2).map(|c| (c[0], c[1])).collect()
+}
+
+/// Location-based pairing: maximize `−distance` greedily (nearest first).
+pub fn location_matching(fleet: &Fleet) -> Vec<(usize, usize)> {
+    let n = fleet.n();
+    let mut edges = Vec::with_capacity(n * (n - 1) / 2);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            edges.push(Edge {
+                i,
+                j,
+                // Negated distance: greedy picks nearest pairs first.
+                weight: -fleet.positions[i].dist(&fleet.positions[j]),
+            });
+        }
+    }
+    greedy_matching(&ClientGraph { n, edges })
+}
+
+/// Computation-resource-based pairing: maximize `(Δf)²` greedily.
+pub fn compute_matching(fleet: &Fleet) -> Vec<(usize, usize)> {
+    let n = fleet.n();
+    let mut edges = Vec::with_capacity(n * (n - 1) / 2);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let df = (fleet.freqs_hz[i] - fleet.freqs_hz[j]) / 1e9;
+            edges.push(Edge {
+                i,
+                j,
+                weight: df * df,
+            });
+        }
+    }
+    greedy_matching(&ClientGraph { n, edges })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::graph::is_perfect_matching;
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::util::proptest::{check, gen_usize};
+
+    fn fleet(n: usize, seed: u64) -> Fleet {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n_clients = n;
+        Fleet::sample(&cfg, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn random_is_valid_and_varies() {
+        let mut rng = Rng::new(1);
+        let a = random_matching(&mut rng, 20);
+        let b = random_matching(&mut rng, 20);
+        assert!(is_perfect_matching(20, &a));
+        assert!(is_perfect_matching(20, &b));
+        assert_ne!(a, b, "two draws identical — astronomically unlikely");
+    }
+
+    #[test]
+    fn property_random_always_valid() {
+        check(50, gen_usize(1, 12), |&half| {
+            let mut rng = Rng::new(half as u64);
+            is_perfect_matching(half * 2, &random_matching(&mut rng, half * 2))
+        });
+    }
+
+    #[test]
+    fn location_pairs_nearest_first() {
+        let f = fleet(6, 2);
+        let m = location_matching(&f);
+        assert!(is_perfect_matching(6, &m));
+        // The globally nearest pair must be matched together (greedy head).
+        let mut best = (0, 1);
+        let mut best_d = f64::INFINITY;
+        for i in 0..6 {
+            for j in (i + 1)..6 {
+                let d = f.positions[i].dist(&f.positions[j]);
+                if d < best_d {
+                    best_d = d;
+                    best = (i, j);
+                }
+            }
+        }
+        assert!(m.contains(&best), "{m:?} missing nearest pair {best:?}");
+    }
+
+    #[test]
+    fn compute_pairs_extremes_first() {
+        let f = fleet(6, 3);
+        let m = compute_matching(&f);
+        assert!(is_perfect_matching(6, &m));
+        // Fastest and slowest client must be paired (largest (Δf)²).
+        let fastest = (0..6)
+            .max_by(|&a, &b| f.freqs_hz[a].partial_cmp(&f.freqs_hz[b]).unwrap())
+            .unwrap();
+        let slowest = (0..6)
+            .min_by(|&a, &b| f.freqs_hz[a].partial_cmp(&f.freqs_hz[b]).unwrap())
+            .unwrap();
+        let want = (fastest.min(slowest), fastest.max(slowest));
+        assert!(m.contains(&want), "{m:?} missing extreme pair {want:?}");
+    }
+
+    #[test]
+    fn location_mean_distance_below_random() {
+        let f = fleet(20, 4);
+        let loc = location_matching(&f);
+        let mut rng = Rng::new(5);
+        let mean_d = |m: &[(usize, usize)]| {
+            m.iter()
+                .map(|&(a, b)| f.positions[a].dist(&f.positions[b]))
+                .sum::<f64>()
+                / m.len() as f64
+        };
+        let rand_avg: f64 = (0..20)
+            .map(|_| mean_d(&random_matching(&mut rng, 20)))
+            .sum::<f64>()
+            / 20.0;
+        assert!(
+            mean_d(&loc) < rand_avg,
+            "location {} !< random {}",
+            mean_d(&loc),
+            rand_avg
+        );
+    }
+
+    #[test]
+    fn compute_mean_gap_above_random() {
+        let f = fleet(20, 6);
+        let cmp = compute_matching(&f);
+        let mut rng = Rng::new(7);
+        let mean_gap = |m: &[(usize, usize)]| {
+            m.iter()
+                .map(|&(a, b)| ((f.freqs_hz[a] - f.freqs_hz[b]) / 1e9).powi(2))
+                .sum::<f64>()
+                / m.len() as f64
+        };
+        let rand_avg: f64 = (0..20)
+            .map(|_| mean_gap(&random_matching(&mut rng, 20)))
+            .sum::<f64>()
+            / 20.0;
+        assert!(mean_gap(&cmp) > rand_avg);
+    }
+}

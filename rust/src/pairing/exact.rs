@@ -1,0 +1,202 @@
+//! Exact maximum-weight perfect matching by bitmask dynamic programming —
+//! the optimality baseline for the greedy heuristic (problem 2 is solvable
+//! exactly in O(2ᴺ·N) for the paper's N=20 fleet; the NP-hardness the paper
+//! cites concerns the general ILP formulation).
+//!
+//! `dp[mask]` = best weight matching exactly the vertices in `mask`. The
+//! lowest unset... rather, lowest *set* vertex is always matched first, so
+//! each mask is expanded at most N ways: `O(2^N · N)` time, `O(2^N)` space —
+//! ~8 MiB of f64 for N=20, and milliseconds of work.
+
+use super::graph::ClientGraph;
+
+/// Maximum fleet size the DP will attempt (2^24 doubles = 128 MiB ceiling).
+pub const MAX_N: usize = 24;
+
+/// Exact max-weight perfect matching. Panics if `n` is odd or exceeds
+/// [`MAX_N`].
+pub fn exact_matching(graph: &ClientGraph) -> Vec<(usize, usize)> {
+    let n = graph.n;
+    assert!(n % 2 == 0, "perfect matching needs even n, got {n}");
+    assert!(n <= MAX_N, "n={n} exceeds bitmask-DP limit {MAX_N}");
+    if n == 0 {
+        return Vec::new();
+    }
+    let full: usize = (1 << n) - 1;
+    const NEG: f64 = f64::NEG_INFINITY;
+    let mut dp = vec![NEG; full + 1];
+    // choice[mask] = (i, j) matched first at this mask (for reconstruction)
+    let mut choice = vec![(usize::MAX, usize::MAX); full + 1];
+    dp[0] = 0.0;
+    for mask in 0..=full {
+        if dp[mask] == NEG {
+            continue;
+        }
+        // Vertices still unmatched = !mask; match the lowest one.
+        let rem = full & !mask;
+        if rem == 0 {
+            continue;
+        }
+        let i = rem.trailing_zeros() as usize;
+        let mut rest = rem & !(1 << i);
+        while rest != 0 {
+            let j = rest.trailing_zeros() as usize;
+            rest &= !(1 << j);
+            let next = mask | (1 << i) | (1 << j);
+            let cand = dp[mask] + graph.weight(i, j);
+            if cand > dp[next] {
+                dp[next] = cand;
+                choice[next] = (i, j);
+            }
+        }
+    }
+    // Reconstruct.
+    let mut out = Vec::with_capacity(n / 2);
+    let mut mask = full;
+    while mask != 0 {
+        let (i, j) = choice[mask];
+        assert!(i != usize::MAX, "unreachable mask during reconstruction");
+        out.push((i, j));
+        mask &= !(1 << i);
+        mask &= !(1 << j);
+    }
+    out.reverse();
+    out
+}
+
+/// Optimal matching weight only (no reconstruction) — for bounds in tests.
+pub fn exact_weight(graph: &ClientGraph) -> f64 {
+    let m = exact_matching(graph);
+    graph.matching_weight(&m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::graph::{is_perfect_matching, ClientGraph, Edge};
+    use super::super::greedy::greedy_matching;
+    use super::*;
+    use crate::util::proptest::{check, Gen};
+    use crate::util::rng::Rng;
+
+    fn random_graph(rng: &mut Rng, n: usize) -> ClientGraph {
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                edges.push(Edge {
+                    i,
+                    j,
+                    weight: rng.f64() * 10.0,
+                });
+            }
+        }
+        ClientGraph { n, edges }
+    }
+
+    /// Brute-force optimum by recursion (for cross-checking small n).
+    fn brute(graph: &ClientGraph, unmatched: &mut Vec<usize>) -> f64 {
+        if unmatched.is_empty() {
+            return 0.0;
+        }
+        let i = unmatched[0];
+        let mut best = f64::NEG_INFINITY;
+        for k in 1..unmatched.len() {
+            let j = unmatched[k];
+            let mut rest: Vec<usize> = unmatched
+                .iter()
+                .cloned()
+                .filter(|&v| v != i && v != j)
+                .collect();
+            let w = graph.weight(i, j) + brute(graph, &mut rest);
+            best = best.max(w);
+        }
+        best
+    }
+
+    #[test]
+    fn beats_greedy_on_adversarial_path() {
+        // 3-4-3 path: exact picks the two 3s (6), greedy picks the 4.
+        let mut edges = Vec::new();
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                let weight = match (i, j) {
+                    (0, 1) => 3.0,
+                    (1, 2) => 4.0,
+                    (2, 3) => 3.0,
+                    _ => 0.0,
+                };
+                edges.push(Edge { i, j, weight });
+            }
+        }
+        let g = ClientGraph { n: 4, edges };
+        let m = exact_matching(&g);
+        assert!((g.matching_weight(&m) - 6.0).abs() < 1e-12);
+        assert!(g.matching_weight(&m) > g.matching_weight(&greedy_matching(&g)));
+    }
+
+    #[test]
+    fn matches_brute_force_small() {
+        let mut rng = Rng::new(2);
+        for n in [2usize, 4, 6, 8] {
+            for _ in 0..5 {
+                let g = random_graph(&mut rng, n);
+                let exact = exact_weight(&g);
+                let bf = brute(&g, &mut (0..n).collect());
+                assert!((exact - bf).abs() < 1e-9, "n={n}: dp={exact} brute={bf}");
+            }
+        }
+    }
+
+    #[test]
+    fn always_valid_and_at_least_greedy() {
+        check(
+            30,
+            Gen::new(|rng| {
+                let n = 2 * (1 + rng.below(6)); // 2..12
+                random_graph(rng, n)
+            }),
+            |g| {
+                let ex = exact_matching(g);
+                if !is_perfect_matching(g.n, &ex) {
+                    return false;
+                }
+                let gw = g.matching_weight(&greedy_matching(g));
+                let ew = g.matching_weight(&ex);
+                // optimal ≥ greedy ≥ optimal/2
+                ew + 1e-9 >= gw && gw * 2.0 + 1e-9 >= ew
+            },
+        );
+    }
+
+    #[test]
+    fn n20_paper_scale_runs_fast() {
+        let mut rng = Rng::new(3);
+        let g = random_graph(&mut rng, 20);
+        let t = std::time::Instant::now();
+        let m = exact_matching(&g);
+        assert!(is_perfect_matching(20, &m));
+        assert!(t.elapsed().as_secs_f64() < 5.0, "DP too slow");
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = ClientGraph {
+            n: 0,
+            edges: vec![],
+        };
+        assert!(exact_matching(&g).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "even")]
+    fn odd_n_panics() {
+        let g = ClientGraph {
+            n: 3,
+            edges: vec![
+                Edge { i: 0, j: 1, weight: 1.0 },
+                Edge { i: 0, j: 2, weight: 1.0 },
+                Edge { i: 1, j: 2, weight: 1.0 },
+            ],
+        };
+        exact_matching(&g);
+    }
+}

@@ -1,0 +1,179 @@
+//! The client graph of paper Sec. III-A: vertices are clients, edge weights
+//! follow eq. (5):
+//!
+//! ```text
+//!     ε_ij = α · (f_i − f_j)² + β · r_ij
+//! ```
+//!
+//! Frequencies enter in **GHz** so the two terms are commensurable with the
+//! default weights (α=1, β=2e-9 · bits/s): a full-range frequency gap
+//! contributes ≈ 3.6 while a strong link contributes ≈ 1.6.
+
+use crate::sim::channel::Channel;
+use crate::sim::latency::Fleet;
+
+/// A weighted undirected edge `(i, j, ε_ij)` with `i < j`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Edge {
+    pub i: usize,
+    pub j: usize,
+    pub weight: f64,
+}
+
+/// Complete weighted client graph.
+#[derive(Clone, Debug)]
+pub struct ClientGraph {
+    pub n: usize,
+    pub edges: Vec<Edge>,
+}
+
+impl ClientGraph {
+    /// Build the complete graph from fleet state per eq. (5).
+    pub fn build(fleet: &Fleet, channel: &Channel, alpha: f64, beta: f64) -> ClientGraph {
+        let n = fleet.n();
+        let mut edges = Vec::with_capacity(n * (n - 1) / 2);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let df_ghz = (fleet.freqs_hz[i] - fleet.freqs_hz[j]) / 1e9;
+                let rate = channel.rate(&fleet.positions[i], &fleet.positions[j]);
+                edges.push(Edge {
+                    i,
+                    j,
+                    weight: alpha * df_ghz * df_ghz + beta * rate,
+                });
+            }
+        }
+        ClientGraph { n, edges }
+    }
+
+    /// Weight lookup (O(1) arithmetic index into the triangular edge list).
+    pub fn weight(&self, a: usize, b: usize) -> f64 {
+        assert!(a != b && a < self.n && b < self.n);
+        let (i, j) = if a < b { (a, b) } else { (b, a) };
+        // index of (i,j) in the row-major upper triangle
+        let idx = i * self.n - i * (i + 1) / 2 + (j - i - 1);
+        let e = self.edges[idx];
+        debug_assert_eq!((e.i, e.j), (i, j));
+        e.weight
+    }
+
+    /// Total weight of a matching.
+    pub fn matching_weight(&self, pairs: &[(usize, usize)]) -> f64 {
+        pairs.iter().map(|&(a, b)| self.weight(a, b)).sum()
+    }
+}
+
+/// Check a pairing is a valid perfect matching on `n` vertices: every vertex
+/// appears exactly once, no self-loops. (Constraints (4a)/(4b)/(6a)/(6b).)
+pub fn is_perfect_matching(n: usize, pairs: &[(usize, usize)]) -> bool {
+    if n % 2 != 0 || pairs.len() != n / 2 {
+        return false;
+    }
+    let mut seen = vec![false; n];
+    for &(a, b) in pairs {
+        if a == b || a >= n || b >= n || seen[a] || seen[b] {
+            return false;
+        }
+        seen[a] = true;
+        seen[b] = true;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChannelConfig, ExperimentConfig};
+    use crate::util::rng::Rng;
+
+    fn fleet(n: usize, seed: u64) -> (Fleet, Channel) {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n_clients = n;
+        let mut rng = Rng::new(seed);
+        (
+            Fleet::sample(&cfg, &mut rng),
+            Channel::new(ChannelConfig::default()),
+        )
+    }
+
+    #[test]
+    fn complete_graph_edge_count() {
+        let (f, ch) = fleet(20, 1);
+        let g = ClientGraph::build(&f, &ch, 1.0, 2e-9);
+        assert_eq!(g.edges.len(), 20 * 19 / 2);
+        assert!(g.edges.iter().all(|e| e.i < e.j && e.weight >= 0.0));
+    }
+
+    #[test]
+    fn weight_lookup_matches_edge_list() {
+        let (f, ch) = fleet(8, 2);
+        let g = ClientGraph::build(&f, &ch, 1.0, 2e-9);
+        for e in &g.edges {
+            assert_eq!(g.weight(e.i, e.j), e.weight);
+            assert_eq!(g.weight(e.j, e.i), e.weight); // symmetric
+        }
+    }
+
+    #[test]
+    fn eq5_terms_behave() {
+        let (f, ch) = fleet(4, 3);
+        // α-only: weight grows with frequency gap.
+        let g_alpha = ClientGraph::build(&f, &ch, 1.0, 0.0);
+        let mut max_gap_pair = (0, 1);
+        let mut max_gap = 0.0;
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                let gap = ((f.freqs_hz[i] - f.freqs_hz[j]) / 1e9).powi(2);
+                if gap > max_gap {
+                    max_gap = gap;
+                    max_gap_pair = (i, j);
+                }
+            }
+        }
+        let best = g_alpha
+            .edges
+            .iter()
+            .max_by(|a, b| a.weight.partial_cmp(&b.weight).unwrap())
+            .unwrap();
+        assert_eq!((best.i, best.j), max_gap_pair);
+        // β-only: nearest pair (highest rate) wins.
+        let g_beta = ClientGraph::build(&f, &ch, 0.0, 1.0);
+        let best = g_beta
+            .edges
+            .iter()
+            .max_by(|a, b| a.weight.partial_cmp(&b.weight).unwrap())
+            .unwrap();
+        let mut min_d = f64::INFINITY;
+        let mut min_pair = (0, 1);
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                let d = f.positions[i].dist(&f.positions[j]);
+                if d < min_d {
+                    min_d = d;
+                    min_pair = (i, j);
+                }
+            }
+        }
+        assert_eq!((best.i, best.j), min_pair);
+    }
+
+    #[test]
+    fn perfect_matching_validation() {
+        assert!(is_perfect_matching(4, &[(0, 1), (2, 3)]));
+        assert!(is_perfect_matching(4, &[(3, 0), (1, 2)]));
+        assert!(!is_perfect_matching(4, &[(0, 1)])); // incomplete
+        assert!(!is_perfect_matching(4, &[(0, 1), (1, 2)])); // vertex reuse
+        assert!(!is_perfect_matching(4, &[(0, 0), (2, 3)])); // self loop
+        assert!(!is_perfect_matching(4, &[(0, 1), (2, 5)])); // out of range
+        assert!(!is_perfect_matching(5, &[(0, 1), (2, 3)])); // odd n
+    }
+
+    #[test]
+    fn matching_weight_sums() {
+        let (f, ch) = fleet(4, 5);
+        let g = ClientGraph::build(&f, &ch, 1.0, 2e-9);
+        let m = [(0usize, 1usize), (2usize, 3usize)];
+        let expect = g.weight(0, 1) + g.weight(2, 3);
+        assert!((g.matching_weight(&m) - expect).abs() < 1e-12);
+    }
+}

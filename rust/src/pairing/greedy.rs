@@ -1,0 +1,159 @@
+//! Algorithm 1 of the paper: greedy max-weight matching.
+//!
+//! 1. Sort all edges by weight, descending (the paper's pseudocode says
+//!    "ascending" but its步骤 text — "iteratively pick the edge with the
+//!    largest weight" — and the objective (6) require descending; we follow
+//!    the objective).
+//! 2. Walk the sorted list, taking every edge whose endpoints are both
+//!    uncovered.
+//!
+//! This is the classic ½-approximation for maximum-weight matching: the
+//! result is vertex-disjoint, covers all vertices of a complete even-order
+//! graph, and its weight is ≥ ½ of the optimum (property-tested against the
+//! exact DP in `exact.rs`).
+
+use super::graph::{ClientGraph, Edge};
+
+/// Deterministic greedy matching (ties broken by `(i, j)` lexicographic order
+/// so results are stable across runs and platforms).
+pub fn greedy_matching(graph: &ClientGraph) -> Vec<(usize, usize)> {
+    let mut edges: Vec<Edge> = graph.edges.clone();
+    edges.sort_by(|a, b| {
+        b.weight
+            .partial_cmp(&a.weight)
+            .unwrap()
+            .then_with(|| (a.i, a.j).cmp(&(b.i, b.j)))
+    });
+    let mut covered = vec![false; graph.n];
+    let mut out = Vec::with_capacity(graph.n / 2);
+    for e in &edges {
+        if !covered[e.i] && !covered[e.j] {
+            covered[e.i] = true;
+            covered[e.j] = true;
+            out.push((e.i, e.j));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::graph::{is_perfect_matching, ClientGraph, Edge};
+    use super::*;
+    use crate::util::proptest::{check, gen_usize, Gen};
+    use crate::util::rng::Rng;
+
+    /// Graph with explicit weights for hand-checkable cases.
+    fn graph_from(n: usize, w: &[((usize, usize), f64)]) -> ClientGraph {
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let weight = w
+                    .iter()
+                    .find(|((a, b), _)| (*a, *b) == (i, j))
+                    .map(|&(_, w)| w)
+                    .unwrap_or(0.0);
+                edges.push(Edge { i, j, weight });
+            }
+        }
+        ClientGraph { n, edges }
+    }
+
+    fn random_graph(rng: &mut Rng, n: usize) -> ClientGraph {
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                edges.push(Edge {
+                    i,
+                    j,
+                    weight: rng.f64() * 10.0,
+                });
+            }
+        }
+        ClientGraph { n, edges }
+    }
+
+    #[test]
+    fn takes_heaviest_edge_first() {
+        let g = graph_from(4, &[((0, 1), 10.0), ((2, 3), 1.0), ((0, 2), 5.0)]);
+        let m = greedy_matching(&g);
+        assert!(m.contains(&(0, 1)));
+        assert!(m.contains(&(2, 3)));
+    }
+
+    #[test]
+    fn greedy_can_be_suboptimal_but_half_bounded() {
+        // Classic adversarial case: path weights 3-4-3. Greedy takes the 4
+        // (weight 4), optimal takes both 3s (weight 6) — but as a perfect
+        // matching on 4 vertices greedy must still cover everyone.
+        let g = graph_from(4, &[((0, 1), 3.0), ((1, 2), 4.0), ((2, 3), 3.0)]);
+        let m = greedy_matching(&g);
+        assert!(is_perfect_matching(4, &m));
+        assert!(m.contains(&(1, 2)));
+        let wt = g.matching_weight(&m);
+        assert!(wt >= 6.0 / 2.0, "½-approx violated: {wt}");
+    }
+
+    #[test]
+    fn perfect_matching_on_even_complete_graphs() {
+        let mut rng = Rng::new(1);
+        for n in [2usize, 4, 6, 10, 20] {
+            let g = random_graph(&mut rng, n);
+            let m = greedy_matching(&g);
+            assert!(is_perfect_matching(n, &m), "n={n}");
+        }
+    }
+
+    #[test]
+    fn deterministic_under_ties() {
+        let g = graph_from(6, &[]); // all-zero weights → pure tie-breaking
+        let a = greedy_matching(&g);
+        let b = greedy_matching(&g);
+        assert_eq!(a, b);
+        assert!(is_perfect_matching(6, &a));
+    }
+
+    #[test]
+    fn property_always_valid_matching() {
+        check(
+            60,
+            Gen::new(|rng| {
+                let n = 2 * (1 + rng.below(8)); // even 2..16
+                random_graph(rng, n)
+            }),
+            |g| is_perfect_matching(g.n, &greedy_matching(g)),
+        );
+    }
+
+    #[test]
+    fn property_no_improving_uncovered_swap() {
+        // Greedy maximality: you cannot add any edge between two distinct
+        // pairs that outweighs both edges it would break... weaker check:
+        // every edge NOT in the matching has at least one endpoint whose
+        // matched edge is at least as heavy (greedy's defining invariant).
+        check(
+            40,
+            gen_usize(1, 7).map(|half| {
+                let mut rng = Rng::new(half as u64 * 131);
+                random_graph(&mut rng, half * 2)
+            }),
+            |g| {
+                let m = greedy_matching(g);
+                let partner = {
+                    let mut p = vec![usize::MAX; g.n];
+                    for &(a, b) in &m {
+                        p[a] = b;
+                        p[b] = a;
+                    }
+                    p
+                };
+                g.edges.iter().all(|e| {
+                    let w_i = g.weight(e.i, partner[e.i]);
+                    let w_j = g.weight(e.j, partner[e.j]);
+                    // tolerance for float ties
+                    e.weight <= w_i + 1e-12 || e.weight <= w_j + 1e-12
+                })
+            },
+        );
+    }
+}

@@ -1,0 +1,96 @@
+//! Client pairing — the paper's Sec. III contribution.
+//!
+//! [`graph`] models the fleet as the weighted graph of eq. (5); [`greedy`] is
+//! Algorithm 1; [`baselines`] are Table I's random/location/compute
+//! mechanisms; [`exact`] is the bitmask-DP optimum used as an ablation bound.
+//! [`pair_clients`] dispatches on the configured [`PairingStrategy`].
+
+pub mod baselines;
+pub mod exact;
+pub mod graph;
+pub mod greedy;
+
+use crate::config::PairingStrategy;
+use crate::sim::channel::Channel;
+use crate::sim::latency::Fleet;
+use crate::util::rng::Rng;
+use graph::ClientGraph;
+
+/// Run the configured pairing mechanism over the fleet.
+///
+/// `alpha`/`beta` are eq. (5)'s weights (used by `Greedy` and `Exact`);
+/// `rng` is consumed only by `Random`.
+pub fn pair_clients(
+    strategy: PairingStrategy,
+    fleet: &Fleet,
+    channel: &Channel,
+    alpha: f64,
+    beta: f64,
+    rng: &mut Rng,
+) -> Vec<(usize, usize)> {
+    match strategy {
+        PairingStrategy::Greedy => {
+            greedy::greedy_matching(&ClientGraph::build(fleet, channel, alpha, beta))
+        }
+        PairingStrategy::Random => baselines::random_matching(rng, fleet.n()),
+        PairingStrategy::Location => baselines::location_matching(fleet),
+        PairingStrategy::Compute => baselines::compute_matching(fleet),
+        PairingStrategy::Exact => {
+            exact::exact_matching(&ClientGraph::build(fleet, channel, alpha, beta))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChannelConfig, ExperimentConfig};
+    use graph::is_perfect_matching;
+
+    #[test]
+    fn dispatch_all_strategies_valid() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n_clients = 10;
+        let mut rng = Rng::new(1);
+        let fleet = Fleet::sample(&cfg, &mut rng);
+        let ch = Channel::new(ChannelConfig::default());
+        for s in [
+            PairingStrategy::Greedy,
+            PairingStrategy::Random,
+            PairingStrategy::Location,
+            PairingStrategy::Compute,
+            PairingStrategy::Exact,
+        ] {
+            let m = pair_clients(s, &fleet, &ch, 1.0, 2e-9, &mut rng);
+            assert!(is_perfect_matching(10, &m), "{s:?}: {m:?}");
+        }
+    }
+
+    #[test]
+    fn exact_weight_dominates_greedy() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n_clients = 12;
+        let mut rng = Rng::new(2);
+        let fleet = Fleet::sample(&cfg, &mut rng);
+        let ch = Channel::new(ChannelConfig::default());
+        let g = ClientGraph::build(&fleet, &ch, 1.0, 2e-9);
+        let wg = g.matching_weight(&pair_clients(
+            PairingStrategy::Greedy,
+            &fleet,
+            &ch,
+            1.0,
+            2e-9,
+            &mut rng,
+        ));
+        let we = g.matching_weight(&pair_clients(
+            PairingStrategy::Exact,
+            &fleet,
+            &ch,
+            1.0,
+            2e-9,
+            &mut rng,
+        ));
+        assert!(we + 1e-9 >= wg);
+        assert!(wg * 2.0 + 1e-9 >= we);
+    }
+}

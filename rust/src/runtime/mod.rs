@@ -1,0 +1,572 @@
+//! The PJRT execution engine: loads the AOT HLO-text artifacts and runs them
+//! on the XLA CPU client — the only place the crate touches `xla`.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → execute. Artifacts are
+//! compiled lazily on first use and cached for the lifetime of the engine
+//! (one compile per entry per process; the training loop then only executes).
+//!
+//! **Buffer discipline.** Inputs travel host→device via
+//! `buffer_from_host_buffer` and execution uses `execute_b` (caller-owned
+//! buffers). The crate's literal-based `execute` leaks its transient input
+//! device buffers (`BufferFromHostLiteral(..).release()` with no owner —
+//! ≈5 MB/step measured), so it is deliberately not used; `execute_b` inputs
+//! stay owned by [`DeviceTensors`]/[`PjRtBuffer`] RAII handles and are freed
+//! on drop. This also lets the split trainer upload a parameter slice once
+//! and reuse it across the forward and backward calls of a batch (§Perf).
+//!
+//! The typed wrappers ([`Engine::front_fwd`], [`Engine::back_bwd`], …) mirror
+//! the split-learning protocol steps and validate shapes against the manifest
+//! before every call, so a stale `artifacts/` directory fails loudly rather
+//! than numerically.
+
+use crate::model::ModelMeta;
+use crate::nn::Params;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A set of device-resident tensors (e.g. one model slice), freed on drop.
+pub struct DeviceTensors {
+    bufs: Vec<xla::PjRtBuffer>,
+    /// First layer this slice covers (for shape validation).
+    pub layer_lo: usize,
+}
+
+impl DeviceTensors {
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+}
+
+/// Lazily-compiled artifact engine.
+pub struct Engine {
+    dir: String,
+    meta: ModelMeta,
+    client: xla::PjRtClient,
+    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// Execution counter per entry (perf diagnostics).
+    exec_counts: BTreeMap<String, u64>,
+}
+
+impl Engine {
+    /// Open an artifact directory (must contain `manifest.json`).
+    pub fn load(dir: &str) -> Result<Engine> {
+        let meta = ModelMeta::load(dir)
+            .map_err(|e| anyhow::anyhow!("{e}"))
+            .with_context(|| format!("loading manifest from {dir}"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            dir: dir.to_string(),
+            meta,
+            client,
+            exes: BTreeMap::new(),
+            exec_counts: BTreeMap::new(),
+        })
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    /// Total artifact executions so far (all entries).
+    pub fn total_execs(&self) -> u64 {
+        self.exec_counts.values().sum()
+    }
+
+    /// Per-entry execution counts.
+    pub fn exec_counts(&self) -> &BTreeMap<String, u64> {
+        &self.exec_counts
+    }
+
+    /// Compile (or fetch cached) an entry's executable.
+    fn exe(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.exes.contains_key(name) {
+            let entry = self.meta.entry(name).map_err(|e| anyhow::anyhow!("{e}"))?;
+            let path = format!("{}/{}", self.dir, entry.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            self.exes.insert(name.to_string(), exe);
+        }
+        Ok(&self.exes[name])
+    }
+
+    /// Pre-compile every artifact (useful before timed runs).
+    pub fn warmup(&mut self) -> Result<()> {
+        let names: Vec<String> = self.meta.entries.keys().cloned().collect();
+        for n in names {
+            self.exe(&n)?;
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Host→device upload helpers
+    // ------------------------------------------------------------------
+
+    /// Upload a flat f32 tensor.
+    pub fn upload_f32(&self, shape: &[usize], data: &[f32]) -> Result<xla::PjRtBuffer> {
+        let elems: usize = shape.iter().product();
+        if elems != data.len() {
+            bail!("upload shape {shape:?} wants {elems} elems, got {}", data.len());
+        }
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .context("uploading f32 buffer")
+    }
+
+    /// Upload a scalar u32 (artifact RNG seeds).
+    pub fn upload_u32(&self, v: u32) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&[v], &[], None)
+            .context("uploading u32 scalar")
+    }
+
+    /// Upload a parameter slice starting at `layer_lo`, validated against the
+    /// manifest layout. The returned [`DeviceTensors`] can be reused across
+    /// every artifact call of a batch (fwd + bwd), halving param uploads.
+    pub fn upload_params(&self, params: &[Vec<f32>], layer_lo: usize) -> Result<DeviceTensors> {
+        let mut bufs = Vec::with_capacity(params.len());
+        for (off, t) in params.iter().enumerate() {
+            let idx = 2 * layer_lo + off;
+            let (w, b) = &self.meta.param_shapes[idx / 2];
+            let shape: &[usize] = if idx % 2 == 0 { w } else { b };
+            bufs.push(self.upload_f32(shape, t)?);
+        }
+        Ok(DeviceTensors {
+            bufs,
+            layer_lo,
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // Execution
+    // ------------------------------------------------------------------
+
+    /// Raw buffer call: validate arity, execute, unpack the output tuple into
+    /// flat f32 vectors.
+    pub fn run(&mut self, name: &str, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<Vec<f32>>> {
+        let entry = self.meta.entry(name).map_err(|e| anyhow::anyhow!("{e}"))?;
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "{name}: got {} inputs, artifact expects {}",
+                inputs.len(),
+                entry.inputs.len()
+            );
+        }
+        let n_outputs = entry.outputs.len();
+        let exe = self.exe(name)?;
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .with_context(|| format!("executing {name}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {name} result"))?;
+        // aot.py lowers with return_tuple=True: always a tuple, even arity 1.
+        let parts = lit.to_tuple().context("untupling result")?;
+        if parts.len() != n_outputs {
+            bail!(
+                "{name}: artifact returned {} outputs, manifest says {}",
+                parts.len(),
+                n_outputs
+            );
+        }
+        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
+        let mut out = Vec::with_capacity(parts.len());
+        for (i, p) in parts.iter().enumerate() {
+            let v: Vec<f32> = p
+                .to_vec()
+                .with_context(|| format!("{name}: output {i} to_vec"))?;
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    /// Assemble `params (device) + extra host tensors`, then run.
+    fn run_with_params(
+        &mut self,
+        name: &str,
+        params: &DeviceTensors,
+        extra: &[(&[usize], &[f32])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::with_capacity(extra.len());
+        for (shape, data) in extra {
+            owned.push(self.upload_f32(shape, data)?);
+        }
+        let mut inputs: Vec<&xla::PjRtBuffer> = params.bufs.iter().collect();
+        inputs.extend(owned.iter());
+        self.run(name, &inputs)
+    }
+
+    // ------------------------------------------------------------------
+    // Protocol-step wrappers (host-slice convenience forms)
+    // ------------------------------------------------------------------
+
+    /// Materialize the initial global model from a seed.
+    pub fn init_params(&mut self, seed: u32) -> Result<Params> {
+        let seed_buf = self.upload_u32(seed)?;
+        self.run("init_params", &[&seed_buf])
+    }
+
+    /// Vanilla-FL local step: `(grads, loss)`.
+    pub fn full_step(&mut self, params: &Params, x: &[f32], y1hot: &[f32]) -> Result<(Params, f32)> {
+        let dev = self.upload_params(params, 0)?;
+        self.full_step_b(&dev, x, y1hot)
+    }
+
+    /// `full_step` with pre-uploaded params.
+    pub fn full_step_b(
+        &mut self,
+        params: &DeviceTensors,
+        x: &[f32],
+        y1hot: &[f32],
+    ) -> Result<(Params, f32)> {
+        let b = self.meta.train_batch;
+        let (di, dc) = (self.meta.input_dim, self.meta.classes);
+        let mut out = self.run_with_params(
+            "full_step",
+            params,
+            &[(&[b, di], x), (&[b, dc], y1hot)],
+        )?;
+        let loss = out.pop().expect("full_step outputs")[0];
+        Ok((out, loss))
+    }
+
+    /// Evaluation batch: `(loss_sum, n_correct, n_rows)`.
+    pub fn eval_batch(&mut self, params: &Params, x: &[f32], y1hot: &[f32]) -> Result<(f32, f32, f32)> {
+        let dev = self.upload_params(params, 0)?;
+        self.eval_batch_b(&dev, x, y1hot)
+    }
+
+    /// `eval_batch` with pre-uploaded params (reused across test batches).
+    pub fn eval_batch_b(
+        &mut self,
+        params: &DeviceTensors,
+        x: &[f32],
+        y1hot: &[f32],
+    ) -> Result<(f32, f32, f32)> {
+        let b = self.meta.eval_batch;
+        let (di, dc) = (self.meta.input_dim, self.meta.classes);
+        let out = self.run_with_params(
+            "eval_batch",
+            params,
+            &[(&[b, di], x), (&[b, dc], y1hot)],
+        )?;
+        Ok((out[0][0], out[1][0], out[2][0]))
+    }
+
+    /// Front forward at split `k`: activation of shape `[train_batch, hidden]`.
+    pub fn front_fwd(&mut self, k: usize, params_front: &[Vec<f32>], x: &[f32]) -> Result<Vec<f32>> {
+        let dev = self.upload_params(params_front, 0)?;
+        let xb = self.upload_f32(&[self.meta.train_batch, self.meta.input_dim], x)?;
+        self.front_fwd_b(k, &dev, &xb)
+    }
+
+    /// `front_fwd` with device-resident params + input.
+    pub fn front_fwd_b(
+        &mut self,
+        k: usize,
+        params_front: &DeviceTensors,
+        x: &xla::PjRtBuffer,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(params_front.layer_lo == 0, "front params must start at layer 0");
+        let mut inputs: Vec<&xla::PjRtBuffer> = params_front.bufs.iter().collect();
+        inputs.push(x);
+        let mut out = self.run(&format!("front_fwd_{k}"), &inputs)?;
+        Ok(out.pop().expect("front_fwd output"))
+    }
+
+    /// Back forward at split `k`: logits.
+    pub fn back_fwd(&mut self, k: usize, params_back: &[Vec<f32>], act: &[f32]) -> Result<Vec<f32>> {
+        let dev = self.upload_params(params_back, k)?;
+        let ab = self.upload_f32(&[self.meta.train_batch, self.meta.hidden], act)?;
+        self.back_fwd_b(k, &dev, &ab)
+    }
+
+    /// `back_fwd` with device-resident params + activation.
+    pub fn back_fwd_b(
+        &mut self,
+        k: usize,
+        params_back: &DeviceTensors,
+        act: &xla::PjRtBuffer,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(params_back.layer_lo == k, "back params must start at layer k");
+        let mut inputs: Vec<&xla::PjRtBuffer> = params_back.bufs.iter().collect();
+        inputs.push(act);
+        let mut out = self.run(&format!("back_fwd_{k}"), &inputs)?;
+        Ok(out.pop().expect("back_fwd output"))
+    }
+
+    /// Loss + logit gradient (computed by the data owner; labels stay local).
+    pub fn loss_grad(&mut self, logits: &[f32], y1hot: &[f32]) -> Result<(f32, Vec<f32>)> {
+        let b = self.meta.train_batch;
+        let dc = self.meta.classes;
+        let lb = self.upload_f32(&[b, dc], logits)?;
+        let yb = self.upload_f32(&[b, dc], y1hot)?;
+        let mut out = self.run("loss_grad", &[&lb, &yb])?;
+        let g = out.pop().expect("loss_grad grad");
+        let loss = out.pop().expect("loss_grad loss")[0];
+        Ok((loss, g))
+    }
+
+    /// Back backward at split `k`: `(grads for layers k..W, g_act)`.
+    pub fn back_bwd(
+        &mut self,
+        k: usize,
+        params_back: &[Vec<f32>],
+        act: &[f32],
+        g_logits: &[f32],
+    ) -> Result<(Vec<Vec<f32>>, Vec<f32>)> {
+        let dev = self.upload_params(params_back, k)?;
+        let ab = self.upload_f32(&[self.meta.train_batch, self.meta.hidden], act)?;
+        self.back_bwd_b(k, &dev, &ab, g_logits)
+    }
+
+    /// `back_bwd` with device-resident params + activation.
+    pub fn back_bwd_b(
+        &mut self,
+        k: usize,
+        params_back: &DeviceTensors,
+        act: &xla::PjRtBuffer,
+        g_logits: &[f32],
+    ) -> Result<(Vec<Vec<f32>>, Vec<f32>)> {
+        anyhow::ensure!(params_back.layer_lo == k, "back params must start at layer k");
+        let b = self.meta.train_batch;
+        let gb = self.upload_f32(&[b, self.meta.classes], g_logits)?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = params_back.bufs.iter().collect();
+        inputs.push(act);
+        inputs.push(&gb);
+        let mut out = self.run(&format!("back_bwd_{k}"), &inputs)?;
+        let g_act = out.pop().expect("back_bwd g_act");
+        Ok((out, g_act))
+    }
+
+    /// Front backward at split `k`: grads for layers `0..k`.
+    pub fn front_bwd(
+        &mut self,
+        k: usize,
+        params_front: &[Vec<f32>],
+        x: &[f32],
+        g_act: &[f32],
+    ) -> Result<Vec<Vec<f32>>> {
+        let dev = self.upload_params(params_front, 0)?;
+        let xb = self.upload_f32(&[self.meta.train_batch, self.meta.input_dim], x)?;
+        self.front_bwd_b(k, &dev, &xb, g_act)
+    }
+
+    /// `front_bwd` with device-resident params + input.
+    pub fn front_bwd_b(
+        &mut self,
+        k: usize,
+        params_front: &DeviceTensors,
+        x: &xla::PjRtBuffer,
+        g_act: &[f32],
+    ) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(params_front.layer_lo == 0, "front params must start at layer 0");
+        let b = self.meta.train_batch;
+        let gb = self.upload_f32(&[b, self.meta.hidden], g_act)?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = params_front.bufs.iter().collect();
+        inputs.push(x);
+        inputs.push(&gb);
+        self.run(&format!("front_bwd_{k}"), &inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests require `make artifacts` to have produced `artifacts/`;
+    //! they are skipped (cleanly) otherwise so `cargo test` works pre-AOT.
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            Some(Engine::load("artifacts").expect("engine"))
+        } else {
+            eprintln!("skipping runtime test: artifacts/ not built");
+            None
+        }
+    }
+
+    #[test]
+    fn init_params_shapes_match_manifest() {
+        let Some(mut e) = engine() else { return };
+        let p = e.init_params(7).unwrap();
+        assert_eq!(p.len(), e.meta().n_tensors());
+        for (i, t) in p.iter().enumerate() {
+            assert_eq!(t.len(), e.meta().tensor_elems(i), "tensor {i}");
+        }
+        // deterministic in the seed
+        let p2 = e.init_params(7).unwrap();
+        assert_eq!(p[0], p2[0]);
+        let p3 = e.init_params(8).unwrap();
+        assert_ne!(p[0], p3[0]);
+    }
+
+    #[test]
+    fn split_fwd_equals_full_fwd_loss() {
+        // front_fwd ∘ back_fwd must reproduce full_step's loss for every k.
+        let Some(mut e) = engine() else { return };
+        let meta = e.meta().clone();
+        let params = e.init_params(1).unwrap();
+        let b = meta.train_batch;
+        let x: Vec<f32> = (0..b * meta.input_dim)
+            .map(|i| ((i * 2654435761usize) % 1000) as f32 / 500.0 - 1.0)
+            .collect();
+        let mut y = vec![0f32; b * meta.classes];
+        for r in 0..b {
+            y[r * meta.classes + r % meta.classes] = 1.0;
+        }
+        let (_, loss_full) = e.full_step(&params, &x, &y).unwrap();
+        for k in 1..meta.layers {
+            let pf = params[..2 * k].to_vec();
+            let pb = params[2 * k..].to_vec();
+            let act = e.front_fwd(k, &pf, &x).unwrap();
+            let logits = e.back_fwd(k, &pb, &act).unwrap();
+            let (loss_split, _) = e.loss_grad(&logits, &y).unwrap();
+            assert!(
+                (loss_full - loss_split).abs() < 1e-4,
+                "k={k}: {loss_full} vs {loss_split}"
+            );
+        }
+    }
+
+    #[test]
+    fn split_grads_equal_full_grads() {
+        let Some(mut e) = engine() else { return };
+        let meta = e.meta().clone();
+        let params = e.init_params(2).unwrap();
+        let b = meta.train_batch;
+        let x: Vec<f32> = (0..b * meta.input_dim)
+            .map(|i| (((i * 131) % 97) as f32 / 48.5) - 1.0)
+            .collect();
+        let mut y = vec![0f32; b * meta.classes];
+        for r in 0..b {
+            y[r * meta.classes + (r * 3) % meta.classes] = 1.0;
+        }
+        let (g_full, _) = e.full_step(&params, &x, &y).unwrap();
+        let k = meta.layers / 2;
+        let pf = params[..2 * k].to_vec();
+        let pb = params[2 * k..].to_vec();
+        let act = e.front_fwd(k, &pf, &x).unwrap();
+        let logits = e.back_fwd(k, &pb, &act).unwrap();
+        let (_, g_logits) = e.loss_grad(&logits, &y).unwrap();
+        let (g_back, g_act) = e.back_bwd(k, &pb, &act, &g_logits).unwrap();
+        let g_front = e.front_bwd(k, &pf, &x, &g_act).unwrap();
+        assert_eq!(g_front.len(), 2 * k);
+        assert_eq!(g_back.len(), 2 * (meta.layers - k));
+        let check = |a: &[f32], b: &[f32], what: &str| {
+            let max_err = a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0f32, f32::max);
+            assert!(max_err < 1e-3, "{what}: max err {max_err}");
+        };
+        for (i, g) in g_front.iter().enumerate() {
+            check(g, &g_full[i], &format!("front tensor {i}"));
+        }
+        for (i, g) in g_back.iter().enumerate() {
+            check(g, &g_full[2 * k + i], &format!("back tensor {i}"));
+        }
+    }
+
+    #[test]
+    fn buffer_reuse_matches_fresh_uploads() {
+        // The *_b fast path (shared device params/input) must compute exactly
+        // the same numbers as the slice-based convenience path.
+        let Some(mut e) = engine() else { return };
+        let meta = e.meta().clone();
+        let params = e.init_params(4).unwrap();
+        let k = 2;
+        let pf = params[..2 * k].to_vec();
+        let b = meta.train_batch;
+        let x = vec![0.25f32; b * meta.input_dim];
+        let slow = e.front_fwd(k, &pf, &x).unwrap();
+        let dev = e.upload_params(&pf, 0).unwrap();
+        let xb = e.upload_f32(&[b, meta.input_dim], &x).unwrap();
+        let fast = e.front_fwd_b(k, &dev, &xb).unwrap();
+        assert_eq!(slow, fast);
+        // reuse the same buffers a second time
+        let fast2 = e.front_fwd_b(k, &dev, &xb).unwrap();
+        assert_eq!(fast, fast2);
+    }
+
+    #[test]
+    fn no_memory_leak_in_exec_loop() {
+        // Regression for the crate's literal-execute leak (~5 MB/step): 120
+        // full_steps must not grow RSS by more than ~80 MB.
+        let Some(mut e) = engine() else { return };
+        let meta = e.meta().clone();
+        let params = e.init_params(1).unwrap();
+        let b = meta.train_batch;
+        let x = vec![0.1f32; b * meta.input_dim];
+        let y = vec![0f32; b * meta.classes];
+        let rss = || -> f64 {
+            let s = std::fs::read_to_string("/proc/self/status").unwrap_or_default();
+            s.lines()
+                .find(|l| l.starts_with("VmRSS"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|v| v.parse::<f64>().ok())
+                .unwrap_or(0.0)
+                / 1024.0
+        };
+        // warm (first exec compiles + allocates arenas)
+        for _ in 0..10 {
+            let _ = e.full_step(&params, &x, &y).unwrap();
+        }
+        let before = rss();
+        for _ in 0..120 {
+            let _ = e.full_step(&params, &x, &y).unwrap();
+        }
+        let grown = rss() - before;
+        assert!(grown < 80.0, "RSS grew {grown:.0} MB over 120 steps — leak?");
+    }
+
+    #[test]
+    fn eval_batch_counts_plausible() {
+        let Some(mut e) = engine() else { return };
+        let meta = e.meta().clone();
+        let params = e.init_params(3).unwrap();
+        let b = meta.eval_batch;
+        let x = vec![0.1f32; b * meta.input_dim];
+        let mut y = vec![0f32; b * meta.classes];
+        for r in 0..b / 2 {
+            // half the rows labeled, half padding
+            y[r * meta.classes] = 1.0;
+        }
+        let (loss_sum, n_correct, n_rows) = e.eval_batch(&params, &x, &y).unwrap();
+        assert_eq!(n_rows, (b / 2) as f32);
+        assert!(n_correct <= n_rows);
+        assert!(loss_sum.is_finite() && loss_sum >= 0.0);
+    }
+
+    #[test]
+    fn run_rejects_wrong_arity() {
+        let Some(mut e) = engine() else { return };
+        assert!(e.run("loss_grad", &[]).is_err());
+    }
+
+    #[test]
+    fn upload_f32_shape_mismatch_errors() {
+        let Some(e) = engine() else { return };
+        assert!(e.upload_f32(&[2, 3], &[0.0; 5]).is_err());
+        assert!(e.upload_f32(&[2, 3], &[0.0; 6]).is_ok());
+    }
+
+    #[test]
+    fn exec_counts_track() {
+        let Some(mut e) = engine() else { return };
+        let before = e.total_execs();
+        let _ = e.init_params(9).unwrap();
+        assert_eq!(e.total_execs(), before + 1);
+        assert_eq!(e.exec_counts()["init_params"], 1);
+    }
+}

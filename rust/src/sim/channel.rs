@@ -1,0 +1,158 @@
+//! OFDM wireless channel model — eq. (3) of the paper.
+//!
+//! ```text
+//!   r_ij = B · log2(1 + P·h_ij / σ²),     h_ij = h0 · (ζ0 / ‖p_i − p_j‖)^θ
+//! ```
+//!
+//! The paper deliberately ignores interference (OFDM orthogonality), so links
+//! are independent and a static rate matrix fully describes the network.
+
+use super::geometry::Pos;
+use crate::config::ChannelConfig;
+
+/// Instantiated channel model.
+#[derive(Clone, Debug)]
+pub struct Channel {
+    cfg: ChannelConfig,
+}
+
+impl Channel {
+    pub fn new(cfg: ChannelConfig) -> Self {
+        Channel { cfg }
+    }
+
+    pub fn config(&self) -> &ChannelConfig {
+        &self.cfg
+    }
+
+    /// Channel gain `h` at distance `d` meters.
+    ///
+    /// Distances below the reference distance `ζ0` are clamped to `ζ0` — the
+    /// far-field path-loss law diverges as d→0 and the paper's clients are
+    /// physically separated devices.
+    pub fn gain(&self, dist_m: f64) -> f64 {
+        let d = dist_m.max(self.cfg.ref_dist_m);
+        self.cfg.ref_gain * (self.cfg.ref_dist_m / d).powf(self.cfg.pathloss_exp)
+    }
+
+    /// Shannon rate in bits/s between two points at distance `d`.
+    pub fn rate_at(&self, dist_m: f64) -> f64 {
+        let snr = self.cfg.tx_power_w * self.gain(dist_m) / self.cfg.noise_w;
+        self.cfg.bandwidth_hz * (1.0 + snr).log2()
+    }
+
+    /// Rate between two positions.
+    pub fn rate(&self, a: &Pos, b: &Pos) -> f64 {
+        self.rate_at(a.dist(b))
+    }
+
+    /// Rate between a client and the central server.
+    pub fn rate_to_server(&self, p: &Pos) -> f64 {
+        self.rate_at(p.dist_to_server())
+    }
+
+    /// Transmission time for `bytes` over the link between `a` and `b`.
+    pub fn tx_time(&self, a: &Pos, b: &Pos, bytes: f64) -> f64 {
+        bytes * 8.0 / self.rate(a, b)
+    }
+
+    /// Full pairwise rate matrix (bits/s); diagonal is +∞ (no self-link cost).
+    pub fn rate_matrix(&self, positions: &[Pos]) -> Vec<Vec<f64>> {
+        let n = positions.len();
+        let mut m = vec![vec![f64::INFINITY; n]; n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let r = self.rate(&positions[i], &positions[j]);
+                m[i][j] = r;
+                m[j][i] = r;
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ch() -> Channel {
+        Channel::new(ChannelConfig::default())
+    }
+
+    #[test]
+    fn rate_decreases_with_distance() {
+        let c = ch();
+        let r1 = c.rate_at(5.0);
+        let r2 = c.rate_at(20.0);
+        let r3 = c.rate_at(80.0);
+        assert!(r1 > r2 && r2 > r3, "{r1} {r2} {r3}");
+        assert!(r3 > 0.0);
+    }
+
+    #[test]
+    fn gain_clamped_below_ref_dist() {
+        let c = ch();
+        assert_eq!(c.gain(0.0), c.gain(1.0));
+        assert_eq!(c.gain(0.5), c.gain(1.0));
+        assert!(c.gain(2.0) < c.gain(1.0));
+    }
+
+    #[test]
+    fn pathloss_exponent_law() {
+        let c = ch();
+        // h(2ζ0)/h(ζ0) = 2^{-θ}
+        let ratio = c.gain(2.0) / c.gain(1.0);
+        let expected = 2f64.powf(-ChannelConfig::default().pathloss_exp);
+        assert!((ratio - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_scale_rates_plausible() {
+        // At 50 m with the paper's B/P/σ² and the calibrated h0 (−35 dB), θ=3:
+        // SNR = P·h0·(1/50)³/σ² → r = B·log2(1+SNR), in the tens of Mb/s.
+        let cfg = ChannelConfig::default();
+        let c = ch();
+        let r = c.rate_at(50.0);
+        let snr = cfg.tx_power_w * cfg.ref_gain * (1.0 / 50f64).powi(3) / cfg.noise_w;
+        assert!((r - cfg.bandwidth_hz * (1.0 + snr).log2()).abs() / r < 1e-9, "r={r}");
+        assert!(r > 1e7 && r < 1e9, "r={r}");
+    }
+
+    #[test]
+    fn shannon_formula_exact() {
+        let c = ch();
+        let d = 10.0;
+        let snr = 1.0 * c.gain(d) / 1e-9;
+        assert!((c.rate_at(d) - 64e6 * (1.0 + snr).log2()).abs() < 1.0);
+    }
+
+    #[test]
+    fn tx_time_scales_linearly_with_bytes() {
+        let c = ch();
+        let a = Pos { x: 0.0, y: 0.0 };
+        let b = Pos { x: 30.0, y: 0.0 };
+        let t1 = c.tx_time(&a, &b, 1e6);
+        let t2 = c.tx_time(&a, &b, 2e6);
+        assert!((t2 / t1 - 2.0).abs() < 1e-12);
+        assert!(t1 > 0.0);
+    }
+
+    #[test]
+    fn rate_matrix_symmetric_inf_diag() {
+        let c = ch();
+        let pts = vec![
+            Pos { x: 0.0, y: 0.0 },
+            Pos { x: 10.0, y: 0.0 },
+            Pos { x: 0.0, y: 25.0 },
+        ];
+        let m = c.rate_matrix(&pts);
+        for i in 0..3 {
+            assert!(m[i][i].is_infinite());
+            for j in 0..3 {
+                assert_eq!(m[i][j], m[j][i]);
+            }
+        }
+        // Nearer pair has the higher rate.
+        assert!(m[0][1] > m[0][2]);
+    }
+}

@@ -1,0 +1,144 @@
+//! Client compute-heterogeneity model.
+//!
+//! The paper characterizes each client by a CPU frequency `f_i` (uniform in
+//! [0.1, 2] GHz) and charges a layer `F/f_i` seconds where `F` is "the average
+//! number of CPU cycles required to update a neural layer once". We refine `F`
+//! to per-layer granularity: `cycles(layer) = cycles_per_flop · FLOPs(layer)`
+//! with a single global `cycles_per_flop` calibration constant
+//! (`ComputeConfig::cycles_per_flop`) — orderings never depend on it.
+
+use crate::config::ComputeConfig;
+use crate::util::rng::Rng;
+
+/// One client's static compute/data description (the `(f_i, |D_i|)` state the
+/// paper's clients report to the server at initialization).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClientResources {
+    /// CPU frequency in Hz.
+    pub freq_hz: f64,
+    /// Local dataset size `|D_i|`.
+    pub n_samples: usize,
+}
+
+/// Sample per-client CPU frequencies (uniform, per the paper).
+pub fn sample_frequencies(rng: &mut Rng, n: usize, cfg: &ComputeConfig) -> Vec<f64> {
+    (0..n)
+        .map(|_| rng.range_f64(cfg.f_min_ghz * 1e9, cfg.f_max_ghz * 1e9))
+        .collect()
+}
+
+/// Seconds to execute `flops` FLOPs on a `freq_hz` device.
+#[inline]
+pub fn compute_time(flops: f64, freq_hz: f64, cfg: &ComputeConfig) -> f64 {
+    debug_assert!(freq_hz > 0.0);
+    flops * cfg.cycles_per_flop / freq_hz
+}
+
+/// FedAvg aggregation weight `a_i = |D_i| / Σ|D_j|` (paper Sec. II-A.1).
+pub fn aggregation_weights(resources: &[ClientResources]) -> Vec<f64> {
+    let total: usize = resources.iter().map(|r| r.n_samples).sum();
+    assert!(total > 0, "no samples across fleet");
+    resources
+        .iter()
+        .map(|r| r.n_samples as f64 / total as f64)
+        .collect()
+}
+
+/// Split-point rule (paper Sec. II-A.2): `L_i = ⌊f_i/(f_i+f_j)·W⌋`, clamped to
+/// `[1, W-1]` so both sides hold at least one layer, and `L_j = W − L_i`.
+///
+/// The clamp departs from the bare floor only in the extreme-imbalance corner
+/// (`f_i/(f_i+f_j) < 1/W`), where the paper's formula would assign zero layers
+/// — undefined for split learning (the input layer must stay with the data
+/// owner for privacy, which the paper itself requires).
+pub fn split_lengths(f_i: f64, f_j: f64, w: usize) -> (usize, usize) {
+    assert!(w >= 2, "need at least 2 layers to split");
+    assert!(f_i > 0.0 && f_j > 0.0);
+    let raw = (f_i / (f_i + f_j) * w as f64).floor() as usize;
+    let l_i = raw.clamp(1, w - 1);
+    (l_i, w - l_i)
+}
+
+/// Propagation-time balance diagnostic: `|L_i/f_i − L_j/f_j|` relative to the
+/// slower side (0 = perfectly balanced). Used in tests + the pairing ablation.
+pub fn split_imbalance(f_i: f64, f_j: f64, w: usize) -> f64 {
+    let (l_i, l_j) = split_lengths(f_i, f_j, w);
+    let t_i = l_i as f64 / f_i;
+    let t_j = l_j as f64 / f_j;
+    (t_i - t_j).abs() / t_i.max(t_j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frequencies_in_configured_range() {
+        let cfg = ComputeConfig::default();
+        let mut rng = Rng::new(1);
+        let fs = sample_frequencies(&mut rng, 1000, &cfg);
+        assert!(fs.iter().all(|&f| (0.1e9..2.0e9).contains(&f)));
+        // spread sanity: both halves of the range populated
+        assert!(fs.iter().filter(|&&f| f < 1.05e9).count() > 300);
+        assert!(fs.iter().filter(|&&f| f >= 1.05e9).count() > 300);
+    }
+
+    #[test]
+    fn compute_time_scales() {
+        let cfg = ComputeConfig {
+            cycles_per_flop: 1.0,
+            ..Default::default()
+        };
+        assert_eq!(compute_time(1e9, 1e9, &cfg), 1.0);
+        assert_eq!(compute_time(1e9, 2e9, &cfg), 0.5);
+        assert_eq!(compute_time(2e9, 1e9, &cfg), 2.0);
+    }
+
+    #[test]
+    fn aggregation_weights_normalized_and_proportional() {
+        let res = [
+            ClientResources { freq_hz: 1e9, n_samples: 100 },
+            ClientResources { freq_hz: 1e9, n_samples: 300 },
+        ];
+        let w = aggregation_weights(&res);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((w[1] / w[0] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn split_lengths_paper_formula() {
+        // f_i = f_j → even split.
+        assert_eq!(split_lengths(1e9, 1e9, 8), (4, 4));
+        // Paper's Fig. 1 example shape: W=3, slow vs fast.
+        let (li, lj) = split_lengths(1.0, 2.0, 3);
+        assert_eq!((li, lj), (1, 2));
+        // Sum always W.
+        for &(fi, fj, w) in &[(0.1e9, 2e9, 8), (1.7e9, 0.3e9, 10), (1e9, 1e9, 2)] {
+            let (a, b) = split_lengths(fi, fj, w);
+            assert_eq!(a + b, w);
+            assert!(a >= 1 && b >= 1);
+        }
+    }
+
+    #[test]
+    fn split_clamps_extreme_imbalance() {
+        // f_i/(f_i+f_j) < 1/W would floor to 0 — must clamp to 1.
+        let (li, lj) = split_lengths(0.01e9, 2e9, 8);
+        assert_eq!(li, 1);
+        assert_eq!(lj, 7);
+    }
+
+    #[test]
+    fn faster_client_gets_more_layers() {
+        let (li, lj) = split_lengths(1.9e9, 0.2e9, 10);
+        assert!(li > lj, "{li} {lj}");
+    }
+
+    #[test]
+    fn balance_better_than_no_split() {
+        // Split-time balance: for a 10x freq gap the paper's rule should be
+        // far closer to equal than assigning all layers to the slow side.
+        let imb = split_imbalance(0.2e9, 2e9, 16);
+        assert!(imb < 0.5, "imb={imb}");
+    }
+}

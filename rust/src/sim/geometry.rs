@@ -1,0 +1,113 @@
+//! Client placement geometry: the paper's "20 clients distributed randomly in
+//! a 50 m radius circular area" with the aggregation server at the center.
+
+use crate::util::rng::Rng;
+
+/// A 2-D position in meters; the server sits at the origin.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Pos {
+    pub x: f64,
+    pub y: f64,
+}
+
+impl Pos {
+    pub const ORIGIN: Pos = Pos { x: 0.0, y: 0.0 };
+
+    pub fn dist(&self, other: &Pos) -> f64 {
+        let dx = self.x - other.x;
+        let dy = self.y - other.y;
+        (dx * dx + dy * dy).sqrt()
+    }
+
+    /// Distance to the aggregation server (the area center).
+    pub fn dist_to_server(&self) -> f64 {
+        self.dist(&Pos::ORIGIN)
+    }
+}
+
+/// Sample `n` positions uniformly over a disk of radius `radius_m`.
+///
+/// Uses the area-correct transform `r = R·√u` (naive `r = R·u` over-samples
+/// the center — tested below).
+pub fn place_uniform_disk(rng: &mut Rng, n: usize, radius_m: f64) -> Vec<Pos> {
+    (0..n)
+        .map(|_| {
+            let r = radius_m * rng.f64().sqrt();
+            let theta = 2.0 * std::f64::consts::PI * rng.f64();
+            Pos {
+                x: r * theta.cos(),
+                y: r * theta.sin(),
+            }
+        })
+        .collect()
+}
+
+/// Full pairwise distance matrix (symmetric, zero diagonal).
+pub fn distance_matrix(positions: &[Pos]) -> Vec<Vec<f64>> {
+    let n = positions.len();
+    let mut m = vec![vec![0.0; n]; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d = positions[i].dist(&positions[j]);
+            m[i][j] = d;
+            m[j][i] = d;
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distances_basic() {
+        let a = Pos { x: 0.0, y: 0.0 };
+        let b = Pos { x: 3.0, y: 4.0 };
+        assert!((a.dist(&b) - 5.0).abs() < 1e-12);
+        assert!((b.dist_to_server() - 5.0).abs() < 1e-12);
+        assert_eq!(a.dist(&a), 0.0);
+    }
+
+    #[test]
+    fn placement_within_radius() {
+        let mut rng = Rng::new(1);
+        let pts = place_uniform_disk(&mut rng, 500, 50.0);
+        assert_eq!(pts.len(), 500);
+        assert!(pts.iter().all(|p| p.dist_to_server() <= 50.0 + 1e-9));
+    }
+
+    #[test]
+    fn placement_is_area_uniform() {
+        // Under area-uniformity, P(r <= R/2) = 1/4.
+        let mut rng = Rng::new(2);
+        let n = 20_000;
+        let pts = place_uniform_disk(&mut rng, n, 1.0);
+        let inner = pts.iter().filter(|p| p.dist_to_server() <= 0.5).count();
+        let frac = inner as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn distance_matrix_symmetric_zero_diag() {
+        let mut rng = Rng::new(3);
+        let pts = place_uniform_disk(&mut rng, 10, 50.0);
+        let m = distance_matrix(&pts);
+        for i in 0..10 {
+            assert_eq!(m[i][i], 0.0);
+            for j in 0..10 {
+                assert!((m[i][j] - m[j][i]).abs() < 1e-12);
+                if i != j {
+                    assert!(m[i][j] > 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_placement() {
+        let a = place_uniform_disk(&mut Rng::new(7), 5, 50.0);
+        let b = place_uniform_disk(&mut Rng::new(7), 5, 50.0);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,607 @@
+//! Per-round training-latency models for all four algorithms (paper Tables I
+//! and II), built on the discrete-event engine in [`super::des`].
+//!
+//! Entities are job-shop resources: every client CPU, every directional radio
+//! link, and (for SL/SplitFed) the central server CPU. A training *flow* — one
+//! client's sequence of mini-batch steps — is a [`Chain`] whose stages
+//! alternate compute and transmission, so pipeline overlap, link sharing and
+//! server queueing all emerge from the simulation rather than being assumed.
+//!
+//! Per-batch stage decomposition (`3×fwd` total training FLOPs, split 1×
+//! forward / 2× backward — see [`super::profile::BWD_FLOPS_FACTOR`]):
+//!
+//! * **FedPairing**, direction "data of `c_i`" inside pair `(c_i, c_j)`:
+//!   `cpu_i` front-fwd → `link_ij` (activation + logit-grad) → `cpu_j`
+//!   back-fwd+bwd → `link_ji` (logits + activation-grad) → `cpu_i` front-bwd.
+//!   Both directions run concurrently on the same two CPUs and two links.
+//! * **Vanilla FL**: `cpu_i` full fwd+bwd per batch (no peer traffic).
+//! * **Vanilla SL**: same stage shape as FedPairing but the back half lives on
+//!   the server; clients take sessions *sequentially* (the defining property
+//!   of SL), and the client-side model hops client→client between sessions.
+//! * **SplitFed**: SL's stage shape, all clients *concurrently*, one shared
+//!   server CPU — server queueing contention emerges from FIFO service.
+
+use super::channel::Channel;
+use super::compute::{compute_time, split_lengths, ClientResources};
+use super::des::{simulate, Chain};
+use super::geometry::{place_uniform_disk, Pos};
+use super::profile::{ModelProfile, BWD_FLOPS_FACTOR};
+use crate::config::{ComputeConfig, ExperimentConfig};
+use crate::util::rng::Rng;
+
+/// The sampled fleet: everything static about the clients.
+#[derive(Clone, Debug)]
+pub struct Fleet {
+    pub positions: Vec<Pos>,
+    pub freqs_hz: Vec<f64>,
+    pub n_samples: Vec<usize>,
+}
+
+impl Fleet {
+    /// Sample placement + CPU frequencies per the config (paper Sec. IV-A).
+    pub fn sample(cfg: &ExperimentConfig, rng: &mut Rng) -> Fleet {
+        let positions = place_uniform_disk(rng, cfg.n_clients, cfg.area_radius_m);
+        let freqs_hz = super::compute::sample_frequencies(rng, cfg.n_clients, &cfg.compute);
+        Fleet {
+            positions,
+            freqs_hz,
+            n_samples: vec![cfg.samples_per_client; cfg.n_clients],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.freqs_hz.len()
+    }
+
+    pub fn resources(&self) -> Vec<ClientResources> {
+        self.freqs_hz
+            .iter()
+            .zip(&self.n_samples)
+            .map(|(&f, &n)| ClientResources {
+                freq_hz: f,
+                n_samples: n,
+            })
+            .collect()
+    }
+}
+
+/// Local-training schedule for one round.
+#[derive(Clone, Copy, Debug)]
+pub struct Schedule {
+    pub batch_size: usize,
+    pub epochs: usize,
+}
+
+impl Schedule {
+    /// Mini-batch steps one client performs per round.
+    pub fn batches(&self, n_samples: usize) -> usize {
+        assert!(self.batch_size > 0);
+        self.epochs * n_samples.div_ceil(self.batch_size)
+    }
+}
+
+/// Round-time report with a compute/comm breakdown.
+#[derive(Clone, Debug)]
+pub struct RoundTime {
+    /// Wall-clock seconds for the round (all entities done).
+    pub total_s: f64,
+    /// Busiest CPU's busy seconds (compute pressure).
+    pub max_cpu_busy_s: f64,
+    /// Busiest link's busy seconds (comm pressure).
+    pub max_link_busy_s: f64,
+    /// Per-flow finish times (diagnostic).
+    pub flow_finish_s: Vec<f64>,
+}
+
+/// Bytes of one f32 logits row set for a batch.
+fn logits_bytes(classes: usize, batch: usize) -> f64 {
+    (classes * batch * 4) as f64
+}
+
+/// Number of label classes assumed for logits traffic (CIFAR-10).
+pub const CLASSES: usize = 10;
+
+// ---------------------------------------------------------------------------
+// FedPairing
+// ---------------------------------------------------------------------------
+
+/// One direction's per-batch stages inside a pair or a client↔server split.
+///
+/// `front` runs on `cpu_front`, `back` on `cpu_back`; `split` is the unit
+/// index where the model is cut (front = `[0, split)`).
+#[allow(clippy::too_many_arguments)]
+fn push_split_batches(
+    chain: &mut Chain,
+    profile: &ModelProfile,
+    comp: &ComputeConfig,
+    n_batches: usize,
+    batch: usize,
+    split: usize,
+    cpu_front: usize,
+    f_front_hz: f64,
+    cpu_back: usize,
+    f_back_hz: f64,
+    link_fwd: usize,
+    link_bwd: usize,
+    rate_bps: f64,
+) {
+    let w = profile.w();
+    let front_fwd_flops = batch as f64 * profile.fwd_flops(0, split);
+    let back_flops = batch as f64 * profile.train_flops(split, w);
+    let front_bwd_flops = front_fwd_flops * BWD_FLOPS_FACTOR;
+    let act_bytes = batch as f64 * profile.act_bytes_at(split);
+    // Faithful label-private protocol (DESIGN.md §2): activation + logit-grad
+    // travel front→back; logits + activation-grad travel back→front.
+    let up_bytes = act_bytes + logits_bytes(CLASSES, batch);
+    let down_bytes = logits_bytes(CLASSES, batch) + act_bytes;
+    let t_up = up_bytes * 8.0 / rate_bps;
+    let t_down = down_bytes * 8.0 / rate_bps;
+    for _ in 0..n_batches {
+        chain.push(cpu_front, compute_time(front_fwd_flops, f_front_hz, comp));
+        chain.push(link_fwd, t_up);
+        chain.push(cpu_back, compute_time(back_flops, f_back_hz, comp));
+        chain.push(link_bwd, t_down);
+        chain.push(cpu_front, compute_time(front_bwd_flops, f_front_hz, comp));
+    }
+}
+
+/// Model upload time to the central server for client `i`.
+fn upload_time(fleet: &Fleet, channel: &Channel, i: usize, bytes: f64) -> f64 {
+    bytes * 8.0 / channel.rate_to_server(&fleet.positions[i])
+}
+
+/// FedPairing round time under a given pairing (paper Sec. II-A).
+///
+/// Pairs are physically independent (own CPUs + own OFDM sub-bands), so each
+/// pair is simulated as its own 4-resource job shop; the round ends when the
+/// slowest pair has finished local training and uploaded its two models.
+pub fn fedpairing_round(
+    fleet: &Fleet,
+    pairs: &[(usize, usize)],
+    profile: &ModelProfile,
+    sched: &Schedule,
+    channel: &Channel,
+    comp: &ComputeConfig,
+    include_upload: bool,
+) -> RoundTime {
+    let w = profile.w();
+    let mut total = 0.0f64;
+    let mut max_cpu = 0.0f64;
+    let mut max_link = 0.0f64;
+    let mut finishes = Vec::with_capacity(pairs.len() * 2);
+    for &(i, j) in pairs {
+        let (f_i, f_j) = (fleet.freqs_hz[i], fleet.freqs_hz[j]);
+        let (l_i, l_j) = split_lengths(f_i, f_j, w);
+        let rate = channel.rate(&fleet.positions[i], &fleet.positions[j]);
+        // Local resources: 0 = cpu_i, 1 = cpu_j, 2 = link i→j, 3 = link j→i.
+        let mut dir_i = Chain::new();
+        push_split_batches(
+            &mut dir_i,
+            profile,
+            comp,
+            sched.batches(fleet.n_samples[i]),
+            sched.batch_size,
+            l_i,
+            0,
+            f_i,
+            1,
+            f_j,
+            2,
+            3,
+            rate,
+        );
+        let mut dir_j = Chain::new();
+        push_split_batches(
+            &mut dir_j,
+            profile,
+            comp,
+            sched.batches(fleet.n_samples[j]),
+            sched.batch_size,
+            l_j,
+            1,
+            f_j,
+            0,
+            f_i,
+            3,
+            2,
+            rate,
+        );
+        let rep = simulate(4, &[dir_i, dir_j]);
+        let mut pair_total = rep.makespan;
+        if include_upload {
+            let up = upload_time(fleet, channel, i, profile.param_bytes())
+                .max(upload_time(fleet, channel, j, profile.param_bytes()));
+            pair_total += up;
+        }
+        total = total.max(pair_total);
+        max_cpu = max_cpu.max(rep.resource_busy[0]).max(rep.resource_busy[1]);
+        max_link = max_link.max(rep.resource_busy[2]).max(rep.resource_busy[3]);
+        finishes.extend_from_slice(&rep.chain_finish);
+    }
+    RoundTime {
+        total_s: total,
+        max_cpu_busy_s: max_cpu,
+        max_link_busy_s: max_link,
+        flow_finish_s: finishes,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Vanilla FL (FedAvg)
+// ---------------------------------------------------------------------------
+
+/// Vanilla-FL round: every client trains the full model locally; the round is
+/// gated by the slowest client (the straggler effect the paper targets).
+pub fn fl_round(
+    fleet: &Fleet,
+    profile: &ModelProfile,
+    sched: &Schedule,
+    channel: &Channel,
+    comp: &ComputeConfig,
+    include_upload: bool,
+) -> RoundTime {
+    let w = profile.w();
+    let mut finishes = Vec::with_capacity(fleet.n());
+    let mut max_cpu = 0.0f64;
+    for i in 0..fleet.n() {
+        let nb = sched.batches(fleet.n_samples[i]);
+        let flops = nb as f64 * sched.batch_size as f64 * profile.train_flops(0, w);
+        let mut t = compute_time(flops, fleet.freqs_hz[i], comp);
+        max_cpu = max_cpu.max(t);
+        if include_upload {
+            t += upload_time(fleet, channel, i, profile.param_bytes());
+        }
+        finishes.push(t);
+    }
+    RoundTime {
+        total_s: finishes.iter().cloned().fold(0.0, f64::max),
+        max_cpu_busy_s: max_cpu,
+        max_link_busy_s: 0.0,
+        flow_finish_s: finishes,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Vanilla SL
+// ---------------------------------------------------------------------------
+
+/// Vanilla-SL round: clients hold layers `[0, cut)`, the server holds the
+/// rest; clients run **sequentially**, relaying the client-side model to the
+/// next client between sessions (Gupta & Raskar 2018).
+#[allow(clippy::too_many_arguments)]
+pub fn sl_round(
+    fleet: &Fleet,
+    profile: &ModelProfile,
+    sched: &Schedule,
+    channel: &Channel,
+    comp: &ComputeConfig,
+    cut: usize,
+    server_freq_hz: f64,
+) -> RoundTime {
+    assert!(cut >= 1 && cut < profile.w(), "cut {cut} out of range");
+    let mut total = 0.0f64;
+    let mut max_cpu = 0.0f64;
+    let mut max_link = 0.0f64;
+    let mut finishes = Vec::with_capacity(fleet.n());
+    for i in 0..fleet.n() {
+        let rate = channel.rate_to_server(&fleet.positions[i]);
+        // Local resources: 0 = cpu_i, 1 = server, 2 = uplink, 3 = downlink.
+        let mut chain = Chain::new();
+        push_split_batches(
+            &mut chain,
+            profile,
+            comp,
+            sched.batches(fleet.n_samples[i]),
+            sched.batch_size,
+            cut,
+            0,
+            fleet.freqs_hz[i],
+            1,
+            server_freq_hz,
+            2,
+            3,
+            rate,
+        );
+        let rep = simulate(4, &[chain]);
+        let mut session = rep.makespan;
+        // Client-model relay to the next client in the ring.
+        let next = (i + 1) % fleet.n();
+        if fleet.n() > 1 {
+            let front_bytes = profile.params(0, cut) as f64 * 4.0;
+            session += front_bytes * 8.0
+                / channel.rate(&fleet.positions[i], &fleet.positions[next]);
+        }
+        total += session;
+        finishes.push(total);
+        max_cpu = max_cpu.max(rep.resource_busy[0]).max(rep.resource_busy[1]);
+        max_link = max_link.max(rep.resource_busy[2]).max(rep.resource_busy[3]);
+    }
+    RoundTime {
+        total_s: total,
+        max_cpu_busy_s: max_cpu,
+        max_link_busy_s: max_link,
+        flow_finish_s: finishes,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SplitFed
+// ---------------------------------------------------------------------------
+
+/// SplitFed round: SL's split, but all clients train **concurrently** against
+/// one shared server CPU (FIFO), followed by FedAvg of the client-side models
+/// (Thapa et al. 2022). Server queueing is the emergent bottleneck.
+#[allow(clippy::too_many_arguments)]
+pub fn splitfed_round(
+    fleet: &Fleet,
+    profile: &ModelProfile,
+    sched: &Schedule,
+    channel: &Channel,
+    comp: &ComputeConfig,
+    cut: usize,
+    server_freq_hz: f64,
+    include_upload: bool,
+) -> RoundTime {
+    assert!(cut >= 1 && cut < profile.w(), "cut {cut} out of range");
+    let n = fleet.n();
+    // Resources: 0..n = client CPUs, n = server CPU, n+1+2i / n+2+2i = links.
+    let server = n;
+    let mut chains = Vec::with_capacity(n);
+    for i in 0..n {
+        let rate = channel.rate_to_server(&fleet.positions[i]);
+        let up = n + 1 + 2 * i;
+        let down = n + 2 + 2 * i;
+        let mut chain = Chain::new();
+        push_split_batches(
+            &mut chain,
+            profile,
+            comp,
+            sched.batches(fleet.n_samples[i]),
+            sched.batch_size,
+            cut,
+            i,
+            fleet.freqs_hz[i],
+            server,
+            server_freq_hz,
+            up,
+            down,
+            rate,
+        );
+        chains.push(chain);
+    }
+    let rep = simulate(n + 1 + 2 * n, &chains);
+    let mut total = rep.makespan;
+    if include_upload {
+        // FedAvg sync of the client-side models.
+        let front_bytes = profile.params(0, cut) as f64 * 4.0;
+        let up = (0..n)
+            .map(|i| upload_time(fleet, channel, i, front_bytes))
+            .fold(0.0, f64::max);
+        total += up;
+    }
+    let max_cpu = rep.resource_busy[..=n].iter().cloned().fold(0.0, f64::max);
+    let max_link = rep.resource_busy[n + 1..]
+        .iter()
+        .cloned()
+        .fold(0.0, f64::max);
+    RoundTime {
+        total_s: total,
+        max_cpu_busy_s: max_cpu,
+        max_link_busy_s: max_link,
+        flow_finish_s: rep.chain_finish,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChannelConfig, ExperimentConfig};
+
+    fn setup() -> (Fleet, ModelProfile, Schedule, Channel, ComputeConfig) {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n_clients = 8;
+        cfg.samples_per_client = 64;
+        let mut rng = Rng::new(1);
+        let fleet = Fleet::sample(&cfg, &mut rng);
+        let profile = ModelProfile::resnet10_cifar();
+        let sched = Schedule {
+            batch_size: 32,
+            epochs: 1,
+        };
+        let channel = Channel::new(ChannelConfig::default());
+        (fleet, profile, sched, channel, cfg.compute)
+    }
+
+    fn pair_all(n: usize) -> Vec<(usize, usize)> {
+        (0..n / 2).map(|k| (2 * k, 2 * k + 1)).collect()
+    }
+
+    #[test]
+    fn fleet_sampling_matches_config() {
+        let cfg = ExperimentConfig::default();
+        let mut rng = Rng::new(3);
+        let fleet = Fleet::sample(&cfg, &mut rng);
+        assert_eq!(fleet.n(), 20);
+        assert!(fleet
+            .positions
+            .iter()
+            .all(|p| p.dist_to_server() <= cfg.area_radius_m));
+        assert!(fleet
+            .freqs_hz
+            .iter()
+            .all(|&f| (0.1e9..=2.0e9).contains(&f)));
+        assert!(fleet.n_samples.iter().all(|&s| s == 2500));
+    }
+
+    #[test]
+    fn schedule_batch_count() {
+        let s = Schedule {
+            batch_size: 32,
+            epochs: 2,
+        };
+        assert_eq!(s.batches(2500), 2 * 79); // ceil(2500/32) = 79
+        assert_eq!(s.batches(32), 2);
+        assert_eq!(s.batches(1), 2);
+    }
+
+    #[test]
+    fn fl_round_gated_by_slowest() {
+        let (fleet, profile, sched, channel, comp) = setup();
+        let rt = fl_round(&fleet, &profile, &sched, &channel, &comp, false);
+        let slowest = fleet
+            .freqs_hz
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+        let nb = sched.batches(64) as f64;
+        let expect =
+            nb * 32.0 * profile.train_flops(0, profile.w()) * comp.cycles_per_flop / slowest;
+        assert!((rt.total_s - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn fedpairing_beats_fl_on_heterogeneous_fleet() {
+        let (fleet, profile, sched, channel, comp) = setup();
+        // Pair fastest with slowest (greedy-like) by sorting indices by freq.
+        let mut idx: Vec<usize> = (0..fleet.n()).collect();
+        idx.sort_by(|&a, &b| fleet.freqs_hz[a].partial_cmp(&fleet.freqs_hz[b]).unwrap());
+        let pairs: Vec<(usize, usize)> = (0..fleet.n() / 2)
+            .map(|k| (idx[k], idx[fleet.n() - 1 - k]))
+            .collect();
+        let fp = fedpairing_round(&fleet, &pairs, &profile, &sched, &channel, &comp, false);
+        let fl = fl_round(&fleet, &profile, &sched, &channel, &comp, false);
+        assert!(
+            fp.total_s < fl.total_s,
+            "fedpairing {} !< fl {}",
+            fp.total_s,
+            fl.total_s
+        );
+    }
+
+    #[test]
+    fn fedpairing_makespan_at_least_busiest_resource() {
+        let (fleet, profile, sched, channel, comp) = setup();
+        let rt = fedpairing_round(
+            &fleet,
+            &pair_all(fleet.n()),
+            &profile,
+            &sched,
+            &channel,
+            &comp,
+            false,
+        );
+        assert!(rt.total_s >= rt.max_cpu_busy_s - 1e-9);
+        assert!(rt.total_s >= rt.max_link_busy_s - 1e-9);
+        assert!(rt.total_s > 0.0);
+    }
+
+    #[test]
+    fn upload_strictly_increases_round_time() {
+        let (fleet, profile, sched, channel, comp) = setup();
+        let pairs = pair_all(fleet.n());
+        let a = fedpairing_round(&fleet, &pairs, &profile, &sched, &channel, &comp, false);
+        let b = fedpairing_round(&fleet, &pairs, &profile, &sched, &channel, &comp, true);
+        assert!(b.total_s > a.total_s);
+        let a = fl_round(&fleet, &profile, &sched, &channel, &comp, false);
+        let b = fl_round(&fleet, &profile, &sched, &channel, &comp, true);
+        assert!(b.total_s > a.total_s);
+    }
+
+    #[test]
+    fn sl_sessions_are_sequential() {
+        let (fleet, profile, sched, channel, comp) = setup();
+        let rt = sl_round(&fleet, &profile, &sched, &channel, &comp, 1, 100e9);
+        // Finish times strictly increase client by client.
+        for w in rt.flow_finish_s.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+        // Total is the last finish.
+        assert!((rt.total_s - rt.flow_finish_s.last().unwrap()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn splitfed_parallel_beats_sl_sequential_same_cut() {
+        let (fleet, profile, sched, channel, comp) = setup();
+        let sl = sl_round(&fleet, &profile, &sched, &channel, &comp, 1, 100e9);
+        let sf = splitfed_round(&fleet, &profile, &sched, &channel, &comp, 1, 100e9, false);
+        assert!(
+            sf.total_s < sl.total_s,
+            "splitfed {} !< sl {}",
+            sf.total_s,
+            sl.total_s
+        );
+    }
+
+    #[test]
+    fn faster_server_never_slower() {
+        let (fleet, profile, sched, channel, comp) = setup();
+        let slow = splitfed_round(&fleet, &profile, &sched, &channel, &comp, 2, 5e9, false);
+        let fast = splitfed_round(&fleet, &profile, &sched, &channel, &comp, 2, 100e9, false);
+        assert!(fast.total_s <= slow.total_s + 1e-9);
+    }
+
+    #[test]
+    fn deeper_cut_shifts_load_to_clients() {
+        let (fleet, profile, sched, channel, comp) = setup();
+        // With a super-fast server, moving the cut deeper (more client work)
+        // slows the round down.
+        let shallow = splitfed_round(&fleet, &profile, &sched, &channel, &comp, 1, 1e12, false);
+        let deep = splitfed_round(&fleet, &profile, &sched, &channel, &comp, 4, 1e12, false);
+        assert!(deep.total_s > shallow.total_s);
+    }
+
+    #[test]
+    fn deterministic_round_times() {
+        let (fleet, profile, sched, channel, comp) = setup();
+        let pairs = pair_all(fleet.n());
+        let a = fedpairing_round(&fleet, &pairs, &profile, &sched, &channel, &comp, true);
+        let b = fedpairing_round(&fleet, &pairs, &profile, &sched, &channel, &comp, true);
+        assert_eq!(a.total_s, b.total_s);
+    }
+
+    #[test]
+    fn paper_scale_orderings_hold() {
+        // The Table-II shape at paper scale: SL < FedPairing < SplitFed < FL.
+        let mut cfg = ExperimentConfig::default();
+        cfg.samples_per_client = 250; // 1/10 scale for test speed; ratios scale
+        let mut rng = Rng::new(42);
+        let fleet = Fleet::sample(&cfg, &mut rng);
+        let profile = ModelProfile::resnet18_cifar();
+        let sched = Schedule {
+            batch_size: 32,
+            epochs: cfg.local_epochs,
+        };
+        let channel = Channel::new(cfg.channel);
+        let mut idx: Vec<usize> = (0..fleet.n()).collect();
+        idx.sort_by(|&a, &b| fleet.freqs_hz[a].partial_cmp(&fleet.freqs_hz[b]).unwrap());
+        let pairs: Vec<(usize, usize)> = (0..fleet.n() / 2)
+            .map(|k| (idx[k], idx[fleet.n() - 1 - k]))
+            .collect();
+        let fp =
+            fedpairing_round(&fleet, &pairs, &profile, &sched, &channel, &cfg.compute, true);
+        let fl = fl_round(&fleet, &profile, &sched, &channel, &cfg.compute, true);
+        let sl = sl_round(&fleet, &profile, &sched, &channel, &cfg.compute, 1, 100e9);
+        let sf = splitfed_round(
+            &fleet,
+            &profile,
+            &sched,
+            &channel,
+            &cfg.compute,
+            cfg.splitfed_cut_layer,
+            100e9,
+            true,
+        );
+        // Robust orderings under the calibrated channel (EXPERIMENTS.md):
+        // FedPairing < SplitFed < FL, and SL ≪ FL. (The paper's "SL fastest"
+        // holds only under its comm-free SL accounting, reproduced in
+        // bench_table2 as the comm-free variant.)
+        assert!(
+            fp.total_s < sf.total_s && sf.total_s < fl.total_s && sl.total_s < fl.total_s,
+            "ordering violated: sl={} fp={} sf={} fl={}",
+            sl.total_s,
+            fp.total_s,
+            sf.total_s,
+            fl.total_s
+        );
+    }
+}

@@ -1,0 +1,12 @@
+//! The heterogeneity/latency simulation substrate (DESIGN.md §2): client
+//! geometry, the eq. (3) OFDM channel, CPU heterogeneity, static model cost
+//! profiles (ResNet-18/10, the AOT MLP), a deterministic discrete-event
+//! engine, and per-algorithm round-time models that regenerate the paper's
+//! Tables I and II.
+
+pub mod channel;
+pub mod compute;
+pub mod des;
+pub mod geometry;
+pub mod latency;
+pub mod profile;

@@ -1,0 +1,280 @@
+//! Static model cost profiles: per-layer FLOPs, activation sizes and parameter
+//! counts, used by the latency simulator (Tables I & II) in place of the
+//! authors' physical testbed (DESIGN.md §2).
+//!
+//! The timing experiments need the *cost structure* of the paper's ResNet-18 /
+//! ResNet-10 on 3×32×32 CIFAR inputs — not actual CNN training — so we tabulate
+//! those architectures layer by layer. "Layer" granularity matches the paper's
+//! splittable units: the stem conv, each residual block, and the FC head.
+
+/// Cost of one splittable unit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerProfile {
+    pub name: String,
+    /// Forward FLOPs per input sample.
+    pub flops_fwd: f64,
+    /// Bytes of this unit's *output* activation per sample (f32).
+    pub act_bytes: f64,
+    /// Parameter count.
+    pub params: usize,
+}
+
+/// A full model as an ordered list of splittable units.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelProfile {
+    pub name: String,
+    pub layers: Vec<LayerProfile>,
+    /// Bytes of one input sample (3×32×32 f32 = 12288 for CIFAR).
+    pub input_bytes: f64,
+}
+
+/// Backward pass ≈ 2× forward FLOPs (grad w.r.t. inputs + grad w.r.t. weights).
+pub const BWD_FLOPS_FACTOR: f64 = 2.0;
+
+impl ModelProfile {
+    /// Number of splittable units `W`.
+    pub fn w(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Forward FLOPs per sample over units `[lo, hi)`.
+    pub fn fwd_flops(&self, lo: usize, hi: usize) -> f64 {
+        self.layers[lo..hi].iter().map(|l| l.flops_fwd).sum()
+    }
+
+    /// Forward+backward (training) FLOPs per sample over units `[lo, hi)`.
+    pub fn train_flops(&self, lo: usize, hi: usize) -> f64 {
+        self.fwd_flops(lo, hi) * (1.0 + BWD_FLOPS_FACTOR)
+    }
+
+    /// Total parameters in units `[lo, hi)`.
+    pub fn params(&self, lo: usize, hi: usize) -> usize {
+        self.layers[lo..hi].iter().map(|l| l.params).sum()
+    }
+
+    /// Bytes of all parameters (f32).
+    pub fn param_bytes(&self) -> f64 {
+        self.params(0, self.w()) as f64 * 4.0
+    }
+
+    /// Bytes per sample of the activation crossing a split *after* unit
+    /// `split` units (i.e. the output of unit `split-1`); `split=0` is the
+    /// raw input.
+    pub fn act_bytes_at(&self, split: usize) -> f64 {
+        assert!(split <= self.w(), "split {split} > W {}", self.w());
+        if split == 0 {
+            self.input_bytes
+        } else {
+            self.layers[split - 1].act_bytes
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Architectures
+    // ------------------------------------------------------------------
+
+    /// CIFAR-style ResNet-18: 3×3/64 stem; stages 64/128/256/512, two basic
+    /// blocks each, stride-2 at stage entry; FC head. W = 10 units.
+    pub fn resnet18_cifar() -> ModelProfile {
+        Self::resnet_cifar("resnet18", &[2, 2, 2, 2])
+    }
+
+    /// CIFAR-style ResNet-10: one basic block per stage. W = 6 units.
+    pub fn resnet10_cifar() -> ModelProfile {
+        Self::resnet_cifar("resnet10", &[1, 1, 1, 1])
+    }
+
+    fn resnet_cifar(name: &str, blocks_per_stage: &[usize]) -> ModelProfile {
+        let mut layers = Vec::new();
+        // Stem: conv3x3, 3→64, 32×32 output.
+        layers.push(conv_layer("conv1", 3, 64, 3, 32, 32));
+        let stage_ch = [64usize, 128, 256, 512];
+        let stage_hw = [32usize, 16, 8, 4];
+        let mut c_in = 64;
+        for (s, (&c_out, &hw)) in stage_ch.iter().zip(&stage_hw).enumerate() {
+            for b in 0..blocks_per_stage[s] {
+                let downsample = b == 0 && c_in != c_out;
+                layers.push(basic_block(
+                    &format!("s{}b{}", s + 1, b + 1),
+                    if b == 0 { c_in } else { c_out },
+                    c_out,
+                    hw,
+                    downsample,
+                ));
+            }
+            c_in = c_out;
+        }
+        // Global average pool + FC 512→10.
+        layers.push(LayerProfile {
+            name: "fc".into(),
+            flops_fwd: 2.0 * 512.0 * 10.0,
+            act_bytes: 10.0 * 4.0,
+            params: 512 * 10 + 10,
+        });
+        ModelProfile {
+            name: name.into(),
+            layers,
+            input_bytes: 3.0 * 32.0 * 32.0 * 4.0,
+        }
+    }
+
+    /// Residual-MLP profile matching the AOT-exported model (`model::Meta`),
+    /// so accuracy runs and timing runs share one cost model.
+    pub fn mlp(input_dim: usize, hidden: usize, classes: usize, layers_n: usize) -> ModelProfile {
+        assert!(layers_n >= 2);
+        let mut layers = Vec::new();
+        let dims = {
+            let mut d = vec![(input_dim, hidden)];
+            d.extend(std::iter::repeat((hidden, hidden)).take(layers_n - 2));
+            d.push((hidden, classes));
+            d
+        };
+        for (i, (fi, fo)) in dims.iter().enumerate() {
+            layers.push(LayerProfile {
+                name: format!("fc{i}"),
+                flops_fwd: 2.0 * (*fi as f64) * (*fo as f64),
+                act_bytes: *fo as f64 * 4.0,
+                params: fi * fo + fo,
+            });
+        }
+        ModelProfile {
+            name: format!("mlp{layers_n}x{hidden}"),
+            layers,
+            input_bytes: input_dim as f64 * 4.0,
+        }
+    }
+
+    /// The paper's original abstraction: `W` identical layers costing `F`
+    /// cycles each (used by the faithfulness ablation in bench_ablations).
+    pub fn uniform(w: usize, flops_per_layer: f64, act_bytes: f64) -> ModelProfile {
+        ModelProfile {
+            name: format!("uniform{w}"),
+            layers: (0..w)
+                .map(|i| LayerProfile {
+                    name: format!("l{i}"),
+                    flops_fwd: flops_per_layer,
+                    act_bytes,
+                    params: (flops_per_layer / 2.0) as usize, // dense-equivalent
+                })
+                .collect(),
+            input_bytes: act_bytes,
+        }
+    }
+}
+
+/// conv k×k, `c_in→c_out`, output `h×w` (FLOPs = 2·k²·Cin·Cout·H·W).
+fn conv_layer(name: &str, c_in: usize, c_out: usize, k: usize, h: usize, w: usize) -> LayerProfile {
+    LayerProfile {
+        name: name.into(),
+        flops_fwd: 2.0 * (k * k * c_in * c_out * h * w) as f64,
+        act_bytes: (c_out * h * w * 4) as f64,
+        params: k * k * c_in * c_out + c_out,
+    }
+}
+
+/// Basic residual block: two 3×3 convs (+1×1 shortcut when downsampling).
+fn basic_block(name: &str, c_in: usize, c_out: usize, hw: usize, downsample: bool) -> LayerProfile {
+    let conv1 = conv_layer("", c_in, c_out, 3, hw, hw);
+    let conv2 = conv_layer("", c_out, c_out, 3, hw, hw);
+    let mut flops = conv1.flops_fwd + conv2.flops_fwd;
+    let mut params = conv1.params + conv2.params;
+    if downsample {
+        let sc = conv_layer("", c_in, c_out, 1, hw, hw);
+        flops += sc.flops_fwd;
+        params += sc.params;
+    }
+    LayerProfile {
+        name: name.into(),
+        flops_fwd: flops,
+        act_bytes: (c_out * hw * hw * 4) as f64,
+        params,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_shape() {
+        let p = ModelProfile::resnet18_cifar();
+        assert_eq!(p.w(), 10); // stem + 8 blocks + fc
+        assert_eq!(p.layers[0].name, "conv1");
+        assert_eq!(p.layers[9].name, "fc");
+        // CIFAR ResNet-18 ≈ 0.56 GMACs fwd = ≈ 1.11 GFLOPs, ≈ 11.2 M params.
+        let gf = p.fwd_flops(0, p.w()) / 1e9;
+        assert!((0.9..1.4).contains(&gf), "gflops={gf}");
+        let m = p.params(0, p.w()) as f64 / 1e6;
+        assert!((10.0..12.5).contains(&m), "params={m}M");
+    }
+
+    #[test]
+    fn resnet10_smaller_than_18() {
+        let a = ModelProfile::resnet10_cifar();
+        let b = ModelProfile::resnet18_cifar();
+        assert_eq!(a.w(), 6);
+        assert!(a.fwd_flops(0, 6) < b.fwd_flops(0, 10));
+        assert!(a.params(0, 6) < b.params(0, 10));
+    }
+
+    #[test]
+    fn flops_partition_sums() {
+        let p = ModelProfile::resnet18_cifar();
+        for k in 0..=p.w() {
+            let total = p.fwd_flops(0, k) + p.fwd_flops(k, p.w());
+            assert!((total - p.fwd_flops(0, p.w())).abs() < 1.0);
+        }
+    }
+
+    #[test]
+    fn act_bytes_at_boundaries() {
+        let p = ModelProfile::resnet18_cifar();
+        assert_eq!(p.act_bytes_at(0), 12288.0); // 3*32*32*4
+        assert_eq!(p.act_bytes_at(1), 64.0 * 32.0 * 32.0 * 4.0);
+        assert_eq!(p.act_bytes_at(p.w()), 40.0); // logits
+    }
+
+    #[test]
+    fn train_flops_is_3x_fwd() {
+        let p = ModelProfile::resnet10_cifar();
+        let f = p.fwd_flops(0, 6);
+        assert!((p.train_flops(0, 6) - 3.0 * f).abs() < 1.0);
+    }
+
+    #[test]
+    fn mlp_profile_matches_architecture() {
+        let p = ModelProfile::mlp(3072, 256, 10, 8);
+        assert_eq!(p.w(), 8);
+        assert_eq!(p.layers[0].params, 3072 * 256 + 256);
+        assert_eq!(p.layers[7].params, 256 * 10 + 10);
+        assert_eq!(p.act_bytes_at(3), 256.0 * 4.0);
+        let n: usize = p.params(0, 8);
+        assert_eq!(
+            n,
+            (3072 * 256 + 256) + 6 * (256 * 256 + 256) + (256 * 10 + 10)
+        );
+    }
+
+    #[test]
+    fn uniform_profile_is_uniform() {
+        let p = ModelProfile::uniform(5, 1e6, 1024.0);
+        assert_eq!(p.w(), 5);
+        assert!(p.layers.iter().all(|l| l.flops_fwd == 1e6));
+        assert_eq!(p.act_bytes_at(0), 1024.0);
+        assert_eq!(p.act_bytes_at(3), 1024.0);
+    }
+
+    #[test]
+    fn downsample_blocks_cost_more_than_plain_at_same_width() {
+        // First block of stage 2 (64→128, 16×16, with shortcut) vs second
+        // (128→128, 16×16): conv1 of the first is half input channels but it
+        // adds the shortcut; the second block has two full-width convs and
+        // costs more.
+        let p = ModelProfile::resnet18_cifar();
+        let b1 = &p.layers[3]; // s2b1
+        let b2 = &p.layers[4]; // s2b2
+        assert_eq!(b1.name, "s2b1");
+        assert_eq!(b2.name, "s2b2");
+        assert!(b2.flops_fwd > b1.flops_fwd);
+    }
+}

@@ -1,0 +1,145 @@
+//! Leveled, timestamped logging (substrate — no `log`/`env_logger` wiring).
+//!
+//! A tiny global logger with compile-out-able macros. Level is set once at
+//! startup (CLI `--log-level` or `FEDPAIRING_LOG`); output goes to stderr so
+//! metric streams on stdout stay machine-readable.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Log severity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn from_str(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the global level (also reads `FEDPAIRING_LOG` at startup via `init`).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current global level.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Initialize from the `FEDPAIRING_LOG` env var (if present).
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("FEDPAIRING_LOG") {
+        if let Some(l) = Level::from_str(&v) {
+            set_level(l);
+        }
+    }
+}
+
+/// True when `lvl` would currently be emitted.
+#[inline]
+pub fn enabled(lvl: Level) -> bool {
+    lvl <= level()
+}
+
+/// Emit one log line (used by the macros; rarely called directly).
+pub fn emit(lvl: Level, module: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(lvl) {
+        return;
+    }
+    let now = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .unwrap_or_default();
+    let secs = now.as_secs();
+    let millis = now.subsec_millis();
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(
+        err,
+        "[{secs}.{millis:03} {} {}] {}",
+        lvl.tag(),
+        module,
+        args
+    );
+}
+
+/// `log!(Level::Info, "x = {}", 3)`
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)*) => {
+        $crate::util::logging::emit($lvl, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_error { ($($arg:tt)*) => { $crate::log!($crate::util::logging::Level::Error, $($arg)*) }; }
+#[macro_export]
+macro_rules! log_warn { ($($arg:tt)*) => { $crate::log!($crate::util::logging::Level::Warn, $($arg)*) }; }
+#[macro_export]
+macro_rules! log_info { ($($arg:tt)*) => { $crate::log!($crate::util::logging::Level::Info, $($arg)*) }; }
+#[macro_export]
+macro_rules! log_debug { ($($arg:tt)*) => { $crate::log!($crate::util::logging::Level::Debug, $($arg)*) }; }
+#[macro_export]
+macro_rules! log_trace { ($($arg:tt)*) => { $crate::log!($crate::util::logging::Level::Trace, $($arg)*) }; }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse() {
+        assert_eq!(Level::from_str("info"), Some(Level::Info));
+        assert_eq!(Level::from_str("WARN"), Some(Level::Warn));
+        assert_eq!(Level::from_str("warning"), Some(Level::Warn));
+        assert_eq!(Level::from_str("bogus"), None);
+    }
+
+    #[test]
+    fn level_ordering_gates_emission() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore default for other tests
+    }
+
+    #[test]
+    fn macros_compile_and_run() {
+        set_level(Level::Error); // silence output during tests
+        log_info!("hidden {}", 1);
+        log_error!("visible-but-harmless {}", 2);
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,8 @@
+//! Cross-cutting substrates built from scratch for the offline environment:
+//! RNG, JSON, logging, statistics and a property-testing harness.
+
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

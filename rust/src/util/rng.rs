@@ -1,0 +1,389 @@
+//! Deterministic pseudo-random number generation (substrate — no `rand` crate).
+//!
+//! Implements PCG64 (O'Neill's permuted congruential generator, XSL-RR 128/64
+//! variant) seeded through SplitMix64, plus the distribution helpers the
+//! simulator and data generator need: uniform ranges, normals (Box–Muller),
+//! Fisher–Yates shuffles and weighted choice.
+//!
+//! Every stochastic component of the system (client placement, CPU frequency
+//! draws, data synthesis, partitioning, batch order, pairing tie-breaks) takes
+//! an explicit `Rng`, so entire experiments replay bit-identically from one
+//! seed — a property `tests/` relies on heavily.
+
+/// SplitMix64: used to expand a `u64` seed into PCG state.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG64 (XSL-RR 128/64) — 128-bit state LCG with an output permutation.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u128,
+    inc: u128,
+    /// Cached second normal from Box–Muller.
+    spare_normal: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+impl Rng {
+    /// Create a generator from a `u64` seed (stream 0).
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0)
+    }
+
+    /// Create a generator with an explicit stream id; distinct streams from
+    /// the same seed are independent (used to give each client its own RNG).
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut sm = seed;
+        let s0 = splitmix64(&mut sm) as u128;
+        let s1 = splitmix64(&mut sm) as u128;
+        let mut sm2 = stream ^ 0xDA3E_39CB_94B9_5BDB;
+        let i0 = splitmix64(&mut sm2) as u128;
+        let i1 = splitmix64(&mut sm2) as u128;
+        let mut rng = Rng {
+            state: (s0 << 64) | s1,
+            inc: (((i0 << 64) | i1) << 1) | 1, // must be odd
+            spare_normal: None,
+        };
+        // Warm up: decorrelates low-entropy seeds.
+        rng.next_u64();
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive an independent child generator (for per-entity streams).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::with_stream(self.next_u64(), stream)
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        // XSL-RR: xor-shift-low, random rotate.
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform `u64` in `[0, n)` without modulo bias (Lemire's method).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "next_below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform `usize` in `[0, n)`.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        self.next_below(n as u64) as usize
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        debug_assert!(hi >= lo);
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in `[lo, hi]` (inclusive).
+    #[inline]
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(hi >= lo);
+        lo + self.next_below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Standard normal via Box–Muller (caches the second sample).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // Avoid ln(0).
+        let u1 = loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.spare_normal = Some(r * s);
+        r * c
+    }
+
+    /// Normal with explicit mean/std.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_indices: k={k} > n={n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Weighted index choice proportional to `weights` (must be non-negative,
+    /// not all zero).
+    pub fn choose_weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "choose_weighted: weights sum to {total}");
+        let mut t = self.f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            debug_assert!(w >= 0.0);
+            if t < w {
+                return i;
+            }
+            t -= w;
+        }
+        weights.len() - 1 // floating-point slack
+    }
+
+    /// Sample from a symmetric Dirichlet(α) over `n` categories
+    /// (via Gamma(α,1) draws, Marsaglia–Tsang; used by the Non-IID partitioner).
+    pub fn dirichlet(&mut self, alpha: f64, n: usize) -> Vec<f64> {
+        let mut g: Vec<f64> = (0..n).map(|_| self.gamma(alpha)).collect();
+        let s: f64 = g.iter().sum();
+        if s <= 0.0 {
+            // Degenerate underflow at tiny α: put all mass on one category.
+            let mut out = vec![0.0; n];
+            out[self.below(n)] = 1.0;
+            return out;
+        }
+        for x in &mut g {
+            *x /= s;
+        }
+        g
+    }
+
+    /// Gamma(shape, 1) sampler (Marsaglia–Tsang, with the α<1 boost).
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        assert!(shape > 0.0);
+        if shape < 1.0 {
+            // Boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let u = loop {
+                let u = self.f64();
+                if u > 0.0 {
+                    break u;
+                }
+            };
+            return self.gamma(shape + 1.0) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn different_streams_differ() {
+        let mut a = Rng::with_stream(7, 0);
+        let mut b = Rng::with_stream(7, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x), "{x}");
+        }
+    }
+
+    #[test]
+    fn f64_mean_near_half() {
+        let mut r = Rng::new(4);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn next_below_unbiased_small_n() {
+        let mut r = Rng::new(5);
+        let mut counts = [0usize; 7];
+        let n = 70_000;
+        for _ in 0..n {
+            counts[r.below(7)] += 1;
+        }
+        for &c in &counts {
+            let expected = n / 7;
+            assert!(
+                (c as f64 - expected as f64).abs() < expected as f64 * 0.1,
+                "count {c} vs {expected}"
+            );
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(6);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(7);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(8);
+        let s = r.sample_indices(100, 30);
+        assert_eq!(s.len(), 30);
+        let mut u = s.clone();
+        u.sort_unstable();
+        u.dedup();
+        assert_eq!(u.len(), 30);
+        assert!(u.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Rng::new(9);
+        for &alpha in &[0.1, 0.5, 1.0, 10.0] {
+            let d = r.dirichlet(alpha, 10);
+            let s: f64 = d.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "alpha={alpha} sum={s}");
+            assert!(d.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn dirichlet_concentration_effect() {
+        // Small α → spiky; large α → near-uniform.
+        let mut r = Rng::new(10);
+        let spiky: f64 = (0..50)
+            .map(|_| r.dirichlet(0.05, 10).iter().cloned().fold(0.0, f64::max))
+            .sum::<f64>()
+            / 50.0;
+        let flat: f64 = (0..50)
+            .map(|_| r.dirichlet(100.0, 10).iter().cloned().fold(0.0, f64::max))
+            .sum::<f64>()
+            / 50.0;
+        assert!(spiky > 0.6, "spiky={spiky}");
+        assert!(flat < 0.2, "flat={flat}");
+    }
+
+    #[test]
+    fn gamma_mean() {
+        let mut r = Rng::new(11);
+        for &shape in &[0.5, 1.0, 3.0] {
+            let n = 50_000;
+            let mean: f64 = (0..n).map(|_| r.gamma(shape)).sum::<f64>() / n as f64;
+            assert!((mean - shape).abs() < 0.05 * shape.max(1.0), "shape={shape} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn choose_weighted_respects_weights() {
+        let mut r = Rng::new(12);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[r.choose_weighted(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio={ratio}");
+    }
+
+    #[test]
+    fn fork_independent() {
+        let mut root = Rng::new(13);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

@@ -1,0 +1,234 @@
+//! Cross-module integration tests: the full pipeline (config → fleet → data
+//! → pairing → runtime → coordinator → metrics), the CLI binary, and the
+//! latency-model ↔ protocol consistency contract.
+//!
+//! Runtime-dependent tests skip cleanly when `make artifacts` hasn't run.
+
+use fedpairing::config::{Algorithm, DataDistribution, ExperimentConfig, PairingStrategy};
+use fedpairing::coordinator::{run_experiment, Experiment};
+use fedpairing::coordinator::protocol;
+use fedpairing::data::synth::{SynthCifar, NUM_CLASSES};
+use fedpairing::model::ModelMeta;
+use fedpairing::sim::latency::CLASSES;
+use std::process::Command;
+
+fn artifacts_ready() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts/ not built");
+    }
+    ok
+}
+
+fn quick(algo: Algorithm) -> ExperimentConfig {
+    let mut c = ExperimentConfig::preset("quick").unwrap();
+    c.algorithm = algo;
+    c.rounds = 3;
+    c.samples_per_client = 64;
+    c.test_samples = 128;
+    c
+}
+
+// ---------------------------------------------------------------------------
+// full pipeline
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fedpairing_learns_above_chance_quickly() {
+    if !artifacts_ready() {
+        return;
+    }
+    let res = run_experiment(quick(Algorithm::FedPairing)).unwrap();
+    // 10-class chance = 0.1; three rounds on the quick task must clear 2x.
+    assert!(
+        res.final_acc() > 0.2,
+        "final acc {} not above chance",
+        res.final_acc()
+    );
+    // training loss decreased from round 1 to last
+    let first = res.rounds.first().unwrap().train_loss;
+    let last = res.rounds.last().unwrap().train_loss;
+    assert!(last < first, "loss {first} -> {last}");
+}
+
+#[test]
+fn pairing_strategy_affects_time_not_learning_health() {
+    if !artifacts_ready() {
+        return;
+    }
+    for strat in [PairingStrategy::Greedy, PairingStrategy::Random] {
+        let mut cfg = quick(Algorithm::FedPairing);
+        cfg.pairing = strat;
+        let res = run_experiment(cfg).unwrap();
+        assert!(res.final_acc() > 0.15, "{strat:?}: {}", res.final_acc());
+    }
+}
+
+#[test]
+fn sim_round_times_consistent_with_latency_module() {
+    if !artifacts_ready() {
+        return;
+    }
+    // Per-round simulated time must be constant across rounds (static fleet)
+    // and ordered FL > FedPairing for the same fleet.
+    let fp = run_experiment(quick(Algorithm::FedPairing)).unwrap();
+    let fl = run_experiment(quick(Algorithm::VanillaFL)).unwrap();
+    for w in fp.rounds.windows(2) {
+        assert_eq!(w[0].sim_round_s, w[1].sim_round_s);
+    }
+    assert!(fl.rounds[0].sim_round_s > fp.rounds[0].sim_round_s);
+}
+
+#[test]
+fn metrics_files_written_and_parse_back() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut cfg = quick(Algorithm::FedPairing);
+    cfg.name = "itest".into();
+    let res = run_experiment(cfg).unwrap();
+    let dir = std::env::temp_dir().join("fp_itest_out");
+    let dir = dir.to_str().unwrap();
+    let (csv, json) = res.save(dir).unwrap();
+    let csv_text = std::fs::read_to_string(&csv).unwrap();
+    assert_eq!(csv_text.lines().count(), 1 + res.rounds.len());
+    let parsed = fedpairing::util::json::Json::parse(&std::fs::read_to_string(&json).unwrap()).unwrap();
+    assert_eq!(
+        parsed.get("config").unwrap().get("name").unwrap().as_str(),
+        Some("itest")
+    );
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn experiment_reusable_for_multiple_evaluations() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut exp = Experiment::new(quick(Algorithm::FedPairing)).unwrap();
+    let params = exp.engine.init_params(3).unwrap();
+    let (l1, a1) = exp.evaluate(&params).unwrap();
+    let (l2, a2) = exp.evaluate(&params).unwrap();
+    assert_eq!(l1, l2);
+    assert_eq!(a1, a2);
+    assert!((0.0..=1.0).contains(&a1));
+}
+
+// ---------------------------------------------------------------------------
+// config / manifest interop
+// ---------------------------------------------------------------------------
+
+#[test]
+fn config_file_roundtrip_through_disk() {
+    let mut cfg = ExperimentConfig::preset("fig3").unwrap();
+    cfg.algorithm = Algorithm::SplitFed;
+    cfg.seed = 99;
+    let path = std::env::temp_dir().join("fp_cfg_itest.json");
+    std::fs::write(&path, cfg.to_json().to_string_pretty(2)).unwrap();
+    let loaded = ExperimentConfig::load(path.to_str().unwrap()).unwrap();
+    assert_eq!(loaded.algorithm, Algorithm::SplitFed);
+    assert_eq!(loaded.seed, 99);
+    assert_eq!(
+        loaded.distribution,
+        DataDistribution::ClassShards { classes_per_client: 2 }
+    );
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn manifest_profile_agrees_with_latency_classes() {
+    if !artifacts_ready() {
+        return;
+    }
+    let meta = ModelMeta::load("artifacts").unwrap();
+    assert_eq!(meta.classes, CLASSES, "latency CLASSES constant out of sync");
+    assert_eq!(meta.classes, NUM_CLASSES, "synth NUM_CLASSES out of sync");
+    // manifest ↔ profile param agreement
+    let p = meta.profile();
+    assert_eq!(p.params(0, p.w()), meta.n_params);
+}
+
+#[test]
+fn protocol_bytes_match_latency_model_inputs() {
+    // The latency simulator charges act+g_logits up / logits+g_act down per
+    // batch; protocol byte helpers must produce identical totals.
+    let (b, h, c) = (32, 256, 10);
+    let up = protocol::owner_to_helper_bytes(b, h, c);
+    let down = protocol::helper_to_owner_bytes(b, h, c);
+    assert_eq!(up, (b * h * 4 + b * c * 4) as f64);
+    assert_eq!(down, (b * c * 4 + b * h * 4) as f64);
+}
+
+#[test]
+fn synth_testset_disjoint_from_training_indices() {
+    use fedpairing::data::partition::partition;
+    use fedpairing::util::rng::Rng;
+    let mut rng = Rng::new(1);
+    let shards = partition(&mut rng, 20, 2500, &DataDistribution::Iid);
+    let max_train_idx = shards
+        .iter()
+        .flat_map(|s| s.coords.iter().map(|&(_, i)| i))
+        .max()
+        .unwrap();
+    assert!(max_train_idx < fedpairing::data::synth::TEST_INDEX_BASE);
+    // and test samples exist beyond that base
+    let gen = SynthCifar::new(1, 1.0);
+    let t = gen.test_set(10);
+    assert_eq!(t.len(), 10);
+}
+
+// ---------------------------------------------------------------------------
+// CLI binary
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cli_help_and_pair_and_latency() {
+    let bin = env!("CARGO_BIN_EXE_fedpairing");
+    let out = Command::new(bin).arg("--help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("run"), "{text}");
+    assert!(text.contains("latency"));
+
+    let out = Command::new(bin)
+        .args(["pair", "--clients", "8", "--strategy", "greedy"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(text.matches('(').count() >= 4, true, "{text}");
+
+    let out = Command::new(bin)
+        .args(["latency", "--clients", "10", "--samples", "100"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Table I"));
+    assert!(text.contains("fedpairing"));
+}
+
+#[test]
+fn cli_rejects_unknown_flags_and_bad_values() {
+    let bin = env!("CARGO_BIN_EXE_fedpairing");
+    let out = Command::new(bin).args(["run", "--bogus"]).output().unwrap();
+    assert!(!out.status.success());
+    let out = Command::new(bin)
+        .args(["pair", "--strategy", "quantum"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn cli_info_reads_manifest() {
+    if !artifacts_ready() {
+        return;
+    }
+    let bin = env!("CARGO_BIN_EXE_fedpairing");
+    let out = Command::new(bin).arg("info").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("resnet-mlp"));
+    assert!(text.contains("front_fwd_1"));
+}

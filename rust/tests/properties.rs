@@ -1,0 +1,241 @@
+//! System-level property tests (via the from-scratch `util::proptest`
+//! harness): invariants that must hold for *any* fleet, partition, or
+//! matching — the L3 analogue of the hypothesis sweeps on the Python side.
+
+use fedpairing::config::{DataDistribution, ExperimentConfig, PairingStrategy};
+use fedpairing::data::partition::partition;
+use fedpairing::nn;
+use fedpairing::pairing::graph::{is_perfect_matching, ClientGraph};
+use fedpairing::pairing::{exact, greedy, pair_clients};
+use fedpairing::sim::channel::Channel;
+use fedpairing::sim::compute::split_lengths;
+use fedpairing::sim::latency::{fedpairing_round, fl_round, Fleet, Schedule};
+use fedpairing::sim::profile::ModelProfile;
+use fedpairing::util::proptest::{check, gen_pair, gen_u64, gen_usize, Gen};
+use fedpairing::util::rng::Rng;
+
+fn fleet_of(seed: u64, n: usize) -> (Fleet, Channel, ExperimentConfig) {
+    let mut cfg = ExperimentConfig::default();
+    cfg.n_clients = n;
+    cfg.seed = seed;
+    cfg.samples_per_client = 128;
+    let fleet = Fleet::sample(&cfg, &mut Rng::new(seed));
+    (fleet, Channel::new(cfg.channel), cfg)
+}
+
+#[test]
+fn prop_every_strategy_yields_perfect_matching() {
+    check(
+        40,
+        gen_pair(gen_u64(0, u64::MAX / 2), gen_usize(1, 10)),
+        |&(seed, half)| {
+            let n = half * 2;
+            let (fleet, ch, cfg) = fleet_of(seed, n);
+            let mut rng = Rng::new(seed ^ 1);
+            [
+                PairingStrategy::Greedy,
+                PairingStrategy::Random,
+                PairingStrategy::Location,
+                PairingStrategy::Compute,
+                PairingStrategy::Exact,
+            ]
+            .into_iter()
+            .all(|s| {
+                is_perfect_matching(
+                    n,
+                    &pair_clients(s, &fleet, &ch, cfg.alpha, cfg.beta, &mut rng),
+                )
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_greedy_weight_between_half_and_full_optimum() {
+    check(25, gen_pair(gen_u64(0, u64::MAX / 2), gen_usize(1, 8)), |&(seed, half)| {
+        let n = half * 2;
+        let (fleet, ch, cfg) = fleet_of(seed, n);
+        let g = ClientGraph::build(&fleet, &ch, cfg.alpha, cfg.beta);
+        let wg = g.matching_weight(&greedy::greedy_matching(&g));
+        let we = g.matching_weight(&exact::exact_matching(&g));
+        wg <= we + 1e-9 && 2.0 * wg + 1e-9 >= we
+    });
+}
+
+#[test]
+fn prop_split_lengths_partition_and_respect_speed() {
+    check(
+        100,
+        Gen::new(|rng| {
+            (
+                rng.range_f64(0.05e9, 3e9),
+                rng.range_f64(0.05e9, 3e9),
+                2 + rng.below(30),
+            )
+        }),
+        |&(fi, fj, w)| {
+            let (li, lj) = split_lengths(fi, fj, w);
+            // The floor in the paper's rule can hand the faster client one
+            // layer *fewer* near a 50/50 split with odd W, so the honest
+            // invariant is proximity to the unrounded ideal (within 1 layer,
+            // modulo the [1, W-1] privacy clamp) — not strict ordering.
+            let ideal = fi / (fi + fj) * w as f64;
+            let clamped = ideal.max(1.0).min((w - 1) as f64);
+            li + lj == w && li >= 1 && lj >= 1 && (li as f64 - clamped).abs() <= 1.0
+        },
+    );
+}
+
+#[test]
+fn prop_partitions_conserve_samples_exactly() {
+    check(
+        40,
+        Gen::new(|rng| {
+            let dist = match rng.below(3) {
+                0 => DataDistribution::Iid,
+                1 => DataDistribution::ClassShards {
+                    classes_per_client: 1 + rng.below(10),
+                },
+                _ => DataDistribution::Dirichlet {
+                    alpha: rng.range_f64(0.05, 10.0),
+                },
+            };
+            (rng.next_u64(), 1 + rng.below(20), 1 + rng.below(600), dist)
+        }),
+        |&(seed, n_clients, spc, dist)| {
+            let mut rng = Rng::new(seed);
+            let shards = partition(&mut rng, n_clients, spc, &dist);
+            let total: usize = shards.iter().map(|s| s.len()).sum();
+            let mut seen = std::collections::HashSet::new();
+            let no_dup = shards
+                .iter()
+                .flat_map(|s| s.coords.iter())
+                .all(|c| seen.insert(*c));
+            total == n_clients * spc && no_dup && shards.iter().all(|s| s.len() == spc)
+        },
+    );
+}
+
+#[test]
+fn prop_fedpairing_round_time_monotone_in_cpu_speed() {
+    // Scaling every client's CPU up can never slow the round down.
+    check(20, gen_u64(0, u64::MAX / 2), |&seed| {
+        let (mut fleet, ch, cfg) = fleet_of(seed, 8);
+        let profile = ModelProfile::resnet10_cifar();
+        let sched = Schedule {
+            batch_size: 32,
+            epochs: 1,
+        };
+        let pairs = pair_clients(
+            PairingStrategy::Greedy,
+            &fleet,
+            &ch,
+            cfg.alpha,
+            cfg.beta,
+            &mut Rng::new(seed),
+        );
+        let slow = fedpairing_round(&fleet, &pairs, &profile, &sched, &ch, &cfg.compute, false);
+        for f in fleet.freqs_hz.iter_mut() {
+            *f *= 2.0;
+        }
+        let fast = fedpairing_round(&fleet, &pairs, &profile, &sched, &ch, &cfg.compute, false);
+        fast.total_s <= slow.total_s + 1e-9
+    });
+}
+
+#[test]
+fn prop_round_time_monotone_in_samples() {
+    check(20, gen_pair(gen_u64(0, u64::MAX / 2), gen_usize(1, 400)), |&(seed, spc)| {
+        let (mut fleet, ch, cfg) = fleet_of(seed, 6);
+        let profile = ModelProfile::resnet10_cifar();
+        let sched = Schedule {
+            batch_size: 32,
+            epochs: 1,
+        };
+        fleet.n_samples = vec![spc; 6];
+        let t1 = fl_round(&fleet, &profile, &sched, &ch, &cfg.compute, false).total_s;
+        fleet.n_samples = vec![spc + 64; 6];
+        let t2 = fl_round(&fleet, &profile, &sched, &ch, &cfg.compute, false).total_s;
+        t2 > t1
+    });
+}
+
+#[test]
+fn prop_aggregation_preserves_mean_exactly() {
+    // fedavg of identical models is the model; delta-sum of symmetric
+    // perturbations cancels.
+    check(
+        30,
+        Gen::new(|rng| {
+            let t: Vec<Vec<f32>> = (0..6)
+                .map(|_| (0..16).map(|_| rng.f32() * 2.0 - 1.0).collect())
+                .collect();
+            (t, rng.f32())
+        }),
+        |(model, delta)| {
+            let n = 4;
+            let weights = vec![1.0 / n as f64; n];
+            let avg = nn::fedavg_weighted(&vec![model.clone(); n], &weights);
+            let same = avg
+                .iter()
+                .zip(model)
+                .all(|(a, b)| a.iter().zip(b).all(|(x, y)| (x - y).abs() < 1e-6));
+            // delta-sum cancellation
+            let mut up = model.clone();
+            nn::add_scaled(&mut up, model, *delta);
+            let mut down = model.clone();
+            nn::add_scaled(&mut down, model, -*delta);
+            let mut g = model.clone();
+            nn::aggregate_deltas(&mut g, &[up, down]);
+            let cancel = g
+                .iter()
+                .zip(model)
+                .all(|(a, b)| a.iter().zip(b).all(|(x, y)| (x - y).abs() < 1e-5));
+            same && cancel
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_configs() {
+    check(
+        40,
+        Gen::new(|rng| {
+            let mut cfg = ExperimentConfig::default();
+            cfg.seed = rng.next_u64() >> 12;
+            cfg.n_clients = 2 * (1 + rng.below(16));
+            cfg.rounds = 1 + rng.below(200);
+            cfg.lr = rng.f32() + 0.001;
+            cfg.alpha = rng.f64() * 10.0;
+            cfg.beta = rng.f64() * 1e-8;
+            cfg.overlap_boost = rng.below(2) == 0;
+            cfg.distribution = match rng.below(3) {
+                0 => DataDistribution::Iid,
+                1 => DataDistribution::ClassShards {
+                    classes_per_client: 1 + rng.below(9),
+                },
+                _ => DataDistribution::Dirichlet {
+                    alpha: 0.05 + rng.f64(),
+                },
+            };
+            cfg
+        }),
+        |cfg| {
+            let j = cfg.to_json();
+            let back = ExperimentConfig::from_json(&j).unwrap();
+            back.to_json().to_string() == j.to_string()
+        },
+    );
+}
+
+#[test]
+fn prop_channel_rate_antitone_in_distance() {
+    check(
+        60,
+        Gen::new(|rng| (rng.range_f64(1.0, 200.0), rng.range_f64(0.0, 50.0))),
+        |&(d, extra)| {
+            let ch = Channel::new(ExperimentConfig::default().channel);
+            ch.rate_at(d + extra) <= ch.rate_at(d) + 1e-9
+        },
+    );
+}
