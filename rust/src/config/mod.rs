@@ -17,6 +17,10 @@ macro_rules! fmt_display_via_name {
     };
 }
 
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err(ConfigError(format!($($arg)*))) };
+}
+
 /// Which FL algorithm drives the round loop (paper Sec. IV benchmarks).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Algorithm {
@@ -120,6 +124,181 @@ impl DataDistribution {
     }
 }
 
+/// Named fleet-dynamics scenario (the `fleet` layer's presets).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScenarioKind {
+    /// The paper's static fleet: nobody joins, leaves, or fades.
+    Stable,
+    /// Availability follows a day/night wave; light mobility and shadowing.
+    Diurnal,
+    /// A latent cohort joins at once mid-run; background departures.
+    FlashCrowd,
+    /// Deep fading, transient failures and stragglers on a jittery radio.
+    LossyRadio,
+}
+
+impl ScenarioKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "stable" | "static" => Some(ScenarioKind::Stable),
+            "diurnal" | "day-night" | "day_night" => Some(ScenarioKind::Diurnal),
+            "flash-crowd" | "flash_crowd" | "flashcrowd" => Some(ScenarioKind::FlashCrowd),
+            "lossy-radio" | "lossy_radio" | "lossy" => Some(ScenarioKind::LossyRadio),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScenarioKind::Stable => "stable",
+            ScenarioKind::Diurnal => "diurnal",
+            ScenarioKind::FlashCrowd => "flash-crowd",
+            ScenarioKind::LossyRadio => "lossy-radio",
+        }
+    }
+
+    /// All named scenarios (CLI help, examples, benches).
+    pub const ALL: [ScenarioKind; 4] = [
+        ScenarioKind::Stable,
+        ScenarioKind::Diurnal,
+        ScenarioKind::FlashCrowd,
+        ScenarioKind::LossyRadio,
+    ];
+}
+
+impl fmt::Display for ScenarioKind {
+    fmt_display_via_name!();
+}
+
+/// Fleet-dynamics knobs. [`ScenarioConfig::preset`] fills them per named
+/// scenario; JSON configs may override any knob individually. All stochastic
+/// draws they parameterize run on dedicated `util::rng` streams, so a
+/// `(seed, scenario)` pair replays bit-identically.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScenarioConfig {
+    pub kind: ScenarioKind,
+    /// Per-alive-client, per-round probability of (durable) departure.
+    pub p_depart: f64,
+    /// Per-departed-client, per-round probability of rejoining.
+    pub p_rejoin: f64,
+    /// Per-alive-client, per-round probability of a transient failure
+    /// (client stays in the matching but misses this round).
+    pub p_transient: f64,
+    /// Per-present-client, per-round probability of straggling.
+    pub p_straggle: f64,
+    /// CPU-frequency multiplier applied while straggling (0 < f ≤ 1).
+    pub straggle_factor: f64,
+    /// Per-round client random-walk step std-dev in meters (0 = static).
+    pub mobility_m: f64,
+    /// Std-dev in dB of the per-round log-normal shadowing re-draw layered
+    /// on the eq. (3) channel (0 = frozen channel).
+    pub shadowing_std_db: f64,
+    /// Latent cohort size as a fraction of `n_clients` (flash-crowd).
+    pub flash_fraction: f64,
+    /// Round at which the latent cohort joins (0 = never).
+    pub flash_round: usize,
+    /// Rounds per availability cycle (0 = no diurnal wave).
+    pub diurnal_period: usize,
+    /// Fraction of the fleet asleep at the trough of the wave (0..1).
+    pub diurnal_depth: f64,
+}
+
+impl ScenarioConfig {
+    /// The knob values behind each named scenario.
+    pub fn preset(kind: ScenarioKind) -> ScenarioConfig {
+        let stable = ScenarioConfig {
+            kind,
+            p_depart: 0.0,
+            p_rejoin: 0.0,
+            p_transient: 0.0,
+            p_straggle: 0.0,
+            straggle_factor: 1.0,
+            mobility_m: 0.0,
+            shadowing_std_db: 0.0,
+            flash_fraction: 0.0,
+            flash_round: 0,
+            diurnal_period: 0,
+            diurnal_depth: 0.0,
+        };
+        match kind {
+            ScenarioKind::Stable => stable,
+            ScenarioKind::Diurnal => ScenarioConfig {
+                p_transient: 0.02,
+                mobility_m: 0.5,
+                shadowing_std_db: 1.0,
+                diurnal_period: 20,
+                diurnal_depth: 0.4,
+                ..stable
+            },
+            ScenarioKind::FlashCrowd => ScenarioConfig {
+                p_depart: 0.05,
+                p_rejoin: 0.10,
+                p_transient: 0.02,
+                mobility_m: 1.0,
+                shadowing_std_db: 1.0,
+                flash_fraction: 0.5,
+                flash_round: 5,
+                ..stable
+            },
+            ScenarioKind::LossyRadio => ScenarioConfig {
+                p_depart: 0.02,
+                p_rejoin: 0.30,
+                p_transient: 0.08,
+                p_straggle: 0.15,
+                straggle_factor: 0.35,
+                mobility_m: 2.0,
+                shadowing_std_db: 6.0,
+                ..stable
+            },
+        }
+    }
+
+    /// Preset lookup by CLI name.
+    pub fn named(s: &str) -> Option<ScenarioConfig> {
+        ScenarioKind::parse(s).map(ScenarioConfig::preset)
+    }
+
+    fn prob_ok(p: f64) -> bool {
+        (0.0..=1.0).contains(&p)
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        for (name, p) in [
+            ("p_depart", self.p_depart),
+            ("p_rejoin", self.p_rejoin),
+            ("p_transient", self.p_transient),
+            ("p_straggle", self.p_straggle),
+            ("diurnal_depth", self.diurnal_depth),
+        ] {
+            if !Self::prob_ok(p) {
+                bail!("scenario {name} must be a probability in [0,1], got {p}");
+            }
+        }
+        if !(self.straggle_factor > 0.0 && self.straggle_factor <= 1.0) {
+            bail!(
+                "scenario straggle_factor must be in (0,1], got {}",
+                self.straggle_factor
+            );
+        }
+        if self.mobility_m < 0.0 || self.shadowing_std_db < 0.0 {
+            bail!("scenario mobility/shadowing must be >= 0");
+        }
+        if self.flash_fraction < 0.0 {
+            bail!("scenario flash_fraction must be >= 0");
+        }
+        if self.flash_round > 0 && self.flash_fraction == 0.0 {
+            bail!("scenario flash_round set but flash_fraction is 0");
+        }
+        Ok(())
+    }
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig::preset(ScenarioKind::Stable)
+    }
+}
+
 /// Wireless channel parameters — eq. (3) of the paper.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ChannelConfig {
@@ -189,6 +368,9 @@ pub struct ExperimentConfig {
     pub area_radius_m: f64,
     pub channel: ChannelConfig,
     pub compute: ComputeConfig,
+    /// Fleet-dynamics scenario (churn, fading, stragglers). The default
+    /// `stable` preset reproduces the paper's static fleet exactly.
+    pub scenario: ScenarioConfig,
 
     // training schedule (paper: 100 rounds × 2 local epochs, lr 0.1)
     pub rounds: usize,
@@ -236,6 +418,7 @@ impl Default for ExperimentConfig {
             area_radius_m: 50.0,
             channel: ChannelConfig::default(),
             compute: ComputeConfig::default(),
+            scenario: ScenarioConfig::default(),
             rounds: 100,
             local_epochs: 2,
             // Paper: 0.1 for ResNet-18 (with batch-norm). The substitute
@@ -270,23 +453,17 @@ impl fmt::Display for ConfigError {
 
 impl std::error::Error for ConfigError {}
 
-macro_rules! bail {
-    ($($arg:tt)*) => { return Err(ConfigError(format!($($arg)*))) };
-}
-
 impl ExperimentConfig {
     /// Sanity-check invariants the rest of the system assumes.
     pub fn validate(&self) -> Result<(), ConfigError> {
         if self.n_clients == 0 {
             bail!("n_clients must be > 0");
         }
-        if self.n_clients % 2 != 0 && self.algorithm == Algorithm::FedPairing {
-            bail!(
-                "FedPairing pairs clients; n_clients={} must be even \
-                 (the paper's future-work arbitrary-group extension is out of scope)",
-                self.n_clients
-            );
-        }
+        // Odd fleets are fine for every algorithm: FedPairing leaves one
+        // client solo (near-perfect matching; the solo client trains the
+        // full model locally) — required anyway once churn can kill a
+        // client mid-run.
+        self.scenario.validate()?;
         if self.compute.f_min_ghz <= 0.0 || self.compute.f_max_ghz < self.compute.f_min_ghz {
             bail!(
                 "invalid CPU frequency range [{}, {}]",
@@ -396,6 +573,20 @@ impl ExperimentConfig {
         cp.insert("server_freq_ghz", Json::num(self.compute.server_freq_ghz));
         cp.insert("cycles_per_flop", Json::num(self.compute.cycles_per_flop));
         o.insert("compute", Json::Obj(cp));
+        let mut sc = JsonObj::new();
+        sc.insert("kind", Json::str(self.scenario.kind.name()));
+        sc.insert("p_depart", Json::num(self.scenario.p_depart));
+        sc.insert("p_rejoin", Json::num(self.scenario.p_rejoin));
+        sc.insert("p_transient", Json::num(self.scenario.p_transient));
+        sc.insert("p_straggle", Json::num(self.scenario.p_straggle));
+        sc.insert("straggle_factor", Json::num(self.scenario.straggle_factor));
+        sc.insert("mobility_m", Json::num(self.scenario.mobility_m));
+        sc.insert("shadowing_std_db", Json::num(self.scenario.shadowing_std_db));
+        sc.insert("flash_fraction", Json::num(self.scenario.flash_fraction));
+        sc.insert("flash_round", Json::num(self.scenario.flash_round as f64));
+        sc.insert("diurnal_period", Json::num(self.scenario.diurnal_period as f64));
+        sc.insert("diurnal_depth", Json::num(self.scenario.diurnal_depth));
+        o.insert("scenario", Json::Obj(sc));
         o.insert("rounds", Json::num(self.rounds as f64));
         o.insert("local_epochs", Json::num(self.local_epochs as f64));
         o.insert("lr", Json::num(self.lr as f64));
@@ -487,6 +678,28 @@ impl ExperimentConfig {
                 server_freq_ghz: g("server_freq_ghz", c.compute.server_freq_ghz),
                 cycles_per_flop: g("cycles_per_flop", c.compute.cycles_per_flop),
             };
+        }
+        if let Some(sc) = obj.get("scenario").and_then(|v| v.as_obj()) {
+            // `kind` selects the preset; any knob key present overrides it.
+            let mut s = match sc.get("kind").and_then(|v| v.as_str()) {
+                Some(k) => ScenarioConfig::named(k)
+                    .ok_or_else(|| ConfigError(format!("unknown scenario kind {k:?}")))?,
+                None => ScenarioConfig::default(),
+            };
+            let g = |k: &str, dv: f64| sc.get(k).and_then(|v| v.as_f64()).unwrap_or(dv);
+            let gu = |k: &str, dv: usize| sc.get(k).and_then(|v| v.as_usize()).unwrap_or(dv);
+            s.p_depart = g("p_depart", s.p_depart);
+            s.p_rejoin = g("p_rejoin", s.p_rejoin);
+            s.p_transient = g("p_transient", s.p_transient);
+            s.p_straggle = g("p_straggle", s.p_straggle);
+            s.straggle_factor = g("straggle_factor", s.straggle_factor);
+            s.mobility_m = g("mobility_m", s.mobility_m);
+            s.shadowing_std_db = g("shadowing_std_db", s.shadowing_std_db);
+            s.flash_fraction = g("flash_fraction", s.flash_fraction);
+            s.flash_round = gu("flash_round", s.flash_round);
+            s.diurnal_period = gu("diurnal_period", s.diurnal_period);
+            s.diurnal_depth = g("diurnal_depth", s.diurnal_depth);
+            c.scenario = s;
         }
         c.rounds = get_usize("rounds", c.rounds)?;
         c.local_epochs = get_usize("local_epochs", c.local_epochs)?;
@@ -584,12 +797,70 @@ mod tests {
     }
 
     #[test]
-    fn validation_rejects_odd_fedpairing_fleet() {
+    fn odd_fedpairing_fleets_are_valid() {
+        // Near-perfect matching + solo fallback removed the even-n assumption.
         let mut c = ExperimentConfig::default();
         c.n_clients = 5;
-        assert!(c.validate().is_err());
+        assert!(c.validate().is_ok());
         c.algorithm = Algorithm::VanillaFL;
-        assert!(c.validate().is_ok()); // odd fleets fine for FL
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn scenario_presets_named_and_validate() {
+        for kind in ScenarioKind::ALL {
+            let s = ScenarioConfig::preset(kind);
+            assert_eq!(s.kind, kind);
+            s.validate().unwrap();
+            assert_eq!(ScenarioConfig::named(kind.name()).unwrap(), s);
+        }
+        assert!(ScenarioConfig::named("quantum").is_none());
+        assert_eq!(
+            ScenarioKind::parse("flash_crowd"),
+            Some(ScenarioKind::FlashCrowd)
+        );
+        // Stable must be a true no-op so the default reproduces the paper.
+        let s = ScenarioConfig::default();
+        assert_eq!(s.kind, ScenarioKind::Stable);
+        assert_eq!(s.p_depart, 0.0);
+        assert_eq!(s.mobility_m, 0.0);
+        assert_eq!(s.shadowing_std_db, 0.0);
+    }
+
+    #[test]
+    fn scenario_validation_rejects_bad_knobs() {
+        let mut c = ExperimentConfig::default();
+        c.scenario.p_depart = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.scenario.straggle_factor = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.scenario.flash_round = 3; // but flash_fraction stays 0
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn scenario_json_roundtrip_with_overrides() {
+        let mut c = ExperimentConfig::default();
+        c.scenario = ScenarioConfig::preset(ScenarioKind::LossyRadio);
+        c.scenario.p_straggle = 0.25;
+        let j = c.to_json();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.scenario, c.scenario);
+        // kind alone applies the preset
+        let j = Json::parse(r#"{"scenario": {"kind": "diurnal"}}"#).unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.scenario, ScenarioConfig::preset(ScenarioKind::Diurnal));
+        // knob override on top of a named preset
+        let j =
+            Json::parse(r#"{"scenario": {"kind": "flash-crowd", "flash_round": 9}}"#).unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.scenario.kind, ScenarioKind::FlashCrowd);
+        assert_eq!(c.scenario.flash_round, 9);
+        // bad kind rejected
+        let j = Json::parse(r#"{"scenario": {"kind": "martian"}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
     }
 
     #[test]

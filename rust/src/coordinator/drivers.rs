@@ -3,6 +3,15 @@
 //! AOT artifacts through one [`Engine`] and all charged by the same latency
 //! simulator — so accuracy curves (Figs. 2–3) and round times (Tables I–II)
 //! come from one consistent system.
+//!
+//! Every loop runs under the configured fleet-dynamics scenario: each round
+//! steps [`FleetDynamics`], trains only the *present* clients, renormalizes
+//! the FedAvg weights over the participants (dropped clients contribute
+//! nothing), and records the per-round alive count. FedPairing additionally
+//! maintains its matching incrementally — departures trigger
+//! [`crate::pairing::repair_matching`] instead of a full re-pair, and an
+//! unpaired (solo) client trains the full model locally. Under the default
+//! `stable` scenario all of this reduces exactly to the paper's static loops.
 
 use crate::config::{Algorithm, ExperimentConfig};
 use crate::coordinator::metrics::{RoundRecord, RunResult};
@@ -10,23 +19,32 @@ use crate::coordinator::split::train_pair;
 use crate::data::loader::{eval_batches, Batch, Loader};
 use crate::data::partition::partition;
 use crate::data::synth::SynthCifar;
+use crate::fleet::{maintain_matching, universe_size, FleetDynamics};
 use crate::nn::{self, Params};
-use crate::pairing::pair_clients;
+use crate::pairing::Matching;
 use crate::runtime::Engine;
 use crate::sim::channel::Channel;
 use crate::sim::compute::{aggregation_weights, split_lengths};
 use crate::sim::latency::{self, Fleet, Schedule};
-use crate::{log_debug, log_info};
+use crate::log_debug;
 use anyhow::{Context, Result};
 
 /// A fully materialized experiment: fleet, data, engine, channel.
 pub struct Experiment {
     pub cfg: ExperimentConfig,
     pub engine: Engine,
+    /// The base fleet (initially-active clients; universe ids `0..n_clients`).
     pub fleet: Fleet,
+    /// The static eq. (3) channel (scenarios layer fading on top per round).
     pub channel: Channel,
+    /// The full universe fleet in its initial state (base + latent cohort) —
+    /// sampled once, so loaders, weights and per-run dynamics all index the
+    /// same clients.
+    universe: Fleet,
+    /// One loader per *universe* client (incl. any latent flash cohort).
     loaders: Vec<Loader>,
-    /// FedAvg weights `a_i`.
+    /// FedAvg weights `a_i` over the universe (renormalized per round over
+    /// the participants).
     weights: Vec<f64>,
     test: Vec<Batch>,
 }
@@ -40,9 +58,13 @@ impl Experiment {
         let fleet = Fleet::sample(&cfg, &mut rng);
         let channel = Channel::new(cfg.channel);
         let gen = SynthCifar::new(cfg.seed, cfg.noise_level);
+        // Data is partitioned over the whole universe so flash-crowd joiners
+        // arrive with their own shards. Under `stable` the universe equals
+        // the base fleet and this is byte-identical to the static path.
+        let n_universe = universe_size(&cfg);
         let shards = partition(
             &mut rng.fork(1),
-            cfg.n_clients,
+            n_universe,
             cfg.samples_per_client,
             &cfg.distribution,
         );
@@ -59,17 +81,33 @@ impl Experiment {
                 )
             })
             .collect();
-        let weights = aggregation_weights(&fleet.resources());
+        // Materialize the universe (base fleet + latent flash cohort) once;
+        // per-run dynamics are rebuilt from this exact fleet.
+        let universe = FleetDynamics::new(&cfg, fleet.clone()).universe().clone();
+        let weights = aggregation_weights(&universe.resources());
         let test = eval_batches(&gen.test_set(cfg.test_samples), engine.meta().eval_batch);
         Ok(Experiment {
             cfg,
             engine,
             fleet,
             channel,
+            universe,
             loaders,
             weights,
             test,
         })
+    }
+
+    /// Fresh fleet dynamics for one run (deterministic in the config).
+    fn dynamics(&self) -> FleetDynamics {
+        FleetDynamics::from_universe(&self.cfg, self.universe.clone())
+    }
+
+    /// Participant weights renormalized to sum to 1 (weighted FedAvg input).
+    fn renormalized_weights(&self, members: &[usize]) -> Result<Vec<f64>> {
+        let total: f64 = members.iter().map(|&c| self.weights[c]).sum();
+        anyhow::ensure!(total > 0.0, "no data among participants");
+        Ok(members.iter().map(|&c| self.weights[c] / total).collect())
     }
 
     fn schedule(&self) -> Schedule {
@@ -104,11 +142,12 @@ impl Experiment {
     /// Run the configured algorithm to completion.
     pub fn run(&mut self) -> Result<RunResult> {
         let t0 = std::time::Instant::now();
+        let mut dynamics = self.dynamics();
         let rounds = match self.cfg.algorithm {
-            Algorithm::FedPairing => self.run_fedpairing()?,
-            Algorithm::VanillaFL => self.run_fl()?,
-            Algorithm::VanillaSL => self.run_sl()?,
-            Algorithm::SplitFed => self.run_splitfed()?,
+            Algorithm::FedPairing => self.run_fedpairing(&mut dynamics)?,
+            Algorithm::VanillaFL => self.run_fl(&mut dynamics)?,
+            Algorithm::VanillaSL => self.run_sl(&mut dynamics)?,
+            Algorithm::SplitFed => self.run_splitfed(&mut dynamics)?,
         };
         Ok(RunResult {
             config: self.cfg.clone(),
@@ -122,59 +161,79 @@ impl Experiment {
     // FedPairing (the paper's system)
     // ------------------------------------------------------------------
 
-    fn run_fedpairing(&mut self) -> Result<Vec<RoundRecord>> {
+    fn run_fedpairing(&mut self, dynamics: &mut FleetDynamics) -> Result<Vec<RoundRecord>> {
         let w = self.engine.meta().layers;
+        let profile = self.engine.meta().profile();
+        let sched = self.schedule();
         let mut pairing_rng = crate::util::rng::Rng::new(self.cfg.seed ^ 0x9A1F);
-        // Initialization phase (paper Sec. II-A.1): pair once, compute
-        // (L_i, a_i), distribute the global model.
-        let pairs = pair_clients(
-            self.cfg.pairing,
-            &self.fleet,
-            &self.channel,
-            self.cfg.alpha,
-            self.cfg.beta,
-            &mut pairing_rng,
-        );
-        log_info!(
-            "fedpairing: {} pairs via {} strategy",
-            pairs.len(),
-            self.cfg.pairing
-        );
-        let splits: Vec<(usize, usize)> = pairs
-            .iter()
-            .map(|&(i, j)| split_lengths(self.fleet.freqs_hz[i], self.fleet.freqs_hz[j], w))
-            .collect();
-        // Static fleet → identical per-round latency; compute once.
-        let round_time = latency::fedpairing_round(
-            &self.fleet,
-            &pairs,
-            &self.engine.meta().profile(),
-            &self.schedule(),
-            &self.channel,
-            &self.cfg.compute,
-            true,
-        )
-        .total_s;
+        // Initialization phase (paper Sec. II-A.1) happens lazily inside
+        // `maintain_matching` on round 1; churn later repairs the matching
+        // incrementally instead of re-pairing the whole fleet.
+        let mut matching: Option<Matching> = None;
         let mut global = self.engine.init_params(self.cfg.seed as u32)?;
         let mut records = Vec::with_capacity(self.cfg.rounds);
+        let mut sim_total = 0.0f64;
         for round in 1..=self.cfg.rounds {
-            let mut locals: Vec<Params> = Vec::with_capacity(self.cfg.n_clients);
+            let ev = dynamics.step(round);
+            let channel = dynamics.channel();
+            maintain_matching(
+                &mut matching,
+                dynamics,
+                &ev,
+                &channel,
+                &self.cfg,
+                &mut pairing_rng,
+            );
+            let m = matching.as_ref().expect("matching initialized");
+            // Transient failures demote a pair's survivor to solo for this
+            // round only; the stored matching is untouched.
+            let (sub, members) = dynamics.present_view();
+            let eff = m.restricted_to(&members);
+            let cidx = |u: usize| members.binary_search(&u).expect("present member");
+            let cpairs: Vec<(usize, usize)> =
+                eff.pairs.iter().map(|&(a, b)| (cidx(a), cidx(b))).collect();
+            let csolos: Vec<usize> = eff.solos.iter().map(|&s| cidx(s)).collect();
+            let round_time = latency::fedpairing_round_with_solos(
+                &sub,
+                &cpairs,
+                &csolos,
+                &profile,
+                &sched,
+                &channel,
+                &self.cfg.compute,
+                true,
+            )
+            .total_s;
+            // Participants this round (pairs + solos) and their weights.
+            let participants: Vec<usize> = eff
+                .pairs
+                .iter()
+                .flat_map(|&(a, b)| [a, b])
+                .chain(eff.solos.iter().copied())
+                .collect();
+            let part_total: f64 = participants.iter().map(|&c| self.weights[c]).sum();
+            anyhow::ensure!(part_total > 0.0, "no data among participants");
+            let n_part = participants.len() as f64;
+            let mut locals: Vec<Params> = Vec::with_capacity(participants.len());
+            let mut agg_weights: Vec<f64> = Vec::with_capacity(participants.len());
             let mut loss_sum = 0.0;
             let mut steps = 0usize;
-            for (pi, &(i, j)) in pairs.iter().enumerate() {
-                let (l_i, l_j) = splits[pi];
-                // Normalized data weights â_i = N·a_i (≡ 1 for equal shards).
-                // The paper's literal eq.(1) scales local grads by a_i ≈ 1/N
-                // *and* averages models at the server — a double shrink that
-                // makes the net step η/N² (inconsistent with its own Fig. 2,
-                // where FedPairing out-converges FL). We keep the *relative*
-                // a_i weighting inside the pair and restore the magnitude at
+            let uni_freqs = dynamics.universe().freqs_hz.clone();
+            for &(i, j) in &eff.pairs {
+                // Split on *current* (straggle-adjusted) frequencies.
+                let (l_i, l_j) = split_lengths(uni_freqs[i], uni_freqs[j], w);
+                // Normalized data weights â_i = N·a_i over this round's
+                // participants (≡ 1 for equal shards). The paper's literal
+                // eq.(1) scales local grads by a_i ≈ 1/N *and* averages
+                // models at the server — a double shrink that makes the net
+                // step η/N² (inconsistent with its own Fig. 2, where
+                // FedPairing out-converges FL). We keep the *relative* a_i
+                // weighting inside the pair and restore the magnitude at
                 // aggregation via the standard weighted FedAvg, which is the
                 // consistent reading (DESIGN.md §2).
-                let n = self.cfg.n_clients as f32;
                 let (a_i, a_j) = (
-                    self.weights[i] as f32 * n,
-                    self.weights[j] as f32 * n,
+                    (self.weights[i] / part_total * n_part) as f32,
+                    (self.weights[j] / part_total * n_part) as f32,
                 );
                 // Loaders for i and j (split_at to appease the borrow checker).
                 let (li, lj) = {
@@ -203,57 +262,94 @@ impl Experiment {
                 steps += out.n_steps;
                 locals.push(out.model_i);
                 locals.push(out.model_j);
-            }
-            // Model aggregation (Sec. II-A.3): with normalized â_i weighting
-            // above, the consistent server rule is weighted FedAvg of the 2N
-            // local models, each carrying its owner's data weight a_i.
-            let mut agg_weights = Vec::with_capacity(locals.len());
-            for &(i, j) in &pairs {
                 agg_weights.push(self.weights[i]);
                 agg_weights.push(self.weights[j]);
             }
+            // Solo clients (odd fleets / widowed partners) train the full
+            // model locally, like a vanilla-FL participant.
+            for &s in &eff.solos {
+                let (local, l, st) = self.local_training(&global, s)?;
+                loss_sum += l;
+                steps += st;
+                locals.push(local);
+                agg_weights.push(self.weights[s]);
+            }
+            // Model aggregation (Sec. II-A.3): weighted FedAvg over this
+            // round's participant models, weights renormalized so dropped
+            // clients contribute nothing.
+            let total: f64 = agg_weights.iter().sum();
+            for x in &mut agg_weights {
+                *x /= total;
+            }
             global = nn::fedavg_weighted(&locals, &agg_weights);
             anyhow::ensure!(nn::all_finite(&global), "global model diverged (NaN/Inf)");
-            records.push(self.record(round, &global, loss_sum / steps.max(1) as f64, round_time)?);
+            sim_total += round_time;
+            records.push(self.record(
+                round,
+                &global,
+                loss_sum / steps.max(1) as f64,
+                round_time,
+                sim_total,
+                ev.n_alive,
+            )?);
         }
         Ok(records)
+    }
+
+    /// One client's full-model local training (vanilla-FL step; also the
+    /// FedPairing solo fallback): returns `(model, loss_sum, steps)`.
+    fn local_training(&mut self, global: &Params, client: usize) -> Result<(Params, f64, usize)> {
+        let mut local = global.clone();
+        let mut loss_sum = 0.0;
+        let mut steps = 0usize;
+        for _ in 0..self.cfg.local_epochs {
+            for b in self.loaders[client].epoch() {
+                let (grads, loss) = self.engine.full_step(&local, &b.x, &b.y1hot)?;
+                nn::sgd_apply(&mut local, &grads, self.cfg.lr);
+                loss_sum += loss as f64;
+                steps += 1;
+            }
+        }
+        Ok((local, loss_sum, steps))
     }
 
     // ------------------------------------------------------------------
     // Vanilla FL (FedAvg)
     // ------------------------------------------------------------------
 
-    fn run_fl(&mut self) -> Result<Vec<RoundRecord>> {
-        let round_time = latency::fl_round(
-            &self.fleet,
-            &self.engine.meta().profile(),
-            &self.schedule(),
-            &self.channel,
-            &self.cfg.compute,
-            true,
-        )
-        .total_s;
+    fn run_fl(&mut self, dynamics: &mut FleetDynamics) -> Result<Vec<RoundRecord>> {
+        let profile = self.engine.meta().profile();
+        let sched = self.schedule();
         let mut global = self.engine.init_params(self.cfg.seed as u32)?;
         let mut records = Vec::with_capacity(self.cfg.rounds);
+        let mut sim_total = 0.0f64;
         for round in 1..=self.cfg.rounds {
-            let mut locals: Vec<Params> = Vec::with_capacity(self.cfg.n_clients);
+            let ev = dynamics.step(round);
+            let channel = dynamics.channel();
+            let (sub, members) = dynamics.present_view();
+            let round_time =
+                latency::fl_round(&sub, &profile, &sched, &channel, &self.cfg.compute, true)
+                    .total_s;
+            let mut locals: Vec<Params> = Vec::with_capacity(members.len());
             let mut loss_sum = 0.0;
             let mut steps = 0usize;
-            for c in 0..self.cfg.n_clients {
-                let mut local = global.clone();
-                for _ in 0..self.cfg.local_epochs {
-                    for b in self.loaders[c].epoch() {
-                        let (grads, loss) = self.engine.full_step(&local, &b.x, &b.y1hot)?;
-                        nn::sgd_apply(&mut local, &grads, self.cfg.lr);
-                        loss_sum += loss as f64;
-                        steps += 1;
-                    }
-                }
+            for &c in &members {
+                let (local, l, st) = self.local_training(&global, c)?;
+                loss_sum += l;
+                steps += st;
                 locals.push(local);
             }
-            global = nn::fedavg_weighted(&locals, &self.weights);
+            global = nn::fedavg_weighted(&locals, &self.renormalized_weights(&members)?);
             anyhow::ensure!(nn::all_finite(&global), "global model diverged (NaN/Inf)");
-            records.push(self.record(round, &global, loss_sum / steps.max(1) as f64, round_time)?);
+            sim_total += round_time;
+            records.push(self.record(
+                round,
+                &global,
+                loss_sum / steps.max(1) as f64,
+                round_time,
+                sim_total,
+                ev.n_alive,
+            )?);
         }
         Ok(records)
     }
@@ -262,34 +358,49 @@ impl Experiment {
     // Vanilla SL (sequential relay)
     // ------------------------------------------------------------------
 
-    fn run_sl(&mut self) -> Result<Vec<RoundRecord>> {
+    fn run_sl(&mut self, dynamics: &mut FleetDynamics) -> Result<Vec<RoundRecord>> {
         let cut = self.cfg.sl_cut_layer.clamp(1, self.engine.meta().layers - 1);
-        let round_time = latency::sl_round(
-            &self.fleet,
-            &self.engine.meta().profile(),
-            &self.schedule(),
-            &self.channel,
-            &self.cfg.compute,
-            cut,
-            self.cfg.compute.server_freq_ghz * 1e9,
-        )
-        .total_s;
+        let profile = self.engine.meta().profile();
+        let sched = self.schedule();
         let global = self.engine.init_params(self.cfg.seed as u32)?;
         let (mut front, mut back) = split_params(&global, cut);
         let mut records = Vec::with_capacity(self.cfg.rounds);
+        let mut sim_total = 0.0f64;
         for round in 1..=self.cfg.rounds {
+            let ev = dynamics.step(round);
+            let channel = dynamics.channel();
+            let (sub, members) = dynamics.present_view();
+            let round_time = latency::sl_round(
+                &sub,
+                &profile,
+                &sched,
+                &channel,
+                &self.cfg.compute,
+                cut,
+                self.cfg.compute.server_freq_ghz * 1e9,
+            )
+            .total_s;
             let mut loss_sum = 0.0;
             let mut steps = 0usize;
-            // Clients take sessions sequentially; the client-side model and
-            // the server-side model both persist across the relay.
-            for c in 0..self.cfg.n_clients {
+            // Present clients take sessions sequentially; the client-side
+            // model and the server-side model both persist across the relay
+            // (absent clients are simply skipped this round).
+            for &c in &members {
                 let (l, s) = self.split_session(&mut front, &mut back, cut, c)?;
                 loss_sum += l;
                 steps += s;
             }
             let full = join_params(&front, &back);
             anyhow::ensure!(nn::all_finite(&full), "SL model diverged (NaN/Inf)");
-            records.push(self.record(round, &full, loss_sum / steps.max(1) as f64, round_time)?);
+            sim_total += round_time;
+            records.push(self.record(
+                round,
+                &full,
+                loss_sum / steps.max(1) as f64,
+                round_time,
+                sim_total,
+                ev.n_alive,
+            )?);
         }
         Ok(records)
     }
@@ -298,32 +409,39 @@ impl Experiment {
     // SplitFed
     // ------------------------------------------------------------------
 
-    fn run_splitfed(&mut self) -> Result<Vec<RoundRecord>> {
+    fn run_splitfed(&mut self, dynamics: &mut FleetDynamics) -> Result<Vec<RoundRecord>> {
         let cut = self
             .cfg
             .splitfed_cut_layer
             .clamp(1, self.engine.meta().layers - 1);
-        let round_time = latency::splitfed_round(
-            &self.fleet,
-            &self.engine.meta().profile(),
-            &self.schedule(),
-            &self.channel,
-            &self.cfg.compute,
-            cut,
-            self.cfg.compute.server_freq_ghz * 1e9,
-            true,
-        )
-        .total_s;
+        let profile = self.engine.meta().profile();
+        let sched = self.schedule();
         let mut global = self.engine.init_params(self.cfg.seed as u32)?;
         let mut records = Vec::with_capacity(self.cfg.rounds);
+        let mut sim_total = 0.0f64;
         for round in 1..=self.cfg.rounds {
-            let mut fronts: Vec<Params> = Vec::with_capacity(self.cfg.n_clients);
-            let mut backs: Vec<Params> = Vec::with_capacity(self.cfg.n_clients);
+            let ev = dynamics.step(round);
+            let channel = dynamics.channel();
+            let (sub, members) = dynamics.present_view();
+            let round_time = latency::splitfed_round(
+                &sub,
+                &profile,
+                &sched,
+                &channel,
+                &self.cfg.compute,
+                cut,
+                self.cfg.compute.server_freq_ghz * 1e9,
+                true,
+            )
+            .total_s;
+            let mut fronts: Vec<Params> = Vec::with_capacity(members.len());
+            let mut backs: Vec<Params> = Vec::with_capacity(members.len());
             let mut loss_sum = 0.0;
             let mut steps = 0usize;
-            for c in 0..self.cfg.n_clients {
-                // Every client gets a fresh copy of both halves (the server
-                // keeps one server-side instance per client, SplitFed-V1).
+            for &c in &members {
+                // Every present client gets a fresh copy of both halves (the
+                // server keeps one server-side instance per client,
+                // SplitFed-V1).
                 let (mut front, mut back) = split_params(&global, cut);
                 let (l, s) = self.split_session(&mut front, &mut back, cut, c)?;
                 loss_sum += l;
@@ -332,12 +450,21 @@ impl Experiment {
                 backs.push(back);
             }
             // Fed server averages client-side models; main server averages
-            // server-side models (both weighted by a_i).
-            let front = nn::fedavg_weighted(&fronts, &self.weights);
-            let back = nn::fedavg_weighted(&backs, &self.weights);
+            // server-side models (both weighted by a_i over the present set).
+            let agg = self.renormalized_weights(&members)?;
+            let front = nn::fedavg_weighted(&fronts, &agg);
+            let back = nn::fedavg_weighted(&backs, &agg);
             global = join_params(&front, &back);
             anyhow::ensure!(nn::all_finite(&global), "SplitFed diverged (NaN/Inf)");
-            records.push(self.record(round, &global, loss_sum / steps.max(1) as f64, round_time)?);
+            sim_total += round_time;
+            records.push(self.record(
+                round,
+                &global,
+                loss_sum / steps.max(1) as f64,
+                round_time,
+                sim_total,
+                ev.n_alive,
+            )?);
         }
         Ok(records)
     }
@@ -391,18 +518,21 @@ impl Experiment {
         model: &Params,
         train_loss: f64,
         round_time: f64,
+        sim_total: f64,
+        n_alive: usize,
     ) -> Result<RoundRecord> {
         let (test_loss, test_acc) = if self.should_eval(round) {
             self.evaluate(model)?
         } else {
             (f64::NAN, f64::NAN)
         };
-        let sim_total = round_time * round as f64;
         log_debug!(
-            "round {round}: train_loss={train_loss:.4} acc={test_acc:.4} sim={round_time:.1}s"
+            "round {round}: alive={n_alive} train_loss={train_loss:.4} acc={test_acc:.4} \
+             sim={round_time:.1}s"
         );
         Ok(RoundRecord {
             round,
+            n_alive,
             train_loss,
             test_acc,
             test_loss,
@@ -522,5 +652,33 @@ mod tests {
         cfg.pairing = PairingStrategy::Random;
         let res = run_experiment(cfg).unwrap();
         assert!(res.final_acc().is_finite());
+    }
+
+    #[test]
+    fn odd_fleet_trains_with_solo() {
+        if !artifacts_ready() {
+            return;
+        }
+        let mut cfg = quick_cfg(Algorithm::FedPairing);
+        cfg.n_clients = 5; // forces one solo client every round
+        let res = run_experiment(cfg).unwrap();
+        assert!(res.final_acc().is_finite());
+        assert!(res.rounds.iter().all(|r| r.n_alive == 5));
+    }
+
+    #[test]
+    fn churn_scenario_trains_and_records_alive_counts() {
+        if !artifacts_ready() {
+            return;
+        }
+        use crate::config::{ScenarioConfig, ScenarioKind};
+        let mut cfg = quick_cfg(Algorithm::FedPairing);
+        cfg.n_clients = 6;
+        cfg.rounds = 6;
+        cfg.scenario = ScenarioConfig::preset(ScenarioKind::LossyRadio);
+        let res = run_experiment(cfg).unwrap();
+        assert_eq!(res.rounds.len(), 6);
+        assert!(res.final_acc().is_finite());
+        assert!(res.rounds.iter().all(|r| r.n_alive >= 1));
     }
 }

@@ -11,6 +11,9 @@ use crate::util::json::{Json, JsonObj};
 #[derive(Clone, Debug)]
 pub struct RoundRecord {
     pub round: usize,
+    /// Clients that actually participated this round (static fleets:
+    /// `n_clients` every round; dynamic scenarios: the churn-adjusted count).
+    pub n_alive: usize,
     /// Mean training loss across all local batches this round.
     pub train_loss: f64,
     /// Top-1 accuracy on the shared test set (NaN when eval skipped).
@@ -71,13 +74,29 @@ impl RunResult {
             .collect()
     }
 
+    /// Mean participating clients per round.
+    pub fn mean_alive(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.rounds.iter().map(|r| r.n_alive as f64).sum::<f64>() / self.rounds.len() as f64
+    }
+
     /// CSV rendering (header + one row per round).
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("round,train_loss,test_loss,test_acc,sim_round_s,sim_total_s\n");
+        let mut s = String::from(
+            "round,n_alive,train_loss,test_loss,test_acc,sim_round_s,sim_total_s\n",
+        );
         for r in &self.rounds {
             s.push_str(&format!(
-                "{},{:.6},{:.6},{:.6},{:.3},{:.3}\n",
-                r.round, r.train_loss, r.test_loss, r.test_acc, r.sim_round_s, r.sim_total_s
+                "{},{},{:.6},{:.6},{:.6},{:.3},{:.3}\n",
+                r.round,
+                r.n_alive,
+                r.train_loss,
+                r.test_loss,
+                r.test_acc,
+                r.sim_round_s,
+                r.sim_total_s
             ));
         }
         s
@@ -92,12 +111,14 @@ impl RunResult {
         o.insert("final_acc", Json::num(self.final_acc()));
         o.insert("best_acc", Json::num(self.best_acc()));
         o.insert("mean_round_s", Json::num(self.mean_round_s()));
+        o.insert("mean_alive", Json::num(self.mean_alive()));
         let rounds: Vec<Json> = self
             .rounds
             .iter()
             .map(|r| {
                 let mut ro = JsonObj::new();
                 ro.insert("round", Json::num(r.round as f64));
+                ro.insert("n_alive", Json::num(r.n_alive as f64));
                 ro.insert("train_loss", Json::num(r.train_loss));
                 ro.insert("test_loss", Json::num(r.test_loss));
                 ro.insert("test_acc", Json::num(r.test_acc));
@@ -139,6 +160,7 @@ mod tests {
             rounds: vec![
                 RoundRecord {
                     round: 1,
+                    n_alive: 20,
                     train_loss: 2.0,
                     test_acc: 0.3,
                     test_loss: 2.1,
@@ -147,6 +169,7 @@ mod tests {
                 },
                 RoundRecord {
                     round: 2,
+                    n_alive: 18,
                     train_loss: 1.5,
                     test_acc: f64::NAN,
                     test_loss: f64::NAN,
@@ -155,6 +178,7 @@ mod tests {
                 },
                 RoundRecord {
                     round: 3,
+                    n_alive: 19,
                     train_loss: 1.2,
                     test_acc: 0.5,
                     test_loss: 1.4,
@@ -184,7 +208,14 @@ mod tests {
     fn csv_has_all_rounds() {
         let csv = result().to_csv();
         assert_eq!(csv.lines().count(), 4);
-        assert!(csv.starts_with("round,"));
+        assert!(csv.starts_with("round,n_alive,"));
+        assert!(csv.lines().nth(1).unwrap().starts_with("1,20,"));
+    }
+
+    #[test]
+    fn mean_alive_averages_participation() {
+        let r = result();
+        assert!((r.mean_alive() - (20.0 + 18.0 + 19.0) / 3.0).abs() < 1e-12);
     }
 
     #[test]

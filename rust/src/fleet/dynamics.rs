@@ -1,0 +1,424 @@
+//! The per-round fleet process: churn, transient failures, stragglers,
+//! mobility and channel shadowing.
+//!
+//! [`FleetDynamics`] owns a *universe* fleet — the initially-active clients
+//! plus any latent flash-crowd cohort — and evolves four pieces of state each
+//! round: which clients are **alive** (joined and not departed), which are
+//! **present** (alive and not transiently failed/asleep), each client's
+//! effective CPU frequency (straggler injection), and the channel state
+//! (client positions drift; a global log-normal shadowing factor re-draws).
+//!
+//! Every draw comes from one dedicated PCG stream derived from
+//! `(seed, 0xF1EE7D11A)`, consumed in a deterministic order, so two
+//! `FleetDynamics` built from the same config produce bit-identical
+//! [`RoundEvents`] traces — a property the integration tests rely on.
+
+use crate::config::{ChannelConfig, ExperimentConfig, ScenarioConfig};
+use crate::sim::channel::Channel;
+use crate::sim::compute::sample_frequencies;
+use crate::sim::geometry::place_uniform_disk;
+use crate::sim::latency::Fleet;
+use crate::util::rng::Rng;
+
+/// Stream-id salt for all fleet-dynamics randomness.
+const FLEET_STREAM_SALT: u64 = 0xF1EE7_D11A;
+
+/// Everything that happened to the fleet in one round.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundEvents {
+    pub round: usize,
+    /// Clients that (re)joined this round (flash cohort or rejoiners).
+    pub joined: Vec<usize>,
+    /// Clients that durably departed this round.
+    pub departed: Vec<usize>,
+    /// Alive clients that miss this round (transient failure / asleep).
+    pub transient_out: Vec<usize>,
+    /// Present clients running at `straggle_factor × f_i` this round.
+    pub stragglers: Vec<usize>,
+    /// This round's global shadowing draw in dB (0 when disabled).
+    pub shadowing_db: f64,
+    /// Number of clients actually participating this round.
+    pub n_alive: usize,
+}
+
+/// Total number of potential clients (initial fleet + latent flash cohort).
+pub fn universe_size(cfg: &ExperimentConfig) -> usize {
+    let sc = &cfg.scenario;
+    let extra = if sc.flash_round > 0 {
+        (cfg.n_clients as f64 * sc.flash_fraction).ceil() as usize
+    } else {
+        0
+    };
+    cfg.n_clients + extra
+}
+
+/// The evolving fleet (see module docs).
+#[derive(Clone, Debug)]
+pub struct FleetDynamics {
+    scenario: ScenarioConfig,
+    channel_cfg: ChannelConfig,
+    area_radius_m: f64,
+    /// Universe fleet; positions and freqs mutate round to round.
+    universe: Fleet,
+    /// Unslowed CPU frequencies (straggling is transient).
+    base_freqs: Vec<f64>,
+    alive: Vec<bool>,
+    present: Vec<bool>,
+    /// Flash-crowd cohort members that have not joined yet.
+    latent: Vec<bool>,
+    rng: Rng,
+    /// Current global shadowing factor in dB.
+    fade_db: f64,
+}
+
+impl FleetDynamics {
+    /// Build from an already-sampled base fleet (so the `stable` scenario
+    /// reuses the exact fleet the static path would). The latent flash
+    /// cohort, if any, is sampled here from a dedicated stream.
+    pub fn new(cfg: &ExperimentConfig, base: Fleet) -> FleetDynamics {
+        assert_eq!(
+            base.n(),
+            cfg.n_clients,
+            "base fleet size must equal n_clients"
+        );
+        let total = universe_size(cfg);
+        let extra = total - cfg.n_clients;
+        let mut universe = base;
+        if extra > 0 {
+            let mut cohort_rng = Rng::with_stream(cfg.seed ^ FLEET_STREAM_SALT, 1);
+            universe
+                .positions
+                .extend(place_uniform_disk(&mut cohort_rng, extra, cfg.area_radius_m));
+            universe
+                .freqs_hz
+                .extend(sample_frequencies(&mut cohort_rng, extra, &cfg.compute));
+            universe
+                .n_samples
+                .extend(std::iter::repeat(cfg.samples_per_client).take(extra));
+        }
+        Self::from_universe(cfg, universe)
+    }
+
+    /// Build from an already-materialized universe fleet (base clients +
+    /// latent cohort, in that order). Lets a caller sample the universe
+    /// once, keep it, and construct fresh dynamics from it per run without
+    /// relying on two constructions sampling identically.
+    pub fn from_universe(cfg: &ExperimentConfig, universe: Fleet) -> FleetDynamics {
+        assert_eq!(
+            universe.n(),
+            universe_size(cfg),
+            "universe fleet size must equal universe_size(cfg)"
+        );
+        let extra = universe.n() - cfg.n_clients;
+        let mut alive = vec![true; cfg.n_clients];
+        alive.extend(std::iter::repeat(false).take(extra));
+        let mut latent = vec![false; cfg.n_clients];
+        latent.extend(std::iter::repeat(true).take(extra));
+        FleetDynamics {
+            scenario: cfg.scenario,
+            channel_cfg: cfg.channel,
+            area_radius_m: cfg.area_radius_m,
+            base_freqs: universe.freqs_hz.clone(),
+            present: alive.clone(),
+            universe,
+            alive,
+            latent,
+            rng: Rng::with_stream(cfg.seed ^ FLEET_STREAM_SALT, 2),
+            fade_db: 0.0,
+        }
+    }
+
+    /// Advance the fleet to `round` (1-based, called once per round in
+    /// order) and report what changed.
+    pub fn step(&mut self, round: usize) -> RoundEvents {
+        let sc = self.scenario;
+        let n = self.universe.n();
+        let mut ev = RoundEvents {
+            round,
+            joined: Vec::new(),
+            departed: Vec::new(),
+            transient_out: Vec::new(),
+            stragglers: Vec::new(),
+            shadowing_db: 0.0,
+            n_alive: 0,
+        };
+        // 1. Flash-crowd cohort joins all at once.
+        if sc.flash_round > 0 && round == sc.flash_round {
+            for c in 0..n {
+                if self.latent[c] {
+                    self.latent[c] = false;
+                    self.alive[c] = true;
+                    ev.joined.push(c);
+                }
+            }
+        }
+        // 2. Departed clients may rejoin.
+        if sc.p_rejoin > 0.0 {
+            for c in 0..n {
+                if !self.alive[c] && !self.latent[c] && self.rng.f64() < sc.p_rejoin {
+                    self.alive[c] = true;
+                    ev.joined.push(c);
+                }
+            }
+        }
+        // 3. Durable departures (the fleet never empties entirely).
+        if sc.p_depart > 0.0 {
+            let mut alive_count = self.alive.iter().filter(|&&a| a).count();
+            for c in 0..n {
+                if self.alive[c] && alive_count > 1 && self.rng.f64() < sc.p_depart {
+                    self.alive[c] = false;
+                    alive_count -= 1;
+                    ev.departed.push(c);
+                }
+            }
+        }
+        // 4. Transient failures + the diurnal availability wave.
+        let p_sleep = if sc.diurnal_period > 0 {
+            let phase = 2.0 * std::f64::consts::PI * round as f64 / sc.diurnal_period as f64;
+            sc.diurnal_depth * 0.5 * (1.0 - phase.cos())
+        } else {
+            0.0
+        };
+        let p_out = (sc.p_transient + p_sleep).min(1.0);
+        for c in 0..n {
+            self.present[c] = self.alive[c];
+            if self.alive[c] && p_out > 0.0 && self.rng.f64() < p_out {
+                self.present[c] = false;
+                ev.transient_out.push(c);
+            }
+        }
+        // Guard: a round always has at least one participant.
+        if !self.present.iter().any(|&p| p) {
+            if let Some(first) = (0..n).find(|&c| self.alive[c]) {
+                self.present[first] = true;
+                ev.transient_out.retain(|&c| c != first);
+            }
+        }
+        // 5. Straggler injection (freqs reset to base for everyone else).
+        for c in 0..n {
+            let mut f = self.base_freqs[c];
+            if self.present[c] && sc.p_straggle > 0.0 && self.rng.f64() < sc.p_straggle {
+                f *= sc.straggle_factor;
+                ev.stragglers.push(c);
+            }
+            self.universe.freqs_hz[c] = f;
+        }
+        // 6. Mobility: alive clients random-walk inside the disk.
+        if sc.mobility_m > 0.0 {
+            for c in 0..n {
+                if self.alive[c] {
+                    let dx = self.rng.normal_ms(0.0, sc.mobility_m);
+                    let dy = self.rng.normal_ms(0.0, sc.mobility_m);
+                    let p = &mut self.universe.positions[c];
+                    p.x += dx;
+                    p.y += dy;
+                    let d = p.dist_to_server();
+                    if d > self.area_radius_m {
+                        let s = self.area_radius_m / d;
+                        p.x *= s;
+                        p.y *= s;
+                    }
+                }
+            }
+        }
+        // 7. Channel shadowing re-draw (block fading: one draw per round).
+        self.fade_db = if sc.shadowing_std_db > 0.0 {
+            self.rng.normal_ms(0.0, sc.shadowing_std_db)
+        } else {
+            0.0
+        };
+        ev.shadowing_db = self.fade_db;
+        ev.n_alive = self.present.iter().filter(|&&p| p).count();
+        ev
+    }
+
+    /// The full universe fleet in its *current* state (positions and
+    /// straggle-adjusted frequencies as of the last `step`).
+    pub fn universe(&self) -> &Fleet {
+        &self.universe
+    }
+
+    /// Universe ids of clients currently alive (matching membership).
+    pub fn alive_indices(&self) -> Vec<usize> {
+        (0..self.universe.n()).filter(|&c| self.alive[c]).collect()
+    }
+
+    /// Universe ids participating in the current round.
+    pub fn present_indices(&self) -> Vec<usize> {
+        (0..self.universe.n())
+            .filter(|&c| self.present[c])
+            .collect()
+    }
+
+    /// Compact fleet of this round's participants plus the compact→universe
+    /// id map (ascending, so `members.binary_search(&u)` inverts it).
+    pub fn present_view(&self) -> (Fleet, Vec<usize>) {
+        let members = self.present_indices();
+        (self.universe.subset(&members), members)
+    }
+
+    /// This round's channel: the configured eq. (3) model with the current
+    /// shadowing draw folded into the reference gain.
+    pub fn channel(&self) -> Channel {
+        let mut cfg = self.channel_cfg;
+        cfg.ref_gain *= 10f64.powf(self.fade_db / 10.0);
+        Channel::new(cfg)
+    }
+
+    pub fn scenario(&self) -> &ScenarioConfig {
+        &self.scenario
+    }
+
+    /// Run the full churn trace for a config without training anything —
+    /// the determinism contract's test surface.
+    pub fn trace(cfg: &ExperimentConfig) -> Vec<RoundEvents> {
+        let base = Fleet::sample(cfg, &mut Rng::new(cfg.seed));
+        let mut d = FleetDynamics::new(cfg, base);
+        (1..=cfg.rounds).map(|r| d.step(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ScenarioConfig, ScenarioKind};
+
+    fn cfg_with(kind: ScenarioKind, n: usize, rounds: usize, seed: u64) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n_clients = n;
+        cfg.rounds = rounds;
+        cfg.seed = seed;
+        cfg.scenario = ScenarioConfig::preset(kind);
+        cfg
+    }
+
+    #[test]
+    fn stable_scenario_is_a_true_noop() {
+        let cfg = cfg_with(ScenarioKind::Stable, 10, 5, 3);
+        let base = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+        let positions = base.positions.clone();
+        let freqs = base.freqs_hz.clone();
+        let mut d = FleetDynamics::new(&cfg, base);
+        for round in 1..=5 {
+            let ev = d.step(round);
+            assert!(ev.joined.is_empty() && ev.departed.is_empty());
+            assert!(ev.transient_out.is_empty() && ev.stragglers.is_empty());
+            assert_eq!(ev.shadowing_db, 0.0);
+            assert_eq!(ev.n_alive, 10);
+        }
+        // Fleet state untouched, channel identical to the static one.
+        assert_eq!(d.universe().positions, positions);
+        assert_eq!(d.universe().freqs_hz, freqs);
+        let ch = d.channel();
+        assert_eq!(ch.config().ref_gain, cfg.channel.ref_gain);
+    }
+
+    #[test]
+    fn traces_are_bit_identical_for_same_seed_and_scenario() {
+        for kind in ScenarioKind::ALL {
+            let cfg = cfg_with(kind, 12, 30, 77);
+            let a = FleetDynamics::trace(&cfg);
+            let b = FleetDynamics::trace(&cfg);
+            assert_eq!(a, b, "{kind:?} trace not deterministic");
+        }
+    }
+
+    #[test]
+    fn different_seeds_give_different_churn() {
+        let a = FleetDynamics::trace(&cfg_with(ScenarioKind::LossyRadio, 12, 30, 1));
+        let b = FleetDynamics::trace(&cfg_with(ScenarioKind::LossyRadio, 12, 30, 2));
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn flash_crowd_cohort_joins_at_flash_round() {
+        let cfg = cfg_with(ScenarioKind::FlashCrowd, 10, 10, 5);
+        assert_eq!(universe_size(&cfg), 15); // +50 %
+        let base = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+        let mut d = FleetDynamics::new(&cfg, base);
+        assert_eq!(d.universe().n(), 15);
+        assert_eq!(d.alive_indices().len(), 10);
+        let mut saw_flash = false;
+        for round in 1..=10 {
+            let ev = d.step(round);
+            if round == cfg.scenario.flash_round {
+                // All five latent clients join at once (ids 10..15).
+                assert!(ev.joined.iter().filter(|&&c| c >= 10).count() == 5, "{ev:?}");
+                saw_flash = true;
+            }
+        }
+        assert!(saw_flash);
+    }
+
+    #[test]
+    fn lossy_radio_churns_and_fades() {
+        let cfg = cfg_with(ScenarioKind::LossyRadio, 14, 40, 9);
+        let trace = FleetDynamics::trace(&cfg);
+        let departures: usize = trace.iter().map(|e| e.departed.len()).sum();
+        let stragglers: usize = trace.iter().map(|e| e.stragglers.len()).sum();
+        let transients: usize = trace.iter().map(|e| e.transient_out.len()).sum();
+        assert!(departures > 0, "no departures over 40 lossy rounds");
+        assert!(stragglers > 0);
+        assert!(transients > 0);
+        assert!(trace.iter().any(|e| e.shadowing_db != 0.0));
+        // Alive counts recorded every round and never zero.
+        assert!(trace.iter().all(|e| e.n_alive >= 1));
+        // Churn actually moves the participation level around.
+        let min = trace.iter().map(|e| e.n_alive).min().unwrap();
+        let max = trace.iter().map(|e| e.n_alive).max().unwrap();
+        assert!(min < max, "alive count never varied: {min}");
+    }
+
+    #[test]
+    fn diurnal_wave_dips_availability() {
+        let cfg = cfg_with(ScenarioKind::Diurnal, 20, 20, 21);
+        let trace = FleetDynamics::trace(&cfg);
+        // Near the trough (round = period/2 = 10) more clients sleep than
+        // near the crest (round = period = 20).
+        let trough: usize = trace[8..12].iter().map(|e| e.transient_out.len()).sum();
+        let crest = trace[19].transient_out.len() + trace[0].transient_out.len();
+        assert!(trough > crest, "trough {trough} !> crest {crest}");
+    }
+
+    #[test]
+    fn mobility_stays_inside_the_disk() {
+        let mut cfg = cfg_with(ScenarioKind::LossyRadio, 10, 50, 13);
+        cfg.scenario.mobility_m = 10.0; // violent drift
+        let base = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+        let mut d = FleetDynamics::new(&cfg, base);
+        for round in 1..=50 {
+            d.step(round);
+            for p in &d.universe().positions {
+                assert!(p.dist_to_server() <= cfg.area_radius_m + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn never_departs_below_one_alive() {
+        let mut cfg = cfg_with(ScenarioKind::LossyRadio, 3, 200, 17);
+        cfg.scenario.p_depart = 0.9;
+        cfg.scenario.p_rejoin = 0.0;
+        let base = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+        let mut d = FleetDynamics::new(&cfg, base);
+        for round in 1..=200 {
+            let ev = d.step(round);
+            assert!(!d.alive_indices().is_empty());
+            assert!(ev.n_alive >= 1);
+        }
+    }
+
+    #[test]
+    fn shadowing_moves_the_channel() {
+        let cfg = cfg_with(ScenarioKind::LossyRadio, 8, 10, 23);
+        let base = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+        let mut d = FleetDynamics::new(&cfg, base);
+        let mut gains = Vec::new();
+        for round in 1..=10 {
+            d.step(round);
+            gains.push(d.channel().config().ref_gain);
+        }
+        gains.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(gains[0] < gains[9], "shadowing never changed the gain");
+    }
+}

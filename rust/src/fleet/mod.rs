@@ -1,0 +1,156 @@
+//! Fleet dynamics — the fleet as a *process*, not a one-shot sample.
+//!
+//! The paper (and the seed reproduction) freezes the fleet at round 0: every
+//! client survives all rounds and the eq. (3) channel never moves. Real edge
+//! deployments churn — clients arrive, depart, fail transiently, straggle,
+//! and see fading links (cf. arXiv:2411.13907, arXiv:2310.15584). This
+//! subsystem makes all of that first-class while keeping the substrate's
+//! determinism contract: every draw comes from dedicated `util::rng` streams,
+//! so a `(seed, scenario)` pair replays bit-identically.
+//!
+//! * [`dynamics`] — [`FleetDynamics`]: per-round churn (arrival/departure/
+//!   rejoin), transient failures, diurnal availability waves, straggler
+//!   slowdowns, client mobility, and per-round log-normal shadowing layered
+//!   on `sim::channel` (pairing weights go stale and must be refreshed).
+//! * [`sim_driver`] — an engine-free scenario runner that produces a full
+//!   [`crate::coordinator::RunResult`] from the latency simulator alone
+//!   (round times + per-round alive counts, no model training), used by the
+//!   `fedpairing churn` CLI, `examples/churn_fleet.rs` and the benches.
+//! * [`maintain_matching`] — the shared create-or-repair step both the
+//!   training drivers and the sim driver call each round: initial pairing via
+//!   the configured strategy, then *incremental* repair
+//!   ([`crate::pairing::repair_matching`]) when churn hits, logged at INFO.
+//!
+//! Scenario presets (`stable`, `diurnal`, `flash-crowd`, `lossy-radio`) live
+//! in [`crate::config::ScenarioConfig`] so they load from the same JSON
+//! config as everything else.
+
+pub mod dynamics;
+pub mod sim_driver;
+
+pub use dynamics::{universe_size, FleetDynamics, RoundEvents};
+pub use sim_driver::{simulate_scenario, ScenarioRun};
+
+use crate::config::{ExperimentConfig, PairingStrategy};
+use crate::log_info;
+use crate::pairing::{pair_members, repair_matching, Matching};
+use crate::sim::channel::Channel;
+use crate::util::rng::{splitmix64, Rng};
+
+/// Create or incrementally repair the FedPairing matching for this round.
+///
+/// * First call (`matching` is `None`): full pairing of the alive set via the
+///   configured strategy.
+/// * Later rounds: a no-op unless this round saw departures or joins; then
+///   only the affected clients are re-matched on *fresh* channel weights,
+///   with the repair logged at INFO.
+///
+/// Returns `true` when the matching changed.
+pub fn maintain_matching(
+    matching: &mut Option<Matching>,
+    dynamics: &FleetDynamics,
+    ev: &RoundEvents,
+    channel: &Channel,
+    cfg: &ExperimentConfig,
+    pairing_rng: &mut Rng,
+) -> bool {
+    let alive = dynamics.alive_indices();
+    match matching {
+        None => {
+            let m = pair_members(
+                cfg.pairing,
+                dynamics.universe(),
+                channel,
+                cfg.alpha,
+                cfg.beta,
+                pairing_rng,
+                &alive,
+            );
+            log_info!(
+                "round {}: initial pairing via {} — {} pair(s), {} solo",
+                ev.round,
+                cfg.pairing,
+                m.pairs.len(),
+                m.solos.len()
+            );
+            *matching = Some(m);
+            true
+        }
+        Some(m) => {
+            if ev.departed.is_empty() && ev.joined.is_empty() {
+                return false;
+            }
+            let uni = dynamics.universe();
+            // Repair with the *configured* mechanism's objective — repairing
+            // a random/location/compute baseline with eq. (5) weights would
+            // drift its matching toward the FedPairing criterion over churn.
+            let nonce = pairing_rng.next_u64();
+            let weight: Box<dyn Fn(usize, usize) -> f64 + '_> = match cfg.pairing {
+                PairingStrategy::Greedy | PairingStrategy::Exact => Box::new(|a, b| {
+                    let df = (uni.freqs_hz[a] - uni.freqs_hz[b]) / 1e9;
+                    cfg.alpha * df * df
+                        + cfg.beta * channel.rate(&uni.positions[a], &uni.positions[b])
+                }),
+                PairingStrategy::Random => Box::new(move |a, b| {
+                    // Deterministic per-round pseudo-random weight.
+                    let mut s = nonce ^ ((a as u64) << 32) ^ b as u64;
+                    splitmix64(&mut s) as f64
+                }),
+                PairingStrategy::Location => {
+                    Box::new(|a, b| -uni.positions[a].dist(&uni.positions[b]))
+                }
+                PairingStrategy::Compute => Box::new(|a, b| {
+                    let df = (uni.freqs_hz[a] - uni.freqs_hz[b]) / 1e9;
+                    df * df
+                }),
+            };
+            let rep = repair_matching(m, &alive, |a, b| weight(a, b));
+            if rep.changed() {
+                log_info!(
+                    "round {}: incremental re-pair — dropped {:?}, formed {:?}, solo {:?} \
+                     ({} pair(s) untouched)",
+                    ev.round,
+                    rep.dropped_pairs,
+                    rep.new_pairs,
+                    rep.new_solos,
+                    rep.kept_pairs
+                );
+            }
+            rep.changed()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ScenarioConfig, ScenarioKind};
+    use crate::sim::latency::Fleet;
+
+    #[test]
+    fn maintain_matching_initial_then_repair() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n_clients = 8;
+        cfg.scenario = ScenarioConfig::preset(ScenarioKind::LossyRadio);
+        let base = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+        let mut dynamics = FleetDynamics::new(&cfg, base);
+        let mut rng = Rng::new(1);
+        let mut matching = None;
+        let ev = dynamics.step(1);
+        let ch = dynamics.channel();
+        assert!(maintain_matching(&mut matching, &dynamics, &ev, &ch, &cfg, &mut rng));
+        let m = matching.as_ref().unwrap();
+        assert!(m.is_valid_over(&dynamics.alive_indices()), "{m:?}");
+        // Step until churn hits, then the matching must stay valid.
+        for round in 2..=40 {
+            let ev = dynamics.step(round);
+            let ch = dynamics.channel();
+            maintain_matching(&mut matching, &dynamics, &ev, &ch, &cfg, &mut rng);
+            let m = matching.as_ref().unwrap();
+            assert!(
+                m.is_valid_over(&dynamics.alive_indices()),
+                "round {round}: {m:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! Engine-free scenario runs: the full fleet-dynamics × pairing × latency
+//! pipeline without model training.
+//!
+//! Training against the AOT artifacts needs the XLA backend; everything the
+//! *fleet* layer contributes — churn traces, incremental re-pairing, per-round
+//! latency under fading channels, alive-client accounting — does not. This
+//! driver runs any algorithm's latency loop under any scenario and emits a
+//! regular [`RunResult`] (accuracy fields are NaN, exactly like skipped-eval
+//! rounds), so the CLI, examples and benches share the metrics sinks with the
+//! real training path.
+
+use super::dynamics::{FleetDynamics, RoundEvents};
+use super::maintain_matching;
+use crate::config::{Algorithm, ConfigError, ExperimentConfig};
+use crate::coordinator::metrics::{RoundRecord, RunResult};
+use crate::pairing::Matching;
+use crate::sim::latency::{self, Fleet, Schedule};
+use crate::sim::profile::ModelProfile;
+use crate::util::rng::Rng;
+
+/// A completed scenario simulation.
+#[derive(Clone, Debug)]
+pub struct ScenarioRun {
+    /// Standard run result: per-round times, `n_alive`, config echo.
+    pub result: RunResult,
+    /// The full churn trace (one entry per round).
+    pub trace: Vec<RoundEvents>,
+    /// Rounds in which the matching was incrementally repaired.
+    pub repaired_rounds: usize,
+}
+
+impl ScenarioRun {
+    /// Mean participating clients per round (delegates to the result — one
+    /// source of truth for the statistic).
+    pub fn mean_alive(&self) -> f64 {
+        self.result.mean_alive()
+    }
+
+    pub fn total_departures(&self) -> usize {
+        self.trace.iter().map(|e| e.departed.len()).sum()
+    }
+
+    pub fn total_joins(&self) -> usize {
+        self.trace.iter().map(|e| e.joined.len()).sum()
+    }
+}
+
+/// Simulate `cfg.rounds` rounds of the configured algorithm under the
+/// configured scenario (latency + churn only; no training).
+pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigError> {
+    cfg.validate()?;
+    let t0 = std::time::Instant::now();
+    let base = Fleet::sample(cfg, &mut Rng::new(cfg.seed));
+    let mut dynamics = FleetDynamics::new(cfg, base);
+    let profile = ModelProfile::resnet18_cifar();
+    let sched = Schedule {
+        batch_size: 32,
+        epochs: cfg.local_epochs,
+    };
+    let mut pairing_rng = Rng::new(cfg.seed ^ 0x9A1F);
+    let mut matching: Option<Matching> = None;
+    let mut records = Vec::with_capacity(cfg.rounds);
+    let mut trace = Vec::with_capacity(cfg.rounds);
+    let mut repaired_rounds = 0usize;
+    let mut sim_total = 0.0f64;
+    for round in 1..=cfg.rounds {
+        let ev = dynamics.step(round);
+        let channel = dynamics.channel();
+        let (sub, members) = dynamics.present_view();
+        let round_s = match cfg.algorithm {
+            Algorithm::FedPairing => {
+                let had_matching = matching.is_some();
+                let changed = maintain_matching(
+                    &mut matching,
+                    &dynamics,
+                    &ev,
+                    &channel,
+                    cfg,
+                    &mut pairing_rng,
+                );
+                if had_matching && changed {
+                    repaired_rounds += 1;
+                }
+                let eff = matching
+                    .as_ref()
+                    .expect("matching initialized")
+                    .restricted_to(&members);
+                let cidx = |u: usize| members.binary_search(&u).expect("present member");
+                let cpairs: Vec<(usize, usize)> =
+                    eff.pairs.iter().map(|&(a, b)| (cidx(a), cidx(b))).collect();
+                let csolos: Vec<usize> = eff.solos.iter().map(|&s| cidx(s)).collect();
+                latency::fedpairing_round_with_solos(
+                    &sub,
+                    &cpairs,
+                    &csolos,
+                    &profile,
+                    &sched,
+                    &channel,
+                    &cfg.compute,
+                    true,
+                )
+                .total_s
+            }
+            Algorithm::VanillaFL => {
+                latency::fl_round(&sub, &profile, &sched, &channel, &cfg.compute, true).total_s
+            }
+            Algorithm::VanillaSL => latency::sl_round(
+                &sub,
+                &profile,
+                &sched,
+                &channel,
+                &cfg.compute,
+                cfg.sl_cut_layer.clamp(1, profile.w() - 1),
+                cfg.compute.server_freq_ghz * 1e9,
+            )
+            .total_s,
+            Algorithm::SplitFed => latency::splitfed_round(
+                &sub,
+                &profile,
+                &sched,
+                &channel,
+                &cfg.compute,
+                cfg.splitfed_cut_layer.clamp(1, profile.w() - 1),
+                cfg.compute.server_freq_ghz * 1e9,
+                true,
+            )
+            .total_s,
+        };
+        sim_total += round_s;
+        records.push(RoundRecord {
+            round,
+            n_alive: ev.n_alive,
+            train_loss: f64::NAN,
+            test_acc: f64::NAN,
+            test_loss: f64::NAN,
+            sim_round_s: round_s,
+            sim_total_s: sim_total,
+        });
+        trace.push(ev);
+    }
+    Ok(ScenarioRun {
+        result: RunResult {
+            config: cfg.clone(),
+            rounds: records,
+            wall_s: t0.elapsed().as_secs_f64(),
+            total_execs: 0,
+        },
+        trace,
+        repaired_rounds,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ScenarioConfig, ScenarioKind};
+
+    fn cfg(kind: ScenarioKind, algo: Algorithm) -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        c.n_clients = 12;
+        c.rounds = 30;
+        c.samples_per_client = 250;
+        c.algorithm = algo;
+        c.scenario = ScenarioConfig::preset(kind);
+        c
+    }
+
+    #[test]
+    fn all_algorithms_run_under_all_scenarios() {
+        for kind in ScenarioKind::ALL {
+            for algo in [
+                Algorithm::FedPairing,
+                Algorithm::VanillaFL,
+                Algorithm::VanillaSL,
+                Algorithm::SplitFed,
+            ] {
+                let run = simulate_scenario(&cfg(kind, algo)).unwrap();
+                assert_eq!(run.result.rounds.len(), 30, "{kind:?}/{algo:?}");
+                assert!(
+                    run.result.rounds.iter().all(|r| r.sim_round_s > 0.0),
+                    "{kind:?}/{algo:?}"
+                );
+                assert!(run.result.rounds.iter().all(|r| r.n_alive >= 1));
+            }
+        }
+    }
+
+    #[test]
+    fn flash_crowd_departs_and_repairs() {
+        // The acceptance-criteria path: a FedPairing run under flash-crowd
+        // must see a mid-run departure, repair the matching, and record
+        // per-round alive counts.
+        let run = simulate_scenario(&cfg(ScenarioKind::FlashCrowd, Algorithm::FedPairing))
+            .unwrap();
+        assert!(run.total_departures() > 0, "no departure in 30 rounds");
+        assert!(run.repaired_rounds > 0, "matching never repaired");
+        assert!(run.total_joins() > 0, "flash cohort never joined");
+        let alive: Vec<usize> = run.result.rounds.iter().map(|r| r.n_alive).collect();
+        assert_eq!(alive.len(), 30);
+        assert!(alive.iter().any(|&a| a != alive[0]), "alive never varied");
+    }
+
+    #[test]
+    fn stable_scenario_times_are_constant() {
+        let run = simulate_scenario(&cfg(ScenarioKind::Stable, Algorithm::FedPairing)).unwrap();
+        let t0 = run.result.rounds[0].sim_round_s;
+        assert!(run.result.rounds.iter().all(|r| r.sim_round_s == t0));
+        assert!(run.result.rounds.iter().all(|r| r.n_alive == 12));
+        assert_eq!(run.repaired_rounds, 0);
+        assert_eq!(run.total_departures(), 0);
+    }
+
+    #[test]
+    fn scenario_runs_are_deterministic() {
+        let c = cfg(ScenarioKind::LossyRadio, Algorithm::FedPairing);
+        let a = simulate_scenario(&c).unwrap();
+        let b = simulate_scenario(&c).unwrap();
+        assert_eq!(a.trace, b.trace);
+        let ta: Vec<f64> = a.result.rounds.iter().map(|r| r.sim_round_s).collect();
+        let tb: Vec<f64> = b.result.rounds.iter().map(|r| r.sim_round_s).collect();
+        assert_eq!(ta, tb);
+    }
+
+    #[test]
+    fn lossy_radio_round_times_vary_with_fading() {
+        let run = simulate_scenario(&cfg(ScenarioKind::LossyRadio, Algorithm::FedPairing))
+            .unwrap();
+        let times: Vec<f64> = run.result.rounds.iter().map(|r| r.sim_round_s).collect();
+        assert!(times.iter().any(|&t| t != times[0]), "round times frozen");
+    }
+
+    #[test]
+    fn result_serializes_with_alive_counts() {
+        let run = simulate_scenario(&cfg(ScenarioKind::FlashCrowd, Algorithm::FedPairing))
+            .unwrap();
+        let j = run.result.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        let rounds = parsed.get("rounds").unwrap().as_arr().unwrap();
+        assert_eq!(rounds.len(), 30);
+        assert!(rounds.iter().all(|r| r.get("n_alive").is_some()));
+    }
+}

@@ -6,9 +6,10 @@
 //!
 //! - **L3 (this crate)** — the coordination contribution: client pairing
 //!   ([`pairing`]), the split-training protocol and round loop
-//!   ([`coordinator`]), the heterogeneity/latency simulator ([`sim`]), data
-//!   synthesis and partitioning ([`data`]), and host-side parameter math
-//!   ([`nn`]).
+//!   ([`coordinator`]), the heterogeneity/latency simulator ([`sim`]), the
+//!   fleet-dynamics layer — churn, fading channels, incremental re-pairing —
+//!   ([`fleet`]), data synthesis and partitioning ([`data`]), and host-side
+//!   parameter math ([`nn`]).
 //! - **L2/L1 (build-time Python)** — the model's forward/backward (JAX) with
 //!   Pallas kernels at the hot spot, AOT-lowered to HLO text artifacts that
 //!   the [`runtime`] executes via the PJRT CPU client. Python never runs on
@@ -21,6 +22,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod fleet;
 pub mod model;
 pub mod nn;
 pub mod pairing;

@@ -3,14 +3,19 @@
 //!
 //! ```text
 //! fedpairing run --preset fig2 --algorithm fedpairing --rounds 30
+//! fedpairing run --scenario lossy-radio --rounds 50
+//! fedpairing churn --scenario flash-crowd --rounds 30
 //! fedpairing pair --clients 20 --strategy greedy
 //! fedpairing latency --samples 2500
 //! fedpairing info
 //! ```
 
 use fedpairing::cli::{CliError, Command, Parsed};
-use fedpairing::config::{Algorithm, DataDistribution, ExperimentConfig, PairingStrategy};
+use fedpairing::config::{
+    Algorithm, DataDistribution, ExperimentConfig, PairingStrategy, ScenarioConfig,
+};
 use fedpairing::coordinator::run_experiment;
+use fedpairing::fleet::simulate_scenario;
 use fedpairing::model::ModelMeta;
 use fedpairing::pairing::{graph::ClientGraph, pair_clients};
 use fedpairing::sim::channel::Channel;
@@ -35,7 +40,19 @@ fn cli() -> Command {
                 .flag("seed", Some('s'), Some("N"), "experiment seed", None)
                 .flag("noniid", None, None, "2-class shards instead of IID", None)
                 .flag("no-overlap-boost", None, None, "disable the eq.(7) 2x overlap step", None)
+                .flag("scenario", None, Some("NAME"), "stable|diurnal|flash-crowd|lossy-radio", None)
                 .flag("artifacts", None, Some("DIR"), "artifact directory", None)
+                .flag("out", Some('o'), Some("DIR"), "metrics output directory", None),
+        )
+        .subcommand(
+            Command::new("churn", "simulate a fleet-dynamics scenario (latency + churn, no training)")
+                .flag("scenario", None, Some("NAME"), "stable|diurnal|flash-crowd|lossy-radio", Some("flash-crowd"))
+                .flag("algorithm", Some('a'), Some("ALGO"), "fedpairing|fl|sl|splitfed", Some("fedpairing"))
+                .flag("pairing", Some('p'), Some("STRAT"), "greedy|random|location|compute|exact", Some("greedy"))
+                .flag("clients", Some('n'), Some("N"), "fleet size", Some("20"))
+                .flag("rounds", Some('r'), Some("N"), "communication rounds", Some("30"))
+                .flag("samples", None, Some("N"), "samples per client", Some("2500"))
+                .flag("seed", Some('s'), Some("N"), "experiment seed", Some("17"))
                 .flag("out", Some('o'), Some("DIR"), "metrics output directory", None),
         )
         .subcommand(
@@ -77,6 +94,7 @@ fn main() {
     }
     let result = match parsed.subcommand() {
         Some("run") => cmd_run(&parsed),
+        Some("churn") => cmd_churn(&parsed),
         Some("pair") => cmd_pair(&parsed),
         Some("latency") => cmd_latency(&parsed),
         Some("info") => cmd_info(&parsed),
@@ -129,6 +147,10 @@ fn cmd_run(p: &Parsed) -> anyhow::Result<()> {
     if p.has("no-overlap-boost") {
         cfg.overlap_boost = false;
     }
+    if let Some(s) = p.get("scenario") {
+        cfg.scenario = ScenarioConfig::named(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown scenario {s:?}"))?;
+    }
     if let Some(d) = p.get("artifacts") {
         cfg.artifacts_dir = d.to_string();
     }
@@ -136,10 +158,11 @@ fn cmd_run(p: &Parsed) -> anyhow::Result<()> {
         cfg.out_dir = d.to_string();
     }
     println!(
-        "running {} / {} / {} — {} clients, {} rounds",
+        "running {} / {} / {} / scenario={} — {} clients, {} rounds",
         cfg.algorithm,
         cfg.pairing,
         cfg.distribution.name(),
+        cfg.scenario.kind,
         cfg.n_clients,
         cfg.rounds
     );
@@ -153,6 +176,60 @@ fn cmd_run(p: &Parsed) -> anyhow::Result<()> {
         res.total_execs
     );
     let (csv, json) = res.save(&res.config.out_dir.clone())?;
+    println!("metrics: {csv} / {json}");
+    Ok(())
+}
+
+fn cmd_churn(p: &Parsed) -> anyhow::Result<()> {
+    let scenario = p.get("scenario").unwrap_or("flash-crowd");
+    let mut cfg = ExperimentConfig::default();
+    cfg.scenario = ScenarioConfig::named(scenario)
+        .ok_or_else(|| anyhow::anyhow!("unknown scenario {scenario:?}"))?;
+    cfg.name = format!("churn_{}", cfg.scenario.kind);
+    if let Some(a) = p.get("algorithm") {
+        cfg.algorithm =
+            Algorithm::parse(a).ok_or_else(|| anyhow::anyhow!("unknown algorithm {a:?}"))?;
+    }
+    if let Some(s) = p.get("pairing") {
+        cfg.pairing =
+            PairingStrategy::parse(s).ok_or_else(|| anyhow::anyhow!("unknown strategy {s:?}"))?;
+    }
+    cfg.n_clients = p.req("clients").map_err(|e| anyhow::anyhow!("{e}"))?;
+    cfg.rounds = p.req("rounds").map_err(|e| anyhow::anyhow!("{e}"))?;
+    cfg.samples_per_client = p.req("samples").map_err(|e| anyhow::anyhow!("{e}"))?;
+    cfg.seed = p.req("seed").map_err(|e| anyhow::anyhow!("{e}"))?;
+    if let Some(d) = p.get("out") {
+        cfg.out_dir = d.to_string();
+    }
+    println!(
+        "simulating {} / {} under scenario={} — {} clients, {} rounds (latency only)",
+        cfg.algorithm, cfg.pairing, cfg.scenario.kind, cfg.n_clients, cfg.rounds
+    );
+    let run = simulate_scenario(&cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "{:>5} {:>7} {:>8} {:>8} {:>10} {:>12}",
+        "round", "alive", "joined", "departed", "round s", "cumulative s"
+    );
+    for (ev, rec) in run.trace.iter().zip(&run.result.rounds) {
+        println!(
+            "{:>5} {:>7} {:>8} {:>8} {:>10.1} {:>12.1}",
+            ev.round,
+            rec.n_alive,
+            ev.joined.len(),
+            ev.departed.len(),
+            rec.sim_round_s,
+            rec.sim_total_s
+        );
+    }
+    println!(
+        "done: mean_alive={:.1} departures={} joins={} repaired_rounds={} total_sim={:.0}s",
+        run.mean_alive(),
+        run.total_departures(),
+        run.total_joins(),
+        run.repaired_rounds,
+        run.result.rounds.last().map(|r| r.sim_total_s).unwrap_or(0.0)
+    );
+    let (csv, json) = run.result.save(&cfg.out_dir)?;
     println!("metrics: {csv} / {json}");
     Ok(())
 }
@@ -192,6 +269,12 @@ fn cmd_pair(p: &Parsed) -> anyhow::Result<()> {
             r,
             li,
             lj
+        );
+    }
+    for s in fedpairing::pairing::graph::uncovered(n, &pairs) {
+        println!(
+            "({s:>2}, —)     {:>9.2}      solo — trains the full model locally",
+            fleet.freqs_hz[s] / 1e9
         );
     }
     Ok(())

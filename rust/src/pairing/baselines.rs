@@ -16,12 +16,12 @@ use super::greedy::greedy_matching;
 use crate::sim::latency::Fleet;
 use crate::util::rng::Rng;
 
-/// Uniformly random perfect matching.
+/// Uniformly random near-perfect matching: `⌊n/2⌋` pairs; for odd `n` one
+/// uniformly random client is left solo (the fleet-dynamics fallback).
 pub fn random_matching(rng: &mut Rng, n: usize) -> Vec<(usize, usize)> {
-    assert!(n % 2 == 0, "random matching needs even n");
     let mut idx: Vec<usize> = (0..n).collect();
     rng.shuffle(&mut idx);
-    idx.chunks(2).map(|c| (c[0], c[1])).collect()
+    idx.chunks_exact(2).map(|c| (c[0], c[1])).collect()
 }
 
 /// Location-based pairing: maximize `−distance` greedily (nearest first).
@@ -87,6 +87,19 @@ mod tests {
             let mut rng = Rng::new(half as u64);
             is_perfect_matching(half * 2, &random_matching(&mut rng, half * 2))
         });
+    }
+
+    #[test]
+    fn random_odd_n_leaves_one_solo() {
+        // Regression for the former even-n assert: n = 7 must produce three
+        // pairs and exactly one uncovered client.
+        let mut rng = Rng::new(11);
+        for _ in 0..20 {
+            let m = random_matching(&mut rng, 7);
+            assert_eq!(m.len(), 3);
+            assert!(is_perfect_matching(7, &m), "{m:?}");
+            assert_eq!(super::super::graph::uncovered(7, &m).len(), 1);
+        }
     }
 
     #[test]

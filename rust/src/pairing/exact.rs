@@ -13,16 +13,25 @@ use super::graph::ClientGraph;
 /// Maximum fleet size the DP will attempt (2^24 doubles = 128 MiB ceiling).
 pub const MAX_N: usize = 24;
 
-/// Exact max-weight perfect matching. Panics if `n` is odd or exceeds
-/// [`MAX_N`].
+/// Exact max-weight near-perfect matching. For odd `n` a zero-weight virtual
+/// vertex is added, so the DP chooses which client it is *optimal* to leave
+/// solo. Panics if the (possibly augmented) fleet exceeds [`MAX_N`].
 pub fn exact_matching(graph: &ClientGraph) -> Vec<(usize, usize)> {
     let n = graph.n;
-    assert!(n % 2 == 0, "perfect matching needs even n, got {n}");
-    assert!(n <= MAX_N, "n={n} exceeds bitmask-DP limit {MAX_N}");
+    // Augment odd fleets with virtual vertex `n` (zero-weight edges to all).
+    let n_eff = n + n % 2;
+    assert!(n_eff <= MAX_N, "n={n} exceeds bitmask-DP limit {MAX_N}");
     if n == 0 {
         return Vec::new();
     }
-    let full: usize = (1 << n) - 1;
+    let weight = |i: usize, j: usize| -> f64 {
+        if i >= n || j >= n {
+            0.0
+        } else {
+            graph.weight(i, j)
+        }
+    };
+    let full: usize = (1 << n_eff) - 1;
     const NEG: f64 = f64::NEG_INFINITY;
     let mut dp = vec![NEG; full + 1];
     // choice[mask] = (i, j) matched first at this mask (for reconstruction)
@@ -43,20 +52,22 @@ pub fn exact_matching(graph: &ClientGraph) -> Vec<(usize, usize)> {
             let j = rest.trailing_zeros() as usize;
             rest &= !(1 << j);
             let next = mask | (1 << i) | (1 << j);
-            let cand = dp[mask] + graph.weight(i, j);
+            let cand = dp[mask] + weight(i, j);
             if cand > dp[next] {
                 dp[next] = cand;
                 choice[next] = (i, j);
             }
         }
     }
-    // Reconstruct.
+    // Reconstruct, dropping the pair that contains the virtual vertex.
     let mut out = Vec::with_capacity(n / 2);
     let mut mask = full;
     while mask != 0 {
         let (i, j) = choice[mask];
         assert!(i != usize::MAX, "unreachable mask during reconstruction");
-        out.push((i, j));
+        if i < n && j < n {
+            out.push((i, j));
+        }
         mask &= !(1 << i);
         mask &= !(1 << j);
     }
@@ -187,16 +198,34 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "even")]
-    fn odd_n_panics() {
+    fn odd_n_leaves_optimal_solo() {
+        // Regression for the former even-n assert: n = 3 must keep the
+        // heaviest edge and leave its complement solo.
         let g = ClientGraph {
             n: 3,
             edges: vec![
                 Edge { i: 0, j: 1, weight: 1.0 },
-                Edge { i: 0, j: 2, weight: 1.0 },
+                Edge { i: 0, j: 2, weight: 5.0 },
                 Edge { i: 1, j: 2, weight: 1.0 },
             ],
         };
-        exact_matching(&g);
+        let m = exact_matching(&g);
+        assert_eq!(m, vec![(0, 2)]);
+        assert!(is_perfect_matching(3, &m));
+    }
+
+    #[test]
+    fn odd_n7_valid_and_at_least_greedy() {
+        // Regression test for n_clients = 7 (near-perfect matching).
+        let mut rng = Rng::new(7);
+        for _ in 0..10 {
+            let g = random_graph(&mut rng, 7);
+            let ex = exact_matching(&g);
+            assert_eq!(ex.len(), 3);
+            assert!(is_perfect_matching(7, &ex), "{ex:?}");
+            let gr = greedy_matching(&g);
+            assert!(is_perfect_matching(7, &gr), "{gr:?}");
+            assert!(g.matching_weight(&ex) + 1e-9 >= g.matching_weight(&gr));
+        }
     }
 }

@@ -63,10 +63,13 @@ impl ClientGraph {
     }
 }
 
-/// Check a pairing is a valid perfect matching on `n` vertices: every vertex
-/// appears exactly once, no self-loops. (Constraints (4a)/(4b)/(6a)/(6b).)
+/// Check a pairing is a valid *near-perfect* matching on `n` vertices:
+/// `⌊n/2⌋` pairs, every vertex in at most one pair, no self-loops — so for
+/// even `n` everyone is covered (constraints (4a)/(4b)/(6a)/(6b)) and for odd
+/// `n` exactly one client is left solo (the fleet-dynamics extension; the
+/// solo client trains the full model locally).
 pub fn is_perfect_matching(n: usize, pairs: &[(usize, usize)]) -> bool {
-    if n % 2 != 0 || pairs.len() != n / 2 {
+    if pairs.len() != n / 2 {
         return false;
     }
     let mut seen = vec![false; n];
@@ -78,6 +81,21 @@ pub fn is_perfect_matching(n: usize, pairs: &[(usize, usize)]) -> bool {
         seen[b] = true;
     }
     true
+}
+
+/// The vertices of `[0, n)` not covered by `pairs` (the solo clients of a
+/// near-perfect matching; empty for a perfect one).
+pub fn uncovered(n: usize, pairs: &[(usize, usize)]) -> Vec<usize> {
+    let mut seen = vec![false; n];
+    for &(a, b) in pairs {
+        if a < n {
+            seen[a] = true;
+        }
+        if b < n {
+            seen[b] = true;
+        }
+    }
+    (0..n).filter(|&v| !seen[v]).collect()
 }
 
 #[cfg(test)]
@@ -165,7 +183,18 @@ mod tests {
         assert!(!is_perfect_matching(4, &[(0, 1), (1, 2)])); // vertex reuse
         assert!(!is_perfect_matching(4, &[(0, 0), (2, 3)])); // self loop
         assert!(!is_perfect_matching(4, &[(0, 1), (2, 5)])); // out of range
-        assert!(!is_perfect_matching(5, &[(0, 1), (2, 3)])); // odd n
+        // Odd n: near-perfect — ⌊n/2⌋ pairs, exactly one vertex solo.
+        assert!(is_perfect_matching(5, &[(0, 1), (2, 3)]));
+        assert!(is_perfect_matching(3, &[(0, 2)]));
+        assert!(!is_perfect_matching(3, &[])); // needs one pair
+        assert!(!is_perfect_matching(5, &[(0, 1)])); // needs two pairs
+    }
+
+    #[test]
+    fn uncovered_lists_solo_vertices() {
+        assert_eq!(uncovered(5, &[(0, 1), (2, 3)]), vec![4]);
+        assert_eq!(uncovered(4, &[(0, 3), (1, 2)]), Vec::<usize>::new());
+        assert_eq!(uncovered(3, &[(0, 2)]), vec![1]);
     }
 
     #[test]

@@ -4,11 +4,20 @@
 //! Algorithm 1; [`baselines`] are Table I's random/location/compute
 //! mechanisms; [`exact`] is the bitmask-DP optimum used as an ablation bound.
 //! [`pair_clients`] dispatches on the configured [`PairingStrategy`].
+//!
+//! The fleet-dynamics extension lives in [`repair`]: near-perfect matchings
+//! with explicit solo clients ([`repair::Matching`]), subset pairing
+//! ([`repair::pair_members`]) and incremental re-pairing after churn
+//! ([`repair::repair_matching`]). All mechanisms accept odd fleets — one
+//! client is left solo instead of panicking.
 
 pub mod baselines;
 pub mod exact;
 pub mod graph;
 pub mod greedy;
+pub mod repair;
+
+pub use repair::{pair_members, repair_matching, Matching, RepairReport};
 
 use crate::config::PairingStrategy;
 use crate::sim::channel::Channel;
@@ -19,7 +28,8 @@ use graph::ClientGraph;
 /// Run the configured pairing mechanism over the fleet.
 ///
 /// `alpha`/`beta` are eq. (5)'s weights (used by `Greedy` and `Exact`);
-/// `rng` is consumed only by `Random`.
+/// `rng` is consumed only by `Random`. Odd fleets yield `⌊n/2⌋` pairs with
+/// one client uncovered ([`graph::uncovered`] identifies it).
 pub fn pair_clients(
     strategy: PairingStrategy,
     fleet: &Fleet,

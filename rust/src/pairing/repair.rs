@@ -1,0 +1,344 @@
+//! Incremental matching repair — the fleet-dynamics extension of Sec. III.
+//!
+//! When churn removes or adds clients mid-run, recomputing the full eq. (5)
+//! graph and re-matching everyone both wastes work (O(n²) edges for a
+//! handful of affected clients) and needlessly re-shuffles healthy pairs,
+//! which invalidates their split state. [`repair_matching`] instead touches
+//! only the *affected* clients: pairs whose endpoints both survive are kept
+//! verbatim; widowed partners, returning solos and newcomers form a small
+//! pool that is greedily re-matched on fresh edge weights. Any leftover
+//! client (odd pool) becomes a **solo** and trains the full model locally —
+//! the same fallback that removes the even-`n` assumption from the static
+//! pairing path.
+
+use super::graph::uncovered;
+use super::pair_clients;
+use crate::config::PairingStrategy;
+use crate::sim::channel::Channel;
+use crate::sim::latency::Fleet;
+use crate::util::rng::Rng;
+use std::collections::HashSet;
+
+/// A near-perfect matching with explicit solo clients. Indices are *universe*
+/// client ids (stable across churn), not compact per-round ids.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Matching {
+    pub pairs: Vec<(usize, usize)>,
+    pub solos: Vec<usize>,
+}
+
+impl Matching {
+    /// Every client covered by the matching (pairs then solos).
+    pub fn members(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .pairs
+            .iter()
+            .flat_map(|&(a, b)| [a, b])
+            .chain(self.solos.iter().copied())
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// True when the matching covers exactly `members`, each client once.
+    pub fn is_valid_over(&self, members: &[usize]) -> bool {
+        let mut expect: Vec<usize> = members.to_vec();
+        expect.sort_unstable();
+        expect.dedup();
+        let got = self.members();
+        // members() sorts but does not dedup, so duplicates break equality.
+        got == expect
+    }
+
+    /// Restrict to the clients in `present` for one round: pairs with both
+    /// endpoints present survive; a pair with one transient endpoint demotes
+    /// the survivor to solo *for this round only* (the stored matching is
+    /// untouched); absent solos are dropped.
+    pub fn restricted_to(&self, present: &[usize]) -> Matching {
+        let set: HashSet<usize> = present.iter().copied().collect();
+        let mut out = Matching::default();
+        for &(a, b) in &self.pairs {
+            match (set.contains(&a), set.contains(&b)) {
+                (true, true) => out.pairs.push((a, b)),
+                (true, false) => out.solos.push(a),
+                (false, true) => out.solos.push(b),
+                (false, false) => {}
+            }
+        }
+        for &s in &self.solos {
+            if set.contains(&s) {
+                out.solos.push(s);
+            }
+        }
+        out
+    }
+}
+
+/// What a repair operation did (for logging and tests).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RepairReport {
+    /// Pairs removed because at least one endpoint left the fleet.
+    pub dropped_pairs: Vec<(usize, usize)>,
+    /// Pairs formed from the affected pool.
+    pub new_pairs: Vec<(usize, usize)>,
+    /// Clients left solo after the repair.
+    pub new_solos: Vec<usize>,
+    /// Healthy pairs carried over untouched.
+    pub kept_pairs: usize,
+}
+
+impl RepairReport {
+    pub fn changed(&self) -> bool {
+        !self.dropped_pairs.is_empty() || !self.new_pairs.is_empty()
+    }
+}
+
+/// Repair `m` in place so it covers exactly `members` (the currently-alive
+/// universe ids), re-matching only the affected clients.
+///
+/// `weight` supplies *fresh* eq. (5) edge weights — pairing weights go stale
+/// under time-varying channels, so the repair pool is matched on current
+/// rates, not the ones the original matching saw.
+pub fn repair_matching<W: Fn(usize, usize) -> f64>(
+    m: &mut Matching,
+    members: &[usize],
+    weight: W,
+) -> RepairReport {
+    let set: HashSet<usize> = members.iter().copied().collect();
+    let mut report = RepairReport::default();
+    let mut kept: Vec<(usize, usize)> = Vec::with_capacity(m.pairs.len());
+    let mut pool: Vec<usize> = Vec::new();
+    for &(a, b) in &m.pairs {
+        match (set.contains(&a), set.contains(&b)) {
+            (true, true) => kept.push((a, b)),
+            (true, false) => {
+                report.dropped_pairs.push((a, b));
+                pool.push(a);
+            }
+            (false, true) => {
+                report.dropped_pairs.push((a, b));
+                pool.push(b);
+            }
+            (false, false) => report.dropped_pairs.push((a, b)),
+        }
+    }
+    // Surviving solos rejoin the pool — a repair may finally pair them up.
+    for &s in &m.solos {
+        if set.contains(&s) {
+            pool.push(s);
+        }
+    }
+    // Newcomers: alive clients covered by neither kept pairs nor the pool.
+    let mut covered: HashSet<usize> = kept.iter().flat_map(|&(a, b)| [a, b]).collect();
+    covered.extend(pool.iter().copied());
+    for &c in members {
+        if !covered.contains(&c) {
+            pool.push(c);
+        }
+    }
+    pool.sort_unstable();
+    pool.dedup();
+    // Greedy max-weight matching inside the (small) pool on fresh weights.
+    let mut edges: Vec<(f64, usize, usize)> = Vec::with_capacity(pool.len() * pool.len() / 2);
+    for (x, &a) in pool.iter().enumerate() {
+        for &b in &pool[x + 1..] {
+            edges.push((weight(a, b), a, b));
+        }
+    }
+    edges.sort_by(|p, q| {
+        q.0.partial_cmp(&p.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| (p.1, p.2).cmp(&(q.1, q.2)))
+    });
+    let mut taken: HashSet<usize> = HashSet::new();
+    for &(_, a, b) in &edges {
+        if !taken.contains(&a) && !taken.contains(&b) {
+            taken.insert(a);
+            taken.insert(b);
+            report.new_pairs.push((a, b));
+        }
+    }
+    report.new_solos = pool.iter().copied().filter(|c| !taken.contains(c)).collect();
+    report.kept_pairs = kept.len();
+    m.pairs = kept;
+    m.pairs.extend(report.new_pairs.iter().copied());
+    m.solos = report.new_solos.clone();
+    report
+}
+
+/// Full (re-)pairing of an arbitrary subset of the fleet: maps `members` to a
+/// compact sub-fleet, runs the configured strategy, and maps back — recording
+/// the odd-one-out as a solo.
+pub fn pair_members(
+    strategy: PairingStrategy,
+    fleet: &Fleet,
+    channel: &Channel,
+    alpha: f64,
+    beta: f64,
+    rng: &mut Rng,
+    members: &[usize],
+) -> Matching {
+    let mut ms: Vec<usize> = members.to_vec();
+    ms.sort_unstable();
+    ms.dedup();
+    if ms.is_empty() {
+        return Matching::default();
+    }
+    if ms.len() == 1 {
+        return Matching {
+            pairs: Vec::new(),
+            solos: ms,
+        };
+    }
+    let sub = fleet.subset(&ms);
+    let compact = pair_clients(strategy, &sub, channel, alpha, beta, rng);
+    let pairs: Vec<(usize, usize)> = compact.iter().map(|&(a, b)| (ms[a], ms[b])).collect();
+    let solos: Vec<usize> = uncovered(ms.len(), &compact)
+        .into_iter()
+        .map(|c| ms[c])
+        .collect();
+    Matching { pairs, solos }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChannelConfig, ExperimentConfig};
+
+    fn fleet(n: usize, seed: u64) -> (Fleet, Channel) {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n_clients = n;
+        (
+            Fleet::sample(&cfg, &mut Rng::new(seed)),
+            Channel::new(ChannelConfig::default()),
+        )
+    }
+
+    fn weight_of(fleet: &Fleet, channel: &Channel) -> impl Fn(usize, usize) -> f64 {
+        let freqs = fleet.freqs_hz.clone();
+        let pos = fleet.positions.clone();
+        let ch = channel.clone();
+        move |a, b| {
+            let df = (freqs[a] - freqs[b]) / 1e9;
+            df * df + 2e-9 * ch.rate(&pos[a], &pos[b])
+        }
+    }
+
+    #[test]
+    fn pair_members_even_and_odd() {
+        let (f, ch) = fleet(8, 1);
+        let mut rng = Rng::new(2);
+        let all: Vec<usize> = (0..8).collect();
+        let m = pair_members(PairingStrategy::Greedy, &f, &ch, 1.0, 2e-9, &mut rng, &all);
+        assert_eq!(m.pairs.len(), 4);
+        assert!(m.solos.is_empty());
+        assert!(m.is_valid_over(&all));
+        // odd subset → one solo
+        let odd: Vec<usize> = vec![0, 2, 3, 5, 7];
+        let m = pair_members(PairingStrategy::Greedy, &f, &ch, 1.0, 2e-9, &mut rng, &odd);
+        assert_eq!(m.pairs.len(), 2);
+        assert_eq!(m.solos.len(), 1);
+        assert!(m.is_valid_over(&odd));
+    }
+
+    #[test]
+    fn pair_members_n7_all_strategies() {
+        // Regression: n_clients = 7 must work for every strategy.
+        let (f, ch) = fleet(7, 3);
+        let all: Vec<usize> = (0..7).collect();
+        for s in [
+            PairingStrategy::Greedy,
+            PairingStrategy::Random,
+            PairingStrategy::Location,
+            PairingStrategy::Compute,
+            PairingStrategy::Exact,
+        ] {
+            let mut rng = Rng::new(4);
+            let m = pair_members(s, &f, &ch, 1.0, 2e-9, &mut rng, &all);
+            assert_eq!(m.pairs.len(), 3, "{s:?}");
+            assert_eq!(m.solos.len(), 1, "{s:?}");
+            assert!(m.is_valid_over(&all), "{s:?}: {m:?}");
+        }
+    }
+
+    #[test]
+    fn repair_after_single_departure_keeps_healthy_pairs() {
+        let (f, ch) = fleet(10, 5);
+        let all: Vec<usize> = (0..10).collect();
+        let mut rng = Rng::new(6);
+        let mut m = pair_members(PairingStrategy::Greedy, &f, &ch, 1.0, 2e-9, &mut rng, &all);
+        let before = m.pairs.clone();
+        // Client 3 departs: only its pair may change; its widow goes solo.
+        let members: Vec<usize> = all.iter().copied().filter(|&c| c != 3).collect();
+        let rep = repair_matching(&mut m, &members, weight_of(&f, &ch));
+        assert!(rep.changed());
+        assert_eq!(rep.dropped_pairs.len(), 1);
+        assert_eq!(rep.kept_pairs, 4);
+        assert_eq!(rep.new_solos.len(), 1);
+        assert!(m.is_valid_over(&members), "{m:?}");
+        // Healthy pairs untouched.
+        for p in &before {
+            if p.0 != 3 && p.1 != 3 {
+                assert!(m.pairs.contains(p), "healthy pair {p:?} was disturbed");
+            }
+        }
+    }
+
+    #[test]
+    fn repair_pairs_widow_with_newcomer() {
+        let (f, ch) = fleet(10, 7);
+        let mut rng = Rng::new(8);
+        // Start with clients 0..8 matched; 8 and 9 unknown to the matching.
+        let initial: Vec<usize> = (0..8).collect();
+        let mut m =
+            pair_members(PairingStrategy::Greedy, &f, &ch, 1.0, 2e-9, &mut rng, &initial);
+        // Client 0 departs, clients 8 and 9 join: widow + 2 newcomers = pool
+        // of 3 → one new pair + one solo.
+        let members: Vec<usize> = (1..10).collect();
+        let rep = repair_matching(&mut m, &members, weight_of(&f, &ch));
+        assert_eq!(rep.dropped_pairs.len(), 1);
+        assert_eq!(rep.new_pairs.len(), 1);
+        assert_eq!(rep.new_solos.len(), 1);
+        assert!(m.is_valid_over(&members), "{m:?}");
+    }
+
+    #[test]
+    fn repair_on_empty_change_is_noop() {
+        let (f, ch) = fleet(6, 9);
+        let all: Vec<usize> = (0..6).collect();
+        let mut rng = Rng::new(10);
+        let mut m = pair_members(PairingStrategy::Greedy, &f, &ch, 1.0, 2e-9, &mut rng, &all);
+        let snapshot = m.clone();
+        let rep = repair_matching(&mut m, &all, weight_of(&f, &ch));
+        assert!(!rep.changed());
+        assert_eq!(m, snapshot);
+    }
+
+    #[test]
+    fn restricted_to_demotes_transient_partners() {
+        let m = Matching {
+            pairs: vec![(0, 1), (2, 3)],
+            solos: vec![4],
+        };
+        // 1 and 4 transiently out this round.
+        let eff = m.restricted_to(&[0, 2, 3]);
+        assert_eq!(eff.pairs, vec![(2, 3)]);
+        assert_eq!(eff.solos, vec![0]);
+        // Stored matching untouched.
+        assert_eq!(m.pairs.len(), 2);
+        assert_eq!(m.solos, vec![4]);
+    }
+
+    #[test]
+    fn repair_down_to_one_client() {
+        let (f, ch) = fleet(4, 11);
+        let all: Vec<usize> = (0..4).collect();
+        let mut rng = Rng::new(12);
+        let mut m = pair_members(PairingStrategy::Greedy, &f, &ch, 1.0, 2e-9, &mut rng, &all);
+        let rep = repair_matching(&mut m, &[2], weight_of(&f, &ch));
+        assert_eq!(rep.dropped_pairs.len(), 2);
+        assert_eq!(m.pairs.len(), 0);
+        assert_eq!(m.solos, vec![2]);
+        assert!(m.is_valid_over(&[2]));
+    }
+}

@@ -53,6 +53,17 @@ impl Fleet {
         self.freqs_hz.len()
     }
 
+    /// Compact sub-fleet of the clients in `members` (in the given order).
+    /// Used by the fleet-dynamics layer to simulate a round over the
+    /// currently-present clients only.
+    pub fn subset(&self, members: &[usize]) -> Fleet {
+        Fleet {
+            positions: members.iter().map(|&i| self.positions[i]).collect(),
+            freqs_hz: members.iter().map(|&i| self.freqs_hz[i]).collect(),
+            n_samples: members.iter().map(|&i| self.n_samples[i]).collect(),
+        }
+    }
+
     pub fn resources(&self) -> Vec<ClientResources> {
         self.freqs_hz
             .iter()
@@ -164,6 +175,24 @@ pub fn fedpairing_round(
     comp: &ComputeConfig,
     include_upload: bool,
 ) -> RoundTime {
+    fedpairing_round_with_solos(fleet, pairs, &[], profile, sched, channel, comp, include_upload)
+}
+
+/// [`fedpairing_round`] extended with **solo clients** (the fleet-dynamics
+/// fallback): an unpaired client trains the *full* model locally, exactly
+/// like a vanilla-FL participant, and uploads it alongside the pairs. The
+/// round ends when the slowest pair *or* solo finishes.
+#[allow(clippy::too_many_arguments)]
+pub fn fedpairing_round_with_solos(
+    fleet: &Fleet,
+    pairs: &[(usize, usize)],
+    solos: &[usize],
+    profile: &ModelProfile,
+    sched: &Schedule,
+    channel: &Channel,
+    comp: &ComputeConfig,
+    include_upload: bool,
+) -> RoundTime {
     let w = profile.w();
     let mut total = 0.0f64;
     let mut max_cpu = 0.0f64;
@@ -217,6 +246,17 @@ pub fn fedpairing_round(
         max_cpu = max_cpu.max(rep.resource_busy[0]).max(rep.resource_busy[1]);
         max_link = max_link.max(rep.resource_busy[2]).max(rep.resource_busy[3]);
         finishes.extend_from_slice(&rep.chain_finish);
+    }
+    for &s in solos {
+        let nb = sched.batches(fleet.n_samples[s]);
+        let flops = nb as f64 * sched.batch_size as f64 * profile.train_flops(0, w);
+        let mut t = compute_time(flops, fleet.freqs_hz[s], comp);
+        max_cpu = max_cpu.max(t);
+        if include_upload {
+            t += upload_time(fleet, channel, s, profile.param_bytes());
+        }
+        total = total.max(t);
+        finishes.push(t);
     }
     RoundTime {
         total_s: total,
@@ -493,6 +533,48 @@ mod tests {
         assert!(rt.total_s >= rt.max_cpu_busy_s - 1e-9);
         assert!(rt.total_s >= rt.max_link_busy_s - 1e-9);
         assert!(rt.total_s > 0.0);
+    }
+
+    #[test]
+    fn subset_extracts_requested_clients() {
+        let (fleet, ..) = setup();
+        let sub = fleet.subset(&[1, 3, 6]);
+        assert_eq!(sub.n(), 3);
+        assert_eq!(sub.freqs_hz[0], fleet.freqs_hz[1]);
+        assert_eq!(sub.freqs_hz[2], fleet.freqs_hz[6]);
+        assert_eq!(sub.positions[1], fleet.positions[3]);
+        assert_eq!(sub.n_samples[0], fleet.n_samples[1]);
+    }
+
+    #[test]
+    fn solo_clients_extend_the_round() {
+        // A slow solo client must gate the round like an FL straggler.
+        let (mut fleet, profile, sched, channel, comp) = setup();
+        fleet.freqs_hz[7] = 0.01e9; // cripple the solo
+        let pairs: Vec<(usize, usize)> = vec![(0, 1), (2, 3), (4, 5)];
+        let without =
+            fedpairing_round_with_solos(&fleet, &pairs, &[], &profile, &sched, &channel, &comp, false);
+        let with = fedpairing_round_with_solos(
+            &fleet, &pairs, &[7], &profile, &sched, &channel, &comp, false,
+        );
+        assert!(with.total_s > without.total_s, "{} !> {}", with.total_s, without.total_s);
+        assert_eq!(with.flow_finish_s.len(), without.flow_finish_s.len() + 1);
+        // The solo's time equals a one-client FL round on the same fleet.
+        let solo_fleet = fleet.subset(&[7]);
+        let fl = fl_round(&solo_fleet, &profile, &sched, &channel, &comp, false);
+        let solo_finish = with.flow_finish_s.last().unwrap();
+        assert!((solo_finish - fl.total_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_solos_match_plain_fedpairing_round() {
+        let (fleet, profile, sched, channel, comp) = setup();
+        let pairs = pair_all(fleet.n());
+        let a = fedpairing_round(&fleet, &pairs, &profile, &sched, &channel, &comp, true);
+        let b = fedpairing_round_with_solos(
+            &fleet, &pairs, &[], &profile, &sched, &channel, &comp, true,
+        );
+        assert_eq!(a.total_s, b.total_s);
     }
 
     #[test]

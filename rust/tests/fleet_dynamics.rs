@@ -1,0 +1,232 @@
+//! System-level tests for the fleet-dynamics subsystem: matching-repair
+//! invariants under arbitrary departure/arrival sequences, bit-identical
+//! churn traces, odd-fleet (near-perfect matching) regressions, and the
+//! engine-free scenario driver.
+
+use fedpairing::config::{
+    Algorithm, ExperimentConfig, PairingStrategy, ScenarioConfig, ScenarioKind,
+};
+use fedpairing::fleet::{simulate_scenario, FleetDynamics};
+use fedpairing::pairing::graph::{is_perfect_matching, uncovered};
+use fedpairing::pairing::{pair_clients, pair_members, repair_matching, Matching};
+use fedpairing::sim::channel::Channel;
+use fedpairing::sim::latency::Fleet;
+use fedpairing::util::proptest::{check, gen_pair, gen_u64, gen_usize, Gen};
+use fedpairing::util::rng::Rng;
+
+fn fleet_of(seed: u64, n: usize) -> (Fleet, Channel, ExperimentConfig) {
+    let mut cfg = ExperimentConfig::default();
+    cfg.n_clients = n;
+    cfg.seed = seed;
+    cfg.samples_per_client = 128;
+    let fleet = Fleet::sample(&cfg, &mut Rng::new(seed));
+    (fleet, Channel::new(cfg.channel), cfg)
+}
+
+fn weight_fn(fleet: &Fleet, channel: &Channel) -> impl Fn(usize, usize) -> f64 {
+    let freqs = fleet.freqs_hz.clone();
+    let pos = fleet.positions.clone();
+    let ch = channel.clone();
+    move |a, b| {
+        let df = (freqs[a] - freqs[b]) / 1e9;
+        df * df + 2e-9 * ch.rate(&pos[a], &pos[b])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Property (a): a repaired matching is still a valid matching after ANY
+// departure/arrival sequence.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_repair_valid_after_any_departure_sequence() {
+    check(
+        40,
+        gen_pair(gen_u64(0, u64::MAX / 2), gen_usize(4, 16)),
+        |&(seed, n)| {
+            let (fleet, ch, cfg) = fleet_of(seed, n);
+            let mut rng = Rng::new(seed ^ 0xDEAD);
+            let all: Vec<usize> = (0..n).collect();
+            let mut m = pair_members(
+                PairingStrategy::Greedy,
+                &fleet,
+                &ch,
+                cfg.alpha,
+                cfg.beta,
+                &mut rng,
+                &all,
+            );
+            if !m.is_valid_over(&all) {
+                return false;
+            }
+            // Random alive-set walk: each step flips a few clients' liveness
+            // (departures AND re-arrivals), always keeping >= 1 alive.
+            let mut alive: Vec<bool> = vec![true; n];
+            for _ in 0..12 {
+                let flips = 1 + rng.below(3);
+                for _ in 0..flips {
+                    let c = rng.below(n);
+                    let alive_count = alive.iter().filter(|&&a| a).count();
+                    if alive[c] && alive_count <= 1 {
+                        continue; // never empty the fleet
+                    }
+                    alive[c] = !alive[c];
+                }
+                let members: Vec<usize> = (0..n).filter(|&c| alive[c]).collect();
+                repair_matching(&mut m, &members, weight_fn(&fleet, &ch));
+                if !m.is_valid_over(&members) {
+                    return false;
+                }
+                // Near-perfect: solo count == parity of the alive set.
+                if m.solos.len() != members.len() % 2 {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Property (b): identical seeds + scenario produce bit-identical churn traces.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_identical_seed_scenario_gives_identical_trace() {
+    check(
+        24,
+        Gen::new(|rng| {
+            let kind = ScenarioKind::ALL[rng.below(4)];
+            (rng.next_u64() >> 1, 4 + rng.below(16), kind)
+        }),
+        |&(seed, n, kind)| {
+            let mut cfg = ExperimentConfig::default();
+            cfg.seed = seed;
+            cfg.n_clients = n;
+            cfg.rounds = 25;
+            cfg.scenario = ScenarioConfig::preset(kind);
+            FleetDynamics::trace(&cfg) == FleetDynamics::trace(&cfg)
+        },
+    );
+}
+
+#[test]
+fn prop_simulated_round_times_deterministic() {
+    check(10, gen_u64(0, u64::MAX / 2), |&seed| {
+        let mut cfg = ExperimentConfig::default();
+        cfg.seed = seed;
+        cfg.n_clients = 10;
+        cfg.rounds = 12;
+        cfg.samples_per_client = 200;
+        cfg.scenario = ScenarioConfig::preset(ScenarioKind::LossyRadio);
+        let a = simulate_scenario(&cfg).unwrap();
+        let b = simulate_scenario(&cfg).unwrap();
+        a.trace == b.trace
+            && a.result
+                .rounds
+                .iter()
+                .zip(&b.result.rounds)
+                .all(|(x, y)| x.sim_round_s == y.sim_round_s && x.n_alive == y.n_alive)
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Odd-fleet regressions (n_clients = 7)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn odd_fleet_n7_every_strategy_leaves_one_solo() {
+    let (fleet, ch, cfg) = fleet_of(41, 7);
+    for strat in [
+        PairingStrategy::Greedy,
+        PairingStrategy::Random,
+        PairingStrategy::Location,
+        PairingStrategy::Compute,
+        PairingStrategy::Exact,
+    ] {
+        let mut rng = Rng::new(42);
+        let pairs = pair_clients(strat, &fleet, &ch, cfg.alpha, cfg.beta, &mut rng);
+        assert_eq!(pairs.len(), 3, "{strat:?}");
+        assert!(is_perfect_matching(7, &pairs), "{strat:?}: {pairs:?}");
+        assert_eq!(uncovered(7, &pairs).len(), 1, "{strat:?}");
+    }
+}
+
+#[test]
+fn odd_fleet_config_validates_and_simulates() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.n_clients = 7;
+    cfg.rounds = 5;
+    cfg.samples_per_client = 100;
+    cfg.validate().unwrap(); // formerly rejected odd FedPairing fleets
+    let run = simulate_scenario(&cfg).unwrap();
+    assert_eq!(run.result.rounds.len(), 5);
+    assert!(run.result.rounds.iter().all(|r| r.n_alive == 7));
+    assert!(run.result.rounds.iter().all(|r| r.sim_round_s > 0.0));
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance-criteria path: flash-crowd FedPairing run end to end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn flash_crowd_fedpairing_departs_repairs_and_records() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.algorithm = Algorithm::FedPairing;
+    cfg.rounds = 30;
+    cfg.samples_per_client = 250;
+    cfg.scenario = ScenarioConfig::preset(ScenarioKind::FlashCrowd);
+    let run = simulate_scenario(&cfg).unwrap();
+    // At least one client departed mid-training...
+    assert!(run.total_departures() > 0);
+    // ...the matching was incrementally repaired...
+    assert!(run.repaired_rounds > 0);
+    // ...and the RunResult records per-round alive-client counts.
+    assert_eq!(run.result.rounds.len(), 30);
+    assert!(run.result.mean_alive() > 0.0);
+    let csv = run.result.to_csv();
+    assert!(csv.starts_with("round,n_alive,"));
+    // The flash cohort shows up as a jump in participation.
+    let max_alive = run.result.rounds.iter().map(|r| r.n_alive).max().unwrap();
+    assert!(max_alive > cfg.n_clients, "cohort never exceeded base fleet");
+}
+
+#[test]
+fn restricted_matching_composes_with_repair() {
+    // A transient failure must not mutate the stored matching, while a
+    // durable departure must.
+    let (fleet, ch, cfg) = fleet_of(55, 8);
+    let mut rng = Rng::new(56);
+    let all: Vec<usize> = (0..8).collect();
+    let mut m = pair_members(
+        PairingStrategy::Greedy,
+        &fleet,
+        &ch,
+        cfg.alpha,
+        cfg.beta,
+        &mut rng,
+        &all,
+    );
+    let stored = m.clone();
+    // Transient: restrict only.
+    let present: Vec<usize> = (1..8).collect();
+    let eff = m.restricted_to(&present);
+    assert_eq!(m, stored, "restriction must not mutate");
+    assert_eq!(eff.solos.len(), 1);
+    // Durable: repair mutates.
+    repair_matching(&mut m, &present, weight_fn(&fleet, &ch));
+    assert_ne!(m, stored);
+    assert!(m.is_valid_over(&present));
+}
+
+#[test]
+fn matching_members_and_validity_helpers() {
+    let m = Matching {
+        pairs: vec![(4, 1), (2, 7)],
+        solos: vec![5],
+    };
+    assert_eq!(m.members(), vec![1, 2, 4, 5, 7]);
+    assert!(m.is_valid_over(&[1, 2, 4, 5, 7]));
+    assert!(!m.is_valid_over(&[1, 2, 4, 5])); // extra member in matching
+    assert!(!m.is_valid_over(&[1, 2, 3, 4, 5, 7])); // 3 uncovered
+}

@@ -1,0 +1,145 @@
+//! Stub of the `xla` crate's PJRT surface (substrate).
+//!
+//! The build environment has neither crates.io access nor the native XLA
+//! extension library, so this crate provides the exact API shape
+//! `fedpairing::runtime` compiles against, with every entry point returning
+//! [`Error::Unavailable`]. The coordination layer (pairing, fleet dynamics,
+//! latency simulation, metrics) is fully functional on the stub; only
+//! artifact *execution* needs the real backend.
+//!
+//! To run the AOT artifacts for real, replace this path dependency in the
+//! workspace `Cargo.toml` with the upstream `xla` crate and point
+//! `XLA_EXTENSION_DIR` at a PJRT CPU build — no source changes required.
+
+use std::fmt;
+
+/// Stub failure: the native XLA backend is not linked.
+#[derive(Debug, Clone)]
+pub struct Error {
+    what: String,
+}
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error {
+            what: format!(
+                "{what}: XLA backend unavailable (stub build — see vendor/xla/src/lib.rs)"
+            ),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.what)
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Device-resident buffer handle (never instantiated by the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Host-side literal value (never instantiated by the stub).
+#[derive(Debug)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+
+    pub fn to_vec<T: Copy + Default>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+/// Parsed HLO module (never instantiated by the stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable(&format!("parsing HLO text {path}")))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Compiled executable handle (never instantiated by the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] fails on the stub, so nothing
+/// downstream of it can be reached.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_loudly_at_the_entry_point() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e}").contains("unavailable"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
