@@ -1,0 +1,109 @@
+//! Fleet-scale pairing bench: sparse candidate-graph build + greedy matching
+//! and one incremental churn repair at n ∈ {1k, 10k, 100k}, plus the
+//! dense-vs-sparse crossover at n = 1k. Emits `BENCH_pairing.json` so CI can
+//! track the perf trajectory across PRs.
+
+#[path = "common.rs"]
+mod common;
+
+use fedpairing::config::{ExperimentConfig, PairingStrategy};
+use fedpairing::fleet::{maintain_matching, FleetDynamics};
+use fedpairing::pairing::graph::ClientGraph;
+use fedpairing::pairing::greedy::greedy_matching;
+use fedpairing::pairing::{match_candidates, EdgeWeightSpec, SparseCandidateGraph};
+use fedpairing::sim::channel::Channel;
+use fedpairing::sim::latency::Fleet;
+use fedpairing::util::json::{Json, JsonObj};
+use fedpairing::util::rng::Rng;
+
+fn metro_cfg(n: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("metro-scale").expect("metro-scale preset");
+    cfg.n_clients = n;
+    cfg.seed = 17;
+    cfg
+}
+
+/// Pairing + one churn step + incremental repair through the real fleet path.
+fn churn_round_trip(cfg: &ExperimentConfig) -> usize {
+    let base = Fleet::sample(cfg, &mut Rng::new(cfg.seed));
+    let mut dynamics = FleetDynamics::new(cfg, base);
+    let mut pairing_rng = Rng::new(cfg.seed ^ 0x9A1F);
+    let mut matching = None;
+    for round in 1..=2 {
+        let ev = dynamics.step(round);
+        let channel = dynamics.channel();
+        maintain_matching(&mut matching, &dynamics, &ev, &channel, cfg, &mut pairing_rng);
+    }
+    matching.expect("matching").pairs.len()
+}
+
+fn main() {
+    println!("== sparse candidate-graph pairing scale ==");
+    common::report_header();
+    let mut rows: Vec<Json> = Vec::new();
+    for n in [1_000usize, 10_000, 100_000] {
+        let cfg = metro_cfg(n);
+        let fleet = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+        let channel = Channel::new(cfg.channel);
+        let spec = EdgeWeightSpec::Eq5 {
+            alpha: cfg.alpha,
+            beta: cfg.beta,
+        };
+        let members: Vec<usize> = (0..n).collect();
+        let iters = if n >= 100_000 { 3 } else { 10 };
+        let mut n_edges = 0usize;
+        let mut n_pairs = 0usize;
+        let pair_stats = common::bench(&format!("sparse pair    n={n}"), 1, iters, || {
+            let g = SparseCandidateGraph::build(
+                &fleet,
+                &channel,
+                spec,
+                cfg.backend.k_near,
+                cfg.backend.k_freq,
+            );
+            n_edges = g.edges().len();
+            let m = match_candidates(&g, &members);
+            n_pairs = m.pairs.len();
+            common::black_box(m);
+        });
+        pair_stats.report();
+        let repair_stats =
+            common::bench(&format!("pair+churn+fix n={n}"), 0, iters.min(5), || {
+                common::black_box(churn_round_trip(&cfg));
+            });
+        repair_stats.report();
+        common::check_shape(
+            &format!("n={n}: candidate set O(n·k)"),
+            n_edges <= n * (cfg.backend.k_near + cfg.backend.k_freq),
+        );
+        common::check_shape(&format!("n={n}: near-perfect"), n_pairs >= n / 2 - 1);
+        let mut row = JsonObj::new();
+        row.insert("n", Json::num(n as f64));
+        row.insert("candidate_edges", Json::num(n_edges as f64));
+        row.insert("pairs", Json::num(n_pairs as f64));
+        row.insert("sparse_pair_mean_s", Json::num(pair_stats.mean_s));
+        row.insert("sparse_pair_min_s", Json::num(pair_stats.min_s));
+        row.insert("churn_repair_mean_s", Json::num(repair_stats.mean_s));
+        rows.push(Json::Obj(row));
+    }
+
+    println!("== dense vs sparse crossover (n=1000, greedy) ==");
+    let cfg = metro_cfg(1_000);
+    let fleet = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+    let channel = Channel::new(cfg.channel);
+    let dense_stats = common::bench("dense greedy  n=1000", 1, 10, || {
+        common::black_box(greedy_matching(&ClientGraph::build(
+            &fleet, &channel, cfg.alpha, cfg.beta,
+        )));
+    });
+    dense_stats.report();
+
+    let mut out = JsonObj::new();
+    out.insert("bench", Json::str("pairing_scale"));
+    out.insert("strategy", Json::str(PairingStrategy::Greedy.name()));
+    out.insert("dense_n1000_mean_s", Json::num(dense_stats.mean_s));
+    out.insert("results", Json::Arr(rows));
+    let path = "BENCH_pairing.json";
+    std::fs::write(path, Json::Obj(out).to_string_pretty(2)).expect("write bench json");
+    println!("wrote {path}");
+}

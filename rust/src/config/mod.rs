@@ -101,6 +101,84 @@ impl fmt::Display for PairingStrategy {
     fmt_display_via_name!();
 }
 
+/// Which candidate-graph backend feeds the pairing mechanisms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendMode {
+    /// Dense below [`PairingBackendConfig::AUTO_DENSE_MAX`] clients, sparse
+    /// above — the default; existing paper-scale presets stay bit-identical.
+    Auto,
+    /// Always the complete eq. (5) graph (O(n²) edges — paper testbed scale).
+    Dense,
+    /// Always the grid + frequency-band candidate graph (O(n·k) edges).
+    Sparse,
+}
+
+impl BackendMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(BackendMode::Auto),
+            "dense" | "complete" => Some(BackendMode::Dense),
+            "sparse" | "grid" => Some(BackendMode::Sparse),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendMode::Auto => "auto",
+            BackendMode::Dense => "dense",
+            BackendMode::Sparse => "sparse",
+        }
+    }
+}
+
+impl fmt::Display for BackendMode {
+    fmt_display_via_name!();
+}
+
+/// Candidate-graph backend selection plus the sparse generator's knobs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PairingBackendConfig {
+    pub mode: BackendMode,
+    /// Grid-local candidates per client (nearest by distance).
+    pub k_near: usize,
+    /// Frequency-complementarity candidates per client (around the mirrored
+    /// rank of the CPU-frequency ordering, so eq. (5)'s α term isn't
+    /// starved).
+    pub k_freq: usize,
+}
+
+impl PairingBackendConfig {
+    /// Largest fleet `Auto` still pairs on the dense complete graph.
+    pub const AUTO_DENSE_MAX: usize = 256;
+
+    /// Does a fleet of `n` clients resolve to the sparse backend?
+    pub fn sparse_for(&self, n: usize) -> bool {
+        match self.mode {
+            BackendMode::Dense => false,
+            BackendMode::Sparse => true,
+            BackendMode::Auto => n > Self::AUTO_DENSE_MAX,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.mode != BackendMode::Dense && self.k_near + self.k_freq == 0 {
+            bail!("sparse pairing backend needs k_near + k_freq >= 1");
+        }
+        Ok(())
+    }
+}
+
+impl Default for PairingBackendConfig {
+    fn default() -> Self {
+        PairingBackendConfig {
+            mode: BackendMode::Auto,
+            k_near: 8,
+            k_freq: 4,
+        }
+    }
+}
+
 /// Local-data distribution across clients (paper Sec. IV-A).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum DataDistribution {
@@ -135,6 +213,9 @@ pub enum ScenarioKind {
     FlashCrowd,
     /// Deep fading, transient failures and stragglers on a jittery radio.
     LossyRadio,
+    /// City-scale fleet (n = 50k–100k): light steady churn and drift; pairs
+    /// only with the sparse candidate-graph backend in reach.
+    MetroScale,
 }
 
 impl ScenarioKind {
@@ -144,6 +225,7 @@ impl ScenarioKind {
             "diurnal" | "day-night" | "day_night" => Some(ScenarioKind::Diurnal),
             "flash-crowd" | "flash_crowd" | "flashcrowd" => Some(ScenarioKind::FlashCrowd),
             "lossy-radio" | "lossy_radio" | "lossy" => Some(ScenarioKind::LossyRadio),
+            "metro-scale" | "metro_scale" | "metro" => Some(ScenarioKind::MetroScale),
             _ => None,
         }
     }
@@ -154,15 +236,17 @@ impl ScenarioKind {
             ScenarioKind::Diurnal => "diurnal",
             ScenarioKind::FlashCrowd => "flash-crowd",
             ScenarioKind::LossyRadio => "lossy-radio",
+            ScenarioKind::MetroScale => "metro-scale",
         }
     }
 
     /// All named scenarios (CLI help, examples, benches).
-    pub const ALL: [ScenarioKind; 4] = [
+    pub const ALL: [ScenarioKind; 5] = [
         ScenarioKind::Stable,
         ScenarioKind::Diurnal,
         ScenarioKind::FlashCrowd,
         ScenarioKind::LossyRadio,
+        ScenarioKind::MetroScale,
     ];
 }
 
@@ -248,6 +332,16 @@ impl ScenarioConfig {
                 straggle_factor: 0.35,
                 mobility_m: 2.0,
                 shadowing_std_db: 6.0,
+                ..stable
+            },
+            // At 100k clients even 1 %/round churn moves ~1 000 clients, so
+            // the incremental repair path is exercised every round.
+            ScenarioKind::MetroScale => ScenarioConfig {
+                p_depart: 0.01,
+                p_rejoin: 0.20,
+                p_transient: 0.02,
+                mobility_m: 2.0,
+                shadowing_std_db: 2.0,
                 ..stable
             },
         }
@@ -362,6 +456,10 @@ pub struct ExperimentConfig {
     pub seed: u64,
     pub algorithm: Algorithm,
     pub pairing: PairingStrategy,
+    /// Candidate-graph backend feeding the pairing mechanisms (dense complete
+    /// graph vs sparse grid + frequency-band candidates; `Auto` switches on
+    /// fleet size so paper-scale presets stay bit-identical).
+    pub backend: PairingBackendConfig,
 
     // fleet
     pub n_clients: usize,
@@ -414,6 +512,7 @@ impl Default for ExperimentConfig {
             seed: 17,
             algorithm: Algorithm::FedPairing,
             pairing: PairingStrategy::Greedy,
+            backend: PairingBackendConfig::default(),
             n_clients: 20,
             area_radius_m: 50.0,
             channel: ChannelConfig::default(),
@@ -464,6 +563,18 @@ impl ExperimentConfig {
         // full model locally) — required anyway once churn can kill a
         // client mid-run.
         self.scenario.validate()?;
+        self.backend.validate()?;
+        // A sparse backend must generate candidates from the source the
+        // configured objective actually uses, or the matching silently
+        // degenerates to id-order completion pairs.
+        if self.backend.sparse_for(self.n_clients) {
+            if self.pairing == PairingStrategy::Location && self.backend.k_near == 0 {
+                bail!("location pairing on the sparse backend needs k_near >= 1");
+            }
+            if self.pairing == PairingStrategy::Compute && self.backend.k_freq == 0 {
+                bail!("compute pairing on the sparse backend needs k_freq >= 1");
+            }
+        }
         if self.compute.f_min_ghz <= 0.0 || self.compute.f_max_ghz < self.compute.f_min_ghz {
             bail!(
                 "invalid CPU frequency range [{}, {}]",
@@ -543,6 +654,18 @@ impl ExperimentConfig {
                 c.test_samples = 128;
                 Some(c)
             }
+            // City-scale fleet for the engine-free scenario path: 50k clients
+            // (override higher with --n-clients), sparse pairing backend via
+            // Auto, light data so the latency DES stays cheap per pair.
+            "metro-scale" => {
+                c.n_clients = 50_000;
+                c.rounds = 5;
+                c.samples_per_client = 64;
+                c.test_samples = 256;
+                c.eval_every = 0;
+                c.scenario = ScenarioConfig::preset(ScenarioKind::MetroScale);
+                Some(c)
+            }
             _ => None,
         }
     }
@@ -557,6 +680,11 @@ impl ExperimentConfig {
         o.insert("seed", Json::num(self.seed as f64));
         o.insert("algorithm", Json::str(self.algorithm.name()));
         o.insert("pairing", Json::str(self.pairing.name()));
+        let mut be = JsonObj::new();
+        be.insert("mode", Json::str(self.backend.mode.name()));
+        be.insert("k_near", Json::num(self.backend.k_near as f64));
+        be.insert("k_freq", Json::num(self.backend.k_freq as f64));
+        o.insert("backend", Json::Obj(be));
         o.insert("n_clients", Json::num(self.n_clients as f64));
         o.insert("area_radius_m", Json::num(self.area_radius_m));
         let mut ch = JsonObj::new();
@@ -656,6 +784,15 @@ impl ExperimentConfig {
             let s = v.as_str().ok_or_else(|| ConfigError("pairing must be a string".into()))?;
             c.pairing = PairingStrategy::parse(s)
                 .ok_or_else(|| ConfigError(format!("unknown pairing strategy {s:?}")))?;
+        }
+        if let Some(be) = obj.get("backend").and_then(|v| v.as_obj()) {
+            if let Some(s) = be.get("mode").and_then(|v| v.as_str()) {
+                c.backend.mode = BackendMode::parse(s)
+                    .ok_or_else(|| ConfigError(format!("unknown backend mode {s:?}")))?;
+            }
+            let gu = |k: &str, dv: usize| be.get(k).and_then(|v| v.as_usize()).unwrap_or(dv);
+            c.backend.k_near = gu("k_near", c.backend.k_near);
+            c.backend.k_freq = gu("k_freq", c.backend.k_freq);
         }
         c.n_clients = get_usize("n_clients", c.n_clients)?;
         c.area_radius_m = get_f64("area_radius_m", c.area_radius_m)?;
@@ -881,11 +1018,61 @@ mod tests {
 
     #[test]
     fn presets_exist_and_validate() {
-        for name in ["fig2", "fig3", "table1", "table2", "quick"] {
+        for name in ["fig2", "fig3", "table1", "table2", "quick", "metro-scale"] {
             let c = ExperimentConfig::preset(name).unwrap_or_else(|| panic!("{name}"));
             c.validate().unwrap();
         }
         assert!(ExperimentConfig::preset("nope").is_none());
+    }
+
+    #[test]
+    fn metro_scale_preset_resolves_sparse() {
+        let c = ExperimentConfig::preset("metro-scale").unwrap();
+        assert_eq!(c.scenario.kind, ScenarioKind::MetroScale);
+        assert!(c.n_clients >= 50_000);
+        assert!(c.backend.sparse_for(c.n_clients));
+        // The paper-scale default stays dense under Auto.
+        let d = ExperimentConfig::default();
+        assert_eq!(d.backend.mode, BackendMode::Auto);
+        assert!(!d.backend.sparse_for(d.n_clients));
+    }
+
+    #[test]
+    fn backend_modes_parse_resolve_and_validate() {
+        assert_eq!(BackendMode::parse("sparse"), Some(BackendMode::Sparse));
+        assert_eq!(BackendMode::parse("DENSE"), Some(BackendMode::Dense));
+        assert_eq!(BackendMode::parse("auto"), Some(BackendMode::Auto));
+        assert_eq!(BackendMode::parse("bogus"), None);
+        let mut b = PairingBackendConfig::default();
+        assert!(!b.sparse_for(PairingBackendConfig::AUTO_DENSE_MAX));
+        assert!(b.sparse_for(PairingBackendConfig::AUTO_DENSE_MAX + 1));
+        b.mode = BackendMode::Sparse;
+        assert!(b.sparse_for(2));
+        b.k_near = 0;
+        b.k_freq = 0;
+        assert!(b.validate().is_err());
+        b.mode = BackendMode::Dense;
+        assert!(b.validate().is_ok());
+    }
+
+    #[test]
+    fn backend_json_roundtrip_and_overrides() {
+        let mut c = ExperimentConfig::default();
+        c.backend = PairingBackendConfig {
+            mode: BackendMode::Sparse,
+            k_near: 12,
+            k_freq: 6,
+        };
+        let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.backend, c.backend);
+        // Partial override keeps the remaining defaults.
+        let j = Json::parse(r#"{"backend": {"mode": "sparse"}}"#).unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.backend.mode, BackendMode::Sparse);
+        assert_eq!(c.backend.k_near, PairingBackendConfig::default().k_near);
+        // Bad mode rejected.
+        let j = Json::parse(r#"{"backend": {"mode": "quantum"}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
     }
 
     #[test]

@@ -16,7 +16,7 @@
 use crate::config::{ChannelConfig, ExperimentConfig, ScenarioConfig};
 use crate::sim::channel::Channel;
 use crate::sim::compute::sample_frequencies;
-use crate::sim::geometry::place_uniform_disk;
+use crate::sim::geometry::{place_uniform_disk, SpatialGrid};
 use crate::sim::latency::Fleet;
 use crate::util::rng::Rng;
 
@@ -69,6 +69,11 @@ pub struct FleetDynamics {
     rng: Rng,
     /// Current global shadowing factor in dB.
     fade_db: f64,
+    /// Spatial index over the *alive* clients, maintained incrementally:
+    /// O(1) membership updates on join/depart and O(1) relocations as
+    /// clients drift — never rebuilt from global state. The sparse pairing
+    /// backend reads it directly (ids are universe ids).
+    grid: SpatialGrid,
 }
 
 impl FleetDynamics {
@@ -114,6 +119,10 @@ impl FleetDynamics {
         alive.extend(std::iter::repeat(false).take(extra));
         let mut latent = vec![false; cfg.n_clients];
         latent.extend(std::iter::repeat(true).take(extra));
+        let mut grid = SpatialGrid::new(cfg.area_radius_m, universe.n());
+        for c in 0..cfg.n_clients {
+            grid.insert(c, universe.positions[c]);
+        }
         FleetDynamics {
             scenario: cfg.scenario,
             channel_cfg: cfg.channel,
@@ -125,6 +134,7 @@ impl FleetDynamics {
             latent,
             rng: Rng::with_stream(cfg.seed ^ FLEET_STREAM_SALT, 2),
             fade_db: 0.0,
+            grid,
         }
     }
 
@@ -148,6 +158,7 @@ impl FleetDynamics {
                 if self.latent[c] {
                     self.latent[c] = false;
                     self.alive[c] = true;
+                    self.grid.insert(c, self.universe.positions[c]);
                     ev.joined.push(c);
                 }
             }
@@ -157,6 +168,7 @@ impl FleetDynamics {
             for c in 0..n {
                 if !self.alive[c] && !self.latent[c] && self.rng.f64() < sc.p_rejoin {
                     self.alive[c] = true;
+                    self.grid.insert(c, self.universe.positions[c]);
                     ev.joined.push(c);
                 }
             }
@@ -167,6 +179,7 @@ impl FleetDynamics {
             for c in 0..n {
                 if self.alive[c] && alive_count > 1 && self.rng.f64() < sc.p_depart {
                     self.alive[c] = false;
+                    self.grid.remove(c);
                     alive_count -= 1;
                     ev.departed.push(c);
                 }
@@ -203,7 +216,9 @@ impl FleetDynamics {
             }
             self.universe.freqs_hz[c] = f;
         }
-        // 6. Mobility: alive clients random-walk inside the disk.
+        // 6. Mobility: alive clients random-walk inside the disk; the
+        //    spatial index follows each move (cell-change only — an O(1)
+        //    no-op for small drift).
         if sc.mobility_m > 0.0 {
             for c in 0..n {
                 if self.alive[c] {
@@ -218,6 +233,8 @@ impl FleetDynamics {
                         p.x *= s;
                         p.y *= s;
                     }
+                    let moved = *p;
+                    self.grid.relocate(c, moved);
                 }
             }
         }
@@ -241,6 +258,13 @@ impl FleetDynamics {
     /// Universe ids of clients currently alive (matching membership).
     pub fn alive_indices(&self) -> Vec<usize> {
         (0..self.universe.n()).filter(|&c| self.alive[c]).collect()
+    }
+
+    /// The incrementally-maintained spatial index over the alive clients
+    /// (universe ids). The sparse pairing backend builds its candidate lists
+    /// from this grid instead of scanning the fleet.
+    pub fn grid(&self) -> &SpatialGrid {
+        &self.grid
     }
 
     /// Universe ids participating in the current round.
@@ -406,6 +430,41 @@ mod tests {
             assert!(!d.alive_indices().is_empty());
             assert!(ev.n_alive >= 1);
         }
+    }
+
+    #[test]
+    fn grid_tracks_alive_set_incrementally() {
+        // Heavy churn + mobility: after every step the incrementally-updated
+        // grid must hold exactly the alive clients, each in the cell a fresh
+        // rebuild would put it in.
+        let cfg = cfg_with(ScenarioKind::LossyRadio, 16, 40, 31);
+        let base = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+        let mut d = FleetDynamics::new(&cfg, base);
+        for round in 1..=40 {
+            d.step(round);
+            assert_eq!(d.grid().members(), d.alive_indices(), "round {round}");
+            for &c in &d.alive_indices() {
+                let p = d.universe().positions[c];
+                let mut found = false;
+                let (cx, cy) = d.grid().cell_xy(&p);
+                d.grid().for_ring(cx, cy, 0, |cell| found = cell.contains(&c));
+                assert!(found, "round {round}: client {c} not in its cell");
+            }
+        }
+    }
+
+    #[test]
+    fn flash_crowd_joiners_enter_the_grid() {
+        let cfg = cfg_with(ScenarioKind::FlashCrowd, 10, 10, 33);
+        let base = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+        let mut d = FleetDynamics::new(&cfg, base);
+        assert_eq!(d.grid().len(), 10);
+        for round in 1..=cfg.scenario.flash_round {
+            d.step(round);
+        }
+        // All five latent clients (ids 10..15) are now indexed.
+        assert!(d.grid().len() >= 10, "cohort missing from grid");
+        assert_eq!(d.grid().members(), d.alive_indices());
     }
 
     #[test]

@@ -20,10 +20,14 @@
 //!   training drivers and the sim driver call each round: initial pairing via
 //!   the configured strategy, then *incremental* repair
 //!   ([`crate::pairing::repair_matching`]) when churn hits, logged at INFO.
+//!   At fleet scale (sparse backend) the initial pairing reads candidates
+//!   straight off [`FleetDynamics`]' incrementally-maintained spatial grid
+//!   and repair pools re-match against grid-local candidates only, so a
+//!   100k-client churn round never materializes O(n²) edges.
 //!
-//! Scenario presets (`stable`, `diurnal`, `flash-crowd`, `lossy-radio`) live
-//! in [`crate::config::ScenarioConfig`] so they load from the same JSON
-//! config as everything else.
+//! Scenario presets (`stable`, `diurnal`, `flash-crowd`, `lossy-radio`,
+//! `metro-scale`) live in [`crate::config::ScenarioConfig`] so they load
+//! from the same JSON config as everything else.
 
 pub mod dynamics;
 pub mod sim_driver;
@@ -31,19 +35,32 @@ pub mod sim_driver;
 pub use dynamics::{universe_size, FleetDynamics, RoundEvents};
 pub use sim_driver::{simulate_scenario, ScenarioRun};
 
-use crate::config::{ExperimentConfig, PairingStrategy};
+use crate::config::ExperimentConfig;
 use crate::log_info;
-use crate::pairing::{pair_members, repair_matching, Matching};
+use crate::pairing::{
+    dense_pool_matching, match_candidates, pair_members_with, repair_matching_pooled,
+    EdgeWeightSpec, Matching, SparseCandidateGraph,
+};
 use crate::sim::channel::Channel;
 use crate::util::rng::{splitmix64, Rng};
+
+/// Repair pools at most this large are matched densely (O(pool²) edges —
+/// exactly right for the handful of clients a churn round touches). Larger
+/// pools (metro-scale churn, flash cohorts) go through the sparse
+/// candidate-graph with grid-local candidates only.
+const DENSE_POOL_MAX: usize = 64;
 
 /// Create or incrementally repair the FedPairing matching for this round.
 ///
 /// * First call (`matching` is `None`): full pairing of the alive set via the
-///   configured strategy.
+///   configured strategy. When the configured backend resolves sparse for the
+///   fleet size, candidates come straight from the dynamics' incrementally
+///   maintained [`SpatialGrid`](crate::sim::geometry::SpatialGrid) — no
+///   O(n²) edges, no fleet compaction.
 /// * Later rounds: a no-op unless this round saw departures or joins; then
 ///   only the affected clients are re-matched on *fresh* channel weights,
-///   with the repair logged at INFO.
+///   with the repair logged at INFO. Pools past [`DENSE_POOL_MAX`] are
+///   re-matched against grid-local candidates only.
 ///
 /// Returns `true` when the matching changed.
 pub fn maintain_matching(
@@ -55,21 +72,54 @@ pub fn maintain_matching(
     pairing_rng: &mut Rng,
 ) -> bool {
     let alive = dynamics.alive_indices();
+    let sparse = cfg.backend.sparse_for(alive.len());
+    let spec = EdgeWeightSpec::for_strategy(cfg.pairing, cfg.alpha, cfg.beta);
     match matching {
         None => {
-            let m = pair_members(
-                cfg.pairing,
-                dynamics.universe(),
-                channel,
-                cfg.alpha,
-                cfg.beta,
-                pairing_rng,
-                &alive,
-            );
+            let m = match spec {
+                Some(spec) if sparse => {
+                    // Universe-id pairing straight off the dynamics grid.
+                    let g = SparseCandidateGraph::over_members(
+                        dynamics.universe(),
+                        channel,
+                        dynamics.grid(),
+                        &alive,
+                        spec,
+                        cfg.backend.k_near,
+                        cfg.backend.k_freq,
+                    );
+                    match_candidates(&g, &alive)
+                }
+                None if sparse => {
+                    // Random at fleet scale: shuffle the alive ids directly.
+                    let mut ids = alive.clone();
+                    pairing_rng.shuffle(&mut ids);
+                    let mut chunks = ids.chunks_exact(2);
+                    let mut pairs = Vec::with_capacity(alive.len() / 2);
+                    for c in chunks.by_ref() {
+                        pairs.push((c[0], c[1]));
+                    }
+                    Matching {
+                        pairs,
+                        solos: chunks.remainder().to_vec(),
+                    }
+                }
+                _ => pair_members_with(
+                    &cfg.backend,
+                    cfg.pairing,
+                    dynamics.universe(),
+                    channel,
+                    cfg.alpha,
+                    cfg.beta,
+                    pairing_rng,
+                    &alive,
+                ),
+            };
             log_info!(
-                "round {}: initial pairing via {} — {} pair(s), {} solo",
+                "round {}: initial pairing via {} ({} backend) — {} pair(s), {} solo",
                 ev.round,
                 cfg.pairing,
+                if sparse { "sparse" } else { "dense" },
                 m.pairs.len(),
                 m.solos.len()
             );
@@ -84,35 +134,56 @@ pub fn maintain_matching(
             // Repair with the *configured* mechanism's objective — repairing
             // a random/location/compute baseline with eq. (5) weights would
             // drift its matching toward the FedPairing criterion over churn.
+            // All objective formulas live in EdgeWeightSpec::weight; only
+            // Random needs its own deterministic per-round pseudo-weight.
             let nonce = pairing_rng.next_u64();
-            let weight: Box<dyn Fn(usize, usize) -> f64 + '_> = match cfg.pairing {
-                PairingStrategy::Greedy | PairingStrategy::Exact => Box::new(|a, b| {
-                    let df = (uni.freqs_hz[a] - uni.freqs_hz[b]) / 1e9;
-                    cfg.alpha * df * df
-                        + cfg.beta * channel.rate(&uni.positions[a], &uni.positions[b])
-                }),
-                PairingStrategy::Random => Box::new(move |a, b| {
-                    // Deterministic per-round pseudo-random weight.
+            let weight: Box<dyn Fn(usize, usize) -> f64 + '_> = match spec {
+                Some(spec) => Box::new(move |a, b| spec.weight(uni, channel, a, b)),
+                None => Box::new(move |a, b| {
                     let mut s = nonce ^ ((a as u64) << 32) ^ b as u64;
                     splitmix64(&mut s) as f64
                 }),
-                PairingStrategy::Location => {
-                    Box::new(|a, b| -uni.positions[a].dist(&uni.positions[b]))
-                }
-                PairingStrategy::Compute => Box::new(|a, b| {
-                    let df = (uni.freqs_hz[a] - uni.freqs_hz[b]) / 1e9;
-                    df * df
-                }),
             };
-            let rep = repair_matching(m, &alive, |a, b| weight(a, b));
+            let rep = repair_matching_pooled(m, &alive, |pool| match spec {
+                // Metro-scale pool: grid-local candidates within the pool
+                // only, weights evaluated lazily — never O(pool²).
+                Some(spec) if sparse && pool.len() > DENSE_POOL_MAX => {
+                    let g = SparseCandidateGraph::over_pool(
+                        uni,
+                        channel,
+                        pool,
+                        spec,
+                        cfg.backend.k_near,
+                        cfg.backend.k_freq,
+                    );
+                    match_candidates(&g, pool)
+                }
+                // Random at fleet scale (e.g. a flash cohort joining a
+                // metro run): a nonce-seeded shuffle of the pool, matching
+                // the initial-pairing path — never O(pool²) edges.
+                None if sparse && pool.len() > DENSE_POOL_MAX => {
+                    let mut ids = pool.to_vec();
+                    Rng::new(nonce).shuffle(&mut ids);
+                    let mut chunks = ids.chunks_exact(2);
+                    let mut pairs = Vec::with_capacity(pool.len() / 2);
+                    for c in chunks.by_ref() {
+                        pairs.push((c[0], c[1]));
+                    }
+                    Matching {
+                        pairs,
+                        solos: chunks.remainder().to_vec(),
+                    }
+                }
+                _ => dense_pool_matching(pool, &|a, b| weight(a, b)),
+            });
             if rep.changed() {
                 log_info!(
-                    "round {}: incremental re-pair — dropped {:?}, formed {:?}, solo {:?} \
+                    "round {}: incremental re-pair — dropped {}, formed {}, solo {} \
                      ({} pair(s) untouched)",
                     ev.round,
-                    rep.dropped_pairs,
-                    rep.new_pairs,
-                    rep.new_solos,
+                    rep.dropped_pairs.len(),
+                    rep.new_pairs.len(),
+                    rep.new_solos.len(),
                     rep.kept_pairs
                 );
             }
@@ -126,6 +197,71 @@ mod tests {
     use super::*;
     use crate::config::{ScenarioConfig, ScenarioKind};
     use crate::sim::latency::Fleet;
+
+    #[test]
+    fn maintain_matching_sparse_backend_and_big_pool_repair() {
+        // n=300 > AUTO_DENSE_MAX resolves sparse under Auto; violent churn
+        // (40 %/round departures) pushes the repair pool past DENSE_POOL_MAX,
+        // exercising the grid-local pool matcher.
+        let mut cfg = ExperimentConfig::default();
+        cfg.n_clients = 300;
+        cfg.samples_per_client = 64;
+        cfg.scenario = ScenarioConfig::preset(ScenarioKind::LossyRadio);
+        cfg.scenario.p_depart = 0.4;
+        cfg.scenario.p_rejoin = 0.5;
+        // Pin sparse so heavy churn shrinking the fleet below AUTO_DENSE_MAX
+        // can't silently fall back to the dense path mid-test.
+        cfg.backend.mode = crate::config::BackendMode::Sparse;
+        assert!(cfg.backend.sparse_for(cfg.n_clients));
+        let base = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+        let mut dynamics = FleetDynamics::new(&cfg, base);
+        let mut rng = Rng::new(5);
+        let mut matching = None;
+        let mut repaired = 0;
+        for round in 1..=8 {
+            let ev = dynamics.step(round);
+            let ch = dynamics.channel();
+            let had = matching.is_some();
+            if maintain_matching(&mut matching, &dynamics, &ev, &ch, &cfg, &mut rng) && had {
+                repaired += 1;
+            }
+            let m = matching.as_ref().unwrap();
+            assert!(
+                m.is_valid_over(&dynamics.alive_indices()),
+                "round {round}: invalid after sparse maintain"
+            );
+        }
+        assert!(repaired > 0, "churn never triggered a repair");
+    }
+
+    #[test]
+    fn maintain_matching_random_big_pool_repair_stays_sparse() {
+        // Random strategy with a giant churn pool must take the nonce-seeded
+        // shuffle arm — the dense O(pool²) matcher on a metro-scale pool is
+        // the scale bug this guards against.
+        let mut cfg = ExperimentConfig::default();
+        cfg.n_clients = 300;
+        cfg.samples_per_client = 64;
+        cfg.pairing = crate::config::PairingStrategy::Random;
+        cfg.scenario = ScenarioConfig::preset(ScenarioKind::LossyRadio);
+        cfg.scenario.p_depart = 0.4;
+        cfg.scenario.p_rejoin = 0.5;
+        cfg.backend.mode = crate::config::BackendMode::Sparse;
+        let base = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+        let mut dynamics = FleetDynamics::new(&cfg, base);
+        let mut rng = Rng::new(7);
+        let mut matching = None;
+        for round in 1..=6 {
+            let ev = dynamics.step(round);
+            let ch = dynamics.channel();
+            maintain_matching(&mut matching, &dynamics, &ev, &ch, &cfg, &mut rng);
+            let m = matching.as_ref().unwrap();
+            assert!(
+                m.is_valid_over(&dynamics.alive_indices()),
+                "round {round}: {m:?}"
+            );
+        }
+    }
 
     #[test]
     fn maintain_matching_initial_then_repair() {

@@ -5,6 +5,7 @@
 //! fedpairing run --preset fig2 --algorithm fedpairing --rounds 30
 //! fedpairing run --scenario lossy-radio --rounds 50
 //! fedpairing churn --scenario flash-crowd --rounds 30
+//! fedpairing churn --scenario metro-scale --n-clients 100000 --backend sparse
 //! fedpairing pair --clients 20 --strategy greedy
 //! fedpairing latency --samples 2500
 //! fedpairing info
@@ -12,12 +13,12 @@
 
 use fedpairing::cli::{CliError, Command, Parsed};
 use fedpairing::config::{
-    Algorithm, DataDistribution, ExperimentConfig, PairingStrategy, ScenarioConfig,
+    Algorithm, BackendMode, DataDistribution, ExperimentConfig, PairingStrategy, ScenarioConfig,
 };
 use fedpairing::coordinator::run_experiment;
 use fedpairing::fleet::simulate_scenario;
 use fedpairing::model::ModelMeta;
-use fedpairing::pairing::{graph::ClientGraph, pair_clients};
+use fedpairing::pairing::{graph::ClientGraph, pair_clients, pair_clients_backend};
 use fedpairing::sim::channel::Channel;
 use fedpairing::sim::compute::split_lengths;
 use fedpairing::sim::latency::{self, Fleet, Schedule};
@@ -30,28 +31,32 @@ fn cli() -> Command {
         .flag("log-level", None, Some("LEVEL"), "error|warn|info|debug|trace", Some("info"))
         .subcommand(
             Command::new("run", "run a full FL experiment against the AOT artifacts")
-                .flag("preset", None, Some("NAME"), "fig2|fig3|table1|table2|quick", Some("quick"))
+                .flag("preset", None, Some("NAME"), "fig2|fig3|table1|table2|quick|metro-scale", Some("quick"))
                 .flag("config", None, Some("FILE"), "JSON config file (overrides preset)", None)
                 .flag("algorithm", Some('a'), Some("ALGO"), "fedpairing|fl|sl|splitfed", None)
                 .flag("pairing", Some('p'), Some("STRAT"), "greedy|random|location|compute|exact", None)
+                .flag("backend", None, Some("MODE"), "pairing candidate backend: auto|dense|sparse", None)
                 .flag("rounds", Some('r'), Some("N"), "communication rounds", None)
                 .flag("clients", Some('n'), Some("N"), "fleet size", None)
+                .flag("n-clients", None, Some("N"), "fleet size (alias of --clients)", None)
                 .flag("samples", None, Some("N"), "samples per client", None)
                 .flag("seed", Some('s'), Some("N"), "experiment seed", None)
                 .flag("noniid", None, None, "2-class shards instead of IID", None)
                 .flag("no-overlap-boost", None, None, "disable the eq.(7) 2x overlap step", None)
-                .flag("scenario", None, Some("NAME"), "stable|diurnal|flash-crowd|lossy-radio", None)
+                .flag("scenario", None, Some("NAME"), "stable|diurnal|flash-crowd|lossy-radio|metro-scale", None)
                 .flag("artifacts", None, Some("DIR"), "artifact directory", None)
                 .flag("out", Some('o'), Some("DIR"), "metrics output directory", None),
         )
         .subcommand(
             Command::new("churn", "simulate a fleet-dynamics scenario (latency + churn, no training)")
-                .flag("scenario", None, Some("NAME"), "stable|diurnal|flash-crowd|lossy-radio", Some("flash-crowd"))
+                .flag("scenario", None, Some("NAME"), "stable|diurnal|flash-crowd|lossy-radio|metro-scale", Some("flash-crowd"))
                 .flag("algorithm", Some('a'), Some("ALGO"), "fedpairing|fl|sl|splitfed", Some("fedpairing"))
                 .flag("pairing", Some('p'), Some("STRAT"), "greedy|random|location|compute|exact", Some("greedy"))
+                .flag("backend", None, Some("MODE"), "pairing candidate backend: auto|dense|sparse", Some("auto"))
                 .flag("clients", Some('n'), Some("N"), "fleet size", Some("20"))
+                .flag("n-clients", None, Some("N"), "fleet size (alias of --clients)", None)
                 .flag("rounds", Some('r'), Some("N"), "communication rounds", Some("30"))
-                .flag("samples", None, Some("N"), "samples per client", Some("2500"))
+                .flag("samples", None, Some("N"), "samples per client [default: 2500; 64 under metro-scale]", None)
                 .flag("seed", Some('s'), Some("N"), "experiment seed", Some("17"))
                 .flag("out", Some('o'), Some("DIR"), "metrics output directory", None),
         )
@@ -59,6 +64,7 @@ fn cli() -> Command {
             Command::new("pair", "sample a fleet and show the pairing a strategy produces")
                 .flag("clients", Some('n'), Some("N"), "fleet size", Some("20"))
                 .flag("strategy", Some('p'), Some("STRAT"), "greedy|random|location|compute|exact", Some("greedy"))
+                .flag("backend", None, Some("MODE"), "pairing candidate backend: auto|dense|sparse", Some("auto"))
                 .flag("seed", Some('s'), Some("N"), "fleet seed", Some("17"))
                 .flag("alpha", None, Some("A"), "eq.(5) compute weight", Some("1.0"))
                 .flag("beta", None, Some("B"), "eq.(5) rate weight", Some("2e-9")),
@@ -129,10 +135,17 @@ fn cmd_run(p: &Parsed) -> anyhow::Result<()> {
         cfg.pairing =
             PairingStrategy::parse(s).ok_or_else(|| anyhow::anyhow!("unknown strategy {s:?}"))?;
     }
+    if let Some(b) = p.get("backend") {
+        cfg.backend.mode =
+            BackendMode::parse(b).ok_or_else(|| anyhow::anyhow!("unknown backend {b:?}"))?;
+    }
     if let Some(r) = req_parsed::<usize>(p, "rounds")? {
         cfg.rounds = r;
     }
     if let Some(n) = req_parsed::<usize>(p, "clients")? {
+        cfg.n_clients = n;
+    }
+    if let Some(n) = req_parsed::<usize>(p, "n-clients")? {
         cfg.n_clients = n;
     }
     if let Some(n) = req_parsed::<usize>(p, "samples")? {
@@ -194,16 +207,38 @@ fn cmd_churn(p: &Parsed) -> anyhow::Result<()> {
         cfg.pairing =
             PairingStrategy::parse(s).ok_or_else(|| anyhow::anyhow!("unknown strategy {s:?}"))?;
     }
+    if let Some(b) = p.get("backend") {
+        cfg.backend.mode =
+            BackendMode::parse(b).ok_or_else(|| anyhow::anyhow!("unknown backend {b:?}"))?;
+    }
     cfg.n_clients = p.req("clients").map_err(|e| anyhow::anyhow!("{e}"))?;
+    if let Some(n) = req_parsed::<usize>(p, "n-clients")? {
+        cfg.n_clients = n;
+    }
     cfg.rounds = p.req("rounds").map_err(|e| anyhow::anyhow!("{e}"))?;
-    cfg.samples_per_client = p.req("samples").map_err(|e| anyhow::anyhow!("{e}"))?;
     cfg.seed = p.req("seed").map_err(|e| anyhow::anyhow!("{e}"))?;
+    // Metro-scale fleets through the paper's 2500-samples DES schedule would
+    // spend most of their time simulating batches, so the default thins out;
+    // an explicit --samples always wins.
+    cfg.samples_per_client = match req_parsed::<usize>(p, "samples")? {
+        Some(s) => s,
+        None if cfg.scenario.kind == fedpairing::config::ScenarioKind::MetroScale => {
+            println!("metro-scale: samples/client defaulted to 64 (pass --samples to override)");
+            64
+        }
+        None => 2500,
+    };
     if let Some(d) = p.get("out") {
         cfg.out_dir = d.to_string();
     }
     println!(
-        "simulating {} / {} under scenario={} — {} clients, {} rounds (latency only)",
-        cfg.algorithm, cfg.pairing, cfg.scenario.kind, cfg.n_clients, cfg.rounds
+        "simulating {} / {} under scenario={} — {} clients, {} rounds, {} backend (latency only)",
+        cfg.algorithm,
+        cfg.pairing,
+        cfg.scenario.kind,
+        cfg.n_clients,
+        cfg.rounds,
+        if cfg.backend.sparse_for(cfg.n_clients) { "sparse" } else { "dense" }
     );
     let run = simulate_scenario(&cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
     println!(
@@ -244,20 +279,48 @@ fn cmd_pair(p: &Parsed) -> anyhow::Result<()> {
     let mut cfg = ExperimentConfig::default();
     cfg.n_clients = n;
     cfg.seed = seed;
+    if let Some(b) = p.get("backend") {
+        cfg.backend.mode =
+            BackendMode::parse(b).ok_or_else(|| anyhow::anyhow!("unknown backend {b:?}"))?;
+    }
     let mut rng = Rng::new(seed);
     let fleet = Fleet::sample(&cfg, &mut rng);
     let channel = Channel::new(cfg.channel);
-    let pairs = pair_clients(strat, &fleet, &channel, alpha, beta, &mut rng);
-    let graph = ClientGraph::build(&fleet, &channel, alpha, beta);
-    println!(
-        "strategy={strat} n={n} seed={seed}  total ε = {:.3}",
-        graph.matching_weight(&pairs)
-    );
+    let pairs =
+        pair_clients_backend(&cfg.backend, strat, &fleet, &channel, alpha, beta, &mut rng);
+    // The dense graph is only for the ε total — skip it past paper scale
+    // (O(n²) edges) and report the lazily-summed weight instead.
+    if n <= 2048 {
+        let graph = ClientGraph::build(&fleet, &channel, alpha, beta);
+        println!(
+            "strategy={strat} n={n} seed={seed}  total ε = {:.3}",
+            graph.matching_weight(&pairs)
+        );
+    } else {
+        let total: f64 = pairs
+            .iter()
+            .map(|&(i, j)| {
+                let rate = channel.rate(&fleet.positions[i], &fleet.positions[j]);
+                fedpairing::pairing::graph::eq5_weight(
+                    alpha,
+                    beta,
+                    fleet.freqs_hz[i],
+                    fleet.freqs_hz[j],
+                    rate,
+                )
+            })
+            .sum();
+        println!("strategy={strat} n={n} seed={seed}  total ε = {total:.3} (lazy)");
+    }
     println!(
         "{:<12} {:>9} {:>9} {:>8} {:>10} {:>7}",
         "pair", "f_i GHz", "f_j GHz", "dist m", "rate Mb/s", "L_i/L_j"
     );
-    for &(i, j) in &pairs {
+    const MAX_ROWS: usize = 32;
+    if pairs.len() > MAX_ROWS {
+        println!("  (showing first {MAX_ROWS} of {} pairs)", pairs.len());
+    }
+    for &(i, j) in pairs.iter().take(MAX_ROWS) {
         let d = fleet.positions[i].dist(&fleet.positions[j]);
         let r = channel.rate(&fleet.positions[i], &fleet.positions[j]) / 1e6;
         let (li, lj) = split_lengths(fleet.freqs_hz[i], fleet.freqs_hz[j], 8);

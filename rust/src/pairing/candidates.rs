@@ -1,0 +1,498 @@
+//! Sparse candidate-graph backend — the fleet-scale alternative to the
+//! paper's complete eq. (5) graph.
+//!
+//! `ClientGraph::build` materializes all O(n²) edges, which caps the fleet at
+//! a few hundred clients. [`SparseCandidateGraph`] instead generates O(n·k)
+//! candidate edges per round and evaluates their weights lazily through
+//! `sim::channel`, never touching a rate or distance matrix:
+//!
+//! * **grid-local candidates** — each client's `k_near` nearest neighbours,
+//!   found by expanding rings over a [`SpatialGrid`] (the β·r_ij term of
+//!   eq. (5) decays with distance, so heavy edges are short edges);
+//! * **frequency-band candidates** — `k_freq` clients around each client's
+//!   *mirrored* rank in the CPU-frequency ordering (rank `r` ↔ rank
+//!   `m−1−r`), so the α·(f_i−f_j)² term is never starved when the best
+//!   compute-complement happens to sit across the disk.
+//!
+//! The same machinery serves the Table-I baselines through
+//! [`EdgeWeightSpec`]: location-based pairing is grid-candidates-only with
+//! `−distance` weights, compute-based pairing is frequency-band-only with
+//! `(Δf)²` weights.
+//!
+//! With `k_near ≥ n−1` the candidate set degenerates to the complete graph
+//! and [`match_candidates`] reproduces the dense greedy matching **exactly**
+//! (same shared weight function, same sort, same tie-breaks) — the
+//! equivalence property `rust/tests/scale.rs` pins down.
+
+use super::graph::{eq5_weight, CandidateGraph, Edge};
+use super::greedy::pick_edges;
+use super::repair::Matching;
+use crate::config::PairingStrategy;
+use crate::sim::channel::Channel;
+use crate::sim::geometry::SpatialGrid;
+use crate::sim::latency::Fleet;
+
+/// Per-client cap on grid cells scanned while hunting for `k_near`
+/// candidates — bounds the ring walk when members are sparse in the grid
+/// (e.g. a small repair pool spread over a metro-scale disk).
+const MAX_SCAN_CELLS: usize = 4096;
+
+/// Which edge weight a sparse graph evaluates — eq. (5) for the paper's
+/// mechanism, or one of its degenerate baseline forms (Table I).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EdgeWeightSpec {
+    /// `ε_ij = α·(Δf GHz)² + β·r_ij` — Greedy / Exact.
+    Eq5 { alpha: f64, beta: f64 },
+    /// `−‖p_i − p_j‖` — the location-based baseline (nearest first).
+    NegDistance,
+    /// `(Δf GHz)²` — the computation-resource baseline (extremes first).
+    FreqGap,
+}
+
+impl EdgeWeightSpec {
+    /// The weight a configured pairing strategy optimizes (`None` for
+    /// Random, which never evaluates edges; Exact maps to eq. (5) because its
+    /// fleet-scale fallback is the greedy matcher on the same objective).
+    pub fn for_strategy(
+        strategy: PairingStrategy,
+        alpha: f64,
+        beta: f64,
+    ) -> Option<EdgeWeightSpec> {
+        match strategy {
+            PairingStrategy::Greedy | PairingStrategy::Exact => {
+                Some(EdgeWeightSpec::Eq5 { alpha, beta })
+            }
+            PairingStrategy::Location => Some(EdgeWeightSpec::NegDistance),
+            PairingStrategy::Compute => Some(EdgeWeightSpec::FreqGap),
+            PairingStrategy::Random => None,
+        }
+    }
+
+    /// Evaluate the weight of `(a, b)` from live fleet/channel state.
+    #[inline]
+    pub fn weight(&self, fleet: &Fleet, channel: &Channel, a: usize, b: usize) -> f64 {
+        match *self {
+            EdgeWeightSpec::Eq5 { alpha, beta } => {
+                let rate = channel.rate(&fleet.positions[a], &fleet.positions[b]);
+                eq5_weight(alpha, beta, fleet.freqs_hz[a], fleet.freqs_hz[b], rate)
+            }
+            EdgeWeightSpec::NegDistance => -fleet.positions[a].dist(&fleet.positions[b]),
+            EdgeWeightSpec::FreqGap => {
+                let df = (fleet.freqs_hz[a] - fleet.freqs_hz[b]) / 1e9;
+                df * df
+            }
+        }
+    }
+
+    /// Does this weight benefit from geometric (grid) candidates?
+    fn uses_grid(&self) -> bool {
+        !matches!(self, EdgeWeightSpec::FreqGap)
+    }
+
+    /// Does this weight benefit from frequency-band candidates?
+    fn uses_freq_band(&self) -> bool {
+        !matches!(self, EdgeWeightSpec::NegDistance)
+    }
+}
+
+/// Sparse candidate graph over a member subset of a fleet. Vertex ids are the
+/// fleet's own indices (universe ids when built over `FleetDynamics`' fleet,
+/// compact ids when built over a `Fleet::subset`).
+pub struct SparseCandidateGraph<'a> {
+    fleet: &'a Fleet,
+    channel: &'a Channel,
+    spec: EdgeWeightSpec,
+    edges: Vec<Edge>,
+}
+
+impl<'a> SparseCandidateGraph<'a> {
+    /// Build over the whole fleet (ids `0..fleet.n()`), constructing a
+    /// throwaway grid sized to the fleet's bounding box.
+    pub fn build(
+        fleet: &'a Fleet,
+        channel: &'a Channel,
+        spec: EdgeWeightSpec,
+        k_near: usize,
+        k_freq: usize,
+    ) -> SparseCandidateGraph<'a> {
+        let members: Vec<usize> = (0..fleet.n()).collect();
+        Self::over_pool(fleet, channel, &members, spec, k_near, k_freq)
+    }
+
+    /// Build over an explicit member subset with a private grid containing
+    /// only those members — the repair path's "grid-local candidates *within
+    /// the pool*" (ids stay the fleet's own indices).
+    pub fn over_pool(
+        fleet: &'a Fleet,
+        channel: &'a Channel,
+        pool: &[usize],
+        spec: EdgeWeightSpec,
+        k_near: usize,
+        k_freq: usize,
+    ) -> SparseCandidateGraph<'a> {
+        let extent = pool
+            .iter()
+            .map(|&c| fleet.positions[c].x.abs().max(fleet.positions[c].y.abs()))
+            .fold(1.0f64, f64::max);
+        let mut grid = SpatialGrid::new(extent, pool.len());
+        for &c in pool {
+            grid.insert(c, fleet.positions[c]);
+        }
+        Self::over_members(fleet, channel, &grid, pool, spec, k_near, k_freq)
+    }
+
+    /// Build over an explicit member subset using an existing grid (e.g. the
+    /// incrementally-maintained `FleetDynamics` grid). `members` must be a
+    /// subset of the grid's contents; non-member grid occupants are filtered
+    /// out of the candidate lists.
+    pub fn over_members(
+        fleet: &'a Fleet,
+        channel: &'a Channel,
+        grid: &SpatialGrid,
+        members: &[usize],
+        spec: EdgeWeightSpec,
+        k_near: usize,
+        k_freq: usize,
+    ) -> SparseCandidateGraph<'a> {
+        let n = fleet.n();
+        let m = members.len();
+        let mut in_members = vec![false; n];
+        for &c in members {
+            in_members[c] = true;
+        }
+        // Frequency ordering over the members (ties broken by id so the
+        // candidate sets are deterministic).
+        let mut by_freq: Vec<usize> = members.to_vec();
+        by_freq.sort_by(|&a, &b| {
+            fleet.freqs_hz[a]
+                .partial_cmp(&fleet.freqs_hz[b])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let mut rank = vec![usize::MAX; n];
+        for (r, &c) in by_freq.iter().enumerate() {
+            rank[c] = r;
+        }
+        let mut cand: Vec<(usize, usize)> = Vec::with_capacity(m * (k_near + k_freq));
+        for &i in members {
+            if spec.uses_grid() && k_near > 0 {
+                for j in nearest_in_grid(grid, fleet, &in_members, i, k_near) {
+                    cand.push((i.min(j), i.max(j)));
+                }
+            }
+            if spec.uses_freq_band() && k_freq > 0 && m > 1 {
+                // Complementary band: partners around the *mirrored* rank
+                // m−1−r, so every client — not just the global extremes —
+                // sees a large |Δf| candidate (rank r pairing with rank
+                // m−1−r is the |Δf|-maximizing matching of the sorted
+                // list). Expanding around one shared extreme instead would
+                // give all edges to ~2·k_freq hub clients and starve the
+                // rest of the fleet of α-term candidates.
+                let r = rank[i];
+                let mirror = m - 1 - r;
+                let mut taken = 0;
+                let mut step = 0usize;
+                while taken < k_freq && step < 2 * m {
+                    // ranks mirror, mirror−1, mirror+1, mirror−2, …
+                    let delta = (step + 1) / 2;
+                    let cr = if step % 2 == 0 {
+                        mirror.checked_add(delta)
+                    } else {
+                        mirror.checked_sub(delta)
+                    };
+                    step += 1;
+                    match cr {
+                        Some(cr) if cr < m && cr != r => {
+                            let j = by_freq[cr];
+                            cand.push((i.min(j), i.max(j)));
+                            taken += 1;
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
+        cand.sort_unstable();
+        cand.dedup();
+        let edges = cand
+            .into_iter()
+            .map(|(i, j)| Edge {
+                i,
+                j,
+                weight: spec.weight(fleet, channel, i, j),
+            })
+            .collect();
+        SparseCandidateGraph {
+            fleet,
+            channel,
+            spec,
+            edges,
+        }
+    }
+
+    /// The generated candidate edges (for diagnostics and the scaling tests —
+    /// length is O(members·k), never O(n²)).
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+}
+
+impl CandidateGraph for SparseCandidateGraph<'_> {
+    fn n(&self) -> usize {
+        self.fleet.n()
+    }
+
+    fn weight(&self, a: usize, b: usize) -> f64 {
+        self.spec.weight(self.fleet, self.channel, a, b)
+    }
+
+    fn candidate_edges(&self) -> &[Edge] {
+        &self.edges
+    }
+}
+
+/// `k` nearest members to `i`, by expanding grid rings, then keeping the `k`
+/// closest by exact distance. The walk stops only once the current k-th-best
+/// distance rules out everything unscanned: after ring `R`, any client in
+/// ring `R+1` or beyond is ≥ `R·cell_m` from `i`, so `kth ≤ R·cell_m` proves
+/// no nearer client remains (merely "one ring past the ring that satisfied
+/// `k`" is not enough — a diagonal find can be farther than a straight-line
+/// client two rings out).
+fn nearest_in_grid(
+    grid: &SpatialGrid,
+    fleet: &Fleet,
+    in_members: &[bool],
+    i: usize,
+    k: usize,
+) -> Vec<usize> {
+    if k == 0 {
+        return Vec::new();
+    }
+    let (cx, cy) = grid.cell_xy(&fleet.positions[i]);
+    let mut found: Vec<(f64, usize)> = Vec::with_capacity(k * 2);
+    let mut scanned = 0usize;
+    for ring in 0.. {
+        let visited = grid.for_ring(cx, cy, ring, |cell| {
+            for &c in cell {
+                if c != i && in_members[c] {
+                    found.push((fleet.positions[i].dist(&fleet.positions[c]), c));
+                }
+            }
+        });
+        scanned += visited;
+        if visited == 0 {
+            break; // ring fully outside the grid — nothing left to scan
+        }
+        if found.len() >= k {
+            let cmp = |a: &(f64, usize), b: &(f64, usize)| {
+                a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+            };
+            found.select_nth_unstable_by(k - 1, cmp);
+            if found[k - 1].0 <= ring as f64 * grid.cell_m() {
+                break;
+            }
+        }
+        if scanned >= MAX_SCAN_CELLS {
+            break; // sparse membership: fall back to whatever we found
+        }
+    }
+    found.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    found.truncate(k);
+    found.into_iter().map(|(_, c)| c).collect()
+}
+
+/// Greedy matching over a candidate graph, completed to a **near-perfect
+/// matching** of `members`: a sparse graph can leave several vertices
+/// uncovered (no surviving candidate edge), so leftovers are paired up
+/// deterministically by ascending id; at most one client stays solo.
+///
+/// `members` must be exactly the vertex set the graph's edges were generated
+/// over. On a complete candidate set (dense graph, or sparse with
+/// `k_near ≥ n−1`) the completion step is a no-op and the pair list equals
+/// `greedy_matching`'s output verbatim.
+pub fn match_candidates<G: CandidateGraph + ?Sized>(graph: &G, members: &[usize]) -> Matching {
+    let mut pairs = pick_edges(graph.candidate_edges(), graph.n());
+    let mut covered = vec![false; graph.n()];
+    for &(a, b) in &pairs {
+        covered[a] = true;
+        covered[b] = true;
+    }
+    let mut leftovers: Vec<usize> = members.iter().copied().filter(|&c| !covered[c]).collect();
+    leftovers.sort_unstable();
+    let mut chunks = leftovers.chunks_exact(2);
+    for c in chunks.by_ref() {
+        pairs.push((c[0], c[1]));
+    }
+    let solos = chunks.remainder().to_vec();
+    Matching { pairs, solos }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::graph::{is_perfect_matching, ClientGraph};
+    use super::super::greedy::greedy_matching;
+    use super::*;
+    use crate::config::{ChannelConfig, ExperimentConfig};
+    use crate::util::rng::Rng;
+
+    fn fleet(n: usize, seed: u64) -> (Fleet, Channel) {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n_clients = n;
+        (
+            Fleet::sample(&cfg, &mut Rng::new(seed)),
+            Channel::new(ChannelConfig::default()),
+        )
+    }
+
+    #[test]
+    fn sparse_with_full_k_equals_dense_greedy() {
+        for n in [2usize, 5, 8, 13, 20] {
+            let (f, ch) = fleet(n, n as u64);
+            let dense = greedy_matching(&ClientGraph::build(&f, &ch, 1.0, 5e-10));
+            let spec = EdgeWeightSpec::Eq5 {
+                alpha: 1.0,
+                beta: 5e-10,
+            };
+            let g = SparseCandidateGraph::build(&f, &ch, spec, n - 1, 0);
+            assert_eq!(g.edges().len(), n * (n - 1) / 2, "n={n}: not complete");
+            let members: Vec<usize> = (0..n).collect();
+            let m = match_candidates(&g, &members);
+            assert_eq!(m.pairs, dense, "n={n}");
+            assert_eq!(m.solos.len(), n % 2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn sparse_edge_count_is_linear_in_n() {
+        let (f, ch) = fleet(500, 3);
+        let spec = EdgeWeightSpec::Eq5 {
+            alpha: 1.0,
+            beta: 5e-10,
+        };
+        let g = SparseCandidateGraph::build(&f, &ch, spec, 8, 4);
+        assert!(
+            g.edges().len() <= 500 * 12,
+            "edge count {} not O(n·k)",
+            g.edges().len()
+        );
+        // Far below the dense count.
+        assert!(g.edges().len() < 500 * 499 / 2 / 4);
+        let members: Vec<usize> = (0..500).collect();
+        let m = match_candidates(&g, &members);
+        assert!(is_perfect_matching(500, &m.pairs));
+        assert!(m.solos.is_empty());
+    }
+
+    #[test]
+    fn lazy_weight_matches_dense_weight() {
+        let (f, ch) = fleet(12, 7);
+        let dense = ClientGraph::build(&f, &ch, 1.0, 5e-10);
+        let spec = EdgeWeightSpec::Eq5 {
+            alpha: 1.0,
+            beta: 5e-10,
+        };
+        let g = SparseCandidateGraph::build(&f, &ch, spec, 11, 0);
+        for e in g.edges() {
+            assert_eq!(e.weight, dense.weight(e.i, e.j), "({}, {})", e.i, e.j);
+            assert_eq!(CandidateGraph::weight(&g, e.i, e.j), e.weight);
+        }
+    }
+
+    #[test]
+    fn freq_band_candidates_bridge_distant_complements() {
+        // FreqGap spec: candidates come only from the frequency band, and the
+        // fastest/slowest pair must be connected regardless of geometry.
+        let (f, ch) = fleet(30, 11);
+        let g = SparseCandidateGraph::build(&f, &ch, EdgeWeightSpec::FreqGap, 0, 4);
+        let fastest = (0..30)
+            .max_by(|&a, &b| f.freqs_hz[a].partial_cmp(&f.freqs_hz[b]).unwrap())
+            .unwrap();
+        let slowest = (0..30)
+            .min_by(|&a, &b| f.freqs_hz[a].partial_cmp(&f.freqs_hz[b]).unwrap())
+            .unwrap();
+        let want = (fastest.min(slowest), fastest.max(slowest));
+        assert!(
+            g.edges().iter().any(|e| (e.i, e.j) == want),
+            "extreme pair {want:?} missing from freq-band candidates"
+        );
+        let members: Vec<usize> = (0..30).collect();
+        let m = match_candidates(&g, &members);
+        assert!(is_perfect_matching(30, &m.pairs));
+    }
+
+    #[test]
+    fn freq_band_covers_every_client() {
+        // Mirrored-rank band: every client gets an incident frequency
+        // candidate. Expanding around one shared extreme instead would give
+        // all edges to ~2·k_freq hub clients and reduce the compute baseline
+        // to id-order completion pairs at scale.
+        let (f, ch) = fleet(40, 21);
+        let g = SparseCandidateGraph::build(&f, &ch, EdgeWeightSpec::FreqGap, 0, 2);
+        let mut deg = vec![0usize; 40];
+        for e in g.edges() {
+            deg[e.i] += 1;
+            deg[e.j] += 1;
+        }
+        assert!(deg.iter().all(|&d| d >= 1), "starved client: {deg:?}");
+        let members: Vec<usize> = (0..40).collect();
+        let m = match_candidates(&g, &members);
+        assert!(is_perfect_matching(40, &m.pairs));
+    }
+
+    #[test]
+    fn nearest_in_grid_matches_brute_force() {
+        // The ring walk's distance-bound stop rule must return exactly the k
+        // nearest (a diagonal find can be farther than a straight-line
+        // client two rings out — the naive "one ring past full" rule fails).
+        let (f, _ch) = fleet(200, 19);
+        let grid = SpatialGrid::build(&f.positions, 50.0);
+        let in_members = vec![true; 200];
+        for i in [0usize, 7, 42, 199] {
+            for k in [1usize, 3, 8] {
+                let got = nearest_in_grid(&grid, &f, &in_members, i, k);
+                let mut want: Vec<(f64, usize)> = (0..200)
+                    .filter(|&c| c != i)
+                    .map(|c| (f.positions[i].dist(&f.positions[c]), c))
+                    .collect();
+                want.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+                let want: Vec<usize> = want.into_iter().take(k).map(|(_, c)| c).collect();
+                assert_eq!(got, want, "i={i} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn over_members_respects_subset() {
+        let (f, ch) = fleet(20, 13);
+        let grid = crate::sim::geometry::SpatialGrid::build(&f.positions, 50.0);
+        let members: Vec<usize> = (0..20).filter(|c| c % 2 == 0).collect();
+        let spec = EdgeWeightSpec::Eq5 {
+            alpha: 1.0,
+            beta: 5e-10,
+        };
+        let g = SparseCandidateGraph::over_members(&f, &ch, &grid, &members, spec, 4, 2);
+        for e in g.edges() {
+            assert!(e.i % 2 == 0 && e.j % 2 == 0, "non-member edge {e:?}");
+        }
+        let m = match_candidates(&g, &members);
+        assert!(m.is_valid_over(&members), "{m:?}");
+        assert_eq!(m.pairs.len(), 5);
+    }
+
+    #[test]
+    fn completion_pairs_isolated_members() {
+        // A graph with zero candidate edges still yields a near-perfect
+        // matching: every pair comes from the deterministic completion.
+        let (f, ch) = fleet(7, 17);
+        let spec = EdgeWeightSpec::Eq5 {
+            alpha: 1.0,
+            beta: 5e-10,
+        };
+        let g = SparseCandidateGraph::build(&f, &ch, spec, 0, 0);
+        assert!(g.edges().is_empty());
+        let members: Vec<usize> = (0..7).collect();
+        let m = match_candidates(&g, &members);
+        assert_eq!(m.pairs, vec![(0, 1), (2, 3), (4, 5)]);
+        assert_eq!(m.solos, vec![6]);
+    }
+}

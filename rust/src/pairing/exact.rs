@@ -4,25 +4,37 @@
 //! cites concerns the general ILP formulation).
 //!
 //! `dp[mask]` = best weight matching exactly the vertices in `mask`. The
-//! lowest unset... rather, lowest *set* vertex is always matched first, so
+//! lowest vertex still missing from `mask` is always matched first, so
 //! each mask is expanded at most N ways: `O(2^N · N)` time, `O(2^N)` space —
 //! ~8 MiB of f64 for N=20, and milliseconds of work.
 
 use super::graph::ClientGraph;
+use anyhow::Result;
 
 /// Maximum fleet size the DP will attempt (2^24 doubles = 128 MiB ceiling).
 pub const MAX_N: usize = 24;
 
-/// Exact max-weight near-perfect matching. For odd `n` a zero-weight virtual
-/// vertex is added, so the DP chooses which client it is *optimal* to leave
-/// solo. Panics if the (possibly augmented) fleet exceeds [`MAX_N`].
-pub fn exact_matching(graph: &ClientGraph) -> Vec<(usize, usize)> {
+/// Is the exact DP feasible for a fleet of `n` clients (after the odd-`n`
+/// virtual-vertex augmentation)?
+pub fn fits(n: usize) -> bool {
+    n + n % 2 <= MAX_N
+}
+
+/// Exact max-weight near-perfect matching, checked: returns an error instead
+/// of aborting when the fleet exceeds [`MAX_N`]. `pair_clients` catches this
+/// case up front and falls back to the greedy matcher (logged at WARN), so a
+/// churn run that grows past 24 clients mid-flight no longer panics.
+pub fn try_exact_matching(graph: &ClientGraph) -> Result<Vec<(usize, usize)>> {
     let n = graph.n;
+    anyhow::ensure!(
+        fits(n),
+        "exact pairing is O(2^n·n): n={n} exceeds the bitmask-DP limit {MAX_N}; \
+         use the greedy strategy (or rely on its automatic fallback) at this scale"
+    );
     // Augment odd fleets with virtual vertex `n` (zero-weight edges to all).
     let n_eff = n + n % 2;
-    assert!(n_eff <= MAX_N, "n={n} exceeds bitmask-DP limit {MAX_N}");
     if n == 0 {
-        return Vec::new();
+        return Ok(Vec::new());
     }
     let weight = |i: usize, j: usize| -> f64 {
         if i >= n || j >= n {
@@ -72,7 +84,13 @@ pub fn exact_matching(graph: &ClientGraph) -> Vec<(usize, usize)> {
         mask &= !(1 << j);
     }
     out.reverse();
-    out
+    Ok(out)
+}
+
+/// Exact matching for fleets known to fit the DP (tests, benches, ablations).
+/// Panics past [`MAX_N`]; run-time paths go through [`try_exact_matching`].
+pub fn exact_matching(graph: &ClientGraph) -> Vec<(usize, usize)> {
+    try_exact_matching(graph).expect("fleet exceeds the exact-DP limit")
 }
 
 /// Optimal matching weight only (no reconstruction) — for bounds in tests.
@@ -186,6 +204,18 @@ mod tests {
         let m = exact_matching(&g);
         assert!(is_perfect_matching(20, &m));
         assert!(t.elapsed().as_secs_f64() < 5.0, "DP too slow");
+    }
+
+    #[test]
+    fn oversized_fleet_errors_instead_of_aborting() {
+        assert!(fits(24) && fits(23) && !fits(25));
+        let mut rng = Rng::new(9);
+        let g = random_graph(&mut rng, 30);
+        let err = try_exact_matching(&g).unwrap_err();
+        assert!(err.to_string().contains("bitmask-DP limit"), "{err}");
+        // Odd 23 augments to 24 and stays feasible; 25 augments past it.
+        let g = random_graph(&mut rng, 5);
+        assert!(is_perfect_matching(5, &try_exact_matching(&g).unwrap()));
     }
 
     #[test]

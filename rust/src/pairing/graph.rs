@@ -20,6 +20,36 @@ pub struct Edge {
     pub weight: f64,
 }
 
+/// Eq. (5) edge weight from raw client state. The **single** implementation
+/// shared by the dense and sparse backends, so the two are bit-identical
+/// whenever they evaluate the same edge.
+#[inline]
+pub fn eq5_weight(alpha: f64, beta: f64, f_i_hz: f64, f_j_hz: f64, rate_bps: f64) -> f64 {
+    let df_ghz = (f_i_hz - f_j_hz) / 1e9;
+    alpha * df_ghz * df_ghz + beta * rate_bps
+}
+
+/// A source of candidate edges for the matching algorithms.
+///
+/// The dense backend ([`ClientGraph`]) yields all `n(n−1)/2` edges with
+/// precomputed weights — exactly the paper's complete graph. The sparse
+/// backend ([`crate::pairing::candidates::SparseCandidateGraph`]) yields
+/// O(n·k) grid-local + frequency-band edges with weights evaluated lazily.
+/// `greedy_matching` consumes either through this trait.
+pub trait CandidateGraph {
+    /// Upper bound (exclusive) on vertex ids appearing in the edges.
+    fn n(&self) -> usize;
+
+    /// Weight of the `(a, b)` edge. May panic if the edge is not represented
+    /// (dense graphs represent every edge; sparse ones evaluate on demand).
+    fn weight(&self, a: usize, b: usize) -> f64;
+
+    /// The candidate edge list (each undirected edge once, `i < j`).
+    /// Borrowed — the matchers sort an index permutation over it, so no
+    /// O(edges) copy happens per pairing round.
+    fn candidate_edges(&self) -> &[Edge];
+}
+
 /// Complete weighted client graph.
 #[derive(Clone, Debug)]
 pub struct ClientGraph {
@@ -34,12 +64,11 @@ impl ClientGraph {
         let mut edges = Vec::with_capacity(n * (n - 1) / 2);
         for i in 0..n {
             for j in (i + 1)..n {
-                let df_ghz = (fleet.freqs_hz[i] - fleet.freqs_hz[j]) / 1e9;
                 let rate = channel.rate(&fleet.positions[i], &fleet.positions[j]);
                 edges.push(Edge {
                     i,
                     j,
-                    weight: alpha * df_ghz * df_ghz + beta * rate,
+                    weight: eq5_weight(alpha, beta, fleet.freqs_hz[i], fleet.freqs_hz[j], rate),
                 });
             }
         }
@@ -60,6 +89,20 @@ impl ClientGraph {
     /// Total weight of a matching.
     pub fn matching_weight(&self, pairs: &[(usize, usize)]) -> f64 {
         pairs.iter().map(|&(a, b)| self.weight(a, b)).sum()
+    }
+}
+
+impl CandidateGraph for ClientGraph {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn weight(&self, a: usize, b: usize) -> f64 {
+        ClientGraph::weight(self, a, b)
+    }
+
+    fn candidate_edges(&self) -> &[Edge] {
+        &self.edges
     }
 }
 

@@ -1,7 +1,7 @@
 //! Algorithm 1 of the paper: greedy max-weight matching.
 //!
 //! 1. Sort all edges by weight, descending (the paper's pseudocode says
-//!    "ascending" but its步骤 text — "iteratively pick the edge with the
+//!    "ascending" but its step text — "iteratively pick the edge with the
 //!    largest weight" — and the objective (6) require descending; we follow
 //!    the objective).
 //! 2. Walk the sorted list, taking every edge whose endpoints are both
@@ -11,22 +11,40 @@
 //! result is vertex-disjoint, covers all vertices of a complete even-order
 //! graph, and its weight is ≥ ½ of the optimum (property-tested against the
 //! exact DP in `exact.rs`).
+//!
+//! The matcher is generic over [`CandidateGraph`]: on the dense complete
+//! graph it is the paper's Algorithm 1 verbatim (O(n² log n)); on the sparse
+//! candidate graph it runs in O(n·k·log(n·k)) over the grid-local +
+//! frequency-band edges. On a non-complete graph the greedy pass can leave
+//! more than one vertex uncovered — `candidates::match_candidates` adds the
+//! completion step that turns the result into a near-perfect matching.
 
-use super::graph::{ClientGraph, Edge};
+use super::graph::{CandidateGraph, Edge};
 
 /// Deterministic greedy matching (ties broken by `(i, j)` lexicographic order
 /// so results are stable across runs and platforms).
-pub fn greedy_matching(graph: &ClientGraph) -> Vec<(usize, usize)> {
-    let mut edges: Vec<Edge> = graph.edges.clone();
-    edges.sort_by(|a, b| {
+pub fn greedy_matching<G: CandidateGraph + ?Sized>(graph: &G) -> Vec<(usize, usize)> {
+    pick_edges(graph.candidate_edges(), graph.n())
+}
+
+/// The shared sort-and-pick core: heaviest edge first, both endpoints free.
+/// Sorts an index permutation instead of the edges themselves — the edge key
+/// `(weight desc, (i, j))` is unique per edge, so the pick order (and thus
+/// the matching) is identical to sorting the edge list directly.
+pub(crate) fn pick_edges(edges: &[Edge], n: usize) -> Vec<(usize, usize)> {
+    debug_assert!(edges.len() <= u32::MAX as usize);
+    let mut order: Vec<u32> = (0..edges.len() as u32).collect();
+    order.sort_unstable_by(|&x, &y| {
+        let (a, b) = (&edges[x as usize], &edges[y as usize]);
         b.weight
             .partial_cmp(&a.weight)
             .unwrap()
             .then_with(|| (a.i, a.j).cmp(&(b.i, b.j)))
     });
-    let mut covered = vec![false; graph.n];
-    let mut out = Vec::with_capacity(graph.n / 2);
-    for e in &edges {
+    let mut covered = vec![false; n];
+    let mut out = Vec::with_capacity(n / 2);
+    for &x in &order {
+        let e = &edges[x as usize];
         if !covered[e.i] && !covered[e.j] {
             covered[e.i] = true;
             covered[e.j] = true;

@@ -1,9 +1,19 @@
 //! Client pairing — the paper's Sec. III contribution.
 //!
-//! [`graph`] models the fleet as the weighted graph of eq. (5); [`greedy`] is
-//! Algorithm 1; [`baselines`] are Table I's random/location/compute
-//! mechanisms; [`exact`] is the bitmask-DP optimum used as an ablation bound.
-//! [`pair_clients`] dispatches on the configured [`PairingStrategy`].
+//! [`graph`] models the fleet as the weighted graph of eq. (5) and defines
+//! the [`graph::CandidateGraph`] trait both backends implement; [`greedy`] is
+//! Algorithm 1 (generic over the trait); [`candidates`] is the sparse
+//! fleet-scale backend (spatial grid + frequency band, lazy weights);
+//! [`baselines`] are Table I's random/location/compute mechanisms; [`exact`]
+//! is the bitmask-DP optimum used as an ablation bound. [`pair_clients`]
+//! dispatches on the configured [`PairingStrategy`];
+//! [`pair_clients_backend`] additionally selects the candidate backend.
+//!
+//! **Exact at scale:** the DP is O(2ⁿ·n) and hard-capped at
+//! [`exact::MAX_N`] = 24 clients. Beyond that, `Exact` no longer aborts the
+//! run — it logs a WARN and falls back to the greedy matcher on the same
+//! eq. (5) objective (`exact::try_exact_matching` exposes the checked
+//! variant for callers that want the error instead).
 //!
 //! The fleet-dynamics extension lives in [`repair`]: near-perfect matchings
 //! with explicit solo clients ([`repair::Matching`]), subset pairing
@@ -12,20 +22,28 @@
 //! client is left solo instead of panicking.
 
 pub mod baselines;
+pub mod candidates;
 pub mod exact;
 pub mod graph;
 pub mod greedy;
 pub mod repair;
 
-pub use repair::{pair_members, repair_matching, Matching, RepairReport};
+pub use candidates::{match_candidates, EdgeWeightSpec, SparseCandidateGraph};
+pub use repair::{
+    dense_pool_matching, pair_members, pair_members_with, repair_matching,
+    repair_matching_pooled, Matching, RepairReport,
+};
 
-use crate::config::PairingStrategy;
+use crate::config::{PairingBackendConfig, PairingStrategy};
+use crate::log_warn;
 use crate::sim::channel::Channel;
 use crate::sim::latency::Fleet;
 use crate::util::rng::Rng;
 use graph::ClientGraph;
 
-/// Run the configured pairing mechanism over the fleet.
+/// Run the configured pairing mechanism over the fleet with the default
+/// (`Auto`) backend: the dense complete graph at paper scale, the sparse
+/// candidate graph past [`PairingBackendConfig::AUTO_DENSE_MAX`] clients.
 ///
 /// `alpha`/`beta` are eq. (5)'s weights (used by `Greedy` and `Exact`);
 /// `rng` is consumed only by `Random`. Odd fleets yield `⌊n/2⌋` pairs with
@@ -38,15 +56,69 @@ pub fn pair_clients(
     beta: f64,
     rng: &mut Rng,
 ) -> Vec<(usize, usize)> {
+    pair_clients_backend(
+        &PairingBackendConfig::default(),
+        strategy,
+        fleet,
+        channel,
+        alpha,
+        beta,
+        rng,
+    )
+}
+
+/// [`pair_clients`] with an explicit candidate-graph backend.
+pub fn pair_clients_backend(
+    backend: &PairingBackendConfig,
+    strategy: PairingStrategy,
+    fleet: &Fleet,
+    channel: &Channel,
+    alpha: f64,
+    beta: f64,
+    rng: &mut Rng,
+) -> Vec<(usize, usize)> {
+    let n = fleet.n();
+    let sparse = backend.sparse_for(n);
+    let sparse_pairs = |spec: EdgeWeightSpec| -> Vec<(usize, usize)> {
+        let g = SparseCandidateGraph::build(fleet, channel, spec, backend.k_near, backend.k_freq);
+        let members: Vec<usize> = (0..n).collect();
+        match_candidates(&g, &members).pairs
+    };
     match strategy {
+        PairingStrategy::Random => baselines::random_matching(rng, n),
+        PairingStrategy::Greedy if sparse => {
+            sparse_pairs(EdgeWeightSpec::Eq5 { alpha, beta })
+        }
         PairingStrategy::Greedy => {
             greedy::greedy_matching(&ClientGraph::build(fleet, channel, alpha, beta))
         }
-        PairingStrategy::Random => baselines::random_matching(rng, fleet.n()),
+        PairingStrategy::Location if sparse => sparse_pairs(EdgeWeightSpec::NegDistance),
         PairingStrategy::Location => baselines::location_matching(fleet),
+        PairingStrategy::Compute if sparse => sparse_pairs(EdgeWeightSpec::FreqGap),
         PairingStrategy::Compute => baselines::compute_matching(fleet),
-        PairingStrategy::Exact => {
+        PairingStrategy::Exact if exact::fits(n) && !sparse => {
             exact::exact_matching(&ClientGraph::build(fleet, channel, alpha, beta))
+        }
+        PairingStrategy::Exact => {
+            if !exact::fits(n) {
+                log_warn!(
+                    "exact pairing infeasible for n={n} (bitmask-DP limit {}); \
+                     falling back to greedy on the eq. (5) objective",
+                    exact::MAX_N
+                );
+            } else {
+                // Feasible n, but the backend is pinned sparse — the DP is
+                // only defined on the complete graph.
+                log_warn!(
+                    "exact pairing requested with the sparse backend; \
+                     using sparse greedy on the eq. (5) objective (n={n})"
+                );
+            }
+            if sparse {
+                sparse_pairs(EdgeWeightSpec::Eq5 { alpha, beta })
+            } else {
+                greedy::greedy_matching(&ClientGraph::build(fleet, channel, alpha, beta))
+            }
         }
     }
 }

@@ -12,8 +12,8 @@
 //! pairing path.
 
 use super::graph::uncovered;
-use super::pair_clients;
-use crate::config::PairingStrategy;
+use super::pair_clients_backend;
+use crate::config::{PairingBackendConfig, PairingStrategy};
 use crate::sim::channel::Channel;
 use crate::sim::latency::Fleet;
 use crate::util::rng::Rng;
@@ -93,33 +93,36 @@ impl RepairReport {
     }
 }
 
-/// Repair `m` in place so it covers exactly `members` (the currently-alive
-/// universe ids), re-matching only the affected clients.
-///
-/// `weight` supplies *fresh* eq. (5) edge weights — pairing weights go stale
-/// under time-varying channels, so the repair pool is matched on current
-/// rates, not the ones the original matching saw.
-pub fn repair_matching<W: Fn(usize, usize) -> f64>(
-    m: &mut Matching,
-    members: &[usize],
-    weight: W,
-) -> RepairReport {
+/// The kept/affected split a repair operates on (see [`repair_matching`]).
+struct RepairPartition {
+    /// Pairs whose endpoints both survive — carried over untouched.
+    kept: Vec<(usize, usize)>,
+    /// Affected clients to re-match: widows, surviving solos, newcomers
+    /// (sorted, deduped).
+    pool: Vec<usize>,
+    /// Pairs that lost at least one endpoint.
+    dropped: Vec<(usize, usize)>,
+}
+
+/// Split `m` against the alive set: healthy pairs are kept, everyone else
+/// lands in the re-match pool.
+fn partition_for_repair(m: &Matching, members: &[usize]) -> RepairPartition {
     let set: HashSet<usize> = members.iter().copied().collect();
-    let mut report = RepairReport::default();
     let mut kept: Vec<(usize, usize)> = Vec::with_capacity(m.pairs.len());
+    let mut dropped: Vec<(usize, usize)> = Vec::new();
     let mut pool: Vec<usize> = Vec::new();
     for &(a, b) in &m.pairs {
         match (set.contains(&a), set.contains(&b)) {
             (true, true) => kept.push((a, b)),
             (true, false) => {
-                report.dropped_pairs.push((a, b));
+                dropped.push((a, b));
                 pool.push(a);
             }
             (false, true) => {
-                report.dropped_pairs.push((a, b));
+                dropped.push((a, b));
                 pool.push(b);
             }
-            (false, false) => report.dropped_pairs.push((a, b)),
+            (false, false) => dropped.push((a, b)),
         }
     }
     // Surviving solos rejoin the pool — a repair may finally pair them up.
@@ -138,7 +141,13 @@ pub fn repair_matching<W: Fn(usize, usize) -> f64>(
     }
     pool.sort_unstable();
     pool.dedup();
-    // Greedy max-weight matching inside the (small) pool on fresh weights.
+    RepairPartition { kept, pool, dropped }
+}
+
+/// Dense greedy max-weight matching of a (small) pool on fresh weights —
+/// O(pool²) edges, which is exactly right for the handful of clients a
+/// typical churn round touches.
+pub fn dense_pool_matching<W: Fn(usize, usize) -> f64>(pool: &[usize], weight: &W) -> Matching {
     let mut edges: Vec<(f64, usize, usize)> = Vec::with_capacity(pool.len() * pool.len() / 2);
     for (x, &a) in pool.iter().enumerate() {
         for &b in &pool[x + 1..] {
@@ -151,25 +160,86 @@ pub fn repair_matching<W: Fn(usize, usize) -> f64>(
             .then_with(|| (p.1, p.2).cmp(&(q.1, q.2)))
     });
     let mut taken: HashSet<usize> = HashSet::new();
+    let mut pairs = Vec::new();
     for &(_, a, b) in &edges {
         if !taken.contains(&a) && !taken.contains(&b) {
             taken.insert(a);
             taken.insert(b);
-            report.new_pairs.push((a, b));
+            pairs.push((a, b));
         }
     }
-    report.new_solos = pool.iter().copied().filter(|c| !taken.contains(c)).collect();
-    report.kept_pairs = kept.len();
-    m.pairs = kept;
-    m.pairs.extend(report.new_pairs.iter().copied());
-    m.solos = report.new_solos.clone();
+    let solos = pool.iter().copied().filter(|c| !taken.contains(c)).collect();
+    Matching { pairs, solos }
+}
+
+/// Repair `m` in place so it covers exactly `members`, re-matching only the
+/// affected pool through `pair_pool` (which receives the sorted pool and must
+/// return a matching covering it). This is the backend-agnostic core: the
+/// fleet layer passes a grid-local sparse matcher for metro-scale pools and
+/// the dense matcher otherwise.
+pub fn repair_matching_pooled(
+    m: &mut Matching,
+    members: &[usize],
+    pair_pool: impl FnOnce(&[usize]) -> Matching,
+) -> RepairReport {
+    let part = partition_for_repair(m, members);
+    let pooled = pair_pool(&part.pool);
+    debug_assert!(pooled.is_valid_over(&part.pool), "pool matcher broke coverage");
+    let report = RepairReport {
+        dropped_pairs: part.dropped,
+        new_pairs: pooled.pairs.clone(),
+        new_solos: pooled.solos.clone(),
+        kept_pairs: part.kept.len(),
+    };
+    m.pairs = part.kept;
+    m.pairs.extend(pooled.pairs);
+    m.solos = pooled.solos;
     report
+}
+
+/// Repair `m` in place so it covers exactly `members` (the currently-alive
+/// universe ids), re-matching only the affected clients.
+///
+/// `weight` supplies *fresh* eq. (5) edge weights — pairing weights go stale
+/// under time-varying channels, so the repair pool is matched on current
+/// rates, not the ones the original matching saw.
+pub fn repair_matching<W: Fn(usize, usize) -> f64>(
+    m: &mut Matching,
+    members: &[usize],
+    weight: W,
+) -> RepairReport {
+    repair_matching_pooled(m, members, |pool| dense_pool_matching(pool, &weight))
 }
 
 /// Full (re-)pairing of an arbitrary subset of the fleet: maps `members` to a
 /// compact sub-fleet, runs the configured strategy, and maps back — recording
-/// the odd-one-out as a solo.
+/// the odd-one-out as a solo. Uses the default (`Auto`) candidate backend;
+/// see [`pair_members_with`] to pin one.
 pub fn pair_members(
+    strategy: PairingStrategy,
+    fleet: &Fleet,
+    channel: &Channel,
+    alpha: f64,
+    beta: f64,
+    rng: &mut Rng,
+    members: &[usize],
+) -> Matching {
+    pair_members_with(
+        &PairingBackendConfig::default(),
+        strategy,
+        fleet,
+        channel,
+        alpha,
+        beta,
+        rng,
+        members,
+    )
+}
+
+/// [`pair_members`] with an explicit candidate-graph backend.
+#[allow(clippy::too_many_arguments)]
+pub fn pair_members_with(
+    backend: &PairingBackendConfig,
     strategy: PairingStrategy,
     fleet: &Fleet,
     channel: &Channel,
@@ -191,7 +261,7 @@ pub fn pair_members(
         };
     }
     let sub = fleet.subset(&ms);
-    let compact = pair_clients(strategy, &sub, channel, alpha, beta, rng);
+    let compact = pair_clients_backend(backend, strategy, &sub, channel, alpha, beta, rng);
     let pairs: Vec<(usize, usize)> = compact.iter().map(|&(a, b)| (ms[a], ms[b])).collect();
     let solos: Vec<usize> = uncovered(ms.len(), &compact)
         .into_iter()

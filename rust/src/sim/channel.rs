@@ -9,6 +9,7 @@
 
 use super::geometry::Pos;
 use crate::config::ChannelConfig;
+use crate::util::matrix::FlatMatrix;
 
 /// Instantiated channel model.
 #[derive(Clone, Debug)]
@@ -57,14 +58,14 @@ impl Channel {
     }
 
     /// Full pairwise rate matrix (bits/s); diagonal is +∞ (no self-link cost).
-    pub fn rate_matrix(&self, positions: &[Pos]) -> Vec<Vec<f64>> {
+    /// One flat allocation; O(n²) by construction — the sparse pairing
+    /// backend evaluates rates lazily per candidate edge instead.
+    pub fn rate_matrix(&self, positions: &[Pos]) -> FlatMatrix {
         let n = positions.len();
-        let mut m = vec![vec![f64::INFINITY; n]; n];
+        let mut m = FlatMatrix::new(n, f64::INFINITY);
         for i in 0..n {
             for j in (i + 1)..n {
-                let r = self.rate(&positions[i], &positions[j]);
-                m[i][j] = r;
-                m[j][i] = r;
+                m.set_sym(i, j, self.rate(&positions[i], &positions[j]));
             }
         }
         m
@@ -147,12 +148,12 @@ mod tests {
         ];
         let m = c.rate_matrix(&pts);
         for i in 0..3 {
-            assert!(m[i][i].is_infinite());
+            assert!(m[(i, i)].is_infinite());
             for j in 0..3 {
-                assert_eq!(m[i][j], m[j][i]);
+                assert_eq!(m[(i, j)], m[(j, i)]);
             }
         }
         // Nearer pair has the higher rate.
-        assert!(m[0][1] > m[0][2]);
+        assert!(m[(0, 1)] > m[(0, 2)]);
     }
 }

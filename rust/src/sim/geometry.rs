@@ -1,6 +1,10 @@
 //! Client placement geometry: the paper's "20 clients distributed randomly in
-//! a 50 m radius circular area" with the aggregation server at the center.
+//! a 50 m radius circular area" with the aggregation server at the center —
+//! plus the [`SpatialGrid`] bucketing that lets the sparse pairing backend and
+//! the fleet layer answer "who is near client i?" in O(k) instead of scanning
+//! all n clients.
 
+use crate::util::matrix::FlatMatrix;
 use crate::util::rng::Rng;
 
 /// A 2-D position in meters; the server sits at the origin.
@@ -42,18 +46,186 @@ pub fn place_uniform_disk(rng: &mut Rng, n: usize, radius_m: f64) -> Vec<Pos> {
         .collect()
 }
 
-/// Full pairwise distance matrix (symmetric, zero diagonal).
-pub fn distance_matrix(positions: &[Pos]) -> Vec<Vec<f64>> {
+/// Full pairwise distance matrix (symmetric, zero diagonal). One flat
+/// allocation; prefer lazy per-edge evaluation (the sparse pairing backend)
+/// when n is large — this is O(n²) by construction.
+pub fn distance_matrix(positions: &[Pos]) -> FlatMatrix {
     let n = positions.len();
-    let mut m = vec![vec![0.0; n]; n];
+    let mut m = FlatMatrix::new(n, 0.0);
     for i in 0..n {
         for j in (i + 1)..n {
-            let d = positions[i].dist(&positions[j]);
-            m[i][j] = d;
-            m[j][i] = d;
+            m.set_sym(i, j, positions[i].dist(&positions[j]));
         }
     }
     m
+}
+
+/// Default target bucket occupancy used to size a [`SpatialGrid`].
+pub const GRID_TARGET_PER_CELL: f64 = 4.0;
+
+/// Hard cap on cells per side (512² = 262 144 buckets ≈ a few MiB of `Vec`
+/// headers — plenty of resolution for 100k+ clients in a metro disk).
+const GRID_MAX_DIMS: usize = 512;
+
+/// Uniform spatial hash over the deployment square `[-extent, extent]²`.
+///
+/// Buckets client ids by cell so "nearby clients" is a ring walk over a few
+/// cells rather than an O(n) scan. Membership updates are O(1)
+/// (`insert`/`remove`/`relocate`), which is what lets `fleet::FleetDynamics`
+/// keep the grid current under churn and mobility instead of rebuilding
+/// global state every round. Positions outside the extent clamp to the border
+/// cells, so callers never need to guard stray coordinates.
+#[derive(Clone, Debug)]
+pub struct SpatialGrid {
+    extent_m: f64,
+    cell_m: f64,
+    dims: usize,
+    /// `dims × dims` buckets of client ids (row-major, `y * dims + x`).
+    cells: Vec<Vec<usize>>,
+    /// id → bucket index (`usize::MAX` = not in the grid). Grows on demand.
+    cell_of: Vec<usize>,
+    /// id → slot within its bucket (for O(1) swap-removal).
+    slot_of: Vec<usize>,
+    len: usize,
+}
+
+impl SpatialGrid {
+    /// Empty grid covering `[-extent_m, extent_m]²`, sized so that
+    /// `expected_members` clients average ~[`GRID_TARGET_PER_CELL`] per cell.
+    pub fn new(extent_m: f64, expected_members: usize) -> SpatialGrid {
+        assert!(extent_m > 0.0, "grid extent must be positive");
+        let dims = ((expected_members.max(1) as f64 / GRID_TARGET_PER_CELL).sqrt().ceil()
+            as usize)
+            .clamp(1, GRID_MAX_DIMS);
+        SpatialGrid {
+            extent_m,
+            cell_m: 2.0 * extent_m / dims as f64,
+            dims,
+            cells: vec![Vec::new(); dims * dims],
+            cell_of: Vec::new(),
+            slot_of: Vec::new(),
+            len: 0,
+        }
+    }
+
+    /// Build a grid holding ids `0..positions.len()`.
+    pub fn build(positions: &[Pos], extent_m: f64) -> SpatialGrid {
+        let mut g = SpatialGrid::new(extent_m, positions.len());
+        for (i, p) in positions.iter().enumerate() {
+            g.insert(i, *p);
+        }
+        g
+    }
+
+    /// Cells per side.
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    /// Cell side length in meters (ring `R+1` occupants are ≥ `R·cell_m()`
+    /// away from any point of the center cell — the kNN walk's stop bound).
+    pub fn cell_m(&self) -> f64 {
+        self.cell_m
+    }
+
+    /// Number of clients currently in the grid.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Is `id` currently in the grid?
+    pub fn contains(&self, id: usize) -> bool {
+        self.cell_of.get(id).is_some_and(|&c| c != usize::MAX)
+    }
+
+    /// Cell coordinates of a position (clamped to the grid).
+    pub fn cell_xy(&self, p: &Pos) -> (usize, usize) {
+        let axis = |v: f64| -> usize {
+            let c = ((v + self.extent_m) / self.cell_m).floor();
+            (c.max(0.0) as usize).min(self.dims - 1)
+        };
+        (axis(p.x), axis(p.y))
+    }
+
+    fn cell_idx(&self, p: &Pos) -> usize {
+        let (x, y) = self.cell_xy(p);
+        y * self.dims + x
+    }
+
+    /// Add `id` at `p`. Must not already be present.
+    pub fn insert(&mut self, id: usize, p: Pos) {
+        if self.cell_of.len() <= id {
+            self.cell_of.resize(id + 1, usize::MAX);
+            self.slot_of.resize(id + 1, usize::MAX);
+        }
+        debug_assert!(self.cell_of[id] == usize::MAX, "insert of present id {id}");
+        let c = self.cell_idx(&p);
+        self.cell_of[id] = c;
+        self.slot_of[id] = self.cells[c].len();
+        self.cells[c].push(id);
+        self.len += 1;
+    }
+
+    /// Remove `id`. Must be present.
+    pub fn remove(&mut self, id: usize) {
+        let c = self.cell_of[id];
+        assert!(c != usize::MAX, "remove of absent id {id}");
+        let s = self.slot_of[id];
+        self.cells[c].swap_remove(s);
+        if let Some(&moved) = self.cells[c].get(s) {
+            self.slot_of[moved] = s;
+        }
+        self.cell_of[id] = usize::MAX;
+        self.slot_of[id] = usize::MAX;
+        self.len -= 1;
+    }
+
+    /// Move a present `id` to position `p` (no-op when the cell is unchanged).
+    pub fn relocate(&mut self, id: usize, p: Pos) {
+        let c = self.cell_idx(&p);
+        if self.cell_of[id] == c {
+            return;
+        }
+        self.remove(id);
+        self.insert(id, p);
+    }
+
+    /// Visit every in-bounds cell at Chebyshev distance exactly `ring` from
+    /// `(cx, cy)`; returns how many cells were visited (0 once the ring lies
+    /// fully outside the grid).
+    pub fn for_ring(&self, cx: usize, cy: usize, ring: usize, mut f: impl FnMut(&[usize])) -> usize {
+        let (cx, cy, r) = (cx as isize, cy as isize, ring as isize);
+        let dims = self.dims as isize;
+        let mut visited = 0usize;
+        let mut visit = |x: isize, y: isize, f: &mut dyn FnMut(&[usize])| {
+            if (0..dims).contains(&x) && (0..dims).contains(&y) {
+                f(&self.cells[(y * dims + x) as usize]);
+                visited += 1;
+            }
+        };
+        if ring == 0 {
+            visit(cx, cy, &mut f);
+            return visited;
+        }
+        for x in (cx - r)..=(cx + r) {
+            visit(x, cy - r, &mut f);
+            visit(x, cy + r, &mut f);
+        }
+        for y in (cy - r + 1)..=(cy + r - 1) {
+            visit(cx - r, y, &mut f);
+            visit(cx + r, y, &mut f);
+        }
+        visited
+    }
+
+    /// All member ids, ascending (test/debug helper — O(id range)).
+    pub fn members(&self) -> Vec<usize> {
+        (0..self.cell_of.len()).filter(|&c| self.contains(c)).collect()
+    }
 }
 
 #[cfg(test)]
@@ -93,15 +265,83 @@ mod tests {
         let mut rng = Rng::new(3);
         let pts = place_uniform_disk(&mut rng, 10, 50.0);
         let m = distance_matrix(&pts);
+        assert_eq!(m.n(), 10);
         for i in 0..10 {
-            assert_eq!(m[i][i], 0.0);
+            assert_eq!(m[(i, i)], 0.0);
             for j in 0..10 {
-                assert!((m[i][j] - m[j][i]).abs() < 1e-12);
+                assert!((m[(i, j)] - m[(j, i)]).abs() < 1e-12);
                 if i != j {
-                    assert!(m[i][j] > 0.0);
+                    assert!(m[(i, j)] > 0.0);
                 }
             }
         }
+    }
+
+    #[test]
+    fn grid_insert_remove_relocate() {
+        let mut g = SpatialGrid::new(50.0, 16);
+        assert!(g.is_empty());
+        g.insert(3, Pos { x: -40.0, y: -40.0 });
+        g.insert(7, Pos { x: 40.0, y: 40.0 });
+        assert_eq!(g.len(), 2);
+        assert!(g.contains(3) && g.contains(7) && !g.contains(0));
+        assert_eq!(g.members(), vec![3, 7]);
+        // Relocating across the grid moves the id to the new cell.
+        let before = g.cell_xy(&Pos { x: -40.0, y: -40.0 });
+        g.relocate(3, Pos { x: 40.0, y: -40.0 });
+        let after = g.cell_xy(&Pos { x: 40.0, y: -40.0 });
+        if g.dims() > 1 {
+            assert_ne!(before, after);
+        }
+        g.remove(7);
+        assert_eq!(g.members(), vec![3]);
+        assert!(!g.contains(7));
+    }
+
+    #[test]
+    fn grid_rings_cover_every_client_exactly_once() {
+        let mut rng = Rng::new(5);
+        let pts = place_uniform_disk(&mut rng, 200, 50.0);
+        let g = SpatialGrid::build(&pts, 50.0);
+        let (cx, cy) = g.cell_xy(&pts[0]);
+        let mut seen = Vec::new();
+        for ring in 0.. {
+            let visited = g.for_ring(cx, cy, ring, |cell| seen.extend_from_slice(cell));
+            if visited == 0 {
+                break;
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..200).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn grid_clamps_out_of_extent_positions() {
+        let mut g = SpatialGrid::new(50.0, 64);
+        // Way outside the disk: lands in a border cell instead of panicking.
+        g.insert(0, Pos { x: 900.0, y: -900.0 });
+        assert!(g.contains(0));
+        let (cx, cy) = g.cell_xy(&Pos { x: 900.0, y: -900.0 });
+        assert_eq!(cx, g.dims() - 1);
+        assert_eq!(cy, 0);
+    }
+
+    #[test]
+    fn grid_swap_removal_keeps_slots_consistent() {
+        // Several ids in one cell; removing the first must keep the others
+        // findable (the swap-moved id's slot is patched).
+        let p = Pos { x: 1.0, y: 1.0 };
+        let mut g = SpatialGrid::new(50.0, 4);
+        for id in 0..5 {
+            g.insert(id, p);
+        }
+        g.remove(0);
+        g.remove(2);
+        assert_eq!(g.members(), vec![1, 3, 4]);
+        for id in [1, 3, 4] {
+            g.remove(id);
+        }
+        assert!(g.is_empty());
     }
 
     #[test]

@@ -1,0 +1,114 @@
+//! Flat row-major square matrix — the allocation-friendly replacement for the
+//! `Vec<Vec<f64>>` pairwise matrices (one contiguous buffer, one allocation,
+//! cache-linear row walks). Used by `sim::geometry::distance_matrix` and
+//! `sim::channel::rate_matrix`; the sparse pairing backend avoids these
+//! matrices entirely, so at fleet scale nothing O(n²) is ever materialized.
+
+use std::ops::{Index, IndexMut};
+
+/// Dense `n × n` matrix of `f64` in one row-major buffer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlatMatrix {
+    n: usize,
+    data: Vec<f64>,
+}
+
+impl FlatMatrix {
+    /// `n × n` matrix with every element set to `fill`.
+    pub fn new(n: usize, fill: f64) -> FlatMatrix {
+        FlatMatrix {
+            n,
+            data: vec![fill; n * n],
+        }
+    }
+
+    /// Side length.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.n + j] = v;
+    }
+
+    /// Set `(i, j)` and `(j, i)` in one call (pairwise matrices are symmetric).
+    #[inline]
+    pub fn set_sym(&mut self, i: usize, j: usize, v: f64) {
+        self.set(i, j, v);
+        self.set(j, i, v);
+    }
+
+    /// Row `i` as a contiguous slice.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.n..(i + 1) * self.n]
+    }
+
+    /// The whole buffer (row-major).
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+}
+
+impl Index<(usize, usize)> for FlatMatrix {
+    type Output = f64;
+
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.n + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for FlatMatrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.n + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_fills_and_indexes() {
+        let mut m = FlatMatrix::new(3, 0.0);
+        assert_eq!(m.n(), 3);
+        assert!(m.as_slice().iter().all(|&v| v == 0.0));
+        m[(0, 2)] = 5.0;
+        m.set(2, 1, 7.0);
+        assert_eq!(m[(0, 2)], 5.0);
+        assert_eq!(m.get(2, 1), 7.0);
+        assert_eq!(m.get(1, 1), 0.0);
+    }
+
+    #[test]
+    fn set_sym_mirrors() {
+        let mut m = FlatMatrix::new(4, 0.0);
+        m.set_sym(1, 3, 2.5);
+        assert_eq!(m[(1, 3)], 2.5);
+        assert_eq!(m[(3, 1)], 2.5);
+    }
+
+    #[test]
+    fn rows_are_contiguous() {
+        let mut m = FlatMatrix::new(3, 0.0);
+        for j in 0..3 {
+            m.set(1, j, j as f64);
+        }
+        assert_eq!(m.row(1), &[0.0, 1.0, 2.0]);
+        assert_eq!(m.row(0), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_panics() {
+        let m = FlatMatrix::new(2, 0.0);
+        let _ = m[(2, 0)];
+    }
+}

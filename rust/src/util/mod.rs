@@ -3,6 +3,7 @@
 
 pub mod json;
 pub mod logging;
+pub mod matrix;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

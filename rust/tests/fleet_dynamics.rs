@@ -96,7 +96,7 @@ fn prop_identical_seed_scenario_gives_identical_trace() {
     check(
         24,
         Gen::new(|rng| {
-            let kind = ScenarioKind::ALL[rng.below(4)];
+            let kind = ScenarioKind::ALL[rng.below(ScenarioKind::ALL.len())];
             (rng.next_u64() >> 1, 4 + rng.below(16), kind)
         }),
         |&(seed, n, kind)| {

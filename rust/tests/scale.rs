@@ -1,0 +1,236 @@
+//! Fleet-scale suite for the sparse candidate-graph pairing backend.
+//!
+//! Everything here is named `scale_*` so CI's release-mode smoke job can run
+//! exactly this surface (`cargo test --release -q scale_`):
+//!
+//! * sparse/dense equivalence — with `k_near ≥ n−1` the sparse backend's
+//!   candidate set degenerates to the complete graph and must reproduce the
+//!   dense greedy matching **exactly**;
+//! * matching validity and deterministic churn traces at n = 5 000;
+//! * the acceptance path: a metro-scale fleet (100k clients in release,
+//!   20k in debug so `cargo test -q` stays usable) completes its initial
+//!   pairing plus one incremental repair without materializing O(n²) edges;
+//! * `PairingStrategy::Exact` past the DP limit falls back to greedy instead
+//!   of aborting the run.
+
+use fedpairing::config::{BackendMode, ExperimentConfig, PairingBackendConfig, PairingStrategy};
+use fedpairing::fleet::{maintain_matching, FleetDynamics};
+use fedpairing::pairing::graph::{is_perfect_matching, ClientGraph};
+use fedpairing::pairing::greedy::greedy_matching;
+use fedpairing::pairing::{
+    match_candidates, pair_clients, pair_clients_backend, EdgeWeightSpec, Matching,
+    SparseCandidateGraph,
+};
+use fedpairing::sim::channel::Channel;
+use fedpairing::sim::latency::Fleet;
+use fedpairing::util::proptest::{check, Gen};
+use fedpairing::util::rng::Rng;
+
+fn fleet(n: usize, seed: u64) -> (Fleet, Channel) {
+    let mut cfg = ExperimentConfig::default();
+    cfg.n_clients = n;
+    (
+        Fleet::sample(&cfg, &mut Rng::new(seed)),
+        Channel::new(cfg.channel),
+    )
+}
+
+fn sparse_backend() -> PairingBackendConfig {
+    PairingBackendConfig {
+        mode: BackendMode::Sparse,
+        ..PairingBackendConfig::default()
+    }
+}
+
+#[test]
+fn scale_sparse_dense_equivalence_property() {
+    // Sparse with k ≥ n−1 reproduces the dense greedy matching exactly —
+    // pair for pair, in pick order — on arbitrary small fleets.
+    check(
+        30,
+        Gen::new(|rng| (2 + rng.below(15), rng.next_u64() % 1000)),
+        |&(n, seed)| {
+            let (f, ch) = fleet(n, seed);
+            let dense = greedy_matching(&ClientGraph::build(&f, &ch, 1.0, 5e-10));
+            let spec = EdgeWeightSpec::Eq5 {
+                alpha: 1.0,
+                beta: 5e-10,
+            };
+            let g = SparseCandidateGraph::build(&f, &ch, spec, n - 1, 0);
+            let members: Vec<usize> = (0..n).collect();
+            let m = match_candidates(&g, &members);
+            m.pairs == dense && m.solos.len() == n % 2
+        },
+    );
+}
+
+#[test]
+fn scale_sparse_equivalence_survives_freq_band() {
+    // Adding frequency-band candidates on top of a complete geometric set
+    // must not change the matching (duplicates dedup away).
+    for n in [4usize, 9, 14] {
+        let (f, ch) = fleet(n, 7 * n as u64);
+        let dense = greedy_matching(&ClientGraph::build(&f, &ch, 1.0, 5e-10));
+        let spec = EdgeWeightSpec::Eq5 {
+            alpha: 1.0,
+            beta: 5e-10,
+        };
+        let g = SparseCandidateGraph::build(&f, &ch, spec, n - 1, 4);
+        let members: Vec<usize> = (0..n).collect();
+        assert_eq!(match_candidates(&g, &members).pairs, dense, "n={n}");
+    }
+}
+
+#[test]
+fn scale_sparse_validity_all_strategies_n5000() {
+    let n = 5_000;
+    let (f, ch) = fleet(n, 42);
+    let backend = sparse_backend();
+    for strat in [
+        PairingStrategy::Greedy,
+        PairingStrategy::Random,
+        PairingStrategy::Location,
+        PairingStrategy::Compute,
+    ] {
+        let mut rng = Rng::new(1);
+        let pairs = pair_clients_backend(&backend, strat, &f, &ch, 1.0, 5e-10, &mut rng);
+        assert!(is_perfect_matching(n, &pairs), "{strat:?} invalid at n={n}");
+    }
+}
+
+#[test]
+fn scale_sparse_pairing_deterministic_n5000() {
+    let n = 5_000;
+    let (f, ch) = fleet(n, 9);
+    let backend = sparse_backend();
+    let a = pair_clients_backend(
+        &backend,
+        PairingStrategy::Greedy,
+        &f,
+        &ch,
+        1.0,
+        5e-10,
+        &mut Rng::new(3),
+    );
+    let b = pair_clients_backend(
+        &backend,
+        PairingStrategy::Greedy,
+        &f,
+        &ch,
+        1.0,
+        5e-10,
+        &mut Rng::new(3),
+    );
+    assert_eq!(a, b);
+}
+
+/// One churn run: per-round events + matching snapshots.
+fn churn_run(cfg: &ExperimentConfig, rounds: usize) -> Vec<(usize, Matching)> {
+    let base = Fleet::sample(cfg, &mut Rng::new(cfg.seed));
+    let mut dynamics = FleetDynamics::new(cfg, base);
+    let mut pairing_rng = Rng::new(cfg.seed ^ 0x9A1F);
+    let mut matching = None;
+    let mut out = Vec::with_capacity(rounds);
+    for round in 1..=rounds {
+        let ev = dynamics.step(round);
+        let channel = dynamics.channel();
+        maintain_matching(&mut matching, &dynamics, &ev, &channel, cfg, &mut pairing_rng);
+        let m = matching.clone().expect("matching initialized");
+        assert!(
+            m.is_valid_over(&dynamics.alive_indices()),
+            "round {round}: invalid matching"
+        );
+        out.push((ev.n_alive, m));
+    }
+    out
+}
+
+#[test]
+fn scale_churn_trace_deterministic_n5000() {
+    let mut cfg = ExperimentConfig::preset("metro-scale").unwrap();
+    cfg.n_clients = 5_000;
+    cfg.seed = 23;
+    let a = churn_run(&cfg, 6);
+    let b = churn_run(&cfg, 6);
+    assert_eq!(a, b, "metro churn + sparse re-pairing not deterministic");
+    // Churn actually happened (otherwise the repair path went untested).
+    assert!(
+        a.iter().map(|(alive, _)| alive).min() != a.iter().map(|(alive, _)| alive).max(),
+        "alive count never moved"
+    );
+}
+
+#[test]
+fn scale_metro_pairing_and_incremental_repair() {
+    // The acceptance path. Release runs the full 100k fleet; debug keeps
+    // `cargo test -q` usable at 20k.
+    let n: usize = if cfg!(debug_assertions) { 20_000 } else { 100_000 };
+    let mut cfg = ExperimentConfig::preset("metro-scale").unwrap();
+    cfg.n_clients = n;
+    cfg.seed = 17;
+    let t0 = std::time::Instant::now();
+    // No O(n²) edge materialization: the candidate set is O(n·k).
+    let (f, ch) = fleet(n, cfg.seed);
+    let spec = EdgeWeightSpec::Eq5 {
+        alpha: cfg.alpha,
+        beta: cfg.beta,
+    };
+    let g = SparseCandidateGraph::build(&f, &ch, spec, cfg.backend.k_near, cfg.backend.k_freq);
+    assert!(
+        g.edges().len() <= n * (cfg.backend.k_near + cfg.backend.k_freq),
+        "candidate set not O(n·k): {} edges",
+        g.edges().len()
+    );
+    // Full pairing + one churn step + incremental repair through the real
+    // fleet path (dynamics grid, sparse pool matcher).
+    let base = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+    let mut dynamics = FleetDynamics::new(&cfg, base);
+    let mut pairing_rng = Rng::new(cfg.seed ^ 0x9A1F);
+    let mut matching = None;
+    let ev = dynamics.step(1);
+    let channel = dynamics.channel();
+    assert!(maintain_matching(&mut matching, &dynamics, &ev, &channel, &cfg, &mut pairing_rng));
+    let m0 = matching.clone().unwrap();
+    let alive = dynamics.alive_indices();
+    assert!(m0.is_valid_over(&alive));
+    // Near-perfect over the alive set: ⌊alive/2⌋ pairs, parity solo.
+    assert_eq!(m0.pairs.len(), alive.len() / 2);
+    assert_eq!(m0.solos.len(), alive.len() % 2);
+    // Round 2: metro churn moves ~1% of the fleet — the repair pool is far
+    // past the dense threshold, so this exercises the grid-local path.
+    let ev = dynamics.step(2);
+    assert!(!ev.departed.is_empty(), "metro scenario produced no churn");
+    let channel = dynamics.channel();
+    let changed = maintain_matching(&mut matching, &dynamics, &ev, &channel, &cfg, &mut pairing_rng);
+    assert!(changed, "repair did not run");
+    let m1 = matching.unwrap();
+    assert!(m1.is_valid_over(&dynamics.alive_indices()));
+    // Incremental: the overwhelming majority of healthy pairs survive.
+    let before: std::collections::HashSet<(usize, usize)> = m0.pairs.iter().copied().collect();
+    let kept = m1.pairs.iter().filter(|p| before.contains(p)).count();
+    assert!(
+        kept * 10 >= m1.pairs.len() * 8,
+        "repair re-shuffled too much: kept {kept} of {}",
+        m1.pairs.len()
+    );
+    if !cfg!(debug_assertions) {
+        assert!(
+            t0.elapsed().as_secs_f64() < 60.0,
+            "metro pairing + repair too slow: {:?}",
+            t0.elapsed()
+        );
+    }
+}
+
+#[test]
+fn scale_exact_falls_back_to_greedy_past_dp_limit() {
+    // Used to abort with `assert!(n_eff <= MAX_N)`; now a documented greedy
+    // fallback keeps the run alive.
+    let n = 40;
+    let (f, ch) = fleet(n, 5);
+    let mut rng = Rng::new(2);
+    let pairs = pair_clients(PairingStrategy::Exact, &f, &ch, 1.0, 5e-10, &mut rng);
+    assert!(is_perfect_matching(n, &pairs));
+    let greedy = greedy_matching(&ClientGraph::build(&f, &ch, 1.0, 5e-10));
+    assert_eq!(pairs, greedy, "fallback should be the greedy matching");
+}
