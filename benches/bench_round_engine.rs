@@ -1,0 +1,197 @@
+//! Round-engine bench: per-round FedPairing latency evaluation, analytic
+//! engine vs the DES-per-pair oracle, at n ∈ {1k, 10k, 50k}. Every round
+//! re-draws the metro-scale shadowing fade (so the memo cache faces honest
+//! per-round rate changes, exactly like the `metro-scale` scenario); a frozen-
+//! channel pass shows the 100 %-hit cache ceiling. Emits
+//! `BENCH_round_engine.json` so CI tracks the acceptance criterion: the
+//! 50k-client / 200-round metro evaluation must be ≥ 20× faster than the DES
+//! path.
+
+#[path = "common.rs"]
+mod common;
+
+use fedpairing::config::ExperimentConfig;
+use fedpairing::pairing::{match_candidates, EdgeWeightSpec, SparseCandidateGraph};
+use fedpairing::sim::channel::Channel;
+use fedpairing::sim::engine::RoundEngine;
+use fedpairing::sim::latency::{self, Fleet, Schedule};
+use fedpairing::sim::profile::ModelProfile;
+use fedpairing::util::json::{Json, JsonObj};
+use fedpairing::util::rng::Rng;
+use std::time::Instant;
+
+/// Per-round channels under metro-scale block fading (2 dB log-normal),
+/// replayed identically for both backends.
+fn faded_channels(cfg: &ExperimentConfig, rounds: usize) -> Vec<Channel> {
+    let mut rng = Rng::with_stream(cfg.seed, 0xFADE);
+    (0..rounds)
+        .map(|_| {
+            let mut ch = cfg.channel;
+            ch.ref_gain *= 10f64.powf(rng.normal_ms(0.0, 2.0) / 10.0);
+            Channel::new(ch)
+        })
+        .collect()
+}
+
+struct Case {
+    n: usize,
+    pairs: usize,
+    engine_rps: f64,
+    des_rps: f64,
+    speedup: f64,
+    cached_rps: f64,
+    cache_hit_rate: f64,
+}
+
+fn run_case(n: usize, engine_rounds: usize, des_rounds: usize) -> Case {
+    let mut cfg = ExperimentConfig::preset("metro-scale").expect("metro-scale preset");
+    cfg.n_clients = n;
+    cfg.seed = 17;
+    let fleet = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+    let channel = Channel::new(cfg.channel);
+    // Near-perfect matching off the sparse candidate graph (the real metro
+    // pairing path; pair ids are fleet-compact already).
+    let members: Vec<usize> = (0..n).collect();
+    let graph = SparseCandidateGraph::build(
+        &fleet,
+        &channel,
+        EdgeWeightSpec::Eq5 {
+            alpha: cfg.alpha,
+            beta: cfg.beta,
+        },
+        cfg.backend.k_near,
+        cfg.backend.k_freq,
+    );
+    let matching = match_candidates(&graph, &members);
+    let profile = ModelProfile::resnet18_cifar();
+    let sched = Schedule {
+        batch_size: 32,
+        epochs: cfg.local_epochs,
+    };
+
+    // Analytic engine under per-round fading (cache must recompute moved
+    // rates every round — the honest metro workload).
+    let mut engine = RoundEngine::new(&cfg.engine);
+    let channels = faded_channels(&cfg, engine_rounds);
+    let t = Instant::now();
+    let mut acc = 0.0f64;
+    for ch in &channels {
+        acc += engine
+            .fedpairing_round(
+                &fleet,
+                &matching.pairs,
+                &matching.solos,
+                &profile,
+                &sched,
+                ch,
+                &cfg.compute,
+                true,
+            )
+            .total_s;
+    }
+    let engine_rps = engine_rounds as f64 / t.elapsed().as_secs_f64();
+    common::black_box(acc);
+
+    // DES-per-pair oracle over the same fade sequence (fewer rounds — it is
+    // the slow side being measured; rounds/s normalizes).
+    let channels = faded_channels(&cfg, des_rounds);
+    let t = Instant::now();
+    let mut des_acc = 0.0f64;
+    for ch in &channels {
+        des_acc += latency::fedpairing_round_with_solos(
+            &fleet,
+            &matching.pairs,
+            &matching.solos,
+            &profile,
+            &sched,
+            ch,
+            &cfg.compute,
+            true,
+        )
+        .total_s;
+    }
+    let des_rps = des_rounds as f64 / t.elapsed().as_secs_f64();
+    common::black_box(des_acc);
+
+    // Frozen channel: rounds 2.. are 100 % cache hits — the stable-scenario
+    // ceiling.
+    let mut cached_engine = RoundEngine::new(&cfg.engine);
+    let t = Instant::now();
+    for _ in 0..engine_rounds {
+        common::black_box(
+            cached_engine
+                .fedpairing_round(
+                    &fleet,
+                    &matching.pairs,
+                    &matching.solos,
+                    &profile,
+                    &sched,
+                    &channel,
+                    &cfg.compute,
+                    true,
+                )
+                .total_s,
+        );
+    }
+    let cached_rps = engine_rounds as f64 / t.elapsed().as_secs_f64();
+    let looked_up = cached_engine.cache_hits() + cached_engine.cache_misses();
+    let cache_hit_rate = cached_engine.cache_hits() as f64 / looked_up.max(1) as f64;
+
+    Case {
+        n,
+        pairs: matching.pairs.len(),
+        engine_rps,
+        des_rps,
+        speedup: engine_rps / des_rps,
+        cached_rps,
+        cache_hit_rate,
+    }
+}
+
+fn main() {
+    println!("== round engine vs DES-per-pair oracle (metro-scale fading, FedPairing) ==");
+    println!(
+        "  {:>7} {:>9} {:>12} {:>12} {:>9} {:>12} {:>7}",
+        "n", "pairs", "engine r/s", "des r/s", "speedup", "cached r/s", "hit%"
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut metro_speedup = 0.0;
+    for (n, engine_rounds, des_rounds) in [(1_000, 200, 40), (10_000, 200, 10), (50_000, 200, 5)] {
+        let case = run_case(n, engine_rounds, des_rounds);
+        println!(
+            "  {:>7} {:>9} {:>12.1} {:>12.2} {:>8.1}x {:>12.1} {:>6.1}%",
+            case.n,
+            case.pairs,
+            case.engine_rps,
+            case.des_rps,
+            case.speedup,
+            case.cached_rps,
+            100.0 * case.cache_hit_rate
+        );
+        if n == 50_000 {
+            metro_speedup = case.speedup;
+        }
+        let mut row = JsonObj::new();
+        row.insert("n", Json::num(case.n as f64));
+        row.insert("pairs", Json::num(case.pairs as f64));
+        row.insert("engine_rounds_per_s", Json::num(case.engine_rps));
+        row.insert("des_rounds_per_s", Json::num(case.des_rps));
+        row.insert("speedup", Json::num(case.speedup));
+        row.insert("cached_rounds_per_s", Json::num(case.cached_rps));
+        row.insert("stable_cache_hit_rate", Json::num(case.cache_hit_rate));
+        rows.push(Json::Obj(row));
+    }
+    common::check_shape(
+        "metro (n=50k, 200 rounds): engine >= 20x DES-per-pair",
+        metro_speedup >= 20.0,
+    );
+
+    let mut out = JsonObj::new();
+    out.insert("bench", Json::str("round_engine"));
+    out.insert("workload", Json::str("fedpairing metro-scale fading, 200-round engine runs"));
+    out.insert("metro_speedup_50k", Json::num(metro_speedup));
+    out.insert("results", Json::Arr(rows));
+    let path = "BENCH_round_engine.json";
+    std::fs::write(path, Json::Obj(out).to_string_pretty(2)).expect("write bench json");
+    println!("wrote {path}");
+}

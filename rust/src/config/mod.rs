@@ -179,6 +179,69 @@ impl Default for PairingBackendConfig {
     }
 }
 
+/// Which backend evaluates per-round training latency (DESIGN.md §6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundBackend {
+    /// Analytic per-pair kernels + cross-round memo cache + parallel
+    /// evaluation — O(changed pairs) per round, bit-identical to the DES.
+    Analytic,
+    /// The discrete-event job shop in `sim::des` — the correctness oracle.
+    Des,
+}
+
+impl RoundBackend {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "analytic" | "kernel" | "closed-form" | "closed_form" => Some(RoundBackend::Analytic),
+            "des" | "oracle" | "event" => Some(RoundBackend::Des),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoundBackend::Analytic => "analytic",
+            RoundBackend::Des => "des",
+        }
+    }
+}
+
+impl fmt::Display for RoundBackend {
+    fmt_display_via_name!();
+}
+
+/// Round-time engine knobs: backend selection, worker threads, diagnostics.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EngineConfig {
+    pub backend: RoundBackend,
+    /// Worker threads for pair evaluation (0 = one per available core).
+    /// Results are bit-identical for every thread count by construction.
+    pub threads: usize,
+    /// Collect per-flow finish times in `RoundTime` (2·pairs values per
+    /// round — diagnostics the paper-scale presets keep and metro-scale
+    /// skips).
+    pub flow_diagnostics: bool,
+}
+
+impl EngineConfig {
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.threads > 4096 {
+            bail!("engine threads must be <= 4096, got {}", self.threads);
+        }
+        Ok(())
+    }
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            backend: RoundBackend::Analytic,
+            threads: 0,
+            flow_diagnostics: true,
+        }
+    }
+}
+
 /// Local-data distribution across clients (paper Sec. IV-A).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum DataDistribution {
@@ -460,6 +523,9 @@ pub struct ExperimentConfig {
     /// graph vs sparse grid + frequency-band candidates; `Auto` switches on
     /// fleet size so paper-scale presets stay bit-identical).
     pub backend: PairingBackendConfig,
+    /// Round-time evaluation engine (analytic kernels vs the DES oracle,
+    /// worker threads, flow diagnostics).
+    pub engine: EngineConfig,
 
     // fleet
     pub n_clients: usize,
@@ -513,6 +579,7 @@ impl Default for ExperimentConfig {
             algorithm: Algorithm::FedPairing,
             pairing: PairingStrategy::Greedy,
             backend: PairingBackendConfig::default(),
+            engine: EngineConfig::default(),
             n_clients: 20,
             area_radius_m: 50.0,
             channel: ChannelConfig::default(),
@@ -553,6 +620,17 @@ impl fmt::Display for ConfigError {
 impl std::error::Error for ConfigError {}
 
 impl ExperimentConfig {
+    /// Install a scenario plus its derived engine defaults — the one place
+    /// the "metro scale skips flow diagnostics" policy lives. Presets, CLI
+    /// `--scenario` and JSON scenario blocks all route through it (JSON only
+    /// when the `engine` block didn't pin `flow_diagnostics` explicitly).
+    pub fn set_scenario(&mut self, sc: ScenarioConfig) {
+        self.scenario = sc;
+        if sc.kind == ScenarioKind::MetroScale {
+            self.engine.flow_diagnostics = false;
+        }
+    }
+
     /// Sanity-check invariants the rest of the system assumes.
     pub fn validate(&self) -> Result<(), ConfigError> {
         if self.n_clients == 0 {
@@ -564,6 +642,7 @@ impl ExperimentConfig {
         // client mid-run.
         self.scenario.validate()?;
         self.backend.validate()?;
+        self.engine.validate()?;
         // A sparse backend must generate candidates from the source the
         // configured objective actually uses, or the matching silently
         // degenerates to id-order completion pairs.
@@ -663,7 +742,10 @@ impl ExperimentConfig {
                 c.samples_per_client = 64;
                 c.test_samples = 256;
                 c.eval_every = 0;
-                c.scenario = ScenarioConfig::preset(ScenarioKind::MetroScale);
+                // set_scenario also drops the 2·pairs-per-round flow
+                // diagnostics — pure overhead at 50k clients; the
+                // paper-scale presets keep them.
+                c.set_scenario(ScenarioConfig::preset(ScenarioKind::MetroScale));
                 Some(c)
             }
             _ => None,
@@ -685,6 +767,11 @@ impl ExperimentConfig {
         be.insert("k_near", Json::num(self.backend.k_near as f64));
         be.insert("k_freq", Json::num(self.backend.k_freq as f64));
         o.insert("backend", Json::Obj(be));
+        let mut en = JsonObj::new();
+        en.insert("backend", Json::str(self.engine.backend.name()));
+        en.insert("threads", Json::num(self.engine.threads as f64));
+        en.insert("flow_diagnostics", Json::Bool(self.engine.flow_diagnostics));
+        o.insert("engine", Json::Obj(en));
         o.insert("n_clients", Json::num(self.n_clients as f64));
         o.insert("area_radius_m", Json::num(self.area_radius_m));
         let mut ch = JsonObj::new();
@@ -794,6 +881,26 @@ impl ExperimentConfig {
             c.backend.k_near = gu("k_near", c.backend.k_near);
             c.backend.k_freq = gu("k_freq", c.backend.k_freq);
         }
+        // Whether the JSON explicitly pinned `flow_diagnostics` — an explicit
+        // value must survive the metro-scale scenario policy below.
+        let mut flow_diag_pinned = false;
+        if let Some(en) = obj.get("engine").and_then(|v| v.as_obj()) {
+            if let Some(s) = en.get("backend").and_then(|v| v.as_str()) {
+                c.engine.backend = RoundBackend::parse(s)
+                    .ok_or_else(|| ConfigError(format!("unknown round backend {s:?}")))?;
+            }
+            if let Some(v) = en.get("threads") {
+                c.engine.threads = v.as_usize().ok_or_else(|| {
+                    ConfigError("engine threads must be a non-negative integer".into())
+                })?;
+            }
+            if let Some(v) = en.get("flow_diagnostics") {
+                c.engine.flow_diagnostics = v
+                    .as_bool()
+                    .ok_or_else(|| ConfigError("flow_diagnostics must be a bool".into()))?;
+                flow_diag_pinned = true;
+            }
+        }
         c.n_clients = get_usize("n_clients", c.n_clients)?;
         c.area_radius_m = get_f64("area_radius_m", c.area_radius_m)?;
         if let Some(ch) = obj.get("channel").and_then(|v| v.as_obj()) {
@@ -836,7 +943,13 @@ impl ExperimentConfig {
             s.flash_round = gu("flash_round", s.flash_round);
             s.diurnal_period = gu("diurnal_period", s.diurnal_period);
             s.diurnal_depth = g("diurnal_depth", s.diurnal_depth);
-            c.scenario = s;
+            // Same scenario-derived engine policy as the presets and CLI —
+            // unless the JSON's engine block pinned the knob explicitly.
+            if flow_diag_pinned {
+                c.scenario = s;
+            } else {
+                c.set_scenario(s);
+            }
         }
         c.rounds = get_usize("rounds", c.rounds)?;
         c.local_epochs = get_usize("local_epochs", c.local_epochs)?;
@@ -1073,6 +1186,79 @@ mod tests {
         // Bad mode rejected.
         let j = Json::parse(r#"{"backend": {"mode": "quantum"}}"#).unwrap();
         assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn engine_defaults_parse_and_roundtrip() {
+        let d = ExperimentConfig::default();
+        assert_eq!(d.engine.backend, RoundBackend::Analytic);
+        assert_eq!(d.engine.threads, 0);
+        assert!(d.engine.flow_diagnostics);
+        assert_eq!(RoundBackend::parse("DES"), Some(RoundBackend::Des));
+        assert_eq!(RoundBackend::parse("analytic"), Some(RoundBackend::Analytic));
+        assert_eq!(RoundBackend::parse("quantum"), None);
+        // JSON round-trip with overrides.
+        let mut c = ExperimentConfig::default();
+        c.engine = EngineConfig {
+            backend: RoundBackend::Des,
+            threads: 3,
+            flow_diagnostics: false,
+        };
+        let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.engine, c.engine);
+        // Partial override keeps the remaining defaults.
+        let j = Json::parse(r#"{"engine": {"threads": 2}}"#).unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.engine.threads, 2);
+        assert_eq!(c.engine.backend, RoundBackend::Analytic);
+        // Bad backend rejected; bad/absurd thread counts rejected.
+        let j = Json::parse(r#"{"engine": {"backend": "quantum"}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"engine": {"threads": -1}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"engine": {"threads": 2.5}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let mut c = ExperimentConfig::default();
+        c.engine.threads = 100_000;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn set_scenario_applies_the_metro_engine_policy() {
+        let mut c = ExperimentConfig::default();
+        c.set_scenario(ScenarioConfig::preset(ScenarioKind::MetroScale));
+        assert!(!c.engine.flow_diagnostics);
+        let mut c = ExperimentConfig::default();
+        c.set_scenario(ScenarioConfig::preset(ScenarioKind::LossyRadio));
+        assert!(c.engine.flow_diagnostics);
+        // The JSON entry point applies the same policy…
+        let j = Json::parse(r#"{"scenario": {"kind": "metro-scale"}}"#).unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert!(!c.engine.flow_diagnostics);
+        // …unless the engine block pins the knob explicitly.
+        let j = Json::parse(
+            r#"{"scenario": {"kind": "metro-scale"},
+                "engine": {"flow_diagnostics": true}}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert!(c.engine.flow_diagnostics);
+        // A metro config round-trips its pinned engine knobs either way.
+        let mut c = ExperimentConfig::preset("metro-scale").unwrap();
+        c.n_clients = 500;
+        let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.engine, c.engine);
+    }
+
+    #[test]
+    fn metro_scale_preset_skips_flow_diagnostics() {
+        let c = ExperimentConfig::preset("metro-scale").unwrap();
+        assert!(!c.engine.flow_diagnostics);
+        assert_eq!(c.engine.backend, RoundBackend::Analytic);
+        // Paper-scale presets keep the diagnostics.
+        for name in ["fig2", "table1", "quick"] {
+            assert!(ExperimentConfig::preset(name).unwrap().engine.flow_diagnostics);
+        }
     }
 
     #[test]

@@ -25,7 +25,9 @@ use crate::pairing::Matching;
 use crate::runtime::Engine;
 use crate::sim::channel::Channel;
 use crate::sim::compute::{aggregation_weights, split_lengths};
-use crate::sim::latency::{self, Fleet, Schedule};
+use crate::sim::engine::RoundEngine;
+use crate::sim::latency::{Fleet, FleetView, Schedule};
+use crate::util::index::InverseIndex;
 use crate::log_debug;
 use anyhow::{Context, Result};
 
@@ -47,6 +49,9 @@ pub struct Experiment {
     /// the participants).
     weights: Vec<f64>,
     test: Vec<Batch>,
+    /// Round-time evaluation engine (analytic kernels + memo cache; one
+    /// instance per experiment so the cache works across rounds).
+    round_engine: RoundEngine,
 }
 
 impl Experiment {
@@ -86,6 +91,7 @@ impl Experiment {
         let universe = FleetDynamics::new(&cfg, fleet.clone()).universe().clone();
         let weights = aggregation_weights(&universe.resources());
         let test = eval_batches(&gen.test_set(cfg.test_samples), engine.meta().eval_batch);
+        let round_engine = RoundEngine::new(&cfg.engine);
         Ok(Experiment {
             cfg,
             engine,
@@ -95,6 +101,7 @@ impl Experiment {
             loaders,
             weights,
             test,
+            round_engine,
         })
     }
 
@@ -173,6 +180,12 @@ impl Experiment {
         let mut global = self.engine.init_params(self.cfg.seed as u32)?;
         let mut records = Vec::with_capacity(self.cfg.rounds);
         let mut sim_total = 0.0f64;
+        // Zero-allocation round views: borrow the universe fleet instead of
+        // cloning a sub-fleet, and invert universe→compact ids through a
+        // reusable scratch map instead of per-member binary searches.
+        let mut inv = InverseIndex::new();
+        let mut cpairs: Vec<(usize, usize)> = Vec::new();
+        let mut csolos: Vec<usize> = Vec::new();
         for round in 1..=self.cfg.rounds {
             let ev = dynamics.step(round);
             let channel = dynamics.channel();
@@ -187,23 +200,31 @@ impl Experiment {
             let m = matching.as_ref().expect("matching initialized");
             // Transient failures demote a pair's survivor to solo for this
             // round only; the stored matching is untouched.
-            let (sub, members) = dynamics.present_view();
-            let eff = m.restricted_to(&members);
-            let cidx = |u: usize| members.binary_search(&u).expect("present member");
-            let cpairs: Vec<(usize, usize)> =
-                eff.pairs.iter().map(|&(a, b)| (cidx(a), cidx(b))).collect();
-            let csolos: Vec<usize> = eff.solos.iter().map(|&s| cidx(s)).collect();
-            let round_time = latency::fedpairing_round_with_solos(
-                &sub,
-                &cpairs,
-                &csolos,
-                &profile,
-                &sched,
-                &channel,
-                &self.cfg.compute,
-                true,
-            )
-            .total_s;
+            let members = dynamics.present_members();
+            let view = FleetView::new(dynamics.universe(), members);
+            let eff = m.restricted_to(members);
+            inv.rebuild(dynamics.universe().n(), members);
+            cpairs.clear();
+            cpairs.extend(
+                eff.pairs
+                    .iter()
+                    .map(|&(a, b)| (inv.compact(a), inv.compact(b))),
+            );
+            csolos.clear();
+            csolos.extend(eff.solos.iter().map(|&s| inv.compact(s)));
+            let round_time = self
+                .round_engine
+                .fedpairing_round(
+                    &view,
+                    &cpairs,
+                    &csolos,
+                    &profile,
+                    &sched,
+                    &channel,
+                    &self.cfg.compute,
+                    true,
+                )
+                .total_s;
             // Participants this round (pairs + solos) and their weights.
             let participants: Vec<usize> = eff
                 .pairs
@@ -218,7 +239,7 @@ impl Experiment {
             let mut agg_weights: Vec<f64> = Vec::with_capacity(participants.len());
             let mut loss_sum = 0.0;
             let mut steps = 0usize;
-            let uni_freqs = dynamics.universe().freqs_hz.clone();
+            let uni_freqs = &dynamics.universe().freqs_hz;
             for &(i, j) in &eff.pairs {
                 // Split on *current* (straggle-adjusted) frequencies.
                 let (l_i, l_j) = split_lengths(uni_freqs[i], uni_freqs[j], w);
@@ -326,20 +347,22 @@ impl Experiment {
         for round in 1..=self.cfg.rounds {
             let ev = dynamics.step(round);
             let channel = dynamics.channel();
-            let (sub, members) = dynamics.present_view();
-            let round_time =
-                latency::fl_round(&sub, &profile, &sched, &channel, &self.cfg.compute, true)
-                    .total_s;
+            let members = dynamics.present_members();
+            let view = FleetView::new(dynamics.universe(), members);
+            let round_time = self
+                .round_engine
+                .fl_round(&view, &profile, &sched, &channel, &self.cfg.compute, true)
+                .total_s;
             let mut locals: Vec<Params> = Vec::with_capacity(members.len());
             let mut loss_sum = 0.0;
             let mut steps = 0usize;
-            for &c in &members {
+            for &c in members {
                 let (local, l, st) = self.local_training(&global, c)?;
                 loss_sum += l;
                 steps += st;
                 locals.push(local);
             }
-            global = nn::fedavg_weighted(&locals, &self.renormalized_weights(&members)?);
+            global = nn::fedavg_weighted(&locals, &self.renormalized_weights(members)?);
             anyhow::ensure!(nn::all_finite(&global), "global model diverged (NaN/Inf)");
             sim_total += round_time;
             records.push(self.record(
@@ -369,23 +392,26 @@ impl Experiment {
         for round in 1..=self.cfg.rounds {
             let ev = dynamics.step(round);
             let channel = dynamics.channel();
-            let (sub, members) = dynamics.present_view();
-            let round_time = latency::sl_round(
-                &sub,
-                &profile,
-                &sched,
-                &channel,
-                &self.cfg.compute,
-                cut,
-                self.cfg.compute.server_freq_ghz * 1e9,
-            )
-            .total_s;
+            let members = dynamics.present_members();
+            let view = FleetView::new(dynamics.universe(), members);
+            let round_time = self
+                .round_engine
+                .sl_round(
+                    &view,
+                    &profile,
+                    &sched,
+                    &channel,
+                    &self.cfg.compute,
+                    cut,
+                    self.cfg.compute.server_freq_ghz * 1e9,
+                )
+                .total_s;
             let mut loss_sum = 0.0;
             let mut steps = 0usize;
             // Present clients take sessions sequentially; the client-side
             // model and the server-side model both persist across the relay
             // (absent clients are simply skipped this round).
-            for &c in &members {
+            for &c in members {
                 let (l, s) = self.split_session(&mut front, &mut back, cut, c)?;
                 loss_sum += l;
                 steps += s;
@@ -422,23 +448,26 @@ impl Experiment {
         for round in 1..=self.cfg.rounds {
             let ev = dynamics.step(round);
             let channel = dynamics.channel();
-            let (sub, members) = dynamics.present_view();
-            let round_time = latency::splitfed_round(
-                &sub,
-                &profile,
-                &sched,
-                &channel,
-                &self.cfg.compute,
-                cut,
-                self.cfg.compute.server_freq_ghz * 1e9,
-                true,
-            )
-            .total_s;
+            let members = dynamics.present_members();
+            let view = FleetView::new(dynamics.universe(), members);
+            let round_time = self
+                .round_engine
+                .splitfed_round(
+                    &view,
+                    &profile,
+                    &sched,
+                    &channel,
+                    &self.cfg.compute,
+                    cut,
+                    self.cfg.compute.server_freq_ghz * 1e9,
+                    true,
+                )
+                .total_s;
             let mut fronts: Vec<Params> = Vec::with_capacity(members.len());
             let mut backs: Vec<Params> = Vec::with_capacity(members.len());
             let mut loss_sum = 0.0;
             let mut steps = 0usize;
-            for &c in &members {
+            for &c in members {
                 // Every present client gets a fresh copy of both halves (the
                 // server keeps one server-side instance per client,
                 // SplitFed-V1).
@@ -451,7 +480,7 @@ impl Experiment {
             }
             // Fed server averages client-side models; main server averages
             // server-side models (both weighted by a_i over the present set).
-            let agg = self.renormalized_weights(&members)?;
+            let agg = self.renormalized_weights(members)?;
             let front = nn::fedavg_weighted(&fronts, &agg);
             let back = nn::fedavg_weighted(&backs, &agg);
             global = join_params(&front, &back);

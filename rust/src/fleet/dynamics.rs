@@ -64,6 +64,10 @@ pub struct FleetDynamics {
     base_freqs: Vec<f64>,
     alive: Vec<bool>,
     present: Vec<bool>,
+    /// Universe ids participating in the current round (ascending) — the
+    /// materialized form of `present`, rebuilt in place each [`Self::step`]
+    /// so per-round views borrow instead of re-collecting.
+    present_ids: Vec<usize>,
     /// Flash-crowd cohort members that have not joined yet.
     latent: Vec<bool>,
     rng: Rng,
@@ -129,6 +133,7 @@ impl FleetDynamics {
             area_radius_m: cfg.area_radius_m,
             base_freqs: universe.freqs_hz.clone(),
             present: alive.clone(),
+            present_ids: (0..cfg.n_clients).collect(),
             universe,
             alive,
             latent,
@@ -245,7 +250,12 @@ impl FleetDynamics {
             0.0
         };
         ev.shadowing_db = self.fade_db;
-        ev.n_alive = self.present.iter().filter(|&&p| p).count();
+        // 8. Materialize this round's participant list in place (no
+        //    per-round allocation after warmup).
+        self.present_ids.clear();
+        self.present_ids
+            .extend((0..n).filter(|&c| self.present[c]));
+        ev.n_alive = self.present_ids.len();
         ev
     }
 
@@ -267,15 +277,24 @@ impl FleetDynamics {
         &self.grid
     }
 
-    /// Universe ids participating in the current round.
+    /// Universe ids participating in the current round (ascending), borrowed
+    /// from the per-round scratch — the zero-allocation input to
+    /// [`crate::sim::latency::FleetView`].
+    pub fn present_members(&self) -> &[usize] {
+        &self.present_ids
+    }
+
+    /// Universe ids participating in the current round (owned copy; prefer
+    /// [`Self::present_members`] on the hot path).
     pub fn present_indices(&self) -> Vec<usize> {
-        (0..self.universe.n())
-            .filter(|&c| self.present[c])
-            .collect()
+        self.present_ids.clone()
     }
 
     /// Compact fleet of this round's participants plus the compact→universe
     /// id map (ascending, so `members.binary_search(&u)` inverts it).
+    /// Allocating variant — the drivers use a borrowed
+    /// [`crate::sim::latency::FleetView`] over [`Self::present_members`]
+    /// instead.
     pub fn present_view(&self) -> (Fleet, Vec<usize>) {
         let members = self.present_indices();
         (self.universe.subset(&members), members)
@@ -465,6 +484,26 @@ mod tests {
         // All five latent clients (ids 10..15) are now indexed.
         assert!(d.grid().len() >= 10, "cohort missing from grid");
         assert_eq!(d.grid().members(), d.alive_indices());
+    }
+
+    #[test]
+    fn present_members_tracks_the_present_flags() {
+        // The zero-allocation member slice must equal the flag-derived list
+        // after every step, and n_alive must equal its length.
+        let cfg = cfg_with(ScenarioKind::LossyRadio, 12, 30, 41);
+        let base = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+        let mut d = FleetDynamics::new(&cfg, base);
+        assert_eq!(d.present_members(), &(0..12).collect::<Vec<_>>()[..]);
+        for round in 1..=30 {
+            let ev = d.step(round);
+            let expect: Vec<usize> = (0..d.universe().n()).filter(|&c| d.present[c]).collect();
+            assert_eq!(d.present_members(), &expect[..], "round {round}");
+            assert_eq!(ev.n_alive, expect.len());
+            // The allocating variants agree with the borrowed slice.
+            let (sub, members) = d.present_view();
+            assert_eq!(members, d.present_members());
+            assert_eq!(sub.n(), members.len());
+        }
     }
 
     #[test]

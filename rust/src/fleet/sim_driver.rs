@@ -14,8 +14,10 @@ use super::maintain_matching;
 use crate::config::{Algorithm, ConfigError, ExperimentConfig};
 use crate::coordinator::metrics::{RoundRecord, RunResult};
 use crate::pairing::Matching;
-use crate::sim::latency::{self, Fleet, Schedule};
+use crate::sim::engine::RoundEngine;
+use crate::sim::latency::{Fleet, FleetView, Schedule};
 use crate::sim::profile::ModelProfile;
+use crate::util::index::InverseIndex;
 use crate::util::rng::Rng;
 
 /// A completed scenario simulation.
@@ -63,10 +65,17 @@ pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigEr
     let mut trace = Vec::with_capacity(cfg.rounds);
     let mut repaired_rounds = 0usize;
     let mut sim_total = 0.0f64;
+    // Round-time engine + zero-allocation round views: the per-round hot
+    // path borrows the universe fleet (no `Fleet::subset` clone), inverts
+    // universe→compact ids through a reusable scratch map, and evaluates
+    // pairs analytically with cross-round memoization (DESIGN.md §6).
+    let mut engine = RoundEngine::new(&cfg.engine);
+    let mut inv = InverseIndex::new();
+    let mut cpairs: Vec<(usize, usize)> = Vec::new();
+    let mut csolos: Vec<usize> = Vec::new();
     for round in 1..=cfg.rounds {
         let ev = dynamics.step(round);
         let channel = dynamics.channel();
-        let (sub, members) = dynamics.present_view();
         let round_s = match cfg.algorithm {
             Algorithm::FedPairing => {
                 let had_matching = matching.is_some();
@@ -81,50 +90,69 @@ pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigEr
                 if had_matching && changed {
                     repaired_rounds += 1;
                 }
+                let members = dynamics.present_members();
+                let view = FleetView::new(dynamics.universe(), members);
                 let eff = matching
                     .as_ref()
                     .expect("matching initialized")
-                    .restricted_to(&members);
-                let cidx = |u: usize| members.binary_search(&u).expect("present member");
-                let cpairs: Vec<(usize, usize)> =
-                    eff.pairs.iter().map(|&(a, b)| (cidx(a), cidx(b))).collect();
-                let csolos: Vec<usize> = eff.solos.iter().map(|&s| cidx(s)).collect();
-                latency::fedpairing_round_with_solos(
-                    &sub,
-                    &cpairs,
-                    &csolos,
-                    &profile,
-                    &sched,
-                    &channel,
-                    &cfg.compute,
-                    true,
-                )
-                .total_s
+                    .restricted_to(members);
+                inv.rebuild(dynamics.universe().n(), members);
+                cpairs.clear();
+                cpairs.extend(
+                    eff.pairs
+                        .iter()
+                        .map(|&(a, b)| (inv.compact(a), inv.compact(b))),
+                );
+                csolos.clear();
+                csolos.extend(eff.solos.iter().map(|&s| inv.compact(s)));
+                engine
+                    .fedpairing_round(
+                        &view,
+                        &cpairs,
+                        &csolos,
+                        &profile,
+                        &sched,
+                        &channel,
+                        &cfg.compute,
+                        true,
+                    )
+                    .total_s
             }
             Algorithm::VanillaFL => {
-                latency::fl_round(&sub, &profile, &sched, &channel, &cfg.compute, true).total_s
+                let view = FleetView::new(dynamics.universe(), dynamics.present_members());
+                engine
+                    .fl_round(&view, &profile, &sched, &channel, &cfg.compute, true)
+                    .total_s
             }
-            Algorithm::VanillaSL => latency::sl_round(
-                &sub,
-                &profile,
-                &sched,
-                &channel,
-                &cfg.compute,
-                cfg.sl_cut_layer.clamp(1, profile.w() - 1),
-                cfg.compute.server_freq_ghz * 1e9,
-            )
-            .total_s,
-            Algorithm::SplitFed => latency::splitfed_round(
-                &sub,
-                &profile,
-                &sched,
-                &channel,
-                &cfg.compute,
-                cfg.splitfed_cut_layer.clamp(1, profile.w() - 1),
-                cfg.compute.server_freq_ghz * 1e9,
-                true,
-            )
-            .total_s,
+            Algorithm::VanillaSL => {
+                let view = FleetView::new(dynamics.universe(), dynamics.present_members());
+                engine
+                    .sl_round(
+                        &view,
+                        &profile,
+                        &sched,
+                        &channel,
+                        &cfg.compute,
+                        cfg.sl_cut_layer.clamp(1, profile.w() - 1),
+                        cfg.compute.server_freq_ghz * 1e9,
+                    )
+                    .total_s
+            }
+            Algorithm::SplitFed => {
+                let view = FleetView::new(dynamics.universe(), dynamics.present_members());
+                engine
+                    .splitfed_round(
+                        &view,
+                        &profile,
+                        &sched,
+                        &channel,
+                        &cfg.compute,
+                        cfg.splitfed_cut_layer.clamp(1, profile.w() - 1),
+                        cfg.compute.server_freq_ghz * 1e9,
+                        true,
+                    )
+                    .total_s
+            }
         };
         sim_total += round_s;
         records.push(RoundRecord {

@@ -13,7 +13,8 @@
 
 use fedpairing::cli::{CliError, Command, Parsed};
 use fedpairing::config::{
-    Algorithm, BackendMode, DataDistribution, ExperimentConfig, PairingStrategy, ScenarioConfig,
+    Algorithm, BackendMode, DataDistribution, ExperimentConfig, PairingStrategy, RoundBackend,
+    ScenarioConfig,
 };
 use fedpairing::coordinator::run_experiment;
 use fedpairing::fleet::simulate_scenario;
@@ -44,6 +45,8 @@ fn cli() -> Command {
                 .flag("noniid", None, None, "2-class shards instead of IID", None)
                 .flag("no-overlap-boost", None, None, "disable the eq.(7) 2x overlap step", None)
                 .flag("scenario", None, Some("NAME"), "stable|diurnal|flash-crowd|lossy-radio|metro-scale", None)
+                .flag("engine", None, Some("MODE"), "round-time engine: analytic|des", None)
+                .flag("threads", None, Some("N"), "engine worker threads (0 = one per core)", None)
                 .flag("artifacts", None, Some("DIR"), "artifact directory", None)
                 .flag("out", Some('o'), Some("DIR"), "metrics output directory", None),
         )
@@ -58,6 +61,8 @@ fn cli() -> Command {
                 .flag("rounds", Some('r'), Some("N"), "communication rounds", Some("30"))
                 .flag("samples", None, Some("N"), "samples per client [default: 2500; 64 under metro-scale]", None)
                 .flag("seed", Some('s'), Some("N"), "experiment seed", Some("17"))
+                .flag("engine", None, Some("MODE"), "round-time engine: analytic|des", None)
+                .flag("threads", None, Some("N"), "engine worker threads (0 = one per core)", None)
                 .flag("out", Some('o'), Some("DIR"), "metrics output directory", None),
         )
         .subcommand(
@@ -119,6 +124,18 @@ fn req_parsed<T: std::str::FromStr>(p: &Parsed, name: &str) -> anyhow::Result<Op
     p.get_parsed::<T>(name).map_err(|e| anyhow::anyhow!("{e}"))
 }
 
+/// Apply the shared `--engine` / `--threads` round-engine overrides.
+fn apply_engine_flags(cfg: &mut ExperimentConfig, p: &Parsed) -> anyhow::Result<()> {
+    if let Some(e) = p.get("engine") {
+        cfg.engine.backend = RoundBackend::parse(e)
+            .ok_or_else(|| anyhow::anyhow!("unknown round engine {e:?}"))?;
+    }
+    if let Some(t) = req_parsed::<usize>(p, "threads")? {
+        cfg.engine.threads = t;
+    }
+    Ok(())
+}
+
 fn cmd_run(p: &Parsed) -> anyhow::Result<()> {
     let mut cfg = if let Some(file) = p.get("config") {
         ExperimentConfig::load(file).map_err(|e| anyhow::anyhow!("{e}"))?
@@ -161,9 +178,11 @@ fn cmd_run(p: &Parsed) -> anyhow::Result<()> {
         cfg.overlap_boost = false;
     }
     if let Some(s) = p.get("scenario") {
-        cfg.scenario = ScenarioConfig::named(s)
+        let sc = ScenarioConfig::named(s)
             .ok_or_else(|| anyhow::anyhow!("unknown scenario {s:?}"))?;
+        cfg.set_scenario(sc);
     }
+    apply_engine_flags(&mut cfg, p)?;
     if let Some(d) = p.get("artifacts") {
         cfg.artifacts_dir = d.to_string();
     }
@@ -196,8 +215,9 @@ fn cmd_run(p: &Parsed) -> anyhow::Result<()> {
 fn cmd_churn(p: &Parsed) -> anyhow::Result<()> {
     let scenario = p.get("scenario").unwrap_or("flash-crowd");
     let mut cfg = ExperimentConfig::default();
-    cfg.scenario = ScenarioConfig::named(scenario)
+    let sc = ScenarioConfig::named(scenario)
         .ok_or_else(|| anyhow::anyhow!("unknown scenario {scenario:?}"))?;
+    cfg.set_scenario(sc);
     cfg.name = format!("churn_{}", cfg.scenario.kind);
     if let Some(a) = p.get("algorithm") {
         cfg.algorithm =
@@ -228,17 +248,19 @@ fn cmd_churn(p: &Parsed) -> anyhow::Result<()> {
         }
         None => 2500,
     };
+    apply_engine_flags(&mut cfg, p)?;
     if let Some(d) = p.get("out") {
         cfg.out_dir = d.to_string();
     }
     println!(
-        "simulating {} / {} under scenario={} — {} clients, {} rounds, {} backend (latency only)",
+        "simulating {} / {} under scenario={} — {} clients, {} rounds, {} backend, {} engine (latency only)",
         cfg.algorithm,
         cfg.pairing,
         cfg.scenario.kind,
         cfg.n_clients,
         cfg.rounds,
-        if cfg.backend.sparse_for(cfg.n_clients) { "sparse" } else { "dense" }
+        if cfg.backend.sparse_for(cfg.n_clients) { "sparse" } else { "dense" },
+        cfg.engine.backend
     );
     let run = simulate_scenario(&cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
     println!(

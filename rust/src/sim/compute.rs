@@ -34,6 +34,15 @@ pub fn compute_time(flops: f64, freq_hz: f64, cfg: &ComputeConfig) -> f64 {
     flops * cfg.cycles_per_flop / freq_hz
 }
 
+/// Seconds to transmit `bytes` over a `rate_bps` link — the one place the
+/// bytes→bits→seconds conversion lives, so the DES chain builder and the
+/// analytic round engine price a transfer identically to the last bit.
+#[inline]
+pub fn transmit_time(bytes: f64, rate_bps: f64) -> f64 {
+    debug_assert!(rate_bps > 0.0);
+    bytes * 8.0 / rate_bps
+}
+
 /// FedAvg aggregation weight `a_i = |D_i| / Σ|D_j|` (paper Sec. II-A.1).
 pub fn aggregation_weights(resources: &[ClientResources]) -> Vec<f64> {
     let total: usize = resources.iter().map(|r| r.n_samples).sum();
@@ -92,6 +101,13 @@ mod tests {
         assert_eq!(compute_time(1e9, 1e9, &cfg), 1.0);
         assert_eq!(compute_time(1e9, 2e9, &cfg), 0.5);
         assert_eq!(compute_time(2e9, 1e9, &cfg), 2.0);
+    }
+
+    #[test]
+    fn transmit_time_is_bits_over_rate() {
+        assert_eq!(transmit_time(1.0, 8.0), 1.0);
+        assert_eq!(transmit_time(1e6, 8e6), 1.0);
+        assert_eq!(transmit_time(0.0, 1e6), 0.0);
     }
 
     #[test]

@@ -35,6 +35,10 @@ impl Chain {
     }
 
     pub fn with_release(release: f64) -> Self {
+        assert!(
+            release.is_finite() && release >= 0.0,
+            "non-finite or negative chain release {release}"
+        );
         Chain {
             stages: Vec::new(),
             release,
@@ -42,8 +46,10 @@ impl Chain {
     }
 
     pub fn push(&mut self, resource: usize, duration: f64) -> &mut Self {
-        assert!(duration >= 0.0, "negative stage duration {duration}");
-        assert!(duration.is_finite(), "non-finite stage duration");
+        assert!(
+            duration.is_finite() && duration >= 0.0,
+            "non-finite or negative stage duration {duration}"
+        );
         self.stages.push(Stage { resource, duration });
         self
     }
@@ -93,6 +99,10 @@ impl PartialOrd for Event {
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> Ordering {
         // Min-heap via reversed compare; ties broken by insertion order.
+        // Event times are sums of stage durations and releases, all asserted
+        // finite at `Chain::push`/`simulate` entry, so the `partial_cmp`
+        // below can never see a NaN — the `Equal` fallback is unreachable
+        // rather than a silent mis-ordering.
         other
             .time
             .partial_cmp(&self.time)
@@ -104,11 +114,25 @@ impl Ord for Event {
 /// Run the job shop to completion.
 pub fn simulate(n_resources: usize, chains: &[Chain]) -> DesReport {
     for c in chains {
+        // Finite-time guard: the event heap orders by `partial_cmp`, so a NaN
+        // release or duration would silently mis-order events instead of
+        // failing. Durations are asserted at `Chain::push`; releases (and any
+        // stages built without `push`) are asserted here at entry.
+        assert!(
+            c.release.is_finite() && c.release >= 0.0,
+            "non-finite or negative chain release {}",
+            c.release
+        );
         for s in &c.stages {
             assert!(
                 s.resource < n_resources,
                 "stage references resource {} but only {n_resources} exist",
                 s.resource
+            );
+            assert!(
+                s.duration.is_finite() && s.duration >= 0.0,
+                "non-finite or negative stage duration {}",
+                s.duration
             );
         }
     }
@@ -325,5 +349,40 @@ mod tests {
     #[should_panic(expected = "resource")]
     fn invalid_resource_panics() {
         simulate(1, &[chain(&[(3, 1.0)])]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite or negative chain release")]
+    fn nan_release_rejected_at_simulate_entry() {
+        let mut c = Chain::new();
+        c.release = f64::NAN; // bypasses with_release's assert on purpose
+        c.push(0, 1.0);
+        simulate(1, &[c]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite or negative chain release")]
+    fn negative_release_rejected_at_construction() {
+        Chain::with_release(-1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn nan_duration_rejected_at_push() {
+        Chain::new().push(0, f64::NAN);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite or negative stage duration")]
+    fn infinite_duration_rejected_at_simulate_entry() {
+        // Stages built without `push` (struct literal) are still guarded.
+        let c = Chain {
+            stages: vec![Stage {
+                resource: 0,
+                duration: f64::INFINITY,
+            }],
+            release: 0.0,
+        };
+        simulate(1, &[c]);
     }
 }

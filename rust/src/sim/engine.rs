@@ -1,0 +1,919 @@
+//! The incremental round-time engine: analytic per-pair kernels, a
+//! cross-round memo cache, and deterministic parallel evaluation — the
+//! O(changed pairs) replacement for running one BinaryHeap DES per pair per
+//! round (DESIGN.md §6).
+//!
+//! Wireless-SFL latency models in the literature (arXiv:2310.15584,
+//! arXiv:2504.15724) are closed-form per pair/session because the two-flow
+//! ping-pong pipeline admits an O(1)-per-batch recurrence. This module
+//! computes that recurrence exactly:
+//!
+//! * **Analytic pair kernel** ([`two_chain_shop`]): the 2-chain / 4-resource
+//!   job shop of `fedpairing_round_with_solos`, solved by an exact event
+//!   recurrence in O(batches) time and O(1) space — no heap, no queues, no
+//!   allocation. It replicates [`super::des::simulate`]'s `(time, seq)` event
+//!   ordering (including FIFO tie-breaks at batch boundaries) and adds the
+//!   same durations to the same accumulators in the same order, so its
+//!   makespans are **bit-identical** to the DES, not merely close. The same
+//!   treatment covers the other three shapes: vanilla FL is already closed
+//!   form, a vanilla-SL session is a single uncontended chain (stage-order
+//!   sum), and SplitFed reduces to a FIFO recurrence on the one shared
+//!   resource — the server (per-client CPUs and links are private, so only
+//!   server arrivals need ordering).
+//! * **Cross-round memo cache**: pair results are keyed by the full set of
+//!   latency-relevant inputs `(f_i, f_j, n_i, n_j, pair rate)` — bit
+//!   patterns, not rounded values — so stable scenarios hit 100 % after
+//!   round 1 while shadowing/mobility/straggler rounds recompute exactly the
+//!   pairs whose inputs actually moved. A two-generation swap evicts entries
+//!   not touched this round, bounding the cache at O(live pairs).
+//! * **Deterministic parallel evaluation**: cache misses are evaluated on a
+//!   [`FixedPool`] (fork-join, contiguous index chunks) and reduced in pair
+//!   order, so any `threads` setting reproduces the single-thread trace bit
+//!   for bit.
+//!
+//! The DES stays available as the opt-in correctness oracle
+//! ([`RoundBackend::Des`]); the `engine_matches_des` property suite pins the
+//! two backends together across randomized fleets for all four algorithms.
+
+use super::channel::Channel;
+use super::compute::{split_lengths, transmit_time};
+use super::latency::{
+    self, full_local_time, split_stage_durations, upload_time, ClientSet, RoundTime, Schedule,
+};
+use super::profile::ModelProfile;
+use crate::config::{ComputeConfig, EngineConfig, RoundBackend};
+use crate::util::pool::FixedPool;
+use crate::util::rng::splitmix64;
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap};
+
+/// Below this many cache misses a round is evaluated serially — forking the
+/// pool costs more than the kernels themselves.
+const PAR_MIN_MISSES: usize = 64;
+
+/// Memo-cache key: the complete set of inputs a pair's training makespan
+/// depends on (the model profile, schedule and compute calibration are
+/// covered by the engine-level context fingerprint). Exact bit patterns —
+/// two rates that differ in the last ulp are different keys.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct PairKey {
+    f_i: u64,
+    f_j: u64,
+    n_i: u64,
+    n_j: u64,
+    rate: u64,
+}
+
+impl PairKey {
+    #[inline]
+    fn new(f_i: f64, f_j: f64, n_i: usize, n_j: usize, rate: f64) -> PairKey {
+        PairKey {
+            f_i: f_i.to_bits(),
+            f_j: f_j.to_bits(),
+            n_i: n_i as u64,
+            n_j: n_j as u64,
+            rate: rate.to_bits(),
+        }
+    }
+}
+
+/// One pair's cached evaluation: training makespan (upload excluded — it
+/// depends on the uplink rates, which are re-priced per round in O(1)),
+/// per-resource busy seconds and the two flow finish times.
+#[derive(Clone, Copy, Debug)]
+struct PairEval {
+    makespan: f64,
+    busy: [f64; 4],
+    finish: [f64; 2],
+}
+
+impl PairEval {
+    const ZERO: PairEval = PairEval {
+        makespan: 0.0,
+        busy: [0.0; 4],
+        finish: [0.0; 2],
+    };
+}
+
+// ---------------------------------------------------------------------------
+// Analytic kernels
+// ---------------------------------------------------------------------------
+
+/// A training flow as the DES sees it: a 5-stage `(resource, duration)`
+/// cycle repeated once per mini-batch.
+#[derive(Clone, Copy, Debug)]
+struct ChainSpec {
+    res: [usize; 5],
+    dur: [f64; 5],
+    n_stages: usize,
+}
+
+impl ChainSpec {
+    #[inline]
+    fn resource(&self, stage: usize) -> usize {
+        self.res[stage % 5]
+    }
+    #[inline]
+    fn duration(&self, stage: usize) -> f64 {
+        self.dur[stage % 5]
+    }
+}
+
+/// A chain's scheduling state inside [`two_chain_shop`]. `Ready`/`Complete`
+/// mirror the DES's pending events (with their push seq for tie-breaks);
+/// `Queued` chains sit in a resource's FIFO slot and have no event.
+#[derive(Clone, Copy, Debug)]
+enum ChainState {
+    Ready { t: f64, seq: u64 },
+    Complete { t: f64, seq: u64 },
+    Queued,
+    Done,
+}
+
+/// Exact event recurrence for the 2-chain / 4-resource pair job shop.
+///
+/// This is `des::simulate` specialized to two cyclic chains: each chain has
+/// at most one pending event at a time, so the global event heap degenerates
+/// to a 2-way `(time, seq)` minimum and the per-resource FIFO queues to a
+/// single waiting slot. Seq numbers are assigned in the same order as the
+/// DES pushes events (init in chain order; on completion the successor
+/// StageReady before the waiting chain's service start), so tie-breaks —
+/// which genuinely fire at batch boundaries, where a chain re-requests the
+/// resource it just released — resolve identically. Durations are added to
+/// the same accumulators in the same order, making every output bit-equal to
+/// the DES report.
+fn two_chain_shop(a: ChainSpec, b: ChainSpec) -> PairEval {
+    let chains = [a, b];
+    let mut state = [ChainState::Done; 2];
+    let mut stage = [0usize; 2];
+    let mut busy: [Option<usize>; 4] = [None; 4];
+    let mut waiting: [Option<usize>; 4] = [None; 4];
+    let mut busy_s = [0.0f64; 4];
+    let mut finish = [0.0f64; 2];
+    let mut seq: u64 = 0;
+    for c in 0..2 {
+        if chains[c].n_stages > 0 {
+            state[c] = ChainState::Ready { t: 0.0, seq };
+            seq += 1;
+        }
+    }
+    loop {
+        // The 2-way event "heap": earliest (time, seq) pending event wins.
+        let mut pick: Option<(usize, f64, u64, bool)> = None;
+        for c in 0..2 {
+            let (t, s, is_complete) = match state[c] {
+                ChainState::Ready { t, seq } => (t, seq, false),
+                ChainState::Complete { t, seq } => (t, seq, true),
+                _ => continue,
+            };
+            if pick.is_none_or(|(_, pt, ps, _)| (t, s) < (pt, ps)) {
+                pick = Some((c, t, s, is_complete));
+            }
+        }
+        let Some((c, now, _, is_complete)) = pick else {
+            break;
+        };
+        let r = chains[c].resource(stage[c]);
+        if !is_complete {
+            // StageReady: enqueue; start service only if the resource idles.
+            if busy[r].is_some() {
+                debug_assert!(waiting[r].is_none());
+                state[c] = ChainState::Queued;
+                waiting[r] = Some(c);
+            } else {
+                let d = chains[c].duration(stage[c]);
+                busy[r] = Some(c);
+                busy_s[r] += d;
+                state[c] = ChainState::Complete { t: now + d, seq };
+                seq += 1;
+            }
+        } else {
+            // Complete: free the resource, advance the chain, then serve the
+            // waiting chain — in that order, so the successor StageReady
+            // takes the earlier seq exactly like the DES push order.
+            busy[r] = None;
+            stage[c] += 1;
+            if stage[c] < chains[c].n_stages {
+                state[c] = ChainState::Ready { t: now, seq };
+                seq += 1;
+            } else {
+                state[c] = ChainState::Done;
+                finish[c] = now;
+            }
+            if let Some(w) = waiting[r].take() {
+                let d = chains[w].duration(stage[w]);
+                busy[r] = Some(w);
+                busy_s[r] += d;
+                state[w] = ChainState::Complete { t: now + d, seq };
+                seq += 1;
+            }
+        }
+    }
+    PairEval {
+        makespan: finish[0].max(finish[1]),
+        busy: busy_s,
+        finish,
+    }
+}
+
+/// Analytic evaluation of one FedPairing pair — the exact inputs and
+/// resource layout of the DES path in `fedpairing_round_with_solos`. The
+/// pair rate arrives precomputed (it was already evaluated for the cache
+/// key — same bits, no second eq. (3) evaluation per miss).
+fn pair_kernel<C: ClientSet>(
+    fleet: &C,
+    i: usize,
+    j: usize,
+    rate: f64,
+    profile: &ModelProfile,
+    sched: &Schedule,
+    comp: &ComputeConfig,
+) -> PairEval {
+    let w = profile.w();
+    let (f_i, f_j) = (fleet.freq_hz(i), fleet.freq_hz(j));
+    let (l_i, l_j) = split_lengths(f_i, f_j, w);
+    // Resources: 0 = cpu_i, 1 = cpu_j, 2 = link i→j, 3 = link j→i.
+    let dir_i = ChainSpec {
+        res: [0, 2, 1, 3, 0],
+        dur: split_stage_durations(profile, comp, sched.batch_size, l_i, f_i, f_j, rate),
+        n_stages: 5 * sched.batches(fleet.n_samples(i)),
+    };
+    let dir_j = ChainSpec {
+        res: [1, 3, 0, 2, 1],
+        dur: split_stage_durations(profile, comp, sched.batch_size, l_j, f_j, f_i, rate),
+        n_stages: 5 * sched.batches(fleet.n_samples(j)),
+    };
+    two_chain_shop(dir_i, dir_j)
+}
+
+/// A pending server arrival in the SplitFed recurrence. Min-ordered by
+/// `(time, chain)` — see the tie-break note on
+/// [`RoundEngine::splitfed_round`].
+#[derive(Debug)]
+struct Arrival {
+    t: f64,
+    chain: usize,
+}
+
+impl PartialEq for Arrival {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.chain == other.chain
+    }
+}
+impl Eq for Arrival {}
+impl PartialOrd for Arrival {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Arrival {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap via reversed compare; arrival times are finite (asserted
+        // stage durations), so the Equal fallback is unreachable.
+        other
+            .t
+            .partial_cmp(&self.t)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.chain.cmp(&self.chain))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The engine
+// ---------------------------------------------------------------------------
+
+/// Per-round latency evaluator: analytic kernels + memo cache + parallel
+/// evaluation behind the same call shapes as the `latency` module, with the
+/// DES available as an opt-in oracle backend. One instance is meant to live
+/// for a whole multi-round run so the cache can work across rounds.
+#[derive(Debug)]
+pub struct RoundEngine {
+    backend: RoundBackend,
+    pool: FixedPool,
+    flow_diagnostics: bool,
+    /// Fingerprint of the (profile, schedule, compute) context the cached
+    /// entries were computed under; a context switch clears the cache.
+    context: u64,
+    cache: HashMap<PairKey, PairEval>,
+    next: HashMap<PairKey, PairEval>,
+    // Reusable per-round scratch (amortized zero-allocation).
+    keys: Vec<PairKey>,
+    miss: Vec<usize>,
+    evals: Vec<PairEval>,
+    hits: u64,
+    misses: u64,
+}
+
+impl RoundEngine {
+    pub fn new(cfg: &EngineConfig) -> RoundEngine {
+        RoundEngine {
+            backend: cfg.backend,
+            pool: FixedPool::new(cfg.threads),
+            flow_diagnostics: cfg.flow_diagnostics,
+            context: 0,
+            cache: HashMap::new(),
+            next: HashMap::new(),
+            keys: Vec::new(),
+            miss: Vec::new(),
+            evals: Vec::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn backend(&self) -> RoundBackend {
+        self.backend
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Cumulative pair-cache hits across all rounds evaluated so far.
+    pub fn cache_hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Cumulative pair-cache misses (= kernel evaluations).
+    pub fn cache_misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Clear the memo cache if the model/schedule/compute context changed
+    /// since the cached entries were computed.
+    fn ensure_context(&mut self, profile: &ModelProfile, sched: &Schedule, comp: &ComputeConfig) {
+        let mut s = 0xC0FF_EE00_D15E_A5E5u64;
+        let mut acc = 0u64;
+        let mut fold = |v: u64| {
+            s ^= v;
+            acc ^= splitmix64(&mut s);
+        };
+        fold(profile.w() as u64);
+        for l in &profile.layers {
+            fold(l.flops_fwd.to_bits());
+            fold(l.act_bytes.to_bits());
+            fold(l.params as u64);
+        }
+        fold(profile.input_bytes.to_bits());
+        fold(sched.batch_size as u64);
+        fold(sched.epochs as u64);
+        fold(comp.cycles_per_flop.to_bits());
+        if acc != self.context {
+            self.cache.clear();
+            self.next.clear();
+            self.context = acc;
+        }
+    }
+
+    /// FedPairing round time under a given pairing + solo set — the metro
+    /// hot path: O(changed pairs · batches) instead of O(pairs · batches ·
+    /// log) with per-pair allocations.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fedpairing_round<C: ClientSet + Sync>(
+        &mut self,
+        fleet: &C,
+        pairs: &[(usize, usize)],
+        solos: &[usize],
+        profile: &ModelProfile,
+        sched: &Schedule,
+        channel: &Channel,
+        comp: &ComputeConfig,
+        include_upload: bool,
+    ) -> RoundTime {
+        if self.backend == RoundBackend::Des {
+            let mut rt = latency::fedpairing_round_with_solos(
+                fleet,
+                pairs,
+                solos,
+                profile,
+                sched,
+                channel,
+                comp,
+                include_upload,
+            );
+            if !self.flow_diagnostics {
+                rt.flow_finish_s = Vec::new();
+            }
+            return rt;
+        }
+        self.ensure_context(profile, sched, comp);
+        // Phase 1: keys + cache lookups (serial, O(pairs)).
+        self.keys.clear();
+        self.miss.clear();
+        self.evals.clear();
+        self.evals.resize(pairs.len(), PairEval::ZERO);
+        for (k, &(i, j)) in pairs.iter().enumerate() {
+            let key = PairKey::new(
+                fleet.freq_hz(i),
+                fleet.freq_hz(j),
+                fleet.n_samples(i),
+                fleet.n_samples(j),
+                channel.rate(&fleet.pos(i), &fleet.pos(j)),
+            );
+            if let Some(e) = self.cache.get(&key) {
+                self.evals[k] = *e;
+            } else {
+                self.miss.push(k);
+            }
+            self.keys.push(key);
+        }
+        self.hits += (pairs.len() - self.miss.len()) as u64;
+        self.misses += self.miss.len() as u64;
+        // Phase 2: evaluate the misses — in parallel when it pays. Each
+        // kernel is a pure function of its pair's inputs and results are
+        // merged back by pair index, so any thread count is bit-identical.
+        let computed: Vec<PairEval> = {
+            let miss = &self.miss;
+            let keys = &self.keys;
+            let eval_one = |m: usize| {
+                let k = miss[m];
+                let (i, j) = pairs[k];
+                // Reuse the rate evaluated for the cache key — bit-exactly
+                // the value the kernel would recompute.
+                pair_kernel(fleet, i, j, f64::from_bits(keys[k].rate), profile, sched, comp)
+            };
+            if miss.len() < PAR_MIN_MISSES || self.pool.threads() == 1 {
+                (0..miss.len()).map(eval_one).collect()
+            } else {
+                self.pool.map(miss.len(), eval_one)
+            }
+        };
+        for (slot, e) in self.miss.iter().zip(computed) {
+            self.evals[*slot] = e;
+        }
+        // Phase 3: generation swap — everything this round touched survives
+        // into the next round's cache; untouched entries are evicted, so the
+        // cache stays O(live pairs) even under per-round churn.
+        for (k, key) in self.keys.iter().enumerate() {
+            self.next.insert(*key, self.evals[k]);
+        }
+        std::mem::swap(&mut self.cache, &mut self.next);
+        self.next.clear();
+        // Phase 4: ordered reduction — identical op order to the DES path.
+        let diag = self.flow_diagnostics;
+        let mut total = 0.0f64;
+        let mut max_cpu = 0.0f64;
+        let mut max_link = 0.0f64;
+        let mut finishes = if diag {
+            Vec::with_capacity(pairs.len() * 2 + solos.len())
+        } else {
+            Vec::new()
+        };
+        for (k, &(i, j)) in pairs.iter().enumerate() {
+            let e = &self.evals[k];
+            let mut pair_total = e.makespan;
+            if include_upload {
+                let up = upload_time(fleet, channel, i, profile.param_bytes())
+                    .max(upload_time(fleet, channel, j, profile.param_bytes()));
+                pair_total += up;
+            }
+            total = total.max(pair_total);
+            max_cpu = max_cpu.max(e.busy[0]).max(e.busy[1]);
+            max_link = max_link.max(e.busy[2]).max(e.busy[3]);
+            if diag {
+                finishes.extend_from_slice(&e.finish);
+            }
+        }
+        for &s in solos {
+            let (compute_s, t) =
+                full_local_time(fleet, s, profile, sched, channel, comp, include_upload);
+            max_cpu = max_cpu.max(compute_s);
+            total = total.max(t);
+            if diag {
+                finishes.push(t);
+            }
+        }
+        RoundTime {
+            total_s: total,
+            max_cpu_busy_s: max_cpu,
+            max_link_busy_s: max_link,
+            flow_finish_s: finishes,
+        }
+    }
+
+    /// Vanilla-FL round: already closed form — both backends share the
+    /// `latency` arithmetic. With diagnostics off the per-client finish
+    /// times are never materialized (running max instead of an n-element
+    /// Vec per round — the allocation the knob exists to skip).
+    pub fn fl_round<C: ClientSet>(
+        &mut self,
+        fleet: &C,
+        profile: &ModelProfile,
+        sched: &Schedule,
+        channel: &Channel,
+        comp: &ComputeConfig,
+        include_upload: bool,
+    ) -> RoundTime {
+        if self.flow_diagnostics {
+            return latency::fl_round(fleet, profile, sched, channel, comp, include_upload);
+        }
+        let mut total = 0.0f64;
+        let mut max_cpu = 0.0f64;
+        for i in 0..fleet.n() {
+            let (compute_s, t) =
+                full_local_time(fleet, i, profile, sched, channel, comp, include_upload);
+            max_cpu = max_cpu.max(compute_s);
+            total = total.max(t);
+        }
+        RoundTime {
+            total_s: total,
+            max_cpu_busy_s: max_cpu,
+            max_link_busy_s: 0.0,
+            flow_finish_s: Vec::new(),
+        }
+    }
+
+    /// Vanilla-SL round: one uncontended chain per session, so the DES
+    /// makespan is the exact stage-order sum — computed directly.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sl_round<C: ClientSet>(
+        &mut self,
+        fleet: &C,
+        profile: &ModelProfile,
+        sched: &Schedule,
+        channel: &Channel,
+        comp: &ComputeConfig,
+        cut: usize,
+        server_freq_hz: f64,
+    ) -> RoundTime {
+        if self.backend == RoundBackend::Des {
+            let mut rt =
+                latency::sl_round(fleet, profile, sched, channel, comp, cut, server_freq_hz);
+            if !self.flow_diagnostics {
+                rt.flow_finish_s = Vec::new();
+            }
+            return rt;
+        }
+        assert!(cut >= 1 && cut < profile.w(), "cut {cut} out of range");
+        let n = fleet.n();
+        // Stage → resource of the session chain (0 = cpu, 1 = server,
+        // 2 = uplink, 3 = downlink), in DES push order.
+        const RES: [usize; 5] = [0, 2, 1, 3, 0];
+        let mut total = 0.0f64;
+        let mut max_cpu = 0.0f64;
+        let mut max_link = 0.0f64;
+        let mut finishes = if self.flow_diagnostics {
+            Vec::with_capacity(n)
+        } else {
+            Vec::new()
+        };
+        for i in 0..n {
+            let rate = channel.rate_to_server(&fleet.pos(i));
+            let dur = split_stage_durations(
+                profile,
+                comp,
+                sched.batch_size,
+                cut,
+                fleet.freq_hz(i),
+                server_freq_hz,
+                rate,
+            );
+            let nb = sched.batches(fleet.n_samples(i));
+            let mut t = 0.0f64;
+            let mut busy = [0.0f64; 4];
+            for _ in 0..nb {
+                for (s, &d) in dur.iter().enumerate() {
+                    t += d;
+                    busy[RES[s]] += d;
+                }
+            }
+            let mut session = t;
+            // Client-model relay to the next client in the ring.
+            let next = (i + 1) % n;
+            if n > 1 {
+                let front_bytes = profile.params(0, cut) as f64 * 4.0;
+                session +=
+                    transmit_time(front_bytes, channel.rate(&fleet.pos(i), &fleet.pos(next)));
+            }
+            total += session;
+            if self.flow_diagnostics {
+                finishes.push(total);
+            }
+            max_cpu = max_cpu.max(busy[0]).max(busy[1]);
+            max_link = max_link.max(busy[2]).max(busy[3]);
+        }
+        RoundTime {
+            total_s: total,
+            max_cpu_busy_s: max_cpu,
+            max_link_busy_s: max_link,
+            flow_finish_s: finishes,
+        }
+    }
+
+    /// SplitFed round: per-client CPUs and links are private, so the job
+    /// shop reduces to a FIFO recurrence on the shared server — arrivals are
+    /// served in arrival order (a binary heap of each chain's next arrival),
+    /// each service feeding the chain's next arrival time. Equal arrival
+    /// times break by chain id, which matches the DES seq order whenever the
+    /// tied chains are configured identically (the only way exact float ties
+    /// arise from sampled fleets).
+    #[allow(clippy::too_many_arguments)]
+    pub fn splitfed_round<C: ClientSet>(
+        &mut self,
+        fleet: &C,
+        profile: &ModelProfile,
+        sched: &Schedule,
+        channel: &Channel,
+        comp: &ComputeConfig,
+        cut: usize,
+        server_freq_hz: f64,
+        include_upload: bool,
+    ) -> RoundTime {
+        if self.backend == RoundBackend::Des {
+            let mut rt = latency::splitfed_round(
+                fleet,
+                profile,
+                sched,
+                channel,
+                comp,
+                cut,
+                server_freq_hz,
+                include_upload,
+            );
+            if !self.flow_diagnostics {
+                rt.flow_finish_s = Vec::new();
+            }
+            return rt;
+        }
+        assert!(cut >= 1 && cut < profile.w(), "cut {cut} out of range");
+        let n = fleet.n();
+        let mut durs: Vec<[f64; 5]> = Vec::with_capacity(n);
+        let mut nbs: Vec<usize> = Vec::with_capacity(n);
+        let mut max_cpu = 0.0f64;
+        let mut max_link = 0.0f64;
+        let mut heap: BinaryHeap<Arrival> = BinaryHeap::with_capacity(n);
+        for i in 0..n {
+            let rate = channel.rate_to_server(&fleet.pos(i));
+            let dur = split_stage_durations(
+                profile,
+                comp,
+                sched.batch_size,
+                cut,
+                fleet.freq_hz(i),
+                server_freq_hz,
+                rate,
+            );
+            let nb = sched.batches(fleet.n_samples(i));
+            // Private resources never queue: their busy totals are plain
+            // stage sums, accumulated in the DES's per-resource add order.
+            let mut cpu = 0.0f64;
+            let mut up = 0.0f64;
+            let mut down = 0.0f64;
+            for _ in 0..nb {
+                cpu += dur[0];
+                cpu += dur[4];
+                up += dur[1];
+                down += dur[3];
+            }
+            max_cpu = max_cpu.max(cpu);
+            max_link = max_link.max(up).max(down);
+            if nb > 0 {
+                // First server arrival: front-fwd then uplink.
+                let mut t = 0.0f64;
+                t += dur[0];
+                t += dur[1];
+                heap.push(Arrival { t, chain: i });
+            }
+            durs.push(dur);
+            nbs.push(nb);
+        }
+        let mut batch = vec![0usize; n];
+        let mut finish = vec![0.0f64; n];
+        let mut server_busy = 0.0f64;
+        let mut server_free = 0.0f64;
+        while let Some(Arrival { t: arrival, chain: i }) = heap.pop() {
+            let dur = durs[i];
+            let start = arrival.max(server_free);
+            server_busy += dur[2];
+            let completion = start + dur[2];
+            server_free = completion;
+            batch[i] += 1;
+            // Downlink then front-bwd, then (for non-final batches) the next
+            // batch's front-fwd + uplink — sequential adds, DES op order.
+            let mut t = completion;
+            t += dur[3];
+            t += dur[4];
+            if batch[i] < nbs[i] {
+                t += dur[0];
+                t += dur[1];
+                heap.push(Arrival { t, chain: i });
+            } else {
+                finish[i] = t;
+            }
+        }
+        let mut total = finish.iter().cloned().fold(0.0, f64::max);
+        max_cpu = max_cpu.max(server_busy);
+        if include_upload {
+            // FedAvg sync of the client-side models.
+            let front_bytes = profile.params(0, cut) as f64 * 4.0;
+            let up = (0..n)
+                .map(|i| upload_time(fleet, channel, i, front_bytes))
+                .fold(0.0, f64::max);
+            total += up;
+        }
+        RoundTime {
+            total_s: total,
+            max_cpu_busy_s: max_cpu,
+            max_link_busy_s: max_link,
+            flow_finish_s: if self.flow_diagnostics {
+                finish
+            } else {
+                Vec::new()
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChannelConfig, ExperimentConfig};
+    use crate::sim::latency::Fleet;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (Fleet, ModelProfile, Schedule, Channel, ComputeConfig) {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n_clients = 10;
+        cfg.samples_per_client = 96;
+        let mut rng = Rng::new(11);
+        let fleet = Fleet::sample(&cfg, &mut rng);
+        let profile = ModelProfile::resnet10_cifar();
+        let sched = Schedule {
+            batch_size: 32,
+            epochs: 2,
+        };
+        let channel = Channel::new(ChannelConfig::default());
+        (fleet, profile, sched, channel, cfg.compute)
+    }
+
+    fn engine(threads: usize) -> RoundEngine {
+        RoundEngine::new(&EngineConfig {
+            backend: RoundBackend::Analytic,
+            threads,
+            flow_diagnostics: true,
+        })
+    }
+
+    fn pair_all(n: usize) -> Vec<(usize, usize)> {
+        (0..n / 2).map(|k| (2 * k, 2 * k + 1)).collect()
+    }
+
+    #[test]
+    fn pair_kernel_bit_identical_to_des() {
+        let (fleet, profile, sched, channel, comp) = setup();
+        let pairs = pair_all(fleet.n());
+        let des = latency::fedpairing_round_with_solos(
+            &fleet, &pairs, &[9], &profile, &sched, &channel, &comp, true,
+        );
+        let mut eng = engine(1);
+        let ana =
+            eng.fedpairing_round(&fleet, &pairs, &[9], &profile, &sched, &channel, &comp, true);
+        assert_eq!(ana.total_s.to_bits(), des.total_s.to_bits());
+        assert_eq!(ana.max_cpu_busy_s.to_bits(), des.max_cpu_busy_s.to_bits());
+        assert_eq!(ana.max_link_busy_s.to_bits(), des.max_link_busy_s.to_bits());
+        assert_eq!(ana.flow_finish_s, des.flow_finish_s);
+    }
+
+    #[test]
+    fn sl_and_splitfed_kernels_match_des() {
+        let (fleet, profile, sched, channel, comp) = setup();
+        let mut eng = engine(1);
+        let sl_a = eng.sl_round(&fleet, &profile, &sched, &channel, &comp, 2, 100e9);
+        let sl_d = latency::sl_round(&fleet, &profile, &sched, &channel, &comp, 2, 100e9);
+        assert_eq!(sl_a.total_s.to_bits(), sl_d.total_s.to_bits());
+        assert_eq!(sl_a.flow_finish_s, sl_d.flow_finish_s);
+        let sf_a = eng.splitfed_round(&fleet, &profile, &sched, &channel, &comp, 2, 100e9, true);
+        let sf_d =
+            latency::splitfed_round(&fleet, &profile, &sched, &channel, &comp, 2, 100e9, true);
+        assert_eq!(sf_a.total_s.to_bits(), sf_d.total_s.to_bits());
+        assert_eq!(sf_a.max_cpu_busy_s.to_bits(), sf_d.max_cpu_busy_s.to_bits());
+        assert_eq!(sf_a.flow_finish_s, sf_d.flow_finish_s);
+    }
+
+    #[test]
+    fn cache_hits_after_first_round() {
+        let (fleet, profile, sched, channel, comp) = setup();
+        let pairs = pair_all(fleet.n());
+        let mut eng = engine(1);
+        let a = eng.fedpairing_round(&fleet, &pairs, &[], &profile, &sched, &channel, &comp, true);
+        assert_eq!(eng.cache_misses(), pairs.len() as u64);
+        assert_eq!(eng.cache_hits(), 0);
+        let b = eng.fedpairing_round(&fleet, &pairs, &[], &profile, &sched, &channel, &comp, true);
+        assert_eq!(eng.cache_misses(), pairs.len() as u64, "stable round recomputed");
+        assert_eq!(eng.cache_hits(), pairs.len() as u64);
+        assert_eq!(a.total_s.to_bits(), b.total_s.to_bits());
+    }
+
+    #[test]
+    fn channel_change_invalidates_affected_pairs() {
+        let (fleet, profile, sched, channel, comp) = setup();
+        let pairs = pair_all(fleet.n());
+        let mut eng = engine(1);
+        eng.fedpairing_round(&fleet, &pairs, &[], &profile, &sched, &channel, &comp, true);
+        // Global shadowing draw: every pair rate moves → every pair misses.
+        let mut faded_cfg = *channel.config();
+        faded_cfg.ref_gain *= 0.5;
+        let faded = Channel::new(faded_cfg);
+        eng.fedpairing_round(&fleet, &pairs, &[], &profile, &sched, &faded, &comp, true);
+        assert_eq!(eng.cache_misses(), 2 * pairs.len() as u64);
+        // And back: the faded-round generation evicted the originals.
+        eng.fedpairing_round(&fleet, &pairs, &[], &profile, &sched, &channel, &comp, true);
+        assert_eq!(eng.cache_misses(), 3 * pairs.len() as u64);
+    }
+
+    #[test]
+    fn straggler_invalidates_only_its_pair() {
+        let (mut fleet, profile, sched, channel, comp) = setup();
+        let pairs = pair_all(fleet.n());
+        let mut eng = engine(1);
+        eng.fedpairing_round(&fleet, &pairs, &[], &profile, &sched, &channel, &comp, true);
+        fleet.freqs_hz[3] *= 0.35; // straggle one member of pair (2, 3)
+        eng.fedpairing_round(&fleet, &pairs, &[], &profile, &sched, &channel, &comp, true);
+        assert_eq!(eng.cache_misses(), pairs.len() as u64 + 1);
+        assert_eq!(eng.cache_hits(), pairs.len() as u64 - 1);
+    }
+
+    #[test]
+    fn thread_count_never_changes_results() {
+        let (fleet, profile, sched, channel, comp) = setup();
+        // Enough pairs to cross PAR_MIN_MISSES: replicate the fleet pairing
+        // across many (i, j) combinations.
+        let pairs: Vec<(usize, usize)> = (0..fleet.n())
+            .flat_map(|i| (0..fleet.n()).filter(move |&j| j != i).map(move |j| (i, j)))
+            .collect();
+        assert!(pairs.len() >= PAR_MIN_MISSES);
+        let mut serial = engine(1);
+        let a =
+            serial.fedpairing_round(&fleet, &pairs, &[], &profile, &sched, &channel, &comp, true);
+        for threads in [2, 4, 7] {
+            let mut par = engine(threads);
+            let b =
+                par.fedpairing_round(&fleet, &pairs, &[], &profile, &sched, &channel, &comp, true);
+            assert_eq!(a.total_s.to_bits(), b.total_s.to_bits(), "threads={threads}");
+            assert_eq!(a.flow_finish_s, b.flow_finish_s, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn context_switch_clears_the_cache() {
+        let (fleet, profile, sched, channel, comp) = setup();
+        let pairs = pair_all(fleet.n());
+        let mut eng = engine(1);
+        eng.fedpairing_round(&fleet, &pairs, &[], &profile, &sched, &channel, &comp, true);
+        // Same pair inputs, different model: must not reuse cached makespans.
+        let other = ModelProfile::resnet18_cifar();
+        eng.fedpairing_round(&fleet, &pairs, &[], &other, &sched, &channel, &comp, true);
+        assert_eq!(eng.cache_misses(), 2 * pairs.len() as u64);
+        let a = eng.fedpairing_round(&fleet, &pairs, &[], &other, &sched, &channel, &comp, true);
+        let d = latency::fedpairing_round(&fleet, &pairs, &other, &sched, &channel, &comp, true);
+        assert_eq!(a.total_s.to_bits(), d.total_s.to_bits());
+    }
+
+    #[test]
+    fn diagnostics_off_skips_flow_finish_only() {
+        let (fleet, profile, sched, channel, comp) = setup();
+        let pairs = pair_all(fleet.n());
+        let mut quiet = RoundEngine::new(&EngineConfig {
+            backend: RoundBackend::Analytic,
+            threads: 1,
+            flow_diagnostics: false,
+        });
+        let q =
+            quiet.fedpairing_round(&fleet, &pairs, &[9], &profile, &sched, &channel, &comp, true);
+        let full = latency::fedpairing_round_with_solos(
+            &fleet, &pairs, &[9], &profile, &sched, &channel, &comp, true,
+        );
+        assert!(q.flow_finish_s.is_empty());
+        assert_eq!(q.total_s.to_bits(), full.total_s.to_bits());
+        let sl = quiet.sl_round(&fleet, &profile, &sched, &channel, &comp, 1, 100e9);
+        assert!(sl.flow_finish_s.is_empty());
+        let sf = quiet.splitfed_round(&fleet, &profile, &sched, &channel, &comp, 2, 100e9, true);
+        assert!(sf.flow_finish_s.is_empty());
+        let fl = quiet.fl_round(&fleet, &profile, &sched, &channel, &comp, true);
+        assert!(fl.flow_finish_s.is_empty());
+    }
+
+    #[test]
+    fn des_backend_delegates_to_the_oracle() {
+        let (fleet, profile, sched, channel, comp) = setup();
+        let pairs = pair_all(fleet.n());
+        let mut eng = RoundEngine::new(&EngineConfig {
+            backend: RoundBackend::Des,
+            threads: 1,
+            flow_diagnostics: true,
+        });
+        let a = eng.fedpairing_round(&fleet, &pairs, &[], &profile, &sched, &channel, &comp, true);
+        let d = latency::fedpairing_round(&fleet, &pairs, &profile, &sched, &channel, &comp, true);
+        assert_eq!(a.total_s.to_bits(), d.total_s.to_bits());
+        assert_eq!(eng.cache_misses(), 0, "oracle backend must not touch the cache");
+    }
+
+    #[test]
+    fn zero_pairs_and_solos_give_zero_round() {
+        let (fleet, profile, sched, channel, comp) = setup();
+        let mut eng = engine(1);
+        let rt = eng.fedpairing_round(&fleet, &[], &[], &profile, &sched, &channel, &comp, true);
+        assert_eq!(rt.total_s, 0.0);
+        assert!(rt.flow_finish_s.is_empty());
+    }
+}

@@ -22,12 +22,82 @@
 //!   server CPU — server queueing contention emerges from FIFO service.
 
 use super::channel::Channel;
-use super::compute::{compute_time, split_lengths, ClientResources};
+use super::compute::{compute_time, split_lengths, transmit_time, ClientResources};
 use super::des::{simulate, Chain};
 use super::geometry::{place_uniform_disk, Pos};
 use super::profile::{ModelProfile, BWD_FLOPS_FACTOR};
 use crate::config::{ComputeConfig, ExperimentConfig};
 use crate::util::rng::Rng;
+
+/// Read access to a set of clients — either an owned [`Fleet`] or a borrowed
+/// [`FleetView`] over a membership slice. Every round-time model is generic
+/// over this trait, so the per-round hot path never materializes a
+/// [`Fleet::subset`] clone.
+pub trait ClientSet {
+    fn n(&self) -> usize;
+    fn freq_hz(&self, i: usize) -> f64;
+    fn n_samples(&self, i: usize) -> usize;
+    fn pos(&self, i: usize) -> Pos;
+}
+
+impl ClientSet for Fleet {
+    #[inline]
+    fn n(&self) -> usize {
+        self.freqs_hz.len()
+    }
+    #[inline]
+    fn freq_hz(&self, i: usize) -> f64 {
+        self.freqs_hz[i]
+    }
+    #[inline]
+    fn n_samples(&self, i: usize) -> usize {
+        self.n_samples[i]
+    }
+    #[inline]
+    fn pos(&self, i: usize) -> Pos {
+        self.positions[i]
+    }
+}
+
+/// Borrowed compact view over `members` of a universe fleet: compact index
+/// `c` reads universe client `members[c]`. The zero-allocation replacement
+/// for the per-round `Fleet::subset` clones in the scenario drivers.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetView<'a> {
+    fleet: &'a Fleet,
+    members: &'a [usize],
+}
+
+impl<'a> FleetView<'a> {
+    pub fn new(fleet: &'a Fleet, members: &'a [usize]) -> FleetView<'a> {
+        debug_assert!(members.iter().all(|&u| u < fleet.n()));
+        FleetView { fleet, members }
+    }
+
+    /// The compact→universe id map this view was built over.
+    pub fn members(&self) -> &'a [usize] {
+        self.members
+    }
+}
+
+impl ClientSet for FleetView<'_> {
+    #[inline]
+    fn n(&self) -> usize {
+        self.members.len()
+    }
+    #[inline]
+    fn freq_hz(&self, i: usize) -> f64 {
+        self.fleet.freqs_hz[self.members[i]]
+    }
+    #[inline]
+    fn n_samples(&self, i: usize) -> usize {
+        self.fleet.n_samples[self.members[i]]
+    }
+    #[inline]
+    fn pos(&self, i: usize) -> Pos {
+        self.fleet.positions[self.members[i]]
+    }
+}
 
 /// The sampled fleet: everything static about the clients.
 #[derive(Clone, Debug)]
@@ -116,6 +186,38 @@ pub const CLASSES: usize = 10;
 // FedPairing
 // ---------------------------------------------------------------------------
 
+/// The five per-batch stage durations of one split-training direction —
+/// front-fwd, uplink, back fwd+bwd, downlink, front-bwd — shared by the DES
+/// chain builder below and the analytic kernels in [`super::engine`], so both
+/// paths price a batch with bit-identical arithmetic.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn split_stage_durations(
+    profile: &ModelProfile,
+    comp: &ComputeConfig,
+    batch: usize,
+    split: usize,
+    f_front_hz: f64,
+    f_back_hz: f64,
+    rate_bps: f64,
+) -> [f64; 5] {
+    let w = profile.w();
+    let front_fwd_flops = batch as f64 * profile.fwd_flops(0, split);
+    let back_flops = batch as f64 * profile.train_flops(split, w);
+    let front_bwd_flops = front_fwd_flops * BWD_FLOPS_FACTOR;
+    let act_bytes = batch as f64 * profile.act_bytes_at(split);
+    // Faithful label-private protocol (DESIGN.md §2): activation + logit-grad
+    // travel front→back; logits + activation-grad travel back→front.
+    let up_bytes = act_bytes + logits_bytes(CLASSES, batch);
+    let down_bytes = logits_bytes(CLASSES, batch) + act_bytes;
+    [
+        compute_time(front_fwd_flops, f_front_hz, comp),
+        transmit_time(up_bytes, rate_bps),
+        compute_time(back_flops, f_back_hz, comp),
+        transmit_time(down_bytes, rate_bps),
+        compute_time(front_bwd_flops, f_front_hz, comp),
+    ]
+}
+
 /// One direction's per-batch stages inside a pair or a client↔server split.
 ///
 /// `front` runs on `cpu_front`, `back` on `cpu_back`; `split` is the unit
@@ -136,29 +238,43 @@ fn push_split_batches(
     link_bwd: usize,
     rate_bps: f64,
 ) {
-    let w = profile.w();
-    let front_fwd_flops = batch as f64 * profile.fwd_flops(0, split);
-    let back_flops = batch as f64 * profile.train_flops(split, w);
-    let front_bwd_flops = front_fwd_flops * BWD_FLOPS_FACTOR;
-    let act_bytes = batch as f64 * profile.act_bytes_at(split);
-    // Faithful label-private protocol (DESIGN.md §2): activation + logit-grad
-    // travel front→back; logits + activation-grad travel back→front.
-    let up_bytes = act_bytes + logits_bytes(CLASSES, batch);
-    let down_bytes = logits_bytes(CLASSES, batch) + act_bytes;
-    let t_up = up_bytes * 8.0 / rate_bps;
-    let t_down = down_bytes * 8.0 / rate_bps;
+    let [t_fwd, t_up, t_back, t_down, t_bwd] =
+        split_stage_durations(profile, comp, batch, split, f_front_hz, f_back_hz, rate_bps);
     for _ in 0..n_batches {
-        chain.push(cpu_front, compute_time(front_fwd_flops, f_front_hz, comp));
+        chain.push(cpu_front, t_fwd);
         chain.push(link_fwd, t_up);
-        chain.push(cpu_back, compute_time(back_flops, f_back_hz, comp));
+        chain.push(cpu_back, t_back);
         chain.push(link_bwd, t_down);
-        chain.push(cpu_front, compute_time(front_bwd_flops, f_front_hz, comp));
+        chain.push(cpu_front, t_bwd);
     }
 }
 
 /// Model upload time to the central server for client `i`.
-fn upload_time(fleet: &Fleet, channel: &Channel, i: usize, bytes: f64) -> f64 {
-    bytes * 8.0 / channel.rate_to_server(&fleet.positions[i])
+pub(crate) fn upload_time<C: ClientSet>(fleet: &C, channel: &Channel, i: usize, bytes: f64) -> f64 {
+    transmit_time(bytes, channel.rate_to_server(&fleet.pos(i)))
+}
+
+/// One client's full-model local-training time — `(compute_s, total_s)`,
+/// where `total_s` includes the model upload when requested. Shared by
+/// [`fl_round`], the FedPairing solo fallback and the analytic engine so
+/// every path prices a full-model participant identically.
+pub(crate) fn full_local_time<C: ClientSet>(
+    fleet: &C,
+    i: usize,
+    profile: &ModelProfile,
+    sched: &Schedule,
+    channel: &Channel,
+    comp: &ComputeConfig,
+    include_upload: bool,
+) -> (f64, f64) {
+    let nb = sched.batches(fleet.n_samples(i));
+    let flops = nb as f64 * sched.batch_size as f64 * profile.train_flops(0, profile.w());
+    let compute_s = compute_time(flops, fleet.freq_hz(i), comp);
+    let mut total_s = compute_s;
+    if include_upload {
+        total_s += upload_time(fleet, channel, i, profile.param_bytes());
+    }
+    (compute_s, total_s)
 }
 
 /// FedPairing round time under a given pairing (paper Sec. II-A).
@@ -166,8 +282,8 @@ fn upload_time(fleet: &Fleet, channel: &Channel, i: usize, bytes: f64) -> f64 {
 /// Pairs are physically independent (own CPUs + own OFDM sub-bands), so each
 /// pair is simulated as its own 4-resource job shop; the round ends when the
 /// slowest pair has finished local training and uploaded its two models.
-pub fn fedpairing_round(
-    fleet: &Fleet,
+pub fn fedpairing_round<C: ClientSet>(
+    fleet: &C,
     pairs: &[(usize, usize)],
     profile: &ModelProfile,
     sched: &Schedule,
@@ -183,8 +299,8 @@ pub fn fedpairing_round(
 /// like a vanilla-FL participant, and uploads it alongside the pairs. The
 /// round ends when the slowest pair *or* solo finishes.
 #[allow(clippy::too_many_arguments)]
-pub fn fedpairing_round_with_solos(
-    fleet: &Fleet,
+pub fn fedpairing_round_with_solos<C: ClientSet>(
+    fleet: &C,
     pairs: &[(usize, usize)],
     solos: &[usize],
     profile: &ModelProfile,
@@ -199,16 +315,16 @@ pub fn fedpairing_round_with_solos(
     let mut max_link = 0.0f64;
     let mut finishes = Vec::with_capacity(pairs.len() * 2);
     for &(i, j) in pairs {
-        let (f_i, f_j) = (fleet.freqs_hz[i], fleet.freqs_hz[j]);
+        let (f_i, f_j) = (fleet.freq_hz(i), fleet.freq_hz(j));
         let (l_i, l_j) = split_lengths(f_i, f_j, w);
-        let rate = channel.rate(&fleet.positions[i], &fleet.positions[j]);
+        let rate = channel.rate(&fleet.pos(i), &fleet.pos(j));
         // Local resources: 0 = cpu_i, 1 = cpu_j, 2 = link i→j, 3 = link j→i.
         let mut dir_i = Chain::new();
         push_split_batches(
             &mut dir_i,
             profile,
             comp,
-            sched.batches(fleet.n_samples[i]),
+            sched.batches(fleet.n_samples(i)),
             sched.batch_size,
             l_i,
             0,
@@ -224,7 +340,7 @@ pub fn fedpairing_round_with_solos(
             &mut dir_j,
             profile,
             comp,
-            sched.batches(fleet.n_samples[j]),
+            sched.batches(fleet.n_samples(j)),
             sched.batch_size,
             l_j,
             1,
@@ -248,13 +364,9 @@ pub fn fedpairing_round_with_solos(
         finishes.extend_from_slice(&rep.chain_finish);
     }
     for &s in solos {
-        let nb = sched.batches(fleet.n_samples[s]);
-        let flops = nb as f64 * sched.batch_size as f64 * profile.train_flops(0, w);
-        let mut t = compute_time(flops, fleet.freqs_hz[s], comp);
-        max_cpu = max_cpu.max(t);
-        if include_upload {
-            t += upload_time(fleet, channel, s, profile.param_bytes());
-        }
+        let (compute_s, t) =
+            full_local_time(fleet, s, profile, sched, channel, comp, include_upload);
+        max_cpu = max_cpu.max(compute_s);
         total = total.max(t);
         finishes.push(t);
     }
@@ -272,25 +384,20 @@ pub fn fedpairing_round_with_solos(
 
 /// Vanilla-FL round: every client trains the full model locally; the round is
 /// gated by the slowest client (the straggler effect the paper targets).
-pub fn fl_round(
-    fleet: &Fleet,
+pub fn fl_round<C: ClientSet>(
+    fleet: &C,
     profile: &ModelProfile,
     sched: &Schedule,
     channel: &Channel,
     comp: &ComputeConfig,
     include_upload: bool,
 ) -> RoundTime {
-    let w = profile.w();
     let mut finishes = Vec::with_capacity(fleet.n());
     let mut max_cpu = 0.0f64;
     for i in 0..fleet.n() {
-        let nb = sched.batches(fleet.n_samples[i]);
-        let flops = nb as f64 * sched.batch_size as f64 * profile.train_flops(0, w);
-        let mut t = compute_time(flops, fleet.freqs_hz[i], comp);
-        max_cpu = max_cpu.max(t);
-        if include_upload {
-            t += upload_time(fleet, channel, i, profile.param_bytes());
-        }
+        let (compute_s, t) =
+            full_local_time(fleet, i, profile, sched, channel, comp, include_upload);
+        max_cpu = max_cpu.max(compute_s);
         finishes.push(t);
     }
     RoundTime {
@@ -309,8 +416,8 @@ pub fn fl_round(
 /// rest; clients run **sequentially**, relaying the client-side model to the
 /// next client between sessions (Gupta & Raskar 2018).
 #[allow(clippy::too_many_arguments)]
-pub fn sl_round(
-    fleet: &Fleet,
+pub fn sl_round<C: ClientSet>(
+    fleet: &C,
     profile: &ModelProfile,
     sched: &Schedule,
     channel: &Channel,
@@ -324,18 +431,18 @@ pub fn sl_round(
     let mut max_link = 0.0f64;
     let mut finishes = Vec::with_capacity(fleet.n());
     for i in 0..fleet.n() {
-        let rate = channel.rate_to_server(&fleet.positions[i]);
+        let rate = channel.rate_to_server(&fleet.pos(i));
         // Local resources: 0 = cpu_i, 1 = server, 2 = uplink, 3 = downlink.
         let mut chain = Chain::new();
         push_split_batches(
             &mut chain,
             profile,
             comp,
-            sched.batches(fleet.n_samples[i]),
+            sched.batches(fleet.n_samples(i)),
             sched.batch_size,
             cut,
             0,
-            fleet.freqs_hz[i],
+            fleet.freq_hz(i),
             1,
             server_freq_hz,
             2,
@@ -348,8 +455,7 @@ pub fn sl_round(
         let next = (i + 1) % fleet.n();
         if fleet.n() > 1 {
             let front_bytes = profile.params(0, cut) as f64 * 4.0;
-            session += front_bytes * 8.0
-                / channel.rate(&fleet.positions[i], &fleet.positions[next]);
+            session += transmit_time(front_bytes, channel.rate(&fleet.pos(i), &fleet.pos(next)));
         }
         total += session;
         finishes.push(total);
@@ -372,8 +478,8 @@ pub fn sl_round(
 /// one shared server CPU (FIFO), followed by FedAvg of the client-side models
 /// (Thapa et al. 2022). Server queueing is the emergent bottleneck.
 #[allow(clippy::too_many_arguments)]
-pub fn splitfed_round(
-    fleet: &Fleet,
+pub fn splitfed_round<C: ClientSet>(
+    fleet: &C,
     profile: &ModelProfile,
     sched: &Schedule,
     channel: &Channel,
@@ -388,7 +494,7 @@ pub fn splitfed_round(
     let server = n;
     let mut chains = Vec::with_capacity(n);
     for i in 0..n {
-        let rate = channel.rate_to_server(&fleet.positions[i]);
+        let rate = channel.rate_to_server(&fleet.pos(i));
         let up = n + 1 + 2 * i;
         let down = n + 2 + 2 * i;
         let mut chain = Chain::new();
@@ -396,11 +502,11 @@ pub fn splitfed_round(
             &mut chain,
             profile,
             comp,
-            sched.batches(fleet.n_samples[i]),
+            sched.batches(fleet.n_samples(i)),
             sched.batch_size,
             cut,
             i,
-            fleet.freqs_hz[i],
+            fleet.freq_hz(i),
             server,
             server_freq_hz,
             up,

@@ -1,12 +1,15 @@
 //! The heterogeneity/latency simulation substrate (DESIGN.md §2): client
 //! geometry, the eq. (3) OFDM channel, CPU heterogeneity, static model cost
 //! profiles (ResNet-18/10, the AOT MLP), a deterministic discrete-event
-//! engine, and per-algorithm round-time models that regenerate the paper's
-//! Tables I and II.
+//! engine, per-algorithm round-time models that regenerate the paper's
+//! Tables I and II, and the incremental round-time engine (analytic kernels
+//! + memo cache + parallel evaluation, DESIGN.md §6) that makes per-round
+//! evaluation O(changed pairs) at fleet scale.
 
 pub mod channel;
 pub mod compute;
 pub mod des;
+pub mod engine;
 pub mod geometry;
 pub mod latency;
 pub mod profile;

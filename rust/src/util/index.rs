@@ -1,0 +1,127 @@
+//! Reusable universe→compact id inversion (scratch map).
+//!
+//! The scenario drivers hand the latency layer a *compact* view of this
+//! round's participants (`FleetView`), but matchings store *universe* ids.
+//! Inverting that mapping with `members.binary_search(&u)` costs O(log n) per
+//! lookup and nothing is reused round to round. [`InverseIndex`] is the
+//! zero-allocation replacement: one `rebuild` per round (O(members), reusing
+//! the same buffers via a generation stamp — no clearing), then O(1) lookups.
+
+/// Generation-stamped inverse map from universe id to compact index.
+#[derive(Clone, Debug, Default)]
+pub struct InverseIndex {
+    slot: Vec<u32>,
+    stamp: Vec<u32>,
+    gen: u32,
+}
+
+impl InverseIndex {
+    pub fn new() -> InverseIndex {
+        InverseIndex::default()
+    }
+
+    /// Point the index at this round's `members` (compact index `c` ↔
+    /// universe id `members[c]`). Amortized zero-allocation: buffers grow to
+    /// `universe_n` once and are invalidated by bumping the generation.
+    pub fn rebuild(&mut self, universe_n: usize, members: &[usize]) {
+        assert!(members.len() <= u32::MAX as usize, "fleet too large for u32 index");
+        if self.slot.len() < universe_n {
+            self.slot.resize(universe_n, 0);
+            self.stamp.resize(universe_n, 0);
+        }
+        if self.gen == u32::MAX {
+            // Stamp wrap: reset so stale stamps can't collide with a reused
+            // generation value. Happens once per 2^32 rebuilds.
+            self.stamp.fill(0);
+            self.gen = 0;
+        }
+        self.gen += 1;
+        for (c, &u) in members.iter().enumerate() {
+            self.slot[u] = c as u32;
+            self.stamp[u] = self.gen;
+        }
+    }
+
+    /// Compact index of universe id `u` in the current generation, if present.
+    #[inline]
+    pub fn get(&self, u: usize) -> Option<usize> {
+        if u < self.slot.len() && self.stamp[u] == self.gen && self.gen != 0 {
+            Some(self.slot[u] as usize)
+        } else {
+            None
+        }
+    }
+
+    /// [`InverseIndex::get`] for ids known to be present (panics otherwise).
+    #[inline]
+    pub fn compact(&self, u: usize) -> usize {
+        self.get(u)
+            .unwrap_or_else(|| panic!("universe id {u} not in the current member set"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_members_to_their_positions() {
+        let mut idx = InverseIndex::new();
+        idx.rebuild(10, &[2, 5, 9]);
+        assert_eq!(idx.get(2), Some(0));
+        assert_eq!(idx.get(5), Some(1));
+        assert_eq!(idx.get(9), Some(2));
+        assert_eq!(idx.get(3), None);
+        assert_eq!(idx.get(42), None);
+        assert_eq!(idx.compact(5), 1);
+    }
+
+    #[test]
+    fn rebuild_invalidates_previous_generation() {
+        let mut idx = InverseIndex::new();
+        idx.rebuild(6, &[0, 1, 2]);
+        idx.rebuild(6, &[4, 2]);
+        assert_eq!(idx.get(0), None);
+        assert_eq!(idx.get(1), None);
+        assert_eq!(idx.get(4), Some(0));
+        assert_eq!(idx.get(2), Some(1));
+    }
+
+    #[test]
+    fn empty_index_finds_nothing() {
+        let idx = InverseIndex::new();
+        assert_eq!(idx.get(0), None);
+        let mut idx = InverseIndex::new();
+        idx.rebuild(4, &[]);
+        assert_eq!(idx.get(0), None);
+    }
+
+    #[test]
+    fn universe_can_grow_between_rounds() {
+        let mut idx = InverseIndex::new();
+        idx.rebuild(3, &[1]);
+        idx.rebuild(8, &[7, 1]);
+        assert_eq!(idx.get(7), Some(0));
+        assert_eq!(idx.get(1), Some(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "not in the current member set")]
+    fn compact_panics_on_absent_id() {
+        let mut idx = InverseIndex::new();
+        idx.rebuild(4, &[0, 1]);
+        idx.compact(3);
+    }
+
+    #[test]
+    fn matches_binary_search_inversion() {
+        // The contract with the drivers: for sorted member lists, `compact`
+        // agrees with the `binary_search` inversion it replaces.
+        let members: Vec<usize> = (0..200).filter(|&u| u % 3 != 1).collect();
+        let mut idx = InverseIndex::new();
+        idx.rebuild(200, &members);
+        for &u in &members {
+            assert_eq!(idx.compact(u), members.binary_search(&u).unwrap());
+        }
+    }
+}

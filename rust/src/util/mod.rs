@@ -1,9 +1,12 @@
 //! Cross-cutting substrates built from scratch for the offline environment:
-//! RNG, JSON, logging, statistics and a property-testing harness.
+//! RNG, JSON, logging, statistics, a property-testing harness, fork-join
+//! parallelism and scratch index maps.
 
+pub mod index;
 pub mod json;
 pub mod logging;
 pub mod matrix;
+pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,129 @@
+//! Fixed-pool fork-join parallelism (substrate — `rayon` is unavailable
+//! offline; see DESIGN.md §2).
+//!
+//! [`FixedPool::map`] evaluates a pure indexed function over `0..n` on a
+//! fixed number of worker threads and returns the results **in index order**.
+//! Work is split into contiguous index chunks, one per worker, and every
+//! result lands in its own pre-assigned slot — so the output is bit-identical
+//! for any thread count, including 1. That determinism contract is what lets
+//! the round engine parallelize pair evaluation without perturbing traces.
+//!
+//! Workers are scoped (fork-join): they are joined before `map` returns, may
+//! borrow from the caller's stack, and no thread outlives the call.
+
+use std::num::NonZeroUsize;
+
+/// A fork-join executor with a fixed worker count.
+#[derive(Clone, Copy, Debug)]
+pub struct FixedPool {
+    threads: usize,
+}
+
+impl FixedPool {
+    /// `threads = 0` means one worker per available core.
+    pub fn new(threads: usize) -> FixedPool {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism()
+                .map(NonZeroUsize::get)
+                .unwrap_or(1)
+        } else {
+            threads
+        };
+        FixedPool { threads }
+    }
+
+    /// Serial executor (one worker); `map` never spawns.
+    pub fn serial() -> FixedPool {
+        FixedPool { threads: 1 }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Evaluate `f(0), f(1), …, f(n-1)` across the pool and return the
+    /// results in index order. `f` must be pure for the determinism contract
+    /// to mean anything — it is called exactly once per index, from an
+    /// unspecified worker.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let workers = self.threads.min(n).max(1);
+        if workers == 1 {
+            return (0..n).map(f).collect();
+        }
+        let chunk = n.div_ceil(workers);
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            for (w, slots) in out.chunks_mut(chunk).enumerate() {
+                let f = &f;
+                let base = w * chunk;
+                scope.spawn(move || {
+                    for (k, slot) in slots.iter_mut().enumerate() {
+                        *slot = Some(f(base + k));
+                    }
+                });
+            }
+        });
+        out.into_iter()
+            .map(|v| v.expect("pool worker filled every slot"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_threads_resolves_to_cores() {
+        assert!(FixedPool::new(0).threads() >= 1);
+        assert_eq!(FixedPool::new(3).threads(), 3);
+        assert_eq!(FixedPool::serial().threads(), 1);
+    }
+
+    #[test]
+    fn map_preserves_index_order() {
+        for threads in [1, 2, 3, 8, 64] {
+            let pool = FixedPool::new(threads);
+            let out = pool.map(100, |i| i * i);
+            assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>(), "{threads}");
+        }
+    }
+
+    #[test]
+    fn map_is_identical_across_thread_counts() {
+        // The determinism contract: any pool shape reproduces the serial map
+        // exactly — including f64 results, bit for bit.
+        let serial = FixedPool::serial().map(257, |i| (i as f64).sqrt() * 1.7);
+        for threads in [2, 4, 7] {
+            let par = FixedPool::new(threads).map(257, |i| (i as f64).sqrt() * 1.7);
+            assert!(
+                serial.iter().zip(&par).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let pool = FixedPool::new(4);
+        assert_eq!(pool.map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(pool.map(1, |i| i + 1), vec![1]);
+        // More workers than items.
+        assert_eq!(pool.map(2, |i| i), vec![0, 1]);
+    }
+
+    #[test]
+    fn workers_actually_run_concurrently() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let seen = AtomicUsize::new(0);
+        FixedPool::new(4).map(64, |i| {
+            seen.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(seen.load(Ordering::Relaxed), 64);
+    }
+}

@@ -1,0 +1,244 @@
+//! Round-engine acceptance suite: the analytic kernels must match the DES
+//! oracle across randomized configurations for all four algorithms
+//! (`engine_matches_des`), and stable-scenario runs must be bit-identical
+//! across cache state and any thread count.
+
+use fedpairing::config::{
+    Algorithm, EngineConfig, ExperimentConfig, RoundBackend, ScenarioConfig, ScenarioKind,
+};
+use fedpairing::fleet::simulate_scenario;
+use fedpairing::sim::channel::Channel;
+use fedpairing::sim::engine::RoundEngine;
+use fedpairing::sim::geometry::place_uniform_disk;
+use fedpairing::sim::latency::{self, Fleet, Schedule};
+use fedpairing::sim::profile::ModelProfile;
+use fedpairing::util::proptest::{check, gen_u64};
+use fedpairing::util::rng::Rng;
+
+/// Relative closeness at the acceptance tolerance (≤ 1e-9).
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1e-30)
+}
+
+fn all_close(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(&x, &y)| close(x, y))
+}
+
+/// A fleet with heterogeneous frequencies, positions *and* shard sizes — so
+/// the two directions of a pair run different batch counts.
+fn random_fleet(rng: &mut Rng, n: usize) -> Fleet {
+    let radius_m = 20.0 + rng.f64() * 80.0;
+    Fleet {
+        positions: place_uniform_disk(rng, n, radius_m),
+        freqs_hz: (0..n).map(|_| rng.range_f64(0.05e9, 2.5e9)).collect(),
+        n_samples: (0..n).map(|_| 16 + rng.below(300)).collect(),
+    }
+}
+
+fn random_setup(seed: u64) -> (Fleet, ModelProfile, Schedule, Channel, ExperimentConfig) {
+    let mut rng = Rng::new(seed);
+    let n = 2 + rng.below(14);
+    let fleet = random_fleet(&mut rng, n);
+    let profile = if rng.below(2) == 0 {
+        ModelProfile::resnet10_cifar()
+    } else {
+        ModelProfile::resnet18_cifar()
+    };
+    let sched = Schedule {
+        batch_size: [8, 16, 32, 64][rng.below(4)],
+        epochs: 1 + rng.below(3),
+    };
+    let mut cfg = ExperimentConfig::default();
+    // Jitter the reference gain so the randomized `(f_i, f_j, batches, rate)`
+    // space also sweeps the comm/compute balance.
+    cfg.channel.ref_gain *= 10f64.powf(rng.range_f64(-1.0, 1.0));
+    let channel = Channel::new(cfg.channel);
+    (fleet, profile, sched, channel, cfg)
+}
+
+/// Shuffled near-perfect matching over the fleet (odd leftover goes solo).
+fn random_matching(rng: &mut Rng, n: usize) -> (Vec<(usize, usize)>, Vec<usize>) {
+    let mut ids: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut ids);
+    let mut chunks = ids.chunks_exact(2);
+    let pairs = chunks.by_ref().map(|c| (c[0], c[1])).collect();
+    (pairs, chunks.remainder().to_vec())
+}
+
+fn analytic(threads: usize) -> RoundEngine {
+    RoundEngine::new(&EngineConfig {
+        backend: RoundBackend::Analytic,
+        threads,
+        flow_diagnostics: true,
+    })
+}
+
+#[test]
+fn engine_matches_des_fedpairing() {
+    check(60, gen_u64(0, u64::MAX / 2), |&seed| {
+        let (fleet, profile, sched, channel, cfg) = random_setup(seed);
+        let (pairs, solos) = random_matching(&mut Rng::new(seed ^ 0xABCD), fleet.n());
+        let mut eng = analytic(1);
+        for include_upload in [false, true] {
+            let a = eng.fedpairing_round(
+                &fleet, &pairs, &solos, &profile, &sched, &channel, &cfg.compute, include_upload,
+            );
+            let d = latency::fedpairing_round_with_solos(
+                &fleet, &pairs, &solos, &profile, &sched, &channel, &cfg.compute, include_upload,
+            );
+            if !(close(a.total_s, d.total_s)
+                && close(a.max_cpu_busy_s, d.max_cpu_busy_s)
+                && close(a.max_link_busy_s, d.max_link_busy_s)
+                && all_close(&a.flow_finish_s, &d.flow_finish_s))
+            {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn engine_matches_des_fl() {
+    check(30, gen_u64(0, u64::MAX / 2), |&seed| {
+        let (fleet, profile, sched, channel, cfg) = random_setup(seed);
+        let mut eng = analytic(1);
+        let a = eng.fl_round(&fleet, &profile, &sched, &channel, &cfg.compute, true);
+        let d = latency::fl_round(&fleet, &profile, &sched, &channel, &cfg.compute, true);
+        close(a.total_s, d.total_s) && all_close(&a.flow_finish_s, &d.flow_finish_s)
+    });
+}
+
+#[test]
+fn engine_matches_des_sl() {
+    check(40, gen_u64(0, u64::MAX / 2), |&seed| {
+        let (fleet, profile, sched, channel, cfg) = random_setup(seed);
+        let mut rng = Rng::new(seed ^ 0x51);
+        let cut = 1 + rng.below(profile.w() - 1);
+        let server = rng.range_f64(5e9, 200e9);
+        let mut eng = analytic(1);
+        let a = eng.sl_round(&fleet, &profile, &sched, &channel, &cfg.compute, cut, server);
+        let d = latency::sl_round(&fleet, &profile, &sched, &channel, &cfg.compute, cut, server);
+        close(a.total_s, d.total_s)
+            && close(a.max_cpu_busy_s, d.max_cpu_busy_s)
+            && close(a.max_link_busy_s, d.max_link_busy_s)
+            && all_close(&a.flow_finish_s, &d.flow_finish_s)
+    });
+}
+
+#[test]
+fn engine_matches_des_splitfed() {
+    check(40, gen_u64(0, u64::MAX / 2), |&seed| {
+        let (fleet, profile, sched, channel, cfg) = random_setup(seed);
+        let mut rng = Rng::new(seed ^ 0x5F);
+        let cut = 1 + rng.below(profile.w() - 1);
+        let server = rng.range_f64(5e9, 200e9);
+        let mut eng = analytic(1);
+        for include_upload in [false, true] {
+            let a = eng.splitfed_round(
+                &fleet, &profile, &sched, &channel, &cfg.compute, cut, server, include_upload,
+            );
+            let d = latency::splitfed_round(
+                &fleet, &profile, &sched, &channel, &cfg.compute, cut, server, include_upload,
+            );
+            if !(close(a.total_s, d.total_s)
+                && close(a.max_cpu_busy_s, d.max_cpu_busy_s)
+                && close(a.max_link_busy_s, d.max_link_busy_s)
+                && all_close(&a.flow_finish_s, &d.flow_finish_s))
+            {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+fn scenario_cfg(kind: ScenarioKind, algo: Algorithm, n: usize) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.n_clients = n;
+    c.rounds = if n > 50 { 8 } else { 20 };
+    c.samples_per_client = 200;
+    c.algorithm = algo;
+    c.scenario = ScenarioConfig::preset(kind);
+    c
+}
+
+fn round_times(cfg: &ExperimentConfig) -> Vec<f64> {
+    simulate_scenario(cfg)
+        .unwrap()
+        .result
+        .rounds
+        .iter()
+        .map(|r| r.sim_round_s)
+        .collect()
+}
+
+/// The tentpole bit-identity contract: with the cache warm (stable scenario,
+/// rounds 2.. are 100 % hits) and for ANY `--threads` value, the analytic
+/// engine reproduces the single-thread trace exactly — bit for bit, not
+/// within a tolerance.
+#[test]
+fn stable_scenario_bit_identity_across_threads_and_cache() {
+    // n = 170 → 85 pairs, past the engine's serial-evaluation threshold, so
+    // round 1 genuinely runs on the pool.
+    let base = scenario_cfg(ScenarioKind::Stable, Algorithm::FedPairing, 170);
+    let reference = round_times(&base);
+    // Cache proof: every stable round replays round 1's (computed) value.
+    assert!(reference.iter().all(|t| t.to_bits() == reference[0].to_bits()));
+    for threads in [2, 3, 8, 32] {
+        let mut c = base.clone();
+        c.engine.threads = threads;
+        let times = round_times(&c);
+        assert!(
+            times.iter().zip(&reference).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "threads={threads} diverged from the single-thread trace"
+        );
+    }
+}
+
+/// Same contract under churn + fading: per-round partial cache hits and
+/// parallel misses still reproduce the single-thread trace exactly.
+#[test]
+fn lossy_radio_bit_identity_across_threads() {
+    let base = scenario_cfg(ScenarioKind::LossyRadio, Algorithm::FedPairing, 170);
+    let reference = round_times(&base);
+    assert!(reference.windows(2).any(|w| w[0] != w[1]), "fading never moved round times");
+    for threads in [2, 8] {
+        let mut c = base.clone();
+        c.engine.threads = threads;
+        assert_eq!(round_times(&c), reference, "threads={threads}");
+    }
+}
+
+/// The analytic engine is a drop-in for the DES across the whole scenario
+/// pipeline, for all four algorithms.
+#[test]
+fn scenario_runs_match_des_backend_for_all_algorithms() {
+    for algo in [
+        Algorithm::FedPairing,
+        Algorithm::VanillaFL,
+        Algorithm::VanillaSL,
+        Algorithm::SplitFed,
+    ] {
+        let analytic_cfg = scenario_cfg(ScenarioKind::LossyRadio, algo, 14);
+        let mut des_cfg = analytic_cfg.clone();
+        des_cfg.engine.backend = RoundBackend::Des;
+        let a = round_times(&analytic_cfg);
+        let d = round_times(&des_cfg);
+        assert!(all_close(&a, &d), "{algo:?}: analytic {a:?} != des {d:?}");
+    }
+}
+
+/// Metro-sized smoke (CI `scale` job runs this in release): a sparse-backend
+/// churn scenario through the engine stays deterministic and fast enough to
+/// run 5 rounds at n = 5 000 in a test.
+#[test]
+fn scale_metro_slice_runs_through_the_engine() {
+    let mut cfg = ExperimentConfig::preset("metro-scale").unwrap();
+    cfg.n_clients = if cfg!(debug_assertions) { 2_000 } else { 5_000 };
+    cfg.rounds = 5;
+    let a = round_times(&cfg);
+    let b = round_times(&cfg);
+    assert_eq!(a, b, "metro slice not deterministic");
+    assert!(a.iter().all(|&t| t > 0.0));
+}
