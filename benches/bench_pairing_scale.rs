@@ -32,7 +32,7 @@ fn churn_round_trip(cfg: &ExperimentConfig) -> usize {
     for round in 1..=2 {
         let ev = dynamics.step(round);
         let channel = dynamics.channel();
-        maintain_matching(&mut matching, &dynamics, &ev, &channel, cfg, &mut pairing_rng);
+        maintain_matching(&mut matching, &dynamics, &ev, &channel, cfg, None, &mut pairing_rng);
     }
     matching.expect("matching").pairs.len()
 }

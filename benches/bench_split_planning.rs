@@ -1,0 +1,195 @@
+//! Split-planning bench: cost-aware cut optimization vs the paper's
+//! proportional rule, on the metro-scale preset at n ∈ {1k, 10k, 50k}.
+//!
+//! For each fleet size the *same* sparse greedy matching is evaluated by the
+//! round engine under the `paper`, `balanced` and `optimal` split policies
+//! across per-round shadowing fades (honest memo-cache workload), reporting
+//! the mean simulated round latency per policy and the achieved reduction.
+//! A separate pass times raw `optimal` planner throughput (unmemoized
+//! argmin searches per second). Emits `BENCH_split.json` for the CI `scale`
+//! job, which tracks the acceptance criteria: `optimal` is never slower
+//! than `paper`, and on the metro-scale preset it shows a measured
+//! mean-round-latency reduction.
+
+#[path = "common.rs"]
+mod common;
+
+use fedpairing::config::{ExperimentConfig, SplitConfig, SplitPolicy};
+use fedpairing::pairing::{match_candidates, EdgeWeightSpec, SparseCandidateGraph};
+use fedpairing::sim::channel::Channel;
+use fedpairing::sim::engine::RoundEngine;
+use fedpairing::sim::latency::{Fleet, Schedule};
+use fedpairing::sim::profile::ModelProfile;
+use fedpairing::split::{plan, PairContext};
+use fedpairing::util::json::{Json, JsonObj};
+use fedpairing::util::rng::Rng;
+use std::time::Instant;
+
+/// Per-round channels under metro-scale block fading (2 dB log-normal),
+/// replayed identically for every policy.
+fn faded_channels(cfg: &ExperimentConfig, rounds: usize) -> Vec<Channel> {
+    let mut rng = Rng::with_stream(cfg.seed, 0xFADE);
+    (0..rounds)
+        .map(|_| {
+            let mut ch = cfg.channel;
+            ch.ref_gain *= 10f64.powf(rng.normal_ms(0.0, 2.0) / 10.0);
+            Channel::new(ch)
+        })
+        .collect()
+}
+
+struct Case {
+    n: usize,
+    pairs: usize,
+    mean_round_s: [f64; 3], // paper, balanced, optimal
+    reduction_pct: f64,     // optimal vs paper
+    plans_per_s: f64,       // raw optimal argmin throughput
+}
+
+fn run_case(n: usize, rounds: usize) -> Case {
+    let mut cfg = ExperimentConfig::preset("metro-scale").expect("metro-scale preset");
+    cfg.n_clients = n;
+    cfg.seed = 17;
+    let fleet = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+    let channel = Channel::new(cfg.channel);
+    // One shared matching off the sparse eq. (5) graph, so the policy
+    // comparison isolates the cut decision (co-design benched separately by
+    // the CLI paths; here paper-vs-optimal must be 1:1 on identical pairs).
+    let members: Vec<usize> = (0..n).collect();
+    let graph = SparseCandidateGraph::build(
+        &fleet,
+        &channel,
+        EdgeWeightSpec::Eq5 {
+            alpha: cfg.alpha,
+            beta: cfg.beta,
+        },
+        cfg.backend.k_near,
+        cfg.backend.k_freq,
+    );
+    let matching = match_candidates(&graph, &members);
+    let profile = ModelProfile::resnet18_cifar();
+    let sched = Schedule {
+        batch_size: 32,
+        epochs: cfg.local_epochs,
+    };
+    let channels = faded_channels(&cfg, rounds);
+
+    let policies = [SplitPolicy::Paper, SplitPolicy::Balanced, SplitPolicy::Optimal];
+    let mut mean_round_s = [0.0f64; 3];
+    for (slot, policy) in policies.into_iter().enumerate() {
+        let split = SplitConfig {
+            policy,
+            ..SplitConfig::default()
+        };
+        let mut engine = RoundEngine::new(&cfg.engine).with_split(split);
+        let mut acc = 0.0f64;
+        for ch in &channels {
+            acc += engine
+                .fedpairing_round(
+                    &fleet,
+                    &matching.pairs,
+                    &matching.solos,
+                    &profile,
+                    &sched,
+                    ch,
+                    &cfg.compute,
+                    true,
+                )
+                .total_s;
+        }
+        mean_round_s[slot] = acc / rounds as f64;
+    }
+    assert!(
+        mean_round_s[2] <= mean_round_s[0] + 1e-9,
+        "optimal mean {} slower than paper {}",
+        mean_round_s[2],
+        mean_round_s[0]
+    );
+
+    // Raw planner throughput: unmemoized optimal argmin per pair (the cost a
+    // cache miss pays on top of the single paper-cut kernel evaluation).
+    let split = SplitConfig {
+        policy: SplitPolicy::Optimal,
+        ..SplitConfig::default()
+    };
+    let probe: Vec<(usize, usize)> = matching.pairs.iter().copied().take(4096).collect();
+    let t = Instant::now();
+    let mut acc = 0.0f64;
+    for &(i, j) in &probe {
+        let d = plan(
+            &split,
+            &PairContext {
+                profile: &profile,
+                sched: &sched,
+                comp: &cfg.compute,
+                f_i_hz: fleet.freqs_hz[i],
+                f_j_hz: fleet.freqs_hz[j],
+                n_i: fleet.n_samples[i],
+                n_j: fleet.n_samples[j],
+                rate_bps: channel.rate(&fleet.positions[i], &fleet.positions[j]),
+            },
+        );
+        acc += d.predicted_round_s;
+    }
+    common::black_box(acc);
+    let plans_per_s = probe.len() as f64 / t.elapsed().as_secs_f64();
+
+    Case {
+        n,
+        pairs: matching.pairs.len(),
+        mean_round_s,
+        reduction_pct: 100.0 * (1.0 - mean_round_s[2] / mean_round_s[0]),
+        plans_per_s,
+    }
+}
+
+fn main() {
+    println!("== split planning: paper vs balanced vs optimal (metro-scale fading) ==");
+    println!(
+        "  {:>7} {:>9} {:>12} {:>12} {:>12} {:>9} {:>12}",
+        "n", "pairs", "paper s", "balanced s", "optimal s", "gain%", "plans/s"
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut metro_reduction = 0.0;
+    for (n, rounds) in [(1_000, 40), (10_000, 20), (50_000, 10)] {
+        let case = run_case(n, rounds);
+        println!(
+            "  {:>7} {:>9} {:>12.1} {:>12.1} {:>12.1} {:>8.2}% {:>12.0}",
+            case.n,
+            case.pairs,
+            case.mean_round_s[0],
+            case.mean_round_s[1],
+            case.mean_round_s[2],
+            case.reduction_pct,
+            case.plans_per_s
+        );
+        if n == 50_000 {
+            metro_reduction = case.reduction_pct;
+        }
+        let mut row = JsonObj::new();
+        row.insert("n", Json::num(case.n as f64));
+        row.insert("pairs", Json::num(case.pairs as f64));
+        row.insert("paper_mean_round_s", Json::num(case.mean_round_s[0]));
+        row.insert("balanced_mean_round_s", Json::num(case.mean_round_s[1]));
+        row.insert("optimal_mean_round_s", Json::num(case.mean_round_s[2]));
+        row.insert("optimal_reduction_pct", Json::num(case.reduction_pct));
+        row.insert("optimal_plans_per_s", Json::num(case.plans_per_s));
+        rows.push(Json::Obj(row));
+    }
+    common::check_shape(
+        "metro (n=50k): optimal strictly reduces the mean round vs paper",
+        metro_reduction > 0.0,
+    );
+
+    let mut out = JsonObj::new();
+    out.insert("bench", Json::str("split_planning"));
+    out.insert(
+        "workload",
+        Json::str("fedpairing metro-scale fading, shared sparse matching, per-policy engines"),
+    );
+    out.insert("metro_reduction_pct_50k", Json::num(metro_reduction));
+    out.insert("results", Json::Arr(rows));
+    let path = "BENCH_split.json";
+    std::fs::write(path, Json::Obj(out).to_string_pretty(2)).expect("write bench json");
+    println!("wrote {path}");
+}

@@ -242,6 +242,136 @@ impl Default for EngineConfig {
     }
 }
 
+/// Which split-planning policy decides the per-pair model cut (DESIGN.md §7).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SplitPolicy {
+    /// The paper's proportional rule `L_i = ⌊f_i/(f_i+f_j)·W⌋` — layer
+    /// counts only, reproduced bit-for-bit. The default.
+    Paper,
+    /// Equalize per-side training FLOP-time using the real `ModelProfile`
+    /// (layers cost what they cost, not `1/W` each).
+    Balanced,
+    /// Exact argmin of the pair's analytic training makespan over every
+    /// feasible cut — compute *and* activation traffic priced by the same
+    /// kernel the round engine charges.
+    Optimal,
+}
+
+impl SplitPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "paper" | "proportional" => Some(SplitPolicy::Paper),
+            "balanced" | "flops" => Some(SplitPolicy::Balanced),
+            "optimal" | "argmin" => Some(SplitPolicy::Optimal),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SplitPolicy::Paper => "paper",
+            SplitPolicy::Balanced => "balanced",
+            SplitPolicy::Optimal => "optimal",
+        }
+    }
+}
+
+impl fmt::Display for SplitPolicy {
+    fmt_display_via_name!();
+}
+
+/// Split-planning knobs: policy, search bounds and pairing co-design.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SplitConfig {
+    pub policy: SplitPolicy,
+    /// Privacy/feasibility floor: `Balanced`/`Optimal` keep at least this
+    /// many layers on *each* side of the cut (the paper requires the data
+    /// owner to retain the input layer, hence the default of 1). `Paper`
+    /// ignores it — its rule is reproduced bit-for-bit.
+    pub min_layers: usize,
+    /// Co-design pairing with splitting: when the policy is not `Paper`, the
+    /// greedy/exact pairing weights become the planner's predicted pair
+    /// latency instead of the eq. (5) proxy.
+    pub co_design: bool,
+}
+
+impl SplitConfig {
+    /// Validate against the latency model's unit count `W`.
+    pub fn validate(&self, w: usize) -> Result<(), ConfigError> {
+        if self.min_layers == 0 {
+            bail!("split min_layers must be >= 1 (the input layer stays with the data owner)");
+        }
+        if 2 * self.min_layers > w {
+            bail!(
+                "split min_layers = {} leaves no feasible cut for W = {w}",
+                self.min_layers
+            );
+        }
+        Ok(())
+    }
+}
+
+impl Default for SplitConfig {
+    fn default() -> Self {
+        SplitConfig {
+            policy: SplitPolicy::Paper,
+            min_layers: 1,
+            co_design: true,
+        }
+    }
+}
+
+/// Which model cost profile drives the latency simulation and cut-knob
+/// validation (`sim::profile` holds the actual tables).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelPreset {
+    /// CIFAR-style ResNet-18 (W = 10) — the paper's timing model. Default.
+    Resnet18,
+    /// CIFAR-style ResNet-34 (W = 18) — deeper cut-search space.
+    Resnet34,
+    /// CIFAR-style ResNet-10 (W = 6).
+    Resnet10,
+    /// The AOT-exported residual MLP (W = 8).
+    Mlp,
+}
+
+impl ModelPreset {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "resnet18" | "resnet-18" => Some(ModelPreset::Resnet18),
+            "resnet34" | "resnet-34" => Some(ModelPreset::Resnet34),
+            "resnet10" | "resnet-10" => Some(ModelPreset::Resnet10),
+            "mlp" => Some(ModelPreset::Mlp),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelPreset::Resnet18 => "resnet18",
+            ModelPreset::Resnet34 => "resnet34",
+            ModelPreset::Resnet10 => "resnet10",
+            ModelPreset::Mlp => "mlp",
+        }
+    }
+
+    /// Splittable units `W` of the preset's profile — pinned against
+    /// `ModelProfile::from_preset` by a test, so config validation can bound
+    /// the cut knobs without constructing the profile.
+    pub const fn w(&self) -> usize {
+        match self {
+            ModelPreset::Resnet18 => 10,
+            ModelPreset::Resnet34 => 18,
+            ModelPreset::Resnet10 => 6,
+            ModelPreset::Mlp => 8,
+        }
+    }
+}
+
+impl fmt::Display for ModelPreset {
+    fmt_display_via_name!();
+}
+
 /// Local-data distribution across clients (paper Sec. IV-A).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum DataDistribution {
@@ -526,6 +656,12 @@ pub struct ExperimentConfig {
     /// Round-time evaluation engine (analytic kernels vs the DES oracle,
     /// worker threads, flow diagnostics).
     pub engine: EngineConfig,
+    /// Split-planning subsystem: per-pair cut policy, search floor, pairing
+    /// co-design (DESIGN.md §7). Default `paper` reproduces `split_lengths`.
+    pub split: SplitConfig,
+    /// Model cost profile for the engine-free latency paths (`fedpairing
+    /// churn`, `simulate_scenario`, planner) and cut-knob validation.
+    pub model: ModelPreset,
 
     // fleet
     pub n_clients: usize,
@@ -580,6 +716,8 @@ impl Default for ExperimentConfig {
             pairing: PairingStrategy::Greedy,
             backend: PairingBackendConfig::default(),
             engine: EngineConfig::default(),
+            split: SplitConfig::default(),
+            model: ModelPreset::Resnet18,
             n_clients: 20,
             area_radius_m: 50.0,
             channel: ChannelConfig::default(),
@@ -643,6 +781,22 @@ impl ExperimentConfig {
         self.scenario.validate()?;
         self.backend.validate()?;
         self.engine.validate()?;
+        self.split.validate(self.model.w())?;
+        // Cut knobs are bounded here, against the configured model profile,
+        // instead of being silently clamped deep inside the drivers.
+        let w = self.model.w();
+        for (name, cut) in [
+            ("sl_cut_layer", self.sl_cut_layer),
+            ("splitfed_cut_layer", self.splitfed_cut_layer),
+        ] {
+            if cut == 0 || cut >= w {
+                bail!(
+                    "{name} = {cut} out of range [1, {}] for model {} (W = {w})",
+                    w - 1,
+                    self.model
+                );
+            }
+        }
         // A sparse backend must generate candidates from the source the
         // configured objective actually uses, or the matching silently
         // degenerates to id-order completion pairs.
@@ -748,6 +902,19 @@ impl ExperimentConfig {
                 c.set_scenario(ScenarioConfig::preset(ScenarioKind::MetroScale));
                 Some(c)
             }
+            // Metro fleet over the deeper ResNet-34 profile (W = 18): the
+            // cut-search space is non-trivial and bandwidth/depth effects
+            // dominate — the split planner's stress preset.
+            "metro-deep" => {
+                c.n_clients = 50_000;
+                c.rounds = 5;
+                c.samples_per_client = 64;
+                c.test_samples = 256;
+                c.eval_every = 0;
+                c.model = ModelPreset::Resnet34;
+                c.set_scenario(ScenarioConfig::preset(ScenarioKind::MetroScale));
+                Some(c)
+            }
             _ => None,
         }
     }
@@ -772,6 +939,12 @@ impl ExperimentConfig {
         en.insert("threads", Json::num(self.engine.threads as f64));
         en.insert("flow_diagnostics", Json::Bool(self.engine.flow_diagnostics));
         o.insert("engine", Json::Obj(en));
+        let mut sp = JsonObj::new();
+        sp.insert("policy", Json::str(self.split.policy.name()));
+        sp.insert("min_layers", Json::num(self.split.min_layers as f64));
+        sp.insert("co_design", Json::Bool(self.split.co_design));
+        o.insert("split", Json::Obj(sp));
+        o.insert("model", Json::str(self.model.name()));
         o.insert("n_clients", Json::num(self.n_clients as f64));
         o.insert("area_radius_m", Json::num(self.area_radius_m));
         let mut ch = JsonObj::new();
@@ -900,6 +1073,29 @@ impl ExperimentConfig {
                     .ok_or_else(|| ConfigError("flow_diagnostics must be a bool".into()))?;
                 flow_diag_pinned = true;
             }
+        }
+        if let Some(sp) = obj.get("split").and_then(|v| v.as_obj()) {
+            if let Some(s) = sp.get("policy").and_then(|v| v.as_str()) {
+                c.split.policy = SplitPolicy::parse(s)
+                    .ok_or_else(|| ConfigError(format!("unknown split policy {s:?}")))?;
+            }
+            if let Some(v) = sp.get("min_layers") {
+                c.split.min_layers = v.as_usize().ok_or_else(|| {
+                    ConfigError("split min_layers must be a non-negative integer".into())
+                })?;
+            }
+            if let Some(v) = sp.get("co_design") {
+                c.split.co_design = v
+                    .as_bool()
+                    .ok_or_else(|| ConfigError("split co_design must be a bool".into()))?;
+            }
+        }
+        if let Some(v) = obj.get("model") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| ConfigError("model must be a string".into()))?;
+            c.model = ModelPreset::parse(s)
+                .ok_or_else(|| ConfigError(format!("unknown model preset {s:?}")))?;
         }
         c.n_clients = get_usize("n_clients", c.n_clients)?;
         c.area_radius_m = get_f64("area_radius_m", c.area_radius_m)?;
@@ -1131,11 +1327,101 @@ mod tests {
 
     #[test]
     fn presets_exist_and_validate() {
-        for name in ["fig2", "fig3", "table1", "table2", "quick", "metro-scale"] {
+        for name in [
+            "fig2",
+            "fig3",
+            "table1",
+            "table2",
+            "quick",
+            "metro-scale",
+            "metro-deep",
+        ] {
             let c = ExperimentConfig::preset(name).unwrap_or_else(|| panic!("{name}"));
             c.validate().unwrap();
         }
         assert!(ExperimentConfig::preset("nope").is_none());
+    }
+
+    #[test]
+    fn metro_deep_preset_uses_resnet34() {
+        let c = ExperimentConfig::preset("metro-deep").unwrap();
+        assert_eq!(c.model, ModelPreset::Resnet34);
+        assert_eq!(c.model.w(), 18);
+        assert_eq!(c.scenario.kind, ScenarioKind::MetroScale);
+        assert!(c.backend.sparse_for(c.n_clients));
+    }
+
+    #[test]
+    fn split_config_parses_roundtrips_and_validates() {
+        assert_eq!(SplitPolicy::parse("paper"), Some(SplitPolicy::Paper));
+        assert_eq!(SplitPolicy::parse("OPTIMAL"), Some(SplitPolicy::Optimal));
+        assert_eq!(SplitPolicy::parse("balanced"), Some(SplitPolicy::Balanced));
+        assert_eq!(SplitPolicy::parse("quantum"), None);
+        let d = ExperimentConfig::default();
+        assert_eq!(d.split.policy, SplitPolicy::Paper);
+        assert_eq!(d.split.min_layers, 1);
+        assert!(d.split.co_design);
+        // JSON round-trip with overrides.
+        let mut c = ExperimentConfig::default();
+        c.split = SplitConfig {
+            policy: SplitPolicy::Optimal,
+            min_layers: 2,
+            co_design: false,
+        };
+        c.model = ModelPreset::Resnet34;
+        let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.split, c.split);
+        assert_eq!(back.model, ModelPreset::Resnet34);
+        // Partial override keeps the remaining defaults.
+        let j = Json::parse(r#"{"split": {"policy": "balanced"}}"#).unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.split.policy, SplitPolicy::Balanced);
+        assert_eq!(c.split.min_layers, 1);
+        // Bad policy / infeasible floor rejected.
+        let j = Json::parse(r#"{"split": {"policy": "quantum"}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let mut c = ExperimentConfig::default();
+        c.split.min_layers = 0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.split.min_layers = 6; // 2·6 > W = 10
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn cut_layers_validated_against_model_w() {
+        // Out-of-range cuts error at parse time instead of being clamped
+        // deep in the drivers.
+        let mut c = ExperimentConfig::default();
+        c.sl_cut_layer = 0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.splitfed_cut_layer = 10; // == W for resnet18
+        assert!(c.validate().is_err());
+        // The same cut can be valid for a deeper model…
+        let mut c = ExperimentConfig::default();
+        c.splitfed_cut_layer = 9;
+        assert!(c.validate().is_ok());
+        c.model = ModelPreset::Resnet10; // W = 6
+        assert!(c.validate().is_err());
+        // …and JSON loading reports it as a config error.
+        let j = Json::parse(r#"{"sl_cut_layer": 99}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn model_presets_parse_and_name() {
+        for (s, p, w) in [
+            ("resnet18", ModelPreset::Resnet18, 10),
+            ("resnet34", ModelPreset::Resnet34, 18),
+            ("resnet10", ModelPreset::Resnet10, 6),
+            ("mlp", ModelPreset::Mlp, 8),
+        ] {
+            assert_eq!(ModelPreset::parse(s), Some(p));
+            assert_eq!(p.name(), s);
+            assert_eq!(p.w(), w);
+        }
+        assert_eq!(ModelPreset::parse("vgg"), None);
     }
 
     #[test]

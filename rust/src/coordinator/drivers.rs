@@ -13,7 +13,7 @@
 //! unpaired (solo) client trains the full model locally. Under the default
 //! `stable` scenario all of this reduces exactly to the paper's static loops.
 
-use crate::config::{Algorithm, ExperimentConfig};
+use crate::config::{Algorithm, ExperimentConfig, SplitPolicy};
 use crate::coordinator::metrics::{RoundRecord, RunResult};
 use crate::coordinator::split::train_pair;
 use crate::data::loader::{eval_batches, Batch, Loader};
@@ -27,6 +27,7 @@ use crate::sim::channel::Channel;
 use crate::sim::compute::{aggregation_weights, split_lengths};
 use crate::sim::engine::RoundEngine;
 use crate::sim::latency::{Fleet, FleetView, Schedule};
+use crate::split::SplitCostModel;
 use crate::util::index::InverseIndex;
 use crate::log_debug;
 use anyhow::{Context, Result};
@@ -91,7 +92,7 @@ impl Experiment {
         let universe = FleetDynamics::new(&cfg, fleet.clone()).universe().clone();
         let weights = aggregation_weights(&universe.resources());
         let test = eval_batches(&gen.test_set(cfg.test_samples), engine.meta().eval_batch);
-        let round_engine = RoundEngine::new(&cfg.engine);
+        let round_engine = RoundEngine::new(&cfg.engine).with_split(cfg.split);
         Ok(Experiment {
             cfg,
             engine,
@@ -172,6 +173,21 @@ impl Experiment {
         let w = self.engine.meta().layers;
         let profile = self.engine.meta().profile();
         let sched = self.schedule();
+        // Config validation bounded the split floor against the *configured*
+        // model profile; the loaded artifacts may be shallower, so re-check
+        // here (the cut analogue lives in `checked_cut`).
+        anyhow::ensure!(
+            2 * self.cfg.split.min_layers <= w,
+            "split min_layers = {} leaves no feasible cut for the loaded artifacts (W = {w})",
+            self.cfg.split.min_layers
+        );
+        // Split planner (DESIGN.md §7): under a non-paper policy the trained
+        // cut comes from the same memoized planner the latency engine
+        // charges, and — with co-design on — Greedy/Exact pairing weights
+        // become the planner's predicted pair latency.
+        let planner = (self.cfg.split.policy != SplitPolicy::Paper)
+            .then(|| SplitCostModel::new(profile.clone(), sched, self.cfg.compute, self.cfg.split));
+        let cost = planner.as_ref().filter(|_| self.cfg.split.co_design);
         let mut pairing_rng = crate::util::rng::Rng::new(self.cfg.seed ^ 0x9A1F);
         // Initialization phase (paper Sec. II-A.1) happens lazily inside
         // `maintain_matching` on round 1; churn later repairs the matching
@@ -195,6 +211,7 @@ impl Experiment {
                 &ev,
                 &channel,
                 &self.cfg,
+                cost,
                 &mut pairing_rng,
             );
             let m = matching.as_ref().expect("matching initialized");
@@ -212,19 +229,17 @@ impl Experiment {
             );
             csolos.clear();
             csolos.extend(eff.solos.iter().map(|&s| inv.compact(s)));
-            let round_time = self
-                .round_engine
-                .fedpairing_round(
-                    &view,
-                    &cpairs,
-                    &csolos,
-                    &profile,
-                    &sched,
-                    &channel,
-                    &self.cfg.compute,
-                    true,
-                )
-                .total_s;
+            let rt = self.round_engine.fedpairing_round(
+                &view,
+                &cpairs,
+                &csolos,
+                &profile,
+                &sched,
+                &channel,
+                &self.cfg.compute,
+                true,
+            );
+            let (round_time, mean_cut) = (rt.total_s, rt.mean_cut);
             // Participants this round (pairs + solos) and their weights.
             let participants: Vec<usize> = eff
                 .pairs
@@ -239,10 +254,27 @@ impl Experiment {
             let mut agg_weights: Vec<f64> = Vec::with_capacity(participants.len());
             let mut loss_sum = 0.0;
             let mut steps = 0usize;
-            let uni_freqs = &dynamics.universe().freqs_hz;
+            let uni = dynamics.universe();
             for &(i, j) in &eff.pairs {
-                // Split on *current* (straggle-adjusted) frequencies.
-                let (l_i, l_j) = split_lengths(uni_freqs[i], uni_freqs[j], w);
+                // Split on *current* (straggle-adjusted) frequencies and
+                // link rates, through the same planner the latency engine
+                // charges. Non-paper policies go through the memoized model
+                // (stable fleets pay each pair's search once); the paper
+                // default is the O(1) rule, exactly as before.
+                let l_i = match &planner {
+                    Some(m) => {
+                        m.decide_raw(
+                            uni.freqs_hz[i],
+                            uni.freqs_hz[j],
+                            uni.n_samples[i],
+                            uni.n_samples[j],
+                            channel.rate(&uni.positions[i], &uni.positions[j]),
+                        )
+                        .cut
+                    }
+                    None => split_lengths(uni.freqs_hz[i], uni.freqs_hz[j], w).0,
+                };
+                let l_j = w - l_i;
                 // Normalized data weights â_i = N·a_i over this round's
                 // participants (≡ 1 for equal shards). The paper's literal
                 // eq.(1) scales local grads by a_i ≈ 1/N *and* averages
@@ -312,6 +344,7 @@ impl Experiment {
                 round_time,
                 sim_total,
                 ev.n_alive,
+                mean_cut,
             )?);
         }
         Ok(records)
@@ -349,10 +382,10 @@ impl Experiment {
             let channel = dynamics.channel();
             let members = dynamics.present_members();
             let view = FleetView::new(dynamics.universe(), members);
-            let round_time = self
+            let rt = self
                 .round_engine
-                .fl_round(&view, &profile, &sched, &channel, &self.cfg.compute, true)
-                .total_s;
+                .fl_round(&view, &profile, &sched, &channel, &self.cfg.compute, true);
+            let (round_time, mean_cut) = (rt.total_s, rt.mean_cut);
             let mut locals: Vec<Params> = Vec::with_capacity(members.len());
             let mut loss_sum = 0.0;
             let mut steps = 0usize;
@@ -372,6 +405,7 @@ impl Experiment {
                 round_time,
                 sim_total,
                 ev.n_alive,
+                mean_cut,
             )?);
         }
         Ok(records)
@@ -382,7 +416,7 @@ impl Experiment {
     // ------------------------------------------------------------------
 
     fn run_sl(&mut self, dynamics: &mut FleetDynamics) -> Result<Vec<RoundRecord>> {
-        let cut = self.cfg.sl_cut_layer.clamp(1, self.engine.meta().layers - 1);
+        let cut = checked_cut("sl_cut_layer", self.cfg.sl_cut_layer, self.engine.meta().layers)?;
         let profile = self.engine.meta().profile();
         let sched = self.schedule();
         let global = self.engine.init_params(self.cfg.seed as u32)?;
@@ -406,6 +440,7 @@ impl Experiment {
                     self.cfg.compute.server_freq_ghz * 1e9,
                 )
                 .total_s;
+            let mean_cut = cut as f64;
             let mut loss_sum = 0.0;
             let mut steps = 0usize;
             // Present clients take sessions sequentially; the client-side
@@ -426,6 +461,7 @@ impl Experiment {
                 round_time,
                 sim_total,
                 ev.n_alive,
+                mean_cut,
             )?);
         }
         Ok(records)
@@ -436,10 +472,11 @@ impl Experiment {
     // ------------------------------------------------------------------
 
     fn run_splitfed(&mut self, dynamics: &mut FleetDynamics) -> Result<Vec<RoundRecord>> {
-        let cut = self
-            .cfg
-            .splitfed_cut_layer
-            .clamp(1, self.engine.meta().layers - 1);
+        let cut = checked_cut(
+            "splitfed_cut_layer",
+            self.cfg.splitfed_cut_layer,
+            self.engine.meta().layers,
+        )?;
         let profile = self.engine.meta().profile();
         let sched = self.schedule();
         let mut global = self.engine.init_params(self.cfg.seed as u32)?;
@@ -463,6 +500,7 @@ impl Experiment {
                     true,
                 )
                 .total_s;
+            let mean_cut = cut as f64;
             let mut fronts: Vec<Params> = Vec::with_capacity(members.len());
             let mut backs: Vec<Params> = Vec::with_capacity(members.len());
             let mut loss_sum = 0.0;
@@ -493,6 +531,7 @@ impl Experiment {
                 round_time,
                 sim_total,
                 ev.n_alive,
+                mean_cut,
             )?);
         }
         Ok(records)
@@ -541,6 +580,7 @@ impl Experiment {
     }
 
     /// Assemble a round record (evaluating if scheduled).
+    #[allow(clippy::too_many_arguments)]
     fn record(
         &mut self,
         round: usize,
@@ -549,6 +589,7 @@ impl Experiment {
         round_time: f64,
         sim_total: f64,
         n_alive: usize,
+        mean_cut: f64,
     ) -> Result<RoundRecord> {
         let (test_loss, test_acc) = if self.should_eval(round) {
             self.evaluate(model)?
@@ -567,6 +608,7 @@ impl Experiment {
             test_loss,
             sim_round_s: round_time,
             sim_total_s: sim_total,
+            mean_cut,
         })
     }
 }
@@ -583,6 +625,19 @@ pub fn join_params(front: &Params, back: &Params) -> Params {
     let mut out = front.clone();
     out.extend(back.iter().cloned());
     out
+}
+
+/// Bound a configured cut against the *training* model's layer count. The
+/// config layer already validates cuts against the configured latency
+/// profile; the AOT artifacts may disagree with it, so the training drivers
+/// re-check here with a proper error instead of the old silent clamp.
+fn checked_cut(name: &str, cut: usize, w: usize) -> Result<usize> {
+    anyhow::ensure!(
+        cut >= 1 && cut < w,
+        "{name} = {cut} out of range [1, {}] for the loaded artifacts (W = {w})",
+        w - 1
+    );
+    Ok(cut)
 }
 
 /// Convenience: build + run in one call.

@@ -24,6 +24,10 @@ pub struct RoundRecord {
     pub sim_round_s: f64,
     /// Cumulative simulated seconds since round 1.
     pub sim_total_s: f64,
+    /// Mean planned split cut this round: average front length `L_i` over
+    /// the FedPairing pairs, the configured cut for SL/SplitFed, NaN for
+    /// vanilla FL (see `sim::latency::RoundTime::mean_cut`).
+    pub mean_cut: f64,
 }
 
 /// A full experiment run.
@@ -85,18 +89,19 @@ impl RunResult {
     /// CSV rendering (header + one row per round).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,n_alive,train_loss,test_loss,test_acc,sim_round_s,sim_total_s\n",
+            "round,n_alive,train_loss,test_loss,test_acc,sim_round_s,sim_total_s,mean_cut\n",
         );
         for r in &self.rounds {
             s.push_str(&format!(
-                "{},{},{:.6},{:.6},{:.6},{:.3},{:.3}\n",
+                "{},{},{:.6},{:.6},{:.6},{:.3},{:.3},{:.3}\n",
                 r.round,
                 r.n_alive,
                 r.train_loss,
                 r.test_loss,
                 r.test_acc,
                 r.sim_round_s,
-                r.sim_total_s
+                r.sim_total_s,
+                r.mean_cut
             ));
         }
         s
@@ -124,6 +129,7 @@ impl RunResult {
                 ro.insert("test_acc", Json::num(r.test_acc));
                 ro.insert("sim_round_s", Json::num(r.sim_round_s));
                 ro.insert("sim_total_s", Json::num(r.sim_total_s));
+                ro.insert("mean_cut", Json::num(r.mean_cut));
                 Json::Obj(ro)
             })
             .collect();
@@ -166,6 +172,7 @@ mod tests {
                     test_loss: 2.1,
                     sim_round_s: 10.0,
                     sim_total_s: 10.0,
+                    mean_cut: 4.0,
                 },
                 RoundRecord {
                     round: 2,
@@ -175,6 +182,7 @@ mod tests {
                     test_loss: f64::NAN,
                     sim_round_s: 10.0,
                     sim_total_s: 20.0,
+                    mean_cut: 4.5,
                 },
                 RoundRecord {
                     round: 3,
@@ -184,6 +192,7 @@ mod tests {
                     test_loss: 1.4,
                     sim_round_s: 12.0,
                     sim_total_s: 32.0,
+                    mean_cut: f64::NAN,
                 },
             ],
             wall_s: 1.0,

@@ -42,6 +42,7 @@ use crate::pairing::{
     EdgeWeightSpec, Matching, SparseCandidateGraph,
 };
 use crate::sim::channel::Channel;
+use crate::split::SplitCostModel;
 use crate::util::rng::{splitmix64, Rng};
 
 /// Repair pools at most this large are matched densely (O(pool²) edges —
@@ -63,17 +64,23 @@ const DENSE_POOL_MAX: usize = 64;
 ///   re-matched against grid-local candidates only.
 ///
 /// Returns `true` when the matching changed.
+///
+/// `cost` is the optional split-cost model: when present, Greedy/Exact
+/// pairing (initial *and* repairs) optimizes the planner's predicted pair
+/// latency instead of the eq. (5) proxy — the pairing/splitting co-design
+/// of DESIGN.md §7.
 pub fn maintain_matching(
     matching: &mut Option<Matching>,
     dynamics: &FleetDynamics,
     ev: &RoundEvents,
     channel: &Channel,
     cfg: &ExperimentConfig,
+    cost: Option<&SplitCostModel>,
     pairing_rng: &mut Rng,
 ) -> bool {
     let alive = dynamics.alive_indices();
     let sparse = cfg.backend.sparse_for(alive.len());
-    let spec = EdgeWeightSpec::for_strategy(cfg.pairing, cfg.alpha, cfg.beta);
+    let spec = EdgeWeightSpec::for_strategy_with(cfg.pairing, cfg.alpha, cfg.beta, cost);
     match matching {
         None => {
             let m = match spec {
@@ -111,6 +118,7 @@ pub fn maintain_matching(
                     channel,
                     cfg.alpha,
                     cfg.beta,
+                    cost,
                     pairing_rng,
                     &alive,
                 ),
@@ -222,7 +230,7 @@ mod tests {
             let ev = dynamics.step(round);
             let ch = dynamics.channel();
             let had = matching.is_some();
-            if maintain_matching(&mut matching, &dynamics, &ev, &ch, &cfg, &mut rng) && had {
+            if maintain_matching(&mut matching, &dynamics, &ev, &ch, &cfg, None, &mut rng) && had {
                 repaired += 1;
             }
             let m = matching.as_ref().unwrap();
@@ -254,7 +262,7 @@ mod tests {
         for round in 1..=6 {
             let ev = dynamics.step(round);
             let ch = dynamics.channel();
-            maintain_matching(&mut matching, &dynamics, &ev, &ch, &cfg, &mut rng);
+            maintain_matching(&mut matching, &dynamics, &ev, &ch, &cfg, None, &mut rng);
             let m = matching.as_ref().unwrap();
             assert!(
                 m.is_valid_over(&dynamics.alive_indices()),
@@ -274,14 +282,14 @@ mod tests {
         let mut matching = None;
         let ev = dynamics.step(1);
         let ch = dynamics.channel();
-        assert!(maintain_matching(&mut matching, &dynamics, &ev, &ch, &cfg, &mut rng));
+        assert!(maintain_matching(&mut matching, &dynamics, &ev, &ch, &cfg, None, &mut rng));
         let m = matching.as_ref().unwrap();
         assert!(m.is_valid_over(&dynamics.alive_indices()), "{m:?}");
         // Step until churn hits, then the matching must stay valid.
         for round in 2..=40 {
             let ev = dynamics.step(round);
             let ch = dynamics.channel();
-            maintain_matching(&mut matching, &dynamics, &ev, &ch, &cfg, &mut rng);
+            maintain_matching(&mut matching, &dynamics, &ev, &ch, &cfg, None, &mut rng);
             let m = matching.as_ref().unwrap();
             assert!(
                 m.is_valid_over(&dynamics.alive_indices()),

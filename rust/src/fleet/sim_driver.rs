@@ -11,12 +11,13 @@
 
 use super::dynamics::{FleetDynamics, RoundEvents};
 use super::maintain_matching;
-use crate::config::{Algorithm, ConfigError, ExperimentConfig};
+use crate::config::{Algorithm, ConfigError, ExperimentConfig, SplitPolicy};
 use crate::coordinator::metrics::{RoundRecord, RunResult};
 use crate::pairing::Matching;
 use crate::sim::engine::RoundEngine;
 use crate::sim::latency::{Fleet, FleetView, Schedule};
 use crate::sim::profile::ModelProfile;
+use crate::split::SplitCostModel;
 use crate::util::index::InverseIndex;
 use crate::util::rng::Rng;
 
@@ -54,11 +55,16 @@ pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigEr
     let t0 = std::time::Instant::now();
     let base = Fleet::sample(cfg, &mut Rng::new(cfg.seed));
     let mut dynamics = FleetDynamics::new(cfg, base);
-    let profile = ModelProfile::resnet18_cifar();
+    let profile = ModelProfile::from_preset(cfg.model);
     let sched = Schedule {
         batch_size: 32,
         epochs: cfg.local_epochs,
     };
+    // Pairing/splitting co-design: under a non-paper split policy the
+    // Greedy/Exact pairing weights become the planner's predicted pair
+    // latency (memoized per exact pair inputs).
+    let cost = (cfg.split.policy != SplitPolicy::Paper && cfg.split.co_design)
+        .then(|| SplitCostModel::new(profile.clone(), sched, cfg.compute, cfg.split));
     let mut pairing_rng = Rng::new(cfg.seed ^ 0x9A1F);
     let mut matching: Option<Matching> = None;
     let mut records = Vec::with_capacity(cfg.rounds);
@@ -69,14 +75,14 @@ pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigEr
     // path borrows the universe fleet (no `Fleet::subset` clone), inverts
     // universe→compact ids through a reusable scratch map, and evaluates
     // pairs analytically with cross-round memoization (DESIGN.md §6).
-    let mut engine = RoundEngine::new(&cfg.engine);
+    let mut engine = RoundEngine::new(&cfg.engine).with_split(cfg.split);
     let mut inv = InverseIndex::new();
     let mut cpairs: Vec<(usize, usize)> = Vec::new();
     let mut csolos: Vec<usize> = Vec::new();
     for round in 1..=cfg.rounds {
         let ev = dynamics.step(round);
         let channel = dynamics.channel();
-        let round_s = match cfg.algorithm {
+        let rt = match cfg.algorithm {
             Algorithm::FedPairing => {
                 let had_matching = matching.is_some();
                 let changed = maintain_matching(
@@ -85,6 +91,7 @@ pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigEr
                     &ev,
                     &channel,
                     cfg,
+                    cost.as_ref(),
                     &mut pairing_rng,
                 );
                 if had_matching && changed {
@@ -105,64 +112,58 @@ pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigEr
                 );
                 csolos.clear();
                 csolos.extend(eff.solos.iter().map(|&s| inv.compact(s)));
-                engine
-                    .fedpairing_round(
-                        &view,
-                        &cpairs,
-                        &csolos,
-                        &profile,
-                        &sched,
-                        &channel,
-                        &cfg.compute,
-                        true,
-                    )
-                    .total_s
+                engine.fedpairing_round(
+                    &view,
+                    &cpairs,
+                    &csolos,
+                    &profile,
+                    &sched,
+                    &channel,
+                    &cfg.compute,
+                    true,
+                )
             }
             Algorithm::VanillaFL => {
                 let view = FleetView::new(dynamics.universe(), dynamics.present_members());
-                engine
-                    .fl_round(&view, &profile, &sched, &channel, &cfg.compute, true)
-                    .total_s
+                engine.fl_round(&view, &profile, &sched, &channel, &cfg.compute, true)
             }
             Algorithm::VanillaSL => {
                 let view = FleetView::new(dynamics.universe(), dynamics.present_members());
-                engine
-                    .sl_round(
-                        &view,
-                        &profile,
-                        &sched,
-                        &channel,
-                        &cfg.compute,
-                        cfg.sl_cut_layer.clamp(1, profile.w() - 1),
-                        cfg.compute.server_freq_ghz * 1e9,
-                    )
-                    .total_s
+                // In range for this profile by config validation — no clamp.
+                engine.sl_round(
+                    &view,
+                    &profile,
+                    &sched,
+                    &channel,
+                    &cfg.compute,
+                    cfg.sl_cut_layer,
+                    cfg.compute.server_freq_ghz * 1e9,
+                )
             }
             Algorithm::SplitFed => {
                 let view = FleetView::new(dynamics.universe(), dynamics.present_members());
-                engine
-                    .splitfed_round(
-                        &view,
-                        &profile,
-                        &sched,
-                        &channel,
-                        &cfg.compute,
-                        cfg.splitfed_cut_layer.clamp(1, profile.w() - 1),
-                        cfg.compute.server_freq_ghz * 1e9,
-                        true,
-                    )
-                    .total_s
+                engine.splitfed_round(
+                    &view,
+                    &profile,
+                    &sched,
+                    &channel,
+                    &cfg.compute,
+                    cfg.splitfed_cut_layer,
+                    cfg.compute.server_freq_ghz * 1e9,
+                    true,
+                )
             }
         };
-        sim_total += round_s;
+        sim_total += rt.total_s;
         records.push(RoundRecord {
             round,
             n_alive: ev.n_alive,
             train_loss: f64::NAN,
             test_acc: f64::NAN,
             test_loss: f64::NAN,
-            sim_round_s: round_s,
+            sim_round_s: rt.total_s,
             sim_total_s: sim_total,
+            mean_cut: rt.mean_cut,
         });
         trace.push(ev);
     }
@@ -236,6 +237,56 @@ mod tests {
         assert!(run.result.rounds.iter().all(|r| r.n_alive == 12));
         assert_eq!(run.repaired_rounds, 0);
         assert_eq!(run.total_departures(), 0);
+    }
+
+    #[test]
+    fn split_policies_record_cuts_and_never_slow_rounds_down() {
+        use crate::config::SplitPolicy;
+        let mut paper = cfg(ScenarioKind::LossyRadio, Algorithm::FedPairing);
+        paper.rounds = 12;
+        paper.split.co_design = false; // pin the pairing so rounds compare 1:1
+        let mut optimal = paper.clone();
+        optimal.split.policy = SplitPolicy::Optimal;
+        let a = simulate_scenario(&paper).unwrap();
+        let b = simulate_scenario(&optimal).unwrap();
+        for (ra, rb) in a.result.rounds.iter().zip(&b.result.rounds) {
+            assert!(
+                rb.sim_round_s <= ra.sim_round_s + 1e-9,
+                "round {}: optimal {} slower than paper {}",
+                ra.round,
+                rb.sim_round_s,
+                ra.sim_round_s
+            );
+            assert!(rb.mean_cut.is_finite(), "round {}: no cut recorded", ra.round);
+        }
+        // FL has no cut; SL/SplitFed report the configured server cut.
+        let fl = simulate_scenario(&cfg(ScenarioKind::Stable, Algorithm::VanillaFL)).unwrap();
+        assert!(fl.result.rounds.iter().all(|r| r.mean_cut.is_nan()));
+        let sf = simulate_scenario(&cfg(ScenarioKind::Stable, Algorithm::SplitFed)).unwrap();
+        assert!(sf.result.rounds.iter().all(|r| r.mean_cut == 3.0));
+        let sl = simulate_scenario(&cfg(ScenarioKind::Stable, Algorithm::VanillaSL)).unwrap();
+        assert!(sl.result.rounds.iter().all(|r| r.mean_cut == 1.0));
+    }
+
+    #[test]
+    fn co_designed_pairing_runs_on_deeper_models() {
+        // metro-deep's ResNet-34 profile at a test-sized fleet: the full
+        // co-design path (SplitCost weights + optimal cuts) stays valid.
+        use crate::config::SplitPolicy;
+        let mut c = cfg(ScenarioKind::FlashCrowd, Algorithm::FedPairing);
+        c.model = crate::config::ModelPreset::Resnet34;
+        c.rounds = 10;
+        c.samples_per_client = 64;
+        c.split.policy = SplitPolicy::Optimal;
+        let run = simulate_scenario(&c).unwrap();
+        assert_eq!(run.result.rounds.len(), 10);
+        assert!(run.result.rounds.iter().all(|r| r.sim_round_s > 0.0));
+        // Cuts live in the ResNet-34 range.
+        assert!(run
+            .result
+            .rounds
+            .iter()
+            .all(|r| r.mean_cut >= 1.0 && r.mean_cut <= 17.0));
     }
 
     #[test]

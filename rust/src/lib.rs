@@ -5,7 +5,8 @@
 //! as a three-layer Rust + JAX + Pallas system:
 //!
 //! - **L3 (this crate)** — the coordination contribution: client pairing
-//!   ([`pairing`]), the split-training protocol and round loop
+//!   ([`pairing`]), cost-aware split planning ([`split`]), the
+//!   split-training protocol and round loop
 //!   ([`coordinator`]), the heterogeneity/latency simulator ([`sim`]), the
 //!   fleet-dynamics layer — churn, fading channels, incremental re-pairing —
 //!   ([`fleet`]), data synthesis and partitioning ([`data`]), and host-side
@@ -28,4 +29,5 @@ pub mod nn;
 pub mod pairing;
 pub mod runtime;
 pub mod sim;
+pub mod split;
 pub mod util;

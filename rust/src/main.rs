@@ -6,24 +6,25 @@
 //! fedpairing run --scenario lossy-radio --rounds 50
 //! fedpairing churn --scenario flash-crowd --rounds 30
 //! fedpairing churn --scenario metro-scale --n-clients 100000 --backend sparse
-//! fedpairing pair --clients 20 --strategy greedy
+//! fedpairing churn --scenario metro-scale --split-policy optimal --model resnet34
+//! fedpairing pair --clients 20 --strategy greedy --split-policy optimal
 //! fedpairing latency --samples 2500
 //! fedpairing info
 //! ```
 
 use fedpairing::cli::{CliError, Command, Parsed};
 use fedpairing::config::{
-    Algorithm, BackendMode, DataDistribution, ExperimentConfig, PairingStrategy, RoundBackend,
-    ScenarioConfig,
+    Algorithm, BackendMode, DataDistribution, ExperimentConfig, ModelPreset, PairingStrategy,
+    RoundBackend, ScenarioConfig, SplitPolicy,
 };
 use fedpairing::coordinator::run_experiment;
 use fedpairing::fleet::simulate_scenario;
 use fedpairing::model::ModelMeta;
-use fedpairing::pairing::{graph::ClientGraph, pair_clients, pair_clients_backend};
+use fedpairing::pairing::{graph::ClientGraph, pair_clients, pair_clients_with};
 use fedpairing::sim::channel::Channel;
-use fedpairing::sim::compute::split_lengths;
 use fedpairing::sim::latency::{self, Fleet, Schedule};
 use fedpairing::sim::profile::ModelProfile;
+use fedpairing::split::SplitCostModel;
 use fedpairing::util::logging;
 use fedpairing::util::rng::Rng;
 
@@ -32,7 +33,7 @@ fn cli() -> Command {
         .flag("log-level", None, Some("LEVEL"), "error|warn|info|debug|trace", Some("info"))
         .subcommand(
             Command::new("run", "run a full FL experiment against the AOT artifacts")
-                .flag("preset", None, Some("NAME"), "fig2|fig3|table1|table2|quick|metro-scale", Some("quick"))
+                .flag("preset", None, Some("NAME"), "fig2|fig3|table1|table2|quick|metro-scale|metro-deep", Some("quick"))
                 .flag("config", None, Some("FILE"), "JSON config file (overrides preset)", None)
                 .flag("algorithm", Some('a'), Some("ALGO"), "fedpairing|fl|sl|splitfed", None)
                 .flag("pairing", Some('p'), Some("STRAT"), "greedy|random|location|compute|exact", None)
@@ -47,6 +48,7 @@ fn cli() -> Command {
                 .flag("scenario", None, Some("NAME"), "stable|diurnal|flash-crowd|lossy-radio|metro-scale", None)
                 .flag("engine", None, Some("MODE"), "round-time engine: analytic|des", None)
                 .flag("threads", None, Some("N"), "engine worker threads (0 = one per core)", None)
+                .flag("split-policy", None, Some("POLICY"), "split planner: paper|balanced|optimal", None)
                 .flag("artifacts", None, Some("DIR"), "artifact directory", None)
                 .flag("out", Some('o'), Some("DIR"), "metrics output directory", None),
         )
@@ -63,6 +65,8 @@ fn cli() -> Command {
                 .flag("seed", Some('s'), Some("N"), "experiment seed", Some("17"))
                 .flag("engine", None, Some("MODE"), "round-time engine: analytic|des", None)
                 .flag("threads", None, Some("N"), "engine worker threads (0 = one per core)", None)
+                .flag("split-policy", None, Some("POLICY"), "split planner: paper|balanced|optimal", None)
+                .flag("model", None, Some("NAME"), "latency cost profile: resnet18|resnet34|resnet10|mlp", None)
                 .flag("out", Some('o'), Some("DIR"), "metrics output directory", None),
         )
         .subcommand(
@@ -72,14 +76,16 @@ fn cli() -> Command {
                 .flag("backend", None, Some("MODE"), "pairing candidate backend: auto|dense|sparse", Some("auto"))
                 .flag("seed", Some('s'), Some("N"), "fleet seed", Some("17"))
                 .flag("alpha", None, Some("A"), "eq.(5) compute weight", Some("1.0"))
-                .flag("beta", None, Some("B"), "eq.(5) rate weight", Some("2e-9")),
+                .flag("beta", None, Some("B"), "eq.(5) rate weight", Some("2e-9"))
+                .flag("split-policy", None, Some("POLICY"), "split planner: paper|balanced|optimal", Some("paper"))
+                .flag("model", None, Some("NAME"), "latency cost profile: resnet18|resnet34|resnet10|mlp", Some("resnet18")),
         )
         .subcommand(
             Command::new("latency", "simulated round times for all algorithms + pairings (Tables I/II)")
                 .flag("clients", Some('n'), Some("N"), "fleet size", Some("20"))
                 .flag("samples", None, Some("N"), "samples per client", Some("2500"))
                 .flag("seed", Some('s'), Some("N"), "fleet seed", Some("17"))
-                .flag("profile", None, Some("NAME"), "resnet18|resnet10|mlp", Some("resnet18")),
+                .flag("profile", None, Some("NAME"), "resnet18|resnet34|resnet10|mlp", Some("resnet18")),
         )
         .subcommand(Command::new("info", "print the AOT manifest summary")
             .flag("artifacts", None, Some("DIR"), "artifact directory", Some("artifacts")))
@@ -136,6 +142,19 @@ fn apply_engine_flags(cfg: &mut ExperimentConfig, p: &Parsed) -> anyhow::Result<
     Ok(())
 }
 
+/// Apply the shared `--split-policy` / `--model` split-planner overrides.
+fn apply_split_flags(cfg: &mut ExperimentConfig, p: &Parsed) -> anyhow::Result<()> {
+    if let Some(s) = p.get("split-policy") {
+        cfg.split.policy = SplitPolicy::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown split policy {s:?}"))?;
+    }
+    if let Some(m) = p.get("model") {
+        cfg.model = ModelPreset::parse(m)
+            .ok_or_else(|| anyhow::anyhow!("unknown model preset {m:?}"))?;
+    }
+    Ok(())
+}
+
 fn cmd_run(p: &Parsed) -> anyhow::Result<()> {
     let mut cfg = if let Some(file) = p.get("config") {
         ExperimentConfig::load(file).map_err(|e| anyhow::anyhow!("{e}"))?
@@ -183,6 +202,7 @@ fn cmd_run(p: &Parsed) -> anyhow::Result<()> {
         cfg.set_scenario(sc);
     }
     apply_engine_flags(&mut cfg, p)?;
+    apply_split_flags(&mut cfg, p)?;
     if let Some(d) = p.get("artifacts") {
         cfg.artifacts_dir = d.to_string();
     }
@@ -249,18 +269,22 @@ fn cmd_churn(p: &Parsed) -> anyhow::Result<()> {
         None => 2500,
     };
     apply_engine_flags(&mut cfg, p)?;
+    apply_split_flags(&mut cfg, p)?;
     if let Some(d) = p.get("out") {
         cfg.out_dir = d.to_string();
     }
     println!(
-        "simulating {} / {} under scenario={} — {} clients, {} rounds, {} backend, {} engine (latency only)",
+        "simulating {} / {} under scenario={} — {} clients, {} rounds, {} backend, {} engine, \
+         {} split on {} (latency only)",
         cfg.algorithm,
         cfg.pairing,
         cfg.scenario.kind,
         cfg.n_clients,
         cfg.rounds,
         if cfg.backend.sparse_for(cfg.n_clients) { "sparse" } else { "dense" },
-        cfg.engine.backend
+        cfg.engine.backend,
+        cfg.split.policy,
+        cfg.model
     );
     let run = simulate_scenario(&cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
     println!(
@@ -305,17 +329,30 @@ fn cmd_pair(p: &Parsed) -> anyhow::Result<()> {
         cfg.backend.mode =
             BackendMode::parse(b).ok_or_else(|| anyhow::anyhow!("unknown backend {b:?}"))?;
     }
+    apply_split_flags(&mut cfg, p)?;
     let mut rng = Rng::new(seed);
     let fleet = Fleet::sample(&cfg, &mut rng);
     let channel = Channel::new(cfg.channel);
+    // The planner prices pairs for the cut display (always) and, under a
+    // non-paper policy with co-design on, supplies the pairing objective.
+    let profile = ModelProfile::from_preset(cfg.model);
+    let sched = Schedule {
+        batch_size: 32,
+        epochs: cfg.local_epochs,
+    };
+    let planner = SplitCostModel::new(profile.clone(), sched, cfg.compute, cfg.split);
+    let cost = (cfg.split.policy != SplitPolicy::Paper && cfg.split.co_design)
+        .then_some(&planner);
     let pairs =
-        pair_clients_backend(&cfg.backend, strat, &fleet, &channel, alpha, beta, &mut rng);
+        pair_clients_with(&cfg.backend, strat, &fleet, &channel, alpha, beta, cost, &mut rng);
     // The dense graph is only for the ε total — skip it past paper scale
     // (O(n²) edges) and report the lazily-summed weight instead.
     if n <= 2048 {
         let graph = ClientGraph::build(&fleet, &channel, alpha, beta);
         println!(
-            "strategy={strat} n={n} seed={seed}  total ε = {:.3}",
+            "strategy={strat} n={n} seed={seed} split={} model={}  total ε = {:.3}",
+            cfg.split.policy,
+            cfg.model,
             graph.matching_weight(&pairs)
         );
     } else {
@@ -335,8 +372,8 @@ fn cmd_pair(p: &Parsed) -> anyhow::Result<()> {
         println!("strategy={strat} n={n} seed={seed}  total ε = {total:.3} (lazy)");
     }
     println!(
-        "{:<12} {:>9} {:>9} {:>8} {:>10} {:>7}",
-        "pair", "f_i GHz", "f_j GHz", "dist m", "rate Mb/s", "L_i/L_j"
+        "{:<12} {:>9} {:>9} {:>8} {:>10} {:>7} {:>10}",
+        "pair", "f_i GHz", "f_j GHz", "dist m", "rate Mb/s", "L_i/L_j", "pred s"
     );
     const MAX_ROWS: usize = 32;
     if pairs.len() > MAX_ROWS {
@@ -345,15 +382,17 @@ fn cmd_pair(p: &Parsed) -> anyhow::Result<()> {
     for &(i, j) in pairs.iter().take(MAX_ROWS) {
         let d = fleet.positions[i].dist(&fleet.positions[j]);
         let r = channel.rate(&fleet.positions[i], &fleet.positions[j]) / 1e6;
-        let (li, lj) = split_lengths(fleet.freqs_hz[i], fleet.freqs_hz[j], 8);
+        let decision = planner.decide(&fleet, &channel, i, j);
+        let (li, lj) = (decision.cut, profile.w() - decision.cut);
         println!(
-            "({i:>2},{j:>2})     {:>9.2} {:>9.2} {:>8.1} {:>10.0} {:>4}/{:<4}",
+            "({i:>2},{j:>2})     {:>9.2} {:>9.2} {:>8.1} {:>10.0} {:>4}/{:<4} {:>10.1}",
             fleet.freqs_hz[i] / 1e9,
             fleet.freqs_hz[j] / 1e9,
             d,
             r,
             li,
-            lj
+            lj,
+            decision.predicted_round_s
         );
     }
     for s in fedpairing::pairing::graph::uncovered(n, &pairs) {
@@ -369,12 +408,10 @@ fn cmd_latency(p: &Parsed) -> anyhow::Result<()> {
     let n: usize = p.req("clients").map_err(|e| anyhow::anyhow!("{e}"))?;
     let samples: usize = p.req("samples").map_err(|e| anyhow::anyhow!("{e}"))?;
     let seed: u64 = p.req("seed").map_err(|e| anyhow::anyhow!("{e}"))?;
-    let profile = match p.get("profile").unwrap_or("resnet18") {
-        "resnet18" => ModelProfile::resnet18_cifar(),
-        "resnet10" => ModelProfile::resnet10_cifar(),
-        "mlp" => ModelProfile::mlp(3072, 256, 10, 8),
-        other => anyhow::bail!("unknown profile {other:?}"),
-    };
+    let name = p.get("profile").unwrap_or("resnet18");
+    let profile = ModelPreset::parse(name)
+        .map(ModelProfile::from_preset)
+        .ok_or_else(|| anyhow::anyhow!("unknown profile {name:?}"))?;
     let mut cfg = ExperimentConfig::default();
     cfg.n_clients = n;
     cfg.samples_per_client = samples;

@@ -31,6 +31,7 @@ use crate::config::PairingStrategy;
 use crate::sim::channel::Channel;
 use crate::sim::geometry::SpatialGrid;
 use crate::sim::latency::Fleet;
+use crate::split::SplitCostModel;
 
 /// Per-client cap on grid cells scanned while hunting for `k_near`
 /// candidates — bounds the ring walk when members are sparse in the grid
@@ -38,18 +39,41 @@ use crate::sim::latency::Fleet;
 const MAX_SCAN_CELLS: usize = 4096;
 
 /// Which edge weight a sparse graph evaluates — eq. (5) for the paper's
-/// mechanism, or one of its degenerate baseline forms (Table I).
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum EdgeWeightSpec {
+/// mechanism, one of its degenerate baseline forms (Table I), or the split
+/// planner's predicted pair latency (pairing/splitting co-design,
+/// DESIGN.md §7).
+#[derive(Clone, Copy, Debug)]
+pub enum EdgeWeightSpec<'a> {
     /// `ε_ij = α·(Δf GHz)² + β·r_ij` — Greedy / Exact.
     Eq5 { alpha: f64, beta: f64 },
     /// `−‖p_i − p_j‖` — the location-based baseline (nearest first).
     NegDistance,
     /// `(Δf GHz)²` — the computation-resource baseline (extremes first).
     FreqGap,
+    /// `−T̂_ij` — the negated *optimized* pair round seconds predicted by a
+    /// split planner ([`SplitCostModel`]): the heaviest edge is the fastest
+    /// pair, so matching and cut selection optimize the same objective.
+    SplitCost(&'a SplitCostModel),
 }
 
-impl EdgeWeightSpec {
+impl PartialEq for EdgeWeightSpec<'_> {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (
+                EdgeWeightSpec::Eq5 { alpha: a1, beta: b1 },
+                EdgeWeightSpec::Eq5 { alpha: a2, beta: b2 },
+            ) => a1 == a2 && b1 == b2,
+            (EdgeWeightSpec::NegDistance, EdgeWeightSpec::NegDistance) => true,
+            (EdgeWeightSpec::FreqGap, EdgeWeightSpec::FreqGap) => true,
+            (EdgeWeightSpec::SplitCost(m1), EdgeWeightSpec::SplitCost(m2)) => {
+                std::ptr::eq(*m1, *m2)
+            }
+            _ => false,
+        }
+    }
+}
+
+impl<'a> EdgeWeightSpec<'a> {
     /// The weight a configured pairing strategy optimizes (`None` for
     /// Random, which never evaluates edges; Exact maps to eq. (5) because its
     /// fleet-scale fallback is the greedy matcher on the same objective).
@@ -57,7 +81,7 @@ impl EdgeWeightSpec {
         strategy: PairingStrategy,
         alpha: f64,
         beta: f64,
-    ) -> Option<EdgeWeightSpec> {
+    ) -> Option<EdgeWeightSpec<'static>> {
         match strategy {
             PairingStrategy::Greedy | PairingStrategy::Exact => {
                 Some(EdgeWeightSpec::Eq5 { alpha, beta })
@@ -65,6 +89,24 @@ impl EdgeWeightSpec {
             PairingStrategy::Location => Some(EdgeWeightSpec::NegDistance),
             PairingStrategy::Compute => Some(EdgeWeightSpec::FreqGap),
             PairingStrategy::Random => None,
+        }
+    }
+
+    /// [`EdgeWeightSpec::for_strategy`] with an optional split-cost model:
+    /// when present, the latency-optimizing mechanisms (Greedy / Exact)
+    /// switch from the eq. (5) proxy to the planner's predicted pair
+    /// latency. Baselines keep their own degenerate objectives.
+    pub fn for_strategy_with(
+        strategy: PairingStrategy,
+        alpha: f64,
+        beta: f64,
+        cost: Option<&'a SplitCostModel>,
+    ) -> Option<EdgeWeightSpec<'a>> {
+        match (strategy, cost) {
+            (PairingStrategy::Greedy | PairingStrategy::Exact, Some(m)) => {
+                Some(EdgeWeightSpec::SplitCost(m))
+            }
+            _ => Self::for_strategy(strategy, alpha, beta),
         }
     }
 
@@ -81,6 +123,7 @@ impl EdgeWeightSpec {
                 let df = (fleet.freqs_hz[a] - fleet.freqs_hz[b]) / 1e9;
                 df * df
             }
+            EdgeWeightSpec::SplitCost(model) => -model.predicted_pair_s(fleet, channel, a, b),
         }
     }
 
@@ -101,7 +144,7 @@ impl EdgeWeightSpec {
 pub struct SparseCandidateGraph<'a> {
     fleet: &'a Fleet,
     channel: &'a Channel,
-    spec: EdgeWeightSpec,
+    spec: EdgeWeightSpec<'a>,
     edges: Vec<Edge>,
 }
 
@@ -111,7 +154,7 @@ impl<'a> SparseCandidateGraph<'a> {
     pub fn build(
         fleet: &'a Fleet,
         channel: &'a Channel,
-        spec: EdgeWeightSpec,
+        spec: EdgeWeightSpec<'a>,
         k_near: usize,
         k_freq: usize,
     ) -> SparseCandidateGraph<'a> {
@@ -126,7 +169,7 @@ impl<'a> SparseCandidateGraph<'a> {
         fleet: &'a Fleet,
         channel: &'a Channel,
         pool: &[usize],
-        spec: EdgeWeightSpec,
+        spec: EdgeWeightSpec<'a>,
         k_near: usize,
         k_freq: usize,
     ) -> SparseCandidateGraph<'a> {
@@ -145,12 +188,13 @@ impl<'a> SparseCandidateGraph<'a> {
     /// incrementally-maintained `FleetDynamics` grid). `members` must be a
     /// subset of the grid's contents; non-member grid occupants are filtered
     /// out of the candidate lists.
+    #[allow(clippy::too_many_arguments)]
     pub fn over_members(
         fleet: &'a Fleet,
         channel: &'a Channel,
         grid: &SpatialGrid,
         members: &[usize],
-        spec: EdgeWeightSpec,
+        spec: EdgeWeightSpec<'a>,
         k_near: usize,
         k_freq: usize,
     ) -> SparseCandidateGraph<'a> {

@@ -60,15 +60,31 @@ pub struct ClientGraph {
 impl ClientGraph {
     /// Build the complete graph from fleet state per eq. (5).
     pub fn build(fleet: &Fleet, channel: &Channel, alpha: f64, beta: f64) -> ClientGraph {
+        Self::build_spec(
+            fleet,
+            channel,
+            crate::pairing::EdgeWeightSpec::Eq5 { alpha, beta },
+        )
+    }
+
+    /// Build the complete graph under an arbitrary
+    /// [`EdgeWeightSpec`](crate::pairing::EdgeWeightSpec) — e.g. the
+    /// split-planner's predicted pair latency, so the dense matchers (greedy
+    /// *and* the exact DP) can optimize the co-designed objective. With the
+    /// `Eq5` spec this is [`ClientGraph::build`] bit-for-bit.
+    pub fn build_spec(
+        fleet: &Fleet,
+        channel: &Channel,
+        spec: crate::pairing::EdgeWeightSpec<'_>,
+    ) -> ClientGraph {
         let n = fleet.n();
         let mut edges = Vec::with_capacity(n * (n - 1) / 2);
         for i in 0..n {
             for j in (i + 1)..n {
-                let rate = channel.rate(&fleet.positions[i], &fleet.positions[j]);
                 edges.push(Edge {
                     i,
                     j,
-                    weight: eq5_weight(alpha, beta, fleet.freqs_hz[i], fleet.freqs_hz[j], rate),
+                    weight: spec.weight(fleet, channel, i, j),
                 });
             }
         }

@@ -7,7 +7,10 @@
 //! [`baselines`] are Table I's random/location/compute mechanisms; [`exact`]
 //! is the bitmask-DP optimum used as an ablation bound. [`pair_clients`]
 //! dispatches on the configured [`PairingStrategy`];
-//! [`pair_clients_backend`] additionally selects the candidate backend.
+//! [`pair_clients_backend`] additionally selects the candidate backend, and
+//! [`pair_clients_with`] further accepts a [`crate::split::SplitCostModel`]
+//! so Greedy/Exact optimize the split planner's predicted pair latency
+//! instead of the eq. (5) proxy (pairing/splitting co-design, DESIGN.md §7).
 //!
 //! **Exact at scale:** the DP is O(2ⁿ·n) and hard-capped at
 //! [`exact::MAX_N`] = 24 clients. Beyond that, `Exact` no longer aborts the
@@ -77,33 +80,55 @@ pub fn pair_clients_backend(
     beta: f64,
     rng: &mut Rng,
 ) -> Vec<(usize, usize)> {
+    pair_clients_with(backend, strategy, fleet, channel, alpha, beta, None, rng)
+}
+
+/// [`pair_clients_backend`] with an optional split-cost model: when present,
+/// the Greedy/Exact objective becomes the split planner's predicted pair
+/// latency (`EdgeWeightSpec::SplitCost`) instead of the eq. (5) proxy —
+/// pairing and cut selection co-designed, on both the dense complete graph
+/// (greedy *and* the exact DP) and the sparse candidate graph.
+#[allow(clippy::too_many_arguments)]
+pub fn pair_clients_with(
+    backend: &PairingBackendConfig,
+    strategy: PairingStrategy,
+    fleet: &Fleet,
+    channel: &Channel,
+    alpha: f64,
+    beta: f64,
+    cost: Option<&crate::split::SplitCostModel>,
+    rng: &mut Rng,
+) -> Vec<(usize, usize)> {
     let n = fleet.n();
     let sparse = backend.sparse_for(n);
-    let sparse_pairs = |spec: EdgeWeightSpec| -> Vec<(usize, usize)> {
+    let sparse_pairs = |spec: EdgeWeightSpec<'_>| -> Vec<(usize, usize)> {
         let g = SparseCandidateGraph::build(fleet, channel, spec, backend.k_near, backend.k_freq);
         let members: Vec<usize> = (0..n).collect();
         match_candidates(&g, &members).pairs
     };
+    // The latency-optimizing mechanisms' objective: the co-designed split
+    // cost when a model is supplied, the eq. (5) proxy otherwise.
+    let latency_spec =
+        EdgeWeightSpec::for_strategy_with(PairingStrategy::Greedy, alpha, beta, cost)
+            .expect("greedy always has a weight spec");
     match strategy {
         PairingStrategy::Random => baselines::random_matching(rng, n),
-        PairingStrategy::Greedy if sparse => {
-            sparse_pairs(EdgeWeightSpec::Eq5 { alpha, beta })
-        }
+        PairingStrategy::Greedy if sparse => sparse_pairs(latency_spec),
         PairingStrategy::Greedy => {
-            greedy::greedy_matching(&ClientGraph::build(fleet, channel, alpha, beta))
+            greedy::greedy_matching(&ClientGraph::build_spec(fleet, channel, latency_spec))
         }
         PairingStrategy::Location if sparse => sparse_pairs(EdgeWeightSpec::NegDistance),
         PairingStrategy::Location => baselines::location_matching(fleet),
         PairingStrategy::Compute if sparse => sparse_pairs(EdgeWeightSpec::FreqGap),
         PairingStrategy::Compute => baselines::compute_matching(fleet),
         PairingStrategy::Exact if exact::fits(n) && !sparse => {
-            exact::exact_matching(&ClientGraph::build(fleet, channel, alpha, beta))
+            exact::exact_matching(&ClientGraph::build_spec(fleet, channel, latency_spec))
         }
         PairingStrategy::Exact => {
             if !exact::fits(n) {
                 log_warn!(
                     "exact pairing infeasible for n={n} (bitmask-DP limit {}); \
-                     falling back to greedy on the eq. (5) objective",
+                     falling back to greedy on the same objective",
                     exact::MAX_N
                 );
             } else {
@@ -111,13 +136,13 @@ pub fn pair_clients_backend(
                 // only defined on the complete graph.
                 log_warn!(
                     "exact pairing requested with the sparse backend; \
-                     using sparse greedy on the eq. (5) objective (n={n})"
+                     using sparse greedy on the same objective (n={n})"
                 );
             }
             if sparse {
-                sparse_pairs(EdgeWeightSpec::Eq5 { alpha, beta })
+                sparse_pairs(latency_spec)
             } else {
-                greedy::greedy_matching(&ClientGraph::build(fleet, channel, alpha, beta))
+                greedy::greedy_matching(&ClientGraph::build_spec(fleet, channel, latency_spec))
             }
         }
     }

@@ -12,7 +12,6 @@
 //! pairing path.
 
 use super::graph::uncovered;
-use super::pair_clients_backend;
 use crate::config::{PairingBackendConfig, PairingStrategy};
 use crate::sim::channel::Channel;
 use crate::sim::latency::Fleet;
@@ -231,12 +230,15 @@ pub fn pair_members(
         channel,
         alpha,
         beta,
+        None,
         rng,
         members,
     )
 }
 
-/// [`pair_members`] with an explicit candidate-graph backend.
+/// [`pair_members`] with an explicit candidate-graph backend and an optional
+/// split-cost model (co-designed Greedy/Exact weights — see
+/// [`super::pair_clients_with`]).
 #[allow(clippy::too_many_arguments)]
 pub fn pair_members_with(
     backend: &PairingBackendConfig,
@@ -245,6 +247,7 @@ pub fn pair_members_with(
     channel: &Channel,
     alpha: f64,
     beta: f64,
+    cost: Option<&crate::split::SplitCostModel>,
     rng: &mut Rng,
     members: &[usize],
 ) -> Matching {
@@ -261,7 +264,8 @@ pub fn pair_members_with(
         };
     }
     let sub = fleet.subset(&ms);
-    let compact = pair_clients_backend(backend, strategy, &sub, channel, alpha, beta, rng);
+    let compact =
+        super::pair_clients_with(backend, strategy, &sub, channel, alpha, beta, cost, rng);
     let pairs: Vec<(usize, usize)> = compact.iter().map(|&(a, b)| (ms[a], ms[b])).collect();
     let solos: Vec<usize> = uncovered(ms.len(), &compact)
         .into_iter()

@@ -36,12 +36,14 @@
 //! two backends together across randomized fleets for all four algorithms.
 
 use super::channel::Channel;
-use super::compute::{split_lengths, transmit_time};
+use super::compute::transmit_time;
 use super::latency::{
-    self, full_local_time, split_stage_durations, upload_time, ClientSet, RoundTime, Schedule,
+    self, full_local_time, mean_cut_of, split_stage_durations, upload_time, ClientSet, RoundTime,
+    Schedule,
 };
 use super::profile::ModelProfile;
-use crate::config::{ComputeConfig, EngineConfig, RoundBackend};
+use crate::config::{ComputeConfig, EngineConfig, RoundBackend, SplitConfig, SplitPolicy};
+use crate::split::{self, PairContext};
 use crate::util::pool::FixedPool;
 use crate::util::rng::splitmix64;
 use std::cmp::Ordering;
@@ -79,12 +81,15 @@ impl PairKey {
 
 /// One pair's cached evaluation: training makespan (upload excluded — it
 /// depends on the uplink rates, which are re-priced per round in O(1)),
-/// per-resource busy seconds and the two flow finish times.
+/// per-resource busy seconds, the two flow finish times, and the planned
+/// cut `L_i` the evaluation was made at. `pub(crate)` so the split planner
+/// (`crate::split`) can search over candidate evaluations.
 #[derive(Clone, Copy, Debug)]
-struct PairEval {
-    makespan: f64,
-    busy: [f64; 4],
-    finish: [f64; 2],
+pub(crate) struct PairEval {
+    pub(crate) makespan: f64,
+    pub(crate) busy: [f64; 4],
+    pub(crate) finish: [f64; 2],
+    pub(crate) cut: usize,
 }
 
 impl PairEval {
@@ -92,6 +97,7 @@ impl PairEval {
         makespan: 0.0,
         busy: [0.0; 4],
         finish: [0.0; 2],
+        cut: 0,
     };
 }
 
@@ -213,13 +219,53 @@ fn two_chain_shop(a: ChainSpec, b: ChainSpec) -> PairEval {
         makespan: finish[0].max(finish[1]),
         busy: busy_s,
         finish,
+        cut: 0,
     }
 }
 
-/// Analytic evaluation of one FedPairing pair — the exact inputs and
-/// resource layout of the DES path in `fedpairing_round_with_solos`. The
-/// pair rate arrives precomputed (it was already evaluated for the cache
-/// key — same bits, no second eq. (3) evaluation per miss).
+/// Analytic evaluation of one FedPairing pair at an explicit cut `L_i` —
+/// the exact inputs and resource layout of the DES path in
+/// `fedpairing_round_with_solos`. This is the kernel the split planner's
+/// `Optimal` policy searches over (`crate::split`), so every candidate cut
+/// is priced with bit-identical arithmetic to the round evaluation itself.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn pair_eval_at_cut(
+    profile: &ModelProfile,
+    sched: &Schedule,
+    comp: &ComputeConfig,
+    f_i: f64,
+    f_j: f64,
+    n_i: usize,
+    n_j: usize,
+    rate: f64,
+    cut: usize,
+) -> PairEval {
+    let w = profile.w();
+    debug_assert!(cut >= 1 && cut < w, "cut {cut} out of range for W={w}");
+    let (l_i, l_j) = (cut, w - cut);
+    // Resources: 0 = cpu_i, 1 = cpu_j, 2 = link i→j, 3 = link j→i.
+    let dir_i = ChainSpec {
+        res: [0, 2, 1, 3, 0],
+        dur: split_stage_durations(profile, comp, sched.batch_size, l_i, f_i, f_j, rate),
+        n_stages: 5 * sched.batches(n_i),
+    };
+    let dir_j = ChainSpec {
+        res: [1, 3, 0, 2, 1],
+        dur: split_stage_durations(profile, comp, sched.batch_size, l_j, f_j, f_i, rate),
+        n_stages: 5 * sched.batches(n_j),
+    };
+    let mut e = two_chain_shop(dir_i, dir_j);
+    e.cut = cut;
+    e
+}
+
+/// Plan the pair's cut under the configured split policy and evaluate it —
+/// the engine's miss path. The pair rate arrives precomputed (it was
+/// already evaluated for the cache key — same bits, no second eq. (3)
+/// evaluation per miss). With the default `Paper` policy this reduces to
+/// the pre-planner kernel bit-for-bit: `split_lengths` cut, one
+/// `two_chain_shop` evaluation.
+#[allow(clippy::too_many_arguments)]
 fn pair_kernel<C: ClientSet>(
     fleet: &C,
     i: usize,
@@ -228,22 +274,21 @@ fn pair_kernel<C: ClientSet>(
     profile: &ModelProfile,
     sched: &Schedule,
     comp: &ComputeConfig,
+    split_cfg: &SplitConfig,
 ) -> PairEval {
-    let w = profile.w();
-    let (f_i, f_j) = (fleet.freq_hz(i), fleet.freq_hz(j));
-    let (l_i, l_j) = split_lengths(f_i, f_j, w);
-    // Resources: 0 = cpu_i, 1 = cpu_j, 2 = link i→j, 3 = link j→i.
-    let dir_i = ChainSpec {
-        res: [0, 2, 1, 3, 0],
-        dur: split_stage_durations(profile, comp, sched.batch_size, l_i, f_i, f_j, rate),
-        n_stages: 5 * sched.batches(fleet.n_samples(i)),
-    };
-    let dir_j = ChainSpec {
-        res: [1, 3, 0, 2, 1],
-        dur: split_stage_durations(profile, comp, sched.batch_size, l_j, f_j, f_i, rate),
-        n_stages: 5 * sched.batches(fleet.n_samples(j)),
-    };
-    two_chain_shop(dir_i, dir_j)
+    split::plan_eval(
+        split_cfg,
+        &PairContext {
+            profile,
+            sched,
+            comp,
+            f_i_hz: fleet.freq_hz(i),
+            f_j_hz: fleet.freq_hz(j),
+            n_i: fleet.n_samples(i),
+            n_j: fleet.n_samples(j),
+            rate_bps: rate,
+        },
+    )
 }
 
 /// A pending server arrival in the SplitFed recurrence. Min-ordered by
@@ -291,8 +336,13 @@ pub struct RoundEngine {
     backend: RoundBackend,
     pool: FixedPool,
     flow_diagnostics: bool,
-    /// Fingerprint of the (profile, schedule, compute) context the cached
-    /// entries were computed under; a context switch clears the cache.
+    /// Split-planning policy deciding each pair's cut (default `Paper`).
+    split: SplitConfig,
+    /// Fingerprint of the (profile, schedule, compute, split-config)
+    /// context the cached entries were computed under; a context switch
+    /// clears the cache. Folding the split config here is what makes the
+    /// memo key cut-aware: a cached entry can only be reused under the
+    /// policy (and search bounds) that chose its cut.
     context: u64,
     cache: HashMap<PairKey, PairEval>,
     next: HashMap<PairKey, PairEval>,
@@ -310,6 +360,7 @@ impl RoundEngine {
             backend: cfg.backend,
             pool: FixedPool::new(cfg.threads),
             flow_diagnostics: cfg.flow_diagnostics,
+            split: SplitConfig::default(),
             context: 0,
             cache: HashMap::new(),
             next: HashMap::new(),
@@ -321,8 +372,19 @@ impl RoundEngine {
         }
     }
 
+    /// Install a split-planning config (builder style; default is `Paper`,
+    /// which reproduces the pre-planner engine bit-for-bit).
+    pub fn with_split(mut self, split: SplitConfig) -> RoundEngine {
+        self.split = split;
+        self
+    }
+
     pub fn backend(&self) -> RoundBackend {
         self.backend
+    }
+
+    pub fn split(&self) -> &SplitConfig {
+        &self.split
     }
 
     pub fn threads(&self) -> usize {
@@ -358,6 +420,14 @@ impl RoundEngine {
         fold(sched.batch_size as u64);
         fold(sched.epochs as u64);
         fold(comp.cycles_per_flop.to_bits());
+        // The split config decides each cached entry's cut — switching
+        // policy or search bounds must invalidate everything.
+        fold(match self.split.policy {
+            SplitPolicy::Paper => 0,
+            SplitPolicy::Balanced => 1,
+            SplitPolicy::Optimal => 2,
+        });
+        fold(self.split.min_layers as u64);
         if acc != self.context {
             self.cache.clear();
             self.next.clear();
@@ -381,7 +451,7 @@ impl RoundEngine {
         include_upload: bool,
     ) -> RoundTime {
         if self.backend == RoundBackend::Des {
-            let mut rt = latency::fedpairing_round_with_solos(
+            let mut rt = latency::fedpairing_round_planned(
                 fleet,
                 pairs,
                 solos,
@@ -390,6 +460,7 @@ impl RoundEngine {
                 channel,
                 comp,
                 include_upload,
+                &self.split,
             );
             if !self.flow_diagnostics {
                 rt.flow_finish_s = Vec::new();
@@ -425,12 +496,22 @@ impl RoundEngine {
         let computed: Vec<PairEval> = {
             let miss = &self.miss;
             let keys = &self.keys;
+            let split_cfg = self.split;
             let eval_one = |m: usize| {
                 let k = miss[m];
                 let (i, j) = pairs[k];
                 // Reuse the rate evaluated for the cache key — bit-exactly
                 // the value the kernel would recompute.
-                pair_kernel(fleet, i, j, f64::from_bits(keys[k].rate), profile, sched, comp)
+                pair_kernel(
+                    fleet,
+                    i,
+                    j,
+                    f64::from_bits(keys[k].rate),
+                    profile,
+                    sched,
+                    comp,
+                    &split_cfg,
+                )
             };
             if miss.len() < PAR_MIN_MISSES || self.pool.threads() == 1 {
                 (0..miss.len()).map(eval_one).collect()
@@ -454,6 +535,7 @@ impl RoundEngine {
         let mut total = 0.0f64;
         let mut max_cpu = 0.0f64;
         let mut max_link = 0.0f64;
+        let mut cut_sum = 0usize;
         let mut finishes = if diag {
             Vec::with_capacity(pairs.len() * 2 + solos.len())
         } else {
@@ -470,6 +552,7 @@ impl RoundEngine {
             total = total.max(pair_total);
             max_cpu = max_cpu.max(e.busy[0]).max(e.busy[1]);
             max_link = max_link.max(e.busy[2]).max(e.busy[3]);
+            cut_sum += e.cut;
             if diag {
                 finishes.extend_from_slice(&e.finish);
             }
@@ -487,6 +570,7 @@ impl RoundEngine {
             total_s: total,
             max_cpu_busy_s: max_cpu,
             max_link_busy_s: max_link,
+            mean_cut: mean_cut_of(cut_sum, pairs.len()),
             flow_finish_s: finishes,
         }
     }
@@ -519,6 +603,7 @@ impl RoundEngine {
             total_s: total,
             max_cpu_busy_s: max_cpu,
             max_link_busy_s: 0.0,
+            mean_cut: f64::NAN,
             flow_finish_s: Vec::new(),
         }
     }
@@ -596,6 +681,7 @@ impl RoundEngine {
             total_s: total,
             max_cpu_busy_s: max_cpu,
             max_link_busy_s: max_link,
+            mean_cut: cut as f64,
             flow_finish_s: finishes,
         }
     }
@@ -715,6 +801,7 @@ impl RoundEngine {
             total_s: total,
             max_cpu_busy_s: max_cpu,
             max_link_busy_s: max_link,
+            mean_cut: cut as f64,
             flow_finish_s: if self.flow_diagnostics {
                 finish
             } else {
@@ -728,6 +815,7 @@ impl RoundEngine {
 mod tests {
     use super::*;
     use crate::config::{ChannelConfig, ExperimentConfig};
+    use crate::sim::compute::split_lengths;
     use crate::sim::latency::Fleet;
     use crate::util::rng::Rng;
 
@@ -906,6 +994,82 @@ mod tests {
         let d = latency::fedpairing_round(&fleet, &pairs, &profile, &sched, &channel, &comp, true);
         assert_eq!(a.total_s.to_bits(), d.total_s.to_bits());
         assert_eq!(eng.cache_misses(), 0, "oracle backend must not touch the cache");
+    }
+
+    #[test]
+    fn split_policy_switch_clears_the_cache() {
+        use crate::config::{SplitConfig, SplitPolicy};
+        let (fleet, profile, sched, channel, comp) = setup();
+        let pairs = pair_all(fleet.n());
+        let mut paper = engine(1);
+        let a =
+            paper.fedpairing_round(&fleet, &pairs, &[], &profile, &sched, &channel, &comp, true);
+        let mut opt = engine(1).with_split(SplitConfig {
+            policy: SplitPolicy::Optimal,
+            ..SplitConfig::default()
+        });
+        // Same inputs, different policy: full recompute, and the optimal
+        // round can never be slower than the paper round.
+        let b = opt.fedpairing_round(&fleet, &pairs, &[], &profile, &sched, &channel, &comp, true);
+        assert_eq!(opt.cache_misses(), pairs.len() as u64);
+        assert!(b.total_s <= a.total_s + 1e-9, "{} !<= {}", b.total_s, a.total_s);
+        assert!(b.mean_cut.is_finite() && a.mean_cut.is_finite());
+        // Switching the policy on a live engine invalidates its entries.
+        let c = opt.fedpairing_round(&fleet, &pairs, &[], &profile, &sched, &channel, &comp, true);
+        assert_eq!(opt.cache_misses(), pairs.len() as u64, "stable round recomputed");
+        assert_eq!(b.total_s.to_bits(), c.total_s.to_bits());
+        let mut flipped = RoundEngine::new(&EngineConfig {
+            backend: RoundBackend::Analytic,
+            threads: 1,
+            flow_diagnostics: true,
+        })
+        .with_split(SplitConfig {
+            policy: SplitPolicy::Balanced,
+            ..SplitConfig::default()
+        });
+        flipped.fedpairing_round(&fleet, &pairs, &[], &profile, &sched, &channel, &comp, true);
+        flipped = flipped.with_split(SplitConfig::default());
+        flipped.fedpairing_round(&fleet, &pairs, &[], &profile, &sched, &channel, &comp, true);
+        assert_eq!(
+            flipped.cache_misses(),
+            2 * pairs.len() as u64,
+            "policy switch must clear the memo cache"
+        );
+    }
+
+    #[test]
+    fn planned_engine_matches_planned_des_bit_for_bit() {
+        use crate::config::{SplitConfig, SplitPolicy};
+        let (fleet, profile, sched, channel, comp) = setup();
+        let pairs = pair_all(fleet.n());
+        for policy in [SplitPolicy::Balanced, SplitPolicy::Optimal] {
+            let split = SplitConfig {
+                policy,
+                ..SplitConfig::default()
+            };
+            let mut eng = engine(1).with_split(split);
+            let ana = eng
+                .fedpairing_round(&fleet, &pairs, &[9], &profile, &sched, &channel, &comp, true);
+            let des = latency::fedpairing_round_planned(
+                &fleet, &pairs, &[9], &profile, &sched, &channel, &comp, true, &split,
+            );
+            assert_eq!(ana.total_s.to_bits(), des.total_s.to_bits(), "{policy:?}");
+            assert_eq!(ana.flow_finish_s, des.flow_finish_s, "{policy:?}");
+            assert_eq!(ana.mean_cut.to_bits(), des.mean_cut.to_bits(), "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn paper_policy_round_reports_paper_cuts() {
+        let (fleet, profile, sched, channel, comp) = setup();
+        let pairs = pair_all(fleet.n());
+        let mut eng = engine(1);
+        let rt = eng.fedpairing_round(&fleet, &pairs, &[], &profile, &sched, &channel, &comp, true);
+        let expect: usize = pairs
+            .iter()
+            .map(|&(i, j)| split_lengths(fleet.freqs_hz[i], fleet.freqs_hz[j], profile.w()).0)
+            .sum();
+        assert_eq!(rt.mean_cut, expect as f64 / pairs.len() as f64);
     }
 
     #[test]

@@ -22,11 +22,11 @@
 //!   server CPU — server queueing contention emerges from FIFO service.
 
 use super::channel::Channel;
-use super::compute::{compute_time, split_lengths, transmit_time, ClientResources};
+use super::compute::{compute_time, transmit_time, ClientResources};
 use super::des::{simulate, Chain};
 use super::geometry::{place_uniform_disk, Pos};
 use super::profile::{ModelProfile, BWD_FLOPS_FACTOR};
-use crate::config::{ComputeConfig, ExperimentConfig};
+use crate::config::{ComputeConfig, ExperimentConfig, SplitConfig};
 use crate::util::rng::Rng;
 
 /// Read access to a set of clients — either an owned [`Fleet`] or a borrowed
@@ -170,8 +170,23 @@ pub struct RoundTime {
     pub max_cpu_busy_s: f64,
     /// Busiest link's busy seconds (comm pressure).
     pub max_link_busy_s: f64,
+    /// Mean planned cut this round: the average front length `L_i` over the
+    /// FedPairing pairs (solos excluded), the configured cut for SL /
+    /// SplitFed, `NaN` for vanilla FL or a pairless round.
+    pub mean_cut: f64,
     /// Per-flow finish times (diagnostic).
     pub flow_finish_s: Vec<f64>,
+}
+
+/// Mean planned cut over a round's pairs (`NaN` when there are none).
+/// Shared by the DES path and the analytic engine so both compute the
+/// statistic with identical arithmetic.
+pub(crate) fn mean_cut_of(cut_sum: usize, n_pairs: usize) -> f64 {
+    if n_pairs == 0 {
+        f64::NAN
+    } else {
+        cut_sum as f64 / n_pairs as f64
+    }
 }
 
 /// Bytes of one f32 logits row set for a batch.
@@ -297,7 +312,9 @@ pub fn fedpairing_round<C: ClientSet>(
 /// [`fedpairing_round`] extended with **solo clients** (the fleet-dynamics
 /// fallback): an unpaired client trains the *full* model locally, exactly
 /// like a vanilla-FL participant, and uploads it alongside the pairs. The
-/// round ends when the slowest pair *or* solo finishes.
+/// round ends when the slowest pair *or* solo finishes. Cuts follow the
+/// paper's `split_lengths` rule; see [`fedpairing_round_planned`] for the
+/// split-planner-aware variant.
 #[allow(clippy::too_many_arguments)]
 pub fn fedpairing_round_with_solos<C: ClientSet>(
     fleet: &C,
@@ -309,15 +326,60 @@ pub fn fedpairing_round_with_solos<C: ClientSet>(
     comp: &ComputeConfig,
     include_upload: bool,
 ) -> RoundTime {
+    fedpairing_round_planned(
+        fleet,
+        pairs,
+        solos,
+        profile,
+        sched,
+        channel,
+        comp,
+        include_upload,
+        &SplitConfig::default(),
+    )
+}
+
+/// [`fedpairing_round_with_solos`] with each pair's cut chosen by the
+/// configured split-planning policy (`crate::split`) — the DES oracle for
+/// the planner-aware engine. The default `Paper` policy computes
+/// `split_lengths` exactly, so [`fedpairing_round_with_solos`] delegates
+/// here without any float-level change.
+#[allow(clippy::too_many_arguments)]
+pub fn fedpairing_round_planned<C: ClientSet>(
+    fleet: &C,
+    pairs: &[(usize, usize)],
+    solos: &[usize],
+    profile: &ModelProfile,
+    sched: &Schedule,
+    channel: &Channel,
+    comp: &ComputeConfig,
+    include_upload: bool,
+    split: &SplitConfig,
+) -> RoundTime {
     let w = profile.w();
     let mut total = 0.0f64;
     let mut max_cpu = 0.0f64;
     let mut max_link = 0.0f64;
+    let mut cut_sum = 0usize;
     let mut finishes = Vec::with_capacity(pairs.len() * 2);
     for &(i, j) in pairs {
         let (f_i, f_j) = (fleet.freq_hz(i), fleet.freq_hz(j));
-        let (l_i, l_j) = split_lengths(f_i, f_j, w);
         let rate = channel.rate(&fleet.pos(i), &fleet.pos(j));
+        let l_i = crate::split::plan_cut(
+            split,
+            &crate::split::PairContext {
+                profile,
+                sched,
+                comp,
+                f_i_hz: f_i,
+                f_j_hz: f_j,
+                n_i: fleet.n_samples(i),
+                n_j: fleet.n_samples(j),
+                rate_bps: rate,
+            },
+        );
+        let l_j = w - l_i;
+        cut_sum += l_i;
         // Local resources: 0 = cpu_i, 1 = cpu_j, 2 = link i→j, 3 = link j→i.
         let mut dir_i = Chain::new();
         push_split_batches(
@@ -374,6 +436,7 @@ pub fn fedpairing_round_with_solos<C: ClientSet>(
         total_s: total,
         max_cpu_busy_s: max_cpu,
         max_link_busy_s: max_link,
+        mean_cut: mean_cut_of(cut_sum, pairs.len()),
         flow_finish_s: finishes,
     }
 }
@@ -404,6 +467,7 @@ pub fn fl_round<C: ClientSet>(
         total_s: finishes.iter().cloned().fold(0.0, f64::max),
         max_cpu_busy_s: max_cpu,
         max_link_busy_s: 0.0,
+        mean_cut: f64::NAN,
         flow_finish_s: finishes,
     }
 }
@@ -466,6 +530,7 @@ pub fn sl_round<C: ClientSet>(
         total_s: total,
         max_cpu_busy_s: max_cpu,
         max_link_busy_s: max_link,
+        mean_cut: cut as f64,
         flow_finish_s: finishes,
     }
 }
@@ -534,6 +599,7 @@ pub fn splitfed_round<C: ClientSet>(
         total_s: total,
         max_cpu_busy_s: max_cpu,
         max_link_busy_s: max_link,
+        mean_cut: cut as f64,
         flow_finish_s: rep.chain_finish,
     }
 }

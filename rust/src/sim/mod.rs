@@ -1,6 +1,6 @@
 //! The heterogeneity/latency simulation substrate (DESIGN.md §2): client
 //! geometry, the eq. (3) OFDM channel, CPU heterogeneity, static model cost
-//! profiles (ResNet-18/10, the AOT MLP), a deterministic discrete-event
+//! profiles (ResNet-18/34/10, the AOT MLP), a deterministic discrete-event
 //! engine, per-algorithm round-time models that regenerate the paper's
 //! Tables I and II, and the incremental round-time engine (analytic kernels
 //! + memo cache + parallel evaluation, DESIGN.md §6) that makes per-round

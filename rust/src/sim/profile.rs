@@ -84,6 +84,24 @@ impl ModelProfile {
         Self::resnet_cifar("resnet10", &[1, 1, 1, 1])
     }
 
+    /// CIFAR-style ResNet-34: 3/4/6/3 basic blocks per stage. W = 18 units —
+    /// deep enough that the split planner's cut search is non-trivial.
+    pub fn resnet34_cifar() -> ModelProfile {
+        Self::resnet_cifar("resnet34", &[3, 4, 6, 3])
+    }
+
+    /// The profile behind a [`ModelPreset`](crate::config::ModelPreset) —
+    /// the single mapping the config layer, CLI and drivers share.
+    pub fn from_preset(preset: crate::config::ModelPreset) -> ModelProfile {
+        use crate::config::ModelPreset;
+        match preset {
+            ModelPreset::Resnet18 => Self::resnet18_cifar(),
+            ModelPreset::Resnet34 => Self::resnet34_cifar(),
+            ModelPreset::Resnet10 => Self::resnet10_cifar(),
+            ModelPreset::Mlp => Self::mlp(3072, 256, 10, 8),
+        }
+    }
+
     fn resnet_cifar(name: &str, blocks_per_stage: &[usize]) -> ModelProfile {
         let mut layers = Vec::new();
         // Stem: conv3x3, 3→64, 32×32 output.
@@ -206,6 +224,40 @@ mod tests {
         assert!((0.9..1.4).contains(&gf), "gflops={gf}");
         let m = p.params(0, p.w()) as f64 / 1e6;
         assert!((10.0..12.5).contains(&m), "params={m}M");
+    }
+
+    #[test]
+    fn resnet34_shape_and_cost() {
+        let p = ModelProfile::resnet34_cifar();
+        assert_eq!(p.w(), 18); // stem + 16 blocks + fc
+        assert_eq!(p.layers[0].name, "conv1");
+        assert_eq!(p.layers[17].name, "fc");
+        // CIFAR ResNet-34 ≈ 1.16 GMACs fwd ≈ 2.3 GFLOPs, ≈ 21.3 M params.
+        let gf = p.fwd_flops(0, p.w()) / 1e9;
+        assert!((1.9..2.8).contains(&gf), "gflops={gf}");
+        let m = p.params(0, p.w()) as f64 / 1e6;
+        assert!((20.0..23.0).contains(&m), "params={m}M");
+        // Strictly deeper and costlier than ResNet-18.
+        let r18 = ModelProfile::resnet18_cifar();
+        assert!(p.fwd_flops(0, 18) > r18.fwd_flops(0, 10));
+        assert!(p.params(0, 18) > r18.params(0, 10));
+    }
+
+    #[test]
+    fn preset_w_matches_config_constants() {
+        use crate::config::ModelPreset;
+        for preset in [
+            ModelPreset::Resnet18,
+            ModelPreset::Resnet34,
+            ModelPreset::Resnet10,
+            ModelPreset::Mlp,
+        ] {
+            assert_eq!(
+                ModelProfile::from_preset(preset).w(),
+                preset.w(),
+                "{preset}: config W constant out of sync with the profile"
+            );
+        }
     }
 
     #[test]

@@ -134,7 +134,7 @@ fn churn_run(cfg: &ExperimentConfig, rounds: usize) -> Vec<(usize, Matching)> {
     for round in 1..=rounds {
         let ev = dynamics.step(round);
         let channel = dynamics.channel();
-        maintain_matching(&mut matching, &dynamics, &ev, &channel, cfg, &mut pairing_rng);
+        maintain_matching(&mut matching, &dynamics, &ev, &channel, cfg, None, &mut pairing_rng);
         let m = matching.clone().expect("matching initialized");
         assert!(
             m.is_valid_over(&dynamics.alive_indices()),
@@ -189,7 +189,15 @@ fn scale_metro_pairing_and_incremental_repair() {
     let mut matching = None;
     let ev = dynamics.step(1);
     let channel = dynamics.channel();
-    assert!(maintain_matching(&mut matching, &dynamics, &ev, &channel, &cfg, &mut pairing_rng));
+    assert!(maintain_matching(
+        &mut matching,
+        &dynamics,
+        &ev,
+        &channel,
+        &cfg,
+        None,
+        &mut pairing_rng
+    ));
     let m0 = matching.clone().unwrap();
     let alive = dynamics.alive_indices();
     assert!(m0.is_valid_over(&alive));
@@ -201,7 +209,8 @@ fn scale_metro_pairing_and_incremental_repair() {
     let ev = dynamics.step(2);
     assert!(!ev.departed.is_empty(), "metro scenario produced no churn");
     let channel = dynamics.channel();
-    let changed = maintain_matching(&mut matching, &dynamics, &ev, &channel, &cfg, &mut pairing_rng);
+    let changed =
+        maintain_matching(&mut matching, &dynamics, &ev, &channel, &cfg, None, &mut pairing_rng);
     assert!(changed, "repair did not run");
     let m1 = matching.unwrap();
     assert!(m1.is_valid_over(&dynamics.alive_indices()));
