@@ -1,0 +1,184 @@
+//! Telemetry overhead bench: 50k-client metro-scale engine rounds with the
+//! registry off, on, and on with full trace export. The acceptance
+//! criteria ride on the first two:
+//!
+//! * **disabled < 1 %** — hooks cost one relaxed load + branch when off, so
+//!   two timed passes of the *same* disabled configuration (an A/A
+//!   comparison) must agree within the noise floor;
+//! * **enabled < 5 %** — counters and lane collection may not tax the honest
+//!   metro workload (per-round fading → real misses every round).
+//!
+//! Emits `BENCH_telemetry.json` for CI.
+
+#[path = "common.rs"]
+mod common;
+
+use fedpairing::config::{ExperimentConfig, TelemetryConfig};
+use fedpairing::pairing::{match_candidates, EdgeWeightSpec, SparseCandidateGraph};
+use fedpairing::sim::channel::Channel;
+use fedpairing::sim::engine::RoundEngine;
+use fedpairing::sim::latency::{Fleet, Schedule};
+use fedpairing::sim::profile::ModelProfile;
+use fedpairing::telemetry::registry::{self, Counter};
+use fedpairing::telemetry::Telemetry;
+use fedpairing::util::json::{Json, JsonObj};
+use fedpairing::util::rng::Rng;
+use std::time::Instant;
+
+const N_CLIENTS: usize = 50_000;
+const ROUNDS: usize = 100;
+
+/// Per-round channels under metro-scale block fading (2 dB log-normal) —
+/// every pass replays the identical sequence.
+fn faded_channels(cfg: &ExperimentConfig, rounds: usize) -> Vec<Channel> {
+    let mut rng = Rng::with_stream(cfg.seed, 0xFADE);
+    (0..rounds)
+        .map(|_| {
+            let mut ch = cfg.channel;
+            ch.ref_gain *= 10f64.powf(rng.normal_ms(0.0, 2.0) / 10.0);
+            Channel::new(ch)
+        })
+        .collect()
+}
+
+fn main() {
+    let mut cfg = ExperimentConfig::preset("metro-scale").expect("metro-scale preset");
+    cfg.n_clients = N_CLIENTS;
+    cfg.seed = 23;
+    let fleet = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+    let channel = Channel::new(cfg.channel);
+    let members: Vec<usize> = (0..N_CLIENTS).collect();
+    let graph = SparseCandidateGraph::build(
+        &fleet,
+        &channel,
+        EdgeWeightSpec::Eq5 {
+            alpha: cfg.alpha,
+            beta: cfg.beta,
+        },
+        cfg.backend.k_near,
+        cfg.backend.k_freq,
+    );
+    let matching = match_candidates(&graph, &members);
+    let profile = ModelProfile::resnet18_cifar();
+    let sched = Schedule {
+        batch_size: 32,
+        epochs: cfg.local_epochs,
+    };
+    let channels = faded_channels(&cfg, ROUNDS);
+
+    // One timed pass: a fresh engine over the fade sequence, optionally
+    // feeding the telemetry sink exactly like the drivers do.
+    let run_pass = |sink: &mut Option<Telemetry>| -> f64 {
+        let mut engine = RoundEngine::new(&cfg.engine);
+        let mut sim_total = 0.0f64;
+        let t = Instant::now();
+        for (r, ch) in channels.iter().enumerate() {
+            if let Some(s) = sink.as_mut() {
+                s.begin_round(r + 1);
+            }
+            let rt = engine.fedpairing_round(
+                &fleet,
+                &matching.pairs,
+                &matching.solos,
+                &profile,
+                &sched,
+                ch,
+                &cfg.compute,
+                true,
+            );
+            sim_total += rt.total_s;
+            if let Some(s) = sink.as_mut() {
+                s.mark("engine");
+                let lanes = engine.pair_lanes().to_vec();
+                s.end_round(&rt, N_CLIENTS, &lanes, sim_total - rt.total_s);
+            }
+            common::black_box(rt.total_s);
+        }
+        t.elapsed().as_secs_f64()
+    };
+
+    println!(
+        "== telemetry overhead (n={N_CLIENTS}, {} pairs, {ROUNDS} faded engine rounds) ==",
+        matching.pairs.len()
+    );
+
+    // Warmup (untimed), then the A/A disabled pair.
+    registry::set_enabled(false);
+    let mut none: Option<Telemetry> = None;
+    run_pass(&mut none);
+    let off_a = run_pass(&mut none);
+    let off_b = run_pass(&mut none);
+
+    // Enabled: registry counts + lane collection, no exporters.
+    registry::reset();
+    let mut on_sink = Some(Telemetry::new(&TelemetryConfig {
+        enabled: true,
+        ..TelemetryConfig::default()
+    }));
+    let on = run_pass(&mut on_sink);
+    let snap = registry::snapshot();
+
+    // Enabled + full trace export (spans, lanes, prom, jsonl), sampled 1:10
+    // so the trace of a 100-round metro run stays small.
+    std::fs::create_dir_all("target").ok();
+    let trace_path = "target/bench-telemetry-trace.json".to_string();
+    let mut trace_sink = Some(Telemetry::new(&TelemetryConfig {
+        enabled: true,
+        sample_every: 10,
+        trace_out: Some(trace_path),
+        top_k_pairs: 8,
+    }));
+    let mut trace = run_pass(&mut trace_sink);
+    let t = Instant::now();
+    let written = trace_sink.as_mut().unwrap().finish().expect("trace export");
+    trace += t.elapsed().as_secs_f64();
+    registry::set_enabled(false);
+    registry::reset();
+
+    let off_min = off_a.min(off_b);
+    let disabled_pct = 100.0 * (off_b - off_a) / off_a;
+    let enabled_pct = 100.0 * (on - off_min) / off_min;
+    let trace_pct = 100.0 * (trace - off_min) / off_min;
+    println!("  {:<22} {:>10.2} rounds/s", "off (pass A)", ROUNDS as f64 / off_a);
+    println!("  {:<22} {:>10.2} rounds/s", "off (pass B)", ROUNDS as f64 / off_b);
+    println!("  {:<22} {:>10.2} rounds/s", "on", ROUNDS as f64 / on);
+    println!("  {:<22} {:>10.2} rounds/s", "on + trace export", ROUNDS as f64 / trace);
+    println!(
+        "  disabled A/A delta: {disabled_pct:+.2} %   enabled: {enabled_pct:+.2} %   \
+         trace: {trace_pct:+.2} %"
+    );
+    println!(
+        "  enabled-pass registry: {} misses, {} analytic kernel evals, {} pool chunks",
+        snap.counter(Counter::MemoMisses.name()),
+        snap.counter(Counter::KernelEvalsAnalytic.name()),
+        snap.counter(Counter::PoolChunks.name()),
+    );
+    for p in &written {
+        println!("  wrote {p}");
+    }
+    common::check_shape(
+        "disabled-path overhead (A/A noise) < 1%",
+        disabled_pct.abs() < 1.0,
+    );
+    common::check_shape("enabled overhead < 5%", enabled_pct < 5.0);
+
+    let mut out = JsonObj::new();
+    out.insert("bench", Json::str("telemetry"));
+    out.insert(
+        "workload",
+        Json::str("fedpairing metro-scale fading, telemetry off / on / trace"),
+    );
+    out.insert("n", Json::num(N_CLIENTS as f64));
+    out.insert("pairs", Json::num(matching.pairs.len() as f64));
+    out.insert("rounds", Json::num(ROUNDS as f64));
+    out.insert("off_a_rounds_per_s", Json::num(ROUNDS as f64 / off_a));
+    out.insert("off_b_rounds_per_s", Json::num(ROUNDS as f64 / off_b));
+    out.insert("on_rounds_per_s", Json::num(ROUNDS as f64 / on));
+    out.insert("trace_rounds_per_s", Json::num(ROUNDS as f64 / trace));
+    out.insert("disabled_aa_delta_pct", Json::num(disabled_pct));
+    out.insert("enabled_overhead_pct", Json::num(enabled_pct));
+    out.insert("trace_overhead_pct", Json::num(trace_pct));
+    let path = "BENCH_telemetry.json";
+    std::fs::write(path, Json::Obj(out).to_string_pretty(2)).expect("write bench json");
+    println!("wrote {path}");
+}

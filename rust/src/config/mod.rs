@@ -242,6 +242,45 @@ impl Default for EngineConfig {
     }
 }
 
+/// Telemetry knobs: the metrics registry gate, export sampling, trace
+/// output and pair-lane depth (DESIGN.md §8). Disabled by default — the
+/// registry hooks then cost one atomic load + branch, and the simulation is
+/// bit-identical either way (property-tested in `tests/telemetry.rs`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TelemetryConfig {
+    /// Master gate for the metrics registry and the exporters.
+    pub enabled: bool,
+    /// Export every Nth round to the trace / JSONL streams (1 = every
+    /// round). The registry counters always run while enabled.
+    pub sample_every: usize,
+    /// Chrome trace-event output path; also derives the Prometheus
+    /// (`<path>.prom`) and JSONL (`<path>.events.jsonl`) sibling outputs.
+    /// `None` keeps the registry live without writing files.
+    pub trace_out: Option<String>,
+    /// Trace lanes for the k slowest pairs per sampled round.
+    pub top_k_pairs: usize,
+}
+
+impl TelemetryConfig {
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.sample_every == 0 {
+            bail!("telemetry sample_every must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig {
+            enabled: false,
+            sample_every: 1,
+            trace_out: None,
+            top_k_pairs: 8,
+        }
+    }
+}
+
 /// Which split-planning policy decides the per-pair model cut (DESIGN.md §7).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SplitPolicy {
@@ -659,6 +698,10 @@ pub struct ExperimentConfig {
     /// Split-planning subsystem: per-pair cut policy, search floor, pairing
     /// co-design (DESIGN.md §7). Default `paper` reproduces `split_lengths`.
     pub split: SplitConfig,
+    /// Observability: metrics registry gate, stage-breakdown export
+    /// sampling, trace output (DESIGN.md §8). Off by default; never affects
+    /// simulation results.
+    pub telemetry: TelemetryConfig,
     /// Model cost profile for the engine-free latency paths (`fedpairing
     /// churn`, `simulate_scenario`, planner) and cut-knob validation.
     pub model: ModelPreset,
@@ -717,6 +760,7 @@ impl Default for ExperimentConfig {
             backend: PairingBackendConfig::default(),
             engine: EngineConfig::default(),
             split: SplitConfig::default(),
+            telemetry: TelemetryConfig::default(),
             model: ModelPreset::Resnet18,
             n_clients: 20,
             area_radius_m: 50.0,
@@ -782,6 +826,7 @@ impl ExperimentConfig {
         self.backend.validate()?;
         self.engine.validate()?;
         self.split.validate(self.model.w())?;
+        self.telemetry.validate()?;
         // Cut knobs are bounded here, against the configured model profile,
         // instead of being silently clamped deep inside the drivers.
         let w = self.model.w();
@@ -944,6 +989,18 @@ impl ExperimentConfig {
         sp.insert("min_layers", Json::num(self.split.min_layers as f64));
         sp.insert("co_design", Json::Bool(self.split.co_design));
         o.insert("split", Json::Obj(sp));
+        let mut tm = JsonObj::new();
+        tm.insert("enabled", Json::Bool(self.telemetry.enabled));
+        tm.insert("sample_every", Json::num(self.telemetry.sample_every as f64));
+        tm.insert(
+            "trace_out",
+            match &self.telemetry.trace_out {
+                Some(p) => Json::str(p),
+                None => Json::Null,
+            },
+        );
+        tm.insert("top_k_pairs", Json::num(self.telemetry.top_k_pairs as f64));
+        o.insert("telemetry", Json::Obj(tm));
         o.insert("model", Json::str(self.model.name()));
         o.insert("n_clients", Json::num(self.n_clients as f64));
         o.insert("area_radius_m", Json::num(self.area_radius_m));
@@ -1088,6 +1145,35 @@ impl ExperimentConfig {
                 c.split.co_design = v
                     .as_bool()
                     .ok_or_else(|| ConfigError("split co_design must be a bool".into()))?;
+            }
+        }
+        if let Some(tm) = obj.get("telemetry").and_then(|v| v.as_obj()) {
+            if let Some(v) = tm.get("enabled") {
+                c.telemetry.enabled = v
+                    .as_bool()
+                    .ok_or_else(|| ConfigError("telemetry enabled must be a bool".into()))?;
+            }
+            if let Some(v) = tm.get("sample_every") {
+                c.telemetry.sample_every = v.as_usize().ok_or_else(|| {
+                    ConfigError("telemetry sample_every must be a non-negative integer".into())
+                })?;
+            }
+            match tm.get("trace_out") {
+                None | Some(Json::Null) => {}
+                Some(v) => {
+                    c.telemetry.trace_out = Some(
+                        v.as_str()
+                            .ok_or_else(|| {
+                                ConfigError("telemetry trace_out must be a string or null".into())
+                            })?
+                            .to_string(),
+                    );
+                }
+            }
+            if let Some(v) = tm.get("top_k_pairs") {
+                c.telemetry.top_k_pairs = v.as_usize().ok_or_else(|| {
+                    ConfigError("telemetry top_k_pairs must be a non-negative integer".into())
+                })?;
             }
         }
         if let Some(v) = obj.get("model") {
@@ -1240,6 +1326,24 @@ mod tests {
         assert_eq!(c2.seed, 12345);
         // full structural equality via re-serialization
         assert_eq!(j.to_string(), c2.to_json().to_string());
+    }
+
+    #[test]
+    fn telemetry_config_roundtrips_and_validates() {
+        let mut c = ExperimentConfig::default();
+        c.telemetry.enabled = true;
+        c.telemetry.sample_every = 5;
+        c.telemetry.trace_out = Some("out/trace.json".into());
+        c.telemetry.top_k_pairs = 3;
+        let j = c.to_json();
+        let c2 = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c2.telemetry, c.telemetry);
+        assert_eq!(j.to_string(), c2.to_json().to_string());
+        // sample_every = 0 is rejected, null trace_out stays None.
+        let bad = Json::parse(r#"{"telemetry": {"sample_every": 0}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&bad).is_err());
+        let null = Json::parse(r#"{"telemetry": {"trace_out": null}}"#).unwrap();
+        assert_eq!(ExperimentConfig::from_json(&null).unwrap().telemetry.trace_out, None);
     }
 
     #[test]

@@ -26,10 +26,11 @@ use crate::runtime::Engine;
 use crate::sim::channel::Channel;
 use crate::sim::compute::{aggregation_weights, split_lengths};
 use crate::sim::engine::RoundEngine;
-use crate::sim::latency::{Fleet, FleetView, Schedule};
+use crate::sim::latency::{Fleet, FleetView, RoundTime, Schedule};
 use crate::split::SplitCostModel;
+use crate::telemetry::Telemetry;
 use crate::util::index::InverseIndex;
-use crate::log_debug;
+use crate::{log_debug, log_info};
 use anyhow::{Context, Result};
 
 /// A fully materialized experiment: fleet, data, engine, channel.
@@ -151,12 +152,16 @@ impl Experiment {
     pub fn run(&mut self) -> Result<RunResult> {
         let t0 = std::time::Instant::now();
         let mut dynamics = self.dynamics();
+        let mut telemetry = Telemetry::new(&self.cfg.telemetry);
         let rounds = match self.cfg.algorithm {
-            Algorithm::FedPairing => self.run_fedpairing(&mut dynamics)?,
-            Algorithm::VanillaFL => self.run_fl(&mut dynamics)?,
-            Algorithm::VanillaSL => self.run_sl(&mut dynamics)?,
-            Algorithm::SplitFed => self.run_splitfed(&mut dynamics)?,
+            Algorithm::FedPairing => self.run_fedpairing(&mut dynamics, &mut telemetry)?,
+            Algorithm::VanillaFL => self.run_fl(&mut dynamics, &mut telemetry)?,
+            Algorithm::VanillaSL => self.run_sl(&mut dynamics, &mut telemetry)?,
+            Algorithm::SplitFed => self.run_splitfed(&mut dynamics, &mut telemetry)?,
         };
+        for path in telemetry.finish().context("writing telemetry exports")? {
+            log_info!("telemetry: wrote {path}");
+        }
         Ok(RunResult {
             config: self.cfg.clone(),
             rounds,
@@ -169,7 +174,11 @@ impl Experiment {
     // FedPairing (the paper's system)
     // ------------------------------------------------------------------
 
-    fn run_fedpairing(&mut self, dynamics: &mut FleetDynamics) -> Result<Vec<RoundRecord>> {
+    fn run_fedpairing(
+        &mut self,
+        dynamics: &mut FleetDynamics,
+        telemetry: &mut Telemetry,
+    ) -> Result<Vec<RoundRecord>> {
         let w = self.engine.meta().layers;
         let profile = self.engine.meta().profile();
         let sched = self.schedule();
@@ -203,8 +212,10 @@ impl Experiment {
         let mut cpairs: Vec<(usize, usize)> = Vec::new();
         let mut csolos: Vec<usize> = Vec::new();
         for round in 1..=self.cfg.rounds {
+            telemetry.begin_round(round);
             let ev = dynamics.step(round);
             let channel = dynamics.channel();
+            telemetry.mark("dynamics");
             maintain_matching(
                 &mut matching,
                 dynamics,
@@ -229,7 +240,8 @@ impl Experiment {
             );
             csolos.clear();
             csolos.extend(eff.solos.iter().map(|&s| inv.compact(s)));
-            let rt = self.round_engine.fedpairing_round(
+            telemetry.mark("pairing");
+            let mut rt = self.round_engine.fedpairing_round(
                 &view,
                 &cpairs,
                 &csolos,
@@ -239,7 +251,9 @@ impl Experiment {
                 &self.cfg.compute,
                 true,
             );
-            let (round_time, mean_cut) = (rt.total_s, rt.mean_cut);
+            rt.stages.remap_crit(members);
+            telemetry.mark("engine");
+            let round_time = rt.total_s;
             // Participants this round (pairs + solos) and their weights.
             let participants: Vec<usize> = eff
                 .pairs
@@ -336,16 +350,26 @@ impl Experiment {
             }
             global = nn::fedavg_weighted(&locals, &agg_weights);
             anyhow::ensure!(nn::all_finite(&global), "global model diverged (NaN/Inf)");
+            telemetry.mark("train");
             sim_total += round_time;
             records.push(self.record(
                 round,
                 &global,
                 loss_sum / steps.max(1) as f64,
-                round_time,
+                &rt,
                 sim_total,
                 ev.n_alive,
-                mean_cut,
             )?);
+            // Lane ids leave the engine in round-compact space; export them
+            // in universe ids to match the fleet trace. Empty unless
+            // telemetry is on, so the remap is free when disabled.
+            let lanes: Vec<(usize, usize, f64)> = self
+                .round_engine
+                .pair_lanes()
+                .iter()
+                .map(|&(a, b, t)| (members[a], members[b], t))
+                .collect();
+            telemetry.end_round(&rt, ev.n_alive, &lanes, sim_total - round_time);
         }
         Ok(records)
     }
@@ -371,21 +395,29 @@ impl Experiment {
     // Vanilla FL (FedAvg)
     // ------------------------------------------------------------------
 
-    fn run_fl(&mut self, dynamics: &mut FleetDynamics) -> Result<Vec<RoundRecord>> {
+    fn run_fl(
+        &mut self,
+        dynamics: &mut FleetDynamics,
+        telemetry: &mut Telemetry,
+    ) -> Result<Vec<RoundRecord>> {
         let profile = self.engine.meta().profile();
         let sched = self.schedule();
         let mut global = self.engine.init_params(self.cfg.seed as u32)?;
         let mut records = Vec::with_capacity(self.cfg.rounds);
         let mut sim_total = 0.0f64;
         for round in 1..=self.cfg.rounds {
+            telemetry.begin_round(round);
             let ev = dynamics.step(round);
             let channel = dynamics.channel();
             let members = dynamics.present_members();
             let view = FleetView::new(dynamics.universe(), members);
-            let rt = self
+            telemetry.mark("dynamics");
+            let mut rt = self
                 .round_engine
                 .fl_round(&view, &profile, &sched, &channel, &self.cfg.compute, true);
-            let (round_time, mean_cut) = (rt.total_s, rt.mean_cut);
+            rt.stages.remap_crit(members);
+            telemetry.mark("engine");
+            let round_time = rt.total_s;
             let mut locals: Vec<Params> = Vec::with_capacity(members.len());
             let mut loss_sum = 0.0;
             let mut steps = 0usize;
@@ -397,16 +429,17 @@ impl Experiment {
             }
             global = nn::fedavg_weighted(&locals, &self.renormalized_weights(members)?);
             anyhow::ensure!(nn::all_finite(&global), "global model diverged (NaN/Inf)");
+            telemetry.mark("train");
             sim_total += round_time;
             records.push(self.record(
                 round,
                 &global,
                 loss_sum / steps.max(1) as f64,
-                round_time,
+                &rt,
                 sim_total,
                 ev.n_alive,
-                mean_cut,
             )?);
+            telemetry.end_round(&rt, ev.n_alive, &[], sim_total - round_time);
         }
         Ok(records)
     }
@@ -415,7 +448,11 @@ impl Experiment {
     // Vanilla SL (sequential relay)
     // ------------------------------------------------------------------
 
-    fn run_sl(&mut self, dynamics: &mut FleetDynamics) -> Result<Vec<RoundRecord>> {
+    fn run_sl(
+        &mut self,
+        dynamics: &mut FleetDynamics,
+        telemetry: &mut Telemetry,
+    ) -> Result<Vec<RoundRecord>> {
         let cut = checked_cut("sl_cut_layer", self.cfg.sl_cut_layer, self.engine.meta().layers)?;
         let profile = self.engine.meta().profile();
         let sched = self.schedule();
@@ -424,23 +461,24 @@ impl Experiment {
         let mut records = Vec::with_capacity(self.cfg.rounds);
         let mut sim_total = 0.0f64;
         for round in 1..=self.cfg.rounds {
+            telemetry.begin_round(round);
             let ev = dynamics.step(round);
             let channel = dynamics.channel();
             let members = dynamics.present_members();
             let view = FleetView::new(dynamics.universe(), members);
-            let round_time = self
-                .round_engine
-                .sl_round(
-                    &view,
-                    &profile,
-                    &sched,
-                    &channel,
-                    &self.cfg.compute,
-                    cut,
-                    self.cfg.compute.server_freq_ghz * 1e9,
-                )
-                .total_s;
-            let mean_cut = cut as f64;
+            telemetry.mark("dynamics");
+            let mut rt = self.round_engine.sl_round(
+                &view,
+                &profile,
+                &sched,
+                &channel,
+                &self.cfg.compute,
+                cut,
+                self.cfg.compute.server_freq_ghz * 1e9,
+            );
+            rt.stages.remap_crit(members);
+            telemetry.mark("engine");
+            let round_time = rt.total_s;
             let mut loss_sum = 0.0;
             let mut steps = 0usize;
             // Present clients take sessions sequentially; the client-side
@@ -453,16 +491,17 @@ impl Experiment {
             }
             let full = join_params(&front, &back);
             anyhow::ensure!(nn::all_finite(&full), "SL model diverged (NaN/Inf)");
+            telemetry.mark("train");
             sim_total += round_time;
             records.push(self.record(
                 round,
                 &full,
                 loss_sum / steps.max(1) as f64,
-                round_time,
+                &rt,
                 sim_total,
                 ev.n_alive,
-                mean_cut,
             )?);
+            telemetry.end_round(&rt, ev.n_alive, &[], sim_total - round_time);
         }
         Ok(records)
     }
@@ -471,7 +510,11 @@ impl Experiment {
     // SplitFed
     // ------------------------------------------------------------------
 
-    fn run_splitfed(&mut self, dynamics: &mut FleetDynamics) -> Result<Vec<RoundRecord>> {
+    fn run_splitfed(
+        &mut self,
+        dynamics: &mut FleetDynamics,
+        telemetry: &mut Telemetry,
+    ) -> Result<Vec<RoundRecord>> {
         let cut = checked_cut(
             "splitfed_cut_layer",
             self.cfg.splitfed_cut_layer,
@@ -483,24 +526,25 @@ impl Experiment {
         let mut records = Vec::with_capacity(self.cfg.rounds);
         let mut sim_total = 0.0f64;
         for round in 1..=self.cfg.rounds {
+            telemetry.begin_round(round);
             let ev = dynamics.step(round);
             let channel = dynamics.channel();
             let members = dynamics.present_members();
             let view = FleetView::new(dynamics.universe(), members);
-            let round_time = self
-                .round_engine
-                .splitfed_round(
-                    &view,
-                    &profile,
-                    &sched,
-                    &channel,
-                    &self.cfg.compute,
-                    cut,
-                    self.cfg.compute.server_freq_ghz * 1e9,
-                    true,
-                )
-                .total_s;
-            let mean_cut = cut as f64;
+            telemetry.mark("dynamics");
+            let mut rt = self.round_engine.splitfed_round(
+                &view,
+                &profile,
+                &sched,
+                &channel,
+                &self.cfg.compute,
+                cut,
+                self.cfg.compute.server_freq_ghz * 1e9,
+                true,
+            );
+            rt.stages.remap_crit(members);
+            telemetry.mark("engine");
+            let round_time = rt.total_s;
             let mut fronts: Vec<Params> = Vec::with_capacity(members.len());
             let mut backs: Vec<Params> = Vec::with_capacity(members.len());
             let mut loss_sum = 0.0;
@@ -523,16 +567,17 @@ impl Experiment {
             let back = nn::fedavg_weighted(&backs, &agg);
             global = join_params(&front, &back);
             anyhow::ensure!(nn::all_finite(&global), "SplitFed diverged (NaN/Inf)");
+            telemetry.mark("train");
             sim_total += round_time;
             records.push(self.record(
                 round,
                 &global,
                 loss_sum / steps.max(1) as f64,
-                round_time,
+                &rt,
                 sim_total,
                 ev.n_alive,
-                mean_cut,
             )?);
+            telemetry.end_round(&rt, ev.n_alive, &[], sim_total - round_time);
         }
         Ok(records)
     }
@@ -579,23 +624,23 @@ impl Experiment {
         Ok((loss_sum, steps))
     }
 
-    /// Assemble a round record (evaluating if scheduled).
-    #[allow(clippy::too_many_arguments)]
+    /// Assemble a round record (evaluating if scheduled). `rt.stages` must
+    /// already carry universe client ids (`remap_crit` at the call site).
     fn record(
         &mut self,
         round: usize,
         model: &Params,
         train_loss: f64,
-        round_time: f64,
+        rt: &RoundTime,
         sim_total: f64,
         n_alive: usize,
-        mean_cut: f64,
     ) -> Result<RoundRecord> {
         let (test_loss, test_acc) = if self.should_eval(round) {
             self.evaluate(model)?
         } else {
             (f64::NAN, f64::NAN)
         };
+        let round_time = rt.total_s;
         log_debug!(
             "round {round}: alive={n_alive} train_loss={train_loss:.4} acc={test_acc:.4} \
              sim={round_time:.1}s"
@@ -606,9 +651,10 @@ impl Experiment {
             train_loss,
             test_acc,
             test_loss,
-            sim_round_s: round_time,
+            sim_round_s: rt.total_s,
             sim_total_s: sim_total,
-            mean_cut,
+            mean_cut: rt.mean_cut,
+            stages: rt.stages,
         })
     }
 }
@@ -665,7 +711,7 @@ mod tests {
     fn artifacts_ready() -> bool {
         let ok = std::path::Path::new("artifacts/manifest.json").exists();
         if !ok {
-            eprintln!("skipping driver test: artifacts/ not built");
+            crate::log_warn!("skipping driver test: artifacts/ not built");
         }
         ok
     }
@@ -710,7 +756,7 @@ mod tests {
             assert!(res.final_acc().is_finite(), "{algo:?}");
             accs.push((algo, res.final_acc()));
         }
-        eprintln!("quick accs: {accs:?}");
+        crate::log_debug!("quick accs: {accs:?}");
     }
 
     #[test]

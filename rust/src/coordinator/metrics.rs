@@ -5,6 +5,7 @@
 //! the full config echo for provenance.
 
 use crate::config::ExperimentConfig;
+use crate::telemetry::breakdown::{StageBreakdown, STAGE_NAMES};
 use crate::util::json::{Json, JsonObj};
 
 /// One communication round's measurements.
@@ -28,6 +29,10 @@ pub struct RoundRecord {
     /// the FedPairing pairs, the configured cut for SL/SplitFed, NaN for
     /// vanilla FL (see `sim::latency::RoundTime::mean_cut`).
     pub mean_cut: f64,
+    /// Stage-attributed breakdown of the round's critical path plus
+    /// straggler attribution (see `telemetry::breakdown`). Client ids are in
+    /// the universe space of the driver that produced the record.
+    pub stages: StageBreakdown,
 }
 
 /// A full experiment run.
@@ -86,14 +91,27 @@ impl RunResult {
         self.rounds.iter().map(|r| r.n_alive as f64).sum::<f64>() / self.rounds.len() as f64
     }
 
-    /// CSV rendering (header + one row per round).
+    /// CSV rendering (header + one row per round). Simulated times use
+    /// Rust's default float formatting — the shortest representation that
+    /// parses back to the exact value — so post-processing can reproduce the
+    /// run's timeline bit for bit; an unplanned `mean_cut` (vanilla FL's
+    /// NaN) renders as an empty field.
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,n_alive,train_loss,test_loss,test_acc,sim_round_s,sim_total_s,mean_cut\n",
+            "round,n_alive,train_loss,test_loss,test_acc,sim_round_s,sim_total_s,mean_cut,crit_a,crit_b,crit_slack_s",
         );
+        for name in STAGE_NAMES {
+            s.push_str(&format!(",stage_{name}_s"));
+        }
+        s.push('\n');
         for r in &self.rounds {
+            let mean_cut = if r.mean_cut.is_nan() {
+                String::new()
+            } else {
+                format!("{:.3}", r.mean_cut)
+            };
             s.push_str(&format!(
-                "{},{},{:.6},{:.6},{:.6},{:.3},{:.3},{:.3}\n",
+                "{},{},{:.6},{:.6},{:.6},{},{},{},{},{},{}",
                 r.round,
                 r.n_alive,
                 r.train_loss,
@@ -101,8 +119,15 @@ impl RunResult {
                 r.test_acc,
                 r.sim_round_s,
                 r.sim_total_s,
-                r.mean_cut
+                mean_cut,
+                r.stages.crit_a,
+                r.stages.crit_b,
+                r.stages.crit_slack_s
             ));
+            for v in r.stages.stage_s {
+                s.push_str(&format!(",{v}"));
+            }
+            s.push('\n');
         }
         s
     }
@@ -130,6 +155,7 @@ impl RunResult {
                 ro.insert("sim_round_s", Json::num(r.sim_round_s));
                 ro.insert("sim_total_s", Json::num(r.sim_total_s));
                 ro.insert("mean_cut", Json::num(r.mean_cut));
+                ro.insert("stages", r.stages.to_json());
                 Json::Obj(ro)
             })
             .collect();
@@ -161,6 +187,12 @@ mod tests {
     fn result() -> RunResult {
         let mut cfg = ExperimentConfig::default();
         cfg.name = "t".into();
+        let stages1 = StageBreakdown {
+            stage_s: [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 0.0],
+            crit_a: 3,
+            crit_b: 7,
+            crit_slack_s: 0.5,
+        };
         RunResult {
             config: cfg,
             rounds: vec![
@@ -173,6 +205,7 @@ mod tests {
                     sim_round_s: 10.0,
                     sim_total_s: 10.0,
                     mean_cut: 4.0,
+                    stages: stages1,
                 },
                 RoundRecord {
                     round: 2,
@@ -183,6 +216,7 @@ mod tests {
                     sim_round_s: 10.0,
                     sim_total_s: 20.0,
                     mean_cut: 4.5,
+                    stages: StageBreakdown::default(),
                 },
                 RoundRecord {
                     round: 3,
@@ -193,6 +227,7 @@ mod tests {
                     sim_round_s: 12.0,
                     sim_total_s: 32.0,
                     mean_cut: f64::NAN,
+                    stages: StageBreakdown::default(),
                 },
             ],
             wall_s: 1.0,
@@ -219,6 +254,39 @@ mod tests {
         assert_eq!(csv.lines().count(), 4);
         assert!(csv.starts_with("round,n_alive,"));
         assert!(csv.lines().nth(1).unwrap().starts_with("1,20,"));
+    }
+
+    #[test]
+    fn csv_times_roundtrip_and_nan_cut_is_empty() {
+        let mut r = result();
+        r.rounds[0].sim_round_s = 0.1 + 0.2; // 0.30000000000000004
+        r.rounds[0].sim_total_s = 1.0 / 3.0;
+        let csv = r.to_csv();
+        let row: Vec<&str> = csv.lines().nth(1).unwrap().split(',').collect();
+        assert_eq!(row[5].parse::<f64>().unwrap().to_bits(), r.rounds[0].sim_round_s.to_bits());
+        assert_eq!(row[6].parse::<f64>().unwrap().to_bits(), r.rounds[0].sim_total_s.to_bits());
+        // Vanilla FL's unplanned cut (round 3 fixture) is an empty field, not
+        // a bare "NaN" token that trips numeric CSV readers.
+        let nan_row: Vec<&str> = csv.lines().nth(3).unwrap().split(',').collect();
+        assert_eq!(nan_row[7], "");
+    }
+
+    #[test]
+    fn csv_and_json_carry_stage_columns() {
+        let r = result();
+        let header = r.to_csv().lines().next().unwrap().to_string();
+        assert!(header.ends_with(
+            "crit_a,crit_b,crit_slack_s,stage_front_fp_s,stage_act_tx_s,stage_back_compute_s,\
+             stage_grad_tx_s,stage_front_upd_s,stage_uplink_s,stage_server_agg_s"
+        ));
+        let row1: Vec<String> =
+            r.to_csv().lines().nth(1).unwrap().split(',').map(str::to_string).collect();
+        assert_eq!(&row1[8..11], ["3", "7", "0.5"]);
+        assert_eq!(row1[11], "1");
+        let j = r.to_json();
+        let stages = j.get("rounds").unwrap().at(0).unwrap().get("stages").unwrap();
+        assert_eq!(stages.get("front_fp").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(stages.get("crit_b").and_then(Json::as_f64), Some(7.0));
     }
 
     #[test]

@@ -168,7 +168,7 @@ mod tests {
 
     fn setup(samples: usize) -> Option<(Engine, Loader, Loader, Params)> {
         if !std::path::Path::new("artifacts/manifest.json").exists() {
-            eprintln!("skipping split test: artifacts/ not built");
+            crate::log_warn!("skipping split test: artifacts/ not built");
             return None;
         }
         let mut engine = Engine::load("artifacts").unwrap();

@@ -18,6 +18,7 @@ use crate::sim::channel::Channel;
 use crate::sim::compute::sample_frequencies;
 use crate::sim::geometry::{place_uniform_disk, SpatialGrid};
 use crate::sim::latency::Fleet;
+use crate::telemetry::registry::{Counter, Gauge};
 use crate::util::rng::Rng;
 
 /// Stream-id salt for all fleet-dynamics randomness.
@@ -225,6 +226,7 @@ impl FleetDynamics {
         //    spatial index follows each move (cell-change only — an O(1)
         //    no-op for small drift).
         if sc.mobility_m > 0.0 {
+            let mut relocated = 0u64;
             for c in 0..n {
                 if self.alive[c] {
                     let dx = self.rng.normal_ms(0.0, sc.mobility_m);
@@ -240,8 +242,10 @@ impl FleetDynamics {
                     }
                     let moved = *p;
                     self.grid.relocate(c, moved);
+                    relocated += 1;
                 }
             }
+            crate::tm_count!(Counter::GridRelocations, relocated);
         }
         // 7. Channel shadowing re-draw (block fading: one draw per round).
         self.fade_db = if sc.shadowing_std_db > 0.0 {
@@ -256,6 +260,7 @@ impl FleetDynamics {
         self.present_ids
             .extend((0..n).filter(|&c| self.present[c]));
         ev.n_alive = self.present_ids.len();
+        crate::tm_gauge!(Gauge::FleetAlive, ev.n_alive as u64);
         ev
     }
 

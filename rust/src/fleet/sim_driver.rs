@@ -18,6 +18,7 @@ use crate::sim::engine::RoundEngine;
 use crate::sim::latency::{Fleet, FleetView, Schedule};
 use crate::sim::profile::ModelProfile;
 use crate::split::SplitCostModel;
+use crate::telemetry::Telemetry;
 use crate::util::index::InverseIndex;
 use crate::util::rng::Rng;
 
@@ -79,10 +80,14 @@ pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigEr
     let mut inv = InverseIndex::new();
     let mut cpairs: Vec<(usize, usize)> = Vec::new();
     let mut csolos: Vec<usize> = Vec::new();
+    let mut telemetry = Telemetry::new(&cfg.telemetry);
     for round in 1..=cfg.rounds {
+        telemetry.begin_round(round);
         let ev = dynamics.step(round);
         let channel = dynamics.channel();
-        let rt = match cfg.algorithm {
+        telemetry.mark("dynamics");
+        let members = dynamics.present_members();
+        let mut rt = match cfg.algorithm {
             Algorithm::FedPairing => {
                 let had_matching = matching.is_some();
                 let changed = maintain_matching(
@@ -97,7 +102,6 @@ pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigEr
                 if had_matching && changed {
                     repaired_rounds += 1;
                 }
-                let members = dynamics.present_members();
                 let view = FleetView::new(dynamics.universe(), members);
                 let eff = matching
                     .as_ref()
@@ -112,6 +116,7 @@ pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigEr
                 );
                 csolos.clear();
                 csolos.extend(eff.solos.iter().map(|&s| inv.compact(s)));
+                telemetry.mark("pairing");
                 engine.fedpairing_round(
                     &view,
                     &cpairs,
@@ -124,11 +129,11 @@ pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigEr
                 )
             }
             Algorithm::VanillaFL => {
-                let view = FleetView::new(dynamics.universe(), dynamics.present_members());
+                let view = FleetView::new(dynamics.universe(), members);
                 engine.fl_round(&view, &profile, &sched, &channel, &cfg.compute, true)
             }
             Algorithm::VanillaSL => {
-                let view = FleetView::new(dynamics.universe(), dynamics.present_members());
+                let view = FleetView::new(dynamics.universe(), members);
                 // In range for this profile by config validation — no clamp.
                 engine.sl_round(
                     &view,
@@ -141,7 +146,7 @@ pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigEr
                 )
             }
             Algorithm::SplitFed => {
-                let view = FleetView::new(dynamics.universe(), dynamics.present_members());
+                let view = FleetView::new(dynamics.universe(), members);
                 engine.splitfed_round(
                     &view,
                     &profile,
@@ -154,6 +159,8 @@ pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigEr
                 )
             }
         };
+        rt.stages.remap_crit(members);
+        telemetry.mark("engine");
         sim_total += rt.total_s;
         records.push(RoundRecord {
             round,
@@ -164,8 +171,23 @@ pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigEr
             sim_round_s: rt.total_s,
             sim_total_s: sim_total,
             mean_cut: rt.mean_cut,
+            stages: rt.stages,
         });
+        // Pair lanes only ever fill on the FedPairing analytic path with
+        // telemetry on; the universe-id remap is free otherwise.
+        let lanes: Vec<(usize, usize, f64)> = engine
+            .pair_lanes()
+            .iter()
+            .map(|&(a, b, t)| (members[a], members[b], t))
+            .collect();
+        telemetry.end_round(&rt, ev.n_alive, &lanes, sim_total - rt.total_s);
         trace.push(ev);
+    }
+    for path in telemetry
+        .finish()
+        .map_err(|e| ConfigError(format!("telemetry export failed: {e}")))?
+    {
+        crate::log_info!("telemetry: wrote {path}");
     }
     Ok(ScenarioRun {
         result: RunResult {

@@ -30,4 +30,5 @@ pub mod pairing;
 pub mod runtime;
 pub mod sim;
 pub mod split;
+pub mod telemetry;
 pub mod util;

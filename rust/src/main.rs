@@ -49,6 +49,8 @@ fn cli() -> Command {
                 .flag("engine", None, Some("MODE"), "round-time engine: analytic|des", None)
                 .flag("threads", None, Some("N"), "engine worker threads (0 = one per core)", None)
                 .flag("split-policy", None, Some("POLICY"), "split planner: paper|balanced|optimal", None)
+                .flag("telemetry", None, None, "enable the metrics registry + stage counters", None)
+                .flag("trace-out", None, Some("FILE"), "Chrome trace + .prom/.jsonl sidecars; implies --telemetry", None)
                 .flag("artifacts", None, Some("DIR"), "artifact directory", None)
                 .flag("out", Some('o'), Some("DIR"), "metrics output directory", None),
         )
@@ -67,6 +69,8 @@ fn cli() -> Command {
                 .flag("threads", None, Some("N"), "engine worker threads (0 = one per core)", None)
                 .flag("split-policy", None, Some("POLICY"), "split planner: paper|balanced|optimal", None)
                 .flag("model", None, Some("NAME"), "latency cost profile: resnet18|resnet34|resnet10|mlp", None)
+                .flag("telemetry", None, None, "enable the metrics registry + stage counters", None)
+                .flag("trace-out", None, Some("FILE"), "Chrome trace + .prom/.jsonl sidecars; implies --telemetry", None)
                 .flag("out", Some('o'), Some("DIR"), "metrics output directory", None),
         )
         .subcommand(
@@ -142,6 +146,18 @@ fn apply_engine_flags(cfg: &mut ExperimentConfig, p: &Parsed) -> anyhow::Result<
     Ok(())
 }
 
+/// Apply the shared `--telemetry` / `--trace-out` observability flags
+/// (`--trace-out` implies `--telemetry`).
+fn apply_telemetry_flags(cfg: &mut ExperimentConfig, p: &Parsed) {
+    if p.has("telemetry") {
+        cfg.telemetry.enabled = true;
+    }
+    if let Some(path) = p.get("trace-out") {
+        cfg.telemetry.enabled = true;
+        cfg.telemetry.trace_out = Some(path.to_string());
+    }
+}
+
 /// Apply the shared `--split-policy` / `--model` split-planner overrides.
 fn apply_split_flags(cfg: &mut ExperimentConfig, p: &Parsed) -> anyhow::Result<()> {
     if let Some(s) = p.get("split-policy") {
@@ -203,6 +219,7 @@ fn cmd_run(p: &Parsed) -> anyhow::Result<()> {
     }
     apply_engine_flags(&mut cfg, p)?;
     apply_split_flags(&mut cfg, p)?;
+    apply_telemetry_flags(&mut cfg, p);
     if let Some(d) = p.get("artifacts") {
         cfg.artifacts_dir = d.to_string();
     }
@@ -263,13 +280,16 @@ fn cmd_churn(p: &Parsed) -> anyhow::Result<()> {
     cfg.samples_per_client = match req_parsed::<usize>(p, "samples")? {
         Some(s) => s,
         None if cfg.scenario.kind == fedpairing::config::ScenarioKind::MetroScale => {
-            println!("metro-scale: samples/client defaulted to 64 (pass --samples to override)");
+            fedpairing::log_info!(
+                "metro-scale: samples/client defaulted to 64 (pass --samples to override)"
+            );
             64
         }
         None => 2500,
     };
     apply_engine_flags(&mut cfg, p)?;
     apply_split_flags(&mut cfg, p)?;
+    apply_telemetry_flags(&mut cfg, p);
     if let Some(d) = p.get("out") {
         cfg.out_dir = d.to_string();
     }

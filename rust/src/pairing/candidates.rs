@@ -32,6 +32,7 @@ use crate::sim::channel::Channel;
 use crate::sim::geometry::SpatialGrid;
 use crate::sim::latency::Fleet;
 use crate::split::SplitCostModel;
+use crate::telemetry::registry::Counter;
 
 /// Per-client cap on grid cells scanned while hunting for `k_near`
 /// candidates — bounds the ring walk when members are sparse in the grid
@@ -258,7 +259,7 @@ impl<'a> SparseCandidateGraph<'a> {
         }
         cand.sort_unstable();
         cand.dedup();
-        let edges = cand
+        let edges: Vec<Edge> = cand
             .into_iter()
             .map(|(i, j)| Edge {
                 i,
@@ -266,6 +267,7 @@ impl<'a> SparseCandidateGraph<'a> {
                 weight: spec.weight(fleet, channel, i, j),
             })
             .collect();
+        crate::tm_count!(Counter::CandidateEdges, edges.len() as u64);
         SparseCandidateGraph {
             fleet,
             channel,

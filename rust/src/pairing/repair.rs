@@ -15,6 +15,7 @@ use super::graph::uncovered;
 use crate::config::{PairingBackendConfig, PairingStrategy};
 use crate::sim::channel::Channel;
 use crate::sim::latency::Fleet;
+use crate::telemetry::registry::{Counter, Gauge, Histo};
 use crate::util::rng::Rng;
 use std::collections::HashSet;
 
@@ -182,8 +183,12 @@ pub fn repair_matching_pooled(
     pair_pool: impl FnOnce(&[usize]) -> Matching,
 ) -> RepairReport {
     let part = partition_for_repair(m, members);
+    crate::tm_gauge!(Gauge::RepairPoolSize, part.pool.len() as u64);
+    crate::tm_observe!(Histo::RepairPoolSizes, part.pool.len() as u64);
     let pooled = pair_pool(&part.pool);
     debug_assert!(pooled.is_valid_over(&part.pool), "pool matcher broke coverage");
+    crate::tm_count!(Counter::RepairDroppedPairs, part.dropped.len() as u64);
+    crate::tm_count!(Counter::RepairNewPairs, pooled.pairs.len() as u64);
     let report = RepairReport {
         dropped_pairs: part.dropped,
         new_pairs: pooled.pairs.clone(),

@@ -390,7 +390,7 @@ mod tests {
         if std::path::Path::new("artifacts/manifest.json").exists() {
             Some(Engine::load("artifacts").expect("engine"))
         } else {
-            eprintln!("skipping runtime test: artifacts/ not built");
+            crate::log_warn!("skipping runtime test: artifacts/ not built");
             None
         }
     }

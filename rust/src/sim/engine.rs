@@ -44,6 +44,8 @@ use super::latency::{
 use super::profile::ModelProfile;
 use crate::config::{ComputeConfig, EngineConfig, RoundBackend, SplitConfig, SplitPolicy};
 use crate::split::{self, PairContext};
+use crate::telemetry::breakdown::{self, StageBreakdown};
+use crate::telemetry::registry::{self, Counter, Gauge};
 use crate::util::pool::FixedPool;
 use crate::util::rng::splitmix64;
 use std::cmp::Ordering;
@@ -350,6 +352,11 @@ pub struct RoundEngine {
     keys: Vec<PairKey>,
     miss: Vec<usize>,
     evals: Vec<PairEval>,
+    /// Participant totals of the last round (p50 slack baseline scratch).
+    totals: Vec<f64>,
+    /// `(i, j, pair_total_s)` of the last FedPairing round — collected only
+    /// while telemetry is enabled, for the trace exporter's pair lanes.
+    lanes: Vec<(usize, usize, f64)>,
     hits: u64,
     misses: u64,
 }
@@ -367,6 +374,8 @@ impl RoundEngine {
             keys: Vec::new(),
             miss: Vec::new(),
             evals: Vec::new(),
+            totals: Vec::new(),
+            lanes: Vec::new(),
             hits: 0,
             misses: 0,
         }
@@ -399,6 +408,13 @@ impl RoundEngine {
     /// Cumulative pair-cache misses (= kernel evaluations).
     pub fn cache_misses(&self) -> u64 {
         self.misses
+    }
+
+    /// `(i, j, total_s)` per pair of the last FedPairing round, for the
+    /// trace exporter's pair lanes. Empty unless telemetry was enabled
+    /// during the round (and on the DES backend, which skips collection).
+    pub fn pair_lanes(&self) -> &[(usize, usize, f64)] {
+        &self.lanes
     }
 
     /// Clear the memo cache if the model/schedule/compute context changed
@@ -450,7 +466,9 @@ impl RoundEngine {
         comp: &ComputeConfig,
         include_upload: bool,
     ) -> RoundTime {
+        self.lanes.clear();
         if self.backend == RoundBackend::Des {
+            registry::count(Counter::KernelEvalsDes, 1);
             let mut rt = latency::fedpairing_round_planned(
                 fleet,
                 pairs,
@@ -490,6 +508,11 @@ impl RoundEngine {
         }
         self.hits += (pairs.len() - self.miss.len()) as u64;
         self.misses += self.miss.len() as u64;
+        registry::count(Counter::MemoHits, (pairs.len() - self.miss.len()) as u64);
+        registry::count(Counter::MemoMisses, self.miss.len() as u64);
+        // (kernel_evals_analytic_total is counted at the kernel funnel,
+        // `split::eval_at`, so the `Optimal` policy's search evaluations are
+        // visible — one increment per candidate cut, not per miss.)
         // Phase 2: evaluate the misses — in parallel when it pays. Each
         // kernel is a pure function of its pair's inputs and results are
         // merged back by pair index, so any thread count is bit-identical.
@@ -528,10 +551,18 @@ impl RoundEngine {
         for (k, key) in self.keys.iter().enumerate() {
             self.next.insert(*key, self.evals[k]);
         }
+        if registry::enabled() {
+            // Exact when this round's pair keys are distinct (the usual
+            // case): survivors = |next|, so evicted = old + new − survivors.
+            let evicted = (self.cache.len() + self.miss.len()).saturating_sub(self.next.len());
+            registry::count(Counter::MemoEvictions, evicted as u64);
+            registry::gauge_set(Gauge::MemoCacheEntries, self.next.len() as u64);
+        }
         std::mem::swap(&mut self.cache, &mut self.next);
         self.next.clear();
         // Phase 4: ordered reduction — identical op order to the DES path.
         let diag = self.flow_diagnostics;
+        let lanes_on = registry::enabled();
         let mut total = 0.0f64;
         let mut max_cpu = 0.0f64;
         let mut max_link = 0.0f64;
@@ -541,11 +572,16 @@ impl RoundEngine {
         } else {
             Vec::new()
         };
+        self.totals.clear();
+        let mut crit_total = f64::NEG_INFINITY;
+        let mut crit_pair: Option<(usize, usize, usize, f64, f64)> = None;
+        let mut crit_solo: Option<(usize, f64, f64)> = None;
         for (k, &(i, j)) in pairs.iter().enumerate() {
             let e = &self.evals[k];
             let mut pair_total = e.makespan;
+            let mut up = 0.0f64;
             if include_upload {
-                let up = upload_time(fleet, channel, i, profile.param_bytes())
+                up = upload_time(fleet, channel, i, profile.param_bytes())
                     .max(upload_time(fleet, channel, j, profile.param_bytes()));
                 pair_total += up;
             }
@@ -556,6 +592,14 @@ impl RoundEngine {
             if diag {
                 finishes.extend_from_slice(&e.finish);
             }
+            self.totals.push(pair_total);
+            if pair_total > crit_total {
+                crit_total = pair_total;
+                crit_pair = Some((i, j, e.cut, f64::from_bits(self.keys[k].rate), up));
+            }
+            if lanes_on {
+                self.lanes.push((i, j, pair_total));
+            }
         }
         for &s in solos {
             let (compute_s, t) =
@@ -565,12 +609,29 @@ impl RoundEngine {
             if diag {
                 finishes.push(t);
             }
+            self.totals.push(t);
+            if t > crit_total {
+                crit_total = t;
+                crit_pair = None;
+                crit_solo = Some((s, compute_s, t - compute_s));
+            }
         }
+        let stages = latency::fedpairing_breakdown(
+            fleet,
+            profile,
+            sched,
+            comp,
+            crit_pair,
+            crit_solo,
+            crit_total,
+            &mut self.totals,
+        );
         RoundTime {
             total_s: total,
             max_cpu_busy_s: max_cpu,
             max_link_busy_s: max_link,
             mean_cut: mean_cut_of(cut_sum, pairs.len()),
+            stages,
             flow_finish_s: finishes,
         }
     }
@@ -593,17 +654,30 @@ impl RoundEngine {
         }
         let mut total = 0.0f64;
         let mut max_cpu = 0.0f64;
+        let mut stages = StageBreakdown::default();
+        let mut crit_total = f64::NEG_INFINITY;
+        self.totals.clear();
         for i in 0..fleet.n() {
             let (compute_s, t) =
                 full_local_time(fleet, i, profile, sched, channel, comp, include_upload);
             max_cpu = max_cpu.max(compute_s);
+            if t > crit_total {
+                crit_total = t;
+                stages.stage_s = breakdown::solo_stages(compute_s, t - compute_s);
+                stages.crit_a = i as i64;
+            }
             total = total.max(t);
+            self.totals.push(t);
+        }
+        if !self.totals.is_empty() {
+            stages.crit_slack_s = crit_total - breakdown::p50(&mut self.totals);
         }
         RoundTime {
             total_s: total,
             max_cpu_busy_s: max_cpu,
             max_link_busy_s: 0.0,
             mean_cut: f64::NAN,
+            stages,
             flow_finish_s: Vec::new(),
         }
     }
@@ -642,6 +716,9 @@ impl RoundEngine {
         } else {
             Vec::new()
         };
+        let mut stages = StageBreakdown::default();
+        self.totals.clear();
+        let mut crit_session = f64::NEG_INFINITY;
         for i in 0..n {
             let rate = channel.rate_to_server(&fleet.pos(i));
             let dur = split_stage_durations(
@@ -662,26 +739,40 @@ impl RoundEngine {
                     busy[RES[s]] += d;
                 }
             }
+            for (acc, &d) in stages.stage_s.iter_mut().take(5).zip(dur.iter()) {
+                *acc += d * nb as f64;
+            }
             let mut session = t;
             // Client-model relay to the next client in the ring.
             let next = (i + 1) % n;
             if n > 1 {
                 let front_bytes = profile.params(0, cut) as f64 * 4.0;
-                session +=
+                let relay_s =
                     transmit_time(front_bytes, channel.rate(&fleet.pos(i), &fleet.pos(next)));
+                session += relay_s;
+                stages.stage_s[5] += relay_s;
             }
             total += session;
+            self.totals.push(session);
+            if session > crit_session {
+                crit_session = session;
+                stages.crit_a = i as i64;
+            }
             if self.flow_diagnostics {
                 finishes.push(total);
             }
             max_cpu = max_cpu.max(busy[0]).max(busy[1]);
             max_link = max_link.max(busy[2]).max(busy[3]);
         }
+        if !self.totals.is_empty() {
+            stages.crit_slack_s = crit_session - breakdown::p50(&mut self.totals);
+        }
         RoundTime {
             total_s: total,
             max_cpu_busy_s: max_cpu,
             max_link_busy_s: max_link,
             mean_cut: cut as f64,
+            stages,
             flow_finish_s: finishes,
         }
     }
@@ -789,6 +880,7 @@ impl RoundEngine {
         }
         let mut total = finish.iter().cloned().fold(0.0, f64::max);
         max_cpu = max_cpu.max(server_busy);
+        let mut stages = latency::splitfed_breakdown(fleet, sched, &durs, &finish);
         if include_upload {
             // FedAvg sync of the client-side models.
             let front_bytes = profile.params(0, cut) as f64 * 4.0;
@@ -796,12 +888,14 @@ impl RoundEngine {
                 .map(|i| upload_time(fleet, channel, i, front_bytes))
                 .fold(0.0, f64::max);
             total += up;
+            stages.stage_s[5] = up;
         }
         RoundTime {
             total_s: total,
             max_cpu_busy_s: max_cpu,
             max_link_busy_s: max_link,
             mean_cut: cut as f64,
+            stages,
             flow_finish_s: if self.flow_diagnostics {
                 finish
             } else {

@@ -27,6 +27,7 @@ use super::des::{simulate, Chain};
 use super::geometry::{place_uniform_disk, Pos};
 use super::profile::{ModelProfile, BWD_FLOPS_FACTOR};
 use crate::config::{ComputeConfig, ExperimentConfig, SplitConfig};
+use crate::telemetry::breakdown::{self, StageBreakdown};
 use crate::util::rng::Rng;
 
 /// Read access to a set of clients — either an owned [`Fleet`] or a borrowed
@@ -174,6 +175,10 @@ pub struct RoundTime {
     /// FedPairing pairs (solos excluded), the configured cut for SL /
     /// SplitFed, `NaN` for vanilla FL or a pairless round.
     pub mean_cut: f64,
+    /// Critical-path stage attribution + straggler slack. Computed with
+    /// telemetry-independent arithmetic by every evaluator that produces it
+    /// (default/zeroed where a path has no attribution — see DESIGN.md §8).
+    pub stages: StageBreakdown,
     /// Per-flow finish times (diagnostic).
     pub flow_finish_s: Vec<f64>,
 }
@@ -269,6 +274,62 @@ pub(crate) fn upload_time<C: ClientSet>(fleet: &C, channel: &Channel, i: usize, 
     transmit_time(bytes, channel.rate_to_server(&fleet.pos(i)))
 }
 
+/// Build a FedPairing round's [`StageBreakdown`] from the tracked critical
+/// participant: `crit_pair = (i, j, l_i, rate, upload_s)` or
+/// `crit_solo = (s, compute_s, upload_s)`, whichever gated the round, plus
+/// all participant totals for the p50 slack baseline. Shared by the DES path
+/// and the analytic engine so both backends attribute stages with
+/// bit-identical arithmetic.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fedpairing_breakdown<C: ClientSet>(
+    fleet: &C,
+    profile: &ModelProfile,
+    sched: &Schedule,
+    comp: &ComputeConfig,
+    crit_pair: Option<(usize, usize, usize, f64, f64)>,
+    crit_solo: Option<(usize, f64, f64)>,
+    crit_total: f64,
+    totals: &mut [f64],
+) -> StageBreakdown {
+    let mut b = StageBreakdown::default();
+    if let Some((i, j, l_i, rate, up)) = crit_pair {
+        let d_i = split_stage_durations(
+            profile,
+            comp,
+            sched.batch_size,
+            l_i,
+            fleet.freq_hz(i),
+            fleet.freq_hz(j),
+            rate,
+        );
+        let d_j = split_stage_durations(
+            profile,
+            comp,
+            sched.batch_size,
+            profile.w() - l_i,
+            fleet.freq_hz(j),
+            fleet.freq_hz(i),
+            rate,
+        );
+        b.stage_s = breakdown::pair_stages(
+            &d_i,
+            sched.batches(fleet.n_samples(i)) as f64,
+            &d_j,
+            sched.batches(fleet.n_samples(j)) as f64,
+            up,
+        );
+        b.crit_a = i as i64;
+        b.crit_b = j as i64;
+    } else if let Some((s, compute_s, up)) = crit_solo {
+        b.stage_s = breakdown::solo_stages(compute_s, up);
+        b.crit_a = s as i64;
+    }
+    if !totals.is_empty() {
+        b.crit_slack_s = crit_total - breakdown::p50(totals);
+    }
+    b
+}
+
 /// One client's full-model local-training time — `(compute_s, total_s)`,
 /// where `total_s` includes the model upload when requested. Shared by
 /// [`fl_round`], the FedPairing solo fallback and the analytic engine so
@@ -362,6 +423,13 @@ pub fn fedpairing_round_planned<C: ClientSet>(
     let mut max_link = 0.0f64;
     let mut cut_sum = 0usize;
     let mut finishes = Vec::with_capacity(pairs.len() * 2);
+    // Straggler attribution: the gating participant's identity plus the
+    // inputs needed to re-derive its stage durations, and every participant
+    // total for the p50 slack baseline.
+    let mut totals = Vec::with_capacity(pairs.len() + solos.len());
+    let mut crit_total = f64::NEG_INFINITY;
+    let mut crit_pair: Option<(usize, usize, usize, f64, f64)> = None;
+    let mut crit_solo: Option<(usize, f64, f64)> = None;
     for &(i, j) in pairs {
         let (f_i, f_j) = (fleet.freq_hz(i), fleet.freq_hz(j));
         let rate = channel.rate(&fleet.pos(i), &fleet.pos(j));
@@ -415,12 +483,18 @@ pub fn fedpairing_round_planned<C: ClientSet>(
         );
         let rep = simulate(4, &[dir_i, dir_j]);
         let mut pair_total = rep.makespan;
+        let mut up = 0.0f64;
         if include_upload {
-            let up = upload_time(fleet, channel, i, profile.param_bytes())
+            up = upload_time(fleet, channel, i, profile.param_bytes())
                 .max(upload_time(fleet, channel, j, profile.param_bytes()));
             pair_total += up;
         }
         total = total.max(pair_total);
+        totals.push(pair_total);
+        if pair_total > crit_total {
+            crit_total = pair_total;
+            crit_pair = Some((i, j, l_i, rate, up));
+        }
         max_cpu = max_cpu.max(rep.resource_busy[0]).max(rep.resource_busy[1]);
         max_link = max_link.max(rep.resource_busy[2]).max(rep.resource_busy[3]);
         finishes.extend_from_slice(&rep.chain_finish);
@@ -430,13 +504,23 @@ pub fn fedpairing_round_planned<C: ClientSet>(
             full_local_time(fleet, s, profile, sched, channel, comp, include_upload);
         max_cpu = max_cpu.max(compute_s);
         total = total.max(t);
+        totals.push(t);
+        if t > crit_total {
+            crit_total = t;
+            crit_pair = None;
+            crit_solo = Some((s, compute_s, t - compute_s));
+        }
         finishes.push(t);
     }
+    let stages = fedpairing_breakdown(
+        fleet, profile, sched, comp, crit_pair, crit_solo, crit_total, &mut totals,
+    );
     RoundTime {
         total_s: total,
         max_cpu_busy_s: max_cpu,
         max_link_busy_s: max_link,
         mean_cut: mean_cut_of(cut_sum, pairs.len()),
+        stages,
         flow_finish_s: finishes,
     }
 }
@@ -457,17 +541,29 @@ pub fn fl_round<C: ClientSet>(
 ) -> RoundTime {
     let mut finishes = Vec::with_capacity(fleet.n());
     let mut max_cpu = 0.0f64;
+    let mut crit_total = f64::NEG_INFINITY;
+    let mut stages = StageBreakdown::default();
     for i in 0..fleet.n() {
         let (compute_s, t) =
             full_local_time(fleet, i, profile, sched, channel, comp, include_upload);
         max_cpu = max_cpu.max(compute_s);
+        if t > crit_total {
+            crit_total = t;
+            stages.stage_s = breakdown::solo_stages(compute_s, t - compute_s);
+            stages.crit_a = i as i64;
+        }
         finishes.push(t);
+    }
+    if !finishes.is_empty() {
+        let mut totals = finishes.clone();
+        stages.crit_slack_s = crit_total - breakdown::p50(&mut totals);
     }
     RoundTime {
         total_s: finishes.iter().cloned().fold(0.0, f64::max),
         max_cpu_busy_s: max_cpu,
         max_link_busy_s: 0.0,
         mean_cut: f64::NAN,
+        stages,
         flow_finish_s: finishes,
     }
 }
@@ -494,6 +590,11 @@ pub fn sl_round<C: ClientSet>(
     let mut max_cpu = 0.0f64;
     let mut max_link = 0.0f64;
     let mut finishes = Vec::with_capacity(fleet.n());
+    // SL's critical path is the whole session ring: stage attribution sums
+    // every session's work; the "critical" entity is the longest session.
+    let mut stages = StageBreakdown::default();
+    let mut session_times = Vec::with_capacity(fleet.n());
+    let mut crit_session = f64::NEG_INFINITY;
     for i in 0..fleet.n() {
         let rate = channel.rate_to_server(&fleet.pos(i));
         // Local resources: 0 = cpu_i, 1 = server, 2 = uplink, 3 = downlink.
@@ -517,20 +618,45 @@ pub fn sl_round<C: ClientSet>(
         let mut session = rep.makespan;
         // Client-model relay to the next client in the ring.
         let next = (i + 1) % fleet.n();
+        let mut relay_s = 0.0f64;
         if fleet.n() > 1 {
             let front_bytes = profile.params(0, cut) as f64 * 4.0;
-            session += transmit_time(front_bytes, channel.rate(&fleet.pos(i), &fleet.pos(next)));
+            relay_s = transmit_time(front_bytes, channel.rate(&fleet.pos(i), &fleet.pos(next)));
+            session += relay_s;
+        }
+        let dur = split_stage_durations(
+            profile,
+            comp,
+            sched.batch_size,
+            cut,
+            fleet.freq_hz(i),
+            server_freq_hz,
+            rate,
+        );
+        let nb = sched.batches(fleet.n_samples(i)) as f64;
+        for (s, &d) in stages.stage_s.iter_mut().take(5).zip(dur.iter()) {
+            *s += d * nb;
+        }
+        stages.stage_s[5] += relay_s;
+        session_times.push(session);
+        if session > crit_session {
+            crit_session = session;
+            stages.crit_a = i as i64;
         }
         total += session;
         finishes.push(total);
         max_cpu = max_cpu.max(rep.resource_busy[0]).max(rep.resource_busy[1]);
         max_link = max_link.max(rep.resource_busy[2]).max(rep.resource_busy[3]);
     }
+    if !session_times.is_empty() {
+        stages.crit_slack_s = crit_session - breakdown::p50(&mut session_times);
+    }
     RoundTime {
         total_s: total,
         max_cpu_busy_s: max_cpu,
         max_link_busy_s: max_link,
         mean_cut: cut as f64,
+        stages,
         flow_finish_s: finishes,
     }
 }
@@ -558,8 +684,18 @@ pub fn splitfed_round<C: ClientSet>(
     // Resources: 0..n = client CPUs, n = server CPU, n+1+2i / n+2+2i = links.
     let server = n;
     let mut chains = Vec::with_capacity(n);
+    let mut durs: Vec<[f64; 5]> = Vec::with_capacity(n);
     for i in 0..n {
         let rate = channel.rate_to_server(&fleet.pos(i));
+        durs.push(split_stage_durations(
+            profile,
+            comp,
+            sched.batch_size,
+            cut,
+            fleet.freq_hz(i),
+            server_freq_hz,
+            rate,
+        ));
         let up = n + 1 + 2 * i;
         let down = n + 2 + 2 * i;
         let mut chain = Chain::new();
@@ -582,6 +718,7 @@ pub fn splitfed_round<C: ClientSet>(
     }
     let rep = simulate(n + 1 + 2 * n, &chains);
     let mut total = rep.makespan;
+    let mut stages = splitfed_breakdown(fleet, sched, &durs, &rep.chain_finish);
     if include_upload {
         // FedAvg sync of the client-side models.
         let front_bytes = profile.params(0, cut) as f64 * 4.0;
@@ -589,6 +726,7 @@ pub fn splitfed_round<C: ClientSet>(
             .map(|i| upload_time(fleet, channel, i, front_bytes))
             .fold(0.0, f64::max);
         total += up;
+        stages.stage_s[5] = up;
     }
     let max_cpu = rep.resource_busy[..=n].iter().cloned().fold(0.0, f64::max);
     let max_link = rep.resource_busy[n + 1..]
@@ -600,8 +738,45 @@ pub fn splitfed_round<C: ClientSet>(
         max_cpu_busy_s: max_cpu,
         max_link_busy_s: max_link,
         mean_cut: cut as f64,
+        stages,
         flow_finish_s: rep.chain_finish,
     }
+}
+
+/// SplitFed stage attribution from the finished recurrence: the critical
+/// client's own per-stage work plus its residual (queue wait + overlap) as
+/// `server_agg`, with slack over the p50 client finish. Shared by the DES
+/// path and the analytic engine (both feed bit-identical `durs`/`finish`).
+pub(crate) fn splitfed_breakdown<C: ClientSet>(
+    fleet: &C,
+    sched: &Schedule,
+    durs: &[[f64; 5]],
+    finish: &[f64],
+) -> StageBreakdown {
+    let mut stages = StageBreakdown::default();
+    let mut crit_total = f64::NEG_INFINITY;
+    let mut crit_i = None;
+    for (i, &t) in finish.iter().enumerate() {
+        if t > crit_total {
+            crit_total = t;
+            crit_i = Some(i);
+        }
+    }
+    if let Some(i) = crit_i {
+        let nb = sched.batches(fleet.n_samples(i)) as f64;
+        let d = durs[i];
+        for (s, &dk) in stages.stage_s.iter_mut().take(5).zip(d.iter()) {
+            *s = dk * nb;
+        }
+        // Time past the client's own stage work is spent waiting on the
+        // shared server — attributed as server aggregation/queueing.
+        let own = (d[0] + d[1] + d[2] + d[3] + d[4]) * nb;
+        stages.stage_s[6] = (crit_total - own).max(0.0);
+        stages.crit_a = i as i64;
+        let mut totals = finish.to_vec();
+        stages.crit_slack_s = crit_total - breakdown::p50(&mut totals);
+    }
+    stages
 }
 
 #[cfg(test)]

@@ -45,6 +45,7 @@ use crate::sim::compute::split_lengths;
 use crate::sim::engine::{pair_eval_at_cut, PairEval};
 use crate::sim::latency::{Fleet, Schedule};
 use crate::sim::profile::ModelProfile;
+use crate::telemetry::registry::Counter;
 use std::cell::RefCell;
 use std::collections::HashMap;
 
@@ -197,6 +198,7 @@ fn direct_cut(cfg: &SplitConfig, ctx: &PairContext<'_>) -> Option<usize> {
 
 #[inline]
 fn eval_at(ctx: &PairContext<'_>, cut: usize) -> PairEval {
+    crate::tm_count!(Counter::KernelEvalsAnalytic, 1);
     pair_eval_at_cut(
         ctx.profile,
         ctx.sched,

@@ -1,0 +1,194 @@
+//! Stage-attributed round breakdown (pillar 2 of the telemetry subsystem).
+//!
+//! Decomposes a round's critical path into the named stages of the split
+//! protocol — the latency decomposition the paper's Fig. 4–5 argue from —
+//! plus straggler attribution: which pair (or solo client) gated the round
+//! and by how much slack over the median participant.
+//!
+//! The breakdown is computed **unconditionally** by every round evaluator,
+//! with arithmetic that never reads telemetry state. That is what makes the
+//! determinism invariant trivial: telemetry on vs. off cannot perturb
+//! `RoundRecord`, because the record's fields are produced by the exact same
+//! instructions either way. The telemetry gate only controls the *side
+//! channels* (registry counters, trace/JSONL export).
+//!
+//! Stage seconds are *work attribution* along the critical flows — per-batch
+//! stage duration × batch count — not a partition of wall time: the split
+//! pipeline overlaps stages across the two directions, so the stage sum can
+//! exceed (or, with idle gaps, undershoot) the critical path's wall clock.
+
+use crate::util::json::{Json, JsonObj};
+
+/// Number of named stages.
+pub const N_STAGES: usize = 7;
+
+/// Stage names, in `stage_s` index order:
+/// - `front_fp` — front-model forward compute (client-side layers)
+/// - `act_tx` — activation + logit-grad transfer, front → back
+/// - `back_compute` — back-model forward + backward compute
+/// - `grad_tx` — logits + activation-grad transfer, back → front
+/// - `front_upd` — front-model backward/update compute
+/// - `uplink` — trained-model upload to the central server
+/// - `server_agg` — server-side aggregation / queueing (SplitFed queue wait;
+///   zero for pair-local protocols, where aggregation is not modeled)
+pub const STAGE_NAMES: [&str; N_STAGES] =
+    ["front_fp", "act_tx", "back_compute", "grad_tx", "front_upd", "uplink", "server_agg"];
+
+/// Per-round critical-path decomposition + straggler attribution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StageBreakdown {
+    /// Seconds attributed to each stage (see [`STAGE_NAMES`]).
+    pub stage_s: [f64; N_STAGES],
+    /// Critical entity: client ids of the gating pair, or `(id, -1)` for a
+    /// gating solo / FL / SL / SplitFed client, or `(-1, -1)` when the round
+    /// had no attribution (empty round, or a path that does not produce one).
+    pub crit_a: i64,
+    pub crit_b: i64,
+    /// Straggler slack: critical participant total minus the p50 participant
+    /// total (0 when there are no participants).
+    pub crit_slack_s: f64,
+}
+
+impl Default for StageBreakdown {
+    fn default() -> Self {
+        StageBreakdown {
+            stage_s: [0.0; N_STAGES],
+            crit_a: -1,
+            crit_b: -1,
+            crit_slack_s: 0.0,
+        }
+    }
+}
+
+impl StageBreakdown {
+    /// Total attributed seconds across all stages.
+    pub fn sum_s(&self) -> f64 {
+        self.stage_s.iter().sum()
+    }
+
+    /// Remap critical ids from round-compact indices to universe ids
+    /// (`members[compact] = universe`). Drivers that evaluate a round over a
+    /// compact sub-fleet call this so exported ids match the fleet trace.
+    pub fn remap_crit(&mut self, members: &[usize]) {
+        if self.crit_a >= 0 {
+            if let Some(&u) = members.get(self.crit_a as usize) {
+                self.crit_a = u as i64;
+            }
+        }
+        if self.crit_b >= 0 {
+            if let Some(&u) = members.get(self.crit_b as usize) {
+                self.crit_b = u as i64;
+            }
+        }
+    }
+
+    /// JSON object with named stage fields + attribution.
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        for (name, s) in STAGE_NAMES.iter().zip(self.stage_s.iter()) {
+            o.insert(*name, Json::Num(*s));
+        }
+        o.insert("crit_a", Json::Num(self.crit_a as f64));
+        o.insert("crit_b", Json::Num(self.crit_b as f64));
+        o.insert("crit_slack_s", Json::Num(self.crit_slack_s));
+        Json::Obj(o)
+    }
+}
+
+/// Stage attribution for a critical FedPairing pair: the two directions'
+/// per-batch durations (`split_stage_durations` order: front-fwd, uplink,
+/// back fwd+bwd, downlink, front-bwd) scaled by their batch counts, plus the
+/// pair's model-upload time. Shared by the analytic engine and the DES path
+/// so both produce bit-identical attribution.
+pub fn pair_stages(
+    d_i: &[f64; 5],
+    nb_i: f64,
+    d_j: &[f64; 5],
+    nb_j: f64,
+    upload_s: f64,
+) -> [f64; N_STAGES] {
+    [
+        d_i[0] * nb_i + d_j[0] * nb_j,
+        d_i[1] * nb_i + d_j[1] * nb_j,
+        d_i[2] * nb_i + d_j[2] * nb_j,
+        d_i[3] * nb_i + d_j[3] * nb_j,
+        d_i[4] * nb_i + d_j[4] * nb_j,
+        upload_s,
+        0.0,
+    ]
+}
+
+/// Stage attribution for a critical full-model participant (solo / FL
+/// client): all compute is front compute, plus the model upload.
+pub fn solo_stages(compute_s: f64, upload_s: f64) -> [f64; N_STAGES] {
+    let mut s = [0.0; N_STAGES];
+    s[0] = compute_s;
+    s[5] = upload_s;
+    s
+}
+
+/// Deterministic p50 of participant totals (`total_cmp` ordering; mutates
+/// the slice via in-place selection; 0 for an empty round).
+pub fn p50(totals: &mut [f64]) -> f64 {
+    if totals.is_empty() {
+        return 0.0;
+    }
+    let mid = (totals.len() - 1) / 2;
+    let (_, v, _) = totals.select_nth_unstable_by(mid, |a, b| a.total_cmp(b));
+    *v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_has_no_attribution() {
+        let b = StageBreakdown::default();
+        assert_eq!(b.crit_a, -1);
+        assert_eq!(b.crit_b, -1);
+        assert_eq!(b.sum_s(), 0.0);
+    }
+
+    #[test]
+    fn pair_stages_scale_by_batches() {
+        let d_i = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let d_j = [10.0, 20.0, 30.0, 40.0, 50.0];
+        let s = pair_stages(&d_i, 2.0, &d_j, 1.0, 7.0);
+        assert_eq!(s[0], 12.0);
+        assert_eq!(s[1], 24.0);
+        assert_eq!(s[4], 60.0);
+        assert_eq!(s[5], 7.0);
+        assert_eq!(s[6], 0.0);
+    }
+
+    #[test]
+    fn p50_is_deterministic_median() {
+        assert_eq!(p50(&mut []), 0.0);
+        assert_eq!(p50(&mut [3.0]), 3.0);
+        assert_eq!(p50(&mut [4.0, 1.0, 3.0, 2.0]), 2.0); // lower median
+        assert_eq!(p50(&mut [5.0, 1.0, 3.0]), 3.0);
+    }
+
+    #[test]
+    fn remap_translates_compact_ids() {
+        let mut b = StageBreakdown { crit_a: 1, crit_b: 0, ..Default::default() };
+        b.remap_crit(&[40, 70]);
+        assert_eq!((b.crit_a, b.crit_b), (70, 40));
+        let mut solo = StageBreakdown { crit_a: 0, crit_b: -1, ..Default::default() };
+        solo.remap_crit(&[40, 70]);
+        assert_eq!((solo.crit_a, solo.crit_b), (40, -1));
+    }
+
+    #[test]
+    fn json_has_named_stages() {
+        let b = StageBreakdown {
+            stage_s: [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0],
+            ..Default::default()
+        };
+        let j = b.to_json();
+        assert_eq!(j.get("front_fp").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("server_agg").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(j.get("crit_a").and_then(Json::as_f64), Some(-1.0));
+    }
+}

@@ -1,0 +1,87 @@
+//! Prometheus-style text exposition + JSONL event-stream renderers
+//! (pillar 3 of the telemetry subsystem).
+
+use super::registry::Snapshot;
+use crate::util::json::Json;
+use std::fmt::Write as _;
+
+/// Metric-name prefix for every exposed series.
+const PREFIX: &str = "fedpairing";
+
+/// Render a registry snapshot in the Prometheus text exposition format:
+/// counters, gauges, the derived memo hit-rate, and log2 histograms as
+/// cumulative `_bucket{le="..."}` series (trailing all-zero buckets elided).
+pub fn prometheus(snap: &Snapshot) -> String {
+    let mut s = String::new();
+    for (name, v) in &snap.counters {
+        let _ = writeln!(s, "# TYPE {PREFIX}_{name} counter\n{PREFIX}_{name} {v}");
+    }
+    for (name, v) in &snap.gauges {
+        let _ = writeln!(s, "# TYPE {PREFIX}_{name} gauge\n{PREFIX}_{name} {v}");
+    }
+    let rate = snap.memo_hit_rate();
+    let _ = writeln!(s, "# TYPE {PREFIX}_memo_hit_rate gauge\n{PREFIX}_memo_hit_rate {rate}");
+    for (name, buckets) in &snap.histos {
+        let _ = writeln!(s, "# TYPE {PREFIX}_{name} histogram");
+        let last = buckets.iter().rposition(|&b| b > 0);
+        let mut cum = 0u64;
+        if let Some(last) = last {
+            for (k, &b) in buckets.iter().enumerate().take(last + 1) {
+                cum += b;
+                let le = super::registry::bucket_bound(k);
+                let _ = writeln!(s, "{PREFIX}_{name}_bucket{{le=\"{le}\"}} {cum}");
+            }
+        }
+        let _ = writeln!(s, "{PREFIX}_{name}_bucket{{le=\"+Inf\"}} {cum}");
+        let _ = writeln!(s, "{PREFIX}_{name}_count {cum}");
+    }
+    s
+}
+
+/// Render an event stream as JSON Lines (one compact object per line).
+pub fn jsonl(events: &[Json]) -> String {
+    let mut s = String::new();
+    for e in events {
+        s.push_str(&e.to_string());
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::registry::HISTO_BUCKETS;
+    use crate::util::json::JsonObj;
+
+    #[test]
+    fn prometheus_renders_all_metric_kinds() {
+        let mut buckets = [0u64; HISTO_BUCKETS];
+        buckets[0] = 1; // one zero-valued observation
+        buckets[3] = 2; // two observations in [4, 8)
+        let snap = Snapshot {
+            counters: vec![("memo_hits_total", 3), ("memo_misses_total", 1)],
+            gauges: vec![("fleet_alive", 42)],
+            histos: vec![("pool_chunk_nanos", buckets)],
+        };
+        let text = prometheus(&snap);
+        assert!(text.contains("fedpairing_memo_hits_total 3"));
+        assert!(text.contains("# TYPE fedpairing_fleet_alive gauge"));
+        assert!(text.contains("fedpairing_memo_hit_rate 0.75"));
+        assert!(text.contains("fedpairing_pool_chunk_nanos_bucket{le=\"0\"} 1"));
+        assert!(text.contains("fedpairing_pool_chunk_nanos_bucket{le=\"7\"} 3"));
+        assert!(text.contains("fedpairing_pool_chunk_nanos_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("fedpairing_pool_chunk_nanos_count 3"));
+    }
+
+    #[test]
+    fn jsonl_emits_one_line_per_event() {
+        let mut a = JsonObj::new();
+        a.insert("round", Json::Num(1.0));
+        let text = jsonl(&[Json::Obj(a.clone()), Json::Obj(a)]);
+        assert_eq!(text.lines().count(), 2);
+        for line in text.lines() {
+            assert!(Json::parse(line).is_ok());
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Telemetry: zero-cost-when-disabled observability for the simulator
+//! (DESIGN.md §8).
+//!
+//! Three pillars:
+//!
+//! 1. **Metrics registry** ([`registry`]) — enum-keyed, lock-free counters /
+//!    gauges / log2 histograms wired into the hot paths (memo cache, pair
+//!    kernels, candidate generation, grid mobility, matching repair,
+//!    `FixedPool` chunks). Disabled cost is one relaxed load + branch per
+//!    hook.
+//! 2. **Stage-attributed round breakdown** ([`breakdown`]) — every round's
+//!    critical path decomposed into named split-protocol stages plus
+//!    straggler attribution, carried on `RoundTime`/`RoundRecord` and
+//!    exported to CSV/JSON. Computed unconditionally so observation can
+//!    never perturb the simulation.
+//! 3. **Exporters** ([`trace`], [`export`]) — a Chrome trace-event JSON
+//!    writer (host phase spans + simulated pair lanes for the top-k slowest
+//!    pairs), a Prometheus-style text snapshot, and a JSONL round-event
+//!    stream, all driven by [`Telemetry`] from `TelemetryConfig`.
+//!
+//! **Determinism invariant** (property-tested in `tests/telemetry.rs`):
+//! with telemetry enabled — including trace export — every driver produces
+//! `RoundRecord` traces bit-identical to the telemetry-off run at any thread
+//! count. Hooks only read simulation state, never feed back into it.
+
+pub mod breakdown;
+pub mod export;
+pub mod registry;
+pub mod trace;
+
+pub use breakdown::{StageBreakdown, N_STAGES, STAGE_NAMES};
+pub use registry::{Counter, Gauge, Histo};
+
+use crate::config::TelemetryConfig;
+use crate::sim::latency::RoundTime;
+use crate::util::json::{Json, JsonObj};
+use std::io;
+use std::time::Instant;
+
+/// Chrome-trace pid for wall-clock simulator phase spans.
+const PID_HOST: u64 = 0;
+/// Chrome-trace pid for simulated-time pair lanes.
+const PID_SIM: u64 = 1;
+
+/// Per-run telemetry sink: owns the exporters and the phase-span clock.
+/// Constructing one flips the global registry gate to the configured state.
+/// All methods are cheap no-ops when telemetry is disabled or the round is
+/// not sampled.
+#[derive(Debug)]
+pub struct Telemetry {
+    cfg: TelemetryConfig,
+    trace: Option<trace::TraceWriter>,
+    events: Vec<Json>,
+    run_t0: Instant,
+    mark_t0: Instant,
+    round: usize,
+    sampling: bool,
+}
+
+impl Telemetry {
+    /// Build a sink and flip the global registry gate to `cfg.enabled`.
+    pub fn new(cfg: &TelemetryConfig) -> Telemetry {
+        registry::set_enabled(cfg.enabled);
+        let trace = if cfg.enabled && cfg.trace_out.is_some() {
+            let mut w = trace::TraceWriter::new();
+            w.name_process(PID_HOST, "simulator (wall clock)");
+            w.name_process(PID_SIM, "pair lanes (simulated time)");
+            Some(w)
+        } else {
+            None
+        };
+        let now = Instant::now();
+        Telemetry {
+            cfg: cfg.clone(),
+            trace,
+            events: Vec::new(),
+            run_t0: now,
+            mark_t0: now,
+            round: 0,
+            sampling: false,
+        }
+    }
+
+    /// Whether the registry gate is on for this run.
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    fn exporting(&self) -> bool {
+        self.trace.is_some()
+    }
+
+    /// Start a round. Rounds are 1-based; round `1` and every
+    /// `sample_every`-th round after it are sampled for export.
+    pub fn begin_round(&mut self, round: usize) {
+        self.round = round;
+        self.sampling =
+            self.exporting() && (round.max(1) - 1) % self.cfg.sample_every.max(1) == 0;
+        if self.sampling {
+            self.mark_t0 = Instant::now();
+        }
+    }
+
+    /// Close the wall-clock span since the previous mark (or `begin_round`)
+    /// under `name` — e.g. `dynamics`, `pairing`, `engine`, `train`.
+    pub fn mark(&mut self, name: &str) {
+        if !self.sampling {
+            return;
+        }
+        let now = Instant::now();
+        let ts_us = self.mark_t0.duration_since(self.run_t0).as_secs_f64() * 1e6;
+        let dur_us = now.duration_since(self.mark_t0).as_secs_f64() * 1e6;
+        let round = self.round;
+        if let Some(tr) = self.trace.as_mut() {
+            let mut args = JsonObj::new();
+            args.insert("round", Json::Num(round as f64));
+            tr.span_args(name, "phase", PID_HOST, 0, ts_us, dur_us, Some(args));
+        }
+        self.mark_t0 = now;
+    }
+
+    /// Record the finished round: one JSONL event plus trace lanes for the
+    /// top-k slowest pairs. `lanes` holds `(a, b, total_s)` per pair (ids in
+    /// whatever space the caller reports — remap before calling if needed);
+    /// `sim_offset_s` is the round's simulated start time.
+    pub fn end_round(
+        &mut self,
+        rt: &RoundTime,
+        n_alive: usize,
+        lanes: &[(usize, usize, f64)],
+        sim_offset_s: f64,
+    ) {
+        if !self.sampling {
+            return;
+        }
+        let mut o = JsonObj::new();
+        o.insert("type", Json::str("round"));
+        o.insert("round", Json::Num(self.round as f64));
+        o.insert("n_alive", Json::Num(n_alive as f64));
+        o.insert("sim_round_s", Json::Num(rt.total_s));
+        o.insert("max_cpu_busy_s", Json::Num(rt.max_cpu_busy_s));
+        o.insert("max_link_busy_s", Json::Num(rt.max_link_busy_s));
+        o.insert("stages", rt.stages.to_json());
+        self.events.push(Json::Obj(o));
+        if let Some(tr) = self.trace.as_mut() {
+            let mut top: Vec<(usize, usize, f64)> = lanes.to_vec();
+            top.sort_by(|x, y| y.2.total_cmp(&x.2).then_with(|| (x.0, x.1).cmp(&(y.0, y.1))));
+            top.truncate(self.cfg.top_k_pairs);
+            for (lane, (a, b, t)) in top.iter().enumerate() {
+                let mut args = JsonObj::new();
+                args.insert("round", Json::Num(self.round as f64));
+                tr.span_args(
+                    &format!("pair {a}-{b}"),
+                    "pair",
+                    PID_SIM,
+                    lane as u64,
+                    sim_offset_s * 1e6,
+                    t * 1e6,
+                    Some(args),
+                );
+            }
+        }
+    }
+
+    /// Flush the exporters. With `trace_out = Some(path)` this writes the
+    /// Chrome trace to `path`, the Prometheus snapshot to `path.prom` and
+    /// the JSONL round events to `path.events.jsonl`; returns the paths
+    /// written (empty when exporting is off).
+    pub fn finish(&mut self) -> io::Result<Vec<String>> {
+        let mut written = Vec::new();
+        let Some(path) = self.cfg.trace_out.clone() else {
+            return Ok(written);
+        };
+        if let Some(tr) = self.trace.take() {
+            std::fs::write(&path, tr.to_json().to_string_pretty(2))?;
+            written.push(path.clone());
+            let prom = format!("{path}.prom");
+            std::fs::write(&prom, export::prometheus(&registry::snapshot()))?;
+            written.push(prom);
+            let ev = format!("{path}.events.jsonl");
+            std::fs::write(&ev, export::jsonl(&self.events))?;
+            written.push(ev);
+        }
+        Ok(written)
+    }
+}

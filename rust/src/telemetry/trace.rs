@@ -1,0 +1,113 @@
+//! Chrome trace-event JSON writer (pillar 3 of the telemetry subsystem).
+//!
+//! Emits the `traceEvents` object format understood by `chrome://tracing`
+//! and Perfetto. Only complete ("X") events are used — each span carries its
+//! own start + duration, so the writer is a flat append buffer with no
+//! begin/end pairing state.
+//!
+//! Two clock domains share one file, separated by pid: the host pid carries
+//! wall-clock spans (simulator phase timings), while sim pids carry
+//! *simulated*-time spans (pair lanes, where `ts`/`dur` are simulated
+//! microseconds). Viewers render them as separate processes, so the domains
+//! never visually interleave.
+
+use crate::util::json::{Json, JsonObj};
+
+/// Buffered trace-event writer.
+#[derive(Debug, Default)]
+pub struct TraceWriter {
+    events: Vec<Json>,
+}
+
+impl TraceWriter {
+    pub fn new() -> TraceWriter {
+        TraceWriter::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Append a complete ("X") span. `ts_us`/`dur_us` are microseconds on
+    /// the pid's clock domain.
+    pub fn span(&mut self, name: &str, cat: &str, pid: u64, tid: u64, ts_us: f64, dur_us: f64) {
+        self.span_args(name, cat, pid, tid, ts_us, dur_us, None);
+    }
+
+    /// [`TraceWriter::span`] with an optional `args` payload.
+    #[allow(clippy::too_many_arguments)]
+    pub fn span_args(
+        &mut self,
+        name: &str,
+        cat: &str,
+        pid: u64,
+        tid: u64,
+        ts_us: f64,
+        dur_us: f64,
+        args: Option<JsonObj>,
+    ) {
+        let mut e = JsonObj::new();
+        e.insert("name", Json::str(name));
+        e.insert("cat", Json::str(cat));
+        e.insert("ph", Json::str("X"));
+        e.insert("pid", Json::Num(pid as f64));
+        e.insert("tid", Json::Num(tid as f64));
+        e.insert("ts", Json::Num(ts_us));
+        e.insert("dur", Json::Num(dur_us));
+        if let Some(a) = args {
+            e.insert("args", Json::Obj(a));
+        }
+        self.events.push(Json::Obj(e));
+    }
+
+    /// Name a pid in the viewer's process list (metadata event).
+    pub fn name_process(&mut self, pid: u64, name: &str) {
+        let mut args = JsonObj::new();
+        args.insert("name", Json::str(name));
+        let mut e = JsonObj::new();
+        e.insert("name", Json::str("process_name"));
+        e.insert("ph", Json::str("M"));
+        e.insert("pid", Json::Num(pid as f64));
+        e.insert("tid", Json::Num(0.0));
+        e.insert("args", Json::Obj(args));
+        self.events.push(Json::Obj(e));
+    }
+
+    /// The full trace document: `{"traceEvents": [...], ...}`.
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("traceEvents", Json::Arr(self.events.clone()));
+        o.insert("displayTimeUnit", Json::str("ms"));
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_round_trip_through_the_codec() {
+        let mut w = TraceWriter::new();
+        assert!(w.is_empty());
+        w.name_process(0, "host");
+        w.span("engine", "host", 0, 0, 10.0, 5.0);
+        let mut args = JsonObj::new();
+        args.insert("round", Json::Num(3.0));
+        w.span_args("pairing", "host", 0, 0, 15.0, 2.0, Some(args));
+        assert_eq!(w.len(), 3);
+        let parsed = Json::parse(&w.to_json().to_string()).unwrap();
+        let events = parsed.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[1].get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(events[1].get("ts").and_then(Json::as_f64), Some(10.0));
+        assert_eq!(
+            events[2].get("args").and_then(|a| a.get("round")).and_then(Json::as_f64),
+            Some(3.0)
+        );
+    }
+}

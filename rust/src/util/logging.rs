@@ -3,10 +3,17 @@
 //! A tiny global logger with compile-out-able macros. Level is set once at
 //! startup (CLI `--log-level` or `FEDPAIRING_LOG`); output goes to stderr so
 //! metric streams on stdout stay machine-readable.
+//!
+//! Timestamps default to monotonic elapsed-since-init (`[+1.042 …]`) — the
+//! init instant is captured once, on [`init_from_env`] or the first emit,
+//! whichever comes first — so log deltas are immune to wall-clock steps.
+//! `FEDPAIRING_LOG_TS=epoch` (or [`set_timestamps`]) restores absolute Unix
+//! seconds for correlating against external systems.
 
 use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
-use std::time::{SystemTime, UNIX_EPOCH};
+use std::sync::OnceLock;
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
 
 /// Log severity.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -44,6 +51,39 @@ impl Level {
 
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 
+/// Timestamp rendering mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Timestamps {
+    /// Monotonic seconds since logger init: `+12.345` (default).
+    Elapsed = 0,
+    /// Absolute Unix epoch seconds: `1754640000.123`.
+    Epoch = 1,
+}
+
+static TS_MODE: AtomicU8 = AtomicU8::new(Timestamps::Elapsed as u8);
+static INIT: OnceLock<Instant> = OnceLock::new();
+
+/// The elapsed clock's zero — captured exactly once, on the first call.
+/// `init_from_env` primes it so `+0.000` means process startup rather than
+/// the first log line.
+pub fn init_instant() -> Instant {
+    *INIT.get_or_init(Instant::now)
+}
+
+/// Select the timestamp mode (also `FEDPAIRING_LOG_TS=epoch|elapsed`).
+pub fn set_timestamps(mode: Timestamps) {
+    TS_MODE.store(mode as u8, Ordering::Relaxed);
+}
+
+/// Current timestamp mode.
+pub fn timestamps() -> Timestamps {
+    match TS_MODE.load(Ordering::Relaxed) {
+        0 => Timestamps::Elapsed,
+        _ => Timestamps::Epoch,
+    }
+}
+
 /// Set the global level (also reads `FEDPAIRING_LOG` at startup via `init`).
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
@@ -60,12 +100,19 @@ pub fn level() -> Level {
     }
 }
 
-/// Initialize from the `FEDPAIRING_LOG` env var (if present).
+/// Initialize from the `FEDPAIRING_LOG` / `FEDPAIRING_LOG_TS` env vars (if
+/// present) and pin the elapsed clock's zero to now.
 pub fn init_from_env() {
+    init_instant();
     if let Ok(v) = std::env::var("FEDPAIRING_LOG") {
         if let Some(l) = Level::from_str(&v) {
             set_level(l);
         }
+    }
+    match std::env::var("FEDPAIRING_LOG_TS").as_deref() {
+        Ok("epoch") => set_timestamps(Timestamps::Epoch),
+        Ok("elapsed") => set_timestamps(Timestamps::Elapsed),
+        _ => {}
     }
 }
 
@@ -80,15 +127,22 @@ pub fn emit(lvl: Level, module: &str, args: std::fmt::Arguments<'_>) {
     if !enabled(lvl) {
         return;
     }
-    let now = SystemTime::now()
-        .duration_since(UNIX_EPOCH)
-        .unwrap_or_default();
-    let secs = now.as_secs();
-    let millis = now.subsec_millis();
+    let (prefix, secs, millis) = match timestamps() {
+        Timestamps::Elapsed => {
+            let e = init_instant().elapsed();
+            ("+", e.as_secs(), e.subsec_millis())
+        }
+        Timestamps::Epoch => {
+            let now = SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .unwrap_or_default();
+            ("", now.as_secs(), now.subsec_millis())
+        }
+    };
     let mut err = std::io::stderr().lock();
     let _ = writeln!(
         err,
-        "[{secs}.{millis:03} {} {}] {}",
+        "[{prefix}{secs}.{millis:03} {} {}] {}",
         lvl.tag(),
         module,
         args
@@ -141,5 +195,21 @@ mod tests {
         log_info!("hidden {}", 1);
         log_error!("visible-but-harmless {}", 2);
         set_level(Level::Info);
+    }
+
+    #[test]
+    fn init_instant_is_cached_once() {
+        let a = init_instant();
+        let b = init_instant();
+        assert_eq!(a, b);
+        assert!(a.elapsed() >= std::time::Duration::ZERO);
+    }
+
+    #[test]
+    fn timestamp_mode_roundtrips() {
+        set_timestamps(Timestamps::Epoch);
+        assert_eq!(timestamps(), Timestamps::Epoch);
+        set_timestamps(Timestamps::Elapsed); // restore the default mode
+        assert_eq!(timestamps(), Timestamps::Elapsed);
     }
 }

@@ -11,7 +11,9 @@
 //! Workers are scoped (fork-join): they are joined before `map` returns, may
 //! borrow from the caller's stack, and no thread outlives the call.
 
+use crate::telemetry::registry::{self, Counter, Histo};
 use std::num::NonZeroUsize;
+use std::time::Instant;
 
 /// A fork-join executor with a fixed worker count.
 #[derive(Clone, Copy, Debug)]
@@ -52,7 +54,15 @@ impl FixedPool {
     {
         let workers = self.threads.min(n).max(1);
         if workers == 1 {
-            return (0..n).map(f).collect();
+            // Telemetry: the serial path is one chunk. The enabled check is a
+            // single relaxed load; `Instant::now` runs only when it passes.
+            let t0 = registry::enabled().then(Instant::now);
+            let out: Vec<T> = (0..n).map(f).collect();
+            if let Some(t0) = t0 {
+                crate::tm_observe!(Histo::PoolChunkNanos, t0.elapsed().as_nanos() as u64);
+                crate::tm_count!(Counter::PoolChunks, 1);
+            }
+            return out;
         }
         let chunk = n.div_ceil(workers);
         let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
@@ -61,8 +71,13 @@ impl FixedPool {
                 let f = &f;
                 let base = w * chunk;
                 scope.spawn(move || {
+                    let t0 = registry::enabled().then(Instant::now);
                     for (k, slot) in slots.iter_mut().enumerate() {
                         *slot = Some(f(base + k));
+                    }
+                    if let Some(t0) = t0 {
+                        crate::tm_observe!(Histo::PoolChunkNanos, t0.elapsed().as_nanos() as u64);
+                        crate::tm_count!(Counter::PoolChunks, 1);
                     }
                 });
             }

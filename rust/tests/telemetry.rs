@@ -1,0 +1,264 @@
+//! Telemetry integration tests — the only test binary that flips the global
+//! registry gate (`registry::set_enabled`). Every test serializes on one
+//! mutex because the registry and the gate are process-wide; the library's
+//! unit tests never enable telemetry, so no other binary races these.
+//!
+//! The pinned properties:
+//!
+//! 1. **Determinism invariant** — telemetry on (including trace export)
+//!    produces `RoundRecord` traces bit-identical to telemetry off, at any
+//!    thread count, on the stable and lossy-radio presets and for all four
+//!    algorithms.
+//! 2. **Memo hit-rate** — on the stable preset every round after the first
+//!    hits the engine's cross-round memo cache, so the counter-derived rate
+//!    is exactly `(rounds − 1)/rounds` and round 1 accounts for all misses.
+//! 3. **Disabled path** — with the gate off a full churn run leaves every
+//!    counter, gauge and histogram at zero.
+//! 4. **Exporters** — the Chrome trace parses, spans are well-formed, pair
+//!    lanes respect `top_k_pairs`, the Prometheus snapshot exposes the
+//!    derived hit-rate, and the JSONL stream has one event per sampled round.
+
+use fedpairing::config::{Algorithm, ExperimentConfig, ScenarioConfig, ScenarioKind};
+use fedpairing::coordinator::metrics::RoundRecord;
+use fedpairing::fleet::simulate_scenario;
+use fedpairing::telemetry::registry::{self, Counter};
+use fedpairing::telemetry::export;
+use fedpairing::util::json::Json;
+use std::sync::Mutex;
+
+/// Process-wide serialization for the global registry gate.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn cfg(kind: ScenarioKind, algo: Algorithm) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.n_clients = 24;
+    c.rounds = 15;
+    c.samples_per_client = 128;
+    c.algorithm = algo;
+    c.scenario = ScenarioConfig::preset(kind);
+    c
+}
+
+/// Every observable bit of a round record (NaN-safe: compares bit patterns).
+type Fp = (usize, usize, u64, u64, u64, [u64; 7], i64, i64, u64);
+
+fn fingerprint(rounds: &[RoundRecord]) -> Vec<Fp> {
+    rounds
+        .iter()
+        .map(|r| {
+            (
+                r.round,
+                r.n_alive,
+                r.sim_round_s.to_bits(),
+                r.sim_total_s.to_bits(),
+                r.mean_cut.to_bits(),
+                r.stages.stage_s.map(f64::to_bits),
+                r.stages.crit_a,
+                r.stages.crit_b,
+                r.stages.crit_slack_s.to_bits(),
+            )
+        })
+        .collect()
+}
+
+/// Scratch directory for exporter output (inside `target/`, never committed).
+fn out_dir() -> std::path::PathBuf {
+    let d = std::path::PathBuf::from("target/test-telemetry");
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn telemetry_and_trace_export_never_perturb_round_records() {
+    let _g = lock();
+    let dir = out_dir();
+    for kind in [ScenarioKind::Stable, ScenarioKind::LossyRadio] {
+        for threads in [1usize, 4] {
+            let mut off = cfg(kind, Algorithm::FedPairing);
+            off.engine.threads = threads;
+            let mut on = off.clone();
+            on.telemetry.enabled = true;
+            on.telemetry.sample_every = 2;
+            on.telemetry.trace_out = Some(
+                dir.join(format!("perturb-{kind:?}-{threads}.json"))
+                    .to_string_lossy()
+                    .into_owned(),
+            );
+            let a = simulate_scenario(&off).unwrap();
+            let b = simulate_scenario(&on).unwrap();
+            assert_eq!(
+                fingerprint(&a.result.rounds),
+                fingerprint(&b.result.rounds),
+                "{kind:?} threads={threads}: telemetry perturbed the trace"
+            );
+            assert_eq!(a.trace, b.trace, "{kind:?} threads={threads}: churn diverged");
+        }
+    }
+    // The other three algorithms carry stage breakdowns too — same invariant.
+    for algo in [Algorithm::VanillaFL, Algorithm::VanillaSL, Algorithm::SplitFed] {
+        let off = cfg(ScenarioKind::LossyRadio, algo);
+        let mut on = off.clone();
+        on.telemetry.enabled = true;
+        let a = simulate_scenario(&off).unwrap();
+        let b = simulate_scenario(&on).unwrap();
+        assert_eq!(
+            fingerprint(&a.result.rounds),
+            fingerprint(&b.result.rounds),
+            "{algo:?}: telemetry perturbed the trace"
+        );
+    }
+    registry::set_enabled(false);
+    registry::reset();
+}
+
+#[test]
+fn memo_hit_rate_is_total_after_round_one_on_stable() {
+    let _g = lock();
+    registry::reset();
+    let mut c = cfg(ScenarioKind::Stable, Algorithm::FedPairing);
+    c.telemetry.enabled = true;
+    simulate_scenario(&c).unwrap();
+    let snap = registry::snapshot();
+    let hits = snap.counter(Counter::MemoHits.name());
+    let misses = snap.counter(Counter::MemoMisses.name());
+    // Stable fleet, 24 clients → 12 pairs priced once in round 1, then every
+    // later round is a pure cache hit.
+    assert_eq!(misses, 12, "round 1 should miss once per pair");
+    assert_eq!(hits, misses * (c.rounds as u64 - 1), "a later round missed");
+    let expect = (c.rounds - 1) as f64 / c.rounds as f64;
+    assert!((snap.memo_hit_rate() - expect).abs() < 1e-12);
+    // The derived series is exposed in the Prometheus snapshot.
+    let prom = export::prometheus(&snap);
+    assert!(prom.contains("fedpairing_memo_hit_rate"), "{prom}");
+    assert!(prom.contains("fedpairing_memo_hits_total"), "{prom}");
+    registry::set_enabled(false);
+    registry::reset();
+}
+
+#[test]
+fn disabled_run_leaves_every_metric_at_zero() {
+    let _g = lock();
+    registry::set_enabled(false);
+    registry::reset();
+    // Lossy radio exercises every hook site: memo, kernels, repair,
+    // candidates (via sparse backends at scale), mobility, pool chunks.
+    let mut c = cfg(ScenarioKind::LossyRadio, Algorithm::FedPairing);
+    c.engine.threads = 4;
+    simulate_scenario(&c).unwrap();
+    let snap = registry::snapshot();
+    assert!(snap.counters.iter().all(|&(_, v)| v == 0), "{:?}", snap.counters);
+    assert!(snap.gauges.iter().all(|&(_, v)| v == 0), "{:?}", snap.gauges);
+    assert!(snap
+        .histos
+        .iter()
+        .all(|(_, b)| b.iter().all(|&v| v == 0)));
+}
+
+#[test]
+fn exporters_write_parseable_well_formed_output() {
+    let _g = lock();
+    registry::reset();
+    let dir = out_dir();
+    let trace_path = dir.join("golden.json").to_string_lossy().into_owned();
+    let mut c = cfg(ScenarioKind::Stable, Algorithm::FedPairing);
+    c.n_clients = 16;
+    c.rounds = 6;
+    c.telemetry.enabled = true;
+    c.telemetry.sample_every = 2; // samples rounds 1, 3, 5
+    c.telemetry.top_k_pairs = 4;
+    c.telemetry.trace_out = Some(trace_path.clone());
+    simulate_scenario(&c).unwrap();
+
+    // Chrome trace: parses, and every span is well-formed.
+    let trace = Json::parse(&std::fs::read_to_string(&trace_path).unwrap()).unwrap();
+    let events = trace.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    let mut phases = 0usize;
+    let mut lanes = 0usize;
+    for e in events {
+        let ph = e.get("ph").unwrap().as_str().unwrap();
+        let pid = e.get("pid").unwrap().as_usize().unwrap();
+        match ph {
+            "X" => {
+                let ts = e.get("ts").unwrap().as_f64().unwrap();
+                let dur = e.get("dur").unwrap().as_f64().unwrap();
+                assert!(ts >= 0.0 && dur >= 0.0, "negative span: {e:?}");
+                let name = e.get("name").unwrap().as_str().unwrap();
+                if pid == 0 {
+                    assert!(
+                        ["dynamics", "pairing", "engine"].contains(&name),
+                        "unknown phase span {name}"
+                    );
+                    phases += 1;
+                } else {
+                    assert_eq!(pid, 1);
+                    assert!(name.starts_with("pair "), "lane span {name}");
+                    // Lane tids are the per-round slowness ranks 0..top_k.
+                    assert!(e.get("tid").unwrap().as_usize().unwrap() < 4);
+                    lanes += 1;
+                }
+            }
+            "M" => {} // process-name metadata
+            other => panic!("unexpected event phase {other}"),
+        }
+    }
+    // 3 sampled rounds × 3 marks (dynamics/pairing/engine).
+    assert_eq!(phases, 9, "phase span count");
+    // 16 clients → 8 pairs, truncated to top_k = 4, × 3 sampled rounds.
+    assert_eq!(lanes, 12, "pair lane count");
+
+    // Prometheus snapshot rides along as `<trace>.prom`.
+    let prom = std::fs::read_to_string(format!("{trace_path}.prom")).unwrap();
+    assert!(prom.contains("# TYPE fedpairing_memo_hits_total counter"));
+    assert!(prom.contains("fedpairing_memo_hit_rate"));
+
+    // JSONL: one round event per sampled round, each carrying the breakdown.
+    let jsonl = std::fs::read_to_string(format!("{trace_path}.events.jsonl")).unwrap();
+    let rounds: Vec<Json> = jsonl
+        .lines()
+        .filter(|l| !l.is_empty())
+        .map(|l| Json::parse(l).unwrap())
+        .collect();
+    assert_eq!(rounds.len(), 3, "sampled-round event count");
+    for (ev, round) in rounds.iter().zip([1usize, 3, 5]) {
+        assert_eq!(ev.get("type").unwrap().as_str().unwrap(), "round");
+        assert_eq!(ev.get("round").unwrap().as_usize().unwrap(), round);
+        assert_eq!(ev.get("n_alive").unwrap().as_usize().unwrap(), 16);
+        assert!(ev.get("sim_round_s").unwrap().as_f64().unwrap() > 0.0);
+        let stages = ev.get("stages").unwrap();
+        assert!(stages.get("front_fp").is_some(), "breakdown missing: {ev:?}");
+        assert!(stages.get("crit_a").is_some());
+    }
+    registry::set_enabled(false);
+    registry::reset();
+}
+
+#[test]
+fn hot_path_counters_populate_on_an_enabled_churn_run() {
+    let _g = lock();
+    registry::reset();
+    let mut c = cfg(ScenarioKind::LossyRadio, Algorithm::FedPairing);
+    c.engine.threads = 2;
+    c.telemetry.enabled = true;
+    simulate_scenario(&c).unwrap();
+    let snap = registry::snapshot();
+    // Fading re-keys pairs every round → misses and analytic kernel runs.
+    assert!(snap.counter(Counter::MemoMisses.name()) > 0);
+    assert!(snap.counter(Counter::KernelEvalsAnalytic.name()) > 0);
+    // Lossy radio has mobility, so alive clients relocate in the grid.
+    assert!(snap.counter(Counter::GridRelocations.name()) > 0);
+    // The fleet-alive gauge reflects the last round's participant count.
+    let alive = snap
+        .gauges
+        .iter()
+        .find(|(n, _)| *n == "fleet_alive")
+        .map(|&(_, v)| v)
+        .unwrap();
+    assert!(alive >= 1 && alive <= 24, "fleet_alive = {alive}");
+    registry::set_enabled(false);
+    registry::reset();
+}
