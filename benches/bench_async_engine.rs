@@ -1,0 +1,122 @@
+//! Buffered-aggregation throughput bench: synchronous lockstep rounds vs the
+//! event-driven bounded-staleness server (DESIGN.md §9) on the lossy-radio
+//! preset at n = 1k / 10k / 50k.
+//!
+//! The comparison runs VanillaFL so "update" means the same thing on both
+//! sides — one client delivery — and throughput is updates merged per
+//! *simulated* second. Sync merges `n_alive` updates once per straggler-bound
+//! round; async merges a quorum as soon as it lands, so its rate approaches
+//! `Σ 1/dᵢ` (harmonic) instead of `n / max dᵢ`. The acceptance shape: at
+//! n = 50k the async server sustains ≥ 2× the sync update throughput.
+//!
+//! Emits `BENCH_async.json` for CI.
+
+#[path = "common.rs"]
+mod common;
+
+use fedpairing::config::{
+    AggregationMode, Algorithm, ExperimentConfig, ScenarioConfig, ScenarioKind,
+};
+use fedpairing::fleet::{simulate_scenario, ScenarioRun};
+use fedpairing::util::json::{Json, JsonObj};
+use std::time::Instant;
+
+const WINDOWS: usize = 30;
+const SIZES: [usize; 3] = [1_000, 10_000, 50_000];
+const STALENESS_CAP: usize = 32;
+
+fn cfg(n: usize) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.n_clients = n;
+    c.rounds = WINDOWS;
+    c.algorithm = Algorithm::VanillaFL;
+    c.scenario = ScenarioConfig::preset(ScenarioKind::LossyRadio);
+    c
+}
+
+/// Updates merged per simulated second over a finished run.
+fn sync_throughput(run: &ScenarioRun) -> f64 {
+    let updates: usize = run.result.rounds.iter().map(|r| r.n_alive).sum();
+    updates as f64 / run.result.rounds.last().expect("rounds").sim_total_s
+}
+
+fn async_throughput(run: &ScenarioRun) -> f64 {
+    let updates: usize = run.events.iter().map(|e| e.n_updates).sum();
+    updates as f64 / run.events.last().expect("events").t_wall_s
+}
+
+fn main() {
+    println!("bench_async_engine — sync barrier vs buffered aggregation (lossy radio)\n");
+    println!(
+        "  {:<10} {:>14} {:>14} {:>8} {:>12} {:>14} {:>10}",
+        "n", "sync upd/s", "async upd/s", "ratio", "staleness", "wait saved", "wall"
+    );
+    let mut rows = Vec::new();
+    let mut ratio_50k = 0.0f64;
+    for n in SIZES {
+        let base = cfg(n);
+        let mut asy = base.clone();
+        asy.aggregation = AggregationMode::Async;
+        asy.async_agg.buffer_size = (n / 8).max(1);
+        asy.async_agg.staleness_cap = STALENESS_CAP;
+
+        let t = Instant::now();
+        let sync_run = simulate_scenario(&base).expect("sync run");
+        let sync_wall = t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let async_run = simulate_scenario(&asy).expect("async run");
+        let async_wall = t.elapsed().as_secs_f64();
+
+        let s_thpt = sync_throughput(&sync_run);
+        let a_thpt = async_throughput(&async_run);
+        let ratio = a_thpt / s_thpt;
+        let merged: usize = async_run.events.iter().map(|e| e.n_updates).sum();
+        let staleness = async_run
+            .events
+            .iter()
+            .map(|e| e.staleness_mean * e.n_updates as f64)
+            .sum::<f64>()
+            / merged as f64;
+        let stale_max = async_run.events.iter().map(|e| e.staleness_max).max().unwrap_or(0);
+        let wait_saved: f64 = async_run.events.iter().map(|e| e.wait_eliminated_s).sum();
+        if n == 50_000 {
+            ratio_50k = ratio;
+        }
+        println!(
+            "  {n:<10} {s_thpt:>14.1} {a_thpt:>14.1} {ratio:>7.2}x {staleness:>12.2} \
+             {:>12.0} s {:>10}",
+            wait_saved,
+            common::fmt_time(sync_wall + async_wall),
+        );
+        common::black_box((s_thpt, a_thpt));
+
+        let mut row = JsonObj::new();
+        row.insert("n", Json::num(n as f64));
+        row.insert("windows", Json::num(WINDOWS as f64));
+        row.insert("buffer_size", Json::num(asy.async_agg.buffer_size as f64));
+        row.insert("staleness_cap", Json::num(STALENESS_CAP as f64));
+        row.insert("sync_updates_per_sim_s", Json::num(s_thpt));
+        row.insert("async_updates_per_sim_s", Json::num(a_thpt));
+        row.insert("throughput_ratio", Json::num(ratio));
+        row.insert("async_staleness_mean", Json::num(staleness));
+        row.insert("async_staleness_max", Json::num(stale_max as f64));
+        row.insert("async_wait_eliminated_s", Json::num(wait_saved));
+        row.insert("sync_wall_s", Json::num(sync_wall));
+        row.insert("async_wall_s", Json::num(async_wall));
+        rows.push(Json::Obj(row));
+    }
+    println!();
+    common::check_shape("async >= 2x sync update throughput at n=50k", ratio_50k >= 2.0);
+
+    let mut out = JsonObj::new();
+    out.insert("bench", Json::str("async_engine"));
+    out.insert(
+        "workload",
+        Json::str("vanilla-fl lossy-radio, sync barrier vs bounded-staleness buffer"),
+    );
+    out.insert("rows", Json::Arr(rows));
+    out.insert("throughput_ratio_50k", Json::num(ratio_50k));
+    let path = "BENCH_async.json";
+    std::fs::write(path, Json::Obj(out).to_string_pretty(2)).expect("write bench json");
+    println!("wrote {path}");
+}

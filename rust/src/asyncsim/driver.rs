@@ -1,0 +1,409 @@
+//! Engine-free asynchronous scenario runs: the continuous-time counterpart
+//! of [`crate::fleet::sim_driver::simulate_scenario`].
+//!
+//! Each loop iteration is one *merge window*: fleet dynamics step once, idle
+//! present clients (re)start units priced by the memoized
+//! [`RoundEngine`] kernels at the planned cut, in-flight units whose inputs
+//! changed (straggling, mobility, fading) are re-priced in the same engine
+//! call — the memo cache turns unchanged units into O(1) hits — and the
+//! [`Timeline`] advances to the next bounded-staleness merge. One window =
+//! one [`crate::coordinator::metrics::RoundRecord`] (with `t_wall_s` and
+//! `staleness_mean` filled) plus one [`AggregationEvent`].
+//!
+//! **Sync recovery** (tested in `tests/async_engine.rs`): with
+//! `staleness_cap` huge and `buffer_size ≥ fleet`, every window starts all
+//! present units at the merge and commits only after the last one arrives,
+//! so the merge time is the same `f64` max/sum the synchronous engine
+//! computes — the whole trace is bit-identical to `simulate_scenario`.
+
+use super::{AggregationEvent, Merge, Timeline, UnitKind};
+use crate::config::{Algorithm, ConfigError, ExperimentConfig, SplitPolicy};
+use crate::coordinator::metrics::{streamer_for, RoundRecord, RunResult};
+use crate::fleet::dynamics::FleetDynamics;
+use crate::fleet::maintain_matching;
+use crate::fleet::sim_driver::ScenarioRun;
+use crate::pairing::Matching;
+use crate::sim::engine::RoundEngine;
+use crate::sim::latency::{upload_time, Fleet, FleetView, Schedule};
+use crate::sim::profile::ModelProfile;
+use crate::split::SplitCostModel;
+use crate::telemetry::registry::{self, Counter, Gauge, Histo};
+use crate::telemetry::Telemetry;
+use crate::util::index::InverseIndex;
+use crate::util::rng::Rng;
+
+/// This window's FedPairing work: effective pairs/solos whose members are
+/// all idle start fresh; in-flight units whose members are all present get
+/// re-priced. Ids are universe ids throughout.
+#[derive(Debug, Default)]
+pub(crate) struct FedPairingPlan {
+    pub start_pairs: Vec<(usize, usize)>,
+    pub start_solos: Vec<usize>,
+    pub reprice_pairs: Vec<(u64, (usize, usize))>,
+    pub reprice_solos: Vec<(u64, usize)>,
+}
+
+pub(crate) fn plan_fedpairing(
+    tl: &Timeline,
+    eff_pairs: &[(usize, usize)],
+    eff_solos: &[usize],
+    inv: &InverseIndex,
+) -> FedPairingPlan {
+    let mut plan = FedPairingPlan::default();
+    for &(a, b) in eff_pairs {
+        // A pair starts only when both ends are idle; an idle client whose
+        // partner is mid-flight waits for it instead of training solo.
+        if !tl.is_member_busy(a) && !tl.is_member_busy(b) {
+            plan.start_pairs.push((a, b));
+        }
+    }
+    for &s in eff_solos {
+        if !tl.is_member_busy(s) {
+            plan.start_solos.push(s);
+        }
+    }
+    for (id, unit) in tl.running_units() {
+        match unit {
+            UnitKind::Pair(a, b) if inv.get(a).is_some() && inv.get(b).is_some() => {
+                plan.reprice_pairs.push((id, (a, b)));
+            }
+            UnitKind::Solo(s) if inv.get(s).is_some() => plan.reprice_solos.push((id, s)),
+            // A transiently-absent member keeps its old finish time.
+            _ => {}
+        }
+    }
+    plan
+}
+
+/// This window's solo-unit work (FL, SplitFed, SL sessions).
+#[derive(Debug, Default)]
+pub(crate) struct SoloPlan {
+    pub start: Vec<usize>,
+    pub reprice: Vec<(u64, usize)>,
+    /// Universe ids backing the engine view: started, then re-priced — the
+    /// engine's per-unit times map back by position.
+    pub view_members: Vec<usize>,
+}
+
+pub(crate) fn plan_solo(
+    tl: &Timeline,
+    members: &[usize],
+    inv: &InverseIndex,
+    reprice: bool,
+) -> SoloPlan {
+    let start: Vec<usize> = members
+        .iter()
+        .copied()
+        .filter(|&m| !tl.is_member_busy(m))
+        .collect();
+    let mut rp: Vec<(u64, usize)> = Vec::new();
+    if reprice {
+        for (id, unit) in tl.running_units() {
+            if let UnitKind::Solo(s) = unit {
+                if inv.get(s).is_some() {
+                    rp.push((id, s));
+                }
+            }
+        }
+    }
+    let view_members: Vec<usize> = start
+        .iter()
+        .copied()
+        .chain(rp.iter().map(|&(_, s)| s))
+        .collect();
+    SoloPlan {
+        start,
+        reprice: rp,
+        view_members,
+    }
+}
+
+/// Feed one committed merge into the hot-path metrics registry (no-ops when
+/// telemetry is disabled).
+pub(crate) fn note_merge(merge: &Merge, cancelled: usize) {
+    registry::count(Counter::AsyncMerges, 1);
+    registry::count(Counter::AsyncUpdatesMerged, merge.contributors.len() as u64);
+    if cancelled > 0 {
+        registry::count(Counter::AsyncUpdatesCancelled, cancelled as u64);
+    }
+    registry::count(
+        Counter::AsyncWaitEliminatedUs,
+        (merge.wait_eliminated_s * 1e6) as u64,
+    );
+    registry::gauge_set(Gauge::AsyncBufferPeak, merge.buffer_peak as u64);
+    for d in &merge.contributors {
+        registry::observe(Histo::AsyncMergeStaleness, d.staleness as u64);
+    }
+    registry::observe(Histo::AsyncBufferOccupancy, merge.contributors.len() as u64);
+}
+
+/// Simulate `cfg.rounds` merge windows of the configured algorithm under the
+/// configured scenario with buffered asynchronous aggregation (latency +
+/// churn only; no training). Called by `simulate_scenario` when
+/// `cfg.aggregation` is [`crate::config::AggregationMode::Async`].
+pub fn simulate_async(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigError> {
+    cfg.validate()?;
+    let t0 = std::time::Instant::now();
+    let base = Fleet::sample(cfg, &mut Rng::new(cfg.seed));
+    let mut dynamics = FleetDynamics::new(cfg, base);
+    let profile = ModelProfile::from_preset(cfg.model);
+    let sched = Schedule {
+        batch_size: 32,
+        epochs: cfg.local_epochs,
+    };
+    let cost = (cfg.split.policy != SplitPolicy::Paper && cfg.split.co_design)
+        .then(|| SplitCostModel::new(profile.clone(), sched, cfg.compute, cfg.split));
+    let mut pairing_rng = Rng::new(cfg.seed ^ 0x9A1F);
+    let mut matching: Option<Matching> = None;
+    let mut records = Vec::with_capacity(cfg.rounds);
+    let mut trace = Vec::with_capacity(cfg.rounds);
+    let mut events = Vec::with_capacity(cfg.rounds);
+    let mut repaired_rounds = 0usize;
+    let mut sim_total = 0.0f64;
+    let mut engine = RoundEngine::new(&cfg.engine).with_split(cfg.split);
+    engine.set_record_units(true);
+    let mut inv = InverseIndex::new();
+    let mut cpairs: Vec<(usize, usize)> = Vec::new();
+    let mut csolos: Vec<usize> = Vec::new();
+    let mut telemetry = Telemetry::new(&cfg.telemetry);
+    let mut streamer =
+        streamer_for(cfg).map_err(|e| ConfigError(format!("stream sink failed: {e}")))?;
+    let mut tl = Timeline::new(cfg.async_agg.buffer_size, cfg.async_agg.staleness_cap);
+    // SL sessions relay sequentially: new sessions chain after this tail
+    // (relative to the last merge), not at the merge itself.
+    let mut sl_tail = 0.0f64;
+    let server_hz = cfg.compute.server_freq_ghz * 1e9;
+    for seq in 1..=cfg.rounds {
+        telemetry.begin_event();
+        let ev = dynamics.step(seq);
+        let channel = dynamics.channel();
+        telemetry.mark("dynamics");
+        let mut cancelled = 0usize;
+        for &d in &ev.departed {
+            cancelled += tl.cancel_member(d).len();
+        }
+        let members = dynamics.present_members();
+        inv.rebuild(dynamics.universe().n(), members);
+        let rt = match cfg.algorithm {
+            Algorithm::FedPairing => {
+                let had_matching = matching.is_some();
+                let changed = maintain_matching(
+                    &mut matching,
+                    &dynamics,
+                    &ev,
+                    &channel,
+                    cfg,
+                    cost.as_ref(),
+                    &mut pairing_rng,
+                );
+                if had_matching && changed {
+                    repaired_rounds += 1;
+                }
+                let eff = matching
+                    .as_ref()
+                    .expect("matching initialized")
+                    .restricted_to(members);
+                let plan = plan_fedpairing(&tl, &eff.pairs, &eff.solos, &inv);
+                let view = FleetView::new(dynamics.universe(), members);
+                cpairs.clear();
+                cpairs.extend(
+                    plan.start_pairs
+                        .iter()
+                        .chain(plan.reprice_pairs.iter().map(|(_, p)| p))
+                        .map(|&(a, b)| (inv.compact(a), inv.compact(b))),
+                );
+                csolos.clear();
+                csolos.extend(
+                    plan.start_solos
+                        .iter()
+                        .chain(plan.reprice_solos.iter().map(|(_, s)| s))
+                        .map(|&s| inv.compact(s)),
+                );
+                telemetry.mark("pairing");
+                let mut rt = engine.fedpairing_round(
+                    &view,
+                    &cpairs,
+                    &csolos,
+                    &profile,
+                    &sched,
+                    &channel,
+                    &cfg.compute,
+                    true,
+                );
+                rt.stages.remap_crit(members);
+                // Unit times in call order: pairs (started, re-priced), then
+                // solos (started, re-priced).
+                let ut = engine.unit_times();
+                let np = plan.start_pairs.len();
+                let nrp = plan.reprice_pairs.len();
+                let ns = plan.start_solos.len();
+                for (k, &(a, b)) in plan.start_pairs.iter().enumerate() {
+                    tl.start_unit(UnitKind::Pair(a, b), ut[k]);
+                }
+                for (k, &(id, _)) in plan.reprice_pairs.iter().enumerate() {
+                    tl.reprice(id, ut[np + k]);
+                }
+                for (k, &s) in plan.start_solos.iter().enumerate() {
+                    tl.start_unit(UnitKind::Solo(s), ut[np + nrp + k]);
+                }
+                for (k, &(id, _)) in plan.reprice_solos.iter().enumerate() {
+                    tl.reprice(id, ut[np + nrp + ns + k]);
+                }
+                rt
+            }
+            Algorithm::VanillaFL => {
+                let plan = plan_solo(&tl, members, &inv, true);
+                let view = FleetView::new(dynamics.universe(), &plan.view_members);
+                let mut rt =
+                    engine.fl_round(&view, &profile, &sched, &channel, &cfg.compute, true);
+                rt.stages.remap_crit(&plan.view_members);
+                let ut = engine.unit_times();
+                for (k, &m) in plan.start.iter().enumerate() {
+                    tl.start_unit(UnitKind::Solo(m), ut[k]);
+                }
+                for (k, &(id, _)) in plan.reprice.iter().enumerate() {
+                    tl.reprice(id, ut[plan.start.len() + k]);
+                }
+                rt
+            }
+            Algorithm::VanillaSL => {
+                // Sessions are a sequential relay: price this window's new
+                // sessions and chain them after the current tail. Sessions
+                // already queued keep their price (the relay is committed).
+                let plan = plan_solo(&tl, members, &inv, false);
+                let view = FleetView::new(dynamics.universe(), &plan.start);
+                let mut rt = engine.sl_round(
+                    &view,
+                    &profile,
+                    &sched,
+                    &channel,
+                    &cfg.compute,
+                    cfg.sl_cut_layer,
+                    server_hz,
+                );
+                rt.stages.remap_crit(&plan.start);
+                let ut = engine.unit_times();
+                for (k, &m) in plan.start.iter().enumerate() {
+                    let d = ut[k];
+                    tl.start_unit_at(UnitKind::Solo(m), sl_tail, d);
+                    sl_tail += d;
+                }
+                rt
+            }
+            Algorithm::SplitFed => {
+                let plan = plan_solo(&tl, members, &inv, true);
+                let view = FleetView::new(dynamics.universe(), &plan.view_members);
+                let mut rt = engine.splitfed_round(
+                    &view,
+                    &profile,
+                    &sched,
+                    &channel,
+                    &cfg.compute,
+                    cfg.splitfed_cut_layer,
+                    server_hz,
+                    true,
+                );
+                rt.stages.remap_crit(&plan.view_members);
+                // Unit times are the pre-upload pipeline finishes; the
+                // FedAvg upload is charged per merge below, over the merge's
+                // actual contributors.
+                let ut = engine.unit_times();
+                for (k, &m) in plan.start.iter().enumerate() {
+                    tl.start_unit(UnitKind::Solo(m), ut[k]);
+                }
+                for (k, &(id, _)) in plan.reprice.iter().enumerate() {
+                    tl.reprice(id, ut[plan.start.len() + k]);
+                }
+                rt
+            }
+        };
+        telemetry.mark("engine");
+        let merge = tl.advance_to_merge().ok_or_else(|| {
+            ConfigError("async scheduler stalled: nothing in flight or buffered".into())
+        })?;
+        // SplitFed's FedAvg sync charges the slowest *contributor* upload
+        // (clients currently out deliver without re-uploading this window).
+        let overhead = if cfg.algorithm == Algorithm::SplitFed {
+            let front_bytes = profile.params(0, cfg.splitfed_cut_layer) as f64 * 4.0;
+            merge
+                .contributors
+                .iter()
+                .filter_map(|d| match d.unit {
+                    UnitKind::Solo(s) if inv.get(s).is_some() => {
+                        Some(upload_time(dynamics.universe(), &channel, s, front_bytes))
+                    }
+                    _ => None,
+                })
+                .fold(0.0, f64::max)
+        } else {
+            0.0
+        };
+        let total = merge.t_rel + overhead;
+        tl.commit(total);
+        if cfg.algorithm == Algorithm::VanillaSL {
+            sl_tail = (sl_tail - total).max(0.0);
+        }
+        sim_total += total;
+        note_merge(&merge, cancelled);
+        let event = AggregationEvent {
+            seq,
+            t_wall_s: sim_total,
+            n_updates: merge.contributors.len(),
+            n_running: tl.in_flight(),
+            staleness_mean: merge.staleness_mean,
+            staleness_max: merge.staleness_max,
+            buffer_peak: merge.buffer_peak,
+            wait_eliminated_s: merge.wait_eliminated_s,
+        };
+        let rec = RoundRecord {
+            round: seq,
+            n_alive: ev.n_alive,
+            train_loss: f64::NAN,
+            test_acc: f64::NAN,
+            test_loss: f64::NAN,
+            sim_round_s: total,
+            sim_total_s: sim_total,
+            t_wall_s: sim_total,
+            staleness_mean: merge.staleness_mean,
+            mean_cut: rt.mean_cut,
+            stages: rt.stages,
+        };
+        if let Some(s) = streamer.as_mut() {
+            s.push(&rec)
+                .map_err(|e| ConfigError(format!("stream sink failed: {e}")))?;
+        }
+        records.push(rec);
+        let lanes: Vec<(usize, usize, f64)> = engine
+            .pair_lanes()
+            .iter()
+            .map(|&(a, b, t)| (members[a], members[b], t))
+            .collect();
+        telemetry.end_round(&rt, ev.n_alive, &lanes, sim_total - total);
+        telemetry.end_merge(&event);
+        events.push(event);
+        trace.push(ev);
+    }
+    if let Some(s) = streamer {
+        let (c, j) = s
+            .finish()
+            .map_err(|e| ConfigError(format!("stream sink failed: {e}")))?;
+        crate::log_info!("stream: wrote {c} and {j}");
+    }
+    for path in telemetry
+        .finish()
+        .map_err(|e| ConfigError(format!("telemetry export failed: {e}")))?
+    {
+        crate::log_info!("telemetry: wrote {path}");
+    }
+    Ok(ScenarioRun {
+        result: RunResult {
+            config: cfg.clone(),
+            rounds: records,
+            wall_s: t0.elapsed().as_secs_f64(),
+            total_execs: 0,
+        },
+        trace,
+        repaired_rounds,
+        events,
+    })
+}

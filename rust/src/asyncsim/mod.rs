@@ -1,0 +1,455 @@
+//! Asynchronous buffered aggregation: a continuous-time event scheduler for
+//! split federated learning (DESIGN.md §9).
+//!
+//! The synchronous engine prices a round as the max over its units — one
+//! straggler pair stalls everyone else. This subsystem replaces the lockstep
+//! barrier with a FedBuff-style semi-asynchronous server: units (FedPairing
+//! pairs/solos, FL/SplitFed clients, SL sessions) stream their updates as
+//! they finish on a shared [`Timeline`], and the server commits a merge when
+//! its bounded-staleness buffer fills (or everything in flight has arrived),
+//! producing a wall-clock stream of [`AggregationEvent`]s instead of rounds.
+//!
+//! Two knobs from [`crate::config::AsyncConfig`] govern the server:
+//!
+//! - `buffer_size` — minimum delivered updates per merge (K of FedBuff);
+//! - `staleness_cap` — a merge is *deferred* while it would strand any
+//!   running unit more than `staleness_cap` versions behind, so no update is
+//!   ever merged with staleness above the cap (gating, not clipping).
+//!
+//! All timestamps are kept **relative to the last merge** and re-based at
+//! every commit (see [`Timeline::commit`]). Relative time is what makes the
+//! sync-recovery invariant exact: when every unit starts at the merge and
+//! the merge fires only after all of them arrive, the merge time is a plain
+//! `f64` max over the same durations the synchronous engine folds —
+//! bit-identical, property-tested in `tests/async_engine.rs`.
+
+pub mod driver;
+
+pub use driver::simulate_async;
+
+/// One schedulable work unit on the timeline, in universe client ids.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnitKind {
+    /// A FedPairing pair `(i, j)`.
+    Pair(usize, usize),
+    /// A solo client (FedPairing widow, FL/SplitFed client, SL session).
+    Solo(usize),
+}
+
+impl UnitKind {
+    /// Whether universe client `u` takes part in this unit.
+    pub fn contains(&self, u: usize) -> bool {
+        match *self {
+            UnitKind::Pair(a, b) => a == u || b == u,
+            UnitKind::Solo(s) => s == u,
+        }
+    }
+}
+
+/// One committed merge on the wall-clock timeline — the async analogue of a
+/// round record, exported to JSONL/trace by the telemetry sink.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AggregationEvent {
+    /// 1-based merge sequence number.
+    pub seq: usize,
+    /// Cumulative simulated wall-clock seconds at commit.
+    pub t_wall_s: f64,
+    /// Updates merged (buffer occupancy at commit).
+    pub n_updates: usize,
+    /// Units still in flight after the commit.
+    pub n_running: usize,
+    /// Mean staleness (merges behind) over the merged updates.
+    pub staleness_mean: f64,
+    /// Worst staleness over the merged updates (≤ `staleness_cap` always).
+    pub staleness_max: usize,
+    /// Peak buffer occupancy since the previous commit.
+    pub buffer_peak: usize,
+    /// Straggler wait eliminated: seconds the merged updates would have
+    /// idled waiting for the slowest in-flight unit under the sync barrier.
+    pub wait_eliminated_s: f64,
+}
+
+/// A unit in flight: started at `start` (relative to the last merge), due to
+/// deliver at `start + dur`. `base` is the model version it trained from.
+#[derive(Clone, Copy, Debug)]
+struct Running {
+    id: u64,
+    unit: UnitKind,
+    base: usize,
+    start: f64,
+    dur: f64,
+}
+
+/// A delivered update waiting in the server buffer.
+#[derive(Clone, Copy, Debug)]
+pub struct Delivered {
+    /// Creation-ordered unit id — merge consumers iterate contributors in
+    /// ascending id so aggregation sums run in a deterministic order.
+    pub id: u64,
+    pub unit: UnitKind,
+    /// Versions behind the current global model (0 = fresh).
+    pub staleness: usize,
+}
+
+/// Everything the server needs to commit one merge.
+#[derive(Clone, Debug)]
+pub struct Merge {
+    /// Merge time in seconds since the previous commit.
+    pub t_rel: f64,
+    /// Buffer contents, sorted by ascending unit id.
+    pub contributors: Vec<Delivered>,
+    pub staleness_mean: f64,
+    pub staleness_max: usize,
+    pub buffer_peak: usize,
+    pub wait_eliminated_s: f64,
+}
+
+/// The continuous-time scheduler: running units, the delivery buffer, and
+/// the bounded-staleness merge rule.
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    buffer_size: usize,
+    staleness_cap: usize,
+    /// Global model version (number of committed merges).
+    version: usize,
+    next_id: u64,
+    /// Clock, relative to the last commit; advances as deliveries pop.
+    now: f64,
+    running: Vec<Running>,
+    buffer: Vec<Delivered>,
+    buffer_peak: usize,
+}
+
+impl Timeline {
+    pub fn new(buffer_size: usize, staleness_cap: usize) -> Timeline {
+        Timeline {
+            buffer_size: buffer_size.max(1),
+            staleness_cap,
+            version: 0,
+            next_id: 0,
+            now: 0.0,
+            running: Vec::new(),
+            buffer: Vec::new(),
+            buffer_peak: 0,
+        }
+    }
+
+    /// Committed merges so far (the global model version).
+    pub fn version(&self) -> usize {
+        self.version
+    }
+
+    /// Units currently in flight.
+    pub fn in_flight(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Start a unit now (at the current clock), due after `dur` seconds.
+    pub fn start_unit(&mut self, unit: UnitKind, dur: f64) -> u64 {
+        self.start_unit_at(unit, self.now, dur)
+    }
+
+    /// Start a unit at an explicit (relative) time — SL sessions chain after
+    /// the relay tail, which may lie beyond the current clock.
+    pub fn start_unit_at(&mut self, unit: UnitKind, start: f64, dur: f64) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.running.push(Running {
+            id,
+            unit,
+            base: self.version,
+            start,
+            dur,
+        });
+        id
+    }
+
+    /// Whether client `u` is tied up in a running unit or a buffered update
+    /// (buffered members must not restart before their update is merged).
+    pub fn is_member_busy(&self, u: usize) -> bool {
+        self.running.iter().any(|r| r.unit.contains(u))
+            || self.buffer.iter().any(|d| d.unit.contains(u))
+    }
+
+    /// In-flight units as `(id, unit)` — the re-pricing candidates.
+    pub fn running_units(&self) -> impl Iterator<Item = (u64, UnitKind)> + '_ {
+        self.running.iter().map(|r| (r.id, r.unit))
+    }
+
+    /// Cancel every running unit that involves client `u` (durable
+    /// departure). Buffered updates are kept — the work already arrived.
+    /// Returns the cancelled unit ids so trainers can drop pending payloads.
+    pub fn cancel_member(&mut self, u: usize) -> Vec<u64> {
+        let mut dropped = Vec::new();
+        self.running.retain(|r| {
+            if r.unit.contains(u) {
+                dropped.push(r.id);
+                false
+            } else {
+                true
+            }
+        });
+        dropped
+    }
+
+    /// Replace a running unit's duration (same start fraction elapsed) —
+    /// churn/mobility/straggling re-prices only the affected unit's finish.
+    /// No-op when the new duration is bit-identical (the memoized engine
+    /// returns exact hits for unchanged inputs).
+    pub fn reprice(&mut self, id: u64, dur_new: f64) {
+        if let Some(r) = self.running.iter_mut().find(|r| r.id == id) {
+            if r.dur.to_bits() == dur_new.to_bits() {
+                return;
+            }
+            // Keep the elapsed *fraction*: a unit 30% done stays 30% done
+            // under the new price, and its start shifts so that the elapsed
+            // fraction re-scales onto the new duration.
+            if r.dur > 0.0 && r.start < self.now {
+                let frac = (self.now - r.start) / r.dur;
+                r.start = self.now - frac * dur_new;
+            }
+            r.dur = dur_new;
+        }
+    }
+
+    /// Whether the server may commit right now: something is buffered, and
+    /// either nothing is left in flight, or the buffer quorum is met *and*
+    /// committing would not strand any running unit beyond `staleness_cap`.
+    fn merge_ready(&self) -> bool {
+        if self.buffer.is_empty() {
+            return false;
+        }
+        if self.running.is_empty() {
+            return true;
+        }
+        self.buffer.len() >= self.buffer_size
+            && !self
+                .running
+                .iter()
+                .any(|r| self.version + 1 - r.base > self.staleness_cap)
+    }
+
+    /// Pop deliveries in arrival order until the merge rule fires; returns
+    /// `None` only when nothing is running and nothing is buffered.
+    pub fn advance_to_merge(&mut self) -> Option<Merge> {
+        while !self.merge_ready() {
+            // Earliest arrival, ties broken by unit id (deterministic).
+            let mut best: Option<usize> = None;
+            for (k, r) in self.running.iter().enumerate() {
+                let better = match best {
+                    None => true,
+                    Some(b) => {
+                        let o = &self.running[b];
+                        match (r.start + r.dur).total_cmp(&(o.start + o.dur)) {
+                            std::cmp::Ordering::Less => true,
+                            std::cmp::Ordering::Greater => false,
+                            std::cmp::Ordering::Equal => r.id < o.id,
+                        }
+                    }
+                };
+                if better {
+                    best = Some(k);
+                }
+            }
+            let r = self.running.swap_remove(best?);
+            let arrival = r.start + r.dur;
+            // Deliveries arriving during a previous merge's overhead window
+            // land at (relative) negative time; the clock never rewinds.
+            if arrival > self.now {
+                self.now = arrival;
+            }
+            self.buffer.push(Delivered {
+                id: r.id,
+                unit: r.unit,
+                staleness: self.version - r.base,
+            });
+            self.buffer_peak = self.buffer_peak.max(self.buffer.len());
+        }
+        // Sync-barrier counterfactual: every buffered update would have
+        // waited for the slowest projected in-flight finish.
+        let mut wait = 0.0;
+        if let Some(slow) = self
+            .running
+            .iter()
+            .map(|r| r.start + r.dur)
+            .reduce(f64::max)
+        {
+            if slow > self.now {
+                wait = (slow - self.now) * self.buffer.len() as f64;
+            }
+        }
+        let mut contributors = std::mem::take(&mut self.buffer);
+        contributors.sort_by_key(|d| d.id);
+        let n = contributors.len();
+        let staleness_max = contributors.iter().map(|d| d.staleness).max().unwrap_or(0);
+        let staleness_mean =
+            contributors.iter().map(|d| d.staleness as f64).sum::<f64>() / n.max(1) as f64;
+        Some(Merge {
+            t_rel: self.now,
+            contributors,
+            staleness_mean,
+            staleness_max,
+            buffer_peak: self.buffer_peak,
+            wait_eliminated_s: wait,
+        })
+    }
+
+    /// Commit the merge: bump the version and re-base the clock so the next
+    /// window starts at 0. `merge_total_s` is the full window length (merge
+    /// time plus any aggregation overhead, e.g. SplitFed's FedAvg upload).
+    pub fn commit(&mut self, merge_total_s: f64) {
+        self.version += 1;
+        for r in &mut self.running {
+            r.start -= merge_total_s;
+        }
+        self.now = 0.0;
+        self.buffer_peak = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn merge(tl: &mut Timeline) -> Merge {
+        let m = tl.advance_to_merge().expect("units in flight");
+        tl.commit(m.t_rel);
+        m
+    }
+
+    #[test]
+    fn single_unit_merges_at_its_duration() {
+        let mut tl = Timeline::new(1, 0);
+        tl.start_unit(UnitKind::Solo(3), 2.5);
+        let m = merge(&mut tl);
+        assert_eq!(m.t_rel, 2.5);
+        assert_eq!(m.contributors.len(), 1);
+        assert_eq!(m.contributors[0].unit, UnitKind::Solo(3));
+        assert_eq!(m.staleness_max, 0);
+        assert_eq!(tl.version(), 1);
+        assert_eq!(tl.in_flight(), 0);
+    }
+
+    #[test]
+    fn buffer_quorum_fires_before_the_straggler() {
+        let mut tl = Timeline::new(2, 1 << 30);
+        tl.start_unit(UnitKind::Solo(0), 1.0);
+        tl.start_unit(UnitKind::Solo(1), 2.0);
+        tl.start_unit(UnitKind::Solo(2), 10.0);
+        let m = merge(&mut tl);
+        assert_eq!(m.t_rel, 2.0);
+        assert_eq!(m.contributors.len(), 2);
+        assert_eq!(m.buffer_peak, 2);
+        // Both merged updates skip the (10 - 2)s barrier wait each.
+        assert!((m.wait_eliminated_s - 16.0).abs() < 1e-12);
+        assert_eq!(tl.in_flight(), 1);
+        // The straggler arrives one version behind, re-based to 8s.
+        let m2 = merge(&mut tl);
+        assert_eq!(m2.t_rel, 8.0);
+        assert_eq!(m2.contributors[0].staleness, 1);
+    }
+
+    #[test]
+    fn staleness_cap_zero_recovers_the_barrier() {
+        let mut tl = Timeline::new(1, 0);
+        tl.start_unit(UnitKind::Solo(0), 1.0);
+        tl.start_unit(UnitKind::Solo(1), 7.0);
+        // cap = 0: a merge would strand the running unit one version behind,
+        // so it defers until everything arrives — the synchronous barrier.
+        let m = merge(&mut tl);
+        assert_eq!(m.t_rel, 7.0);
+        assert_eq!(m.contributors.len(), 2);
+        assert_eq!(m.staleness_max, 0);
+        assert_eq!(m.wait_eliminated_s, 0.0);
+    }
+
+    #[test]
+    fn staleness_never_exceeds_the_cap() {
+        let mut tl = Timeline::new(1, 2);
+        tl.start_unit(UnitKind::Solo(9), 100.0); // the chronic straggler
+        let mut straggler_staleness = None;
+        for round in 0..6 {
+            tl.start_unit(UnitKind::Solo(round), 1.0);
+            let m = tl.advance_to_merge().unwrap();
+            assert!(m.staleness_max <= 2, "merge {round} exceeded the cap");
+            if let Some(d) = m.contributors.iter().find(|d| d.unit == UnitKind::Solo(9)) {
+                straggler_staleness = Some(d.staleness);
+            }
+            tl.commit(m.t_rel);
+        }
+        // Two fast merges run, the third defers until the straggler lands —
+        // exactly at the cap, never beyond it.
+        assert_eq!(straggler_staleness, Some(2));
+    }
+
+    #[test]
+    fn contributors_come_back_in_creation_order() {
+        let mut tl = Timeline::new(3, 1 << 30);
+        let a = tl.start_unit(UnitKind::Solo(0), 3.0);
+        let b = tl.start_unit(UnitKind::Solo(1), 1.0);
+        let c = tl.start_unit(UnitKind::Solo(2), 2.0);
+        let m = merge(&mut tl);
+        let ids: Vec<u64> = m.contributors.iter().map(|d| d.id).collect();
+        assert_eq!(ids, vec![a, b, c]);
+    }
+
+    #[test]
+    fn reprice_keeps_the_elapsed_fraction() {
+        let mut tl = Timeline::new(1, 1 << 30);
+        let fast = tl.start_unit(UnitKind::Solo(0), 4.0);
+        let slow = tl.start_unit(UnitKind::Solo(1), 8.0);
+        let m = tl.advance_to_merge().unwrap(); // fast arrives at 4
+        assert_eq!(m.t_rel, 4.0);
+        tl.commit(m.t_rel);
+        // slow is 50% done; re-pricing to 6s leaves 3s remaining.
+        tl.reprice(slow, 6.0);
+        let m2 = merge(&mut tl);
+        assert_eq!(m2.t_rel, 3.0);
+        let _ = fast;
+    }
+
+    #[test]
+    fn cancel_drops_running_but_not_buffered() {
+        let mut tl = Timeline::new(2, 1 << 30);
+        tl.start_unit(UnitKind::Pair(0, 1), 5.0);
+        let solo = tl.start_unit(UnitKind::Solo(2), 1.0);
+        assert!(tl.is_member_busy(1));
+        let dropped = tl.cancel_member(1);
+        assert_eq!(dropped.len(), 1);
+        assert!(!tl.is_member_busy(0));
+        let m = merge(&mut tl);
+        assert_eq!(m.contributors.len(), 1);
+        assert_eq!(m.contributors[0].id, solo);
+    }
+
+    #[test]
+    fn merged_members_free_up_while_stragglers_stay_busy() {
+        let mut tl = Timeline::new(2, 1 << 30);
+        tl.start_unit(UnitKind::Solo(0), 1.0);
+        tl.start_unit(UnitKind::Solo(1), 2.0);
+        tl.start_unit(UnitKind::Solo(2), 9.0);
+        let m = tl.advance_to_merge().unwrap();
+        assert!(m.contributors.iter().any(|d| d.unit == UnitKind::Solo(0)));
+        tl.commit(m.t_rel);
+        assert!(!tl.is_member_busy(0));
+        assert!(tl.is_member_busy(2));
+    }
+
+    #[test]
+    fn empty_timeline_yields_no_merge() {
+        let mut tl = Timeline::new(4, 3);
+        assert!(tl.advance_to_merge().is_none());
+    }
+
+    #[test]
+    fn commit_rebases_leftover_arrivals() {
+        let mut tl = Timeline::new(1, 1 << 30);
+        tl.start_unit(UnitKind::Solo(0), 2.0);
+        tl.start_unit(UnitKind::Solo(1), 7.0);
+        let m = tl.advance_to_merge().unwrap();
+        // Commit with 1s of aggregation overhead on top of the merge time.
+        tl.commit(m.t_rel + 1.0);
+        let m2 = merge(&mut tl);
+        assert_eq!(m2.t_rel, 4.0); // 7 - (2 + 1)
+    }
+}

@@ -214,8 +214,9 @@ impl fmt::Display for RoundBackend {
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct EngineConfig {
     pub backend: RoundBackend,
-    /// Worker threads for pair evaluation (0 = one per available core).
-    /// Results are bit-identical for every thread count by construction.
+    /// Worker threads for pair evaluation. `0` means auto-detect: one worker
+    /// per available core (`std::thread::available_parallelism`). Results are
+    /// bit-identical for every thread count by construction.
     pub threads: usize,
     /// Collect per-flow finish times in `RoundTime` (2·pairs values per
     /// round — diagnostics the paper-scale presets keep and metro-scale
@@ -277,6 +278,114 @@ impl Default for TelemetryConfig {
             sample_every: 1,
             trace_out: None,
             top_k_pairs: 8,
+        }
+    }
+}
+
+/// How the server aggregates client updates (DESIGN.md §9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggregationMode {
+    /// Lockstep rounds: the round ends when the slowest participant finishes
+    /// — the paper's model, and the bit-identical default.
+    Sync,
+    /// Event-driven buffered aggregation: units stream updates as they
+    /// finish; the server merges once [`AsyncConfig::buffer_size`] updates
+    /// are buffered, subject to the bounded-staleness gate.
+    Async,
+}
+
+impl AggregationMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "sync" | "synchronous" | "round" => Some(AggregationMode::Sync),
+            "async" | "asynchronous" | "buffered" => Some(AggregationMode::Async),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggregationMode::Sync => "sync",
+            AggregationMode::Async => "async",
+        }
+    }
+}
+
+impl fmt::Display for AggregationMode {
+    fmt_display_via_name!();
+}
+
+/// Staleness-discounting function applied to buffered updates at merge time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StalenessWeighting {
+    /// Every update counts with its data weight regardless of staleness.
+    Flat,
+    /// FedBuff-style polynomial discount: `s(τ) = 1 / (1 + τ)^0.5`. At
+    /// `τ = 0` this is exactly 1, so the sync-recovery limit is unaffected.
+    Polynomial,
+}
+
+impl StalenessWeighting {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "flat" | "uniform" => Some(StalenessWeighting::Flat),
+            "poly" | "polynomial" => Some(StalenessWeighting::Polynomial),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StalenessWeighting::Flat => "flat",
+            StalenessWeighting::Polynomial => "polynomial",
+        }
+    }
+
+    /// The discount factor `s(τ)` for an update that is `tau` merges stale.
+    pub fn factor(&self, tau: usize) -> f64 {
+        match self {
+            StalenessWeighting::Flat => 1.0,
+            StalenessWeighting::Polynomial => 1.0 / (1.0 + tau as f64).sqrt(),
+        }
+    }
+}
+
+impl fmt::Display for StalenessWeighting {
+    fmt_display_via_name!();
+}
+
+/// Buffered-aggregation knobs (only read when
+/// [`ExperimentConfig::aggregation`] is [`AggregationMode::Async`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AsyncConfig {
+    /// Updates buffered before the server merges (≥ 1). A merge also fires
+    /// early whenever no unit is left running, so the engine never deadlocks
+    /// on a part-full buffer.
+    pub buffer_size: usize,
+    /// Bounded staleness: the merge gate defers any merge that would push a
+    /// still-running unit's staleness beyond this many versions. `0` degrades
+    /// to fully synchronous behaviour; any value ≥ the round budget is
+    /// effectively unbounded.
+    pub staleness_cap: usize,
+    /// Staleness-discounting function for merge weights.
+    pub weighting: StalenessWeighting,
+}
+
+impl AsyncConfig {
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.buffer_size == 0 {
+            bail!("async buffer_size must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+impl Default for AsyncConfig {
+    fn default() -> Self {
+        AsyncConfig {
+            buffer_size: 8,
+            staleness_cap: 16,
+            weighting: StalenessWeighting::Polynomial,
         }
     }
 }
@@ -702,6 +811,16 @@ pub struct ExperimentConfig {
     /// sampling, trace output (DESIGN.md §8). Off by default; never affects
     /// simulation results.
     pub telemetry: TelemetryConfig,
+    /// Server aggregation discipline: lockstep rounds (default) or the
+    /// event-driven bounded-staleness buffer (DESIGN.md §9).
+    pub aggregation: AggregationMode,
+    /// Buffered-aggregation knobs; only read when `aggregation` is `Async`.
+    pub async_agg: AsyncConfig,
+    /// Stream per-round records incrementally to
+    /// `<dir>/<name>_<algo>_<dist>.stream.{csv,jsonl}` as they are produced,
+    /// instead of only buffering them for the end-of-run sink. `None`
+    /// disables streaming.
+    pub stream_out: Option<String>,
     /// Model cost profile for the engine-free latency paths (`fedpairing
     /// churn`, `simulate_scenario`, planner) and cut-knob validation.
     pub model: ModelPreset,
@@ -761,6 +880,9 @@ impl Default for ExperimentConfig {
             engine: EngineConfig::default(),
             split: SplitConfig::default(),
             telemetry: TelemetryConfig::default(),
+            aggregation: AggregationMode::Sync,
+            async_agg: AsyncConfig::default(),
+            stream_out: None,
             model: ModelPreset::Resnet18,
             n_clients: 20,
             area_radius_m: 50.0,
@@ -827,6 +949,14 @@ impl ExperimentConfig {
         self.engine.validate()?;
         self.split.validate(self.model.w())?;
         self.telemetry.validate()?;
+        self.async_agg.validate()?;
+        // The DES oracle is round-synchronous by construction: it prices one
+        // lockstep round at a time and has no notion of units carrying over a
+        // merge boundary. Reject the combination instead of silently running
+        // the analytic path.
+        if self.aggregation == AggregationMode::Async && self.engine.backend == RoundBackend::Des {
+            bail!("async aggregation requires the analytic engine (engine.backend = des is round-synchronous)");
+        }
         // Cut knobs are bounded here, against the configured model profile,
         // instead of being silently clamped deep inside the drivers.
         let w = self.model.w();
@@ -1001,6 +1131,19 @@ impl ExperimentConfig {
         );
         tm.insert("top_k_pairs", Json::num(self.telemetry.top_k_pairs as f64));
         o.insert("telemetry", Json::Obj(tm));
+        o.insert("aggregation", Json::str(self.aggregation.name()));
+        let mut ag = JsonObj::new();
+        ag.insert("buffer_size", Json::num(self.async_agg.buffer_size as f64));
+        ag.insert("staleness_cap", Json::num(self.async_agg.staleness_cap as f64));
+        ag.insert("weighting", Json::str(self.async_agg.weighting.name()));
+        o.insert("async", Json::Obj(ag));
+        o.insert(
+            "stream_out",
+            match &self.stream_out {
+                Some(p) => Json::str(p),
+                None => Json::Null,
+            },
+        );
         o.insert("model", Json::str(self.model.name()));
         o.insert("n_clients", Json::num(self.n_clients as f64));
         o.insert("area_radius_m", Json::num(self.area_radius_m));
@@ -1176,6 +1319,39 @@ impl ExperimentConfig {
                 })?;
             }
         }
+        if let Some(v) = obj.get("aggregation") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| ConfigError("aggregation must be a string".into()))?;
+            c.aggregation = AggregationMode::parse(s)
+                .ok_or_else(|| ConfigError(format!("unknown aggregation mode {s:?}")))?;
+        }
+        if let Some(ag) = obj.get("async").and_then(|v| v.as_obj()) {
+            if let Some(v) = ag.get("buffer_size") {
+                c.async_agg.buffer_size = v.as_usize().ok_or_else(|| {
+                    ConfigError("async buffer_size must be a non-negative integer".into())
+                })?;
+            }
+            if let Some(v) = ag.get("staleness_cap") {
+                c.async_agg.staleness_cap = v.as_usize().ok_or_else(|| {
+                    ConfigError("async staleness_cap must be a non-negative integer".into())
+                })?;
+            }
+            if let Some(s) = ag.get("weighting").and_then(|v| v.as_str()) {
+                c.async_agg.weighting = StalenessWeighting::parse(s)
+                    .ok_or_else(|| ConfigError(format!("unknown staleness weighting {s:?}")))?;
+            }
+        }
+        match obj.get("stream_out") {
+            None | Some(Json::Null) => {}
+            Some(v) => {
+                c.stream_out = Some(
+                    v.as_str()
+                        .ok_or_else(|| ConfigError("stream_out must be a string or null".into()))?
+                        .to_string(),
+                );
+            }
+        }
         if let Some(v) = obj.get("model") {
             let s = v
                 .as_str()
@@ -1344,6 +1520,59 @@ mod tests {
         assert!(ExperimentConfig::from_json(&bad).is_err());
         let null = Json::parse(r#"{"telemetry": {"trace_out": null}}"#).unwrap();
         assert_eq!(ExperimentConfig::from_json(&null).unwrap().telemetry.trace_out, None);
+    }
+
+    #[test]
+    fn async_config_roundtrips_and_validates() {
+        let mut c = ExperimentConfig::default();
+        c.aggregation = AggregationMode::Async;
+        c.async_agg.buffer_size = 3;
+        c.async_agg.staleness_cap = 7;
+        c.async_agg.weighting = StalenessWeighting::Flat;
+        c.stream_out = Some("runs/stream".into());
+        let j = c.to_json();
+        let c2 = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c2.aggregation, AggregationMode::Async);
+        assert_eq!(c2.async_agg, c.async_agg);
+        assert_eq!(c2.stream_out, c.stream_out);
+        assert_eq!(j.to_string(), c2.to_json().to_string());
+        // Defaults: synchronous aggregation, no streaming sink.
+        let d = ExperimentConfig::default();
+        assert_eq!(d.aggregation, AggregationMode::Sync);
+        assert_eq!(d.stream_out, None);
+        assert!(d.async_agg.validate().is_ok());
+    }
+
+    #[test]
+    fn async_knobs_are_validated_at_parse_time() {
+        // buffer_size = 0 is rejected even in sync mode (the knob is invalid,
+        // not merely unused).
+        let bad = Json::parse(r#"{"async": {"buffer_size": 0}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&bad).is_err());
+        // async aggregation on the DES oracle is a nonsensical combo.
+        let des =
+            Json::parse(r#"{"aggregation": "async", "engine": {"backend": "des"}}"#).unwrap();
+        let err = ExperimentConfig::from_json(&des).unwrap_err();
+        assert!(err.0.contains("async"), "unexpected error: {}", err.0);
+        // ...while async on the analytic engine is fine.
+        let ok = Json::parse(r#"{"aggregation": "async"}"#).unwrap();
+        assert_eq!(
+            ExperimentConfig::from_json(&ok).unwrap().aggregation,
+            AggregationMode::Async
+        );
+        // Unknown weighting names are rejected.
+        let w = Json::parse(r#"{"async": {"weighting": "cubic"}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&w).is_err());
+    }
+
+    #[test]
+    fn staleness_weighting_factor_is_one_at_zero_tau() {
+        // The sync-recovery invariant leans on s(0) == 1 exactly for both
+        // weightings: recovery merges always see τ = 0.
+        assert_eq!(StalenessWeighting::Flat.factor(0), 1.0);
+        assert_eq!(StalenessWeighting::Polynomial.factor(0), 1.0);
+        assert!(StalenessWeighting::Polynomial.factor(3) < 1.0);
+        assert_eq!(StalenessWeighting::Flat.factor(3), 1.0);
     }
 
     #[test]

@@ -13,8 +13,10 @@
 //! unpaired (solo) client trains the full model locally. Under the default
 //! `stable` scenario all of this reduces exactly to the paper's static loops.
 
-use crate::config::{Algorithm, ExperimentConfig, SplitPolicy};
-use crate::coordinator::metrics::{RoundRecord, RunResult};
+use crate::asyncsim::driver::{note_merge, plan_fedpairing, plan_solo};
+use crate::asyncsim::{AggregationEvent, Timeline, UnitKind};
+use crate::config::{AggregationMode, Algorithm, ExperimentConfig, SplitPolicy};
+use crate::coordinator::metrics::{streamer_for, RecordStreamer, RoundRecord, RunResult};
 use crate::coordinator::split::train_pair;
 use crate::data::loader::{eval_batches, Batch, Loader};
 use crate::data::partition::partition;
@@ -26,12 +28,13 @@ use crate::runtime::Engine;
 use crate::sim::channel::Channel;
 use crate::sim::compute::{aggregation_weights, split_lengths};
 use crate::sim::engine::RoundEngine;
-use crate::sim::latency::{Fleet, FleetView, RoundTime, Schedule};
+use crate::sim::latency::{upload_time, Fleet, FleetView, RoundTime, Schedule};
 use crate::split::SplitCostModel;
 use crate::telemetry::Telemetry;
 use crate::util::index::InverseIndex;
 use crate::{log_debug, log_info};
 use anyhow::{Context, Result};
+use std::collections::HashMap;
 
 /// A fully materialized experiment: fleet, data, engine, channel.
 pub struct Experiment {
@@ -153,12 +156,29 @@ impl Experiment {
         let t0 = std::time::Instant::now();
         let mut dynamics = self.dynamics();
         let mut telemetry = Telemetry::new(&self.cfg.telemetry);
-        let rounds = match self.cfg.algorithm {
-            Algorithm::FedPairing => self.run_fedpairing(&mut dynamics, &mut telemetry)?,
-            Algorithm::VanillaFL => self.run_fl(&mut dynamics, &mut telemetry)?,
-            Algorithm::VanillaSL => self.run_sl(&mut dynamics, &mut telemetry)?,
-            Algorithm::SplitFed => self.run_splitfed(&mut dynamics, &mut telemetry)?,
+        let mut streamer = streamer_for(&self.cfg).context("opening stream sink")?;
+        let rounds = if self.cfg.aggregation == AggregationMode::Async {
+            self.run_async(&mut dynamics, &mut telemetry, &mut streamer)?
+        } else {
+            match self.cfg.algorithm {
+                Algorithm::FedPairing => {
+                    self.run_fedpairing(&mut dynamics, &mut telemetry, &mut streamer)?
+                }
+                Algorithm::VanillaFL => {
+                    self.run_fl(&mut dynamics, &mut telemetry, &mut streamer)?
+                }
+                Algorithm::VanillaSL => {
+                    self.run_sl(&mut dynamics, &mut telemetry, &mut streamer)?
+                }
+                Algorithm::SplitFed => {
+                    self.run_splitfed(&mut dynamics, &mut telemetry, &mut streamer)?
+                }
+            }
         };
+        if let Some(s) = streamer {
+            let (c, j) = s.finish().context("closing stream sink")?;
+            log_info!("stream: wrote {c} and {j}");
+        }
         for path in telemetry.finish().context("writing telemetry exports")? {
             log_info!("telemetry: wrote {path}");
         }
@@ -178,6 +198,7 @@ impl Experiment {
         &mut self,
         dynamics: &mut FleetDynamics,
         telemetry: &mut Telemetry,
+        streamer: &mut Option<RecordStreamer>,
     ) -> Result<Vec<RoundRecord>> {
         let w = self.engine.meta().layers;
         let profile = self.engine.meta().profile();
@@ -352,14 +373,16 @@ impl Experiment {
             anyhow::ensure!(nn::all_finite(&global), "global model diverged (NaN/Inf)");
             telemetry.mark("train");
             sim_total += round_time;
-            records.push(self.record(
+            let rec = self.record(
                 round,
                 &global,
                 loss_sum / steps.max(1) as f64,
                 &rt,
                 sim_total,
                 ev.n_alive,
-            )?);
+            )?;
+            stream_push(streamer, &rec)?;
+            records.push(rec);
             // Lane ids leave the engine in round-compact space; export them
             // in universe ids to match the fleet trace. Empty unless
             // telemetry is on, so the remap is free when disabled.
@@ -399,6 +422,7 @@ impl Experiment {
         &mut self,
         dynamics: &mut FleetDynamics,
         telemetry: &mut Telemetry,
+        streamer: &mut Option<RecordStreamer>,
     ) -> Result<Vec<RoundRecord>> {
         let profile = self.engine.meta().profile();
         let sched = self.schedule();
@@ -431,14 +455,16 @@ impl Experiment {
             anyhow::ensure!(nn::all_finite(&global), "global model diverged (NaN/Inf)");
             telemetry.mark("train");
             sim_total += round_time;
-            records.push(self.record(
+            let rec = self.record(
                 round,
                 &global,
                 loss_sum / steps.max(1) as f64,
                 &rt,
                 sim_total,
                 ev.n_alive,
-            )?);
+            )?;
+            stream_push(streamer, &rec)?;
+            records.push(rec);
             telemetry.end_round(&rt, ev.n_alive, &[], sim_total - round_time);
         }
         Ok(records)
@@ -452,6 +478,7 @@ impl Experiment {
         &mut self,
         dynamics: &mut FleetDynamics,
         telemetry: &mut Telemetry,
+        streamer: &mut Option<RecordStreamer>,
     ) -> Result<Vec<RoundRecord>> {
         let cut = checked_cut("sl_cut_layer", self.cfg.sl_cut_layer, self.engine.meta().layers)?;
         let profile = self.engine.meta().profile();
@@ -493,14 +520,16 @@ impl Experiment {
             anyhow::ensure!(nn::all_finite(&full), "SL model diverged (NaN/Inf)");
             telemetry.mark("train");
             sim_total += round_time;
-            records.push(self.record(
+            let rec = self.record(
                 round,
                 &full,
                 loss_sum / steps.max(1) as f64,
                 &rt,
                 sim_total,
                 ev.n_alive,
-            )?);
+            )?;
+            stream_push(streamer, &rec)?;
+            records.push(rec);
             telemetry.end_round(&rt, ev.n_alive, &[], sim_total - round_time);
         }
         Ok(records)
@@ -514,6 +543,7 @@ impl Experiment {
         &mut self,
         dynamics: &mut FleetDynamics,
         telemetry: &mut Telemetry,
+        streamer: &mut Option<RecordStreamer>,
     ) -> Result<Vec<RoundRecord>> {
         let cut = checked_cut(
             "splitfed_cut_layer",
@@ -569,14 +599,16 @@ impl Experiment {
             anyhow::ensure!(nn::all_finite(&global), "SplitFed diverged (NaN/Inf)");
             telemetry.mark("train");
             sim_total += round_time;
-            records.push(self.record(
+            let rec = self.record(
                 round,
                 &global,
                 loss_sum / steps.max(1) as f64,
                 &rt,
                 sim_total,
                 ev.n_alive,
-            )?);
+            )?;
+            stream_push(streamer, &rec)?;
+            records.push(rec);
             telemetry.end_round(&rt, ev.n_alive, &[], sim_total - round_time);
         }
         Ok(records)
@@ -653,10 +685,484 @@ impl Experiment {
             test_loss,
             sim_round_s: rt.total_s,
             sim_total_s: sim_total,
+            // Synchronous rounds: wall clock == cumulative round time, and
+            // staleness is undefined (every update is merged fresh).
+            t_wall_s: sim_total,
+            staleness_mean: f64::NAN,
             mean_cut: rt.mean_cut,
             stages: rt.stages,
         })
     }
+
+    // ------------------------------------------------------------------
+    // Buffered asynchronous aggregation (DESIGN.md §9)
+    // ------------------------------------------------------------------
+
+    /// Event-driven counterpart of the four synchronous loops: units train
+    /// the moment they go idle, deliver into the bounded-staleness buffer,
+    /// and the server merges with staleness-discounted FedAvg weights
+    /// (`cfg.async_agg.weighting`). One merge window = one record; with
+    /// `staleness_cap` huge and `buffer_size ≥ fleet` every window
+    /// degenerates to the synchronous round bit for bit (the latency-only
+    /// counterpart is property-tested in `tests/async_engine.rs`).
+    fn run_async(
+        &mut self,
+        dynamics: &mut FleetDynamics,
+        telemetry: &mut Telemetry,
+        streamer: &mut Option<RecordStreamer>,
+    ) -> Result<Vec<RoundRecord>> {
+        /// A trained update waiting in flight or in the buffer. FedPairing
+        /// pair: `[model_i, model_j]`; FL solo: `[local]`; SplitFed:
+        /// `[front, back]` under one weight; SL: no models (the sequential
+        /// relay mutates the shared halves at session start).
+        struct Pending {
+            models: Vec<Params>,
+            weights: Vec<f64>,
+            loss: f64,
+            steps: usize,
+        }
+        let algo = self.cfg.algorithm;
+        let w = self.engine.meta().layers;
+        let profile = self.engine.meta().profile();
+        let sched = self.schedule();
+        if algo == Algorithm::FedPairing {
+            anyhow::ensure!(
+                2 * self.cfg.split.min_layers <= w,
+                "split min_layers = {} leaves no feasible cut for the loaded artifacts (W = {w})",
+                self.cfg.split.min_layers
+            );
+        }
+        let planner = (algo == Algorithm::FedPairing && self.cfg.split.policy != SplitPolicy::Paper)
+            .then(|| SplitCostModel::new(profile.clone(), sched, self.cfg.compute, self.cfg.split));
+        let cost = planner.as_ref().filter(|_| self.cfg.split.co_design);
+        let mut pairing_rng = crate::util::rng::Rng::new(self.cfg.seed ^ 0x9A1F);
+        let mut matching: Option<Matching> = None;
+        let cut = match algo {
+            Algorithm::VanillaSL => checked_cut("sl_cut_layer", self.cfg.sl_cut_layer, w)?,
+            Algorithm::SplitFed => {
+                checked_cut("splitfed_cut_layer", self.cfg.splitfed_cut_layer, w)?
+            }
+            _ => 0,
+        };
+        let server_hz = self.cfg.compute.server_freq_ghz * 1e9;
+        let mut global = self.engine.init_params(self.cfg.seed as u32)?;
+        // SL's relay halves persist across windows (there is no averaging);
+        // empty for every other algorithm.
+        let (mut sl_front, mut sl_back) = if algo == Algorithm::VanillaSL {
+            split_params(&global, cut)
+        } else {
+            (Params::new(), Params::new())
+        };
+        self.round_engine.set_record_units(true);
+        let mut tl = Timeline::new(self.cfg.async_agg.buffer_size, self.cfg.async_agg.staleness_cap);
+        let mut pending: HashMap<u64, Pending> = HashMap::new();
+        let mut inv = InverseIndex::new();
+        let mut records = Vec::with_capacity(self.cfg.rounds);
+        let mut sim_total = 0.0f64;
+        let mut sl_tail = 0.0f64;
+        for seq in 1..=self.cfg.rounds {
+            telemetry.begin_event();
+            let ev = dynamics.step(seq);
+            let channel = dynamics.channel();
+            telemetry.mark("dynamics");
+            let mut cancelled = 0usize;
+            for &d in &ev.departed {
+                for id in tl.cancel_member(d) {
+                    pending.remove(&id);
+                    cancelled += 1;
+                }
+            }
+            let members = dynamics.present_members();
+            inv.rebuild(dynamics.universe().n(), members);
+            let rt = match algo {
+                Algorithm::FedPairing => {
+                    maintain_matching(
+                        &mut matching,
+                        dynamics,
+                        &ev,
+                        &channel,
+                        &self.cfg,
+                        cost,
+                        &mut pairing_rng,
+                    );
+                    let eff = matching
+                        .as_ref()
+                        .expect("matching initialized")
+                        .restricted_to(members);
+                    let plan = plan_fedpairing(&tl, &eff.pairs, &eff.solos, &inv);
+                    let view = FleetView::new(dynamics.universe(), members);
+                    let cpairs: Vec<(usize, usize)> = plan
+                        .start_pairs
+                        .iter()
+                        .chain(plan.reprice_pairs.iter().map(|(_, p)| p))
+                        .map(|&(a, b)| (inv.compact(a), inv.compact(b)))
+                        .collect();
+                    let csolos: Vec<usize> = plan
+                        .start_solos
+                        .iter()
+                        .chain(plan.reprice_solos.iter().map(|(_, s)| s))
+                        .map(|&s| inv.compact(s))
+                        .collect();
+                    telemetry.mark("pairing");
+                    let mut rt = self.round_engine.fedpairing_round(
+                        &view,
+                        &cpairs,
+                        &csolos,
+                        &profile,
+                        &sched,
+                        &channel,
+                        &self.cfg.compute,
+                        true,
+                    );
+                    rt.stages.remap_crit(members);
+                    // Unit times in call order: pairs (started, re-priced),
+                    // then solos (started, re-priced).
+                    let ut: Vec<f64> = self.round_engine.unit_times().to_vec();
+                    let np = plan.start_pairs.len();
+                    let nrp = plan.reprice_pairs.len();
+                    let ns = plan.start_solos.len();
+                    for (k, &(id, _)) in plan.reprice_pairs.iter().enumerate() {
+                        tl.reprice(id, ut[np + k]);
+                    }
+                    for (k, &(id, _)) in plan.reprice_solos.iter().enumerate() {
+                        tl.reprice(id, ut[np + nrp + ns + k]);
+                    }
+                    // Normalized data weights â over this *window's* started
+                    // participants — the async analogue of the sync round's
+                    // participant set (identical in the sync-recovery limit).
+                    let started: Vec<usize> = plan
+                        .start_pairs
+                        .iter()
+                        .flat_map(|&(a, b)| [a, b])
+                        .chain(plan.start_solos.iter().copied())
+                        .collect();
+                    if !started.is_empty() {
+                        let part_total: f64 = started.iter().map(|&c| self.weights[c]).sum();
+                        anyhow::ensure!(part_total > 0.0, "no data among participants");
+                        let n_part = started.len() as f64;
+                        let uni = dynamics.universe();
+                        for (k, &(i, j)) in plan.start_pairs.iter().enumerate() {
+                            let l_i = match &planner {
+                                Some(m) => {
+                                    m.decide_raw(
+                                        uni.freqs_hz[i],
+                                        uni.freqs_hz[j],
+                                        uni.n_samples[i],
+                                        uni.n_samples[j],
+                                        channel.rate(&uni.positions[i], &uni.positions[j]),
+                                    )
+                                    .cut
+                                }
+                                None => split_lengths(uni.freqs_hz[i], uni.freqs_hz[j], w).0,
+                            };
+                            let l_j = w - l_i;
+                            let (a_i, a_j) = (
+                                (self.weights[i] / part_total * n_part) as f32,
+                                (self.weights[j] / part_total * n_part) as f32,
+                            );
+                            let (li, lj) = {
+                                let (lo, hi) = (i.min(j), i.max(j));
+                                let (a, b) = self.loaders.split_at_mut(hi);
+                                if i < j {
+                                    (&mut a[lo], &mut b[0])
+                                } else {
+                                    (&mut b[0], &mut a[lo])
+                                }
+                            };
+                            let out = train_pair(
+                                &mut self.engine,
+                                &global,
+                                li,
+                                lj,
+                                l_i,
+                                l_j,
+                                a_i,
+                                a_j,
+                                self.cfg.lr,
+                                self.cfg.local_epochs,
+                                self.cfg.overlap_boost,
+                            )?;
+                            let id = tl.start_unit(UnitKind::Pair(i, j), ut[k]);
+                            pending.insert(
+                                id,
+                                Pending {
+                                    models: vec![out.model_i, out.model_j],
+                                    weights: vec![self.weights[i], self.weights[j]],
+                                    loss: out.mean_loss * out.n_steps as f64,
+                                    steps: out.n_steps,
+                                },
+                            );
+                        }
+                        for (k, &s) in plan.start_solos.iter().enumerate() {
+                            let (local, l, st) = self.local_training(&global, s)?;
+                            let id = tl.start_unit(UnitKind::Solo(s), ut[np + nrp + k]);
+                            pending.insert(
+                                id,
+                                Pending {
+                                    models: vec![local],
+                                    weights: vec![self.weights[s]],
+                                    loss: l,
+                                    steps: st,
+                                },
+                            );
+                        }
+                    }
+                    rt
+                }
+                Algorithm::VanillaFL => {
+                    let plan = plan_solo(&tl, members, &inv, true);
+                    let view = FleetView::new(dynamics.universe(), &plan.view_members);
+                    let mut rt = self.round_engine.fl_round(
+                        &view,
+                        &profile,
+                        &sched,
+                        &channel,
+                        &self.cfg.compute,
+                        true,
+                    );
+                    rt.stages.remap_crit(&plan.view_members);
+                    let ut: Vec<f64> = self.round_engine.unit_times().to_vec();
+                    for (k, &(id, _)) in plan.reprice.iter().enumerate() {
+                        tl.reprice(id, ut[plan.start.len() + k]);
+                    }
+                    for (k, &m) in plan.start.iter().enumerate() {
+                        let (local, l, st) = self.local_training(&global, m)?;
+                        let id = tl.start_unit(UnitKind::Solo(m), ut[k]);
+                        pending.insert(
+                            id,
+                            Pending {
+                                models: vec![local],
+                                weights: vec![self.weights[m]],
+                                loss: l,
+                                steps: st,
+                            },
+                        );
+                    }
+                    rt
+                }
+                Algorithm::VanillaSL => {
+                    // Sessions are a sequential relay: new sessions chain
+                    // after the current tail and mutate the shared halves at
+                    // start, in relay order (exactly the sync session order).
+                    let plan = plan_solo(&tl, members, &inv, false);
+                    let view = FleetView::new(dynamics.universe(), &plan.start);
+                    let mut rt = self.round_engine.sl_round(
+                        &view,
+                        &profile,
+                        &sched,
+                        &channel,
+                        &self.cfg.compute,
+                        cut,
+                        server_hz,
+                    );
+                    rt.stages.remap_crit(&plan.start);
+                    let ut: Vec<f64> = self.round_engine.unit_times().to_vec();
+                    for (k, &m) in plan.start.iter().enumerate() {
+                        let (l, st) = self.split_session(&mut sl_front, &mut sl_back, cut, m)?;
+                        let d = ut[k];
+                        let id = tl.start_unit_at(UnitKind::Solo(m), sl_tail, d);
+                        sl_tail += d;
+                        pending.insert(
+                            id,
+                            Pending {
+                                models: Vec::new(),
+                                weights: Vec::new(),
+                                loss: l,
+                                steps: st,
+                            },
+                        );
+                    }
+                    rt
+                }
+                Algorithm::SplitFed => {
+                    let plan = plan_solo(&tl, members, &inv, true);
+                    let view = FleetView::new(dynamics.universe(), &plan.view_members);
+                    let mut rt = self.round_engine.splitfed_round(
+                        &view,
+                        &profile,
+                        &sched,
+                        &channel,
+                        &self.cfg.compute,
+                        cut,
+                        server_hz,
+                        true,
+                    );
+                    rt.stages.remap_crit(&plan.view_members);
+                    let ut: Vec<f64> = self.round_engine.unit_times().to_vec();
+                    for (k, &(id, _)) in plan.reprice.iter().enumerate() {
+                        tl.reprice(id, ut[plan.start.len() + k]);
+                    }
+                    for (k, &m) in plan.start.iter().enumerate() {
+                        let (mut front, mut back) = split_params(&global, cut);
+                        let (l, st) = self.split_session(&mut front, &mut back, cut, m)?;
+                        let id = tl.start_unit(UnitKind::Solo(m), ut[k]);
+                        pending.insert(
+                            id,
+                            Pending {
+                                models: vec![front, back],
+                                weights: vec![self.weights[m]],
+                                loss: l,
+                                steps: st,
+                            },
+                        );
+                    }
+                    rt
+                }
+            };
+            telemetry.mark("engine");
+            let merge = tl.advance_to_merge().ok_or_else(|| {
+                anyhow::anyhow!("async scheduler stalled: nothing in flight or buffered")
+            })?;
+            // SplitFed's FedAvg sync charges the slowest *contributor* upload
+            // (clients currently out deliver without re-uploading).
+            let overhead = if algo == Algorithm::SplitFed {
+                let front_bytes = profile.params(0, cut) as f64 * 4.0;
+                merge
+                    .contributors
+                    .iter()
+                    .filter_map(|d| match d.unit {
+                        UnitKind::Solo(s) if inv.get(s).is_some() => {
+                            Some(upload_time(dynamics.universe(), &channel, s, front_bytes))
+                        }
+                        _ => None,
+                    })
+                    .fold(0.0, f64::max)
+            } else {
+                0.0
+            };
+            let total = merge.t_rel + overhead;
+            tl.commit(total);
+            if algo == Algorithm::VanillaSL {
+                sl_tail = (sl_tail - total).max(0.0);
+            }
+            sim_total += total;
+            // Merge: staleness-discounted weighted FedAvg over the buffered
+            // contributors, in delivery-id (creation) order — the sync
+            // participant order in the recovery limit.
+            let weighting = self.cfg.async_agg.weighting;
+            let mut loss_sum = 0.0;
+            let mut steps = 0usize;
+            match algo {
+                Algorithm::VanillaSL => {
+                    for d in &merge.contributors {
+                        if let Some(p) = pending.remove(&d.id) {
+                            loss_sum += p.loss;
+                            steps += p.steps;
+                        }
+                    }
+                    // The relay already mutated the shared halves; the merge
+                    // snapshots them.
+                    global = join_params(&sl_front, &sl_back);
+                }
+                Algorithm::SplitFed => {
+                    let n = merge.contributors.len();
+                    let mut fronts: Vec<Params> = Vec::with_capacity(n);
+                    let mut backs: Vec<Params> = Vec::with_capacity(n);
+                    let mut agg: Vec<f64> = Vec::with_capacity(n);
+                    for d in &merge.contributors {
+                        let p = pending
+                            .remove(&d.id)
+                            .ok_or_else(|| anyhow::anyhow!("merged unit lost its payload"))?;
+                        let mut m = p.models.into_iter();
+                        fronts.push(m.next().expect("splitfed front"));
+                        backs.push(m.next().expect("splitfed back"));
+                        agg.push(p.weights[0] * weighting.factor(d.staleness));
+                        loss_sum += p.loss;
+                        steps += p.steps;
+                    }
+                    let t: f64 = agg.iter().sum();
+                    anyhow::ensure!(t > 0.0, "no data among merge contributors");
+                    for x in &mut agg {
+                        *x /= t;
+                    }
+                    let front = nn::fedavg_weighted(&fronts, &agg);
+                    let back = nn::fedavg_weighted(&backs, &agg);
+                    global = join_params(&front, &back);
+                }
+                Algorithm::FedPairing | Algorithm::VanillaFL => {
+                    let mut locals: Vec<Params> = Vec::new();
+                    let mut agg: Vec<f64> = Vec::new();
+                    for d in &merge.contributors {
+                        let p = pending
+                            .remove(&d.id)
+                            .ok_or_else(|| anyhow::anyhow!("merged unit lost its payload"))?;
+                        let s = weighting.factor(d.staleness);
+                        for (model, &w_raw) in p.models.into_iter().zip(&p.weights) {
+                            locals.push(model);
+                            agg.push(w_raw * s);
+                        }
+                        loss_sum += p.loss;
+                        steps += p.steps;
+                    }
+                    let t: f64 = agg.iter().sum();
+                    anyhow::ensure!(t > 0.0, "no data among merge contributors");
+                    for x in &mut agg {
+                        *x /= t;
+                    }
+                    global = nn::fedavg_weighted(&locals, &agg);
+                }
+            }
+            anyhow::ensure!(nn::all_finite(&global), "global model diverged (NaN/Inf)");
+            telemetry.mark("train");
+            note_merge(&merge, cancelled);
+            let event = AggregationEvent {
+                seq,
+                t_wall_s: sim_total,
+                n_updates: merge.contributors.len(),
+                n_running: tl.in_flight(),
+                staleness_mean: merge.staleness_mean,
+                staleness_max: merge.staleness_max,
+                buffer_peak: merge.buffer_peak,
+                wait_eliminated_s: merge.wait_eliminated_s,
+            };
+            let (test_loss, test_acc) = if self.should_eval(seq) {
+                self.evaluate(&global)?
+            } else {
+                (f64::NAN, f64::NAN)
+            };
+            let train_loss = loss_sum / steps.max(1) as f64;
+            log_debug!(
+                "merge {seq}: alive={} updates={} stale={:.2} train_loss={train_loss:.4} \
+                 acc={test_acc:.4} sim={total:.1}s",
+                ev.n_alive,
+                event.n_updates,
+                event.staleness_mean
+            );
+            let rec = RoundRecord {
+                round: seq,
+                n_alive: ev.n_alive,
+                train_loss,
+                test_acc,
+                test_loss,
+                sim_round_s: total,
+                sim_total_s: sim_total,
+                t_wall_s: sim_total,
+                staleness_mean: merge.staleness_mean,
+                mean_cut: rt.mean_cut,
+                stages: rt.stages,
+            };
+            stream_push(streamer, &rec)?;
+            records.push(rec);
+            let lanes: Vec<(usize, usize, f64)> = self
+                .round_engine
+                .pair_lanes()
+                .iter()
+                .map(|&(a, b, t)| (members[a], members[b], t))
+                .collect();
+            telemetry.end_round(&rt, ev.n_alive, &lanes, sim_total - total);
+            telemetry.end_merge(&event);
+        }
+        Ok(records)
+    }
+}
+
+/// Push one record to the configured stream sink (no-op when streaming is
+/// off).
+fn stream_push(streamer: &mut Option<RecordStreamer>, rec: &RoundRecord) -> Result<()> {
+    if let Some(s) = streamer.as_mut() {
+        s.push(rec).context("streaming round record")?;
+    }
+    Ok(())
 }
 
 /// Split a flat model into `(front, back)` at layer `cut`.

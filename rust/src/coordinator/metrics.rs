@@ -33,6 +33,83 @@ pub struct RoundRecord {
     /// straggler attribution (see `telemetry::breakdown`). Client ids are in
     /// the universe space of the driver that produced the record.
     pub stages: StageBreakdown,
+    /// Wall-clock view of the run at this record: cumulative simulated
+    /// seconds at commit. Synchronous rounds mirror `sim_total_s`; under
+    /// buffered aggregation this is the merge's commit time.
+    pub t_wall_s: f64,
+    /// Mean staleness (merges behind) over the updates merged here. NaN on
+    /// synchronous rounds, 0.0 on async runs that degenerate to sync.
+    pub staleness_mean: f64,
+}
+
+impl RoundRecord {
+    /// The shared CSV header (no trailing newline) — one source of truth for
+    /// [`RunResult::to_csv`] and the incremental [`RecordStreamer`].
+    pub fn csv_header() -> String {
+        let mut s = String::from(
+            "round,n_alive,train_loss,test_loss,test_acc,sim_round_s,sim_total_s,mean_cut,crit_a,crit_b,crit_slack_s",
+        );
+        for name in STAGE_NAMES {
+            s.push_str(&format!(",stage_{name}_s"));
+        }
+        s.push_str(",t_wall_s,staleness_mean");
+        s
+    }
+
+    /// One CSV row (no trailing newline). Simulated times use Rust's default
+    /// float formatting — the shortest representation that parses back to
+    /// the exact value — so post-processing can reproduce the run's timeline
+    /// bit for bit; `mean_cut`/`staleness_mean` NaNs (vanilla FL / sync
+    /// rounds) render as empty fields, not bare "NaN" tokens.
+    pub fn csv_row(&self) -> String {
+        let mean_cut = if self.mean_cut.is_nan() {
+            String::new()
+        } else {
+            format!("{:.3}", self.mean_cut)
+        };
+        let staleness = if self.staleness_mean.is_nan() {
+            String::new()
+        } else {
+            format!("{:.3}", self.staleness_mean)
+        };
+        let mut s = format!(
+            "{},{},{:.6},{:.6},{:.6},{},{},{},{},{},{}",
+            self.round,
+            self.n_alive,
+            self.train_loss,
+            self.test_loss,
+            self.test_acc,
+            self.sim_round_s,
+            self.sim_total_s,
+            mean_cut,
+            self.stages.crit_a,
+            self.stages.crit_b,
+            self.stages.crit_slack_s
+        );
+        for v in self.stages.stage_s {
+            s.push_str(&format!(",{v}"));
+        }
+        s.push_str(&format!(",{},{staleness}", self.t_wall_s));
+        s
+    }
+
+    /// JSON object for this record (shared by [`RunResult::to_json`] and the
+    /// JSONL stream; NaNs serialize as `null`).
+    pub fn to_json_obj(&self) -> Json {
+        let mut ro = JsonObj::new();
+        ro.insert("round", Json::num(self.round as f64));
+        ro.insert("n_alive", Json::num(self.n_alive as f64));
+        ro.insert("train_loss", Json::num(self.train_loss));
+        ro.insert("test_loss", Json::num(self.test_loss));
+        ro.insert("test_acc", Json::num(self.test_acc));
+        ro.insert("sim_round_s", Json::num(self.sim_round_s));
+        ro.insert("sim_total_s", Json::num(self.sim_total_s));
+        ro.insert("t_wall_s", Json::num(self.t_wall_s));
+        ro.insert("staleness_mean", Json::num(self.staleness_mean));
+        ro.insert("mean_cut", Json::num(self.mean_cut));
+        ro.insert("stages", self.stages.to_json());
+        Json::Obj(ro)
+    }
 }
 
 /// A full experiment run.
@@ -97,36 +174,10 @@ impl RunResult {
     /// run's timeline bit for bit; an unplanned `mean_cut` (vanilla FL's
     /// NaN) renders as an empty field.
     pub fn to_csv(&self) -> String {
-        let mut s = String::from(
-            "round,n_alive,train_loss,test_loss,test_acc,sim_round_s,sim_total_s,mean_cut,crit_a,crit_b,crit_slack_s",
-        );
-        for name in STAGE_NAMES {
-            s.push_str(&format!(",stage_{name}_s"));
-        }
+        let mut s = RoundRecord::csv_header();
         s.push('\n');
         for r in &self.rounds {
-            let mean_cut = if r.mean_cut.is_nan() {
-                String::new()
-            } else {
-                format!("{:.3}", r.mean_cut)
-            };
-            s.push_str(&format!(
-                "{},{},{:.6},{:.6},{:.6},{},{},{},{},{},{}",
-                r.round,
-                r.n_alive,
-                r.train_loss,
-                r.test_loss,
-                r.test_acc,
-                r.sim_round_s,
-                r.sim_total_s,
-                mean_cut,
-                r.stages.crit_a,
-                r.stages.crit_b,
-                r.stages.crit_slack_s
-            ));
-            for v in r.stages.stage_s {
-                s.push_str(&format!(",{v}"));
-            }
+            s.push_str(&r.csv_row());
             s.push('\n');
         }
         s
@@ -142,23 +193,7 @@ impl RunResult {
         o.insert("best_acc", Json::num(self.best_acc()));
         o.insert("mean_round_s", Json::num(self.mean_round_s()));
         o.insert("mean_alive", Json::num(self.mean_alive()));
-        let rounds: Vec<Json> = self
-            .rounds
-            .iter()
-            .map(|r| {
-                let mut ro = JsonObj::new();
-                ro.insert("round", Json::num(r.round as f64));
-                ro.insert("n_alive", Json::num(r.n_alive as f64));
-                ro.insert("train_loss", Json::num(r.train_loss));
-                ro.insert("test_loss", Json::num(r.test_loss));
-                ro.insert("test_acc", Json::num(r.test_acc));
-                ro.insert("sim_round_s", Json::num(r.sim_round_s));
-                ro.insert("sim_total_s", Json::num(r.sim_total_s));
-                ro.insert("mean_cut", Json::num(r.mean_cut));
-                ro.insert("stages", r.stages.to_json());
-                Json::Obj(ro)
-            })
-            .collect();
+        let rounds: Vec<Json> = self.rounds.iter().map(RoundRecord::to_json_obj).collect();
         o.insert("rounds", Json::Arr(rounds));
         Json::Obj(o)
     }
@@ -178,6 +213,78 @@ impl RunResult {
         std::fs::write(&json_path, self.to_json().to_string_pretty(1))?;
         Ok((csv_path, json_path))
     }
+}
+
+/// Incremental record sink: appends each [`RoundRecord`] to a CSV and a
+/// JSONL file as it is produced, instead of buffering the whole run. Memory
+/// stays O(1) in the round count, and a killed run keeps every completed
+/// round on disk — which is what makes unbounded async event streams (and
+/// ROADMAP's memory-diet item) tractable.
+#[derive(Debug)]
+pub struct RecordStreamer {
+    csv: std::io::BufWriter<std::fs::File>,
+    jsonl: std::io::BufWriter<std::fs::File>,
+    csv_path: String,
+    jsonl_path: String,
+}
+
+impl RecordStreamer {
+    /// Open `<dir>/<base>.stream.csv` (with header) and
+    /// `<dir>/<base>.stream.jsonl`, truncating any previous run.
+    pub fn create(dir: &str, base: &str) -> std::io::Result<RecordStreamer> {
+        use std::io::Write;
+        std::fs::create_dir_all(dir)?;
+        let csv_path = format!("{dir}/{base}.stream.csv");
+        let jsonl_path = format!("{dir}/{base}.stream.jsonl");
+        let mut csv = std::io::BufWriter::new(std::fs::File::create(&csv_path)?);
+        writeln!(csv, "{}", RoundRecord::csv_header())?;
+        let jsonl = std::io::BufWriter::new(std::fs::File::create(&jsonl_path)?);
+        Ok(RecordStreamer {
+            csv,
+            jsonl,
+            csv_path,
+            jsonl_path,
+        })
+    }
+
+    /// Append one record to both sinks and flush — the contract is that a
+    /// crash after `push` returns never loses that record.
+    pub fn push(&mut self, r: &RoundRecord) -> std::io::Result<()> {
+        use std::io::Write;
+        writeln!(self.csv, "{}", r.csv_row())?;
+        writeln!(self.jsonl, "{}", r.to_json_obj())?;
+        self.csv.flush()?;
+        self.jsonl.flush()
+    }
+
+    /// The `(csv, jsonl)` paths being written.
+    pub fn paths(&self) -> (&str, &str) {
+        (&self.csv_path, &self.jsonl_path)
+    }
+
+    /// Flush and close; returns the `(csv, jsonl)` paths.
+    pub fn finish(mut self) -> std::io::Result<(String, String)> {
+        use std::io::Write;
+        self.csv.flush()?;
+        self.jsonl.flush()?;
+        Ok((self.csv_path, self.jsonl_path))
+    }
+}
+
+/// Build the configured stream sink for a run: `Some` when
+/// `cfg.stream_out = Some(dir)`, named like [`RunResult::save`] outputs but
+/// with a `.stream.{csv,jsonl}` suffix.
+pub fn streamer_for(cfg: &ExperimentConfig) -> std::io::Result<Option<RecordStreamer>> {
+    let Some(dir) = cfg.stream_out.as_deref() else {
+        return Ok(None);
+    };
+    let base = format!(
+        "{}_{}_{}",
+        cfg.name,
+        cfg.algorithm.name(),
+        cfg.distribution.name()
+    );
+    RecordStreamer::create(dir, &base).map(Some)
 }
 
 #[cfg(test)]
@@ -206,6 +313,8 @@ mod tests {
                     sim_total_s: 10.0,
                     mean_cut: 4.0,
                     stages: stages1,
+                    t_wall_s: 10.0,
+                    staleness_mean: f64::NAN,
                 },
                 RoundRecord {
                     round: 2,
@@ -217,6 +326,8 @@ mod tests {
                     sim_total_s: 20.0,
                     mean_cut: 4.5,
                     stages: StageBreakdown::default(),
+                    t_wall_s: 20.0,
+                    staleness_mean: f64::NAN,
                 },
                 RoundRecord {
                     round: 3,
@@ -228,6 +339,8 @@ mod tests {
                     sim_total_s: 32.0,
                     mean_cut: f64::NAN,
                     stages: StageBreakdown::default(),
+                    t_wall_s: 32.0,
+                    staleness_mean: 1.25,
                 },
             ],
             wall_s: 1.0,
@@ -277,7 +390,8 @@ mod tests {
         let header = r.to_csv().lines().next().unwrap().to_string();
         assert!(header.ends_with(
             "crit_a,crit_b,crit_slack_s,stage_front_fp_s,stage_act_tx_s,stage_back_compute_s,\
-             stage_grad_tx_s,stage_front_upd_s,stage_uplink_s,stage_server_agg_s"
+             stage_grad_tx_s,stage_front_upd_s,stage_uplink_s,stage_server_agg_s,\
+             t_wall_s,staleness_mean"
         ));
         let row1: Vec<String> =
             r.to_csv().lines().nth(1).unwrap().split(',').map(str::to_string).collect();
@@ -313,6 +427,63 @@ mod tests {
                 .as_usize(),
             Some(20)
         );
+    }
+
+    #[test]
+    fn csv_staleness_is_empty_on_sync_rows_and_numeric_on_async() {
+        let csv = result().to_csv();
+        // Fixture rounds 1-2 are synchronous (NaN staleness) -> empty field.
+        assert!(csv.lines().nth(1).unwrap().ends_with(",10,"));
+        // Round 3 carries a real staleness mean.
+        assert!(csv.lines().nth(3).unwrap().ends_with(",32,1.250"));
+        let j = result().to_json().to_string();
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        let rounds = parsed.get("rounds").unwrap();
+        // NaN serializes as null; the async round keeps its value.
+        assert!(rounds.at(0).unwrap().get("staleness_mean").unwrap().as_f64().is_none());
+        assert_eq!(
+            rounds.at(2).unwrap().get("staleness_mean").and_then(Json::as_f64),
+            Some(1.25)
+        );
+    }
+
+    #[test]
+    fn streamer_appends_records_incrementally() {
+        let dir = std::env::temp_dir().join("fp_metrics_stream_test");
+        let dir = dir.to_str().unwrap();
+        let r = result();
+        let mut s = RecordStreamer::create(dir, "t_fed_pairing_iid").unwrap();
+        for rec in &r.rounds {
+            s.push(rec).unwrap();
+        }
+        let (csv_path, jsonl_path) = s.finish().unwrap();
+        let csv = std::fs::read_to_string(&csv_path).unwrap();
+        assert_eq!(csv, r.to_csv(), "streamed CSV must match the batch sink");
+        let jsonl = std::fs::read_to_string(&jsonl_path).unwrap();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for (line, rec) in lines.iter().zip(&r.rounds) {
+            let parsed = crate::util::json::Json::parse(line).unwrap();
+            assert_eq!(
+                parsed.get("round").and_then(Json::as_f64),
+                Some(rec.round as f64)
+            );
+        }
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn streamer_for_respects_config_gate() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = "gate".into();
+        assert!(streamer_for(&cfg).unwrap().is_none());
+        let dir = std::env::temp_dir().join("fp_metrics_streamer_for_test");
+        cfg.stream_out = Some(dir.to_str().unwrap().to_string());
+        let s = streamer_for(&cfg).unwrap().expect("configured -> Some");
+        assert!(s.paths().0.ends_with(".stream.csv"));
+        assert!(s.paths().1.ends_with(".stream.jsonl"));
+        drop(s);
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

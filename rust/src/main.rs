@@ -14,8 +14,8 @@
 
 use fedpairing::cli::{CliError, Command, Parsed};
 use fedpairing::config::{
-    Algorithm, BackendMode, DataDistribution, ExperimentConfig, ModelPreset, PairingStrategy,
-    RoundBackend, ScenarioConfig, SplitPolicy,
+    AggregationMode, Algorithm, BackendMode, DataDistribution, ExperimentConfig, ModelPreset,
+    PairingStrategy, RoundBackend, ScenarioConfig, SplitPolicy, StalenessWeighting,
 };
 use fedpairing::coordinator::run_experiment;
 use fedpairing::fleet::simulate_scenario;
@@ -49,6 +49,11 @@ fn cli() -> Command {
                 .flag("engine", None, Some("MODE"), "round-time engine: analytic|des", None)
                 .flag("threads", None, Some("N"), "engine worker threads (0 = one per core)", None)
                 .flag("split-policy", None, Some("POLICY"), "split planner: paper|balanced|optimal", None)
+                .flag("aggregation", None, Some("MODE"), "server aggregation: sync|async (buffered)", None)
+                .flag("buffer-size", None, Some("N"), "async: updates buffered per merge (>= 1)", None)
+                .flag("staleness-cap", None, Some("N"), "async: max merges an update may lag (0 = sync barrier)", None)
+                .flag("weighting", None, Some("FN"), "async merge discount: flat|polynomial", None)
+                .flag("stream-out", None, Some("DIR"), "stream per-round records to DIR/*.stream.{csv,jsonl}", None)
                 .flag("telemetry", None, None, "enable the metrics registry + stage counters", None)
                 .flag("trace-out", None, Some("FILE"), "Chrome trace + .prom/.jsonl sidecars; implies --telemetry", None)
                 .flag("artifacts", None, Some("DIR"), "artifact directory", None)
@@ -69,6 +74,11 @@ fn cli() -> Command {
                 .flag("threads", None, Some("N"), "engine worker threads (0 = one per core)", None)
                 .flag("split-policy", None, Some("POLICY"), "split planner: paper|balanced|optimal", None)
                 .flag("model", None, Some("NAME"), "latency cost profile: resnet18|resnet34|resnet10|mlp", None)
+                .flag("aggregation", None, Some("MODE"), "server aggregation: sync|async (buffered)", None)
+                .flag("buffer-size", None, Some("N"), "async: updates buffered per merge (>= 1)", None)
+                .flag("staleness-cap", None, Some("N"), "async: max merges an update may lag (0 = sync barrier)", None)
+                .flag("weighting", None, Some("FN"), "async merge discount: flat|polynomial", None)
+                .flag("stream-out", None, Some("DIR"), "stream per-round records to DIR/*.stream.{csv,jsonl}", None)
                 .flag("telemetry", None, None, "enable the metrics registry + stage counters", None)
                 .flag("trace-out", None, Some("FILE"), "Chrome trace + .prom/.jsonl sidecars; implies --telemetry", None)
                 .flag("out", Some('o'), Some("DIR"), "metrics output directory", None),
@@ -158,6 +168,31 @@ fn apply_telemetry_flags(cfg: &mut ExperimentConfig, p: &Parsed) {
     }
 }
 
+/// Apply the shared buffered-aggregation flags (`--aggregation`,
+/// `--buffer-size`, `--staleness-cap`, `--weighting`) and the incremental
+/// record stream (`--stream-out`). Knob bounds are enforced by
+/// `ExperimentConfig::validate` at run start.
+fn apply_aggregation_flags(cfg: &mut ExperimentConfig, p: &Parsed) -> anyhow::Result<()> {
+    if let Some(m) = p.get("aggregation") {
+        cfg.aggregation = AggregationMode::parse(m)
+            .ok_or_else(|| anyhow::anyhow!("unknown aggregation mode {m:?}"))?;
+    }
+    if let Some(b) = req_parsed::<usize>(p, "buffer-size")? {
+        cfg.async_agg.buffer_size = b;
+    }
+    if let Some(c) = req_parsed::<usize>(p, "staleness-cap")? {
+        cfg.async_agg.staleness_cap = c;
+    }
+    if let Some(w) = p.get("weighting") {
+        cfg.async_agg.weighting = StalenessWeighting::parse(w)
+            .ok_or_else(|| anyhow::anyhow!("unknown staleness weighting {w:?}"))?;
+    }
+    if let Some(d) = p.get("stream-out") {
+        cfg.stream_out = Some(d.to_string());
+    }
+    Ok(())
+}
+
 /// Apply the shared `--split-policy` / `--model` split-planner overrides.
 fn apply_split_flags(cfg: &mut ExperimentConfig, p: &Parsed) -> anyhow::Result<()> {
     if let Some(s) = p.get("split-policy") {
@@ -219,6 +254,7 @@ fn cmd_run(p: &Parsed) -> anyhow::Result<()> {
     }
     apply_engine_flags(&mut cfg, p)?;
     apply_split_flags(&mut cfg, p)?;
+    apply_aggregation_flags(&mut cfg, p)?;
     apply_telemetry_flags(&mut cfg, p);
     if let Some(d) = p.get("artifacts") {
         cfg.artifacts_dir = d.to_string();
@@ -289,13 +325,14 @@ fn cmd_churn(p: &Parsed) -> anyhow::Result<()> {
     };
     apply_engine_flags(&mut cfg, p)?;
     apply_split_flags(&mut cfg, p)?;
+    apply_aggregation_flags(&mut cfg, p)?;
     apply_telemetry_flags(&mut cfg, p);
     if let Some(d) = p.get("out") {
         cfg.out_dir = d.to_string();
     }
     println!(
         "simulating {} / {} under scenario={} — {} clients, {} rounds, {} backend, {} engine, \
-         {} split on {} (latency only)",
+         {} split on {}, {} aggregation (latency only)",
         cfg.algorithm,
         cfg.pairing,
         cfg.scenario.kind,
@@ -304,7 +341,8 @@ fn cmd_churn(p: &Parsed) -> anyhow::Result<()> {
         if cfg.backend.sparse_for(cfg.n_clients) { "sparse" } else { "dense" },
         cfg.engine.backend,
         cfg.split.policy,
-        cfg.model
+        cfg.model,
+        cfg.aggregation
     );
     let run = simulate_scenario(&cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
     println!(
@@ -330,6 +368,18 @@ fn cmd_churn(p: &Parsed) -> anyhow::Result<()> {
         run.repaired_rounds,
         run.result.rounds.last().map(|r| r.sim_total_s).unwrap_or(0.0)
     );
+    if !run.events.is_empty() {
+        let n = run.events.len() as f64;
+        let updates: usize = run.events.iter().map(|e| e.n_updates).sum();
+        let stale_mean: f64 = run.events.iter().map(|e| e.staleness_mean).sum::<f64>() / n;
+        let stale_max = run.events.iter().map(|e| e.staleness_max).max().unwrap_or(0);
+        let wait: f64 = run.events.iter().map(|e| e.wait_eliminated_s).sum();
+        println!(
+            "async: {} merges, {updates} updates, staleness mean={stale_mean:.2} max={stale_max}, \
+             straggler wait eliminated={wait:.0}s",
+            run.events.len()
+        );
+    }
     let (csv, json) = run.result.save(&cfg.out_dir)?;
     println!("metrics: {csv} / {json}");
     Ok(())

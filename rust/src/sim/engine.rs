@@ -357,6 +357,11 @@ pub struct RoundEngine {
     /// `(i, j, pair_total_s)` of the last FedPairing round — collected only
     /// while telemetry is enabled, for the trace exporter's pair lanes.
     lanes: Vec<(usize, usize, f64)>,
+    /// When set, each round evaluation also records its per-unit durations
+    /// in [`RoundEngine::unit_times`] — the async scheduler's price feed.
+    record_units: bool,
+    /// Per-unit durations of the last round (see [`RoundEngine::unit_times`]).
+    unit_times: Vec<f64>,
     hits: u64,
     misses: u64,
 }
@@ -376,9 +381,29 @@ impl RoundEngine {
             evals: Vec::new(),
             totals: Vec::new(),
             lanes: Vec::new(),
+            record_units: false,
+            unit_times: Vec::new(),
             hits: 0,
             misses: 0,
         }
+    }
+
+    /// Toggle per-unit duration recording. The async scheduler needs the
+    /// individual participant totals the synchronous reduction folds into a
+    /// max; this exposes them without changing any of the round arithmetic.
+    pub fn set_record_units(&mut self, on: bool) {
+        self.record_units = on;
+    }
+
+    /// Per-unit durations of the last analytic round, in evaluation order:
+    /// FedPairing = pairs (in call order) then solos; FL/SL/SplitFed = one
+    /// entry per client in fleet order. FedPairing/FL entries include the
+    /// model upload when the round did; SplitFed entries are the pre-upload
+    /// server-pipeline finish times; SL entries are per-session durations
+    /// (the round total is their running sum). Empty on the DES backend or
+    /// while recording is off.
+    pub fn unit_times(&self) -> &[f64] {
+        &self.unit_times
     }
 
     /// Install a split-planning config (builder style; default is `Paper`,
@@ -467,6 +492,7 @@ impl RoundEngine {
         include_upload: bool,
     ) -> RoundTime {
         self.lanes.clear();
+        self.unit_times.clear();
         if self.backend == RoundBackend::Des {
             registry::count(Counter::KernelEvalsDes, 1);
             let mut rt = latency::fedpairing_round_planned(
@@ -616,6 +642,10 @@ impl RoundEngine {
                 crit_solo = Some((s, compute_s, t - compute_s));
             }
         }
+        if self.record_units {
+            // Snapshot before the breakdown's p50 selection reorders totals.
+            self.unit_times.extend_from_slice(&self.totals);
+        }
         let stages = latency::fedpairing_breakdown(
             fleet,
             profile,
@@ -649,8 +679,15 @@ impl RoundEngine {
         comp: &ComputeConfig,
         include_upload: bool,
     ) -> RoundTime {
+        self.unit_times.clear();
         if self.flow_diagnostics {
-            return latency::fl_round(fleet, profile, sched, channel, comp, include_upload);
+            let rt = latency::fl_round(fleet, profile, sched, channel, comp, include_upload);
+            if self.record_units {
+                // The diagnostics path already materializes per-client finish
+                // times — they are exactly the per-unit durations.
+                self.unit_times.extend_from_slice(&rt.flow_finish_s);
+            }
+            return rt;
         }
         let mut total = 0.0f64;
         let mut max_cpu = 0.0f64;
@@ -668,6 +705,9 @@ impl RoundEngine {
             }
             total = total.max(t);
             self.totals.push(t);
+        }
+        if self.record_units {
+            self.unit_times.extend_from_slice(&self.totals);
         }
         if !self.totals.is_empty() {
             stages.crit_slack_s = crit_total - breakdown::p50(&mut self.totals);
@@ -695,6 +735,7 @@ impl RoundEngine {
         cut: usize,
         server_freq_hz: f64,
     ) -> RoundTime {
+        self.unit_times.clear();
         if self.backend == RoundBackend::Des {
             let mut rt =
                 latency::sl_round(fleet, profile, sched, channel, comp, cut, server_freq_hz);
@@ -764,6 +805,9 @@ impl RoundEngine {
             max_cpu = max_cpu.max(busy[0]).max(busy[1]);
             max_link = max_link.max(busy[2]).max(busy[3]);
         }
+        if self.record_units {
+            self.unit_times.extend_from_slice(&self.totals);
+        }
         if !self.totals.is_empty() {
             stages.crit_slack_s = crit_session - breakdown::p50(&mut self.totals);
         }
@@ -796,6 +840,7 @@ impl RoundEngine {
         server_freq_hz: f64,
         include_upload: bool,
     ) -> RoundTime {
+        self.unit_times.clear();
         if self.backend == RoundBackend::Des {
             let mut rt = latency::splitfed_round(
                 fleet,
@@ -877,6 +922,11 @@ impl RoundEngine {
             } else {
                 finish[i] = t;
             }
+        }
+        if self.record_units {
+            // Pre-upload pipeline finishes: the async scheduler re-prices the
+            // FedAvg upload per merge, over the merge's actual contributors.
+            self.unit_times.extend_from_slice(&finish);
         }
         let mut total = finish.iter().cloned().fold(0.0, f64::max);
         max_cpu = max_cpu.max(server_busy);

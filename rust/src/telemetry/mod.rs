@@ -55,6 +55,8 @@ pub struct Telemetry {
     mark_t0: Instant,
     round: usize,
     sampling: bool,
+    /// Aggregation events observed so far (event-driven mode only).
+    events_seen: usize,
 }
 
 impl Telemetry {
@@ -78,6 +80,7 @@ impl Telemetry {
             mark_t0: now,
             round: 0,
             sampling: false,
+            events_seen: 0,
         }
     }
 
@@ -96,6 +99,22 @@ impl Telemetry {
         self.round = round;
         self.sampling =
             self.exporting() && (round.max(1) - 1) % self.cfg.sample_every.max(1) == 0;
+        if self.sampling {
+            self.mark_t0 = Instant::now();
+        }
+    }
+
+    /// Start an aggregation event (event-driven mode). Unlike
+    /// [`Telemetry::begin_round`], sampling counts *events*, not rounds —
+    /// under buffered aggregation there is no fixed round cadence, and
+    /// round-keyed sampling would alias against the merge stream (always-on
+    /// or never-on depending on how merges happen to land). Event `1` and
+    /// every `sample_every`-th event after it are sampled.
+    pub fn begin_event(&mut self) {
+        self.events_seen += 1;
+        self.round = self.events_seen;
+        self.sampling =
+            self.exporting() && (self.events_seen - 1) % self.cfg.sample_every.max(1) == 0;
         if self.sampling {
             self.mark_t0 = Instant::now();
         }
@@ -159,6 +178,31 @@ impl Telemetry {
                     Some(args),
                 );
             }
+        }
+    }
+
+    /// Record a buffered-aggregation merge: one JSONL `merge` event plus
+    /// counter lanes (buffer occupancy, mean staleness) on the simulated-time
+    /// pid. No-op when the current event is not sampled.
+    pub fn end_merge(&mut self, e: &crate::asyncsim::AggregationEvent) {
+        if !self.sampling {
+            return;
+        }
+        let mut o = JsonObj::new();
+        o.insert("type", Json::str("merge"));
+        o.insert("seq", Json::Num(e.seq as f64));
+        o.insert("t_wall_s", Json::Num(e.t_wall_s));
+        o.insert("n_updates", Json::Num(e.n_updates as f64));
+        o.insert("n_running", Json::Num(e.n_running as f64));
+        o.insert("staleness_mean", Json::num(e.staleness_mean));
+        o.insert("staleness_max", Json::Num(e.staleness_max as f64));
+        o.insert("buffer_peak", Json::Num(e.buffer_peak as f64));
+        o.insert("wait_eliminated_s", Json::Num(e.wait_eliminated_s));
+        self.events.push(Json::Obj(o));
+        if let Some(tr) = self.trace.as_mut() {
+            let ts_us = e.t_wall_s * 1e6;
+            tr.counter("buffer_occupancy", PID_SIM, ts_us, e.n_updates as f64);
+            tr.counter("merge_staleness_mean", PID_SIM, ts_us, e.staleness_mean);
         }
     }
 

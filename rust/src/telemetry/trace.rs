@@ -64,6 +64,22 @@ impl TraceWriter {
         self.events.push(Json::Obj(e));
     }
 
+    /// Append a counter ("C") sample: the viewer renders the series as a
+    /// stacked area chart on the pid's clock domain. Used for async buffer
+    /// occupancy / staleness lanes in simulated time.
+    pub fn counter(&mut self, name: &str, pid: u64, ts_us: f64, value: f64) {
+        let mut args = JsonObj::new();
+        args.insert("value", Json::Num(value));
+        let mut e = JsonObj::new();
+        e.insert("name", Json::str(name));
+        e.insert("ph", Json::str("C"));
+        e.insert("pid", Json::Num(pid as f64));
+        e.insert("tid", Json::Num(0.0));
+        e.insert("ts", Json::Num(ts_us));
+        e.insert("args", Json::Obj(args));
+        self.events.push(Json::Obj(e));
+    }
+
     /// Name a pid in the viewer's process list (metadata event).
     pub fn name_process(&mut self, pid: u64, name: &str) {
         let mut args = JsonObj::new();
@@ -108,6 +124,20 @@ mod tests {
         assert_eq!(
             events[2].get("args").and_then(|a| a.get("round")).and_then(Json::as_f64),
             Some(3.0)
+        );
+    }
+
+    #[test]
+    fn counters_emit_value_samples() {
+        let mut w = TraceWriter::new();
+        w.counter("buffer_occupancy", 1, 2_500_000.0, 7.0);
+        let parsed = Json::parse(&w.to_json().to_string()).unwrap();
+        let e = &parsed.get("traceEvents").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("C"));
+        assert_eq!(e.get("ts").and_then(Json::as_f64), Some(2_500_000.0));
+        assert_eq!(
+            e.get("args").and_then(|a| a.get("value")).and_then(Json::as_f64),
+            Some(7.0)
         );
     }
 }

@@ -1,0 +1,298 @@
+//! Asynchronous buffered-aggregation properties (DESIGN.md §9).
+//!
+//! The pinned invariants:
+//!
+//! 1. **Sync recovery** — with `staleness_cap` effectively unbounded and
+//!    `buffer_size ≥ fleet`, every merge window degenerates to the lockstep
+//!    barrier, and the async trace is *bit-identical* to the synchronous
+//!    driver's: same `sim_round_s`, `sim_total_s`, `t_wall_s`, stage
+//!    breakdowns and critical paths, at any thread count, for all four
+//!    algorithms. `staleness_cap = 0` recovers the same barrier through the
+//!    gate instead of the quorum.
+//! 2. **Bounded staleness** — under churn with a small buffer and cap, no
+//!    merge ever carries an update more than `staleness_cap` versions stale
+//!    (gating, not clipping).
+//! 3. **Event-count telemetry sampling** — buffered aggregation has no round
+//!    cadence, so the sampler counts merge events; `sample_every = k` writes
+//!    exactly `ceil(windows / k)` merge events to the JSONL stream.
+//!
+//! Every test serializes on one mutex: the telemetry registry gate is
+//! process-wide and `Telemetry::new` (constructed by every scenario run)
+//! flips it.
+
+use fedpairing::config::{
+    AggregationMode, Algorithm, ExperimentConfig, ScenarioConfig, ScenarioKind,
+};
+use fedpairing::coordinator::metrics::RoundRecord;
+use fedpairing::fleet::simulate_scenario;
+use fedpairing::telemetry::registry::{self, Counter};
+use fedpairing::util::json::Json;
+use std::sync::Mutex;
+
+/// Process-wide serialization for the global registry gate.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+const N_CLIENTS: usize = 12;
+const ROUNDS: usize = 30;
+
+fn cfg(kind: ScenarioKind, algo: Algorithm) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.n_clients = N_CLIENTS;
+    c.rounds = ROUNDS;
+    c.samples_per_client = 250;
+    c.algorithm = algo;
+    c.scenario = ScenarioConfig::preset(kind);
+    c
+}
+
+/// The async counterpart of `base`: merge only once everything in flight has
+/// arrived (quorum ≥ fleet, cap unbounded) — the sync-recovery limit.
+fn recovery(base: &ExperimentConfig) -> ExperimentConfig {
+    let mut c = base.clone();
+    c.aggregation = AggregationMode::Async;
+    c.async_agg.buffer_size = c.n_clients;
+    c.async_agg.staleness_cap = 1 << 30;
+    c
+}
+
+const ALGOS: [Algorithm; 4] = [
+    Algorithm::FedPairing,
+    Algorithm::VanillaFL,
+    Algorithm::VanillaSL,
+    Algorithm::SplitFed,
+];
+
+/// Every observable bit of a round record except `staleness_mean`, which is
+/// NaN on sync rows and 0.0 in the recovery limit by design (asserted
+/// separately). NaN-safe: compares bit patterns.
+type Fp = (usize, usize, u64, u64, u64, u64, [u64; 7], i64, i64, u64);
+
+fn fingerprint(rounds: &[RoundRecord]) -> Vec<Fp> {
+    rounds
+        .iter()
+        .map(|r| {
+            (
+                r.round,
+                r.n_alive,
+                r.sim_round_s.to_bits(),
+                r.sim_total_s.to_bits(),
+                r.t_wall_s.to_bits(),
+                r.mean_cut.to_bits(),
+                r.stages.stage_s.map(f64::to_bits),
+                r.stages.crit_a,
+                r.stages.crit_b,
+                r.stages.crit_slack_s.to_bits(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn async_recovery_is_bit_identical_to_sync_for_all_algorithms() {
+    let _g = lock();
+    for kind in [ScenarioKind::Stable, ScenarioKind::LossyRadio] {
+        for algo in ALGOS {
+            for threads in [1usize, 4] {
+                let mut sync = cfg(kind, algo);
+                sync.engine.threads = threads;
+                let mut asy = recovery(&sync);
+                asy.engine.threads = threads;
+                let a = simulate_scenario(&sync).unwrap();
+                let b = simulate_scenario(&asy).unwrap();
+                assert_eq!(
+                    fingerprint(&a.result.rounds),
+                    fingerprint(&b.result.rounds),
+                    "{kind:?}/{algo:?}/threads={threads}: recovery trace diverged"
+                );
+                assert_eq!(a.trace, b.trace, "{kind:?}/{algo:?}: churn trace diverged");
+                // In the recovery limit every update is fresh and every
+                // window merges the whole fleet's units with no one waiting.
+                assert_eq!(b.events.len(), ROUNDS);
+                for (ev, rec) in b.events.iter().zip(&b.result.rounds) {
+                    assert_eq!(ev.staleness_max, 0, "{kind:?}/{algo:?}");
+                    assert_eq!(ev.staleness_mean, 0.0);
+                    assert_eq!(ev.n_running, 0);
+                    assert!(ev.n_updates >= 1);
+                    assert_eq!(ev.wait_eliminated_s, 0.0);
+                    assert_eq!(rec.staleness_mean, 0.0);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn staleness_cap_zero_also_recovers_the_barrier() {
+    let _g = lock();
+    // cap = 0 defers every merge until nothing is running — the barrier
+    // reached through the gate rather than the quorum. The buffer size is
+    // irrelevant on this path.
+    let sync = cfg(ScenarioKind::LossyRadio, Algorithm::FedPairing);
+    let mut asy = sync.clone();
+    asy.aggregation = AggregationMode::Async;
+    asy.async_agg.buffer_size = 1;
+    asy.async_agg.staleness_cap = 0;
+    let a = simulate_scenario(&sync).unwrap();
+    let b = simulate_scenario(&asy).unwrap();
+    assert_eq!(fingerprint(&a.result.rounds), fingerprint(&b.result.rounds));
+    assert!(b.events.iter().all(|e| e.staleness_max == 0));
+}
+
+#[test]
+fn all_algorithms_run_async_under_all_scenarios() {
+    let _g = lock();
+    for kind in ScenarioKind::ALL {
+        for algo in ALGOS {
+            let mut c = cfg(kind, algo);
+            c.aggregation = AggregationMode::Async;
+            c.async_agg.buffer_size = 3;
+            c.async_agg.staleness_cap = 4;
+            let run = simulate_scenario(&c).unwrap();
+            assert_eq!(run.result.rounds.len(), ROUNDS, "{kind:?}/{algo:?}");
+            assert_eq!(run.events.len(), ROUNDS, "{kind:?}/{algo:?}");
+            let mut prev = 0.0f64;
+            for (ev, rec) in run.events.iter().zip(&run.result.rounds) {
+                assert!(ev.n_updates >= 1, "{kind:?}/{algo:?}: empty merge");
+                assert!(ev.staleness_max <= 4, "{kind:?}/{algo:?}: cap violated");
+                assert!(ev.staleness_mean >= 0.0 && ev.staleness_mean <= 4.0);
+                assert!(ev.t_wall_s >= prev, "{kind:?}/{algo:?}: clock went back");
+                prev = ev.t_wall_s;
+                assert!(rec.sim_round_s >= 0.0);
+                assert_eq!(rec.t_wall_s, ev.t_wall_s);
+                assert_eq!(rec.staleness_mean.to_bits(), ev.staleness_mean.to_bits());
+            }
+        }
+    }
+}
+
+#[test]
+fn flash_crowd_merges_never_exceed_the_staleness_cap() {
+    let _g = lock();
+    // The acceptance-criteria path: a small quorum under churn merges early
+    // and leaves stragglers in flight, yet the gate keeps every merged
+    // update within the cap.
+    let mut c = cfg(ScenarioKind::FlashCrowd, Algorithm::FedPairing);
+    c.aggregation = AggregationMode::Async;
+    c.async_agg.buffer_size = 2;
+    c.async_agg.staleness_cap = 2;
+    let run = simulate_scenario(&c).unwrap();
+    assert!(run.events.iter().all(|e| e.staleness_max <= 2));
+    // Asynchrony actually happened: some merge carried a stale update, and
+    // some merge fired while stragglers were still running (eliminating the
+    // barrier wait they would have imposed).
+    assert!(
+        run.events.iter().any(|e| e.staleness_max > 0),
+        "no merge ever saw a stale update — the run degenerated to sync"
+    );
+    assert!(run.events.iter().any(|e| e.wait_eliminated_s > 0.0));
+    assert!(run.events.iter().any(|e| e.n_running > 0));
+}
+
+#[test]
+fn synchronous_runs_report_no_aggregation_events() {
+    let _g = lock();
+    let run = simulate_scenario(&cfg(ScenarioKind::LossyRadio, Algorithm::FedPairing)).unwrap();
+    assert!(run.events.is_empty());
+    for r in &run.result.rounds {
+        assert!(r.staleness_mean.is_nan(), "sync rows carry no staleness");
+        assert_eq!(r.t_wall_s.to_bits(), r.sim_total_s.to_bits());
+    }
+}
+
+#[test]
+fn async_runs_are_deterministic() {
+    let _g = lock();
+    let mut c = cfg(ScenarioKind::FlashCrowd, Algorithm::FedPairing);
+    c.aggregation = AggregationMode::Async;
+    c.async_agg.buffer_size = 2;
+    c.async_agg.staleness_cap = 2;
+    let a = simulate_scenario(&c).unwrap();
+    let b = simulate_scenario(&c).unwrap();
+    assert_eq!(fingerprint(&a.result.rounds), fingerprint(&b.result.rounds));
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.trace, b.trace);
+}
+
+/// Scratch directory for exporter output (inside `target/`, never committed).
+fn out_dir() -> std::path::PathBuf {
+    let d = std::path::PathBuf::from("target/test-async-engine");
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn event_sampling_writes_one_merge_event_per_sampled_window() {
+    let _g = lock();
+    // Regression: the sampler must count *merge events*, not rounds — with
+    // no fixed round cadence, round-keyed sampling aliases against the merge
+    // stream. 10 windows at sample_every = 2 → exactly 5 sampled events,
+    // each contributing one "round" and one "merge" JSONL object.
+    let trace_path = out_dir().join("sampled.trace.json");
+    let trace_path = trace_path.to_str().unwrap().to_string();
+    let mut c = cfg(ScenarioKind::LossyRadio, Algorithm::FedPairing);
+    c.rounds = 10;
+    c.aggregation = AggregationMode::Async;
+    c.async_agg.buffer_size = 2;
+    c.async_agg.staleness_cap = 3;
+    c.telemetry.enabled = true;
+    c.telemetry.sample_every = 2;
+    c.telemetry.trace_out = Some(trace_path.clone());
+    let run = simulate_scenario(&c).unwrap();
+    assert_eq!(run.events.len(), 10);
+    let jsonl = std::fs::read_to_string(format!("{trace_path}.events.jsonl")).unwrap();
+    let mut merges = 0usize;
+    let mut rounds = 0usize;
+    for line in jsonl.lines().filter(|l| !l.trim().is_empty()) {
+        let obj = Json::parse(line).unwrap();
+        match obj.get("type").and_then(Json::as_str) {
+            Some("merge") => {
+                merges += 1;
+                assert!(obj.get("staleness_mean").is_some());
+                assert!(obj.get("buffer_peak").is_some());
+                assert!(obj.get("wait_eliminated_s").is_some());
+            }
+            Some("round") => rounds += 1,
+            other => panic!("unexpected event type {other:?}"),
+        }
+    }
+    assert_eq!(merges, 5, "sample_every=2 over 10 windows must export 5 merges");
+    assert_eq!(rounds, 5);
+    // The Chrome trace parses and carries counter ("C") samples for the
+    // buffer-occupancy / staleness lanes alongside spans and metadata.
+    let trace = Json::parse(&std::fs::read_to_string(&trace_path).unwrap()).unwrap();
+    let events = trace.get("traceEvents").and_then(Json::as_arr).unwrap();
+    let counters = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("C"))
+        .count();
+    // Two counter series per sampled merge.
+    assert_eq!(counters, 10);
+    registry::set_enabled(false);
+    registry::reset();
+}
+
+#[test]
+fn async_counters_populate_the_registry() {
+    let _g = lock();
+    registry::set_enabled(true);
+    registry::reset();
+    let mut c = cfg(ScenarioKind::FlashCrowd, Algorithm::FedPairing);
+    c.aggregation = AggregationMode::Async;
+    c.async_agg.buffer_size = 2;
+    c.async_agg.staleness_cap = 2;
+    c.telemetry.enabled = true;
+    let run = simulate_scenario(&c).unwrap();
+    let snap = registry::snapshot();
+    assert_eq!(snap.counter(Counter::AsyncMerges.name()), ROUNDS as u64);
+    let merged: usize = run.events.iter().map(|e| e.n_updates).sum();
+    assert_eq!(
+        snap.counter(Counter::AsyncUpdatesMerged.name()),
+        merged as u64
+    );
+    registry::set_enabled(false);
+    registry::reset();
+}
