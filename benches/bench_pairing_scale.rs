@@ -1,7 +1,10 @@
 //! Fleet-scale pairing bench: sparse candidate-graph build + greedy matching
-//! and one incremental churn repair at n ∈ {1k, 10k, 100k}, plus the
-//! dense-vs-sparse crossover at n = 1k. Emits `BENCH_pairing.json` so CI can
-//! track the perf trajectory across PRs.
+//! and one incremental churn repair at n ∈ {1k, 10k, 100k, 1M}, the
+//! dense-vs-sparse crossover at n = 1k, and the headline cross-round race:
+//! persistent incremental matcher vs full rebuild over repeated metro churn
+//! epochs at n = 100k (acceptance: ≥ 10×, outputs bit-identical). Emits
+//! `BENCH_pairing.json` (including peak RSS) so CI can track the perf
+//! trajectory across PRs; CI greps the log for `FAIL` shape checks.
 
 #[path = "common.rs"]
 mod common;
@@ -10,11 +13,15 @@ use fedpairing::config::{ExperimentConfig, PairingStrategy};
 use fedpairing::fleet::{maintain_matching, FleetDynamics};
 use fedpairing::pairing::graph::ClientGraph;
 use fedpairing::pairing::greedy::greedy_matching;
-use fedpairing::pairing::{match_candidates, EdgeWeightSpec, SparseCandidateGraph};
+use fedpairing::pairing::{
+    match_candidates, EdgeWeightSpec, IncrementalMatcher, SparseCandidateGraph,
+};
 use fedpairing::sim::channel::Channel;
 use fedpairing::sim::latency::Fleet;
 use fedpairing::util::json::{Json, JsonObj};
+use fedpairing::util::pool::FixedPool;
 use fedpairing::util::rng::Rng;
+use std::time::Instant;
 
 fn metro_cfg(n: usize) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::preset("metro-scale").expect("metro-scale preset");
@@ -37,11 +44,71 @@ fn churn_round_trip(cfg: &ExperimentConfig) -> usize {
     matching.expect("matching").pairs.len()
 }
 
+/// The tentpole race: per-epoch incremental matcher vs full rebuild over
+/// `epochs` metro churn rounds at `n`. Returns (speedup, bit_identical,
+/// mean incremental epoch seconds, mean rebuild epoch seconds).
+fn incremental_vs_rebuild(n: usize, epochs: usize) -> (f64, bool, f64, f64) {
+    let cfg = metro_cfg(n);
+    let base = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+    let mut dynamics = FleetDynamics::new(&cfg, base);
+    let spec = EdgeWeightSpec::Eq5 {
+        alpha: cfg.alpha,
+        beta: cfg.beta,
+    };
+    let pool = FixedPool::new(cfg.engine.threads);
+    let mut matcher =
+        IncrementalMatcher::new(dynamics.universe().n(), cfg.backend.k_near, cfg.backend.k_freq);
+    // Epoch 1 initializes both sides (unmeasured — the race is the steady
+    // state, where the rebuild's work is flat and the matcher's is
+    // O(affected)).
+    dynamics.step(1);
+    {
+        let channel = dynamics.channel();
+        let alive = dynamics.alive_indices();
+        common::black_box(
+            matcher
+                .update(dynamics.universe(), &channel, dynamics.grid(), &alive, &spec, &pool)
+                .pairs
+                .len(),
+        );
+    }
+    let mut t_inc = 0.0f64;
+    let mut t_reb = 0.0f64;
+    let mut identical = true;
+    for round in 2..=(1 + epochs) {
+        dynamics.step(round);
+        let channel = dynamics.channel();
+        let alive = dynamics.alive_indices();
+        let t = Instant::now();
+        let inc = matcher
+            .update(dynamics.universe(), &channel, dynamics.grid(), &alive, &spec, &pool)
+            .clone();
+        t_inc += t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let g = SparseCandidateGraph::over_members_pooled(
+            dynamics.universe(),
+            &channel,
+            dynamics.grid(),
+            &alive,
+            spec,
+            cfg.backend.k_near,
+            cfg.backend.k_freq,
+            &pool,
+        );
+        let reb = match_candidates(&g, &alive);
+        t_reb += t.elapsed().as_secs_f64();
+        identical &= inc == reb;
+    }
+    let e = epochs as f64;
+    (t_reb / t_inc.max(1e-12), identical, t_inc / e, t_reb / e)
+}
+
 fn main() {
     println!("== sparse candidate-graph pairing scale ==");
     common::report_header();
     let mut rows: Vec<Json> = Vec::new();
-    for n in [1_000usize, 10_000, 100_000] {
+    let mut million_pair_s = f64::NAN;
+    for n in [1_000usize, 10_000, 100_000, 1_000_000] {
         let cfg = metro_cfg(n);
         let fleet = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
         let channel = Channel::new(cfg.channel);
@@ -50,10 +117,14 @@ fn main() {
             beta: cfg.beta,
         };
         let members: Vec<usize> = (0..n).collect();
-        let iters = if n >= 100_000 { 3 } else { 10 };
+        let (warmup, iters) = match n {
+            1_000_000 => (0, 2),
+            100_000 => (1, 3),
+            _ => (1, 10),
+        };
         let mut n_edges = 0usize;
         let mut n_pairs = 0usize;
-        let pair_stats = common::bench(&format!("sparse pair    n={n}"), 1, iters, || {
+        let pair_stats = common::bench(&format!("sparse pair    n={n}"), warmup, iters, || {
             let g = SparseCandidateGraph::build(
                 &fleet,
                 &channel,
@@ -77,6 +148,10 @@ fn main() {
             n_edges <= n * (cfg.backend.k_near + cfg.backend.k_freq),
         );
         common::check_shape(&format!("n={n}: near-perfect"), n_pairs >= n / 2 - 1);
+        if n == 1_000_000 {
+            million_pair_s = pair_stats.min_s;
+            common::check_shape("n=1000000: full pairing under 60 s", pair_stats.min_s < 60.0);
+        }
         let mut row = JsonObj::new();
         row.insert("n", Json::num(n as f64));
         row.insert("candidate_edges", Json::num(n_edges as f64));
@@ -86,6 +161,16 @@ fn main() {
         row.insert("churn_repair_mean_s", Json::num(repair_stats.mean_s));
         rows.push(Json::Obj(row));
     }
+
+    println!("== incremental matcher vs full rebuild (n=100_000, metro churn) ==");
+    let (speedup, identical, inc_s, reb_s) = incremental_vs_rebuild(100_000, 10);
+    println!(
+        "  incremental epoch {:>10}   rebuild epoch {:>10}   speedup {speedup:.1}x",
+        common::fmt_time(inc_s),
+        common::fmt_time(reb_s)
+    );
+    common::check_shape("n=100k churn: incremental == rebuild bit-for-bit", identical);
+    common::check_shape("n=100k churn: incremental >= 10x rebuild", speedup >= 10.0);
 
     println!("== dense vs sparse crossover (n=1000, greedy) ==");
     let cfg = metro_cfg(1_000);
@@ -102,6 +187,13 @@ fn main() {
     out.insert("bench", Json::str("pairing_scale"));
     out.insert("strategy", Json::str(PairingStrategy::Greedy.name()));
     out.insert("dense_n1000_mean_s", Json::num(dense_stats.mean_s));
+    out.insert("matcher_speedup_100k", Json::num(speedup));
+    out.insert("matcher_epoch_100k_s", Json::num(inc_s));
+    out.insert("rebuild_epoch_100k_s", Json::num(reb_s));
+    out.insert("million_pair_min_s", Json::num(million_pair_s));
+    if let Some(mb) = common::report_peak_rss() {
+        out.insert("peak_rss_mb", Json::num(mb));
+    }
     out.insert("results", Json::Arr(rows));
     let path = "BENCH_pairing.json";
     std::fs::write(path, Json::Obj(out).to_string_pretty(2)).expect("write bench json");

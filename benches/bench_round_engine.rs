@@ -186,10 +186,48 @@ fn main() {
         metro_speedup >= 20.0,
     );
 
+    // Million-client engine round, analytic path only (the DES oracle is
+    // the measured slow side above and has no business at 1M). Adjacent-id
+    // pairs: matching quality is irrelevant to engine throughput.
+    println!("== million-client engine round (analytic, per-round fading) ==");
+    let mut cfg = ExperimentConfig::preset("metro-scale").expect("metro-scale preset");
+    cfg.n_clients = 1_000_000;
+    cfg.seed = 17;
+    let fleet = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+    let pairs: Vec<(usize, usize)> = (0..cfg.n_clients / 2).map(|i| (2 * i, 2 * i + 1)).collect();
+    let solos: Vec<usize> = Vec::new();
+    let profile = ModelProfile::resnet18_cifar();
+    let sched = Schedule {
+        batch_size: 32,
+        epochs: cfg.local_epochs,
+    };
+    let mut engine = RoundEngine::new(&cfg.engine);
+    let rounds_1m = 10usize;
+    let channels = faded_channels(&cfg, rounds_1m);
+    let t = Instant::now();
+    let mut acc = 0.0f64;
+    for ch in &channels {
+        acc += engine
+            .fedpairing_round(&fleet, &pairs, &solos, &profile, &sched, ch, &cfg.compute, true)
+            .total_s;
+    }
+    let million_round_s = t.elapsed().as_secs_f64() / rounds_1m as f64;
+    common::black_box(acc);
+    println!(
+        "  1M clients, {} pairs: {} per round",
+        pairs.len(),
+        common::fmt_time(million_round_s)
+    );
+    common::check_shape("n=1M: analytic engine round under 5 s", million_round_s < 5.0);
+
     let mut out = JsonObj::new();
     out.insert("bench", Json::str("round_engine"));
     out.insert("workload", Json::str("fedpairing metro-scale fading, 200-round engine runs"));
     out.insert("metro_speedup_50k", Json::num(metro_speedup));
+    out.insert("million_round_s", Json::num(million_round_s));
+    if let Some(mb) = common::report_peak_rss() {
+        out.insert("peak_rss_mb", Json::num(mb));
+    }
     out.insert("results", Json::Arr(rows));
     let path = "BENCH_round_engine.json";
     std::fs::write(path, Json::Obj(out).to_string_pretty(2)).expect("write bench json");

@@ -90,7 +90,31 @@ pub fn paper_row(label: &str, measured: f64, paper: Option<f64>) {
 }
 
 /// Assert-with-report: prints PASS/FAIL for a shape property without
-/// aborting the bench (benches report, tests enforce).
+/// aborting the bench (benches report; CI greps the logs for FAIL).
 pub fn check_shape(what: &str, ok: bool) {
     println!("  shape[{}]: {}", what, if ok { "PASS" } else { "FAIL (see EXPERIMENTS.md)" });
+}
+
+/// Peak resident set size of this process (`VmHWM` from
+/// `/proc/self/status`) in bytes. Linux only — `None` elsewhere, so bench
+/// JSON fields stay optional rather than lying with zeros.
+pub fn peak_rss_bytes() -> Option<u64> {
+    #[cfg(target_os = "linux")]
+    {
+        let status = std::fs::read_to_string("/proc/self/status").ok()?;
+        let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+        let kb: u64 = line.split_whitespace().nth(1)?.parse().ok()?;
+        Some(kb * 1024)
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        None
+    }
+}
+
+/// Report peak RSS on stdout and return it in MiB for JSON (when known).
+pub fn report_peak_rss() -> Option<f64> {
+    let mb = peak_rss_bytes()? as f64 / (1024.0 * 1024.0);
+    println!("  peak RSS (VmHWM): {mb:.0} MiB");
+    Some(mb)
 }

@@ -20,9 +20,8 @@ use super::{AggregationEvent, Merge, Timeline, UnitKind};
 use crate::config::{Algorithm, ConfigError, ExperimentConfig, SplitPolicy};
 use crate::coordinator::metrics::{streamer_for, RoundRecord, RunResult};
 use crate::fleet::dynamics::FleetDynamics;
-use crate::fleet::maintain_matching;
 use crate::fleet::sim_driver::ScenarioRun;
-use crate::pairing::Matching;
+use crate::fleet::{maintain_matching_session, PairingSession};
 use crate::sim::engine::RoundEngine;
 use crate::sim::latency::{upload_time, Fleet, FleetView, Schedule};
 use crate::sim::profile::ModelProfile;
@@ -154,7 +153,7 @@ pub fn simulate_async(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigError
     let cost = (cfg.split.policy != SplitPolicy::Paper && cfg.split.co_design)
         .then(|| SplitCostModel::new(profile.clone(), sched, cfg.compute, cfg.split));
     let mut pairing_rng = Rng::new(cfg.seed ^ 0x9A1F);
-    let mut matching: Option<Matching> = None;
+    let mut pairing = PairingSession::new();
     let mut records = Vec::with_capacity(cfg.rounds);
     let mut trace = Vec::with_capacity(cfg.rounds);
     let mut events = Vec::with_capacity(cfg.rounds);
@@ -186,9 +185,9 @@ pub fn simulate_async(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigError
         inv.rebuild(dynamics.universe().n(), members);
         let rt = match cfg.algorithm {
             Algorithm::FedPairing => {
-                let had_matching = matching.is_some();
-                let changed = maintain_matching(
-                    &mut matching,
+                let had_matching = pairing.matching.is_some();
+                let changed = maintain_matching_session(
+                    &mut pairing,
                     &dynamics,
                     &ev,
                     &channel,
@@ -196,10 +195,12 @@ pub fn simulate_async(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigError
                     cost.as_ref(),
                     &mut pairing_rng,
                 );
+                telemetry.mark("matcher");
                 if had_matching && changed {
                     repaired_rounds += 1;
                 }
-                let eff = matching
+                let eff = pairing
+                    .matching
                     .as_ref()
                     .expect("matching initialized")
                     .restricted_to(members);

@@ -101,6 +101,45 @@ impl fmt::Display for PairingStrategy {
     fmt_display_via_name!();
 }
 
+/// How the matching is maintained across rounds under fleet dynamics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PairingMode {
+    /// Keep the standing matching and re-pair only churn-affected clients
+    /// (`repair_matching_pooled` — the default; cheapest, but drifts from
+    /// the from-scratch matching over time).
+    Repair,
+    /// Re-run the full pairing mechanism from scratch every round — the
+    /// reference answer, O(m·k) candidate generation + sort per round.
+    Rebuild,
+    /// Persistent cross-round matcher: candidate lists, edge set and sorted
+    /// edge order survive between rounds; each round costs O(affected).
+    /// Bit-for-bit identical matchings to `rebuild` (DESIGN.md §10).
+    Incremental,
+}
+
+impl PairingMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "repair" => Some(PairingMode::Repair),
+            "rebuild" | "full" => Some(PairingMode::Rebuild),
+            "incremental" | "inc" => Some(PairingMode::Incremental),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PairingMode::Repair => "repair",
+            PairingMode::Rebuild => "rebuild",
+            PairingMode::Incremental => "incremental",
+        }
+    }
+}
+
+impl fmt::Display for PairingMode {
+    fmt_display_via_name!();
+}
+
 /// Which candidate-graph backend feeds the pairing mechanisms.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendMode {
@@ -797,6 +836,10 @@ pub struct ExperimentConfig {
     pub seed: u64,
     pub algorithm: Algorithm,
     pub pairing: PairingStrategy,
+    /// Cross-round matching maintenance: repair the standing matching
+    /// (default), rebuild from scratch each round, or the persistent
+    /// incremental matcher (rebuild-identical output at O(affected) cost).
+    pub pairing_mode: PairingMode,
     /// Candidate-graph backend feeding the pairing mechanisms (dense complete
     /// graph vs sparse grid + frequency-band candidates; `Auto` switches on
     /// fleet size so paper-scale presets stay bit-identical).
@@ -876,6 +919,7 @@ impl Default for ExperimentConfig {
             seed: 17,
             algorithm: Algorithm::FedPairing,
             pairing: PairingStrategy::Greedy,
+            pairing_mode: PairingMode::Repair,
             backend: PairingBackendConfig::default(),
             engine: EngineConfig::default(),
             split: SplitConfig::default(),
@@ -982,6 +1026,14 @@ impl ExperimentConfig {
             if self.pairing == PairingStrategy::Compute && self.backend.k_freq == 0 {
                 bail!("compute pairing on the sparse backend needs k_freq >= 1");
             }
+        }
+        // Rebuild/Incremental maintenance re-runs a *deterministic* weight
+        // objective each round; Random has no edge weights to maintain.
+        if self.pairing == PairingStrategy::Random && self.pairing_mode != PairingMode::Repair {
+            bail!(
+                "pairing_mode {} requires a weight-based pairing strategy (random has none)",
+                self.pairing_mode
+            );
         }
         if self.compute.f_min_ghz <= 0.0 || self.compute.f_max_ghz < self.compute.f_min_ghz {
             bail!(
@@ -1104,6 +1156,7 @@ impl ExperimentConfig {
         o.insert("seed", Json::num(self.seed as f64));
         o.insert("algorithm", Json::str(self.algorithm.name()));
         o.insert("pairing", Json::str(self.pairing.name()));
+        o.insert("pairing_mode", Json::str(self.pairing_mode.name()));
         let mut be = JsonObj::new();
         be.insert("mode", Json::str(self.backend.mode.name()));
         be.insert("k_near", Json::num(self.backend.k_near as f64));
@@ -1244,6 +1297,13 @@ impl ExperimentConfig {
             let s = v.as_str().ok_or_else(|| ConfigError("pairing must be a string".into()))?;
             c.pairing = PairingStrategy::parse(s)
                 .ok_or_else(|| ConfigError(format!("unknown pairing strategy {s:?}")))?;
+        }
+        if let Some(v) = obj.get("pairing_mode") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| ConfigError("pairing_mode must be a string".into()))?;
+            c.pairing_mode = PairingMode::parse(s)
+                .ok_or_else(|| ConfigError(format!("unknown pairing mode {s:?}")))?;
         }
         if let Some(be) = obj.get("backend").and_then(|v| v.as_obj()) {
             if let Some(s) = be.get("mode").and_then(|v| v.as_str()) {

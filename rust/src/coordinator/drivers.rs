@@ -21,9 +21,8 @@ use crate::coordinator::split::train_pair;
 use crate::data::loader::{eval_batches, Batch, Loader};
 use crate::data::partition::partition;
 use crate::data::synth::SynthCifar;
-use crate::fleet::{maintain_matching, universe_size, FleetDynamics};
+use crate::fleet::{maintain_matching_session, universe_size, FleetDynamics, PairingSession};
 use crate::nn::{self, Params};
-use crate::pairing::Matching;
 use crate::runtime::Engine;
 use crate::sim::channel::Channel;
 use crate::sim::compute::{aggregation_weights, split_lengths};
@@ -220,9 +219,10 @@ impl Experiment {
         let cost = planner.as_ref().filter(|_| self.cfg.split.co_design);
         let mut pairing_rng = crate::util::rng::Rng::new(self.cfg.seed ^ 0x9A1F);
         // Initialization phase (paper Sec. II-A.1) happens lazily inside
-        // `maintain_matching` on round 1; churn later repairs the matching
-        // incrementally instead of re-pairing the whole fleet.
-        let mut matching: Option<Matching> = None;
+        // `maintain_matching_session` on round 1; later rounds maintain the
+        // matching per the configured pairing mode (repair/rebuild/
+        // incremental) instead of re-pairing the whole fleet.
+        let mut pairing = PairingSession::new();
         let mut global = self.engine.init_params(self.cfg.seed as u32)?;
         let mut records = Vec::with_capacity(self.cfg.rounds);
         let mut sim_total = 0.0f64;
@@ -237,8 +237,8 @@ impl Experiment {
             let ev = dynamics.step(round);
             let channel = dynamics.channel();
             telemetry.mark("dynamics");
-            maintain_matching(
-                &mut matching,
+            maintain_matching_session(
+                &mut pairing,
                 dynamics,
                 &ev,
                 &channel,
@@ -246,7 +246,8 @@ impl Experiment {
                 cost,
                 &mut pairing_rng,
             );
-            let m = matching.as_ref().expect("matching initialized");
+            telemetry.mark("matcher");
+            let m = pairing.matching.as_ref().expect("matching initialized");
             // Transient failures demote a pair's survivor to solo for this
             // round only; the stored matching is untouched.
             let members = dynamics.present_members();
@@ -736,7 +737,7 @@ impl Experiment {
             .then(|| SplitCostModel::new(profile.clone(), sched, self.cfg.compute, self.cfg.split));
         let cost = planner.as_ref().filter(|_| self.cfg.split.co_design);
         let mut pairing_rng = crate::util::rng::Rng::new(self.cfg.seed ^ 0x9A1F);
-        let mut matching: Option<Matching> = None;
+        let mut pairing = PairingSession::new();
         let cut = match algo {
             Algorithm::VanillaSL => checked_cut("sl_cut_layer", self.cfg.sl_cut_layer, w)?,
             Algorithm::SplitFed => {
@@ -776,8 +777,8 @@ impl Experiment {
             inv.rebuild(dynamics.universe().n(), members);
             let rt = match algo {
                 Algorithm::FedPairing => {
-                    maintain_matching(
-                        &mut matching,
+                    maintain_matching_session(
+                        &mut pairing,
                         dynamics,
                         &ev,
                         &channel,
@@ -785,7 +786,9 @@ impl Experiment {
                         cost,
                         &mut pairing_rng,
                     );
-                    let eff = matching
+                    telemetry.mark("matcher");
+                    let eff = pairing
+                        .matching
                         .as_ref()
                         .expect("matching initialized")
                         .restricted_to(members);

@@ -19,6 +19,7 @@ use crate::sim::compute::sample_frequencies;
 use crate::sim::geometry::{place_uniform_disk, SpatialGrid};
 use crate::sim::latency::Fleet;
 use crate::telemetry::registry::{Counter, Gauge};
+use crate::util::bitset::BitSet;
 use crate::util::rng::Rng;
 
 /// Stream-id salt for all fleet-dynamics randomness.
@@ -63,14 +64,20 @@ pub struct FleetDynamics {
     universe: Fleet,
     /// Unslowed CPU frequencies (straggling is transient).
     base_freqs: Vec<f64>,
-    alive: Vec<bool>,
-    present: Vec<bool>,
+    /// Membership flags as packed bit sets (memory diet: 1 bit per client
+    /// per flag instead of a byte — reads keep the `flags[c]` shape via
+    /// `Index`, mutation goes through `.set()`).
+    alive: BitSet,
+    present: BitSet,
     /// Universe ids participating in the current round (ascending) — the
     /// materialized form of `present`, rebuilt in place each [`Self::step`]
     /// so per-round views borrow instead of re-collecting.
     present_ids: Vec<usize>,
+    /// Universe ids currently alive (ascending) — materialized form of
+    /// `alive`, rebuilt each [`Self::step`].
+    alive_ids: Vec<usize>,
     /// Flash-crowd cohort members that have not joined yet.
-    latent: Vec<bool>,
+    latent: BitSet,
     rng: Rng,
     /// Current global shadowing factor in dB.
     fade_db: f64,
@@ -119,12 +126,10 @@ impl FleetDynamics {
             universe_size(cfg),
             "universe fleet size must equal universe_size(cfg)"
         );
-        let extra = universe.n() - cfg.n_clients;
-        let mut alive = vec![true; cfg.n_clients];
-        alive.extend(std::iter::repeat(false).take(extra));
-        let mut latent = vec![false; cfg.n_clients];
-        latent.extend(std::iter::repeat(true).take(extra));
-        let mut grid = SpatialGrid::new(cfg.area_radius_m, universe.n());
+        let n = universe.n();
+        let alive = BitSet::from_ids(n, 0..cfg.n_clients);
+        let latent = BitSet::from_ids(n, cfg.n_clients..n);
+        let mut grid = SpatialGrid::new(cfg.area_radius_m, n);
         for c in 0..cfg.n_clients {
             grid.insert(c, universe.positions[c]);
         }
@@ -135,6 +140,7 @@ impl FleetDynamics {
             base_freqs: universe.freqs_hz.clone(),
             present: alive.clone(),
             present_ids: (0..cfg.n_clients).collect(),
+            alive_ids: (0..cfg.n_clients).collect(),
             universe,
             alive,
             latent,
@@ -162,8 +168,8 @@ impl FleetDynamics {
         if sc.flash_round > 0 && round == sc.flash_round {
             for c in 0..n {
                 if self.latent[c] {
-                    self.latent[c] = false;
-                    self.alive[c] = true;
+                    self.latent.remove(c);
+                    self.alive.insert(c);
                     self.grid.insert(c, self.universe.positions[c]);
                     ev.joined.push(c);
                 }
@@ -173,7 +179,7 @@ impl FleetDynamics {
         if sc.p_rejoin > 0.0 {
             for c in 0..n {
                 if !self.alive[c] && !self.latent[c] && self.rng.f64() < sc.p_rejoin {
-                    self.alive[c] = true;
+                    self.alive.insert(c);
                     self.grid.insert(c, self.universe.positions[c]);
                     ev.joined.push(c);
                 }
@@ -181,10 +187,10 @@ impl FleetDynamics {
         }
         // 3. Durable departures (the fleet never empties entirely).
         if sc.p_depart > 0.0 {
-            let mut alive_count = self.alive.iter().filter(|&&a| a).count();
+            let mut alive_count = self.alive.count();
             for c in 0..n {
                 if self.alive[c] && alive_count > 1 && self.rng.f64() < sc.p_depart {
-                    self.alive[c] = false;
+                    self.alive.remove(c);
                     self.grid.remove(c);
                     alive_count -= 1;
                     ev.departed.push(c);
@@ -200,16 +206,17 @@ impl FleetDynamics {
         };
         let p_out = (sc.p_transient + p_sleep).min(1.0);
         for c in 0..n {
-            self.present[c] = self.alive[c];
-            if self.alive[c] && p_out > 0.0 && self.rng.f64() < p_out {
-                self.present[c] = false;
+            let mut p = self.alive[c];
+            if p && p_out > 0.0 && self.rng.f64() < p_out {
+                p = false;
                 ev.transient_out.push(c);
             }
+            self.present.set(c, p);
         }
         // Guard: a round always has at least one participant.
-        if !self.present.iter().any(|&p| p) {
-            if let Some(first) = (0..n).find(|&c| self.alive[c]) {
-                self.present[first] = true;
+        if self.present.is_clear() {
+            if let Some(first) = self.alive.iter().next() {
+                self.present.insert(first);
                 ev.transient_out.retain(|&c| c != first);
             }
         }
@@ -254,11 +261,12 @@ impl FleetDynamics {
             0.0
         };
         ev.shadowing_db = self.fade_db;
-        // 8. Materialize this round's participant list in place (no
-        //    per-round allocation after warmup).
+        // 8. Materialize this round's participant and alive lists in place
+        //    (no per-round allocation after warmup).
         self.present_ids.clear();
-        self.present_ids
-            .extend((0..n).filter(|&c| self.present[c]));
+        self.present_ids.extend(self.present.iter());
+        self.alive_ids.clear();
+        self.alive_ids.extend(self.alive.iter());
         ev.n_alive = self.present_ids.len();
         crate::tm_gauge!(Gauge::FleetAlive, ev.n_alive as u64);
         ev
@@ -272,7 +280,18 @@ impl FleetDynamics {
 
     /// Universe ids of clients currently alive (matching membership).
     pub fn alive_indices(&self) -> Vec<usize> {
-        (0..self.universe.n()).filter(|&c| self.alive[c]).collect()
+        self.alive_ids.clone()
+    }
+
+    /// Borrowed form of [`Self::alive_indices`] (ascending; rebuilt each
+    /// [`Self::step`]) — the zero-allocation input to matching maintenance.
+    pub fn alive_members(&self) -> &[usize] {
+        &self.alive_ids
+    }
+
+    /// Packed membership bits of the alive set (capacity = universe size).
+    pub fn alive_set(&self) -> &BitSet {
+        &self.alive
     }
 
     /// The incrementally-maintained spatial index over the alive clients
@@ -471,7 +490,7 @@ mod tests {
                 let p = d.universe().positions[c];
                 let mut found = false;
                 let (cx, cy) = d.grid().cell_xy(&p);
-                d.grid().for_ring(cx, cy, 0, |cell| found = cell.contains(&c));
+                d.grid().for_ring(cx, cy, 0, |cell| found = cell.contains(&(c as u32)));
                 assert!(found, "round {round}: client {c} not in its cell");
             }
         }

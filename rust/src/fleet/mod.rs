@@ -16,13 +16,18 @@
 //!   [`crate::coordinator::RunResult`] from the latency simulator alone
 //!   (round times + per-round alive counts, no model training), used by the
 //!   `fedpairing churn` CLI, `examples/churn_fleet.rs` and the benches.
-//! * [`maintain_matching`] — the shared create-or-repair step both the
-//!   training drivers and the sim driver call each round: initial pairing via
-//!   the configured strategy, then *incremental* repair
-//!   ([`crate::pairing::repair_matching`]) when churn hits, logged at INFO.
-//!   At fleet scale (sparse backend) the initial pairing reads candidates
-//!   straight off [`FleetDynamics`]' incrementally-maintained spatial grid
-//!   and repair pools re-match against grid-local candidates only, so a
+//! * [`PairingSession`] / [`maintain_matching_session`] — the cross-round
+//!   pairing state the drivers own and the mode-aware create-or-maintain
+//!   step they call each round, dispatching on
+//!   [`PairingMode`](crate::config::PairingMode): `repair` (churn-pool
+//!   repair plus a cross-round pool memo), `rebuild` (full sparse-graph
+//!   re-pairing every round — the reference), and `incremental` (the
+//!   persistent [`IncrementalMatcher`], bit-for-bit the rebuild matching at
+//!   O(affected) cost). [`maintain_matching`] keeps the historical
+//!   memo-free repair behavior for callers without a session. At fleet
+//!   scale (sparse backend) the initial pairing reads candidates straight
+//!   off [`FleetDynamics`]' incrementally-maintained spatial grid and
+//!   repair pools re-match against grid-local candidates only, so a
 //!   100k-client churn round never materializes O(n²) edges.
 //!
 //! Scenario presets (`stable`, `diurnal`, `flash-crowd`, `lossy-radio`,
@@ -35,14 +40,15 @@ pub mod sim_driver;
 pub use dynamics::{universe_size, FleetDynamics, RoundEvents};
 pub use sim_driver::{simulate_scenario, ScenarioRun};
 
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, PairingMode};
 use crate::log_info;
 use crate::pairing::{
-    dense_pool_matching, match_candidates, pair_members_with, repair_matching_pooled,
-    EdgeWeightSpec, Matching, SparseCandidateGraph,
+    dense_pool_matching, match_candidates, pair_members_with, repair_matching_pooled_memo,
+    EdgeWeightSpec, IncrementalMatcher, Matching, RepairMemo, SparseCandidateGraph,
 };
 use crate::sim::channel::Channel;
 use crate::split::SplitCostModel;
+use crate::util::pool::FixedPool;
 use crate::util::rng::{splitmix64, Rng};
 
 /// Repair pools at most this large are matched densely (O(pool²) edges —
@@ -50,6 +56,143 @@ use crate::util::rng::{splitmix64, Rng};
 /// pools (metro-scale churn, flash cohorts) go through the sparse
 /// candidate-graph with grid-local candidates only.
 const DENSE_POOL_MAX: usize = 64;
+
+/// Cross-round pairing state a driver owns for the length of a run: the
+/// standing matching plus whatever the configured
+/// [`PairingMode`](crate::config::PairingMode) keeps alive between rounds —
+/// the persistent [`IncrementalMatcher`] (incremental mode) and the repair
+/// pool memo (repair mode).
+#[derive(Default)]
+pub struct PairingSession {
+    /// The standing matching (`None` until the first round pairs).
+    pub matching: Option<Matching>,
+    matcher: Option<IncrementalMatcher>,
+    memo: RepairMemo,
+}
+
+impl PairingSession {
+    pub fn new() -> PairingSession {
+        PairingSession::default()
+    }
+
+    /// Churn rounds the repair-pool memo served from cache (repair mode).
+    pub fn memo_hits(&self) -> u64 {
+        self.memo.hits
+    }
+
+    /// Full bucket-queue solves the incremental matcher ran (incremental
+    /// mode) — update epochs minus cached-matching short-circuits.
+    pub fn matcher_solves(&self) -> u64 {
+        self.matcher.as_ref().map_or(0, |m| m.solves)
+    }
+}
+
+/// Mode-aware create-or-maintain step — dispatches on
+/// [`ExperimentConfig::pairing_mode`]:
+///
+/// * `repair` — [`maintain_matching`]'s churn-pool path, plus the session's
+///   cross-round memo: a pool the session already matched under an
+///   identical weight fingerprint is replayed instead of re-solved.
+/// * `rebuild` — re-runs the full sparse candidate-graph pairing every
+///   round. The reference the incremental matcher is measured against.
+/// * `incremental` — advances the persistent [`IncrementalMatcher`]:
+///   bit-for-bit the rebuild matching, at O(affected edges) cost.
+///
+/// `rebuild`/`incremental` pin the sparse candidate-graph semantics at any
+/// fleet size (the dense/sparse backend split applies to repair mode only),
+/// so the two modes stay mutually bit-identical and comparable. Random
+/// pairing has no weight objective to rebuild against — config validation
+/// rejects it outside repair mode and this function routes it to repair
+/// defensively.
+///
+/// Returns `true` when the matching changed.
+pub fn maintain_matching_session(
+    session: &mut PairingSession,
+    dynamics: &FleetDynamics,
+    ev: &RoundEvents,
+    channel: &Channel,
+    cfg: &ExperimentConfig,
+    cost: Option<&SplitCostModel>,
+    pairing_rng: &mut Rng,
+) -> bool {
+    let spec = EdgeWeightSpec::for_strategy_with(cfg.pairing, cfg.alpha, cfg.beta, cost);
+    match (cfg.pairing_mode, spec) {
+        (PairingMode::Rebuild, Some(spec)) => {
+            let alive = dynamics.alive_indices();
+            let g = SparseCandidateGraph::over_members_pooled(
+                dynamics.universe(),
+                channel,
+                dynamics.grid(),
+                &alive,
+                spec,
+                cfg.backend.k_near,
+                cfg.backend.k_freq,
+                &FixedPool::new(cfg.engine.threads),
+            );
+            adopt(session, ev, cfg, "rebuild", match_candidates(&g, &alive))
+        }
+        (PairingMode::Incremental, Some(spec)) => {
+            let alive = dynamics.alive_indices();
+            let matcher = session.matcher.get_or_insert_with(|| {
+                IncrementalMatcher::new(
+                    dynamics.universe().n(),
+                    cfg.backend.k_near,
+                    cfg.backend.k_freq,
+                )
+            });
+            let m = matcher
+                .update(
+                    dynamics.universe(),
+                    channel,
+                    dynamics.grid(),
+                    &alive,
+                    &spec,
+                    &FixedPool::new(cfg.engine.threads),
+                )
+                .clone();
+            adopt(session, ev, cfg, "incremental", m)
+        }
+        _ => repair_step(
+            &mut session.matching,
+            &mut session.memo,
+            dynamics,
+            ev,
+            channel,
+            cfg,
+            cost,
+            pairing_rng,
+        ),
+    }
+}
+
+/// Install a freshly computed full matching and report whether it changed.
+fn adopt(
+    session: &mut PairingSession,
+    ev: &RoundEvents,
+    cfg: &ExperimentConfig,
+    mode: &str,
+    m: Matching,
+) -> bool {
+    let changed = session.matching.as_ref() != Some(&m);
+    if session.matching.is_none() {
+        log_info!(
+            "round {}: initial pairing via {} ({mode} mode) — {} pair(s), {} solo",
+            ev.round,
+            cfg.pairing,
+            m.pairs.len(),
+            m.solos.len()
+        );
+    } else if changed {
+        log_info!(
+            "round {}: {mode} re-pair — {} pair(s), {} solo",
+            ev.round,
+            m.pairs.len(),
+            m.solos.len()
+        );
+    }
+    session.matching = Some(m);
+    changed
+}
 
 /// Create or incrementally repair the FedPairing matching for this round.
 ///
@@ -69,8 +212,38 @@ const DENSE_POOL_MAX: usize = 64;
 /// pairing (initial *and* repairs) optimizes the planner's predicted pair
 /// latency instead of the eq. (5) proxy — the pairing/splitting co-design
 /// of DESIGN.md §7.
+///
+/// This is the repair-mode step with a throwaway memo (a fresh memo never
+/// hits), so behavior is bit-identical to the historical function
+/// regardless of `cfg.pairing_mode`. Mode-aware drivers own a
+/// [`PairingSession`] and call [`maintain_matching_session`] instead.
 pub fn maintain_matching(
     matching: &mut Option<Matching>,
+    dynamics: &FleetDynamics,
+    ev: &RoundEvents,
+    channel: &Channel,
+    cfg: &ExperimentConfig,
+    cost: Option<&SplitCostModel>,
+    pairing_rng: &mut Rng,
+) -> bool {
+    repair_step(
+        matching,
+        &mut RepairMemo::default(),
+        dynamics,
+        ev,
+        channel,
+        cfg,
+        cost,
+        pairing_rng,
+    )
+}
+
+/// The repair-mode round step: initial pairing via the configured strategy,
+/// then churn-pool repair through the cross-round memo.
+#[allow(clippy::too_many_arguments)]
+fn repair_step(
+    matching: &mut Option<Matching>,
+    memo: &mut RepairMemo,
     dynamics: &FleetDynamics,
     ev: &RoundEvents,
     channel: &Channel,
@@ -145,6 +318,35 @@ pub fn maintain_matching(
             // All objective formulas live in EdgeWeightSpec::weight; only
             // Random needs its own deterministic per-round pseudo-weight.
             let nonce = pairing_rng.next_u64();
+            // Weight fingerprint for the pool memo: the channel-config bits
+            // (the per-round shadowing fade is folded into `ref_gain`), the
+            // round number whenever a scenario process moves positions or
+            // frequencies between rounds (mobility, stragglers), and
+            // Random's per-repair nonce. An identical stamp over an
+            // identical pool replays identical weights, so the cached pool
+            // matching is exact — repeated flap churn under a stable
+            // channel repairs for free.
+            let c = channel.config();
+            let mut stamp = 0u64;
+            for bits in [
+                c.bandwidth_hz.to_bits(),
+                c.tx_power_w.to_bits(),
+                c.noise_w.to_bits(),
+                c.ref_gain.to_bits(),
+                c.ref_dist_m.to_bits(),
+                c.pathloss_exp.to_bits(),
+            ] {
+                stamp ^= bits;
+                splitmix64(&mut stamp);
+            }
+            if cfg.scenario.mobility_m > 0.0 || cfg.scenario.p_straggle > 0.0 {
+                stamp ^= ev.round as u64;
+                splitmix64(&mut stamp);
+            }
+            if spec.is_none() {
+                stamp ^= nonce;
+                splitmix64(&mut stamp);
+            }
             let weight: Box<dyn Fn(usize, usize) -> f64 + '_> = match spec {
                 Some(spec) => Box::new(move |a, b| spec.weight(uni, channel, a, b)),
                 None => Box::new(move |a, b| {
@@ -152,7 +354,7 @@ pub fn maintain_matching(
                     splitmix64(&mut s) as f64
                 }),
             };
-            let rep = repair_matching_pooled(m, &alive, |pool| match spec {
+            let rep = repair_matching_pooled_memo(m, &alive, stamp, memo, |pool| match spec {
                 // Metro-scale pool: grid-local candidates within the pool
                 // only, weights evaluated lazily — never O(pool²).
                 Some(spec) if sparse && pool.len() > DENSE_POOL_MAX => {
@@ -269,6 +471,74 @@ mod tests {
                 "round {round}: {m:?}"
             );
         }
+    }
+
+    #[test]
+    fn session_repair_replays_legacy_maintain() {
+        // The session's repair arm (with its live cross-round memo) must be
+        // bit-identical to the historical memo-free function — a memo hit
+        // that changed the result would be a correctness bug, not a cache.
+        let mut cfg = ExperimentConfig::default();
+        cfg.n_clients = 60;
+        cfg.samples_per_client = 64;
+        cfg.scenario = ScenarioConfig::preset(ScenarioKind::FlashCrowd);
+        cfg.scenario.p_depart = 0.2;
+        cfg.scenario.p_rejoin = 0.4;
+        let mut d1 = FleetDynamics::new(&cfg, Fleet::sample(&cfg, &mut Rng::new(cfg.seed)));
+        let mut d2 = FleetDynamics::new(&cfg, Fleet::sample(&cfg, &mut Rng::new(cfg.seed)));
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        let mut legacy: Option<Matching> = None;
+        let mut session = PairingSession::new();
+        for round in 1..=25 {
+            let e1 = d1.step(round);
+            let e2 = d2.step(round);
+            assert_eq!(e1, e2);
+            let ch1 = d1.channel();
+            let ch2 = d2.channel();
+            let c1 = maintain_matching(&mut legacy, &d1, &e1, &ch1, &cfg, None, &mut r1);
+            let c2 =
+                maintain_matching_session(&mut session, &d2, &e2, &ch2, &cfg, None, &mut r2);
+            assert_eq!(c1, c2, "round {round}: changed flags diverge");
+            assert_eq!(legacy, session.matching, "round {round}: matchings diverge");
+        }
+    }
+
+    #[test]
+    fn incremental_mode_matches_rebuild_mode() {
+        // The headline contract: the persistent matcher's output is
+        // bit-for-bit the full rebuild's, across churn + mobility + fading.
+        let mut cfg = ExperimentConfig::default();
+        cfg.n_clients = 120;
+        cfg.samples_per_client = 64;
+        cfg.scenario = ScenarioConfig::preset(ScenarioKind::LossyRadio);
+        cfg.scenario.p_depart = 0.25;
+        cfg.scenario.p_rejoin = 0.4;
+        cfg.scenario.mobility_m = 4.0;
+        let mut reb_cfg = cfg.clone();
+        reb_cfg.pairing_mode = PairingMode::Rebuild;
+        let mut inc_cfg = cfg.clone();
+        inc_cfg.pairing_mode = PairingMode::Incremental;
+        let mut d1 = FleetDynamics::new(&cfg, Fleet::sample(&cfg, &mut Rng::new(cfg.seed)));
+        let mut d2 = FleetDynamics::new(&cfg, Fleet::sample(&cfg, &mut Rng::new(cfg.seed)));
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let mut s1 = PairingSession::new();
+        let mut s2 = PairingSession::new();
+        for round in 1..=15 {
+            let e1 = d1.step(round);
+            let e2 = d2.step(round);
+            assert_eq!(e1, e2);
+            let ch1 = d1.channel();
+            let ch2 = d2.channel();
+            let c1 = maintain_matching_session(&mut s1, &d1, &e1, &ch1, &reb_cfg, None, &mut r1);
+            let c2 = maintain_matching_session(&mut s2, &d2, &e2, &ch2, &inc_cfg, None, &mut r2);
+            assert_eq!(c1, c2, "round {round}: changed flags diverge");
+            assert_eq!(s1.matching, s2.matching, "round {round}: matchings diverge");
+            let m = s2.matching.as_ref().unwrap();
+            assert!(m.is_valid_over(&d2.alive_indices()), "round {round}: {m:?}");
+        }
+        assert!(s2.matcher_solves() > 0, "matcher never solved");
     }
 
     #[test]

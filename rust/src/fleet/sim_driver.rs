@@ -10,11 +10,10 @@
 //! real training path.
 
 use super::dynamics::{FleetDynamics, RoundEvents};
-use super::maintain_matching;
+use super::{maintain_matching_session, PairingSession};
 use crate::asyncsim::AggregationEvent;
 use crate::config::{AggregationMode, Algorithm, ConfigError, ExperimentConfig, SplitPolicy};
 use crate::coordinator::metrics::{streamer_for, RoundRecord, RunResult};
-use crate::pairing::Matching;
 use crate::sim::engine::RoundEngine;
 use crate::sim::latency::{Fleet, FleetView, Schedule};
 use crate::sim::profile::ModelProfile;
@@ -75,7 +74,7 @@ pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigEr
     let cost = (cfg.split.policy != SplitPolicy::Paper && cfg.split.co_design)
         .then(|| SplitCostModel::new(profile.clone(), sched, cfg.compute, cfg.split));
     let mut pairing_rng = Rng::new(cfg.seed ^ 0x9A1F);
-    let mut matching: Option<Matching> = None;
+    let mut pairing = PairingSession::new();
     let mut records = Vec::with_capacity(cfg.rounds);
     let mut trace = Vec::with_capacity(cfg.rounds);
     let mut repaired_rounds = 0usize;
@@ -99,9 +98,9 @@ pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigEr
         let members = dynamics.present_members();
         let mut rt = match cfg.algorithm {
             Algorithm::FedPairing => {
-                let had_matching = matching.is_some();
-                let changed = maintain_matching(
-                    &mut matching,
+                let had_matching = pairing.matching.is_some();
+                let changed = maintain_matching_session(
+                    &mut pairing,
                     &dynamics,
                     &ev,
                     &channel,
@@ -109,11 +108,13 @@ pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigEr
                     cost.as_ref(),
                     &mut pairing_rng,
                 );
+                telemetry.mark("matcher");
                 if had_matching && changed {
                     repaired_rounds += 1;
                 }
                 let view = FleetView::new(dynamics.universe(), members);
-                let eff = matching
+                let eff = pairing
+                    .matching
                     .as_ref()
                     .expect("matching initialized")
                     .restricted_to(members);

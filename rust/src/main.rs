@@ -15,7 +15,7 @@
 use fedpairing::cli::{CliError, Command, Parsed};
 use fedpairing::config::{
     AggregationMode, Algorithm, BackendMode, DataDistribution, ExperimentConfig, ModelPreset,
-    PairingStrategy, RoundBackend, ScenarioConfig, SplitPolicy, StalenessWeighting,
+    PairingMode, PairingStrategy, RoundBackend, ScenarioConfig, SplitPolicy, StalenessWeighting,
 };
 use fedpairing::coordinator::run_experiment;
 use fedpairing::fleet::simulate_scenario;
@@ -37,6 +37,7 @@ fn cli() -> Command {
                 .flag("config", None, Some("FILE"), "JSON config file (overrides preset)", None)
                 .flag("algorithm", Some('a'), Some("ALGO"), "fedpairing|fl|sl|splitfed", None)
                 .flag("pairing", Some('p'), Some("STRAT"), "greedy|random|location|compute|exact", None)
+                .flag("pairing-mode", None, Some("MODE"), "cross-round matching maintenance: repair|rebuild|incremental", None)
                 .flag("backend", None, Some("MODE"), "pairing candidate backend: auto|dense|sparse", None)
                 .flag("rounds", Some('r'), Some("N"), "communication rounds", None)
                 .flag("clients", Some('n'), Some("N"), "fleet size", None)
@@ -64,6 +65,7 @@ fn cli() -> Command {
                 .flag("scenario", None, Some("NAME"), "stable|diurnal|flash-crowd|lossy-radio|metro-scale", Some("flash-crowd"))
                 .flag("algorithm", Some('a'), Some("ALGO"), "fedpairing|fl|sl|splitfed", Some("fedpairing"))
                 .flag("pairing", Some('p'), Some("STRAT"), "greedy|random|location|compute|exact", Some("greedy"))
+                .flag("pairing-mode", None, Some("MODE"), "cross-round matching maintenance: repair|rebuild|incremental", Some("repair"))
                 .flag("backend", None, Some("MODE"), "pairing candidate backend: auto|dense|sparse", Some("auto"))
                 .flag("clients", Some('n'), Some("N"), "fleet size", Some("20"))
                 .flag("n-clients", None, Some("N"), "fleet size (alias of --clients)", None)
@@ -222,6 +224,10 @@ fn cmd_run(p: &Parsed) -> anyhow::Result<()> {
         cfg.pairing =
             PairingStrategy::parse(s).ok_or_else(|| anyhow::anyhow!("unknown strategy {s:?}"))?;
     }
+    if let Some(m) = p.get("pairing-mode") {
+        cfg.pairing_mode =
+            PairingMode::parse(m).ok_or_else(|| anyhow::anyhow!("unknown pairing mode {m:?}"))?;
+    }
     if let Some(b) = p.get("backend") {
         cfg.backend.mode =
             BackendMode::parse(b).ok_or_else(|| anyhow::anyhow!("unknown backend {b:?}"))?;
@@ -299,6 +305,10 @@ fn cmd_churn(p: &Parsed) -> anyhow::Result<()> {
     if let Some(s) = p.get("pairing") {
         cfg.pairing =
             PairingStrategy::parse(s).ok_or_else(|| anyhow::anyhow!("unknown strategy {s:?}"))?;
+    }
+    if let Some(m) = p.get("pairing-mode") {
+        cfg.pairing_mode =
+            PairingMode::parse(m).ok_or_else(|| anyhow::anyhow!("unknown pairing mode {m:?}"))?;
     }
     if let Some(b) = p.get("backend") {
         cfg.backend.mode =

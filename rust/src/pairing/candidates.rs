@@ -33,11 +33,20 @@ use crate::sim::geometry::SpatialGrid;
 use crate::sim::latency::Fleet;
 use crate::split::SplitCostModel;
 use crate::telemetry::registry::Counter;
+use crate::util::bitset::BitSet;
+use crate::util::pool::FixedPool;
 
 /// Per-client cap on grid cells scanned while hunting for `k_near`
 /// candidates — bounds the ring walk when members are sparse in the grid
 /// (e.g. a small repair pool spread over a metro-scale disk).
 const MAX_SCAN_CELLS: usize = 4096;
+
+/// Members per parallel candidate-generation chunk. The chunk decomposition
+/// is **fixed-size**, not split per worker: `FixedPool::map` over chunk
+/// *indices* concatenates identical output at any `--threads`, which is what
+/// keeps the candidate list (and everything downstream) bit-identical across
+/// thread counts.
+const GEN_CHUNK: usize = 4096;
 
 /// Which edge weight a sparse graph evaluates — eq. (5) for the paper's
 /// mechanism, one of its degenerate baseline forms (Table I), or the split
@@ -129,13 +138,49 @@ impl<'a> EdgeWeightSpec<'a> {
     }
 
     /// Does this weight benefit from geometric (grid) candidates?
-    fn uses_grid(&self) -> bool {
+    pub(crate) fn uses_grid(&self) -> bool {
         !matches!(self, EdgeWeightSpec::FreqGap)
     }
 
     /// Does this weight benefit from frequency-band candidates?
-    fn uses_freq_band(&self) -> bool {
+    pub(crate) fn uses_freq_band(&self) -> bool {
         !matches!(self, EdgeWeightSpec::NegDistance)
+    }
+
+    /// The `Sync` value-only core of this spec, if it has one. `SplitCost`
+    /// returns `None`: its planner memoizes through a `RefCell`, so its
+    /// weights must be evaluated on one thread.
+    pub(crate) fn pure(&self) -> Option<PureSpec> {
+        match *self {
+            EdgeWeightSpec::Eq5 { alpha, beta } => Some(PureSpec::Eq5 { alpha, beta }),
+            EdgeWeightSpec::NegDistance => Some(PureSpec::NegDistance),
+            EdgeWeightSpec::FreqGap => Some(PureSpec::FreqGap),
+            EdgeWeightSpec::SplitCost(_) => None,
+        }
+    }
+}
+
+/// Reference-free mirror of the non-`SplitCost` [`EdgeWeightSpec`] variants.
+/// `EdgeWeightSpec` as a *type* is never `Sync` (the `SplitCost` variant
+/// holds a `&SplitCostModel` whose memo is a `RefCell`), so parallel weight
+/// evaluation captures this value type instead and rebuilds the spec inside
+/// each worker.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum PureSpec {
+    Eq5 { alpha: f64, beta: f64 },
+    NegDistance,
+    FreqGap,
+}
+
+impl PureSpec {
+    #[inline]
+    pub(crate) fn weight(self, fleet: &Fleet, channel: &Channel, a: usize, b: usize) -> f64 {
+        let spec = match self {
+            PureSpec::Eq5 { alpha, beta } => EdgeWeightSpec::Eq5 { alpha, beta },
+            PureSpec::NegDistance => EdgeWeightSpec::NegDistance,
+            PureSpec::FreqGap => EdgeWeightSpec::FreqGap,
+        };
+        spec.weight(fleet, channel, a, b)
     }
 }
 
@@ -199,74 +244,103 @@ impl<'a> SparseCandidateGraph<'a> {
         k_near: usize,
         k_freq: usize,
     ) -> SparseCandidateGraph<'a> {
+        Self::over_members_pooled(
+            fleet,
+            channel,
+            grid,
+            members,
+            spec,
+            k_near,
+            k_freq,
+            &FixedPool::serial(),
+        )
+    }
+
+    /// [`Self::over_members`] with candidate generation (ring walks + band
+    /// walks) and weight evaluation fanned out over `pool` in fixed-size
+    /// member chunks. Output is bit-identical to the serial path at any
+    /// thread count: chunks are index-ordered and concatenated before the
+    /// global sort+dedup, and each edge's weight is a pure function of the
+    /// edge. `SplitCost` weights are evaluated serially (the planner's memo
+    /// is single-threaded), but its candidate walks still parallelize.
+    #[allow(clippy::too_many_arguments)]
+    pub fn over_members_pooled(
+        fleet: &'a Fleet,
+        channel: &'a Channel,
+        grid: &SpatialGrid,
+        members: &[usize],
+        spec: EdgeWeightSpec<'a>,
+        k_near: usize,
+        k_freq: usize,
+        pool: &FixedPool,
+    ) -> SparseCandidateGraph<'a> {
         let n = fleet.n();
+        debug_assert!(n <= u32::MAX as usize);
         let m = members.len();
-        let mut in_members = vec![false; n];
-        for &c in members {
-            in_members[c] = true;
-        }
+        let in_members = BitSet::from_ids(n, members.iter().copied());
         // Frequency ordering over the members (ties broken by id so the
         // candidate sets are deterministic).
-        let mut by_freq: Vec<usize> = members.to_vec();
-        by_freq.sort_by(|&a, &b| {
-            fleet.freqs_hz[a]
-                .partial_cmp(&fleet.freqs_hz[b])
-                .unwrap()
-                .then(a.cmp(&b))
-        });
-        let mut rank = vec![usize::MAX; n];
+        let by_freq = freq_order(fleet, members);
+        let mut rank = vec![u32::MAX; n];
         for (r, &c) in by_freq.iter().enumerate() {
-            rank[c] = r;
+            rank[c as usize] = r as u32;
         }
-        let mut cand: Vec<(usize, usize)> = Vec::with_capacity(m * (k_near + k_freq));
-        for &i in members {
-            if spec.uses_grid() && k_near > 0 {
-                for j in nearest_in_grid(grid, fleet, &in_members, i, k_near) {
-                    cand.push((i.min(j), i.max(j)));
-                }
-            }
-            if spec.uses_freq_band() && k_freq > 0 && m > 1 {
-                // Complementary band: partners around the *mirrored* rank
-                // m−1−r, so every client — not just the global extremes —
-                // sees a large |Δf| candidate (rank r pairing with rank
-                // m−1−r is the |Δf|-maximizing matching of the sorted
-                // list). Expanding around one shared extreme instead would
-                // give all edges to ~2·k_freq hub clients and starve the
-                // rest of the fleet of α-term candidates.
-                let r = rank[i];
-                let mirror = m - 1 - r;
-                let mut taken = 0;
-                let mut step = 0usize;
-                while taken < k_freq && step < 2 * m {
-                    // ranks mirror, mirror−1, mirror+1, mirror−2, …
-                    let delta = (step + 1) / 2;
-                    let cr = if step % 2 == 0 {
-                        mirror.checked_add(delta)
-                    } else {
-                        mirror.checked_sub(delta)
-                    };
-                    step += 1;
-                    match cr {
-                        Some(cr) if cr < m && cr != r => {
-                            let j = by_freq[cr];
-                            cand.push((i.min(j), i.max(j)));
-                            taken += 1;
-                        }
-                        _ => {}
+        // `spec` itself is not Sync (see PureSpec); the generation workers
+        // only need these two flags from it.
+        let use_grid = spec.uses_grid() && k_near > 0;
+        let use_band = spec.uses_freq_band() && k_freq > 0 && m > 1;
+        let gen_chunk = |ci: usize| -> Vec<(u32, u32)> {
+            let lo = ci * GEN_CHUNK;
+            let hi = (lo + GEN_CHUNK).min(m);
+            let mut out: Vec<(u32, u32)> = Vec::with_capacity((hi - lo) * (k_near + k_freq));
+            for &i in &members[lo..hi] {
+                let iu = i as u32;
+                if use_grid {
+                    for &j in &knn_scan(grid, fleet, &in_members, i, k_near).partners {
+                        out.push((iu.min(j), iu.max(j)));
                     }
                 }
+                if use_band {
+                    freq_band_partners(&by_freq, rank[i] as usize, k_freq, |j| {
+                        out.push((iu.min(j), iu.max(j)));
+                    });
+                }
             }
-        }
+            out
+        };
+        let mut cand: Vec<(u32, u32)> = pool
+            .map(m.div_ceil(GEN_CHUNK), gen_chunk)
+            .into_iter()
+            .flatten()
+            .collect();
         cand.sort_unstable();
         cand.dedup();
-        let edges: Vec<Edge> = cand
-            .into_iter()
-            .map(|(i, j)| Edge {
-                i,
-                j,
-                weight: spec.weight(fleet, channel, i, j),
-            })
-            .collect();
+        let edges: Vec<Edge> = match spec.pure() {
+            Some(pure) if cand.len() > GEN_CHUNK => pool
+                .map(cand.len().div_ceil(GEN_CHUNK), |ci| {
+                    let lo = ci * GEN_CHUNK;
+                    let hi = (lo + GEN_CHUNK).min(cand.len());
+                    cand[lo..hi]
+                        .iter()
+                        .map(|&(i, j)| Edge {
+                            i: i as usize,
+                            j: j as usize,
+                            weight: pure.weight(fleet, channel, i as usize, j as usize),
+                        })
+                        .collect::<Vec<Edge>>()
+                })
+                .into_iter()
+                .flatten()
+                .collect(),
+            _ => cand
+                .into_iter()
+                .map(|(i, j)| Edge {
+                    i: i as usize,
+                    j: j as usize,
+                    weight: spec.weight(fleet, channel, i as usize, j as usize),
+                })
+                .collect(),
+        };
         crate::tm_count!(Counter::CandidateEdges, edges.len() as u64);
         SparseCandidateGraph {
             fleet,
@@ -297,6 +371,68 @@ impl CandidateGraph for SparseCandidateGraph<'_> {
     }
 }
 
+/// Frequency ordering over `members`: ascending `(freq, id)` — the shared
+/// rank axis of the band candidates (`total_cmp`: no NaN panic path).
+pub(crate) fn freq_order(fleet: &Fleet, members: &[usize]) -> Vec<u32> {
+    let mut by_freq: Vec<u32> = members.iter().map(|&c| c as u32).collect();
+    by_freq.sort_by(|&a, &b| {
+        fleet.freqs_hz[a as usize]
+            .total_cmp(&fleet.freqs_hz[b as usize])
+            .then(a.cmp(&b))
+    });
+    by_freq
+}
+
+/// Mirrored-rank frequency-band walk for the member at rank `r`:
+/// partners around rank `m−1−r`, so every client — not just the global
+/// extremes — sees a large |Δf| candidate (rank `r` pairing with rank
+/// `m−1−r` is the |Δf|-maximizing matching of the sorted list). Expanding
+/// around one shared extreme instead would give all edges to ~2·k_freq hub
+/// clients and starve the rest of the fleet of α-term candidates.
+///
+/// One implementation shared by the batch generator and the incremental
+/// matcher — the bit-for-bit equivalence property leans on there being
+/// exactly one definition of this walk.
+pub(crate) fn freq_band_partners(
+    by_freq: &[u32],
+    r: usize,
+    k_freq: usize,
+    mut push: impl FnMut(u32),
+) {
+    let m = by_freq.len();
+    let mirror = m - 1 - r;
+    let mut taken = 0;
+    let mut step = 0usize;
+    while taken < k_freq && step < 2 * m {
+        // ranks mirror, mirror−1, mirror+1, mirror−2, …
+        let delta = (step + 1) / 2;
+        let cr = if step % 2 == 0 {
+            mirror.checked_add(delta)
+        } else {
+            mirror.checked_sub(delta)
+        };
+        step += 1;
+        match cr {
+            Some(cr) if cr < m && cr != r => {
+                push(by_freq[cr]);
+                taken += 1;
+            }
+            _ => {}
+        }
+    }
+}
+
+/// One ring-walk kNN scan (see [`knn_scan`]).
+pub(crate) struct KnnScan {
+    /// The `k` nearest members, ascending `(distance, id)`.
+    pub partners: Vec<u32>,
+    /// Last ring index the walk visited. Membership changes in rings
+    /// ≤ `reach + 1` of the scan's center can change `partners`; anything
+    /// farther is strictly beyond the k-th distance bound and cannot — the
+    /// incremental matcher's invalidation radius.
+    pub reach: u16,
+}
+
 /// `k` nearest members to `i`, by expanding grid rings, then keeping the `k`
 /// closest by exact distance. The walk stops only once the current k-th-best
 /// distance rules out everything unscanned: after ring `R`, any client in
@@ -304,35 +440,37 @@ impl CandidateGraph for SparseCandidateGraph<'_> {
 /// no nearer client remains (merely "one ring past the ring that satisfied
 /// `k`" is not enough — a diagonal find can be farther than a straight-line
 /// client two rings out).
-fn nearest_in_grid(
+pub(crate) fn knn_scan(
     grid: &SpatialGrid,
     fleet: &Fleet,
-    in_members: &[bool],
+    in_members: &BitSet,
     i: usize,
     k: usize,
-) -> Vec<usize> {
+) -> KnnScan {
     if k == 0 {
-        return Vec::new();
+        return KnnScan { partners: Vec::new(), reach: 0 };
     }
     let (cx, cy) = grid.cell_xy(&fleet.positions[i]);
-    let mut found: Vec<(f64, usize)> = Vec::with_capacity(k * 2);
+    let mut found: Vec<(f64, u32)> = Vec::with_capacity(k * 2);
     let mut scanned = 0usize;
+    let mut reach = 0u16;
     for ring in 0.. {
         let visited = grid.for_ring(cx, cy, ring, |cell| {
             for &c in cell {
-                if c != i && in_members[c] {
-                    found.push((fleet.positions[i].dist(&fleet.positions[c]), c));
+                let c = c as usize;
+                if c != i && in_members.contains(c) {
+                    found.push((fleet.positions[i].dist(&fleet.positions[c]), c as u32));
                 }
             }
         });
+        reach = ring as u16;
         scanned += visited;
         if visited == 0 {
             break; // ring fully outside the grid — nothing left to scan
         }
         if found.len() >= k {
-            let cmp = |a: &(f64, usize), b: &(f64, usize)| {
-                a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
-            };
+            let cmp =
+                |a: &(f64, u32), b: &(f64, u32)| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1));
             found.select_nth_unstable_by(k - 1, cmp);
             if found[k - 1].0 <= ring as f64 * grid.cell_m() {
                 break;
@@ -342,9 +480,28 @@ fn nearest_in_grid(
             break; // sparse membership: fall back to whatever we found
         }
     }
-    found.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    found.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
     found.truncate(k);
-    found.into_iter().map(|(_, c)| c).collect()
+    KnnScan {
+        partners: found.into_iter().map(|(_, c)| c).collect(),
+        reach,
+    }
+}
+
+/// [`knn_scan`] returning just the partner ids (test-facing shim).
+#[cfg(test)]
+fn nearest_in_grid(
+    grid: &SpatialGrid,
+    fleet: &Fleet,
+    in_members: &BitSet,
+    i: usize,
+    k: usize,
+) -> Vec<usize> {
+    knn_scan(grid, fleet, in_members, i, k)
+        .partners
+        .into_iter()
+        .map(|c| c as usize)
+        .collect()
 }
 
 /// Greedy matching over a candidate graph, completed to a **near-perfect
@@ -492,7 +649,7 @@ mod tests {
         // client two rings out — the naive "one ring past full" rule fails).
         let (f, _ch) = fleet(200, 19);
         let grid = SpatialGrid::build(&f.positions, 50.0);
-        let in_members = vec![true; 200];
+        let in_members = BitSet::full(200);
         for i in [0usize, 7, 42, 199] {
             for k in [1usize, 3, 8] {
                 let got = nearest_in_grid(&grid, &f, &in_members, i, k);
@@ -500,9 +657,44 @@ mod tests {
                     .filter(|&c| c != i)
                     .map(|c| (f.positions[i].dist(&f.positions[c]), c))
                     .collect();
-                want.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+                want.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
                 let want: Vec<usize> = want.into_iter().take(k).map(|(_, c)| c).collect();
                 assert_eq!(got, want, "i={i} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_generation_is_thread_count_invariant() {
+        // Enough members for multiple GEN_CHUNK chunks, so the parallel path
+        // genuinely interleaves workers. Every thread count must reproduce
+        // the serial edge list bit-for-bit (ids AND weight bits).
+        let (f, ch) = fleet(5000, 23);
+        let grid = SpatialGrid::build(&f.positions, 50.0);
+        let members: Vec<usize> = (0..5000).collect();
+        let spec = EdgeWeightSpec::Eq5 { alpha: 1.0, beta: 5e-10 };
+        let serial = SparseCandidateGraph::over_members(&f, &ch, &grid, &members, spec, 4, 2);
+        for threads in [2usize, 4] {
+            let pooled = SparseCandidateGraph::over_members_pooled(
+                &f,
+                &ch,
+                &grid,
+                &members,
+                spec,
+                4,
+                2,
+                &FixedPool::new(threads),
+            );
+            assert_eq!(pooled.edges().len(), serial.edges().len(), "threads={threads}");
+            for (a, b) in pooled.edges().iter().zip(serial.edges()) {
+                assert_eq!((a.i, a.j), (b.i, b.j), "threads={threads}");
+                assert_eq!(
+                    a.weight.to_bits(),
+                    b.weight.to_bits(),
+                    "threads={threads} edge ({}, {})",
+                    a.i,
+                    a.j
+                );
             }
         }
     }

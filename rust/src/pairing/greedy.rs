@@ -36,9 +36,10 @@ pub(crate) fn pick_edges(edges: &[Edge], n: usize) -> Vec<(usize, usize)> {
     let mut order: Vec<u32> = (0..edges.len() as u32).collect();
     order.sort_unstable_by(|&x, &y| {
         let (a, b) = (&edges[x as usize], &edges[y as usize]);
+        // total_cmp: branch-free total order, no NaN panic path in the
+        // innermost comparator (identical to partial_cmp on non-NaN input).
         b.weight
-            .partial_cmp(&a.weight)
-            .unwrap()
+            .total_cmp(&a.weight)
             .then_with(|| (a.i, a.j).cmp(&(b.i, b.j)))
     });
     let mut covered = vec![false; n];

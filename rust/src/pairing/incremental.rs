@@ -1,0 +1,985 @@
+//! Incremental cross-round matching — the persistent alternative to
+//! rebuilding the sparse candidate graph from scratch every epoch
+//! (DESIGN.md §10).
+//!
+//! The batch path ([`super::candidates`]) regenerates every member's
+//! grid-kNN and frequency-band candidate lists, re-evaluates every edge
+//! weight, and re-sorts the whole edge list each epoch — O(m·k) scans plus
+//! O(E log E) sort even when one client departed. [`IncrementalMatcher`]
+//! keeps all of that state alive between epochs:
+//!
+//! * per-client candidate lists (flat `u32` SoA) with the ring-walk `reach`
+//!   of each kNN scan, so an epoch re-scans only clients whose scan could
+//!   have changed: a membership/position change in cell `C` invalidates
+//!   exactly the clients whose watch radius `reach + 1` (Chebyshev cell
+//!   distance, computed by a two-pass chamfer transform) covers `C`;
+//! * a reference-counted edge slab (an edge exists while ≥ 1 directed list
+//!   entry references it; ≤ 4 refs: `a.near`, `a.band`, `b.near`, `b.band`);
+//! * a [`BucketQueue`] holding every live edge under the order-preserving
+//!   [`weight_key`] of its weight, so the greedy pick order survives between
+//!   epochs and a repair epoch re-sorts only the buckets it touched.
+//!
+//! Change detection is **self-contained and exact**: the matcher stores the
+//! raw `f64` bit patterns of every member's position and frequency plus the
+//! channel-config fields, and diffs them against the live state each epoch.
+//! Those bit patterns are deliberately *not* compacted to `f32` — a missed
+//! change would silently break the equivalence contract below (this is the
+//! "where f64 stays load-bearing" line of the fleet memory diet; everything
+//! else here is `u32`/`u16`/`u8`).
+//!
+//! **Equivalence contract** (property-tested in
+//! `rust/tests/incremental_matching.rs`): after every `update`, the returned
+//! matching is bit-for-bit identical — same pair order, same solos — to
+//!
+//! ```text
+//! match_candidates(&SparseCandidateGraph::over_members(...), members)
+//! ```
+//!
+//! on the same state, for every weight spec and any `--threads`. The proof
+//! obligations: the candidate *set* equals the union of the per-client lists
+//! (refcounts make the queue exactly that union); every live edge's key is
+//! the `weight_key` of its current-state weight (dirty tracking re-keys on
+//! any position/frequency/channel change the spec reads); and the descending
+//! queue walk visits edges in `(weight desc, (i, j) asc)` order — precisely
+//! `pick_edges`' sort order, because `weight_key` is monotone and injective
+//! under `total_cmp` and ties fall back to the same endpoint order.
+
+use super::candidates::{freq_band_partners, freq_order, knn_scan, EdgeWeightSpec, KnnScan};
+use super::repair::Matching;
+use crate::sim::channel::Channel;
+use crate::sim::geometry::{Pos, SpatialGrid};
+use crate::sim::latency::Fleet;
+use crate::telemetry::registry::{self, Histo};
+use crate::util::bitset::BitSet;
+use crate::util::bucketq::{weight_key, BucketQueue};
+use crate::util::pool::FixedPool;
+use std::time::Instant;
+
+/// "No queue handle yet" — edges created this epoch carry this until the
+/// deferred-weight flush assigns their key.
+const NO_HANDLE: u32 = u32::MAX;
+
+/// Clients per parallel kNN-scan chunk. Fixed-size chunks (not per-worker
+/// splits) keep the concatenated scan results — and therefore every
+/// downstream structure — bit-identical at any thread count.
+const SCAN_CHUNK: usize = 2048;
+
+/// Below this many scans / deferred weights, fan-out overhead beats the win;
+/// run serially (results are identical either way).
+const PAR_MIN: usize = 4096;
+
+/// Hard cap on per-client list lengths (diff buffers live on the stack).
+const MAX_K: usize = 64;
+
+/// One reference-counted candidate edge (`a < b`).
+#[derive(Clone, Copy)]
+struct EdgeRec {
+    a: u32,
+    b: u32,
+    /// Bucket-queue handle ([`NO_HANDLE`] until the epoch's weight flush).
+    handle: u32,
+    /// Epoch of the last weight refresh — dedups re-keys when several dirty
+    /// clients share an edge.
+    stamp: u32,
+    /// Directed list references (≤ 4).
+    refs: u8,
+}
+
+/// Persistent cross-round sparse matcher. See module docs.
+pub struct IncrementalMatcher {
+    k_near: usize,
+    k_freq: usize,
+    n: usize,
+    epoch: u32,
+    started: bool,
+    // Membership.
+    alive: BitSet,
+    members: Vec<usize>,
+    // Per-client candidate-list state (flat SoA, memory diet).
+    near: Vec<u32>,
+    near_len: Vec<u8>,
+    reach: Vec<u16>,
+    band: Vec<u32>,
+    band_len: Vec<u8>,
+    // Exact change-detection fingerprints (f64 bits — load-bearing).
+    pos_bits: Vec<(u64, u64)>,
+    freq_bits: Vec<u64>,
+    chan_sig: [u64; 6],
+    spec_sig: (u8, u64, u64),
+    grid_sig: (usize, u64),
+    // Frequency-band axis (valid while membership and freqs are unchanged).
+    by_freq: Vec<u32>,
+    rank: Vec<u32>,
+    // Edge store: slab + per-client incidence + persistent order.
+    recs: Vec<EdgeRec>,
+    free_slots: Vec<u32>,
+    /// `adj[c]` = `(other, slot)` sorted by `other`; each edge appears in
+    /// both endpoints' lists.
+    adj: Vec<Vec<(u32, u32)>>,
+    queue: BucketQueue,
+    /// Slots created this epoch, awaiting weight evaluation + queue insert.
+    pending: Vec<u32>,
+    // Solver state.
+    covered: BitSet,
+    matching: Matching,
+    // Chebyshev distance-transform scratch (`dims × dims`).
+    dist: Vec<u16>,
+    /// Epochs that actually re-solved (vs returned the cached matching).
+    pub solves: u64,
+    /// Total kNN ring-walk scans performed (O(affected) under churn).
+    pub scans: u64,
+}
+
+impl IncrementalMatcher {
+    /// Matcher over a fixed universe of `n` client ids with the sparse
+    /// backend's `k_near`/`k_freq` candidate budgets.
+    pub fn new(n: usize, k_near: usize, k_freq: usize) -> IncrementalMatcher {
+        assert!(n < u32::MAX as usize, "universe too large for u32 ids");
+        assert!(
+            k_near <= MAX_K && k_freq <= MAX_K,
+            "candidate budgets above {MAX_K} are unsupported"
+        );
+        IncrementalMatcher {
+            k_near,
+            k_freq,
+            n,
+            epoch: 0,
+            started: false,
+            alive: BitSet::new(n),
+            members: Vec::new(),
+            near: vec![0; n * k_near],
+            near_len: vec![0; n],
+            reach: vec![0; n],
+            band: vec![0; n * k_freq],
+            band_len: vec![0; n],
+            pos_bits: vec![(0, 0); n],
+            freq_bits: vec![0; n],
+            chan_sig: [0; 6],
+            spec_sig: (u8::MAX, 0, 0),
+            grid_sig: (0, 0),
+            by_freq: Vec::new(),
+            rank: vec![0; n],
+            recs: Vec::new(),
+            free_slots: Vec::new(),
+            adj: vec![Vec::new(); n],
+            queue: BucketQueue::new(),
+            pending: Vec::new(),
+            covered: BitSet::new(n),
+            matching: Matching::default(),
+            dist: Vec::new(),
+            solves: 0,
+            scans: 0,
+        }
+    }
+
+    /// Live candidate edges currently in the queue.
+    pub fn edge_count(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// The matching computed by the last [`Self::update`].
+    pub fn matching(&self) -> &Matching {
+        &self.matching
+    }
+
+    fn sig_of(spec: &EdgeWeightSpec<'_>) -> (u8, u64, u64) {
+        match *spec {
+            EdgeWeightSpec::Eq5 { alpha, beta } => (0, alpha.to_bits(), beta.to_bits()),
+            EdgeWeightSpec::NegDistance => (1, 0, 0),
+            EdgeWeightSpec::FreqGap => (2, 0, 0),
+            // Model params are fixed per session; swapping models mid-session
+            // requires a new matcher (the session layer never does this).
+            EdgeWeightSpec::SplitCost(_) => (3, 0, 0),
+        }
+    }
+
+    fn chan_sig_of(channel: &Channel) -> [u64; 6] {
+        let c = channel.config();
+        [
+            c.bandwidth_hz.to_bits(),
+            c.tx_power_w.to_bits(),
+            c.noise_w.to_bits(),
+            c.ref_gain.to_bits(),
+            c.ref_dist_m.to_bits(),
+            c.pathloss_exp.to_bits(),
+        ]
+    }
+
+    fn cell_idx(grid: &SpatialGrid, p: &Pos) -> u32 {
+        let (x, y) = grid.cell_xy(p);
+        (y * grid.dims() + x) as u32
+    }
+
+    /// Advance the matcher to the current fleet state and return the
+    /// matching over `members` (sorted ascending, deduped, ids `< n`).
+    ///
+    /// Everything else is self-detected: membership joins/departs (diff vs
+    /// the previous epoch), moves and frequency changes (stored bit
+    /// patterns), channel changes (config fingerprint). `grid` must be the
+    /// same spatial index the batch path would use (the fleet-dynamics
+    /// grid); `pool` parallelizes bulk scan/weight phases without affecting
+    /// the result.
+    pub fn update(
+        &mut self,
+        fleet: &Fleet,
+        channel: &Channel,
+        grid: &SpatialGrid,
+        members: &[usize],
+        spec: &EdgeWeightSpec<'_>,
+        pool: &FixedPool,
+    ) -> &Matching {
+        let t0 = registry::enabled().then(Instant::now);
+        debug_assert_eq!(fleet.n(), self.n, "fleet/universe size is fixed at construction");
+        debug_assert!(members.windows(2).all(|w| w[0] < w[1]), "members must be sorted+deduped");
+        debug_assert!(members.last().is_none_or(|&m| m < self.n));
+        self.epoch = self.epoch.wrapping_add(1);
+
+        // 0. Structural invalidation: a different weight spec or grid
+        // geometry voids every list, reach and key — start over.
+        let ssig = Self::sig_of(spec);
+        let gsig = (grid.dims(), grid.cell_m().to_bits());
+        if self.started && (ssig != self.spec_sig || gsig != self.grid_sig) {
+            let (solves, scans) = (self.solves, self.scans);
+            *self = Self::new(self.n, self.k_near, self.k_freq);
+            self.solves = solves;
+            self.scans = scans;
+        }
+        self.spec_sig = ssig;
+        self.grid_sig = gsig;
+        let init = !self.started;
+        self.started = true;
+
+        // 1. Membership diff vs the previous epoch.
+        let old_members = std::mem::take(&mut self.members);
+        let mut joined: Vec<usize> = Vec::new();
+        let mut departed: Vec<usize> = Vec::new();
+        {
+            let (mut i, mut j) = (0usize, 0usize);
+            while i < old_members.len() || j < members.len() {
+                match (old_members.get(i), members.get(j)) {
+                    (Some(&o), Some(&m)) if o == m => {
+                        i += 1;
+                        j += 1;
+                    }
+                    (Some(&o), Some(&m)) if o < m => {
+                        departed.push(o);
+                        i += 1;
+                    }
+                    (Some(_), Some(&m)) => {
+                        joined.push(m);
+                        j += 1;
+                    }
+                    (Some(&o), None) => {
+                        departed.push(o);
+                        i += 1;
+                    }
+                    (None, Some(&m)) => {
+                        joined.push(m);
+                        j += 1;
+                    }
+                    (None, None) => unreachable!(),
+                }
+            }
+        }
+        for &d in &departed {
+            self.alive.remove(d);
+        }
+        for &c in &joined {
+            self.alive.insert(c);
+        }
+        self.members = members.to_vec();
+        let m = members.len();
+        let membership_changed = !joined.is_empty() || !departed.is_empty();
+
+        // 2. Position / frequency change scan. Joined clients refresh their
+        // fingerprints but are excluded from `moved`/`freq_changed` (their
+        // stale bits describe a previous life; they regenerate as joins).
+        let mut moved: Vec<usize> = Vec::new();
+        let mut freq_changed: Vec<usize> = Vec::new();
+        let mut dirty_cells: Vec<u32> = Vec::new();
+        {
+            let mut jp = 0usize;
+            for &c in members {
+                let p = &fleet.positions[c];
+                let pb = (p.x.to_bits(), p.y.to_bits());
+                let fb = fleet.freqs_hz[c].to_bits();
+                if jp < joined.len() && joined[jp] == c {
+                    jp += 1;
+                    self.pos_bits[c] = pb;
+                    self.freq_bits[c] = fb;
+                    dirty_cells.push(Self::cell_idx(grid, p));
+                    continue;
+                }
+                if pb != self.pos_bits[c] {
+                    let old = Pos {
+                        x: f64::from_bits(self.pos_bits[c].0),
+                        y: f64::from_bits(self.pos_bits[c].1),
+                    };
+                    dirty_cells.push(Self::cell_idx(grid, &old));
+                    dirty_cells.push(Self::cell_idx(grid, p));
+                    self.pos_bits[c] = pb;
+                    moved.push(c);
+                }
+                if fb != self.freq_bits[c] {
+                    self.freq_bits[c] = fb;
+                    freq_changed.push(c);
+                }
+            }
+        }
+        // Departed clients' positions are frozen at departure, so their
+        // current cell is exactly where surviving scans last saw them.
+        for &d in &departed {
+            dirty_cells.push(Self::cell_idx(grid, &fleet.positions[d]));
+        }
+
+        // 3. Departed clients drop their own directed references.
+        for &d in &departed {
+            self.drop_lists(d);
+        }
+
+        // 4. Frequency-band lists. Any membership or frequency change shifts
+        // ranks and mirrors globally, so every band list regenerates; the
+        // per-client diff then touches only edges that actually changed
+        // (most windows slide *with* their contents).
+        let use_band = spec.uses_freq_band() && self.k_freq > 0 && m > 1;
+        let band_rebuild =
+            use_band && (init || membership_changed || !freq_changed.is_empty());
+        if band_rebuild {
+            self.by_freq = freq_order(fleet, members);
+            for (r, &c) in self.by_freq.iter().enumerate() {
+                self.rank[c as usize] = r as u32;
+            }
+            let mut buf: Vec<u32> = Vec::with_capacity(self.k_freq);
+            for &c in members {
+                buf.clear();
+                {
+                    let by_freq = &self.by_freq;
+                    freq_band_partners(by_freq, self.rank[c] as usize, self.k_freq, |j| {
+                        buf.push(j)
+                    });
+                }
+                self.apply_list_diff(c, true, &buf);
+            }
+        } else if !use_band {
+            // `use_band` can flap when m crosses 1 (the batch path gates on
+            // `m > 1`): stale lists would keep edges to departed partners.
+            for &c in members {
+                if self.band_len[c] > 0 {
+                    self.apply_list_diff(c, true, &[]);
+                }
+            }
+        }
+
+        // 5. Grid-kNN lists: re-scan exactly the clients whose previous walk
+        // could see a dirty cell. `joined` and `moved` clients made their own
+        // current cell dirty, so `dist == 0` pulls them in without special
+        // cases; anything at Chebyshev distance > reach + 1 provably cannot
+        // have changed partners (see `KnnScan::reach`).
+        let use_grid = spec.uses_grid() && self.k_near > 0;
+        let mut regen: Vec<usize> = Vec::new();
+        if use_grid {
+            if init || moved.len() * 2 >= m {
+                regen.extend_from_slice(members);
+            } else if !dirty_cells.is_empty() {
+                self.mark_watch(grid, &dirty_cells);
+                let dist = &self.dist;
+                let dims = grid.dims();
+                regen.extend(members.iter().copied().filter(|&c| {
+                    let (x, y) = grid.cell_xy(&fleet.positions[c]);
+                    dist[y * dims + x] as u32 <= self.reach[c] as u32 + 1
+                }));
+            }
+            if !regen.is_empty() {
+                self.scans += regen.len() as u64;
+                let scans: Vec<KnnScan> = {
+                    let (alive, k) = (&self.alive, self.k_near);
+                    let scan_one = |c: usize| knn_scan(grid, fleet, alive, c, k);
+                    if regen.len() >= PAR_MIN && pool.threads() > 1 {
+                        pool.map(regen.len().div_ceil(SCAN_CHUNK), |ci| {
+                            let lo = ci * SCAN_CHUNK;
+                            let hi = (lo + SCAN_CHUNK).min(regen.len());
+                            regen[lo..hi].iter().map(|&c| scan_one(c)).collect::<Vec<_>>()
+                        })
+                        .into_iter()
+                        .flatten()
+                        .collect()
+                    } else {
+                        regen.iter().map(|&c| scan_one(c)).collect()
+                    }
+                };
+                for (&c, scan) in regen.iter().zip(&scans) {
+                    self.apply_list_diff(c, false, &scan.partners);
+                    self.reach[c] = scan.reach;
+                }
+            }
+        }
+
+        // 6. Evaluate weights for edges created this epoch and admit them to
+        // the queue (deferred so pure specs batch the evaluation in parallel).
+        let created = !self.pending.is_empty();
+        self.flush_pending(fleet, channel, spec, pool);
+
+        // 7. Re-key surviving edges whose weight inputs changed. Only the
+        // state the spec actually reads matters; recomputing an unchanged
+        // weight would be a no-op, so the filters are pure savings.
+        let csig = Self::chan_sig_of(channel);
+        let chan_changed = csig != self.chan_sig;
+        self.chan_sig = csig;
+        let reads_chan = matches!(
+            spec,
+            EdgeWeightSpec::Eq5 { .. } | EdgeWeightSpec::SplitCost(_)
+        );
+        let reads_pos = !matches!(spec, EdgeWeightSpec::FreqGap);
+        let reads_freq = !matches!(spec, EdgeWeightSpec::NegDistance);
+        let mut rekey_targets: Vec<usize> = Vec::new();
+        if reads_pos {
+            rekey_targets.extend_from_slice(&moved);
+        }
+        if reads_freq {
+            rekey_targets.extend_from_slice(&freq_changed);
+        }
+        let rekeyed = (chan_changed && reads_chan) || !rekey_targets.is_empty();
+        if (chan_changed && reads_chan)
+            || (!rekey_targets.is_empty() && rekey_targets.len() >= m / 2)
+        {
+            // Most edges are incident to a dirty client (or all keys are
+            // stale): re-key the whole slab, batched.
+            self.rekey_all(fleet, channel, spec, pool);
+        } else {
+            for &c in &rekey_targets {
+                for t in 0..self.adj[c].len() {
+                    let slot = self.adj[c][t].1 as usize;
+                    if self.recs[slot].stamp == self.epoch {
+                        continue;
+                    }
+                    self.recs[slot].stamp = self.epoch;
+                    let (a, b, h) =
+                        (self.recs[slot].a, self.recs[slot].b, self.recs[slot].handle);
+                    let w = spec.weight(fleet, channel, a as usize, b as usize);
+                    self.queue.update_key(h, weight_key(w));
+                }
+            }
+        }
+
+        // 8. Solve — or return the cached matching when provably nothing
+        // about the candidate graph changed this epoch.
+        let dirty =
+            init || membership_changed || band_rebuild || !regen.is_empty() || created || rekeyed;
+        if dirty {
+            self.solve();
+        }
+        #[cfg(debug_assertions)]
+        self.debug_validate();
+        if let Some(t0) = t0 {
+            crate::tm_observe!(Histo::MatcherEpochNanos, t0.elapsed().as_nanos() as u64);
+        }
+        &self.matching
+    }
+
+    /// Greedy pick over the persistent queue + ascending-id completion —
+    /// exactly `match_candidates(pick_edges(...))` on the equivalent batch
+    /// graph (same visit order, same completion rule).
+    fn solve(&mut self) {
+        self.solves += 1;
+        self.covered.clear();
+        let target = self.members.len() / 2;
+        let mut pairs: Vec<(usize, usize)> = Vec::with_capacity(target);
+        let covered = &mut self.covered;
+        self.queue.for_each_desc(|_k, a, b| {
+            let (a, b) = (a as usize, b as usize);
+            if !covered.contains(a) && !covered.contains(b) {
+                covered.insert(a);
+                covered.insert(b);
+                pairs.push((a, b));
+                if pairs.len() == target {
+                    return false;
+                }
+            }
+            true
+        });
+        // Leftovers pair up by ascending id; at most one stays solo.
+        let mut solos: Vec<usize> = Vec::new();
+        let mut half: Option<usize> = None;
+        for &c in &self.members {
+            if covered.contains(c) {
+                continue;
+            }
+            match half.take() {
+                Some(p) => pairs.push((p, c)),
+                None => half = Some(c),
+            }
+        }
+        solos.extend(half);
+        self.matching = Matching { pairs, solos };
+    }
+
+    /// Diff a client's stored candidate list against `new`, ref/unref the
+    /// changed edges, and store the new list. Entries within a list are
+    /// distinct clients, so set-diff semantics are exact.
+    fn apply_list_diff(&mut self, c: usize, is_band: bool, new: &[u32]) {
+        debug_assert!(new.len() <= MAX_K);
+        debug_assert!(new.iter().all(|&x| self.alive.contains(x as usize)));
+        let (base, olen) = if is_band {
+            (c * self.k_freq, self.band_len[c] as usize)
+        } else {
+            (c * self.k_near, self.near_len[c] as usize)
+        };
+        let mut old_buf = [0u32; MAX_K];
+        {
+            let store = if is_band { &self.band } else { &self.near };
+            old_buf[..olen].copy_from_slice(&store[base..base + olen]);
+        }
+        let old = &old_buf[..olen];
+        if old != new {
+            for &o in old {
+                if !new.contains(&o) {
+                    self.unref_edge(c as u32, o);
+                }
+            }
+            for &x in new {
+                if !old.contains(&x) {
+                    self.ref_edge(c as u32, x);
+                }
+            }
+        }
+        let store = if is_band { &mut self.band } else { &mut self.near };
+        store[base..base + new.len()].copy_from_slice(new);
+        if is_band {
+            self.band_len[c] = new.len() as u8;
+        } else {
+            self.near_len[c] = new.len() as u8;
+        }
+    }
+
+    /// Release every directed reference a departing client holds.
+    fn drop_lists(&mut self, d: usize) {
+        for t in 0..self.near_len[d] as usize {
+            let o = self.near[d * self.k_near + t];
+            self.unref_edge(d as u32, o);
+        }
+        self.near_len[d] = 0;
+        for t in 0..self.band_len[d] as usize {
+            let o = self.band[d * self.k_freq + t];
+            self.unref_edge(d as u32, o);
+        }
+        self.band_len[d] = 0;
+        self.reach[d] = 0;
+    }
+
+    /// Add one directed reference to edge `(c, o)`, creating the edge (with
+    /// its weight deferred to the epoch flush) on first reference.
+    fn ref_edge(&mut self, c: u32, o: u32) {
+        debug_assert_ne!(c, o);
+        let (lo, hi) = if c < o { (c, o) } else { (o, c) };
+        match self.adj[lo as usize].binary_search_by_key(&hi, |e| e.0) {
+            Ok(p) => {
+                let slot = self.adj[lo as usize][p].1 as usize;
+                self.recs[slot].refs += 1;
+                debug_assert!(self.recs[slot].refs <= 4);
+            }
+            Err(p) => {
+                let rec = EdgeRec {
+                    a: lo,
+                    b: hi,
+                    handle: NO_HANDLE,
+                    stamp: self.epoch,
+                    refs: 1,
+                };
+                let slot = match self.free_slots.pop() {
+                    Some(s) => {
+                        self.recs[s as usize] = rec;
+                        s
+                    }
+                    None => {
+                        self.recs.push(rec);
+                        (self.recs.len() - 1) as u32
+                    }
+                };
+                self.adj[lo as usize].insert(p, (hi, slot));
+                let q = self.adj[hi as usize]
+                    .binary_search_by_key(&lo, |e| e.0)
+                    .unwrap_err();
+                self.adj[hi as usize].insert(q, (lo, slot));
+                self.pending.push(slot);
+            }
+        }
+    }
+
+    /// Drop one directed reference; the last reference removes the edge from
+    /// the queue, the incidence lists and the slab.
+    fn unref_edge(&mut self, c: u32, o: u32) {
+        let (lo, hi) = if c < o { (c, o) } else { (o, c) };
+        let p = self.adj[lo as usize]
+            .binary_search_by_key(&hi, |e| e.0)
+            .expect("unref of absent edge");
+        let slot = self.adj[lo as usize][p].1 as usize;
+        self.recs[slot].refs -= 1;
+        if self.recs[slot].refs == 0 {
+            let handle = self.recs[slot].handle;
+            if handle != NO_HANDLE {
+                self.queue.remove(handle);
+            }
+            self.adj[lo as usize].remove(p);
+            let q = self.adj[hi as usize]
+                .binary_search_by_key(&lo, |e| e.0)
+                .expect("adj symmetry");
+            self.adj[hi as usize].remove(q);
+            self.free_slots.push(slot as u32);
+        }
+    }
+
+    /// Evaluate this epoch's new edges and insert them into the queue. Pure
+    /// specs batch the weight evaluation across `pool` in fixed chunks;
+    /// `SplitCost` (single-threaded memo) evaluates serially. Entries whose
+    /// edge died again within the epoch, or whose slot was re-created and
+    /// already flushed, are skipped.
+    fn flush_pending(
+        &mut self,
+        fleet: &Fleet,
+        channel: &Channel,
+        spec: &EdgeWeightSpec<'_>,
+        pool: &FixedPool,
+    ) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let keys: Option<Vec<u64>> = match spec.pure() {
+            Some(pure) if self.pending.len() >= PAR_MIN && pool.threads() > 1 => {
+                let (pending, recs) = (&self.pending, &self.recs);
+                Some(
+                    pool.map(pending.len().div_ceil(SCAN_CHUNK), |ci| {
+                        let lo = ci * SCAN_CHUNK;
+                        let hi = (lo + SCAN_CHUNK).min(pending.len());
+                        pending[lo..hi]
+                            .iter()
+                            .map(|&s| {
+                                let r = &recs[s as usize];
+                                // Dead slots get a garbage (but in-range) key
+                                // that the apply loop below never reads.
+                                weight_key(pure.weight(
+                                    fleet,
+                                    channel,
+                                    r.a as usize,
+                                    r.b as usize,
+                                ))
+                            })
+                            .collect::<Vec<u64>>()
+                    })
+                    .into_iter()
+                    .flatten()
+                    .collect(),
+                )
+            }
+            _ => None,
+        };
+        let pending = std::mem::take(&mut self.pending);
+        for (ix, &slot) in pending.iter().enumerate() {
+            let rec = self.recs[slot as usize];
+            if rec.refs == 0 || rec.handle != NO_HANDLE {
+                continue;
+            }
+            let key = match &keys {
+                Some(ks) => ks[ix],
+                None => weight_key(spec.weight(fleet, channel, rec.a as usize, rec.b as usize)),
+            };
+            self.recs[slot as usize].handle = self.queue.insert(key, rec.a, rec.b);
+        }
+        self.pending = pending;
+        self.pending.clear();
+    }
+
+    /// Re-key every live edge not already refreshed this epoch (channel
+    /// change, or a dirty-client set so large that per-incidence walking
+    /// would visit most edges anyway).
+    fn rekey_all(
+        &mut self,
+        fleet: &Fleet,
+        channel: &Channel,
+        spec: &EdgeWeightSpec<'_>,
+        pool: &FixedPool,
+    ) {
+        let epoch = self.epoch;
+        let live: Vec<u32> = (0..self.recs.len() as u32)
+            .filter(|&s| {
+                let r = &self.recs[s as usize];
+                r.refs > 0 && r.stamp != epoch
+            })
+            .collect();
+        if live.is_empty() {
+            return;
+        }
+        let keys: Vec<u64> = match spec.pure() {
+            Some(pure) if live.len() >= PAR_MIN && pool.threads() > 1 => {
+                let recs = &self.recs;
+                pool.map(live.len().div_ceil(SCAN_CHUNK), |ci| {
+                    let lo = ci * SCAN_CHUNK;
+                    let hi = (lo + SCAN_CHUNK).min(live.len());
+                    live[lo..hi]
+                        .iter()
+                        .map(|&s| {
+                            let r = &recs[s as usize];
+                            weight_key(pure.weight(fleet, channel, r.a as usize, r.b as usize))
+                        })
+                        .collect::<Vec<u64>>()
+                })
+                .into_iter()
+                .flatten()
+                .collect()
+            }
+            _ => live
+                .iter()
+                .map(|&s| {
+                    let r = &self.recs[s as usize];
+                    weight_key(spec.weight(fleet, channel, r.a as usize, r.b as usize))
+                })
+                .collect(),
+        };
+        for (&slot, &key) in live.iter().zip(&keys) {
+            let slot = slot as usize;
+            self.recs[slot].stamp = epoch;
+            let h = self.recs[slot].handle;
+            self.queue.update_key(h, key);
+        }
+    }
+
+    /// Chebyshev distance transform from the dirty cells over the grid
+    /// (two-pass 8-neighbor chamfer — exact for the Chebyshev metric).
+    fn mark_watch(&mut self, grid: &SpatialGrid, dirty_cells: &[u32]) {
+        let dims = grid.dims();
+        let sz = dims * dims;
+        if self.dist.len() != sz {
+            self.dist = vec![u16::MAX; sz];
+        } else {
+            self.dist.fill(u16::MAX);
+        }
+        for &c in dirty_cells {
+            self.dist[c as usize] = 0;
+        }
+        let d = &mut self.dist;
+        for y in 0..dims {
+            for x in 0..dims {
+                let i = y * dims + x;
+                let mut v = d[i];
+                if v == 0 {
+                    continue;
+                }
+                if x > 0 {
+                    v = v.min(d[i - 1].saturating_add(1));
+                }
+                if y > 0 {
+                    let up = i - dims;
+                    v = v.min(d[up].saturating_add(1));
+                    if x > 0 {
+                        v = v.min(d[up - 1].saturating_add(1));
+                    }
+                    if x + 1 < dims {
+                        v = v.min(d[up + 1].saturating_add(1));
+                    }
+                }
+                d[i] = v;
+            }
+        }
+        for y in (0..dims).rev() {
+            for x in (0..dims).rev() {
+                let i = y * dims + x;
+                let mut v = d[i];
+                if v == 0 {
+                    continue;
+                }
+                if x + 1 < dims {
+                    v = v.min(d[i + 1].saturating_add(1));
+                }
+                if y + 1 < dims {
+                    let down = i + dims;
+                    v = v.min(d[down].saturating_add(1));
+                    if x > 0 {
+                        v = v.min(d[down - 1].saturating_add(1));
+                    }
+                    if x + 1 < dims {
+                        v = v.min(d[down + 1].saturating_add(1));
+                    }
+                }
+                d[i] = v;
+            }
+        }
+    }
+
+    /// Structural invariants, re-checked after every update in debug builds:
+    /// list entries are members, refcounts equal the directed-reference
+    /// count, and the queue holds exactly the live edges.
+    #[cfg(debug_assertions)]
+    fn debug_validate(&self) {
+        use std::collections::HashMap;
+        let mut refs: HashMap<(u32, u32), u8> = HashMap::new();
+        for &c in &self.members {
+            for t in 0..self.near_len[c] as usize {
+                let o = self.near[c * self.k_near + t];
+                assert!(self.alive.contains(o as usize), "near[{c}] holds dead {o}");
+                let (lo, hi) = (o.min(c as u32), o.max(c as u32));
+                *refs.entry((lo, hi)).or_insert(0) += 1;
+            }
+            for t in 0..self.band_len[c] as usize {
+                let o = self.band[c * self.k_freq + t];
+                assert!(self.alive.contains(o as usize), "band[{c}] holds dead {o}");
+                let (lo, hi) = (o.min(c as u32), o.max(c as u32));
+                *refs.entry((lo, hi)).or_insert(0) += 1;
+            }
+        }
+        let mut live_slots = 0usize;
+        for r in &self.recs {
+            if r.refs > 0 {
+                live_slots += 1;
+                assert_eq!(
+                    refs.get(&(r.a, r.b)).copied().unwrap_or(0),
+                    r.refs,
+                    "refcount drift on ({}, {})",
+                    r.a,
+                    r.b
+                );
+                assert_ne!(r.handle, NO_HANDLE, "unflushed live edge");
+            }
+        }
+        assert_eq!(live_slots, refs.len(), "slab/list edge sets diverged");
+        assert_eq!(self.queue.len(), live_slots, "queue/slab length drift");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::candidates::{match_candidates, SparseCandidateGraph};
+    use super::*;
+    use crate::config::{ChannelConfig, ExperimentConfig};
+    use crate::util::rng::Rng;
+
+    fn fleet(n: usize, seed: u64) -> (Fleet, Channel) {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n_clients = n;
+        (
+            Fleet::sample(&cfg, &mut Rng::new(seed)),
+            Channel::new(ChannelConfig::default()),
+        )
+    }
+
+    fn rebuild(
+        fleet: &Fleet,
+        ch: &Channel,
+        grid: &SpatialGrid,
+        members: &[usize],
+        spec: EdgeWeightSpec<'_>,
+        k_near: usize,
+        k_freq: usize,
+    ) -> Matching {
+        let g = SparseCandidateGraph::over_members(fleet, ch, grid, members, spec, k_near, k_freq);
+        match_candidates(&g, members)
+    }
+
+    #[test]
+    fn tracks_rebuild_under_membership_churn() {
+        let n = 60;
+        let (f, ch) = fleet(n, 41);
+        let grid = SpatialGrid::build(&f.positions, 50.0);
+        let spec = EdgeWeightSpec::Eq5 { alpha: 1.0, beta: 5e-10 };
+        let mut alive: Vec<bool> = vec![true; n];
+        let mut rng = Rng::new(7);
+        let mut matcher = IncrementalMatcher::new(n, 4, 2);
+        let pool = FixedPool::serial();
+        for epoch in 0..30 {
+            if epoch > 0 {
+                for a in alive.iter_mut() {
+                    if rng.f64() < 0.15 {
+                        *a = !*a;
+                    }
+                }
+            }
+            let members: Vec<usize> = (0..n).filter(|&c| alive[c]).collect();
+            let got = matcher.update(&f, &ch, &grid, &members, &spec, &pool).clone();
+            let want = rebuild(&f, &ch, &grid, &members, spec, 4, 2);
+            assert_eq!(got, want, "epoch {epoch}, m={}", members.len());
+        }
+    }
+
+    #[test]
+    fn tracks_rebuild_under_mobility_and_straggle() {
+        let n = 50;
+        let (mut f, ch) = fleet(n, 43);
+        let mut grid = SpatialGrid::build(&f.positions, 50.0);
+        let spec = EdgeWeightSpec::Eq5 { alpha: 1.0, beta: 5e-10 };
+        let base = f.freqs_hz.clone();
+        let mut rng = Rng::new(9);
+        let mut matcher = IncrementalMatcher::new(n, 4, 2);
+        let pool = FixedPool::serial();
+        let members: Vec<usize> = (0..n).collect();
+        for epoch in 0..20 {
+            if epoch > 0 {
+                for c in 0..n {
+                    // Mobility (grid follows) + straggler churn.
+                    let p = &mut f.positions[c];
+                    p.x = (p.x + rng.normal_ms(0.0, 2.0)).clamp(-50.0, 50.0);
+                    p.y = (p.y + rng.normal_ms(0.0, 2.0)).clamp(-50.0, 50.0);
+                    grid.relocate(c, *p);
+                    f.freqs_hz[c] = if rng.f64() < 0.2 { base[c] * 0.3 } else { base[c] };
+                }
+            }
+            let got = matcher.update(&f, &ch, &grid, &members, &spec, &pool).clone();
+            let want = rebuild(&f, &ch, &grid, &members, spec, 4, 2);
+            assert_eq!(got, want, "epoch {epoch}");
+        }
+    }
+
+    #[test]
+    fn unchanged_state_skips_the_solve() {
+        let (f, ch) = fleet(30, 47);
+        let grid = SpatialGrid::build(&f.positions, 50.0);
+        let spec = EdgeWeightSpec::Eq5 { alpha: 1.0, beta: 5e-10 };
+        let members: Vec<usize> = (0..30).collect();
+        let mut matcher = IncrementalMatcher::new(30, 4, 2);
+        let pool = FixedPool::serial();
+        let a = matcher.update(&f, &ch, &grid, &members, &spec, &pool).clone();
+        assert_eq!(matcher.solves, 1);
+        let b = matcher.update(&f, &ch, &grid, &members, &spec, &pool).clone();
+        assert_eq!(matcher.solves, 1, "identical state must not re-solve");
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn channel_shadowing_rekeys_everything() {
+        let (f, ch) = fleet(40, 51);
+        let grid = SpatialGrid::build(&f.positions, 50.0);
+        let spec = EdgeWeightSpec::Eq5 { alpha: 1.0, beta: 5e-10 };
+        let members: Vec<usize> = (0..40).collect();
+        let mut matcher = IncrementalMatcher::new(40, 4, 2);
+        let pool = FixedPool::serial();
+        matcher.update(&f, &ch, &grid, &members, &spec, &pool);
+        // A faded channel (shadowing redraw) changes every eq. (5) weight.
+        let mut cfg = *ch.config();
+        cfg.ref_gain *= 0.4;
+        let faded = Channel::new(cfg);
+        let got = matcher.update(&f, &faded, &grid, &members, &spec, &pool).clone();
+        let want = rebuild(&f, &faded, &grid, &members, spec, 4, 2);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn thread_count_is_invisible() {
+        let n = 80;
+        let (f, ch) = fleet(n, 53);
+        let grid = SpatialGrid::build(&f.positions, 50.0);
+        let spec = EdgeWeightSpec::Eq5 { alpha: 1.0, beta: 5e-10 };
+        let mut m1 = IncrementalMatcher::new(n, 4, 2);
+        let mut m4 = IncrementalMatcher::new(n, 4, 2);
+        let (p1, p4) = (FixedPool::new(1), FixedPool::new(4));
+        let mut rng = Rng::new(11);
+        let mut alive: Vec<bool> = vec![true; n];
+        for _ in 0..10 {
+            let members: Vec<usize> = (0..n).filter(|&c| alive[c]).collect();
+            let a = m1.update(&f, &ch, &grid, &members, &spec, &p1).clone();
+            let b = m4.update(&f, &ch, &grid, &members, &spec, &p4).clone();
+            assert_eq!(a, b);
+            for al in alive.iter_mut() {
+                if rng.f64() < 0.1 {
+                    *al = !*al;
+                }
+            }
+        }
+    }
+}

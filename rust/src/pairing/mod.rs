@@ -23,18 +23,26 @@
 //! ([`repair::pair_members`]) and incremental re-pairing after churn
 //! ([`repair::repair_matching`]). All mechanisms accept odd fleets — one
 //! client is left solo instead of panicking.
+//!
+//! [`incremental`] is the cross-round evolution of the sparse backend: a
+//! persistent [`incremental::IncrementalMatcher`] keeps candidate lists, the
+//! refcounted edge set and the sorted edge order alive between rounds, so an
+//! epoch costs O(affected) instead of a full rebuild — bit-for-bit identical
+//! output to `match_candidates` over `over_members` (DESIGN.md §10).
 
 pub mod baselines;
 pub mod candidates;
 pub mod exact;
 pub mod graph;
 pub mod greedy;
+pub mod incremental;
 pub mod repair;
 
 pub use candidates::{match_candidates, EdgeWeightSpec, SparseCandidateGraph};
+pub use incremental::IncrementalMatcher;
 pub use repair::{
     dense_pool_matching, pair_members, pair_members_with, repair_matching,
-    repair_matching_pooled, Matching, RepairReport,
+    repair_matching_pooled, repair_matching_pooled_memo, Matching, RepairMemo, RepairReport,
 };
 
 use crate::config::{PairingBackendConfig, PairingStrategy};

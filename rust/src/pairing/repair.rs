@@ -16,8 +16,8 @@ use crate::config::{PairingBackendConfig, PairingStrategy};
 use crate::sim::channel::Channel;
 use crate::sim::latency::Fleet;
 use crate::telemetry::registry::{Counter, Gauge, Histo};
+use crate::util::bitset::BitSet;
 use crate::util::rng::Rng;
-use std::collections::HashSet;
 
 /// A near-perfect matching with explicit solo clients. Indices are *universe*
 /// client ids (stable across churn), not compact per-round ids.
@@ -55,10 +55,13 @@ impl Matching {
     /// the survivor to solo *for this round only* (the stored matching is
     /// untouched); absent solos are dropped.
     pub fn restricted_to(&self, present: &[usize]) -> Matching {
-        let set: HashSet<usize> = present.iter().copied().collect();
+        // Packed membership bits instead of a HashSet: ids out of range are
+        // simply absent, and the probe is a shift+mask instead of a hash.
+        let cap = present.iter().max().map_or(0, |&m| m + 1);
+        let set = BitSet::from_ids(cap, present.iter().copied());
         let mut out = Matching::default();
         for &(a, b) in &self.pairs {
-            match (set.contains(&a), set.contains(&b)) {
+            match (set.contains(a), set.contains(b)) {
                 (true, true) => out.pairs.push((a, b)),
                 (true, false) => out.solos.push(a),
                 (false, true) => out.solos.push(b),
@@ -66,7 +69,7 @@ impl Matching {
             }
         }
         for &s in &self.solos {
-            if set.contains(&s) {
+            if set.contains(s) {
                 out.solos.push(s);
             }
         }
@@ -107,12 +110,13 @@ struct RepairPartition {
 /// Split `m` against the alive set: healthy pairs are kept, everyone else
 /// lands in the re-match pool.
 fn partition_for_repair(m: &Matching, members: &[usize]) -> RepairPartition {
-    let set: HashSet<usize> = members.iter().copied().collect();
+    let cap = members.iter().max().map_or(0, |&m| m + 1);
+    let set = BitSet::from_ids(cap, members.iter().copied());
     let mut kept: Vec<(usize, usize)> = Vec::with_capacity(m.pairs.len());
     let mut dropped: Vec<(usize, usize)> = Vec::new();
     let mut pool: Vec<usize> = Vec::new();
     for &(a, b) in &m.pairs {
-        match (set.contains(&a), set.contains(&b)) {
+        match (set.contains(a), set.contains(b)) {
             (true, true) => kept.push((a, b)),
             (true, false) => {
                 dropped.push((a, b));
@@ -127,15 +131,17 @@ fn partition_for_repair(m: &Matching, members: &[usize]) -> RepairPartition {
     }
     // Surviving solos rejoin the pool — a repair may finally pair them up.
     for &s in &m.solos {
-        if set.contains(&s) {
+        if set.contains(s) {
             pool.push(s);
         }
     }
     // Newcomers: alive clients covered by neither kept pairs nor the pool.
-    let mut covered: HashSet<usize> = kept.iter().flat_map(|&(a, b)| [a, b]).collect();
-    covered.extend(pool.iter().copied());
+    let mut covered = BitSet::new(cap);
+    for id in kept.iter().flat_map(|&(a, b)| [a, b]).chain(pool.iter().copied()) {
+        covered.insert(id);
+    }
     for &c in members {
-        if !covered.contains(&c) {
+        if !covered.contains(c) {
             pool.push(c);
         }
     }
@@ -154,21 +160,22 @@ pub fn dense_pool_matching<W: Fn(usize, usize) -> f64>(pool: &[usize], weight: &
             edges.push((weight(a, b), a, b));
         }
     }
+    // total_cmp: total order without the NaN-driven unwrap/Equal escape
+    // hatch (identical ordering on the non-NaN weights we actually see).
     edges.sort_by(|p, q| {
-        q.0.partial_cmp(&p.0)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then_with(|| (p.1, p.2).cmp(&(q.1, q.2)))
+        q.0.total_cmp(&p.0).then_with(|| (p.1, p.2).cmp(&(q.1, q.2)))
     });
-    let mut taken: HashSet<usize> = HashSet::new();
+    let cap = pool.iter().max().map_or(0, |&m| m + 1);
+    let mut taken = BitSet::new(cap);
     let mut pairs = Vec::new();
     for &(_, a, b) in &edges {
-        if !taken.contains(&a) && !taken.contains(&b) {
+        if !taken.contains(a) && !taken.contains(b) {
             taken.insert(a);
             taken.insert(b);
             pairs.push((a, b));
         }
     }
-    let solos = pool.iter().copied().filter(|c| !taken.contains(c)).collect();
+    let solos = pool.iter().copied().filter(|&c| !taken.contains(c)).collect();
     Matching { pairs, solos }
 }
 
@@ -186,6 +193,62 @@ pub fn repair_matching_pooled(
     crate::tm_gauge!(Gauge::RepairPoolSize, part.pool.len() as u64);
     crate::tm_observe!(Histo::RepairPoolSizes, part.pool.len() as u64);
     let pooled = pair_pool(&part.pool);
+    debug_assert!(pooled.is_valid_over(&part.pool), "pool matcher broke coverage");
+    crate::tm_count!(Counter::RepairDroppedPairs, part.dropped.len() as u64);
+    crate::tm_count!(Counter::RepairNewPairs, pooled.pairs.len() as u64);
+    let report = RepairReport {
+        dropped_pairs: part.dropped,
+        new_pairs: pooled.pairs.clone(),
+        new_solos: pooled.solos.clone(),
+        kept_pairs: part.kept.len(),
+    };
+    m.pairs = part.kept;
+    m.pairs.extend(pooled.pairs);
+    m.solos = pooled.solos;
+    report
+}
+
+/// Cross-epoch memo for [`repair_matching_pooled_memo`]: remembers the last
+/// affected pool, the weight-state generation stamp it was matched under, and
+/// the matching the pool matcher produced.
+#[derive(Clone, Debug, Default)]
+pub struct RepairMemo {
+    pool: Vec<usize>,
+    stamp: u64,
+    result: Option<Matching>,
+    /// Epochs where the cached pool matching was reused (for tests/telemetry).
+    pub hits: u64,
+}
+
+/// [`repair_matching_pooled`] with a generation stamp: when the affected pool
+/// is identical to the previous epoch's *and* `stamp` (the caller's
+/// fingerprint of everything the pool matcher reads — channel state, fleet
+/// positions/frequencies, weight spec, shuffle nonce) is unchanged, the pool
+/// matcher is a pure function re-applied to identical inputs, so the cached
+/// matching is reused and the O(pool² log pool) re-sort is skipped entirely.
+pub fn repair_matching_pooled_memo(
+    m: &mut Matching,
+    members: &[usize],
+    stamp: u64,
+    memo: &mut RepairMemo,
+    pair_pool: impl FnOnce(&[usize]) -> Matching,
+) -> RepairReport {
+    let part = partition_for_repair(m, members);
+    crate::tm_gauge!(Gauge::RepairPoolSize, part.pool.len() as u64);
+    crate::tm_observe!(Histo::RepairPoolSizes, part.pool.len() as u64);
+    let pooled = match &memo.result {
+        Some(cached) if memo.stamp == stamp && memo.pool == part.pool => {
+            memo.hits += 1;
+            cached.clone()
+        }
+        _ => {
+            let fresh = pair_pool(&part.pool);
+            memo.pool = part.pool.clone();
+            memo.stamp = stamp;
+            memo.result = Some(fresh.clone());
+            fresh
+        }
+    };
     debug_assert!(pooled.is_valid_over(&part.pool), "pool matcher broke coverage");
     crate::tm_count!(Counter::RepairDroppedPairs, part.dropped.len() as u64);
     crate::tm_count!(Counter::RepairNewPairs, pooled.pairs.len() as u64);
@@ -406,6 +469,42 @@ mod tests {
         // Stored matching untouched.
         assert_eq!(m.pairs.len(), 2);
         assert_eq!(m.solos, vec![4]);
+    }
+
+    #[test]
+    fn memo_skips_pool_matcher_when_pool_and_stamp_unchanged() {
+        let (f, ch) = fleet(10, 13);
+        let all: Vec<usize> = (0..10).collect();
+        let mut rng = Rng::new(14);
+        let mut m = pair_members(PairingStrategy::Greedy, &f, &ch, 1.0, 2e-9, &mut rng, &all);
+        let members: Vec<usize> = all.iter().copied().filter(|&c| c != 3).collect();
+        let w = weight_of(&f, &ch);
+        let mut memo = RepairMemo::default();
+        let mut calls = 0;
+        // Epoch 1: client 3 departed → pool matcher runs.
+        repair_matching_pooled_memo(&mut m, &members, 7, &mut memo, |pool| {
+            calls += 1;
+            dense_pool_matching(pool, &w)
+        });
+        assert_eq!(calls, 1);
+        let snapshot = m.clone();
+        // Epoch 2: identical pool (the surviving solo), identical stamp →
+        // the cached pool matching is reused, the matcher is NOT re-run.
+        repair_matching_pooled_memo(&mut m, &members, 7, &mut memo, |pool| {
+            calls += 1;
+            dense_pool_matching(pool, &w)
+        });
+        assert_eq!(calls, 1, "unchanged pool+stamp must skip the matcher");
+        assert_eq!(memo.hits, 1);
+        assert_eq!(m, snapshot);
+        assert!(m.is_valid_over(&members));
+        // Epoch 3: stamp bump (weight state changed) → must re-run.
+        repair_matching_pooled_memo(&mut m, &members, 8, &mut memo, |pool| {
+            calls += 1;
+            dense_pool_matching(pool, &w)
+        });
+        assert_eq!(calls, 2, "a stamp change must invalidate the memo");
+        assert!(m.is_valid_over(&members));
     }
 
     #[test]

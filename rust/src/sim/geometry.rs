@@ -5,6 +5,7 @@
 //! all n clients.
 
 use crate::util::matrix::FlatMatrix;
+use crate::util::pool::FixedPool;
 use crate::util::rng::Rng;
 
 /// A 2-D position in meters; the server sits at the origin.
@@ -75,19 +76,23 @@ const GRID_MAX_DIMS: usize = 512;
 /// keep the grid current under churn and mobility instead of rebuilding
 /// global state every round. Positions outside the extent clamp to the border
 /// cells, so callers never need to guard stray coordinates.
+/// Ids are stored as `u32` internally (memory diet: half the bucket and
+/// index footprint at 1M clients); the public API stays `usize`.
 #[derive(Clone, Debug)]
 pub struct SpatialGrid {
     extent_m: f64,
     cell_m: f64,
     dims: usize,
     /// `dims × dims` buckets of client ids (row-major, `y * dims + x`).
-    cells: Vec<Vec<usize>>,
-    /// id → bucket index (`usize::MAX` = not in the grid). Grows on demand.
-    cell_of: Vec<usize>,
+    cells: Vec<Vec<u32>>,
+    /// id → bucket index (`u32::MAX` = not in the grid). Grows on demand.
+    cell_of: Vec<u32>,
     /// id → slot within its bucket (for O(1) swap-removal).
-    slot_of: Vec<usize>,
+    slot_of: Vec<u32>,
     len: usize,
 }
+
+const ABSENT: u32 = u32::MAX;
 
 impl SpatialGrid {
     /// Empty grid covering `[-extent_m, extent_m]²`, sized so that
@@ -117,6 +122,37 @@ impl SpatialGrid {
         g
     }
 
+    /// [`Self::build`] with the cell-index pass fanned out over `pool`.
+    /// The scatter into buckets stays serial and ascending-id, so every cell
+    /// holds its occupants in exactly the order the serial build produces —
+    /// ring walks (and everything seeded from them) are bit-identical at any
+    /// thread count.
+    pub fn build_parallel(positions: &[Pos], extent_m: f64, pool: &FixedPool) -> SpatialGrid {
+        const CHUNK: usize = 8192;
+        let n = positions.len();
+        debug_assert!(n < ABSENT as usize);
+        let mut g = SpatialGrid::new(extent_m, n);
+        let idx: Vec<Vec<u32>> = pool.map(n.div_ceil(CHUNK), |ci| {
+            let lo = ci * CHUNK;
+            let hi = (lo + CHUNK).min(n);
+            positions[lo..hi].iter().map(|p| g.cell_idx(p) as u32).collect()
+        });
+        g.cell_of = vec![ABSENT; n];
+        g.slot_of = vec![ABSENT; n];
+        let mut id = 0u32;
+        for chunk in idx {
+            for c in chunk {
+                let c = c as usize;
+                g.cell_of[id as usize] = c as u32;
+                g.slot_of[id as usize] = g.cells[c].len() as u32;
+                g.cells[c].push(id);
+                id += 1;
+            }
+        }
+        g.len = n;
+        g
+    }
+
     /// Cells per side.
     pub fn dims(&self) -> usize {
         self.dims
@@ -139,7 +175,7 @@ impl SpatialGrid {
 
     /// Is `id` currently in the grid?
     pub fn contains(&self, id: usize) -> bool {
-        self.cell_of.get(id).is_some_and(|&c| c != usize::MAX)
+        self.cell_of.get(id).is_some_and(|&c| c != ABSENT)
     }
 
     /// Cell coordinates of a position (clamped to the grid).
@@ -158,36 +194,38 @@ impl SpatialGrid {
 
     /// Add `id` at `p`. Must not already be present.
     pub fn insert(&mut self, id: usize, p: Pos) {
+        debug_assert!(id < ABSENT as usize);
         if self.cell_of.len() <= id {
-            self.cell_of.resize(id + 1, usize::MAX);
-            self.slot_of.resize(id + 1, usize::MAX);
+            self.cell_of.resize(id + 1, ABSENT);
+            self.slot_of.resize(id + 1, ABSENT);
         }
-        debug_assert!(self.cell_of[id] == usize::MAX, "insert of present id {id}");
+        debug_assert!(self.cell_of[id] == ABSENT, "insert of present id {id}");
         let c = self.cell_idx(&p);
-        self.cell_of[id] = c;
-        self.slot_of[id] = self.cells[c].len();
-        self.cells[c].push(id);
+        self.cell_of[id] = c as u32;
+        self.slot_of[id] = self.cells[c].len() as u32;
+        self.cells[c].push(id as u32);
         self.len += 1;
     }
 
     /// Remove `id`. Must be present.
     pub fn remove(&mut self, id: usize) {
         let c = self.cell_of[id];
-        assert!(c != usize::MAX, "remove of absent id {id}");
-        let s = self.slot_of[id];
+        assert!(c != ABSENT, "remove of absent id {id}");
+        let c = c as usize;
+        let s = self.slot_of[id] as usize;
         self.cells[c].swap_remove(s);
         if let Some(&moved) = self.cells[c].get(s) {
-            self.slot_of[moved] = s;
+            self.slot_of[moved as usize] = s as u32;
         }
-        self.cell_of[id] = usize::MAX;
-        self.slot_of[id] = usize::MAX;
+        self.cell_of[id] = ABSENT;
+        self.slot_of[id] = ABSENT;
         self.len -= 1;
     }
 
     /// Move a present `id` to position `p` (no-op when the cell is unchanged).
     pub fn relocate(&mut self, id: usize, p: Pos) {
         let c = self.cell_idx(&p);
-        if self.cell_of[id] == c {
+        if self.cell_of[id] == c as u32 {
             return;
         }
         self.remove(id);
@@ -197,11 +235,11 @@ impl SpatialGrid {
     /// Visit every in-bounds cell at Chebyshev distance exactly `ring` from
     /// `(cx, cy)`; returns how many cells were visited (0 once the ring lies
     /// fully outside the grid).
-    pub fn for_ring(&self, cx: usize, cy: usize, ring: usize, mut f: impl FnMut(&[usize])) -> usize {
+    pub fn for_ring(&self, cx: usize, cy: usize, ring: usize, mut f: impl FnMut(&[u32])) -> usize {
         let (cx, cy, r) = (cx as isize, cy as isize, ring as isize);
         let dims = self.dims as isize;
         let mut visited = 0usize;
-        let mut visit = |x: isize, y: isize, f: &mut dyn FnMut(&[usize])| {
+        let mut visit = |x: isize, y: isize, f: &mut dyn FnMut(&[u32])| {
             if (0..dims).contains(&x) && (0..dims).contains(&y) {
                 f(&self.cells[(y * dims + x) as usize]);
                 visited += 1;
@@ -304,7 +342,7 @@ mod tests {
         let pts = place_uniform_disk(&mut rng, 200, 50.0);
         let g = SpatialGrid::build(&pts, 50.0);
         let (cx, cy) = g.cell_xy(&pts[0]);
-        let mut seen = Vec::new();
+        let mut seen: Vec<u32> = Vec::new();
         for ring in 0.. {
             let visited = g.for_ring(cx, cy, ring, |cell| seen.extend_from_slice(cell));
             if visited == 0 {
@@ -313,6 +351,28 @@ mod tests {
         }
         seen.sort_unstable();
         assert_eq!(seen, (0..200).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_build_matches_serial_build() {
+        let mut rng = Rng::new(11);
+        let pts = place_uniform_disk(&mut rng, 3000, 50.0);
+        let serial = SpatialGrid::build(&pts, 50.0);
+        for threads in [1usize, 2, 4] {
+            let par = SpatialGrid::build_parallel(&pts, 50.0, &FixedPool::new(threads));
+            assert_eq!(par.len(), serial.len());
+            assert_eq!(par.dims(), serial.dims());
+            // Identical bucket contents in identical order: ring walks over
+            // either grid see the same occupant sequence.
+            let (cx, cy) = serial.cell_xy(&pts[0]);
+            for ring in 0..par.dims() {
+                let mut a: Vec<u32> = Vec::new();
+                let mut b: Vec<u32> = Vec::new();
+                serial.for_ring(cx, cy, ring, |cell| a.extend_from_slice(cell));
+                par.for_ring(cx, cy, ring, |cell| b.extend_from_slice(cell));
+                assert_eq!(a, b, "threads={threads} ring={ring}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Compact bit-per-element membership sets for the fleet memory diet.
+//!
+//! The dynamic fleet used to carry `Vec<bool>` flags (1 byte per client per
+//! flag) and `HashSet<usize>` membership sets in the repair path. At 1M
+//! clients that is megabytes of cold state and hash churn on the hot path.
+//! [`BitSet`] packs the same information 8× denser, iterates set members in
+//! ascending order (the order every deterministic pairing loop already
+//! requires), and supports `set[i]` reads via `Index` so existing call sites
+//! keep their shape.
+
+use std::ops::Index;
+
+/// Fixed-capacity bit set over `0..len`. Out-of-range queries return
+/// `false` rather than panicking (mirrors `HashSet::contains`).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BitSet {
+    words: Vec<u64>,
+    len: usize,
+}
+
+static TRUE: bool = true;
+static FALSE: bool = false;
+
+impl BitSet {
+    /// Empty set with capacity for elements `0..n`.
+    pub fn new(n: usize) -> Self {
+        BitSet {
+            words: vec![0; n.div_ceil(64)],
+            len: n,
+        }
+    }
+
+    /// Set with capacity `n` and exactly `ids` present.
+    pub fn from_ids(n: usize, ids: impl IntoIterator<Item = usize>) -> Self {
+        let mut s = BitSet::new(n);
+        for i in ids {
+            s.insert(i);
+        }
+        s
+    }
+
+    /// Set with capacity `n` and every element present.
+    pub fn full(n: usize) -> Self {
+        let mut s = BitSet::new(n);
+        for w in &mut s.words {
+            *w = !0;
+        }
+        if n % 64 != 0 {
+            if let Some(last) = s.words.last_mut() {
+                *last &= (1u64 << (n % 64)) - 1;
+            }
+        }
+        s
+    }
+
+    /// Capacity (NOT the number of set bits — see [`BitSet::count`]).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// True iff no bit is set.
+    pub fn is_clear(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// Number of set bits.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    #[inline]
+    pub fn contains(&self, i: usize) -> bool {
+        i < self.len && self.words[i / 64] & (1u64 << (i % 64)) != 0
+    }
+
+    #[inline]
+    pub fn insert(&mut self, i: usize) {
+        debug_assert!(i < self.len, "BitSet::insert out of range: {i}");
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    #[inline]
+    pub fn remove(&mut self, i: usize) {
+        debug_assert!(i < self.len, "BitSet::remove out of range: {i}");
+        self.words[i / 64] &= !(1u64 << (i % 64));
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        if v {
+            self.insert(i);
+        } else {
+            self.remove(i);
+        }
+    }
+
+    /// Clear every bit, keeping capacity.
+    pub fn clear(&mut self) {
+        for w in &mut self.words {
+            *w = 0;
+        }
+    }
+
+    /// Ascending iterator over set elements (word-skipping, O(set bits +
+    /// words)).
+    pub fn iter(&self) -> BitSetIter<'_> {
+        BitSetIter {
+            set: self,
+            word_ix: 0,
+            word: self.words.first().copied().unwrap_or(0),
+        }
+    }
+
+    /// Collect the set elements ascending.
+    pub fn to_vec(&self) -> Vec<usize> {
+        self.iter().collect()
+    }
+}
+
+/// `set[i]` read access so `Vec<bool>` call sites keep compiling after the
+/// memory diet. Mutation still goes through [`BitSet::set`] / `insert` /
+/// `remove` (a bit has no addressable `&mut bool`).
+impl Index<usize> for BitSet {
+    type Output = bool;
+    #[inline]
+    fn index(&self, i: usize) -> &bool {
+        if self.contains(i) {
+            &TRUE
+        } else {
+            &FALSE
+        }
+    }
+}
+
+pub struct BitSetIter<'a> {
+    set: &'a BitSet,
+    word_ix: usize,
+    word: u64,
+}
+
+impl Iterator for BitSetIter<'_> {
+    type Item = usize;
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        while self.word == 0 {
+            self.word_ix += 1;
+            if self.word_ix >= self.set.words.len() {
+                return None;
+            }
+            self.word = self.set.words[self.word_ix];
+        }
+        let bit = self.word.trailing_zeros() as usize;
+        self.word &= self.word - 1;
+        Some(self.word_ix * 64 + bit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn insert_remove_contains() {
+        let mut s = BitSet::new(130);
+        assert!(!s.contains(0));
+        s.insert(0);
+        s.insert(64);
+        s.insert(129);
+        assert!(s.contains(0) && s.contains(64) && s.contains(129));
+        assert!(s[64] && !s[63]);
+        assert_eq!(s.count(), 3);
+        s.remove(64);
+        assert!(!s.contains(64));
+        assert_eq!(s.to_vec(), vec![0, 129]);
+        assert!(!s.contains(1000)); // out of range: false, no panic
+    }
+
+    #[test]
+    fn full_and_clear() {
+        let s = BitSet::full(67);
+        assert_eq!(s.count(), 67);
+        assert_eq!(s.to_vec(), (0..67).collect::<Vec<_>>());
+        let mut s = s;
+        s.clear();
+        assert!(s.is_clear());
+        assert_eq!(s.len(), 67);
+    }
+
+    #[test]
+    fn iter_matches_reference_under_random_ops() {
+        let mut rng = Rng::new(0xB175);
+        for n in [1usize, 63, 64, 65, 200, 513] {
+            let mut s = BitSet::new(n);
+            let mut reference = vec![false; n];
+            for _ in 0..4 * n {
+                let i = rng.below(n as u64) as usize;
+                if rng.below(3) == 0 {
+                    s.remove(i);
+                    reference[i] = false;
+                } else {
+                    s.insert(i);
+                    reference[i] = true;
+                }
+            }
+            let want: Vec<usize> = (0..n).filter(|&i| reference[i]).collect();
+            assert_eq!(s.to_vec(), want, "n={n}");
+            assert_eq!(s.count(), want.len());
+            for i in 0..n {
+                assert_eq!(s[i], reference[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn from_ids_round_trip() {
+        let s = BitSet::from_ids(100, [3, 97, 42]);
+        assert_eq!(s.to_vec(), vec![3, 42, 97]);
+    }
+}

@@ -1,0 +1,433 @@
+//! Bucket priority queue over order-preserving `f64` keys — the persistent
+//! edge ordering behind the incremental matcher (DESIGN.md §10).
+//!
+//! The greedy matcher consumes candidate edges in `(weight desc, (i, j) asc)`
+//! order. A full rebuild pays an O(E log E) sort per epoch even when almost
+//! nothing changed. [`BucketQueue`] keeps that order alive *between* epochs:
+//!
+//! * [`weight_key`] maps an `f64` weight to a `u64` whose unsigned order is
+//!   exactly `f64::total_cmp` order, so integer compares reproduce the float
+//!   sort bit-for-bit (including `-0.0 < +0.0` and NaN placement).
+//! * The key's top 16 bits pick one of 65 536 buckets; buckets are therefore
+//!   disjoint, contiguous key ranges and descending bucket order is
+//!   descending key order between buckets.
+//! * Each bucket holds a sorted `main` run plus an unsorted `appendix` of
+//!   recent inserts; removals tombstone in place. A bucket is re-sorted
+//!   ("rescanned") lazily, on first walk after it was touched — an epoch that
+//!   dirties E' of E edges re-sorts only the buckets containing those E'
+//!   edges.
+//! * A two-level occupancy bitmap (1024 words + 16 summary words) makes the
+//!   descending walk skip empty buckets in O(1) per skip, so sparse queues
+//!   walk in O(live + occupied buckets).
+//!
+//! Entries are `(key, a, b)` with `a < b` the edge endpoints; within a bucket
+//! the sort is `(key desc, a asc, b asc)` — concatenated over descending
+//! buckets this equals the global rebuild sort order exactly (the
+//! quantization picks the bucket, never the order). Handles returned by
+//! [`BucketQueue::insert`] are stable across rescans and are the caller's
+//! link from its edge store into the queue.
+
+use crate::telemetry::registry::Counter;
+
+/// Number of buckets: top 16 bits of the order-preserving key.
+pub const BUCKETS: usize = 1 << 16;
+
+const TOMB: u32 = u32::MAX;
+/// Appendix flag on the bucket half of a handle's location word.
+const IN_APP: u32 = 1 << 16;
+
+/// Map `w` to a `u64` whose **unsigned** order equals `f64::total_cmp`
+/// order: flip all bits of negatives, flip only the sign bit of
+/// non-negatives. Monotone and injective, so sorting keys descending is
+/// exactly sorting weights descending under `total_cmp`.
+#[inline]
+pub fn weight_key(w: f64) -> u64 {
+    let b = w.to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b | (1u64 << 63)
+    }
+}
+
+#[derive(Clone, Copy)]
+struct Entry {
+    key: u64,
+    a: u32,
+    b: u32,
+    /// Stable handle of this entry, or [`TOMB`] for a tombstone in `main`.
+    h: u32,
+}
+
+#[derive(Default)]
+struct Bucket {
+    /// Sorted `(key desc, a asc, b asc)`, possibly holding tombstones.
+    main: Vec<Entry>,
+    /// Unsorted recent inserts (tombstone-free: appendix removals swap).
+    app: Vec<Entry>,
+    /// Tombstones in `main`.
+    dead: u32,
+    /// Live entries in `main` + `app`.
+    live: u32,
+}
+
+/// Persistent descending-order edge queue. See module docs.
+pub struct BucketQueue {
+    buckets: Vec<Bucket>,
+    /// Handle → `(bucket | IN_APP?, position)`.
+    loc: Vec<(u32, u32)>,
+    free: Vec<u32>,
+    /// Bit per bucket: any live entry?
+    words: Vec<u64>,
+    /// Bit per word of `words`.
+    summary: [u64; BUCKETS / 64 / 64],
+    live: usize,
+}
+
+impl Default for BucketQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BucketQueue {
+    pub fn new() -> Self {
+        BucketQueue {
+            buckets: (0..BUCKETS).map(|_| Bucket::default()).collect(),
+            loc: Vec::new(),
+            free: Vec::new(),
+            words: vec![0; BUCKETS / 64],
+            summary: [0; BUCKETS / 64 / 64],
+            live: 0,
+        }
+    }
+
+    /// Live entry count.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    #[inline]
+    fn bucket_of(key: u64) -> usize {
+        (key >> 48) as usize
+    }
+
+    #[inline]
+    fn mark_occupied(&mut self, b: usize) {
+        self.words[b / 64] |= 1u64 << (b % 64);
+        self.summary[b / 64 / 64] |= 1u64 << ((b / 64) % 64);
+    }
+
+    #[inline]
+    fn mark_empty(&mut self, b: usize) {
+        let w = b / 64;
+        self.words[w] &= !(1u64 << (b % 64));
+        if self.words[w] == 0 {
+            self.summary[w / 64] &= !(1u64 << (w % 64));
+        }
+    }
+
+    /// Insert edge `(a, b)` (`a < b`) with order key `key`; returns a stable
+    /// handle for later [`remove`](Self::remove) /
+    /// [`update_key`](Self::update_key).
+    pub fn insert(&mut self, key: u64, a: u32, b: u32) -> u32 {
+        debug_assert!(a < b && b < TOMB);
+        let h = match self.free.pop() {
+            Some(h) => h,
+            None => {
+                self.loc.push((0, 0));
+                (self.loc.len() - 1) as u32
+            }
+        };
+        self.place(h, key, a, b);
+        crate::tm_count!(Counter::MatcherBucketInserts, 1);
+        h
+    }
+
+    /// Put entry `h` into its key's bucket appendix.
+    fn place(&mut self, h: u32, key: u64, a: u32, b: u32) {
+        let bi = Self::bucket_of(key);
+        let bucket = &mut self.buckets[bi];
+        bucket.app.push(Entry { key, a, b, h });
+        bucket.live += 1;
+        self.loc[h as usize] = (bi as u32 | IN_APP, (self.buckets[bi].app.len() - 1) as u32);
+        self.live += 1;
+        if self.buckets[bi].live == 1 {
+            self.mark_occupied(bi);
+        }
+    }
+
+    /// Remove the entry behind handle `h` and retire the handle.
+    pub fn remove(&mut self, h: u32) {
+        self.unplace(h);
+        self.free.push(h);
+        crate::tm_count!(Counter::MatcherBucketRemovals, 1);
+    }
+
+    /// Detach entry `h` from its bucket without retiring the handle.
+    fn unplace(&mut self, h: u32) {
+        let (lw, pos) = self.loc[h as usize];
+        let bi = (lw & !IN_APP) as usize;
+        let bucket = &mut self.buckets[bi];
+        if lw & IN_APP != 0 {
+            // Appendix is unsorted: swap-remove and fix the moved entry.
+            let pos = pos as usize;
+            bucket.app.swap_remove(pos);
+            if let Some(moved) = bucket.app.get(pos) {
+                self.loc[moved.h as usize] = (bi as u32 | IN_APP, pos as u32);
+            }
+        } else {
+            // Main is sorted: tombstone in place, compact on next rescan.
+            let e = &mut bucket.main[pos as usize];
+            debug_assert_eq!(e.h, h);
+            e.h = TOMB;
+            bucket.dead += 1;
+        }
+        let bucket = &mut self.buckets[bi];
+        bucket.live -= 1;
+        self.live -= 1;
+        if bucket.live == 0 {
+            // Nothing live left: drop tombstones and appendix wholesale.
+            bucket.main.clear();
+            bucket.app.clear();
+            bucket.dead = 0;
+            self.mark_empty(bi);
+        }
+    }
+
+    /// Move entry `h` to a new key, keeping the handle stable.
+    pub fn update_key(&mut self, h: u32, key: u64) {
+        let (lw, pos) = self.loc[h as usize];
+        let bi = (lw & !IN_APP) as usize;
+        let (a, b, old_key) = {
+            let bucket = &self.buckets[bi];
+            let e = if lw & IN_APP != 0 {
+                &bucket.app[pos as usize]
+            } else {
+                &bucket.main[pos as usize]
+            };
+            (e.a, e.b, e.key)
+        };
+        if old_key == key {
+            return;
+        }
+        if Self::bucket_of(old_key) == bi && lw & IN_APP != 0 {
+            // Same bucket, already in the (unsorted) appendix: patch in place.
+            self.buckets[bi].app[pos as usize].key = key;
+            return;
+        }
+        self.unplace(h);
+        self.place(h, key, a, b);
+    }
+
+    /// Sort `bucket`'s live entries into `main`, clearing tombstones and the
+    /// appendix, and refresh handle locations. No-op when already normal.
+    fn normalize(&mut self, bi: usize) {
+        let bucket = &mut self.buckets[bi];
+        if bucket.app.is_empty() && bucket.dead == 0 {
+            return;
+        }
+        let mut merged: Vec<Entry> = Vec::with_capacity(bucket.live as usize);
+        merged.extend(bucket.main.iter().filter(|e| e.h != TOMB));
+        merged.extend(bucket.app.drain(..));
+        merged.sort_unstable_by(|p, q| {
+            q.key
+                .cmp(&p.key)
+                .then_with(|| (p.a, p.b).cmp(&(q.a, q.b)))
+        });
+        crate::tm_count!(Counter::MatcherBucketRescans, merged.len() as u64);
+        bucket.main = merged;
+        bucket.dead = 0;
+        debug_assert_eq!(bucket.main.len(), bucket.live as usize);
+        for (pos, e) in self.buckets[bi].main.iter().enumerate() {
+            self.loc[e.h as usize] = (bi as u32, pos as u32);
+        }
+    }
+
+    /// Visit live entries in `(key desc, a asc, b asc)` order. Buckets
+    /// touched since the last walk are re-sorted on the way. `f` returns
+    /// `false` to stop early (the caller saw enough edges).
+    pub fn for_each_desc(&mut self, mut f: impl FnMut(u64, u32, u32) -> bool) {
+        for si in (0..self.summary.len()).rev() {
+            let mut sw = self.summary[si];
+            while sw != 0 {
+                let wbit = 63 - sw.leading_zeros() as usize;
+                sw &= !(1u64 << wbit);
+                let wi = si * 64 + wbit;
+                let mut w = self.words[wi];
+                while w != 0 {
+                    let bbit = 63 - w.leading_zeros() as usize;
+                    w &= !(1u64 << bbit);
+                    let bi = wi * 64 + bbit;
+                    self.normalize(bi);
+                    for e in &self.buckets[bi].main {
+                        if e.h != TOMB && !f(e.key, e.a, e.b) {
+                            return;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Drop everything, keeping allocated capacity where cheap.
+    pub fn clear(&mut self) {
+        for si in 0..self.summary.len() {
+            let mut sw = self.summary[si];
+            while sw != 0 {
+                let wbit = 63 - sw.leading_zeros() as usize;
+                sw &= !(1u64 << wbit);
+                let wi = si * 64 + wbit;
+                let mut w = self.words[wi];
+                self.words[wi] = 0;
+                while w != 0 {
+                    let bbit = 63 - w.leading_zeros() as usize;
+                    w &= !(1u64 << bbit);
+                    let bucket = &mut self.buckets[wi * 64 + bbit];
+                    bucket.main.clear();
+                    bucket.app.clear();
+                    bucket.dead = 0;
+                    bucket.live = 0;
+                }
+            }
+            self.summary[si] = 0;
+        }
+        self.loc.clear();
+        self.free.clear();
+        self.live = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeSet;
+
+    fn drain_desc(q: &mut BucketQueue) -> Vec<(u64, u32, u32)> {
+        let mut out = Vec::new();
+        q.for_each_desc(|k, a, b| {
+            out.push((k, a, b));
+            true
+        });
+        out
+    }
+
+    /// Reference order: `(key desc, a asc, b asc)`.
+    fn ref_sorted(set: &BTreeSet<(u64, u32, u32)>) -> Vec<(u64, u32, u32)> {
+        let mut v: Vec<_> = set.iter().copied().collect();
+        v.sort_unstable_by(|p, q| q.0.cmp(&p.0).then_with(|| (p.1, p.2).cmp(&(q.1, q.2))));
+        v
+    }
+
+    #[test]
+    fn weight_key_orders_like_total_cmp() {
+        let vals = [
+            f64::NEG_INFINITY,
+            -1e300,
+            -1.0,
+            -1e-320, // subnormal
+            -0.0,
+            0.0,
+            1e-320,
+            1.0,
+            1e300,
+            f64::INFINITY,
+            f64::NAN,
+            -f64::NAN,
+        ];
+        for &x in &vals {
+            for &y in &vals {
+                assert_eq!(
+                    weight_key(x).cmp(&weight_key(y)),
+                    x.total_cmp(&y),
+                    "x={x:?} y={y:?}"
+                );
+            }
+        }
+        // -0.0 and +0.0 are distinct keys in total_cmp order.
+        assert!(weight_key(-0.0) < weight_key(0.0));
+    }
+
+    #[test]
+    fn matches_reference_under_random_churn() {
+        let mut rng = Rng::new(0xB0C4);
+        let mut q = BucketQueue::new();
+        let mut reference: BTreeSet<(u64, u32, u32)> = BTreeSet::new();
+        let mut handles: Vec<(u32, (u64, u32, u32))> = Vec::new();
+        for step in 0..2000u32 {
+            let op = rng.below(10);
+            if op < 6 || handles.is_empty() {
+                // Insert: weights clustered so buckets collide.
+                let w = (rng.f64() - 0.5) * if rng.below(2) == 0 { 1.0 } else { 1e6 };
+                let a = rng.below(500) as u32;
+                let b = a + 1 + rng.below(500) as u32;
+                let k = weight_key(w);
+                if reference.insert((k, a, b)) {
+                    let h = q.insert(k, a, b);
+                    handles.push((h, (k, a, b)));
+                }
+            } else if op < 8 {
+                let ix = rng.below(handles.len() as u64) as usize;
+                let (h, e) = handles.swap_remove(ix);
+                q.remove(h);
+                reference.remove(&e);
+            } else {
+                let ix = rng.below(handles.len() as u64) as usize;
+                let (h, e) = handles[ix];
+                let k2 = weight_key((rng.f64() - 0.5) * 3.0);
+                let e2 = (k2, e.1, e.2);
+                if e2 == e || reference.contains(&e2) {
+                    continue;
+                }
+                q.update_key(h, k2);
+                reference.remove(&e);
+                reference.insert(e2);
+                handles[ix] = (h, e2);
+            }
+            assert_eq!(q.len(), reference.len(), "step {step}");
+            // Walk (and thus normalize) periodically, not every step, so
+            // appendix/tombstone paths actually accumulate state.
+            if step % 37 == 0 {
+                assert_eq!(drain_desc(&mut q), ref_sorted(&reference), "step {step}");
+            }
+        }
+        assert_eq!(drain_desc(&mut q), ref_sorted(&reference));
+        q.clear();
+        assert!(q.is_empty());
+        assert!(drain_desc(&mut q).is_empty());
+    }
+
+    #[test]
+    fn early_exit_stops_walk() {
+        let mut q = BucketQueue::new();
+        for i in 0..100u32 {
+            q.insert(weight_key(i as f64), i, i + 1);
+        }
+        let mut seen = 0;
+        q.for_each_desc(|_, _, _| {
+            seen += 1;
+            seen < 10
+        });
+        assert_eq!(seen, 10);
+    }
+
+    #[test]
+    fn ties_order_by_endpoints_ascending() {
+        let mut q = BucketQueue::new();
+        let k = weight_key(1.5);
+        q.insert(k, 5, 9);
+        q.insert(k, 1, 7);
+        q.insert(k, 1, 3);
+        q.insert(k, 5, 6);
+        let got = drain_desc(&mut q);
+        assert_eq!(
+            got,
+            vec![(k, 1, 3), (k, 1, 7), (k, 5, 6), (k, 5, 9)]
+        );
+    }
+}

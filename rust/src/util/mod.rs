@@ -1,7 +1,10 @@
 //! Cross-cutting substrates built from scratch for the offline environment:
 //! RNG, JSON, logging, statistics, a property-testing harness, fork-join
-//! parallelism and scratch index maps.
+//! parallelism, scratch index maps, packed bit sets and the bucket priority
+//! queue behind the incremental matcher.
 
+pub mod bitset;
+pub mod bucketq;
 pub mod index;
 pub mod json;
 pub mod logging;

@@ -1,0 +1,355 @@
+//! Property suite for the persistent cross-round matcher (DESIGN.md §10).
+//!
+//! The contract under test is absolute: after every fleet-dynamics epoch —
+//! churn, mobility, straggler frequency flips, global shadowing — the
+//! [`IncrementalMatcher`] must reproduce the batch rebuild
+//! (`SparseCandidateGraph::over_members` + `match_candidates`) **bit for
+//! bit**: same pairs in the same order, same solos, same live edge count.
+//! That holds for every [`EdgeWeightSpec`] (including the co-designed
+//! `SplitCost` objective) and for every thread count.
+//!
+//! The `scale_*` test is the acceptance path CI's release smoke job runs:
+//! a million-client fleet (200k in debug so `cargo test -q` stays usable)
+//! through initial pairing, a churn-repair epoch and one engine round,
+//! with a wall-clock bound enforced in release.
+
+use fedpairing::config::{ExperimentConfig, PairingMode, ScenarioConfig, ScenarioKind};
+use fedpairing::fleet::{maintain_matching_session, FleetDynamics, PairingSession};
+use fedpairing::pairing::{
+    match_candidates, EdgeWeightSpec, IncrementalMatcher, SparseCandidateGraph,
+};
+use fedpairing::sim::engine::RoundEngine;
+use fedpairing::sim::latency::{Fleet, FleetView, Schedule};
+use fedpairing::sim::profile::ModelProfile;
+use fedpairing::split::SplitCostModel;
+use fedpairing::util::index::InverseIndex;
+use fedpairing::util::pool::FixedPool;
+use fedpairing::util::proptest::{check, Gen};
+use fedpairing::util::rng::Rng;
+
+/// A scenario that moves everything the matcher watches: membership
+/// (departures/rejoins), positions (mobility), frequencies (stragglers)
+/// and the channel (shadowing).
+fn churny_cfg(n: usize, seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.n_clients = n;
+    cfg.samples_per_client = 64;
+    cfg.seed = seed;
+    cfg.scenario = ScenarioConfig::preset(ScenarioKind::LossyRadio);
+    cfg.scenario.p_depart = 0.2;
+    cfg.scenario.p_rejoin = 0.4;
+    cfg.scenario.mobility_m = 4.0;
+    cfg.scenario.p_straggle = 0.15;
+    cfg.scenario.shadowing_std_db = 2.0;
+    cfg
+}
+
+/// Drive `epochs` dynamics rounds, asserting the incremental matcher equals
+/// the full rebuild after every one.
+fn assert_tracks_rebuild(cfg: &ExperimentConfig, spec: EdgeWeightSpec<'_>, epochs: usize) {
+    let base = Fleet::sample(cfg, &mut Rng::new(cfg.seed));
+    let mut dynamics = FleetDynamics::new(cfg, base);
+    let (k_near, k_freq) = (cfg.backend.k_near, cfg.backend.k_freq);
+    let mut matcher = IncrementalMatcher::new(dynamics.universe().n(), k_near, k_freq);
+    let pool = FixedPool::new(1);
+    for round in 1..=epochs {
+        dynamics.step(round);
+        let channel = dynamics.channel();
+        let alive = dynamics.alive_indices();
+        let inc = matcher
+            .update(dynamics.universe(), &channel, dynamics.grid(), &alive, &spec, &pool)
+            .clone();
+        let g = SparseCandidateGraph::over_members(
+            dynamics.universe(),
+            &channel,
+            dynamics.grid(),
+            &alive,
+            spec,
+            k_near,
+            k_freq,
+        );
+        let full = match_candidates(&g, &alive);
+        assert_eq!(inc, full, "round {round}: matcher diverged from rebuild");
+        assert_eq!(
+            matcher.edge_count(),
+            g.edges().len(),
+            "round {round}: live edge set diverged"
+        );
+    }
+}
+
+#[test]
+fn incremental_tracks_rebuild_eq5() {
+    let cfg = churny_cfg(120, 11);
+    let spec = EdgeWeightSpec::Eq5 {
+        alpha: cfg.alpha,
+        beta: cfg.beta,
+    };
+    assert_tracks_rebuild(&cfg, spec, 25);
+}
+
+#[test]
+fn incremental_tracks_rebuild_neg_distance() {
+    // Location baseline: geometric candidates only (no frequency band).
+    assert_tracks_rebuild(&churny_cfg(120, 12), EdgeWeightSpec::NegDistance, 25);
+}
+
+#[test]
+fn incremental_tracks_rebuild_freq_gap() {
+    // Compute baseline: frequency-band candidates only (no grid scans).
+    assert_tracks_rebuild(&churny_cfg(120, 13), EdgeWeightSpec::FreqGap, 25);
+}
+
+#[test]
+fn incremental_tracks_rebuild_split_cost() {
+    // Co-designed objective: weights come from the split planner's memoized
+    // cut optimization — impure spec, serial weight evaluation.
+    let cfg = churny_cfg(80, 14);
+    let model = SplitCostModel::new(
+        ModelProfile::from_preset(cfg.model),
+        Schedule {
+            batch_size: 32,
+            epochs: cfg.local_epochs,
+        },
+        cfg.compute,
+        cfg.split,
+    );
+    assert_tracks_rebuild(&cfg, EdgeWeightSpec::SplitCost(&model), 15);
+}
+
+#[test]
+fn incremental_thread_counts_bit_identical() {
+    // n past the parallel threshold so the initial epoch genuinely fans out
+    // scans and weight evaluation over fixed-size chunks; later epochs mix
+    // serial (small dirty sets) with the same merged ordering.
+    let cfg = churny_cfg(6_000, 21);
+    let specs = [
+        EdgeWeightSpec::Eq5 {
+            alpha: cfg.alpha,
+            beta: cfg.beta,
+        },
+        EdgeWeightSpec::NegDistance,
+        EdgeWeightSpec::FreqGap,
+    ];
+    for spec in specs {
+        let base = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+        let mut d1 = FleetDynamics::new(&cfg, base);
+        let base = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+        let mut d4 = FleetDynamics::new(&cfg, base);
+        let n = d1.universe().n();
+        let mut m1 = IncrementalMatcher::new(n, cfg.backend.k_near, cfg.backend.k_freq);
+        let mut m4 = IncrementalMatcher::new(n, cfg.backend.k_near, cfg.backend.k_freq);
+        let p1 = FixedPool::new(1);
+        let p4 = FixedPool::new(4);
+        for round in 1..=5 {
+            d1.step(round);
+            d4.step(round);
+            let (c1, c4) = (d1.channel(), d4.channel());
+            let (a1, a4) = (d1.alive_indices(), d4.alive_indices());
+            assert_eq!(a1, a4);
+            let r1 = m1
+                .update(d1.universe(), &c1, d1.grid(), &a1, &spec, &p1)
+                .clone();
+            let r4 = m4
+                .update(d4.universe(), &c4, d4.grid(), &a4, &spec, &p4)
+                .clone();
+            assert_eq!(r1, r4, "{spec:?} round {round}: thread count leaked into result");
+        }
+    }
+}
+
+#[test]
+fn incremental_matches_rebuild_on_random_traces() {
+    // Randomized traces: fleet size, seed and scenario intensity all drawn
+    // per case; every epoch of every case must match the rebuild exactly.
+    check(
+        12,
+        Gen::new(|rng| {
+            (
+                30 + rng.below(120),
+                rng.next_u64() % 10_000,
+                rng.below(8) as f64,
+            )
+        }),
+        |&(n, seed, mobility)| {
+            let mut cfg = churny_cfg(n, seed);
+            cfg.scenario.mobility_m = mobility;
+            let spec = EdgeWeightSpec::Eq5 {
+                alpha: cfg.alpha,
+                beta: cfg.beta,
+            };
+            let base = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+            let mut dynamics = FleetDynamics::new(&cfg, base);
+            let mut matcher =
+                IncrementalMatcher::new(dynamics.universe().n(), cfg.backend.k_near, cfg.backend.k_freq);
+            let pool = FixedPool::new(1);
+            for round in 1..=8 {
+                dynamics.step(round);
+                let channel = dynamics.channel();
+                let alive = dynamics.alive_indices();
+                let inc = matcher
+                    .update(dynamics.universe(), &channel, dynamics.grid(), &alive, &spec, &pool)
+                    .clone();
+                let g = SparseCandidateGraph::over_members(
+                    dynamics.universe(),
+                    &channel,
+                    dynamics.grid(),
+                    &alive,
+                    spec,
+                    cfg.backend.k_near,
+                    cfg.backend.k_freq,
+                );
+                if inc != match_candidates(&g, &alive) {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn incremental_skips_solve_when_nothing_moves() {
+    // A frozen fleet (stable scenario, no shadowing) must short-circuit to
+    // the cached matching: exactly one solve over any number of epochs.
+    let mut cfg = ExperimentConfig::default();
+    cfg.n_clients = 90;
+    cfg.samples_per_client = 64;
+    cfg.scenario = ScenarioConfig::preset(ScenarioKind::Stable);
+    let base = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+    let mut dynamics = FleetDynamics::new(&cfg, base);
+    let spec = EdgeWeightSpec::Eq5 {
+        alpha: cfg.alpha,
+        beta: cfg.beta,
+    };
+    let mut matcher =
+        IncrementalMatcher::new(dynamics.universe().n(), cfg.backend.k_near, cfg.backend.k_freq);
+    let pool = FixedPool::new(1);
+    let mut first = None;
+    for round in 1..=10 {
+        dynamics.step(round);
+        let channel = dynamics.channel();
+        let alive = dynamics.alive_indices();
+        let m = matcher
+            .update(dynamics.universe(), &channel, dynamics.grid(), &alive, &spec, &pool)
+            .clone();
+        match &first {
+            None => first = Some(m),
+            Some(f) => assert_eq!(f, &m, "round {round}: cached matching drifted"),
+        }
+    }
+    assert_eq!(matcher.solves, 1, "frozen fleet should solve exactly once");
+}
+
+#[test]
+fn scale_incremental_million_client_round() {
+    // The acceptance path: release runs the full 1M fleet; debug keeps
+    // `cargo test -q` usable at 200k. Initial pairing through the
+    // persistent matcher, one churn-repair epoch (O(affected), not a
+    // rebuild), a full-rebuild cross-check, then one engine round.
+    let n: usize = if cfg!(debug_assertions) { 200_000 } else { 1_000_000 };
+    let mut cfg = ExperimentConfig::preset("metro-scale").expect("metro-scale preset");
+    cfg.n_clients = n;
+    cfg.seed = 17;
+    cfg.pairing_mode = PairingMode::Incremental;
+    let t0 = std::time::Instant::now();
+    let base = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+    let mut dynamics = FleetDynamics::new(&cfg, base);
+    let mut pairing_rng = Rng::new(cfg.seed ^ 0x9A1F);
+    let mut session = PairingSession::new();
+
+    // Round 1: initial pairing.
+    let ev = dynamics.step(1);
+    let channel = dynamics.channel();
+    assert!(maintain_matching_session(
+        &mut session,
+        &dynamics,
+        &ev,
+        &channel,
+        &cfg,
+        None,
+        &mut pairing_rng
+    ));
+    let alive = dynamics.alive_indices();
+    {
+        let m = session.matching.as_ref().unwrap();
+        assert!(m.is_valid_over(&alive), "initial matching invalid");
+        assert_eq!(m.pairs.len(), alive.len() / 2);
+        assert_eq!(m.solos.len(), alive.len() % 2);
+    }
+    let t_init = t0.elapsed().as_secs_f64();
+
+    // Round 2: churn-repair epoch.
+    let ev = dynamics.step(2);
+    assert!(
+        !ev.departed.is_empty() || !ev.joined.is_empty(),
+        "metro scenario produced no churn at n={n}"
+    );
+    let channel = dynamics.channel();
+    let t1 = std::time::Instant::now();
+    maintain_matching_session(
+        &mut session,
+        &dynamics,
+        &ev,
+        &channel,
+        &cfg,
+        None,
+        &mut pairing_rng,
+    );
+    let t_repair = t1.elapsed().as_secs_f64();
+    let alive = dynamics.alive_indices();
+    let m = session.matching.clone().unwrap();
+    assert!(m.is_valid_over(&alive), "repaired matching invalid");
+
+    // Cross-check: the repaired epoch equals the from-scratch rebuild.
+    let spec = EdgeWeightSpec::for_strategy_with(cfg.pairing, cfg.alpha, cfg.beta, None)
+        .expect("metro strategy has a weight spec");
+    let g = SparseCandidateGraph::over_members(
+        dynamics.universe(),
+        &channel,
+        dynamics.grid(),
+        &alive,
+        spec,
+        cfg.backend.k_near,
+        cfg.backend.k_freq,
+    );
+    assert_eq!(m, match_candidates(&g, &alive), "incremental != rebuild at n={n}");
+
+    // One engine round over the standing matching.
+    let members = dynamics.present_members();
+    let profile = ModelProfile::from_preset(cfg.model);
+    let sched = Schedule {
+        batch_size: 32,
+        epochs: cfg.local_epochs,
+    };
+    let mut engine = RoundEngine::new(&cfg.engine).with_split(cfg.split);
+    let mut inv = InverseIndex::new();
+    inv.rebuild(dynamics.universe().n(), members);
+    let eff = m.restricted_to(members);
+    let cpairs: Vec<(usize, usize)> = eff
+        .pairs
+        .iter()
+        .map(|&(a, b)| (inv.compact(a), inv.compact(b)))
+        .collect();
+    let csolos: Vec<usize> = eff.solos.iter().map(|&s| inv.compact(s)).collect();
+    let view = FleetView::new(dynamics.universe(), members);
+    let rt = engine.fedpairing_round(
+        &view,
+        &cpairs,
+        &csolos,
+        &profile,
+        &sched,
+        &channel,
+        &cfg.compute,
+        true,
+    );
+    assert!(rt.total_s > 0.0, "engine round produced no time");
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "scale_incremental: n={n} init {t_init:.2}s, repair epoch {t_repair:.3}s, \
+         total (incl. rebuild cross-check + engine round) {wall:.2}s"
+    );
+    if !cfg!(debug_assertions) {
+        assert!(wall < 120.0, "1M acceptance too slow: {wall:.1}s");
+    }
+}
