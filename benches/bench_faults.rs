@@ -1,0 +1,138 @@
+//! Fault-injection overhead and deadline-vs-wait-for-all bench (DESIGN.md
+//! §11) on the 50k-client lossy-radio preset.
+//!
+//! Two acceptance shapes:
+//!
+//! 1. **Disabled-path overhead** — the fault machinery must be free when
+//!    nothing fires. Measured A/B (best of 3): hazards disarmed vs an armed
+//!    model with zero hazards and a never-binding deadline. The armed side
+//!    replays every unit through the fault pass, so its delta is an upper
+//!    bound on what a disarmed run (which skips the pass entirely) can pay.
+//!    Gate: < 1 %.
+//! 2. **Deadline beats wait-for-all** — under injected stragglers (link
+//!    drops with exponential-backoff retries), a server deadline at 75 % of
+//!    the fault-free mean round must finish the run in less simulated time
+//!    than waiting for every retry, at the price of lost updates (reported,
+//!    and required > 0 so the tradeoff is real, not vacuous).
+//!
+//! Emits `BENCH_faults.json` for CI; FAIL lines are grepped like the other
+//! scale benches.
+
+#[path = "common.rs"]
+mod common;
+
+use fedpairing::config::{Algorithm, ExperimentConfig, ScenarioConfig, ScenarioKind};
+use fedpairing::fleet::{simulate_scenario, ScenarioRun};
+use fedpairing::util::json::{Json, JsonObj};
+
+const N: usize = 50_000;
+const ROUNDS: usize = 15;
+
+/// Far beyond any makespan: arms the fault pass without ever binding.
+const NEVER_BINDS_S: f64 = 1e30;
+
+fn cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.n_clients = N;
+    c.rounds = ROUNDS;
+    c.algorithm = Algorithm::FedPairing;
+    c.scenario = ScenarioConfig::preset(ScenarioKind::LossyRadio);
+    c
+}
+
+fn sim_total(run: &ScenarioRun) -> f64 {
+    run.result.rounds.last().expect("rounds").sim_total_s
+}
+
+fn lost_updates(run: &ScenarioRun) -> usize {
+    run.result.rounds.iter().map(|r| r.faults.n_lost_updates).sum()
+}
+
+fn main() {
+    println!("bench_faults — fault-pass overhead and deadline cutoff (n={N}, lossy radio)\n");
+
+    // ── Shape 1: the fault pass is free when nothing fires ────────────────
+    let disarmed = cfg();
+    let mut armed = disarmed.clone();
+    armed.faults.deadline_s = NEVER_BINDS_S;
+
+    // One untimed run each: warmup, calibration (fault-free round times) and
+    // the zero-hazard counter check.
+    let clean = simulate_scenario(&disarmed).expect("disarmed run");
+    let armed_run = simulate_scenario(&armed).expect("armed zero-hazard run");
+    let counters_clean = armed_run
+        .result
+        .rounds
+        .iter()
+        .all(|r| r.faults.n_failed == 0 && r.faults.n_retries == 0 && r.faults.n_lost_updates == 0);
+
+    common::report_header();
+    let off = common::bench("faults disarmed", 0, 3, || {
+        common::black_box(simulate_scenario(&disarmed).expect("disarmed run"));
+    });
+    off.report();
+    let on = common::bench("armed, zero hazards (replay only)", 0, 3, || {
+        common::black_box(simulate_scenario(&armed).expect("armed run"));
+    });
+    on.report();
+    let overhead = on.min_s / off.min_s - 1.0;
+    println!("  armed no-op delta (best of 3): {:+.2}%\n", overhead * 100.0);
+
+    // ── Shape 2: deadline partial aggregation vs wait-for-all ─────────────
+    let mean_clean =
+        clean.result.rounds.iter().map(|r| r.sim_round_s).sum::<f64>() / ROUNDS as f64;
+    let mut waitall = disarmed.clone();
+    waitall.faults.link_drop = 0.15;
+    waitall.faults.uplink_loss = 0.05;
+    let mut deadline = waitall.clone();
+    deadline.faults.deadline_s = 0.75 * mean_clean;
+
+    let w = simulate_scenario(&waitall).expect("wait-for-all run");
+    let d = simulate_scenario(&deadline).expect("deadline run");
+    let (w_total, d_total) = (sim_total(&w), sim_total(&d));
+    let (w_lost, d_lost) = (lost_updates(&w), lost_updates(&d));
+    let w_retries: usize = w.result.rounds.iter().map(|r| r.faults.n_retries).sum();
+    println!(
+        "  {:<28} {:>14} {:>12} {:>10}",
+        "recovery policy", "sim total", "lost upd", "retries"
+    );
+    println!("  {:<28} {w_total:>12.0} s {w_lost:>12} {w_retries:>10}", "wait-for-all");
+    println!(
+        "  {:<28} {d_total:>12.0} s {d_lost:>12} {:>10}",
+        format!("deadline @ {:.0} s", deadline.faults.deadline_s),
+        d.result.rounds.iter().map(|r| r.faults.n_retries).sum::<usize>(),
+    );
+    println!("  deadline speedup: {:.2}x\n", w_total / d_total);
+
+    common::check_shape("armed zero-hazard counters all zero", counters_clean);
+    common::check_shape("fault machinery when disabled costs < 1%", overhead < 0.01);
+    common::check_shape("deadline beats wait-for-all sim time", d_total < w_total);
+    common::check_shape("deadline tradeoff is real (loses more updates)", d_lost > w_lost);
+    let rss_mb = common::report_peak_rss();
+
+    let mut out = JsonObj::new();
+    out.insert("bench", Json::str("faults"));
+    out.insert(
+        "workload",
+        Json::str("fedpairing lossy-radio 50k, fault-pass A/B + deadline cutoff"),
+    );
+    out.insert("n", Json::num(N as f64));
+    out.insert("rounds", Json::num(ROUNDS as f64));
+    out.insert("disarmed_wall_s", Json::num(off.min_s));
+    out.insert("armed_zero_wall_s", Json::num(on.min_s));
+    out.insert("armed_noop_overhead_frac", Json::num(overhead));
+    out.insert("mean_clean_round_s", Json::num(mean_clean));
+    out.insert("deadline_s", Json::num(deadline.faults.deadline_s));
+    out.insert("waitall_sim_total_s", Json::num(w_total));
+    out.insert("deadline_sim_total_s", Json::num(d_total));
+    out.insert("deadline_speedup", Json::num(w_total / d_total));
+    out.insert("waitall_lost_updates", Json::num(w_lost as f64));
+    out.insert("deadline_lost_updates", Json::num(d_lost as f64));
+    out.insert("waitall_retries", Json::num(w_retries as f64));
+    if let Some(mb) = rss_mb {
+        out.insert("peak_rss_mib", Json::num(mb));
+    }
+    let path = "BENCH_faults.json";
+    std::fs::write(path, Json::Obj(out).to_string_pretty(2)).expect("write bench json");
+    println!("wrote {path}");
+}

@@ -19,11 +19,12 @@
 use super::{AggregationEvent, Merge, Timeline, UnitKind};
 use crate::config::{Algorithm, ConfigError, ExperimentConfig, SplitPolicy};
 use crate::coordinator::metrics::{streamer_for, RoundRecord, RunResult};
+use crate::faults::{self, AsyncFaults, FaultModel, FaultUnit, UnitSpec};
 use crate::fleet::dynamics::FleetDynamics;
 use crate::fleet::sim_driver::ScenarioRun;
 use crate::fleet::{maintain_matching_session, PairingSession};
 use crate::sim::engine::RoundEngine;
-use crate::sim::latency::{upload_time, Fleet, FleetView, Schedule};
+use crate::sim::latency::{full_local_time, upload_time, Fleet, FleetView, Schedule};
 use crate::sim::profile::ModelProfile;
 use crate::split::SplitCostModel;
 use crate::telemetry::registry::{self, Counter, Gauge, Histo};
@@ -161,6 +162,12 @@ pub fn simulate_async(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigError
     let mut sim_total = 0.0f64;
     let mut engine = RoundEngine::new(&cfg.engine).with_split(cfg.split);
     engine.set_record_units(true);
+    // Fault layer (DESIGN.md §11): units get their faulted (retried /
+    // re-paired) duration at start, in-flight survivors keep it across
+    // reprices, and each merge window folds its fault counters into the
+    // record. A disarmed config plans nothing and stays bit-identical.
+    let fmodel = FaultModel::new(&cfg.faults, cfg.algorithm, cfg.seed);
+    let mut afaults = AsyncFaults::new();
     let mut inv = InverseIndex::new();
     let mut cpairs: Vec<(usize, usize)> = Vec::new();
     let mut csolos: Vec<usize> = Vec::new();
@@ -179,7 +186,10 @@ pub fn simulate_async(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigError
         telemetry.mark("dynamics");
         let mut cancelled = 0usize;
         for &d in &ev.departed {
-            cancelled += tl.cancel_member(d).len();
+            for id in tl.cancel_member(d) {
+                afaults.forget(id);
+                cancelled += 1;
+            }
         }
         let members = dynamics.present_members();
         inv.rebuild(dynamics.universe().n(), members);
@@ -239,16 +249,66 @@ pub fn simulate_async(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigError
                 let nrp = plan.reprice_pairs.len();
                 let ns = plan.start_solos.len();
                 for (k, &(a, b)) in plan.start_pairs.iter().enumerate() {
-                    tl.start_unit(UnitKind::Pair(a, b), ut[k]);
+                    let mut dur = ut[k];
+                    let mut fplan = None;
+                    if fmodel.active() {
+                        let spec = UnitSpec {
+                            unit: FaultUnit::Pair(a, b),
+                            t0: dur,
+                            solo_a: full_local_time(
+                                &view,
+                                inv.compact(a),
+                                &profile,
+                                &sched,
+                                &channel,
+                                &cfg.compute,
+                                true,
+                            )
+                            .1,
+                            solo_b: full_local_time(
+                                &view,
+                                inv.compact(b),
+                                &profile,
+                                &sched,
+                                &channel,
+                                &cfg.compute,
+                                true,
+                            )
+                            .1,
+                        };
+                        let p = fmodel.plan_unit(seq, &spec);
+                        dur = p.dur_s;
+                        fplan = Some(p);
+                    }
+                    let id = tl.start_unit(UnitKind::Pair(a, b), dur);
+                    if let Some(p) = fplan {
+                        afaults.register(id, &p);
+                    }
                 }
                 for (k, &(id, _)) in plan.reprice_pairs.iter().enumerate() {
-                    tl.reprice(id, ut[np + k]);
+                    tl.reprice(id, afaults.reprice(id, ut[np + k]));
                 }
                 for (k, &s) in plan.start_solos.iter().enumerate() {
-                    tl.start_unit(UnitKind::Solo(s), ut[np + nrp + k]);
+                    let mut dur = ut[np + nrp + k];
+                    let mut fplan = None;
+                    if fmodel.active() {
+                        let spec = UnitSpec {
+                            unit: FaultUnit::Solo(s),
+                            t0: dur,
+                            solo_a: 0.0,
+                            solo_b: 0.0,
+                        };
+                        let p = fmodel.plan_unit(seq, &spec);
+                        dur = p.dur_s;
+                        fplan = Some(p);
+                    }
+                    let id = tl.start_unit(UnitKind::Solo(s), dur);
+                    if let Some(p) = fplan {
+                        afaults.register(id, &p);
+                    }
                 }
                 for (k, &(id, _)) in plan.reprice_solos.iter().enumerate() {
-                    tl.reprice(id, ut[np + nrp + ns + k]);
+                    tl.reprice(id, afaults.reprice(id, ut[np + nrp + ns + k]));
                 }
                 rt
             }
@@ -260,10 +320,26 @@ pub fn simulate_async(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigError
                 rt.stages.remap_crit(&plan.view_members);
                 let ut = engine.unit_times();
                 for (k, &m) in plan.start.iter().enumerate() {
-                    tl.start_unit(UnitKind::Solo(m), ut[k]);
+                    let mut dur = ut[k];
+                    let mut fplan = None;
+                    if fmodel.active() {
+                        let spec = UnitSpec {
+                            unit: FaultUnit::Solo(m),
+                            t0: dur,
+                            solo_a: 0.0,
+                            solo_b: 0.0,
+                        };
+                        let p = fmodel.plan_unit(seq, &spec);
+                        dur = p.dur_s;
+                        fplan = Some(p);
+                    }
+                    let id = tl.start_unit(UnitKind::Solo(m), dur);
+                    if let Some(p) = fplan {
+                        afaults.register(id, &p);
+                    }
                 }
                 for (k, &(id, _)) in plan.reprice.iter().enumerate() {
-                    tl.reprice(id, ut[plan.start.len() + k]);
+                    tl.reprice(id, afaults.reprice(id, ut[plan.start.len() + k]));
                 }
                 rt
             }
@@ -285,8 +361,23 @@ pub fn simulate_async(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigError
                 rt.stages.remap_crit(&plan.start);
                 let ut = engine.unit_times();
                 for (k, &m) in plan.start.iter().enumerate() {
-                    let d = ut[k];
-                    tl.start_unit_at(UnitKind::Solo(m), sl_tail, d);
+                    let mut d = ut[k];
+                    let mut fplan = None;
+                    if fmodel.active() {
+                        let spec = UnitSpec {
+                            unit: FaultUnit::Session(m),
+                            t0: d,
+                            solo_a: 0.0,
+                            solo_b: 0.0,
+                        };
+                        let p = fmodel.plan_unit(seq, &spec);
+                        d = p.dur_s;
+                        fplan = Some(p);
+                    }
+                    let id = tl.start_unit_at(UnitKind::Solo(m), sl_tail, d);
+                    if let Some(p) = fplan {
+                        afaults.register(id, &p);
+                    }
                     sl_tail += d;
                 }
                 rt
@@ -310,10 +401,26 @@ pub fn simulate_async(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigError
                 // actual contributors.
                 let ut = engine.unit_times();
                 for (k, &m) in plan.start.iter().enumerate() {
-                    tl.start_unit(UnitKind::Solo(m), ut[k]);
+                    let mut dur = ut[k];
+                    let mut fplan = None;
+                    if fmodel.active() {
+                        let spec = UnitSpec {
+                            unit: FaultUnit::Solo(m),
+                            t0: dur,
+                            solo_a: 0.0,
+                            solo_b: 0.0,
+                        };
+                        let p = fmodel.plan_unit(seq, &spec);
+                        dur = p.dur_s;
+                        fplan = Some(p);
+                    }
+                    let id = tl.start_unit(UnitKind::Solo(m), dur);
+                    if let Some(p) = fplan {
+                        afaults.register(id, &p);
+                    }
                 }
                 for (k, &(id, _)) in plan.reprice.iter().enumerate() {
-                    tl.reprice(id, ut[plan.start.len() + k]);
+                    tl.reprice(id, afaults.reprice(id, ut[plan.start.len() + k]));
                 }
                 rt
             }
@@ -346,6 +453,14 @@ pub fn simulate_async(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigError
         }
         sim_total += total;
         note_merge(&merge, cancelled);
+        // Fault accounting for this merge window (events are stamped
+        // relative to the window's simulated start).
+        for d in &merge.contributors {
+            afaults.forget(d.id);
+        }
+        let (wfaults, wevents) = afaults.take_window();
+        faults::note_outcome(&wfaults, &wevents);
+        telemetry.fault_events(&wevents, sim_total - total);
         let event = AggregationEvent {
             seq,
             t_wall_s: sim_total,
@@ -366,6 +481,7 @@ pub fn simulate_async(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigError
             sim_total_s: sim_total,
             t_wall_s: sim_total,
             staleness_mean: merge.staleness_mean,
+            faults: wfaults,
             mean_cut: rt.mean_cut,
             stages: rt.stages,
         };

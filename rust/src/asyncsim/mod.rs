@@ -22,6 +22,14 @@
 //! the merge fires only after all of them arrive, the merge time is a plain
 //! `f64` max over the same durations the synchronous engine folds —
 //! bit-identical, property-tested in `tests/async_engine.rs`.
+//!
+//! **Faults** (DESIGN.md §11): with `cfg.faults` armed, every unit is
+//! planned through [`crate::faults::FaultModel`] at start — its timeline
+//! duration becomes the recovered (retried / survivor-solo) occupancy, and
+//! members whose update dies in flight are remembered per unit id by
+//! [`crate::faults::AsyncFaults`] so the merge can drop exactly their
+//! payloads. Round deadlines are a synchronous-barrier concept and are
+//! rejected with async mode at config validation.
 
 pub mod driver;
 

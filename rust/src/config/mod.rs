@@ -429,6 +429,134 @@ impl Default for AsyncConfig {
     }
 }
 
+/// Recovery-policy knobs: what a failed transmission costs before giving up
+/// (DESIGN.md §11).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RecoveryConfig {
+    /// Maximum retry attempts per failed transmission (0 = fail fast).
+    pub retry_max: usize,
+    /// First retry backoff in simulated seconds; retry `k` waits
+    /// `backoff_base_s · 2^(k-1)`, jittered.
+    pub backoff_base_s: f64,
+    /// Uniform jitter fraction added on each backoff wait, in `[0, 1]`.
+    pub backoff_jitter: f64,
+}
+
+impl RecoveryConfig {
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if !(self.backoff_base_s.is_finite() && self.backoff_base_s > 0.0) {
+            bail!("recovery backoff_base_s must be finite and > 0, got {}", self.backoff_base_s);
+        }
+        if !(self.backoff_jitter.is_finite() && (0.0..=1.0).contains(&self.backoff_jitter)) {
+            bail!("recovery backoff_jitter must be in [0, 1], got {}", self.backoff_jitter);
+        }
+        // 2^retry_max prices the exponential backoff; beyond 64 doublings the
+        // wait overflows any plausible deadline (and f64 exponent headroom).
+        if self.retry_max > 64 {
+            bail!("recovery retry_max must be <= 64, got {}", self.retry_max);
+        }
+        Ok(())
+    }
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> Self {
+        RecoveryConfig { retry_max: 2, backoff_base_s: 0.5, backoff_jitter: 0.1 }
+    }
+}
+
+/// Mid-round fault-injection hazards plus the recovery policy (DESIGN.md
+/// §11). All hazards and the deadline zero — the default — disarm the
+/// subsystem entirely: the fault pass never runs and every trace is
+/// bit-identical to a fault-free build.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Per-round probability that a client crashes during local compute.
+    pub crash_per_round: f64,
+    /// Probability that a pair (or client↔server split) transfer link drops
+    /// mid-round.
+    pub link_drop: f64,
+    /// Probability that a model upload to the aggregator is lost.
+    pub uplink_loss: f64,
+    /// Server-side round deadline in simulated seconds: updates arriving
+    /// later are dropped and the round aggregates partially. `0` disables.
+    pub deadline_s: f64,
+    pub recovery: RecoveryConfig,
+}
+
+impl FaultConfig {
+    /// Whether any hazard or the deadline is armed.
+    pub fn active(&self) -> bool {
+        self.crash_per_round > 0.0
+            || self.link_drop > 0.0
+            || self.uplink_loss > 0.0
+            || self.deadline_s > 0.0
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        for (name, p) in [
+            ("crash_per_round", self.crash_per_round),
+            ("link_drop", self.link_drop),
+            ("uplink_loss", self.uplink_loss),
+        ] {
+            if !(p.is_finite() && (0.0..=1.0).contains(&p)) {
+                bail!("fault hazard {name} must be a finite probability in [0, 1], got {p}");
+            }
+        }
+        if !(self.deadline_s.is_finite() && self.deadline_s >= 0.0) {
+            bail!(
+                "fault deadline_s must be finite and >= 0 (0 disables), got {}",
+                self.deadline_s
+            );
+        }
+        self.recovery.validate()
+    }
+
+    /// Apply a `--faults` CLI spec: `off` disarms every hazard and the
+    /// deadline; otherwise a comma list of `crash=P` / `link=P` / `uplink=P`.
+    pub fn apply_spec(&mut self, spec: &str) -> Result<(), ConfigError> {
+        if spec.eq_ignore_ascii_case("off") {
+            self.crash_per_round = 0.0;
+            self.link_drop = 0.0;
+            self.uplink_loss = 0.0;
+            self.deadline_s = 0.0;
+            return Ok(());
+        }
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((key, val)) = part.split_once('=') else {
+                bail!("fault spec entry {part:?} must be key=value");
+            };
+            let p: f64 = val
+                .trim()
+                .parse()
+                .map_err(|_| ConfigError(format!("fault spec {key}={val}: not a number")))?;
+            match key.trim() {
+                "crash" => self.crash_per_round = p,
+                "link" => self.link_drop = p,
+                "uplink" => self.uplink_loss = p,
+                other => bail!("unknown fault spec key {other:?} (expected crash/link/uplink)"),
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            crash_per_round: 0.0,
+            link_drop: 0.0,
+            uplink_loss: 0.0,
+            deadline_s: 0.0,
+            recovery: RecoveryConfig::default(),
+        }
+    }
+}
+
 /// Which split-planning policy decides the per-pair model cut (DESIGN.md §7).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SplitPolicy {
@@ -859,6 +987,10 @@ pub struct ExperimentConfig {
     pub aggregation: AggregationMode,
     /// Buffered-aggregation knobs; only read when `aggregation` is `Async`.
     pub async_agg: AsyncConfig,
+    /// Mid-round fault injection + recovery policy (DESIGN.md §11). Fully
+    /// disarmed by default — traces are then bit-identical to a fault-free
+    /// build.
+    pub faults: FaultConfig,
     /// Stream per-round records incrementally to
     /// `<dir>/<name>_<algo>_<dist>.stream.{csv,jsonl}` as they are produced,
     /// instead of only buffering them for the end-of-run sink. `None`
@@ -926,6 +1058,7 @@ impl Default for ExperimentConfig {
             telemetry: TelemetryConfig::default(),
             aggregation: AggregationMode::Sync,
             async_agg: AsyncConfig::default(),
+            faults: FaultConfig::default(),
             stream_out: None,
             model: ModelPreset::Resnet18,
             n_clients: 20,
@@ -994,12 +1127,23 @@ impl ExperimentConfig {
         self.split.validate(self.model.w())?;
         self.telemetry.validate()?;
         self.async_agg.validate()?;
+        self.faults.validate()?;
         // The DES oracle is round-synchronous by construction: it prices one
         // lockstep round at a time and has no notion of units carrying over a
         // merge boundary. Reject the combination instead of silently running
         // the analytic path.
         if self.aggregation == AggregationMode::Async && self.engine.backend == RoundBackend::Des {
             bail!("async aggregation requires the analytic engine (engine.backend = des is round-synchronous)");
+        }
+        // The fault pass replays the engine's recorded per-unit times; the
+        // DES oracle records none, so faults there would silently no-op.
+        if self.faults.active() && self.engine.backend == RoundBackend::Des {
+            bail!("fault injection requires the analytic engine (engine.backend = des records no per-unit times)");
+        }
+        // A server deadline is a round-synchronous concept; buffered
+        // aggregation has no round barrier for it to cut.
+        if self.faults.deadline_s > 0.0 && self.aggregation == AggregationMode::Async {
+            bail!("faults deadline_s requires sync aggregation (async merges have no round deadline)");
         }
         // Cut knobs are bounded here, against the configured model profile,
         // instead of being silently clamped deep inside the drivers.
@@ -1190,6 +1334,17 @@ impl ExperimentConfig {
         ag.insert("staleness_cap", Json::num(self.async_agg.staleness_cap as f64));
         ag.insert("weighting", Json::str(self.async_agg.weighting.name()));
         o.insert("async", Json::Obj(ag));
+        let mut fa = JsonObj::new();
+        fa.insert("crash_per_round", Json::num(self.faults.crash_per_round));
+        fa.insert("link_drop", Json::num(self.faults.link_drop));
+        fa.insert("uplink_loss", Json::num(self.faults.uplink_loss));
+        fa.insert("deadline_s", Json::num(self.faults.deadline_s));
+        let mut rc = JsonObj::new();
+        rc.insert("retry_max", Json::num(self.faults.recovery.retry_max as f64));
+        rc.insert("backoff_base_s", Json::num(self.faults.recovery.backoff_base_s));
+        rc.insert("backoff_jitter", Json::num(self.faults.recovery.backoff_jitter));
+        fa.insert("recovery", Json::Obj(rc));
+        o.insert("faults", Json::Obj(fa));
         o.insert(
             "stream_out",
             match &self.stream_out {
@@ -1400,6 +1555,25 @@ impl ExperimentConfig {
             if let Some(s) = ag.get("weighting").and_then(|v| v.as_str()) {
                 c.async_agg.weighting = StalenessWeighting::parse(s)
                     .ok_or_else(|| ConfigError(format!("unknown staleness weighting {s:?}")))?;
+            }
+        }
+        if let Some(fa) = obj.get("faults").and_then(|v| v.as_obj()) {
+            let g = |k: &str, dv: f64| fa.get(k).and_then(|v| v.as_f64()).unwrap_or(dv);
+            c.faults.crash_per_round = g("crash_per_round", c.faults.crash_per_round);
+            c.faults.link_drop = g("link_drop", c.faults.link_drop);
+            c.faults.uplink_loss = g("uplink_loss", c.faults.uplink_loss);
+            c.faults.deadline_s = g("deadline_s", c.faults.deadline_s);
+            if let Some(rc) = fa.get("recovery").and_then(|v| v.as_obj()) {
+                if let Some(v) = rc.get("retry_max") {
+                    c.faults.recovery.retry_max = v.as_usize().ok_or_else(|| {
+                        ConfigError("recovery retry_max must be a non-negative integer".into())
+                    })?;
+                }
+                let gr = |k: &str, dv: f64| rc.get(k).and_then(|v| v.as_f64()).unwrap_or(dv);
+                c.faults.recovery.backoff_base_s =
+                    gr("backoff_base_s", c.faults.recovery.backoff_base_s);
+                c.faults.recovery.backoff_jitter =
+                    gr("backoff_jitter", c.faults.recovery.backoff_jitter);
             }
         }
         match obj.get("stream_out") {
@@ -1623,6 +1797,68 @@ mod tests {
         // Unknown weighting names are rejected.
         let w = Json::parse(r#"{"async": {"weighting": "cubic"}}"#).unwrap();
         assert!(ExperimentConfig::from_json(&w).is_err());
+    }
+
+    #[test]
+    fn fault_config_roundtrips_and_validates() {
+        let mut c = ExperimentConfig::default();
+        c.faults.crash_per_round = 0.02;
+        c.faults.link_drop = 0.05;
+        c.faults.uplink_loss = 0.01;
+        c.faults.deadline_s = 40.0;
+        c.faults.recovery =
+            RecoveryConfig { retry_max: 5, backoff_base_s: 0.25, backoff_jitter: 0.5 };
+        let j = c.to_json();
+        let c2 = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c2.faults, c.faults);
+        assert_eq!(j.to_string(), c2.to_json().to_string());
+        // Defaults are fully disarmed and valid.
+        let d = ExperimentConfig::default();
+        assert!(!d.faults.active());
+        assert!(d.faults.validate().is_ok());
+    }
+
+    #[test]
+    fn fault_knobs_are_validated_at_parse_time() {
+        for bad in [
+            r#"{"faults": {"crash_per_round": 1.5}}"#,
+            r#"{"faults": {"link_drop": -0.1}}"#,
+            r#"{"faults": {"uplink_loss": 2.0}}"#,
+            r#"{"faults": {"deadline_s": -1.0}}"#,
+            r#"{"faults": {"recovery": {"backoff_base_s": 0.0}}}"#,
+            r#"{"faults": {"recovery": {"backoff_jitter": 1.5}}}"#,
+            r#"{"faults": {"recovery": {"retry_max": 65}}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_json(&j).is_err(), "accepted: {bad}");
+        }
+        // Faults on the DES oracle are rejected (it records no per-unit
+        // times for the pass to replay); the analytic engine is fine.
+        let des =
+            Json::parse(r#"{"faults": {"link_drop": 0.1}, "engine": {"backend": "des"}}"#).unwrap();
+        let err = ExperimentConfig::from_json(&des).unwrap_err();
+        assert!(err.0.contains("analytic"), "unexpected error: {}", err.0);
+        let ok = Json::parse(r#"{"faults": {"link_drop": 0.1}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&ok).unwrap().faults.active());
+        // A deadline under buffered aggregation has no round barrier to cut.
+        let dl =
+            Json::parse(r#"{"faults": {"deadline_s": 5.0}, "aggregation": "async"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&dl).is_err());
+    }
+
+    #[test]
+    fn fault_spec_parses() {
+        let mut f = FaultConfig::default();
+        f.apply_spec("crash=0.01, link=0.05,uplink=0.02").unwrap();
+        assert_eq!(f.crash_per_round, 0.01);
+        assert_eq!(f.link_drop, 0.05);
+        assert_eq!(f.uplink_loss, 0.02);
+        f.deadline_s = 9.0;
+        f.apply_spec("off").unwrap();
+        assert!(!f.active());
+        assert!(FaultConfig::default().apply_spec("crash").is_err());
+        assert!(FaultConfig::default().apply_spec("warp=0.1").is_err());
+        assert!(FaultConfig::default().apply_spec("crash=x").is_err());
     }
 
     #[test]

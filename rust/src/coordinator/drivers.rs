@@ -21,17 +21,18 @@ use crate::coordinator::split::train_pair;
 use crate::data::loader::{eval_batches, Batch, Loader};
 use crate::data::partition::partition;
 use crate::data::synth::SynthCifar;
+use crate::faults::{self, AsyncFaults, FaultModel, FaultUnit, UnitSpec};
 use crate::fleet::{maintain_matching_session, universe_size, FleetDynamics, PairingSession};
 use crate::nn::{self, Params};
 use crate::runtime::Engine;
 use crate::sim::channel::Channel;
 use crate::sim::compute::{aggregation_weights, split_lengths};
 use crate::sim::engine::RoundEngine;
-use crate::sim::latency::{upload_time, Fleet, FleetView, RoundTime, Schedule};
+use crate::sim::latency::{full_local_time, upload_time, Fleet, FleetView, RoundTime, Schedule};
 use crate::split::SplitCostModel;
-use crate::telemetry::Telemetry;
+use crate::telemetry::{registry, Counter, Telemetry};
 use crate::util::index::InverseIndex;
-use crate::{log_debug, log_info};
+use crate::{log_debug, log_info, log_warn};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 
@@ -232,6 +233,13 @@ impl Experiment {
         let mut inv = InverseIndex::new();
         let mut cpairs: Vec<(usize, usize)> = Vec::new();
         let mut csolos: Vec<usize> = Vec::new();
+        // Mid-round fault injection (DESIGN.md §11). A disarmed config skips
+        // the whole pass, so fault-free traces stay bit-identical.
+        let fcfg = self.cfg.faults;
+        let fmodel = FaultModel::new(&fcfg, Algorithm::FedPairing, self.cfg.seed);
+        if fmodel.active() {
+            self.round_engine.set_record_units(true);
+        }
         for round in 1..=self.cfg.rounds {
             telemetry.begin_round(round);
             let ev = dynamics.step(round);
@@ -274,6 +282,30 @@ impl Experiment {
                 true,
             );
             rt.stages.remap_crit(members);
+            // Fault pass: replay the round's units through the fault model;
+            // the round time becomes the recovered (retried / re-paired /
+            // deadline-clamped) finish and lost updates are dropped from the
+            // merge below. Inactive models leave `rt` bit-untouched.
+            let mut fault_lost: Vec<usize> = Vec::new();
+            if fmodel.active() {
+                let specs = faults::fedpairing_unit_specs(
+                    self.round_engine.unit_times(),
+                    &cpairs,
+                    &csolos,
+                    members,
+                    &view,
+                    &profile,
+                    &sched,
+                    &channel,
+                    &self.cfg.compute,
+                );
+                let out = fmodel.inject_round(round, &specs, 0.0, rt.total_s);
+                rt.total_s = out.total_s;
+                rt.faults = out.counters;
+                faults::note_outcome(&out.counters, &out.events);
+                telemetry.fault_events(&out.events, sim_total);
+                fault_lost = out.lost;
+            }
             telemetry.mark("engine");
             let round_time = rt.total_s;
             // Participants this round (pairs + solos) and their weights.
@@ -288,6 +320,7 @@ impl Experiment {
             let n_part = participants.len() as f64;
             let mut locals: Vec<Params> = Vec::with_capacity(participants.len());
             let mut agg_weights: Vec<f64> = Vec::with_capacity(participants.len());
+            let mut contributors: Vec<usize> = Vec::with_capacity(participants.len());
             let mut loss_sum = 0.0;
             let mut steps = 0usize;
             let uni = dynamics.universe();
@@ -353,6 +386,8 @@ impl Experiment {
                 locals.push(out.model_j);
                 agg_weights.push(self.weights[i]);
                 agg_weights.push(self.weights[j]);
+                contributors.push(i);
+                contributors.push(j);
             }
             // Solo clients (odd fleets / widowed partners) train the full
             // model locally, like a vanilla-FL participant.
@@ -362,16 +397,13 @@ impl Experiment {
                 steps += st;
                 locals.push(local);
                 agg_weights.push(self.weights[s]);
+                contributors.push(s);
             }
             // Model aggregation (Sec. II-A.3): weighted FedAvg over this
-            // round's participant models, weights renormalized so dropped
-            // clients contribute nothing.
-            let total: f64 = agg_weights.iter().sum();
-            for x in &mut agg_weights {
-                *x /= total;
-            }
-            global = nn::fedavg_weighted(&locals, &agg_weights);
-            anyhow::ensure!(nn::all_finite(&global), "global model diverged (NaN/Inf)");
+            // round's participant models minus fault-lost / non-finite
+            // updates, weights renormalized so dropped clients contribute
+            // nothing.
+            merge_weighted(&mut global, &contributors, locals, agg_weights, &fault_lost)?;
             telemetry.mark("train");
             sim_total += round_time;
             let rec = self.record(
@@ -430,6 +462,11 @@ impl Experiment {
         let mut global = self.engine.init_params(self.cfg.seed as u32)?;
         let mut records = Vec::with_capacity(self.cfg.rounds);
         let mut sim_total = 0.0f64;
+        let fcfg = self.cfg.faults;
+        let fmodel = FaultModel::new(&fcfg, Algorithm::VanillaFL, self.cfg.seed);
+        if fmodel.active() {
+            self.round_engine.set_record_units(true);
+        }
         for round in 1..=self.cfg.rounds {
             telemetry.begin_round(round);
             let ev = dynamics.step(round);
@@ -441,6 +478,20 @@ impl Experiment {
                 .round_engine
                 .fl_round(&view, &profile, &sched, &channel, &self.cfg.compute, true);
             rt.stages.remap_crit(members);
+            let mut fault_lost: Vec<usize> = Vec::new();
+            if fmodel.active() {
+                let specs = faults::solo_unit_specs(
+                    Algorithm::VanillaFL,
+                    self.round_engine.unit_times(),
+                    members,
+                );
+                let out = fmodel.inject_round(round, &specs, 0.0, rt.total_s);
+                rt.total_s = out.total_s;
+                rt.faults = out.counters;
+                faults::note_outcome(&out.counters, &out.events);
+                telemetry.fault_events(&out.events, sim_total);
+                fault_lost = out.lost;
+            }
             telemetry.mark("engine");
             let round_time = rt.total_s;
             let mut locals: Vec<Params> = Vec::with_capacity(members.len());
@@ -452,8 +503,8 @@ impl Experiment {
                 steps += st;
                 locals.push(local);
             }
-            global = nn::fedavg_weighted(&locals, &self.renormalized_weights(members)?);
-            anyhow::ensure!(nn::all_finite(&global), "global model diverged (NaN/Inf)");
+            let raw_w: Vec<f64> = members.iter().map(|&c| self.weights[c]).collect();
+            merge_weighted(&mut global, members, locals, raw_w, &fault_lost)?;
             telemetry.mark("train");
             sim_total += round_time;
             let rec = self.record(
@@ -488,6 +539,11 @@ impl Experiment {
         let (mut front, mut back) = split_params(&global, cut);
         let mut records = Vec::with_capacity(self.cfg.rounds);
         let mut sim_total = 0.0f64;
+        let fcfg = self.cfg.faults;
+        let fmodel = FaultModel::new(&fcfg, Algorithm::VanillaSL, self.cfg.seed);
+        if fmodel.active() {
+            self.round_engine.set_record_units(true);
+        }
         for round in 1..=self.cfg.rounds {
             telemetry.begin_round(round);
             let ev = dynamics.step(round);
@@ -505,6 +561,21 @@ impl Experiment {
                 self.cfg.compute.server_freq_ghz * 1e9,
             );
             rt.stages.remap_crit(members);
+            // SL's relay mutates the shared halves in place, so a lost
+            // session cannot be unwound from the model — faults here shape
+            // the round time and the loss accounting only (DESIGN.md §11).
+            if fmodel.active() {
+                let specs = faults::solo_unit_specs(
+                    Algorithm::VanillaSL,
+                    self.round_engine.unit_times(),
+                    members,
+                );
+                let out = fmodel.inject_round(round, &specs, 0.0, rt.total_s);
+                rt.total_s = out.total_s;
+                rt.faults = out.counters;
+                faults::note_outcome(&out.counters, &out.events);
+                telemetry.fault_events(&out.events, sim_total);
+            }
             telemetry.mark("engine");
             let round_time = rt.total_s;
             let mut loss_sum = 0.0;
@@ -556,6 +627,11 @@ impl Experiment {
         let mut global = self.engine.init_params(self.cfg.seed as u32)?;
         let mut records = Vec::with_capacity(self.cfg.rounds);
         let mut sim_total = 0.0f64;
+        let fcfg = self.cfg.faults;
+        let fmodel = FaultModel::new(&fcfg, Algorithm::SplitFed, self.cfg.seed);
+        if fmodel.active() {
+            self.round_engine.set_record_units(true);
+        }
         for round in 1..=self.cfg.rounds {
             telemetry.begin_round(round);
             let ev = dynamics.step(round);
@@ -574,6 +650,24 @@ impl Experiment {
                 true,
             );
             rt.stages.remap_crit(members);
+            // SplitFed clients share the FedAvg sync stage: per-unit times
+            // are pre-upload pipeline finishes, with the upload charged as a
+            // shared delivery tail (`stage_s[5]`) on every survivor.
+            let mut fault_lost: Vec<usize> = Vec::new();
+            if fmodel.active() {
+                let specs = faults::solo_unit_specs(
+                    Algorithm::SplitFed,
+                    self.round_engine.unit_times(),
+                    members,
+                );
+                let shared = rt.stages.stage_s[5];
+                let out = fmodel.inject_round(round, &specs, shared, rt.total_s);
+                rt.total_s = out.total_s;
+                rt.faults = out.counters;
+                faults::note_outcome(&out.counters, &out.events);
+                telemetry.fault_events(&out.events, sim_total);
+                fault_lost = out.lost;
+            }
             telemetry.mark("engine");
             let round_time = rt.total_s;
             let mut fronts: Vec<Params> = Vec::with_capacity(members.len());
@@ -592,12 +686,10 @@ impl Experiment {
                 backs.push(back);
             }
             // Fed server averages client-side models; main server averages
-            // server-side models (both weighted by a_i over the present set).
-            let agg = self.renormalized_weights(members)?;
-            let front = nn::fedavg_weighted(&fronts, &agg);
-            let back = nn::fedavg_weighted(&backs, &agg);
-            global = join_params(&front, &back);
-            anyhow::ensure!(nn::all_finite(&global), "SplitFed diverged (NaN/Inf)");
+            // server-side models (both weighted by a_i over the present set,
+            // minus fault-lost / non-finite contributors).
+            let raw_w: Vec<f64> = members.iter().map(|&c| self.weights[c]).collect();
+            merge_split_halves(&mut global, members, fronts, backs, raw_w, &fault_lost)?;
             telemetry.mark("train");
             sim_total += round_time;
             let rec = self.record(
@@ -690,6 +782,7 @@ impl Experiment {
             // staleness is undefined (every update is merged fresh).
             t_wall_s: sim_total,
             staleness_mean: f64::NAN,
+            faults: rt.faults,
             mean_cut: rt.mean_cut,
             stages: rt.stages,
         })
@@ -755,6 +848,14 @@ impl Experiment {
             (Params::new(), Params::new())
         };
         self.round_engine.set_record_units(true);
+        // Fault layer (DESIGN.md §11): units are planned at start (their
+        // occupied duration replaces the fault-free one), lost members are
+        // remembered per Timeline id and dropped at merge. Repricing a
+        // planned unit keeps its planned duration; unplanned ids pass the
+        // engine's duration through bit-exactly.
+        let fcfg = self.cfg.faults;
+        let fmodel = FaultModel::new(&fcfg, algo, self.cfg.seed);
+        let mut afaults = AsyncFaults::new();
         let mut tl = Timeline::new(self.cfg.async_agg.buffer_size, self.cfg.async_agg.staleness_cap);
         let mut pending: HashMap<u64, Pending> = HashMap::new();
         let mut inv = InverseIndex::new();
@@ -770,6 +871,7 @@ impl Experiment {
             for &d in &ev.departed {
                 for id in tl.cancel_member(d) {
                     pending.remove(&id);
+                    afaults.forget(id);
                     cancelled += 1;
                 }
             }
@@ -825,10 +927,10 @@ impl Experiment {
                     let nrp = plan.reprice_pairs.len();
                     let ns = plan.start_solos.len();
                     for (k, &(id, _)) in plan.reprice_pairs.iter().enumerate() {
-                        tl.reprice(id, ut[np + k]);
+                        tl.reprice(id, afaults.reprice(id, ut[np + k]));
                     }
                     for (k, &(id, _)) in plan.reprice_solos.iter().enumerate() {
-                        tl.reprice(id, ut[np + nrp + ns + k]);
+                        tl.reprice(id, afaults.reprice(id, ut[np + nrp + ns + k]));
                     }
                     // Normalized data weights â over this *window's* started
                     // participants — the async analogue of the sync round's
@@ -885,7 +987,41 @@ impl Experiment {
                                 self.cfg.local_epochs,
                                 self.cfg.overlap_boost,
                             )?;
-                            let id = tl.start_unit(UnitKind::Pair(i, j), ut[k]);
+                            let mut dur = ut[k];
+                            let mut fplan = None;
+                            if fmodel.active() {
+                                let spec = UnitSpec {
+                                    unit: FaultUnit::Pair(i, j),
+                                    t0: dur,
+                                    solo_a: full_local_time(
+                                        &view,
+                                        inv.compact(i),
+                                        &profile,
+                                        &sched,
+                                        &channel,
+                                        &self.cfg.compute,
+                                        true,
+                                    )
+                                    .1,
+                                    solo_b: full_local_time(
+                                        &view,
+                                        inv.compact(j),
+                                        &profile,
+                                        &sched,
+                                        &channel,
+                                        &self.cfg.compute,
+                                        true,
+                                    )
+                                    .1,
+                                };
+                                let p = fmodel.plan_unit(seq, &spec);
+                                dur = p.dur_s;
+                                fplan = Some(p);
+                            }
+                            let id = tl.start_unit(UnitKind::Pair(i, j), dur);
+                            if let Some(p) = fplan {
+                                afaults.register(id, &p);
+                            }
                             pending.insert(
                                 id,
                                 Pending {
@@ -898,7 +1034,23 @@ impl Experiment {
                         }
                         for (k, &s) in plan.start_solos.iter().enumerate() {
                             let (local, l, st) = self.local_training(&global, s)?;
-                            let id = tl.start_unit(UnitKind::Solo(s), ut[np + nrp + k]);
+                            let mut dur = ut[np + nrp + k];
+                            let mut fplan = None;
+                            if fmodel.active() {
+                                let spec = UnitSpec {
+                                    unit: FaultUnit::Solo(s),
+                                    t0: dur,
+                                    solo_a: 0.0,
+                                    solo_b: 0.0,
+                                };
+                                let p = fmodel.plan_unit(seq, &spec);
+                                dur = p.dur_s;
+                                fplan = Some(p);
+                            }
+                            let id = tl.start_unit(UnitKind::Solo(s), dur);
+                            if let Some(p) = fplan {
+                                afaults.register(id, &p);
+                            }
                             pending.insert(
                                 id,
                                 Pending {
@@ -926,11 +1078,27 @@ impl Experiment {
                     rt.stages.remap_crit(&plan.view_members);
                     let ut: Vec<f64> = self.round_engine.unit_times().to_vec();
                     for (k, &(id, _)) in plan.reprice.iter().enumerate() {
-                        tl.reprice(id, ut[plan.start.len() + k]);
+                        tl.reprice(id, afaults.reprice(id, ut[plan.start.len() + k]));
                     }
                     for (k, &m) in plan.start.iter().enumerate() {
                         let (local, l, st) = self.local_training(&global, m)?;
-                        let id = tl.start_unit(UnitKind::Solo(m), ut[k]);
+                        let mut dur = ut[k];
+                        let mut fplan = None;
+                        if fmodel.active() {
+                            let spec = UnitSpec {
+                                unit: FaultUnit::Solo(m),
+                                t0: dur,
+                                solo_a: 0.0,
+                                solo_b: 0.0,
+                            };
+                            let p = fmodel.plan_unit(seq, &spec);
+                            dur = p.dur_s;
+                            fplan = Some(p);
+                        }
+                        let id = tl.start_unit(UnitKind::Solo(m), dur);
+                        if let Some(p) = fplan {
+                            afaults.register(id, &p);
+                        }
                         pending.insert(
                             id,
                             Pending {
@@ -962,8 +1130,23 @@ impl Experiment {
                     let ut: Vec<f64> = self.round_engine.unit_times().to_vec();
                     for (k, &m) in plan.start.iter().enumerate() {
                         let (l, st) = self.split_session(&mut sl_front, &mut sl_back, cut, m)?;
-                        let d = ut[k];
+                        let mut d = ut[k];
+                        let mut fplan = None;
+                        if fmodel.active() {
+                            let spec = UnitSpec {
+                                unit: FaultUnit::Session(m),
+                                t0: d,
+                                solo_a: 0.0,
+                                solo_b: 0.0,
+                            };
+                            let p = fmodel.plan_unit(seq, &spec);
+                            d = p.dur_s;
+                            fplan = Some(p);
+                        }
                         let id = tl.start_unit_at(UnitKind::Solo(m), sl_tail, d);
+                        if let Some(p) = fplan {
+                            afaults.register(id, &p);
+                        }
                         sl_tail += d;
                         pending.insert(
                             id,
@@ -993,12 +1176,28 @@ impl Experiment {
                     rt.stages.remap_crit(&plan.view_members);
                     let ut: Vec<f64> = self.round_engine.unit_times().to_vec();
                     for (k, &(id, _)) in plan.reprice.iter().enumerate() {
-                        tl.reprice(id, ut[plan.start.len() + k]);
+                        tl.reprice(id, afaults.reprice(id, ut[plan.start.len() + k]));
                     }
                     for (k, &m) in plan.start.iter().enumerate() {
                         let (mut front, mut back) = split_params(&global, cut);
                         let (l, st) = self.split_session(&mut front, &mut back, cut, m)?;
-                        let id = tl.start_unit(UnitKind::Solo(m), ut[k]);
+                        let mut dur = ut[k];
+                        let mut fplan = None;
+                        if fmodel.active() {
+                            let spec = UnitSpec {
+                                unit: FaultUnit::Solo(m),
+                                t0: dur,
+                                solo_a: 0.0,
+                                solo_b: 0.0,
+                            };
+                            let p = fmodel.plan_unit(seq, &spec);
+                            dur = p.dur_s;
+                            fplan = Some(p);
+                        }
+                        let id = tl.start_unit(UnitKind::Solo(m), dur);
+                        if let Some(p) = fplan {
+                            afaults.register(id, &p);
+                        }
                         pending.insert(
                             id,
                             Pending {
@@ -1052,6 +1251,7 @@ impl Experiment {
                             loss_sum += p.loss;
                             steps += p.steps;
                         }
+                        afaults.forget(d.id);
                     }
                     // The relay already mutated the shared halves; the merge
                     // snapshots them.
@@ -1066,21 +1266,35 @@ impl Experiment {
                         let p = pending
                             .remove(&d.id)
                             .ok_or_else(|| anyhow::anyhow!("merged unit lost its payload"))?;
+                        let doomed = !afaults.lost_of(d.id).is_empty();
+                        afaults.forget(d.id);
+                        loss_sum += p.loss;
+                        steps += p.steps;
+                        if doomed {
+                            continue;
+                        }
                         let mut m = p.models.into_iter();
                         fronts.push(m.next().expect("splitfed front"));
                         backs.push(m.next().expect("splitfed back"));
                         agg.push(p.weights[0] * weighting.factor(d.staleness));
-                        loss_sum += p.loss;
-                        steps += p.steps;
                     }
-                    let t: f64 = agg.iter().sum();
-                    anyhow::ensure!(t > 0.0, "no data among merge contributors");
-                    for x in &mut agg {
-                        *x /= t;
+                    let rejected = reject_nonfinite_halves(&mut fronts, &mut backs, &mut agg);
+                    if rejected > 0 {
+                        registry::count(Counter::AggRejectedUpdates, rejected as u64);
+                        log_warn!("merge {seq}: rejected {rejected} non-finite update(s)");
                     }
-                    let front = nn::fedavg_weighted(&fronts, &agg);
-                    let back = nn::fedavg_weighted(&backs, &agg);
-                    global = join_params(&front, &back);
+                    if fronts.is_empty() {
+                        log_debug!("merge {seq}: every update lost; global unchanged");
+                    } else {
+                        let t: f64 = agg.iter().sum();
+                        anyhow::ensure!(t > 0.0, "no data among merge contributors");
+                        for x in &mut agg {
+                            *x /= t;
+                        }
+                        let front = nn::fedavg_weighted(&fronts, &agg);
+                        let back = nn::fedavg_weighted(&backs, &agg);
+                        global = join_params(&front, &back);
+                    }
                 }
                 Algorithm::FedPairing | Algorithm::VanillaFL => {
                     let mut locals: Vec<Params> = Vec::new();
@@ -1090,24 +1304,58 @@ impl Experiment {
                             .remove(&d.id)
                             .ok_or_else(|| anyhow::anyhow!("merged unit lost its payload"))?;
                         let s = weighting.factor(d.staleness);
-                        for (model, &w_raw) in p.models.into_iter().zip(&p.weights) {
-                            locals.push(model);
-                            agg.push(w_raw * s);
+                        let doomed = afaults.lost_of(d.id);
+                        if doomed.is_empty() {
+                            for (model, &w_raw) in p.models.into_iter().zip(&p.weights) {
+                                locals.push(model);
+                                agg.push(w_raw * s);
+                            }
+                        } else {
+                            // A pair unit can lose one member and still
+                            // deliver the survivor's (re-paired) update.
+                            let mm: Vec<usize> = match d.unit {
+                                UnitKind::Pair(a, b) => vec![a, b],
+                                UnitKind::Solo(u) => vec![u],
+                            };
+                            for ((model, &w_raw), m) in
+                                p.models.into_iter().zip(&p.weights).zip(mm)
+                            {
+                                if doomed.contains(&m) {
+                                    continue;
+                                }
+                                locals.push(model);
+                                agg.push(w_raw * s);
+                            }
                         }
+                        afaults.forget(d.id);
                         loss_sum += p.loss;
                         steps += p.steps;
                     }
-                    let t: f64 = agg.iter().sum();
-                    anyhow::ensure!(t > 0.0, "no data among merge contributors");
-                    for x in &mut agg {
-                        *x /= t;
+                    let rejected = nn::reject_nonfinite(&mut locals, &mut agg);
+                    if rejected > 0 {
+                        registry::count(Counter::AggRejectedUpdates, rejected as u64);
+                        log_warn!("merge {seq}: rejected {rejected} non-finite update(s)");
                     }
-                    global = nn::fedavg_weighted(&locals, &agg);
+                    if locals.is_empty() {
+                        log_debug!("merge {seq}: every update lost; global unchanged");
+                    } else {
+                        let t: f64 = agg.iter().sum();
+                        anyhow::ensure!(t > 0.0, "no data among merge contributors");
+                        for x in &mut agg {
+                            *x /= t;
+                        }
+                        global = nn::fedavg_weighted(&locals, &agg);
+                    }
                 }
             }
             anyhow::ensure!(nn::all_finite(&global), "global model diverged (NaN/Inf)");
             telemetry.mark("train");
             note_merge(&merge, cancelled);
+            // Fault accounting for this merge window (events are stamped
+            // relative to the window's simulated start).
+            let (wfaults, wevents) = afaults.take_window();
+            faults::note_outcome(&wfaults, &wevents);
+            telemetry.fault_events(&wevents, sim_total - total);
             let event = AggregationEvent {
                 seq,
                 t_wall_s: sim_total,
@@ -1141,6 +1389,7 @@ impl Experiment {
                 sim_total_s: sim_total,
                 t_wall_s: sim_total,
                 staleness_mean: merge.staleness_mean,
+                faults: wfaults,
                 mean_cut: rt.mean_cut,
                 stages: rt.stages,
             };
@@ -1166,6 +1415,117 @@ fn stream_push(streamer: &mut Option<RecordStreamer>, rec: &RoundRecord) -> Resu
         s.push(rec).context("streaming round record")?;
     }
     Ok(())
+}
+
+/// Synchronous weighted FedAvg with the fault/robustness guards: drop
+/// fault-lost contributors, reject non-finite payloads (counting them on
+/// `agg_rejected_updates_total`), renormalize the surviving raw weights and
+/// average into `global`. When every update is lost or rejected the merge is
+/// skipped and the global model carries over. With nothing dropped the
+/// arithmetic is bit-identical to the plain weighted FedAvg the drivers
+/// always did (same fold order, one normalization).
+fn merge_weighted(
+    global: &mut Params,
+    contributors: &[usize],
+    mut locals: Vec<Params>,
+    mut weights: Vec<f64>,
+    lost: &[usize],
+) -> Result<()> {
+    if !lost.is_empty() {
+        let keep: Vec<bool> = contributors
+            .iter()
+            .map(|c| lost.binary_search(c).is_err())
+            .collect();
+        let mut it = keep.iter();
+        locals.retain(|_| *it.next().unwrap());
+        let mut it = keep.iter();
+        weights.retain(|_| *it.next().unwrap());
+    }
+    let rejected = nn::reject_nonfinite(&mut locals, &mut weights);
+    if rejected > 0 {
+        registry::count(Counter::AggRejectedUpdates, rejected as u64);
+        log_warn!("aggregation: rejected {rejected} non-finite update(s)");
+    }
+    if locals.is_empty() {
+        log_debug!("merge skipped: every update this round was lost or rejected");
+        return Ok(());
+    }
+    let total: f64 = weights.iter().sum();
+    anyhow::ensure!(total > 0.0, "no data among participants");
+    for x in &mut weights {
+        *x /= total;
+    }
+    *global = nn::fedavg_weighted(&locals, &weights);
+    anyhow::ensure!(nn::all_finite(global), "global model diverged (NaN/Inf)");
+    Ok(())
+}
+
+/// SplitFed variant of [`merge_weighted`]: a client's update is its
+/// `(front, back)` half pair under one weight, and is dropped whole when
+/// either half is non-finite or the client is fault-lost.
+fn merge_split_halves(
+    global: &mut Params,
+    contributors: &[usize],
+    mut fronts: Vec<Params>,
+    mut backs: Vec<Params>,
+    mut weights: Vec<f64>,
+    lost: &[usize],
+) -> Result<()> {
+    if !lost.is_empty() {
+        let keep: Vec<bool> = contributors
+            .iter()
+            .map(|c| lost.binary_search(c).is_err())
+            .collect();
+        let mut it = keep.iter();
+        fronts.retain(|_| *it.next().unwrap());
+        let mut it = keep.iter();
+        backs.retain(|_| *it.next().unwrap());
+        let mut it = keep.iter();
+        weights.retain(|_| *it.next().unwrap());
+    }
+    let rejected = reject_nonfinite_halves(&mut fronts, &mut backs, &mut weights);
+    if rejected > 0 {
+        registry::count(Counter::AggRejectedUpdates, rejected as u64);
+        log_warn!("aggregation: rejected {rejected} non-finite update(s)");
+    }
+    if fronts.is_empty() {
+        log_debug!("merge skipped: every update this round was lost or rejected");
+        return Ok(());
+    }
+    let total: f64 = weights.iter().sum();
+    anyhow::ensure!(total > 0.0, "no data among participants");
+    for x in &mut weights {
+        *x /= total;
+    }
+    let front = nn::fedavg_weighted(&fronts, &weights);
+    let back = nn::fedavg_weighted(&backs, &weights);
+    *global = join_params(&front, &back);
+    anyhow::ensure!(nn::all_finite(global), "SplitFed diverged (NaN/Inf)");
+    Ok(())
+}
+
+/// Drop clients whose front *or* back half is non-finite, keeping the three
+/// parallel vectors aligned. Returns the number of clients dropped.
+fn reject_nonfinite_halves(
+    fronts: &mut Vec<Params>,
+    backs: &mut Vec<Params>,
+    weights: &mut Vec<f64>,
+) -> usize {
+    let keep: Vec<bool> = fronts
+        .iter()
+        .zip(backs.iter())
+        .map(|(f, b)| nn::all_finite(f) && nn::all_finite(b))
+        .collect();
+    if keep.iter().all(|&k| k) {
+        return 0;
+    }
+    let mut it = keep.iter();
+    fronts.retain(|_| *it.next().unwrap());
+    let mut it = keep.iter();
+    backs.retain(|_| *it.next().unwrap());
+    let mut it = keep.iter();
+    weights.retain(|_| *it.next().unwrap());
+    keep.iter().filter(|&&k| !k).count()
 }
 
 /// Split a flat model into `(front, back)` at layer `cut`.

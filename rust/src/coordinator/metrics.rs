@@ -40,6 +40,9 @@ pub struct RoundRecord {
     /// Mean staleness (merges behind) over the updates merged here. NaN on
     /// synchronous rounds, 0.0 on async runs that degenerate to sync.
     pub staleness_mean: f64,
+    /// Fault/recovery accounting for this round (all zero on fault-free
+    /// runs; see `faults` and DESIGN.md §11).
+    pub faults: crate::faults::FaultCounters,
 }
 
 impl RoundRecord {
@@ -53,6 +56,7 @@ impl RoundRecord {
             s.push_str(&format!(",stage_{name}_s"));
         }
         s.push_str(",t_wall_s,staleness_mean");
+        s.push_str(",n_failed,n_retries,n_lost_updates,recovery_s");
         s
     }
 
@@ -90,6 +94,13 @@ impl RoundRecord {
             s.push_str(&format!(",{v}"));
         }
         s.push_str(&format!(",{},{staleness}", self.t_wall_s));
+        s.push_str(&format!(
+            ",{},{},{},{}",
+            self.faults.n_failed,
+            self.faults.n_retries,
+            self.faults.n_lost_updates,
+            self.faults.recovery_s
+        ));
         s
     }
 
@@ -107,6 +118,10 @@ impl RoundRecord {
         ro.insert("t_wall_s", Json::num(self.t_wall_s));
         ro.insert("staleness_mean", Json::num(self.staleness_mean));
         ro.insert("mean_cut", Json::num(self.mean_cut));
+        ro.insert("n_failed", Json::num(self.faults.n_failed as f64));
+        ro.insert("n_retries", Json::num(self.faults.n_retries as f64));
+        ro.insert("n_lost_updates", Json::num(self.faults.n_lost_updates as f64));
+        ro.insert("recovery_s", Json::num(self.faults.recovery_s));
         ro.insert("stages", self.stages.to_json());
         Json::Obj(ro)
     }
@@ -220,6 +235,13 @@ impl RunResult {
 /// stays O(1) in the round count, and a killed run keeps every completed
 /// round on disk — which is what makes unbounded async event streams (and
 /// ROADMAP's memory-diet item) tractable.
+///
+/// Crash durability: while a run is live the sinks are `.tmp` siblings of
+/// the final paths; [`RecordStreamer::finish`] flushes, fsyncs, and
+/// atomically renames them into place, so the final `.stream.{csv,jsonl}`
+/// either do not exist or are complete. A killed run leaves the `.tmp`
+/// siblings behind with every pushed record; [`recover_jsonl`] replays the
+/// complete lines of such a (possibly torn) JSONL file.
 #[derive(Debug)]
 pub struct RecordStreamer {
     csv: std::io::BufWriter<std::fs::File>,
@@ -229,16 +251,17 @@ pub struct RecordStreamer {
 }
 
 impl RecordStreamer {
-    /// Open `<dir>/<base>.stream.csv` (with header) and
-    /// `<dir>/<base>.stream.jsonl`, truncating any previous run.
+    /// Open `<dir>/<base>.stream.csv.tmp` (with header) and
+    /// `<dir>/<base>.stream.jsonl.tmp`, truncating any previous run.
+    /// [`RecordStreamer::finish`] renames them to the final paths.
     pub fn create(dir: &str, base: &str) -> std::io::Result<RecordStreamer> {
         use std::io::Write;
         std::fs::create_dir_all(dir)?;
         let csv_path = format!("{dir}/{base}.stream.csv");
         let jsonl_path = format!("{dir}/{base}.stream.jsonl");
-        let mut csv = std::io::BufWriter::new(std::fs::File::create(&csv_path)?);
+        let mut csv = std::io::BufWriter::new(std::fs::File::create(tmp_path(&csv_path))?);
         writeln!(csv, "{}", RoundRecord::csv_header())?;
-        let jsonl = std::io::BufWriter::new(std::fs::File::create(&jsonl_path)?);
+        let jsonl = std::io::BufWriter::new(std::fs::File::create(tmp_path(&jsonl_path))?);
         Ok(RecordStreamer {
             csv,
             jsonl,
@@ -248,7 +271,8 @@ impl RecordStreamer {
     }
 
     /// Append one record to both sinks and flush — the contract is that a
-    /// crash after `push` returns never loses that record.
+    /// crash after `push` returns never loses that record (it lives in the
+    /// `.tmp` sibling until [`RecordStreamer::finish`] renames it).
     pub fn push(&mut self, r: &RoundRecord) -> std::io::Result<()> {
         use std::io::Write;
         writeln!(self.csv, "{}", r.csv_row())?;
@@ -257,18 +281,38 @@ impl RecordStreamer {
         self.jsonl.flush()
     }
 
-    /// The `(csv, jsonl)` paths being written.
+    /// The final `(csv, jsonl)` paths the run will be renamed to on
+    /// [`RecordStreamer::finish`]; the live sinks are their `.tmp` siblings.
     pub fn paths(&self) -> (&str, &str) {
         (&self.csv_path, &self.jsonl_path)
     }
 
-    /// Flush and close; returns the `(csv, jsonl)` paths.
+    /// Flush, fsync, and atomically rename the `.tmp` sinks into place;
+    /// returns the final `(csv, jsonl)` paths.
     pub fn finish(mut self) -> std::io::Result<(String, String)> {
         use std::io::Write;
         self.csv.flush()?;
+        self.csv.get_ref().sync_all()?;
         self.jsonl.flush()?;
+        self.jsonl.get_ref().sync_all()?;
+        std::fs::rename(tmp_path(&self.csv_path), &self.csv_path)?;
+        std::fs::rename(tmp_path(&self.jsonl_path), &self.jsonl_path)?;
         Ok((self.csv_path, self.jsonl_path))
     }
+}
+
+/// `.tmp` sibling of a sink path (same directory, so the rename is atomic).
+fn tmp_path(path: &str) -> String {
+    format!("{path}.tmp")
+}
+
+/// Replay a (possibly torn) `.stream.jsonl` file — e.g. the `.tmp` sibling a
+/// killed run left behind — and recover every complete record. A final line
+/// truncated mid-write fails to parse and is dropped; everything before it
+/// is returned.
+pub fn recover_jsonl(path: &str) -> std::io::Result<Vec<Json>> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(text.lines().filter_map(|l| Json::parse(l).ok()).collect())
 }
 
 /// Build the configured stream sink for a run: `Some` when
@@ -315,6 +359,7 @@ mod tests {
                     stages: stages1,
                     t_wall_s: 10.0,
                     staleness_mean: f64::NAN,
+                    faults: Default::default(),
                 },
                 RoundRecord {
                     round: 2,
@@ -328,6 +373,7 @@ mod tests {
                     stages: StageBreakdown::default(),
                     t_wall_s: 20.0,
                     staleness_mean: f64::NAN,
+                    faults: Default::default(),
                 },
                 RoundRecord {
                     round: 3,
@@ -341,6 +387,12 @@ mod tests {
                     stages: StageBreakdown::default(),
                     t_wall_s: 32.0,
                     staleness_mean: 1.25,
+                    faults: crate::faults::FaultCounters {
+                        n_failed: 2,
+                        n_retries: 5,
+                        n_lost_updates: 1,
+                        recovery_s: 3.5,
+                    },
                 },
             ],
             wall_s: 1.0,
@@ -391,7 +443,7 @@ mod tests {
         assert!(header.ends_with(
             "crit_a,crit_b,crit_slack_s,stage_front_fp_s,stage_act_tx_s,stage_back_compute_s,\
              stage_grad_tx_s,stage_front_upd_s,stage_uplink_s,stage_server_agg_s,\
-             t_wall_s,staleness_mean"
+             t_wall_s,staleness_mean,n_failed,n_retries,n_lost_updates,recovery_s"
         ));
         let row1: Vec<String> =
             r.to_csv().lines().nth(1).unwrap().split(',').map(str::to_string).collect();
@@ -432,10 +484,11 @@ mod tests {
     #[test]
     fn csv_staleness_is_empty_on_sync_rows_and_numeric_on_async() {
         let csv = result().to_csv();
-        // Fixture rounds 1-2 are synchronous (NaN staleness) -> empty field.
-        assert!(csv.lines().nth(1).unwrap().ends_with(",10,"));
-        // Round 3 carries a real staleness mean.
-        assert!(csv.lines().nth(3).unwrap().ends_with(",32,1.250"));
+        // Fixture rounds 1-2 are synchronous (NaN staleness) -> empty field;
+        // fault-free rounds render all-zero fault columns.
+        assert!(csv.lines().nth(1).unwrap().ends_with(",10,,0,0,0,0"));
+        // Round 3 carries a real staleness mean and fault accounting.
+        assert!(csv.lines().nth(3).unwrap().ends_with(",32,1.250,2,5,1,3.5"));
         let j = result().to_json().to_string();
         let parsed = crate::util::json::Json::parse(&j).unwrap();
         let rounds = parsed.get("rounds").unwrap();
@@ -469,6 +522,43 @@ mod tests {
                 Some(rec.round as f64)
             );
         }
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn streamer_writes_tmp_until_finish_and_truncated_jsonl_recovers() {
+        let dir = std::env::temp_dir().join("fp_metrics_stream_durable_test");
+        let dir = dir.to_str().unwrap();
+        let r = result();
+        let mut s = RecordStreamer::create(dir, "t_fed_pairing_iid").unwrap();
+        for rec in &r.rounds {
+            s.push(rec).unwrap();
+        }
+        // Before finish: only the `.tmp` siblings exist — a killed run never
+        // leaves a torn *final* file.
+        let (csv_final, jsonl_final) = {
+            let (c, j) = s.paths();
+            (c.to_string(), j.to_string())
+        };
+        assert!(!std::path::Path::new(&csv_final).exists());
+        assert!(std::path::Path::new(&tmp_path(&jsonl_final)).exists());
+        // A crash mid-write tears the last JSONL line; recovery replays every
+        // complete record and drops the torn tail.
+        let live = std::fs::read_to_string(tmp_path(&jsonl_final)).unwrap();
+        let torn_path = format!("{dir}/torn.stream.jsonl");
+        std::fs::write(&torn_path, &live[..live.len() - 7]).unwrap();
+        let recovered = recover_jsonl(&torn_path).unwrap();
+        assert_eq!(recovered.len(), r.rounds.len() - 1);
+        assert_eq!(
+            recovered[1].get("round").and_then(Json::as_f64),
+            Some(r.rounds[1].round as f64)
+        );
+        // finish() renames atomically: final paths appear, tmps are gone.
+        let (csv_path, jsonl_path) = s.finish().unwrap();
+        assert_eq!(csv_path, csv_final);
+        assert!(!std::path::Path::new(&tmp_path(&csv_final)).exists());
+        assert_eq!(std::fs::read_to_string(&csv_path).unwrap(), r.to_csv());
+        assert_eq!(recover_jsonl(&jsonl_path).unwrap().len(), r.rounds.len());
         let _ = std::fs::remove_dir_all(dir);
     }
 

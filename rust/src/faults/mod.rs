@@ -1,0 +1,869 @@
+//! Mid-round fault injection and recovery (DESIGN.md §11).
+//!
+//! The simulator's round kernels assume every client that starts a round
+//! finishes it. This module breaks that assumption deterministically: a
+//! [`FaultModel`] samples per-stage failure events — client crash during
+//! local compute, pair-link drop during activation/gradient transfer,
+//! uplink loss during model upload — from configurable hazards on a
+//! dedicated seeded RNG stream, and prices what the configured recovery
+//! policy ([`crate::config::RecoveryConfig`]) costs in round time and lost
+//! updates:
+//!
+//! * **Bounded retry with exponential backoff + jitter** for transmission
+//!   failures (pair link and uplink).
+//! * **Survivor-goes-solo re-pairing** when a split partner dies mid-pair:
+//!   the survivor finishes the *full* model from the crash point at its own
+//!   solo rate, and its update still counts.
+//! * **Deadline-based partial aggregation**: a server-side round deadline
+//!   truncates the round, merges whatever arrived in time, and counts the
+//!   rest as lost — instead of waiting on doomed stragglers.
+//!
+//! **Determinism contract** (property-tested in `tests/faults.rs`): every
+//! work unit draws from its own self-contained RNG stream keyed on
+//! `(seed, round, unit member ids)`, so the number of draws one unit makes
+//! can never perturb another unit's outcome and the whole pass is
+//! independent of evaluation order and `--threads`. With all hazards zero
+//! the pass is skipped entirely and traces are bit-for-bit identical to a
+//! fault-free run; hazard draws are also deadline-independent, so a tighter
+//! deadline can only truncate the round earlier and lose more updates —
+//! never change *which* faults fire (the monotonicity the property suite
+//! asserts).
+//!
+//! The model is applied as a post-kernel pass over the engine's recorded
+//! per-unit times (`RoundEngine::unit_times`), which is why the DES backend
+//! (which records none) rejects fault configs at validation time. In async
+//! mode the decision is made once when a unit starts on the `Timeline`
+//! ([`FaultModel::plan_unit`] + [`AsyncFaults`]) and replayed as an additive
+//! duration delta across reprices; doomed units run to their death time,
+//! deliver nothing at merge, and their members re-enter the queue at the
+//! next window.
+
+use crate::config::{Algorithm, ComputeConfig, FaultConfig};
+use crate::sim::channel::Channel;
+use crate::sim::latency::{full_local_time, ClientSet, Schedule};
+use crate::sim::profile::ModelProfile;
+use crate::telemetry::registry::{self, Counter, Histo};
+use crate::util::rng::{splitmix64, Rng};
+use std::collections::HashMap;
+
+/// Stream tag for the fault RNG: decorrelated from the pairing
+/// (`seed ^ 0x9A1F`) and loader (`seed ^ 0xC11E47`) streams.
+pub const FAULT_STREAM: u64 = 0xFA17;
+
+/// Per-round fault accounting, carried on `RoundTime` → `RoundRecord`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultCounters {
+    /// Clients that suffered a terminal failure this round (crash, or a
+    /// transfer whose retries were exhausted). Never exceeds the round's
+    /// participant count.
+    pub n_failed: usize,
+    /// Retry attempts spent on transmission failures.
+    pub n_retries: usize,
+    /// Client updates that never reached the aggregator (failures plus
+    /// deadline cutoffs).
+    pub n_lost_updates: usize,
+    /// Extra simulated seconds spent on recovery (backoff waits, solo
+    /// finishes) relative to the fault-free round.
+    pub recovery_s: f64,
+}
+
+/// What failed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A client died during local compute.
+    Crash,
+    /// The pair (or client↔server split) link dropped mid-transfer.
+    LinkDrop,
+    /// The model upload to the aggregator was lost.
+    UplinkLoss,
+    /// The server's round deadline fired before every update arrived.
+    Deadline,
+}
+
+impl FaultKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Crash => "crash",
+            FaultKind::LinkDrop => "link_drop",
+            FaultKind::UplinkLoss => "uplink_loss",
+            FaultKind::Deadline => "deadline",
+        }
+    }
+}
+
+/// One injected fault incident (exported as a JSONL `fault` event).
+#[derive(Clone, Debug)]
+pub struct FaultEvent {
+    pub kind: FaultKind,
+    /// Universe id of the primary affected client (`-1` for deadline).
+    pub a: i64,
+    /// Universe id of the partner, `-1` when the unit has none.
+    pub b: i64,
+    /// Simulated seconds into the round at which the incident fired.
+    pub t_s: f64,
+    /// Retry attempts spent recovering from this incident.
+    pub retries: usize,
+    /// Updates lost to this incident.
+    pub lost: usize,
+}
+
+impl FaultEvent {
+    fn new(kind: FaultKind, a: i64, b: i64, t_s: f64, retries: usize, lost: usize) -> FaultEvent {
+        FaultEvent { kind, a, b, t_s, retries, lost }
+    }
+}
+
+/// One work unit of a round, in universe ids.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultUnit {
+    /// A split-training pair (FedPairing).
+    Pair(usize, usize),
+    /// A lone client training against the server (FedPairing leftover,
+    /// VanillaFL, SplitFed).
+    Solo(usize),
+    /// One sequential split-learning session (VanillaSL).
+    Session(usize),
+}
+
+impl FaultUnit {
+    /// Universe ids participating in this unit.
+    pub fn members(self) -> Vec<usize> {
+        match self {
+            FaultUnit::Pair(a, b) => vec![a, b],
+            FaultUnit::Solo(s) | FaultUnit::Session(s) => vec![s],
+        }
+    }
+
+    fn ids(self) -> (i64, i64) {
+        match self {
+            FaultUnit::Pair(a, b) => (a as i64, b as i64),
+            FaultUnit::Solo(s) | FaultUnit::Session(s) => (s as i64, -1),
+        }
+    }
+
+    fn stream_key(self) -> (u64, u64) {
+        match self {
+            FaultUnit::Pair(a, b) => (a as u64, b as u64),
+            FaultUnit::Solo(s) => (s as u64, u64::MAX),
+            FaultUnit::Session(s) => (s as u64, u64::MAX - 1),
+        }
+    }
+}
+
+/// A unit plus its fault-free price and recovery fallbacks.
+#[derive(Clone, Copy, Debug)]
+pub struct UnitSpec {
+    pub unit: FaultUnit,
+    /// Fault-free duration of this unit (the engine's `unit_times()` entry).
+    pub t0: f64,
+    /// Full-model solo finish time for the first pair member (unused for
+    /// solos/sessions).
+    pub solo_a: f64,
+    /// Full-model solo finish time for the second pair member.
+    pub solo_b: f64,
+}
+
+/// The folded result of one round's fault pass.
+#[derive(Clone, Debug)]
+pub struct FaultOutcome {
+    pub counters: FaultCounters,
+    /// The round's total after faults and deadline (equals the fault-free
+    /// total when `changed` is false).
+    pub total_s: f64,
+    /// Whether anything fired. When false the caller must leave the
+    /// fault-free trace untouched — this is the bit-identity gate.
+    pub changed: bool,
+    /// Universe ids whose updates must be excluded from aggregation, sorted.
+    pub lost: Vec<usize>,
+    pub events: Vec<FaultEvent>,
+}
+
+/// What an exhausted pair/split-link retry budget falls back to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum LinkFail {
+    /// Unit has no mid-round transfer link (plain FL uploads only).
+    None,
+    /// Pair members fall back to solo full-model training and still deliver.
+    SoloFinish,
+    /// No partner to fall back on (split pipeline vs. the server): lost.
+    Lost,
+}
+
+/// How one unit actually ran under injected faults.
+#[derive(Clone, Debug)]
+struct UnitRun {
+    unit: FaultUnit,
+    /// Seconds the unit holds the round open (death or delivery, before any
+    /// shared post-pipeline overhead).
+    occupied_s: f64,
+    /// Whether the surviving members still deliver an update.
+    delivers: bool,
+    /// Universe ids lost to fault events (deadline losses come later).
+    lost: Vec<usize>,
+    failed: usize,
+    retries: usize,
+    recovery_s: f64,
+    events: Vec<FaultEvent>,
+}
+
+/// Samples per-stage failures and prices the configured recovery policy.
+pub struct FaultModel<'a> {
+    cfg: &'a FaultConfig,
+    algo: Algorithm,
+    seed: u64,
+}
+
+impl<'a> FaultModel<'a> {
+    pub fn new(cfg: &'a FaultConfig, algo: Algorithm, seed: u64) -> FaultModel<'a> {
+        FaultModel { cfg, algo, seed }
+    }
+
+    /// Whether any hazard or the deadline is armed.
+    pub fn active(&self) -> bool {
+        self.cfg.active()
+    }
+
+    /// Run the fault pass over one synchronous round.
+    ///
+    /// `units` lists the round's work units with their fault-free prices (in
+    /// the engine's `unit_times()` order); `shared_delivery_s` is overhead
+    /// added to every delivering unit's arrival time (SplitFed's FedAvg
+    /// upload, zero elsewhere); `fault_free_total_s` is the kernel's round
+    /// total, returned untouched when nothing fires.
+    pub fn inject_round(
+        &self,
+        round: usize,
+        units: &[UnitSpec],
+        shared_delivery_s: f64,
+        fault_free_total_s: f64,
+    ) -> FaultOutcome {
+        let mut runs: Vec<UnitRun> = Vec::with_capacity(units.len());
+        for spec in units {
+            let mut rng = self.unit_rng(round, spec.unit);
+            runs.push(self.eval_unit(spec, &mut rng));
+        }
+        self.fold_round(&runs, shared_delivery_s, fault_free_total_s)
+    }
+
+    /// Decide the fault outcome for a unit starting in async merge window
+    /// `window`. The decision is final for the unit's lifetime; reprices
+    /// replay it through [`AsyncFaults::reprice`].
+    pub fn plan_unit(&self, window: usize, spec: &UnitSpec) -> PlannedUnit {
+        let mut rng = self.unit_rng(window, spec.unit);
+        let run = self.eval_unit(spec, &mut rng);
+        PlannedUnit { dur_s: run.occupied_s, t0: spec.t0, run }
+    }
+
+    /// Self-contained per-unit stream: a SplitMix64 chain over
+    /// `(round, member ids)` picks the stream, so one unit's draw count can
+    /// never shift another unit's sequence.
+    fn unit_rng(&self, round: usize, unit: FaultUnit) -> Rng {
+        let (a, b) = unit.stream_key();
+        let mut state = (round as u64).wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut acc = splitmix64(&mut state);
+        state = acc ^ a;
+        acc = splitmix64(&mut state);
+        state = acc ^ b;
+        let stream = splitmix64(&mut state);
+        Rng::with_stream(self.seed ^ FAULT_STREAM, stream)
+    }
+
+    /// Which failure stages apply to this unit under this algorithm.
+    fn stage_plan(&self, unit: FaultUnit) -> (LinkFail, bool) {
+        match (self.algo, unit) {
+            (_, FaultUnit::Pair(..)) => (LinkFail::SoloFinish, true),
+            (Algorithm::SplitFed, FaultUnit::Solo(_)) => (LinkFail::Lost, true),
+            (_, FaultUnit::Session(_)) => (LinkFail::Lost, false),
+            (_, FaultUnit::Solo(_)) => (LinkFail::None, true),
+        }
+    }
+
+    fn eval_unit(&self, spec: &UnitSpec, rng: &mut Rng) -> UnitRun {
+        let mut run = UnitRun {
+            unit: spec.unit,
+            occupied_s: spec.t0,
+            delivers: true,
+            lost: Vec::new(),
+            failed: 0,
+            retries: 0,
+            recovery_s: 0.0,
+            events: Vec::new(),
+        };
+        self.eval_stages(spec, rng, &mut run);
+        run.recovery_s = (run.occupied_s - spec.t0).max(0.0);
+        run
+    }
+
+    fn eval_stages(&self, spec: &UnitSpec, rng: &mut Rng, run: &mut UnitRun) {
+        let h = self.cfg;
+        let rc = &h.recovery;
+        let t0 = spec.t0;
+        let (link_fail, has_uplink) = self.stage_plan(spec.unit);
+
+        // Stage 1: client crash during local compute; stage 2: mid-round
+        // transfer-link drop (only units that survive stage 1 intact).
+        match spec.unit {
+            FaultUnit::Pair(a, b) => {
+                let (ca, ua) = crash_draw(h.crash_per_round, rng);
+                let (cb, ub) = crash_draw(h.crash_per_round, rng);
+                match (ca, cb) {
+                    (true, true) => {
+                        run.occupied_s = ua.max(ub) * t0;
+                        run.delivers = false;
+                        run.lost = vec![a, b];
+                        run.failed = 2;
+                        let (ea, eb) = (a as i64, b as i64);
+                        run.events.push(FaultEvent::new(FaultKind::Crash, ea, eb, ua * t0, 0, 1));
+                        run.events.push(FaultEvent::new(FaultKind::Crash, eb, ea, ub * t0, 0, 1));
+                        return;
+                    }
+                    (true, false) => {
+                        // Partner a dies: survivor b goes solo and finishes
+                        // the full model from the crash point.
+                        run.occupied_s = ua * t0 + (1.0 - ua) * spec.solo_b;
+                        run.lost.push(a);
+                        run.failed = 1;
+                        let ev =
+                            FaultEvent::new(FaultKind::Crash, a as i64, b as i64, ua * t0, 0, 1);
+                        run.events.push(ev);
+                    }
+                    (false, true) => {
+                        run.occupied_s = ub * t0 + (1.0 - ub) * spec.solo_a;
+                        run.lost.push(b);
+                        run.failed = 1;
+                        let ev =
+                            FaultEvent::new(FaultKind::Crash, b as i64, a as i64, ub * t0, 0, 1);
+                        run.events.push(ev);
+                    }
+                    (false, false) => {
+                        if h.link_drop > 0.0 && rng.f64() < h.link_drop {
+                            let ud = rng.f64();
+                            let (backoff, n, ok) = retry_transmission(h.link_drop, rc, rng);
+                            run.retries = n;
+                            if ok {
+                                run.occupied_s = t0 + backoff;
+                            } else {
+                                // Retries exhausted: both members fall back
+                                // to solo full-model training from the drop
+                                // point; their updates still arrive.
+                                let solo = spec.solo_a.max(spec.solo_b);
+                                run.occupied_s = ud * t0 + backoff + (1.0 - ud) * solo;
+                            }
+                            let ev = FaultEvent::new(
+                                FaultKind::LinkDrop,
+                                a as i64,
+                                b as i64,
+                                ud * t0,
+                                n,
+                                0,
+                            );
+                            run.events.push(ev);
+                        }
+                    }
+                }
+            }
+            FaultUnit::Solo(s) | FaultUnit::Session(s) => {
+                let (c, u) = crash_draw(h.crash_per_round, rng);
+                if c {
+                    run.occupied_s = u * t0;
+                    run.delivers = false;
+                    run.lost = vec![s];
+                    run.failed = 1;
+                    run.events.push(FaultEvent::new(FaultKind::Crash, s as i64, -1, u * t0, 0, 1));
+                    return;
+                }
+                if link_fail != LinkFail::None && h.link_drop > 0.0 && rng.f64() < h.link_drop {
+                    let ud = rng.f64();
+                    let (backoff, n, ok) = retry_transmission(h.link_drop, rc, rng);
+                    run.retries = n;
+                    let mut lost_here = 0;
+                    if ok {
+                        run.occupied_s = t0 + backoff;
+                    } else {
+                        // Split pipeline against the server: no partner to
+                        // fall back on, the session dies at the drop point.
+                        run.occupied_s = ud * t0 + backoff;
+                        run.delivers = false;
+                        run.lost = vec![s];
+                        run.failed = 1;
+                        lost_here = 1;
+                    }
+                    let ev = FaultEvent::new(
+                        FaultKind::LinkDrop,
+                        s as i64,
+                        -1,
+                        ud * t0,
+                        n,
+                        lost_here,
+                    );
+                    run.events.push(ev);
+                }
+            }
+        }
+
+        // Stage 3: uplink loss during the model upload.
+        if has_uplink && run.delivers && h.uplink_loss > 0.0 && rng.f64() < h.uplink_loss {
+            let (backoff, n, ok) = retry_transmission(h.uplink_loss, rc, rng);
+            run.retries += n;
+            run.occupied_s += backoff;
+            let (ea, eb) = spec.unit.ids();
+            if ok {
+                run.events.push(FaultEvent::new(FaultKind::UplinkLoss, ea, eb, t0, n, 0));
+            } else {
+                let survivors: Vec<usize> =
+                    spec.unit.members().into_iter().filter(|m| !run.lost.contains(m)).collect();
+                run.delivers = false;
+                run.failed += survivors.len();
+                let ev = FaultEvent::new(FaultKind::UplinkLoss, ea, eb, t0, n, survivors.len());
+                run.events.push(ev);
+                run.lost.extend(survivors);
+            }
+        }
+    }
+
+    /// Fold per-unit runs into the round total, applying the deadline.
+    /// Hazard outcomes are deadline-independent, so `total = min(deadline,
+    /// raw_total)` and the deadline-lost set can only grow as the deadline
+    /// tightens — the monotonicity contract.
+    fn fold_round(
+        &self,
+        runs: &[UnitRun],
+        shared_delivery_s: f64,
+        fault_free_total_s: f64,
+    ) -> FaultOutcome {
+        let deadline = self.cfg.deadline_s;
+        let mut counters = FaultCounters::default();
+        let mut lost: Vec<usize> = Vec::new();
+        let mut events: Vec<FaultEvent> = Vec::new();
+        let mut any = false;
+        for run in runs {
+            any |= !run.events.is_empty();
+            counters.n_failed += run.failed;
+            counters.n_retries += run.retries;
+            counters.n_lost_updates += run.lost.len();
+            counters.recovery_s += run.recovery_s;
+            lost.extend_from_slice(&run.lost);
+            events.extend(run.events.iter().cloned());
+        }
+
+        let sequential = self.algo == Algorithm::VanillaSL;
+        let mut n_deadline_lost = 0usize;
+        let raw_total = if sequential {
+            // Sessions run back to back; a session delivers only if the
+            // running sum reaches the server before the deadline.
+            let mut sum = 0.0;
+            for run in runs {
+                sum += run.occupied_s;
+                if deadline > 0.0 && run.delivers && sum > deadline {
+                    for m in run.unit.members() {
+                        if !run.lost.contains(&m) {
+                            lost.push(m);
+                            n_deadline_lost += 1;
+                        }
+                    }
+                }
+            }
+            sum
+        } else {
+            // Parallel units: the round holds open for the slowest delivery
+            // (or death), and a unit delivers only if it arrives in time.
+            let mut t_all = 0.0f64;
+            for run in runs {
+                let arrive =
+                    if run.delivers { run.occupied_s + shared_delivery_s } else { run.occupied_s };
+                t_all = t_all.max(arrive);
+                if deadline > 0.0 && run.delivers && run.occupied_s + shared_delivery_s > deadline
+                {
+                    for m in run.unit.members() {
+                        if !run.lost.contains(&m) {
+                            lost.push(m);
+                            n_deadline_lost += 1;
+                        }
+                    }
+                }
+            }
+            t_all
+        };
+
+        let deadline_binds = deadline > 0.0 && (n_deadline_lost > 0 || deadline < raw_total);
+        if deadline_binds {
+            counters.n_lost_updates += n_deadline_lost;
+            let ev = FaultEvent::new(FaultKind::Deadline, -1, -1, deadline, 0, n_deadline_lost);
+            events.push(ev);
+        }
+        let changed = any || deadline_binds;
+        let total_s = if !changed {
+            fault_free_total_s
+        } else if deadline > 0.0 {
+            raw_total.min(deadline)
+        } else {
+            raw_total
+        };
+        lost.sort_unstable();
+        FaultOutcome { counters, total_s, changed, lost, events }
+    }
+}
+
+/// Retry loop for one already-failed transmission: waits an exponentially
+/// growing, jittered backoff before each attempt. Returns `(total backoff
+/// seconds, retries spent, succeeded)`.
+fn retry_transmission(
+    hazard: f64,
+    rc: &crate::config::RecoveryConfig,
+    rng: &mut Rng,
+) -> (f64, usize, bool) {
+    let mut backoff = 0.0f64;
+    for k in 0..rc.retry_max {
+        backoff +=
+            rc.backoff_base_s * 2.0f64.powi(k as i32) * (1.0 + rc.backoff_jitter * rng.f64());
+        if rng.f64() >= hazard {
+            return (backoff, k + 1, true);
+        }
+    }
+    (backoff, rc.retry_max, false)
+}
+
+/// Draw `(crashed, crash fraction)` for one client. Skips the draws when the
+/// hazard is disarmed so a crash-free config costs nothing.
+fn crash_draw(hazard: f64, rng: &mut Rng) -> (bool, f64) {
+    if hazard <= 0.0 {
+        return (false, 0.0);
+    }
+    let c = rng.f64() < hazard;
+    let u = rng.f64();
+    (c, u)
+}
+
+/// Feed one round's fault outcome into the metrics registry. Cheap no-op
+/// when telemetry is disabled or nothing fired.
+pub fn note_outcome(counters: &FaultCounters, events: &[FaultEvent]) {
+    if !registry::enabled() {
+        return;
+    }
+    let injected = events.iter().filter(|e| e.kind != FaultKind::Deadline).count();
+    if injected > 0 {
+        registry::count(Counter::FaultsInjected, injected as u64);
+    }
+    if counters.n_retries > 0 {
+        registry::count(Counter::FaultRetries, counters.n_retries as u64);
+    }
+    if counters.n_lost_updates > 0 {
+        registry::count(Counter::FaultLostUpdates, counters.n_lost_updates as u64);
+    }
+    if counters.recovery_s > 0.0 {
+        registry::observe(Histo::FaultRecoveryUs, (counters.recovery_s * 1e6) as u64);
+    }
+}
+
+/// Per-unit fault plan for the async `Timeline`, decided once at unit start.
+#[derive(Clone, Debug)]
+pub struct PlannedUnit {
+    /// Faulted duration to start the unit with.
+    pub dur_s: f64,
+    t0: f64,
+    run: UnitRun,
+}
+
+/// Bookkeeping for faulted units in flight on the async `Timeline`: maps
+/// Timeline unit ids to their fault plan so reprices preserve the decided
+/// delta and merges know which payloads are doomed.
+#[derive(Debug, Default)]
+pub struct AsyncFaults {
+    window: FaultCounters,
+    window_events: Vec<FaultEvent>,
+    extra: HashMap<u64, f64>,
+    lost: HashMap<u64, Vec<usize>>,
+}
+
+impl AsyncFaults {
+    pub fn new() -> AsyncFaults {
+        AsyncFaults::default()
+    }
+
+    /// Record a started unit's plan under its Timeline id.
+    pub fn register(&mut self, id: u64, p: &PlannedUnit) {
+        self.window.n_failed += p.run.failed;
+        self.window.n_retries += p.run.retries;
+        self.window.n_lost_updates += p.run.lost.len();
+        self.window.recovery_s += p.run.recovery_s;
+        self.window_events.extend(p.run.events.iter().cloned());
+        let extra = p.dur_s - p.t0;
+        if extra != 0.0 {
+            self.extra.insert(id, extra);
+        }
+        if !p.run.lost.is_empty() {
+            self.lost.insert(id, p.run.lost.clone());
+        }
+    }
+
+    /// Faulted duration for a reprice of unit `id` whose fault-free price is
+    /// now `t0`: the additive delta decided at start is preserved, and a
+    /// fault-free unit reprices to exactly `t0`.
+    pub fn reprice(&self, id: u64, t0: f64) -> f64 {
+        match self.extra.get(&id) {
+            Some(e) => (t0 + e).max(0.0),
+            None => t0,
+        }
+    }
+
+    /// Universe ids whose updates unit `id` lost to a fault.
+    pub fn lost_of(&self, id: u64) -> &[usize] {
+        self.lost.get(&id).map_or(&[], |v| v.as_slice())
+    }
+
+    /// Drop bookkeeping for a merged or cancelled unit.
+    pub fn forget(&mut self, id: u64) {
+        self.extra.remove(&id);
+        self.lost.remove(&id);
+    }
+
+    /// Drain the counters/events accumulated since the last merge window.
+    pub fn take_window(&mut self) -> (FaultCounters, Vec<FaultEvent>) {
+        (std::mem::take(&mut self.window), std::mem::take(&mut self.window_events))
+    }
+}
+
+/// Build FedPairing's round units in the engine's evaluation order — pairs
+/// (call order) then solos — priced with the engine's recorded
+/// `unit_times()`. `cpairs`/`csolos` are round-compact ids into `view`;
+/// `members` maps them back to universe ids. Pair members carry
+/// survivor-solo fallback prices from the same
+/// [`crate::sim::latency::full_local_time`] kernel the analytic engine
+/// charges, so a recovery costs exactly what a solo participant would.
+#[allow(clippy::too_many_arguments)]
+pub fn fedpairing_unit_specs<C: ClientSet>(
+    unit_times: &[f64],
+    cpairs: &[(usize, usize)],
+    csolos: &[usize],
+    members: &[usize],
+    view: &C,
+    profile: &ModelProfile,
+    sched: &Schedule,
+    channel: &Channel,
+    comp: &ComputeConfig,
+) -> Vec<UnitSpec> {
+    debug_assert_eq!(unit_times.len(), cpairs.len() + csolos.len());
+    let mut specs = Vec::with_capacity(unit_times.len());
+    for (k, &(ca, cb)) in cpairs.iter().enumerate() {
+        let solo_a = full_local_time(view, ca, profile, sched, channel, comp, true).1;
+        let solo_b = full_local_time(view, cb, profile, sched, channel, comp, true).1;
+        specs.push(UnitSpec {
+            unit: FaultUnit::Pair(members[ca], members[cb]),
+            t0: unit_times[k],
+            solo_a,
+            solo_b,
+        });
+    }
+    for (k, &cs) in csolos.iter().enumerate() {
+        specs.push(UnitSpec {
+            unit: FaultUnit::Solo(members[cs]),
+            t0: unit_times[cpairs.len() + k],
+            solo_a: 0.0,
+            solo_b: 0.0,
+        });
+    }
+    specs
+}
+
+/// Build a solo-algorithm round's units (one per client, fleet order) from
+/// the engine's recorded `unit_times()`: vanilla-FL and SplitFed clients are
+/// parallel [`FaultUnit::Solo`] units, vanilla-SL clients sequential
+/// [`FaultUnit::Session`]s.
+pub fn solo_unit_specs(algo: Algorithm, unit_times: &[f64], members: &[usize]) -> Vec<UnitSpec> {
+    debug_assert_eq!(unit_times.len(), members.len());
+    members
+        .iter()
+        .zip(unit_times)
+        .map(|(&m, &t0)| UnitSpec {
+            unit: if algo == Algorithm::VanillaSL {
+                FaultUnit::Session(m)
+            } else {
+                FaultUnit::Solo(m)
+            },
+            t0,
+            solo_a: 0.0,
+            solo_b: 0.0,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FaultConfig, RecoveryConfig};
+
+    fn hazards(crash: f64, link: f64, uplink: f64, deadline: f64) -> FaultConfig {
+        FaultConfig {
+            crash_per_round: crash,
+            link_drop: link,
+            uplink_loss: uplink,
+            deadline_s: deadline,
+            recovery: RecoveryConfig::default(),
+        }
+    }
+
+    fn pair_units() -> Vec<UnitSpec> {
+        vec![
+            UnitSpec { unit: FaultUnit::Pair(0, 1), t0: 10.0, solo_a: 14.0, solo_b: 18.0 },
+            UnitSpec { unit: FaultUnit::Pair(2, 3), t0: 12.0, solo_a: 13.0, solo_b: 15.0 },
+            UnitSpec { unit: FaultUnit::Solo(4), t0: 9.0, solo_a: 0.0, solo_b: 0.0 },
+        ]
+    }
+
+    #[test]
+    fn zero_hazards_change_nothing() {
+        let cfg = hazards(0.0, 0.0, 0.0, 0.0);
+        let model = FaultModel::new(&cfg, Algorithm::FedPairing, 7);
+        let out = model.inject_round(3, &pair_units(), 0.0, 12.0);
+        assert!(!out.changed);
+        assert_eq!(out.total_s.to_bits(), 12.0f64.to_bits());
+        assert_eq!(out.counters, FaultCounters::default());
+        assert!(out.lost.is_empty());
+        assert!(out.events.is_empty());
+    }
+
+    #[test]
+    fn fixed_seed_is_reproducible() {
+        let cfg = hazards(0.3, 0.3, 0.3, 0.0);
+        let model = FaultModel::new(&cfg, Algorithm::FedPairing, 42);
+        let a = model.inject_round(5, &pair_units(), 0.0, 12.0);
+        let b = model.inject_round(5, &pair_units(), 0.0, 12.0);
+        assert_eq!(a.total_s.to_bits(), b.total_s.to_bits());
+        assert_eq!(a.counters, b.counters);
+        assert_eq!(a.lost, b.lost);
+        assert_eq!(a.events.len(), b.events.len());
+        // A different round draws a different trace for at least one seed in
+        // this config (hazards are high enough that rounds rarely match).
+        let c = model.inject_round(6, &pair_units(), 0.0, 12.0);
+        let _ = c; // determinism, not divergence, is the contract under test
+    }
+
+    #[test]
+    fn certain_crash_loses_every_member() {
+        let cfg = hazards(1.0, 0.0, 0.0, 0.0);
+        let model = FaultModel::new(&cfg, Algorithm::FedPairing, 1);
+        let out = model.inject_round(0, &pair_units(), 0.0, 12.0);
+        assert!(out.changed);
+        assert_eq!(out.counters.n_failed, 5);
+        assert_eq!(out.counters.n_lost_updates, 5);
+        assert_eq!(out.lost, vec![0, 1, 2, 3, 4]);
+        // Everyone died mid-compute, so the round can only get shorter.
+        assert!(out.total_s <= 12.0);
+    }
+
+    #[test]
+    fn exhausted_pair_link_still_delivers_solo() {
+        let cfg = FaultConfig {
+            crash_per_round: 0.0,
+            link_drop: 1.0,
+            uplink_loss: 0.0,
+            deadline_s: 0.0,
+            recovery: RecoveryConfig { retry_max: 3, backoff_base_s: 0.5, backoff_jitter: 0.0 },
+        };
+        let model = FaultModel::new(&cfg, Algorithm::FedPairing, 9);
+        let out = model.inject_round(0, &pair_units(), 0.0, 12.0);
+        assert!(out.changed);
+        // Both pairs drop and exhaust 3 retries each; the FedPairing solo
+        // has no mid-round link so it is untouched.
+        assert_eq!(out.counters.n_retries, 6);
+        assert_eq!(out.counters.n_failed, 0);
+        assert!(out.lost.is_empty());
+        assert!(out.counters.recovery_s > 0.0);
+        assert!(out.total_s > 12.0);
+    }
+
+    #[test]
+    fn uplink_exhaustion_with_no_retries_loses_units() {
+        let cfg = FaultConfig {
+            crash_per_round: 0.0,
+            link_drop: 0.0,
+            uplink_loss: 1.0,
+            deadline_s: 0.0,
+            recovery: RecoveryConfig { retry_max: 0, backoff_base_s: 0.5, backoff_jitter: 0.0 },
+        };
+        let model = FaultModel::new(&cfg, Algorithm::FedPairing, 9);
+        let out = model.inject_round(0, &pair_units(), 0.0, 12.0);
+        assert!(out.changed);
+        assert_eq!(out.counters.n_retries, 0);
+        assert_eq!(out.counters.n_failed, 5);
+        assert_eq!(out.lost, vec![0, 1, 2, 3, 4]);
+        // Zero backoff: occupation times are unchanged, so the total is the
+        // fault-free makespan even though every update was lost.
+        assert_eq!(out.total_s.to_bits(), 12.0f64.to_bits());
+    }
+
+    #[test]
+    fn deadline_truncates_and_loses_late_units() {
+        let cfg = hazards(0.0, 0.0, 0.0, 9.5);
+        let model = FaultModel::new(&cfg, Algorithm::FedPairing, 3);
+        let out = model.inject_round(0, &pair_units(), 0.0, 12.0);
+        assert!(out.changed);
+        assert_eq!(out.total_s, 9.5);
+        assert_eq!(out.counters.n_lost_updates, 4);
+        assert_eq!(out.counters.n_failed, 0);
+        assert_eq!(out.lost, vec![0, 1, 2, 3]);
+        assert_eq!(out.events.len(), 1);
+        assert_eq!(out.events[0].kind, FaultKind::Deadline);
+
+        // A looser deadline loses fewer updates and never shortens further.
+        let cfg2 = hazards(0.0, 0.0, 0.0, 11.0);
+        let out2 = FaultModel::new(&cfg2, Algorithm::FedPairing, 3)
+            .inject_round(0, &pair_units(), 0.0, 12.0);
+        assert_eq!(out2.total_s, 11.0);
+        assert_eq!(out2.counters.n_lost_updates, 2);
+        assert!(out2.total_s >= out.total_s);
+
+        // A non-binding deadline leaves the fault-free trace untouched.
+        let cfg3 = hazards(0.0, 0.0, 0.0, 13.0);
+        let out3 = FaultModel::new(&cfg3, Algorithm::FedPairing, 3)
+            .inject_round(0, &pair_units(), 0.0, 12.0);
+        assert!(!out3.changed);
+        assert_eq!(out3.total_s.to_bits(), 12.0f64.to_bits());
+        assert_eq!(out3.counters.n_lost_updates, 0);
+    }
+
+    #[test]
+    fn sequential_deadline_cuts_the_session_tail() {
+        let cfg = hazards(0.0, 0.0, 0.0, 10.0);
+        let model = FaultModel::new(&cfg, Algorithm::VanillaSL, 3);
+        let units = vec![
+            UnitSpec { unit: FaultUnit::Session(0), t0: 4.0, solo_a: 0.0, solo_b: 0.0 },
+            UnitSpec { unit: FaultUnit::Session(1), t0: 5.0, solo_a: 0.0, solo_b: 0.0 },
+            UnitSpec { unit: FaultUnit::Session(2), t0: 6.0, solo_a: 0.0, solo_b: 0.0 },
+        ];
+        let out = model.inject_round(0, &units, 0.0, 15.0);
+        assert!(out.changed);
+        assert_eq!(out.total_s, 10.0);
+        assert_eq!(out.lost, vec![2]);
+        assert_eq!(out.counters.n_lost_updates, 1);
+    }
+
+    #[test]
+    fn async_reprice_preserves_the_fault_delta() {
+        let cfg = FaultConfig {
+            crash_per_round: 0.0,
+            link_drop: 1.0,
+            uplink_loss: 0.0,
+            deadline_s: 0.0,
+            recovery: RecoveryConfig { retry_max: 2, backoff_base_s: 0.5, backoff_jitter: 0.0 },
+        };
+        let model = FaultModel::new(&cfg, Algorithm::FedPairing, 11);
+        let spec = UnitSpec { unit: FaultUnit::Pair(3, 8), t0: 10.0, solo_a: 12.0, solo_b: 16.0 };
+        let plan = model.plan_unit(2, &spec);
+        let delta = plan.dur_s - 10.0;
+        assert!(delta > 0.0);
+
+        let mut af = AsyncFaults::new();
+        af.register(7, &plan);
+        let repriced = af.reprice(7, 20.0);
+        assert!((repriced - (20.0 + delta)).abs() < 1e-12);
+        // Unknown ids reprice to exactly the fault-free duration.
+        assert_eq!(af.reprice(99, 20.0).to_bits(), 20.0f64.to_bits());
+        let (w, ev) = af.take_window();
+        assert_eq!(w.n_retries, 2);
+        assert_eq!(ev.len(), 1);
+        af.forget(7);
+        assert_eq!(af.reprice(7, 20.0).to_bits(), 20.0f64.to_bits());
+        assert!(af.lost_of(7).is_empty());
+    }
+}

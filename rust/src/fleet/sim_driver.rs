@@ -14,6 +14,7 @@ use super::{maintain_matching_session, PairingSession};
 use crate::asyncsim::AggregationEvent;
 use crate::config::{AggregationMode, Algorithm, ConfigError, ExperimentConfig, SplitPolicy};
 use crate::coordinator::metrics::{streamer_for, RoundRecord, RunResult};
+use crate::faults::{self, FaultModel};
 use crate::sim::engine::RoundEngine;
 use crate::sim::latency::{Fleet, FleetView, Schedule};
 use crate::sim::profile::ModelProfile;
@@ -84,6 +85,12 @@ pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigEr
     // universe→compact ids through a reusable scratch map, and evaluates
     // pairs analytically with cross-round memoization (DESIGN.md §6).
     let mut engine = RoundEngine::new(&cfg.engine).with_split(cfg.split);
+    // Mid-round fault injection (DESIGN.md §11). A disarmed config skips
+    // the whole pass, so fault-free traces stay bit-identical.
+    let fmodel = FaultModel::new(&cfg.faults, cfg.algorithm, cfg.seed);
+    if fmodel.active() {
+        engine.set_record_units(true);
+    }
     let mut inv = InverseIndex::new();
     let mut cpairs: Vec<(usize, usize)> = Vec::new();
     let mut csolos: Vec<usize> = Vec::new();
@@ -171,6 +178,38 @@ pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigEr
             }
         };
         rt.stages.remap_crit(members);
+        // Fault pass: replay the round's units through the fault model and
+        // take the recovered (retried / re-paired / deadline-clamped) finish
+        // as the round time. Inactive models leave `rt` bit-untouched.
+        if fmodel.active() {
+            let specs = match cfg.algorithm {
+                Algorithm::FedPairing => {
+                    let view = FleetView::new(dynamics.universe(), members);
+                    faults::fedpairing_unit_specs(
+                        engine.unit_times(),
+                        &cpairs,
+                        &csolos,
+                        members,
+                        &view,
+                        &profile,
+                        &sched,
+                        &channel,
+                        &cfg.compute,
+                    )
+                }
+                algo => faults::solo_unit_specs(algo, engine.unit_times(), members),
+            };
+            let shared = if cfg.algorithm == Algorithm::SplitFed {
+                rt.stages.stage_s[5]
+            } else {
+                0.0
+            };
+            let out = fmodel.inject_round(round, &specs, shared, rt.total_s);
+            rt.total_s = out.total_s;
+            rt.faults = out.counters;
+            faults::note_outcome(&out.counters, &out.events);
+            telemetry.fault_events(&out.events, sim_total);
+        }
         telemetry.mark("engine");
         sim_total += rt.total_s;
         let rec = RoundRecord {
@@ -183,6 +222,7 @@ pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigEr
             sim_total_s: sim_total,
             t_wall_s: sim_total,
             staleness_mean: f64::NAN,
+            faults: rt.faults,
             mean_cut: rt.mean_cut,
             stages: rt.stages,
         };

@@ -9,8 +9,9 @@
 //!   split-training protocol and round loop
 //!   ([`coordinator`]), the heterogeneity/latency simulator ([`sim`]), the
 //!   fleet-dynamics layer — churn, fading channels, incremental re-pairing —
-//!   ([`fleet`]), data synthesis and partitioning ([`data`]), and host-side
-//!   parameter math ([`nn`]).
+//!   ([`fleet`]), mid-round fault injection and recovery ([`faults`]), data
+//!   synthesis and partitioning ([`data`]), and host-side parameter math
+//!   ([`nn`]).
 //! - **L2/L1 (build-time Python)** — the model's forward/backward (JAX) with
 //!   Pallas kernels at the hot spot, AOT-lowered to HLO text artifacts that
 //!   the [`runtime`] executes via the PJRT CPU client. Python never runs on
@@ -24,6 +25,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod faults;
 pub mod fleet;
 pub mod model;
 pub mod nn;

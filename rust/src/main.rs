@@ -54,6 +54,11 @@ fn cli() -> Command {
                 .flag("buffer-size", None, Some("N"), "async: updates buffered per merge (>= 1)", None)
                 .flag("staleness-cap", None, Some("N"), "async: max merges an update may lag (0 = sync barrier)", None)
                 .flag("weighting", None, Some("FN"), "async merge discount: flat|polynomial", None)
+                .flag("faults", None, Some("SPEC"), "fault hazards: off | crash=P,link=P,uplink=P", None)
+                .flag("deadline", None, Some("S"), "server round deadline in sim seconds (0 = off)", None)
+                .flag("retry-max", None, Some("N"), "max retries per failed transfer (<= 64)", None)
+                .flag("retry-backoff", None, Some("S"), "first retry backoff in sim seconds", None)
+                .flag("retry-jitter", None, Some("J"), "backoff jitter fraction in [0, 1]", None)
                 .flag("stream-out", None, Some("DIR"), "stream per-round records to DIR/*.stream.{csv,jsonl}", None)
                 .flag("telemetry", None, None, "enable the metrics registry + stage counters", None)
                 .flag("trace-out", None, Some("FILE"), "Chrome trace + .prom/.jsonl sidecars; implies --telemetry", None)
@@ -80,6 +85,11 @@ fn cli() -> Command {
                 .flag("buffer-size", None, Some("N"), "async: updates buffered per merge (>= 1)", None)
                 .flag("staleness-cap", None, Some("N"), "async: max merges an update may lag (0 = sync barrier)", None)
                 .flag("weighting", None, Some("FN"), "async merge discount: flat|polynomial", None)
+                .flag("faults", None, Some("SPEC"), "fault hazards: off | crash=P,link=P,uplink=P", None)
+                .flag("deadline", None, Some("S"), "server round deadline in sim seconds (0 = off)", None)
+                .flag("retry-max", None, Some("N"), "max retries per failed transfer (<= 64)", None)
+                .flag("retry-backoff", None, Some("S"), "first retry backoff in sim seconds", None)
+                .flag("retry-jitter", None, Some("J"), "backoff jitter fraction in [0, 1]", None)
                 .flag("stream-out", None, Some("DIR"), "stream per-round records to DIR/*.stream.{csv,jsonl}", None)
                 .flag("telemetry", None, None, "enable the metrics registry + stage counters", None)
                 .flag("trace-out", None, Some("FILE"), "Chrome trace + .prom/.jsonl sidecars; implies --telemetry", None)
@@ -195,6 +205,28 @@ fn apply_aggregation_flags(cfg: &mut ExperimentConfig, p: &Parsed) -> anyhow::Re
     Ok(())
 }
 
+/// Apply the shared fault-injection flags (`--faults`, `--deadline`,
+/// `--retry-max`, `--retry-backoff`, `--retry-jitter`). Hazard and recovery
+/// bounds are enforced by `ExperimentConfig::validate` at run start.
+fn apply_fault_flags(cfg: &mut ExperimentConfig, p: &Parsed) -> anyhow::Result<()> {
+    if let Some(spec) = p.get("faults") {
+        cfg.faults.apply_spec(spec).map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    if let Some(d) = req_parsed::<f64>(p, "deadline")? {
+        cfg.faults.deadline_s = d;
+    }
+    if let Some(n) = req_parsed::<usize>(p, "retry-max")? {
+        cfg.faults.recovery.retry_max = n;
+    }
+    if let Some(b) = req_parsed::<f64>(p, "retry-backoff")? {
+        cfg.faults.recovery.backoff_base_s = b;
+    }
+    if let Some(j) = req_parsed::<f64>(p, "retry-jitter")? {
+        cfg.faults.recovery.backoff_jitter = j;
+    }
+    Ok(())
+}
+
 /// Apply the shared `--split-policy` / `--model` split-planner overrides.
 fn apply_split_flags(cfg: &mut ExperimentConfig, p: &Parsed) -> anyhow::Result<()> {
     if let Some(s) = p.get("split-policy") {
@@ -261,6 +293,7 @@ fn cmd_run(p: &Parsed) -> anyhow::Result<()> {
     apply_engine_flags(&mut cfg, p)?;
     apply_split_flags(&mut cfg, p)?;
     apply_aggregation_flags(&mut cfg, p)?;
+    apply_fault_flags(&mut cfg, p)?;
     apply_telemetry_flags(&mut cfg, p);
     if let Some(d) = p.get("artifacts") {
         cfg.artifacts_dir = d.to_string();
@@ -336,6 +369,7 @@ fn cmd_churn(p: &Parsed) -> anyhow::Result<()> {
     apply_engine_flags(&mut cfg, p)?;
     apply_split_flags(&mut cfg, p)?;
     apply_aggregation_flags(&mut cfg, p)?;
+    apply_fault_flags(&mut cfg, p)?;
     apply_telemetry_flags(&mut cfg, p);
     if let Some(d) = p.get("out") {
         cfg.out_dir = d.to_string();

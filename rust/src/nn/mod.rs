@@ -153,6 +153,26 @@ pub fn all_finite(p: &Params) -> bool {
     p.iter().all(|t| t.iter().all(|x| x.is_finite()))
 }
 
+/// Aggregation payload guard: drop every model carrying a NaN/±inf tensor
+/// (and its paired weight) in place, returning how many were rejected.
+///
+/// Callers renormalize the surviving weights exactly as they already do for
+/// churned-out clients, so one poisoned update can never corrupt the merged
+/// global model. When nothing is rejected the vectors are untouched —
+/// healthy runs keep their bit-for-bit traces.
+pub fn reject_nonfinite(models: &mut Vec<Params>, weights: &mut Vec<f64>) -> usize {
+    assert_eq!(models.len(), weights.len());
+    if models.iter().all(all_finite) {
+        return 0;
+    }
+    let keep: Vec<bool> = models.iter().map(all_finite).collect();
+    let mut it = keep.iter();
+    models.retain(|_| *it.next().unwrap());
+    let mut it = keep.iter();
+    weights.retain(|_| *it.next().unwrap());
+    keep.iter().filter(|&&k| !k).count()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -282,6 +302,35 @@ mod tests {
         assert!(all_finite(&p));
         p[0][2] = f32::NAN;
         assert!(!all_finite(&p));
+    }
+
+    #[test]
+    fn reject_nonfinite_drops_poisoned_updates_only() {
+        // One NaN client among three must not corrupt the merge: the guard
+        // drops it, the caller renormalizes, and FedAvg stays finite.
+        let mut models = vec![params3(1, 1.0), params3(1, 4.0), params3(1, 7.0)];
+        models[1][0][2] = f32::NAN;
+        let mut weights = vec![0.25, 0.25, 0.5];
+        let dropped = reject_nonfinite(&mut models, &mut weights);
+        assert_eq!(dropped, 1);
+        assert_eq!(models.len(), 2);
+        assert_eq!(weights, vec![0.25, 0.5]);
+        let wsum: f64 = weights.iter().sum();
+        let renorm: Vec<f64> = weights.iter().map(|w| w / wsum).collect();
+        let avg = fedavg_weighted(&models, &renorm);
+        assert!(all_finite(&avg));
+        // 1·(1/3) + 7·(2/3) = 5
+        assert!(avg.iter().all(|t| t.iter().all(|&x| (x - 5.0).abs() < 1e-6)));
+    }
+
+    #[test]
+    fn reject_nonfinite_is_a_no_op_on_healthy_payloads() {
+        let mut models = vec![params3(1, 1.0), params3(1, 2.0)];
+        let mut weights = vec![0.5, 0.5];
+        let before = models.clone();
+        assert_eq!(reject_nonfinite(&mut models, &mut weights), 0);
+        assert_eq!(models, before);
+        assert_eq!(weights, vec![0.5, 0.5]);
     }
 
     #[test]

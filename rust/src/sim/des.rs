@@ -9,6 +9,12 @@
 //! Determinism: ties in event time are broken by monotonic sequence numbers,
 //! so identical inputs always produce identical schedules — experiments
 //! replay bit-for-bit.
+//!
+//! The DES backend reports chain finishes and resource busy time but does
+//! not expose the per-unit (pair/solo/session) durations the fault layer
+//! needs to price retries and survivor-solo recoveries, so fault injection
+//! on the DES backend is rejected at config validation (see
+//! `config::ExperimentConfig::validate` and DESIGN.md §11).
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};

@@ -662,6 +662,7 @@ impl RoundEngine {
             max_link_busy_s: max_link,
             mean_cut: mean_cut_of(cut_sum, pairs.len()),
             stages,
+            faults: Default::default(),
             flow_finish_s: finishes,
         }
     }
@@ -718,6 +719,7 @@ impl RoundEngine {
             max_link_busy_s: 0.0,
             mean_cut: f64::NAN,
             stages,
+            faults: Default::default(),
             flow_finish_s: Vec::new(),
         }
     }
@@ -817,6 +819,7 @@ impl RoundEngine {
             max_link_busy_s: max_link,
             mean_cut: cut as f64,
             stages,
+            faults: Default::default(),
             flow_finish_s: finishes,
         }
     }
@@ -946,6 +949,7 @@ impl RoundEngine {
             max_link_busy_s: max_link,
             mean_cut: cut as f64,
             stages,
+            faults: Default::default(),
             flow_finish_s: if self.flow_diagnostics {
                 finish
             } else {

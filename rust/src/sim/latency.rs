@@ -179,6 +179,10 @@ pub struct RoundTime {
     /// telemetry-independent arithmetic by every evaluator that produces it
     /// (default/zeroed where a path has no attribution — see DESIGN.md §8).
     pub stages: StageBreakdown,
+    /// Fault/recovery accounting for the round (DESIGN.md §11). The kernels
+    /// always construct it zeroed; the drivers' fault pass fills it in, so a
+    /// disarmed `FaultConfig` leaves traces bit-identical.
+    pub faults: crate::faults::FaultCounters,
     /// Per-flow finish times (diagnostic).
     pub flow_finish_s: Vec<f64>,
 }
@@ -521,6 +525,7 @@ pub fn fedpairing_round_planned<C: ClientSet>(
         max_link_busy_s: max_link,
         mean_cut: mean_cut_of(cut_sum, pairs.len()),
         stages,
+        faults: Default::default(),
         flow_finish_s: finishes,
     }
 }
@@ -564,6 +569,7 @@ pub fn fl_round<C: ClientSet>(
         max_link_busy_s: 0.0,
         mean_cut: f64::NAN,
         stages,
+        faults: Default::default(),
         flow_finish_s: finishes,
     }
 }
@@ -657,6 +663,7 @@ pub fn sl_round<C: ClientSet>(
         max_link_busy_s: max_link,
         mean_cut: cut as f64,
         stages,
+        faults: Default::default(),
         flow_finish_s: finishes,
     }
 }
@@ -739,6 +746,7 @@ pub fn splitfed_round<C: ClientSet>(
         max_link_busy_s: max_link,
         mean_cut: cut as f64,
         stages,
+        faults: Default::default(),
         flow_finish_s: rep.chain_finish,
     }
 }

@@ -206,6 +206,39 @@ impl Telemetry {
         }
     }
 
+    /// Record this round's (or merge window's) fault events: one JSONL
+    /// `fault` event each plus a lost-updates counter lane on the
+    /// simulated-time pid. Event times are round-relative; `sim_offset_s`
+    /// rebases them onto the run's simulated clock. No-op when the current
+    /// round is not sampled or nothing fired.
+    pub fn fault_events(&mut self, events: &[crate::faults::FaultEvent], sim_offset_s: f64) {
+        if !self.sampling || events.is_empty() {
+            return;
+        }
+        let mut total_lost = 0usize;
+        for e in events {
+            total_lost += e.lost;
+            let mut o = JsonObj::new();
+            o.insert("type", Json::str("fault"));
+            o.insert("round", Json::Num(self.round as f64));
+            o.insert("kind", Json::str(e.kind.name()));
+            o.insert("a", Json::Num(e.a as f64));
+            o.insert("b", Json::Num(e.b as f64));
+            o.insert("t_s", Json::Num(sim_offset_s + e.t_s));
+            o.insert("retries", Json::Num(e.retries as f64));
+            o.insert("lost", Json::Num(e.lost as f64));
+            self.events.push(Json::Obj(o));
+        }
+        if let Some(tr) = self.trace.as_mut() {
+            tr.counter(
+                "fault_lost_updates",
+                PID_SIM,
+                sim_offset_s * 1e6,
+                total_lost as f64,
+            );
+        }
+    }
+
     /// Flush the exporters. With `trace_out = Some(path)` this writes the
     /// Chrome trace to `path`, the Prometheus snapshot to `path.prom` and
     /// the JSONL round events to `path.events.jsonl`; returns the paths

@@ -1,0 +1,402 @@
+//! Mid-round fault injection and recovery properties (DESIGN.md §11).
+//!
+//! The pinned invariants:
+//!
+//! 1. **Zero-hazard bit-identity** — an *armed* fault model whose hazards are
+//!    all zero and whose deadline never binds must leave the trace
+//!    bit-for-bit identical to a fault-free run: same `sim_round_s`,
+//!    `sim_total_s`, stage breakdowns, critical paths and (all-zero) fault
+//!    counters, at any thread count, for all four algorithms.
+//! 2. **Cross-thread reproducibility** — with hazards enabled, a fixed
+//!    `(seed, config)` produces the same fault events, retry counts, losses
+//!    and round times regardless of `engine.threads`.
+//! 3. **Deadline monotonicity** — tightening the server deadline (everything
+//!    else fixed) never makes a round slower and never recovers a lost
+//!    update: per-round `sim_round_s` is non-increasing and
+//!    `n_lost_updates` non-decreasing in the deadline.
+//! 4. **Accounting sanity under chaos** — per round, terminal failures and
+//!    lost updates are bounded by the participant count and recovery time is
+//!    finite and non-negative.
+//!
+//! Every test serializes on one mutex: the telemetry registry gate is
+//! process-wide and `Telemetry::new` (constructed by every scenario run)
+//! flips it.
+
+use fedpairing::config::{
+    AggregationMode, Algorithm, ExperimentConfig, RoundBackend, ScenarioConfig, ScenarioKind,
+};
+use fedpairing::coordinator::metrics::RoundRecord;
+use fedpairing::fleet::simulate_scenario;
+use fedpairing::telemetry::registry::{self, Counter};
+use fedpairing::util::json::Json;
+use std::sync::Mutex;
+
+/// Process-wide serialization for the global registry gate.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+const N_CLIENTS: usize = 12;
+const ROUNDS: usize = 30;
+
+/// A deadline far beyond any round makespan: arms the fault pass without
+/// ever binding.
+const NEVER_BINDS_S: f64 = 1e30;
+
+fn cfg(kind: ScenarioKind, algo: Algorithm) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.n_clients = N_CLIENTS;
+    c.rounds = ROUNDS;
+    c.samples_per_client = 250;
+    c.algorithm = algo;
+    c.scenario = ScenarioConfig::preset(kind);
+    c
+}
+
+/// Arm the three stage hazards (crash during compute, pair-link drop,
+/// uplink loss) on a copy of `base`.
+fn hazards(base: &ExperimentConfig, crash: f64, link: f64, uplink: f64) -> ExperimentConfig {
+    let mut c = base.clone();
+    c.faults.crash_per_round = crash;
+    c.faults.link_drop = link;
+    c.faults.uplink_loss = uplink;
+    c
+}
+
+const ALGOS: [Algorithm; 4] = [
+    Algorithm::FedPairing,
+    Algorithm::VanillaFL,
+    Algorithm::VanillaSL,
+    Algorithm::SplitFed,
+];
+
+/// Every observable bit of a round record except `staleness_mean` (NaN on
+/// sync rows), including the fault counters. NaN-safe: compares bit
+/// patterns.
+type Fp = (
+    (usize, usize, u64, u64, u64, u64),
+    ([u64; 7], i64, i64, u64),
+    (usize, usize, usize, u64),
+);
+
+fn fingerprint(rounds: &[RoundRecord]) -> Vec<Fp> {
+    rounds
+        .iter()
+        .map(|r| {
+            (
+                (
+                    r.round,
+                    r.n_alive,
+                    r.sim_round_s.to_bits(),
+                    r.sim_total_s.to_bits(),
+                    r.t_wall_s.to_bits(),
+                    r.mean_cut.to_bits(),
+                ),
+                (
+                    r.stages.stage_s.map(f64::to_bits),
+                    r.stages.crit_a,
+                    r.stages.crit_b,
+                    r.stages.crit_slack_s.to_bits(),
+                ),
+                (
+                    r.faults.n_failed,
+                    r.faults.n_retries,
+                    r.faults.n_lost_updates,
+                    r.faults.recovery_s.to_bits(),
+                ),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn armed_zero_hazard_faults_are_bit_identical_to_fault_free() {
+    let _g = lock();
+    // An armed model (deadline_s > 0 switches the whole fault pass on) with
+    // zero hazards and a deadline that never binds must replay every round
+    // to the identical bits — the pass prices the same units the engine
+    // already priced and folds them back unchanged.
+    for kind in [ScenarioKind::Stable, ScenarioKind::LossyRadio] {
+        for algo in ALGOS {
+            for threads in [1usize, 4] {
+                let mut base = cfg(kind, algo);
+                base.engine.threads = threads;
+                let mut armed = base.clone();
+                armed.faults.deadline_s = NEVER_BINDS_S;
+                let a = simulate_scenario(&base).unwrap();
+                let b = simulate_scenario(&armed).unwrap();
+                assert_eq!(
+                    fingerprint(&a.result.rounds),
+                    fingerprint(&b.result.rounds),
+                    "{kind:?}/{algo:?}/threads={threads}: armed zero-hazard trace diverged"
+                );
+                assert_eq!(a.trace, b.trace, "{kind:?}/{algo:?}: churn trace diverged");
+                for r in &b.result.rounds {
+                    assert_eq!(r.faults.n_failed, 0);
+                    assert_eq!(r.faults.n_retries, 0);
+                    assert_eq!(r.faults.n_lost_updates, 0);
+                    assert_eq!(r.faults.recovery_s, 0.0);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fault_traces_are_identical_across_thread_counts() {
+    let _g = lock();
+    for algo in ALGOS {
+        let base = cfg(ScenarioKind::LossyRadio, algo);
+        let mut one = hazards(&base, 0.05, 0.08, 0.04);
+        one.engine.threads = 1;
+        let mut four = one.clone();
+        four.engine.threads = 4;
+        let a = simulate_scenario(&one).unwrap();
+        let b = simulate_scenario(&four).unwrap();
+        assert_eq!(
+            fingerprint(&a.result.rounds),
+            fingerprint(&b.result.rounds),
+            "{algo:?}: faulted trace depends on thread count"
+        );
+        assert_eq!(a.trace, b.trace, "{algo:?}: churn trace diverged");
+        // The hazards are high enough that a silent no-op would be a bug.
+        let activity: usize = a
+            .result
+            .rounds
+            .iter()
+            .map(|r| r.faults.n_failed + r.faults.n_retries + r.faults.n_lost_updates)
+            .sum();
+        assert!(activity > 0, "{algo:?}: no fault ever fired at 5%/8%/4% hazards");
+    }
+}
+
+#[test]
+fn chaos_accounting_stays_consistent() {
+    let _g = lock();
+    for algo in [Algorithm::FedPairing, Algorithm::SplitFed] {
+        let c = hazards(&cfg(ScenarioKind::LossyRadio, algo), 0.15, 0.2, 0.1);
+        let run = simulate_scenario(&c).unwrap();
+        assert_eq!(run.result.rounds.len(), ROUNDS);
+        let (mut failed, mut retries, mut lost) = (0usize, 0usize, 0usize);
+        for r in &run.result.rounds {
+            assert!(
+                r.faults.n_failed <= r.n_alive,
+                "{algo:?} round {}: {} failures among {} participants",
+                r.round,
+                r.faults.n_failed,
+                r.n_alive
+            );
+            assert!(r.faults.n_lost_updates <= r.n_alive, "{algo:?} round {}", r.round);
+            assert!(
+                r.faults.recovery_s.is_finite() && r.faults.recovery_s >= 0.0,
+                "{algo:?} round {}",
+                r.round
+            );
+            // Retries cost backoff, so recovery time must show up with them.
+            if r.faults.n_retries > 0 {
+                assert!(r.faults.recovery_s > 0.0, "{algo:?} round {}", r.round);
+            }
+            assert!(r.sim_round_s.is_finite() && r.sim_round_s > 0.0);
+            failed += r.faults.n_failed;
+            retries += r.faults.n_retries;
+            lost += r.faults.n_lost_updates;
+        }
+        assert!(failed > 0, "{algo:?}: chaos produced no terminal failures");
+        assert!(retries > 0, "{algo:?}: chaos produced no retries");
+        assert!(lost > 0, "{algo:?}: chaos lost no updates");
+    }
+}
+
+#[test]
+fn tighter_deadlines_never_slow_rounds_or_recover_updates() {
+    let _g = lock();
+    let base = cfg(ScenarioKind::Stable, Algorithm::FedPairing);
+    // Calibrate the deadline ladder off the fault-free makespan.
+    let clean = simulate_scenario(&base).unwrap();
+    let rmax = clean
+        .result
+        .rounds
+        .iter()
+        .map(|r| r.sim_round_s)
+        .fold(0.0f64, f64::max);
+    assert!(rmax > 0.0);
+
+    let faulty = hazards(&base, 0.05, 0.1, 0.05);
+    // A non-binding deadline must not perturb a hazard-only run.
+    let mut never = faulty.clone();
+    never.faults.deadline_s = NEVER_BINDS_S;
+    let unbounded = simulate_scenario(&faulty).unwrap();
+    let armed = simulate_scenario(&never).unwrap();
+    assert_eq!(
+        fingerprint(&unbounded.result.rounds),
+        fingerprint(&armed.result.rounds),
+        "a never-binding deadline changed the hazard-only trace"
+    );
+
+    let ladder = [NEVER_BINDS_S, rmax, 0.6 * rmax, 0.3 * rmax];
+    let runs: Vec<_> = ladder
+        .iter()
+        .map(|&d| {
+            let mut c = faulty.clone();
+            c.faults.deadline_s = d;
+            simulate_scenario(&c).unwrap()
+        })
+        .collect();
+    for w in runs.windows(2) {
+        let (loose, tight) = (&w[0].result.rounds, &w[1].result.rounds);
+        assert_eq!(loose.len(), tight.len());
+        for (l, t) in loose.iter().zip(tight) {
+            assert!(
+                t.sim_round_s <= l.sim_round_s,
+                "round {}: tightening the deadline slowed the round ({} > {})",
+                l.round,
+                t.sim_round_s,
+                l.sim_round_s
+            );
+            assert!(
+                t.faults.n_lost_updates >= l.faults.n_lost_updates,
+                "round {}: tightening the deadline recovered an update",
+                l.round
+            );
+        }
+    }
+    let cut: usize = runs
+        .last()
+        .unwrap()
+        .result
+        .rounds
+        .iter()
+        .map(|r| r.faults.n_lost_updates)
+        .sum();
+    assert!(cut > 0, "a deadline at 30% of the makespan never cut anything");
+}
+
+#[test]
+fn fault_validation_rejects_bad_configs() {
+    let _g = lock();
+    let base = cfg(ScenarioKind::Stable, Algorithm::FedPairing);
+
+    let mut c = base.clone();
+    c.faults.crash_per_round = 1.5;
+    assert!(simulate_scenario(&c).is_err(), "hazard > 1 accepted");
+
+    let mut c = base.clone();
+    c.faults.crash_per_round = 0.1;
+    c.faults.recovery.backoff_jitter = 2.0;
+    assert!(simulate_scenario(&c).is_err(), "jitter > 1 accepted");
+
+    let mut c = base.clone();
+    c.faults.crash_per_round = 0.1;
+    c.faults.recovery.retry_max = 65;
+    assert!(simulate_scenario(&c).is_err(), "retry_max > 64 accepted");
+
+    let mut c = base.clone();
+    c.faults.crash_per_round = 0.1;
+    c.faults.recovery.backoff_base_s = 0.0;
+    assert!(simulate_scenario(&c).is_err(), "zero backoff accepted");
+
+    // Faults replay the engine's recorded unit times; the DES oracle
+    // records none.
+    let mut c = base.clone();
+    c.faults.crash_per_round = 0.1;
+    c.engine.backend = RoundBackend::Des;
+    let err = simulate_scenario(&c).unwrap_err().to_string();
+    assert!(err.contains("analytic engine"), "unexpected error: {err}");
+
+    // A round deadline has no barrier to cut under buffered aggregation.
+    let mut c = base;
+    c.faults.deadline_s = 5.0;
+    c.aggregation = AggregationMode::Async;
+    let err = simulate_scenario(&c).unwrap_err().to_string();
+    assert!(err.contains("sync aggregation"), "unexpected error: {err}");
+}
+
+#[test]
+fn async_faults_run_deterministically_and_account() {
+    let _g = lock();
+    for algo in ALGOS {
+        let mut c = hazards(&cfg(ScenarioKind::LossyRadio, algo), 0.08, 0.1, 0.05);
+        c.aggregation = AggregationMode::Async;
+        c.async_agg.buffer_size = 3;
+        c.async_agg.staleness_cap = 4;
+        c.engine.threads = 1;
+        let mut four = c.clone();
+        four.engine.threads = 4;
+        let a = simulate_scenario(&c).unwrap();
+        let b = simulate_scenario(&four).unwrap();
+        assert_eq!(a.result.rounds.len(), ROUNDS, "{algo:?}");
+        assert_eq!(
+            fingerprint(&a.result.rounds),
+            fingerprint(&b.result.rounds),
+            "{algo:?}: async faulted trace depends on thread count"
+        );
+        assert_eq!(a.events, b.events, "{algo:?}: merge events diverged");
+        let mut activity = 0usize;
+        for r in &a.result.rounds {
+            // Starts in one merge window are bounded by the fleet plus churn
+            // rejoins, so failures and losses can never exceed 2× the fleet.
+            assert!(r.faults.n_failed <= 2 * N_CLIENTS, "{algo:?} window {}", r.round);
+            assert!(r.faults.n_lost_updates <= 2 * N_CLIENTS, "{algo:?} window {}", r.round);
+            assert!(r.faults.recovery_s.is_finite() && r.faults.recovery_s >= 0.0);
+            activity += r.faults.n_failed + r.faults.n_retries + r.faults.n_lost_updates;
+        }
+        assert!(activity > 0, "{algo:?}: async hazards never fired");
+    }
+}
+
+/// Scratch directory for exporter output (inside `target/`, never committed).
+fn out_dir() -> std::path::PathBuf {
+    let d = std::path::PathBuf::from("target/test-faults");
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn fault_counters_populate_the_registry_and_the_trace() {
+    let _g = lock();
+    registry::set_enabled(true);
+    registry::reset();
+    let trace_path = out_dir().join("faults.trace.json");
+    let trace_path = trace_path.to_str().unwrap().to_string();
+    let mut c = hazards(
+        &cfg(ScenarioKind::LossyRadio, Algorithm::FedPairing),
+        0.15,
+        0.2,
+        0.1,
+    );
+    c.telemetry.enabled = true;
+    c.telemetry.sample_every = 1;
+    c.telemetry.trace_out = Some(trace_path.clone());
+    let run = simulate_scenario(&c).unwrap();
+    let snap = registry::snapshot();
+    let retries: usize = run.result.rounds.iter().map(|r| r.faults.n_retries).sum();
+    let lost: usize = run.result.rounds.iter().map(|r| r.faults.n_lost_updates).sum();
+    assert!(snap.counter(Counter::FaultsInjected.name()) > 0);
+    assert_eq!(snap.counter(Counter::FaultRetries.name()), retries as u64);
+    assert_eq!(snap.counter(Counter::FaultLostUpdates.name()), lost as u64);
+
+    // Every sampled round exports its fault events to the JSONL stream.
+    let jsonl = std::fs::read_to_string(format!("{trace_path}.events.jsonl")).unwrap();
+    let mut faults = 0usize;
+    for line in jsonl.lines().filter(|l| !l.trim().is_empty()) {
+        let obj = Json::parse(line).unwrap();
+        if obj.get("type").and_then(Json::as_str) != Some("fault") {
+            continue;
+        }
+        faults += 1;
+        let kind = obj.get("kind").and_then(Json::as_str).unwrap();
+        assert!(
+            matches!(kind, "crash" | "link_drop" | "uplink_loss" | "deadline"),
+            "unexpected fault kind {kind:?}"
+        );
+        assert!(obj.get("round").is_some());
+        assert!(obj.get("t_s").is_some());
+        assert!(obj.get("retries").is_some());
+        assert!(obj.get("lost").is_some());
+    }
+    assert!(faults > 0, "no fault events reached the JSONL stream");
+    registry::set_enabled(false);
+    registry::reset();
+}
