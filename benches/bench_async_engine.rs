@@ -116,6 +116,9 @@ fn main() {
     );
     out.insert("rows", Json::Arr(rows));
     out.insert("throughput_ratio_50k", Json::num(ratio_50k));
+    if let Some(mb) = common::report_peak_rss() {
+        out.insert("peak_rss_mb", Json::num(mb));
+    }
     let path = "BENCH_async.json";
     std::fs::write(path, Json::Obj(out).to_string_pretty(2)).expect("write bench json");
     println!("wrote {path}");

@@ -1,0 +1,175 @@
+//! Distribution-observatory overhead bench: 50k-client metro-scale engine
+//! rounds with per-unit attribution + observatory feeds off vs on. The
+//! drivers feed the observatory unconditionally, so the acceptance
+//! criterion pins the cost of that decision:
+//!
+//! * **observatory < 5 %** — per-unit time/split recording, the quantile
+//!   sketch lanes, the per-round exact lanes and the per-client ledger may
+//!   not tax the honest metro workload (per-round fading → re-priced units
+//!   every round).
+//!
+//! Emits `BENCH_observatory.json` (including peak RSS) for the CI scale job.
+
+#[path = "common.rs"]
+mod common;
+
+use fedpairing::config::ExperimentConfig;
+use fedpairing::pairing::{match_candidates, EdgeWeightSpec, SparseCandidateGraph};
+use fedpairing::sim::channel::Channel;
+use fedpairing::sim::engine::RoundEngine;
+use fedpairing::sim::latency::{Fleet, Schedule};
+use fedpairing::sim::profile::ModelProfile;
+use fedpairing::telemetry::{export, Observatory};
+use fedpairing::util::json::{Json, JsonObj};
+use fedpairing::util::rng::Rng;
+use std::time::Instant;
+
+const N_CLIENTS: usize = 50_000;
+const ROUNDS: usize = 100;
+
+/// Per-round channels under metro-scale block fading (2 dB log-normal) —
+/// every pass replays the identical sequence.
+fn faded_channels(cfg: &ExperimentConfig, rounds: usize) -> Vec<Channel> {
+    let mut rng = Rng::with_stream(cfg.seed, 0xFADE);
+    (0..rounds)
+        .map(|_| {
+            let mut ch = cfg.channel;
+            ch.ref_gain *= 10f64.powf(rng.normal_ms(0.0, 2.0) / 10.0);
+            Channel::new(ch)
+        })
+        .collect()
+}
+
+fn main() {
+    let mut cfg = ExperimentConfig::preset("metro-scale").expect("metro-scale preset");
+    cfg.n_clients = N_CLIENTS;
+    cfg.seed = 29;
+    let fleet = Fleet::sample(&cfg, &mut Rng::new(cfg.seed));
+    let channel = Channel::new(cfg.channel);
+    let members: Vec<usize> = (0..N_CLIENTS).collect();
+    let graph = SparseCandidateGraph::build(
+        &fleet,
+        &channel,
+        EdgeWeightSpec::Eq5 {
+            alpha: cfg.alpha,
+            beta: cfg.beta,
+        },
+        cfg.backend.k_near,
+        cfg.backend.k_freq,
+    );
+    let matching = match_candidates(&graph, &members);
+    let profile = ModelProfile::resnet18_cifar();
+    let sched = Schedule {
+        batch_size: 32,
+        epochs: cfg.local_epochs,
+    };
+    let channels = faded_channels(&cfg, ROUNDS);
+
+    // One timed pass: a fresh engine over the fade sequence, optionally
+    // recording per-unit attribution and feeding the observatory exactly
+    // like the drivers do (roster build included — it is per-round work).
+    let run_pass = |observe: bool| -> (f64, Observatory) {
+        let mut engine = RoundEngine::new(&cfg.engine);
+        engine.set_record_units(observe);
+        let mut obs = Observatory::new();
+        let t = Instant::now();
+        for ch in &channels {
+            let rt = engine.fedpairing_round(
+                &fleet,
+                &matching.pairs,
+                &matching.solos,
+                &profile,
+                &sched,
+                ch,
+                &cfg.compute,
+                true,
+            );
+            if observe {
+                let units: Vec<(usize, Option<usize>)> = matching
+                    .pairs
+                    .iter()
+                    .map(|&(a, b)| (a, Some(b)))
+                    .chain(matching.solos.iter().map(|&s| (s, None)))
+                    .collect();
+                let mk = obs.note_sync_round(
+                    &units,
+                    engine.unit_times(),
+                    engine.unit_splits(),
+                    rt.total_s,
+                    &[],
+                );
+                obs.note_stages(&rt.stages);
+                common::black_box(mk.p99_s);
+            }
+            common::black_box(rt.total_s);
+        }
+        (t.elapsed().as_secs_f64(), obs)
+    };
+
+    println!(
+        "== observatory overhead (n={N_CLIENTS}, {} pairs, {ROUNDS} faded engine rounds) ==",
+        matching.pairs.len()
+    );
+
+    // Warmup (untimed), then the A/A off pair and the observed pass.
+    run_pass(false);
+    let (off_a, _) = run_pass(false);
+    let (off_b, _) = run_pass(false);
+    let (on, obs) = run_pass(true);
+
+    let off_min = off_a.min(off_b);
+    let noise_pct = 100.0 * (off_b - off_a) / off_a;
+    let overhead_pct = 100.0 * (on - off_min) / off_min;
+    println!("  {:<22} {:>10.2} rounds/s", "off (pass A)", ROUNDS as f64 / off_a);
+    println!("  {:<22} {:>10.2} rounds/s", "off (pass B)", ROUNDS as f64 / off_b);
+    println!("  {:<22} {:>10.2} rounds/s", "observatory on", ROUNDS as f64 / on);
+    println!("  off A/A delta: {noise_pct:+.2} %   observatory: {overhead_pct:+.2} %");
+
+    // Sanity of the collected distribution + the export render cost.
+    let t = Instant::now();
+    let prom = export::observatory(&obs, 8);
+    let render_s = t.elapsed().as_secs_f64();
+    let jain = obs.ledger.jain();
+    println!(
+        "  sketch: {} units, sum {:.0} s   fairness (Jain): {jain:.4}   \
+         prom render: {} ({} bytes)",
+        obs.unit_makespan.count(),
+        obs.unit_makespan.sum_secs(),
+        common::fmt_time(render_s),
+        prom.len(),
+    );
+    common::check_shape(
+        "observatory feed overhead < 5% at n=50k",
+        overhead_pct < 5.0,
+    );
+    common::check_shape(
+        "sketch saw every unit every round",
+        obs.unit_makespan.count()
+            == ((matching.pairs.len() + matching.solos.len()) * ROUNDS) as u64,
+    );
+    common::check_shape("fairness index well-formed", jain > 0.0 && jain <= 1.0 + 1e-12);
+
+    let mut out = JsonObj::new();
+    out.insert("bench", Json::str("observatory"));
+    out.insert(
+        "workload",
+        Json::str("fedpairing metro-scale fading, observatory feeds off / on"),
+    );
+    out.insert("n", Json::num(N_CLIENTS as f64));
+    out.insert("pairs", Json::num(matching.pairs.len() as f64));
+    out.insert("rounds", Json::num(ROUNDS as f64));
+    out.insert("off_a_rounds_per_s", Json::num(ROUNDS as f64 / off_a));
+    out.insert("off_b_rounds_per_s", Json::num(ROUNDS as f64 / off_b));
+    out.insert("on_rounds_per_s", Json::num(ROUNDS as f64 / on));
+    out.insert("off_aa_delta_pct", Json::num(noise_pct));
+    out.insert("observatory_overhead_pct", Json::num(overhead_pct));
+    out.insert("fairness_jain", Json::num(jain));
+    out.insert("sketch_units", Json::num(obs.unit_makespan.count() as f64));
+    out.insert("prom_render_s", Json::num(render_s));
+    if let Some(mb) = common::report_peak_rss() {
+        out.insert("peak_rss_mb", Json::num(mb));
+    }
+    let path = "BENCH_observatory.json";
+    std::fs::write(path, Json::Obj(out).to_string_pretty(2)).expect("write bench json");
+    println!("wrote {path}");
+}

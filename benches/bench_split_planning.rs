@@ -189,6 +189,9 @@ fn main() {
     );
     out.insert("metro_reduction_pct_50k", Json::num(metro_reduction));
     out.insert("results", Json::Arr(rows));
+    if let Some(mb) = common::report_peak_rss() {
+        out.insert("peak_rss_mb", Json::num(mb));
+    }
     let path = "BENCH_split.json";
     std::fs::write(path, Json::Obj(out).to_string_pretty(2)).expect("write bench json");
     println!("wrote {path}");

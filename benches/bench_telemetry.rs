@@ -127,6 +127,7 @@ fn main() {
         sample_every: 10,
         trace_out: Some(trace_path),
         top_k_pairs: 8,
+        ..TelemetryConfig::default()
     }));
     let mut trace = run_pass(&mut trace_sink);
     let t = Instant::now();
@@ -178,6 +179,9 @@ fn main() {
     out.insert("disabled_aa_delta_pct", Json::num(disabled_pct));
     out.insert("enabled_overhead_pct", Json::num(enabled_pct));
     out.insert("trace_overhead_pct", Json::num(trace_pct));
+    if let Some(mb) = common::report_peak_rss() {
+        out.insert("peak_rss_mb", Json::num(mb));
+    }
     let path = "BENCH_telemetry.json";
     std::fs::write(path, Json::Obj(out).to_string_pretty(2)).expect("write bench json");
     println!("wrote {path}");

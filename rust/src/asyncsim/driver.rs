@@ -28,7 +28,7 @@ use crate::sim::latency::{full_local_time, upload_time, Fleet, FleetView, Schedu
 use crate::sim::profile::ModelProfile;
 use crate::split::SplitCostModel;
 use crate::telemetry::registry::{self, Counter, Gauge, Histo};
-use crate::telemetry::Telemetry;
+use crate::telemetry::{Observatory, Telemetry};
 use crate::util::index::InverseIndex;
 use crate::util::rng::Rng;
 
@@ -162,6 +162,8 @@ pub fn simulate_async(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigError
     let mut sim_total = 0.0f64;
     let mut engine = RoundEngine::new(&cfg.engine).with_split(cfg.split);
     engine.set_record_units(true);
+    let mut observatory = Observatory::new();
+    let obs = &mut observatory;
     // Fault layer (DESIGN.md §11): units get their faulted (retried /
     // re-paired) duration at start, in-flight survivors keep it across
     // reprices, and each merge window folds its fault counters into the
@@ -193,6 +195,12 @@ pub fn simulate_async(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigError
         }
         let members = dynamics.present_members();
         inv.rebuild(dynamics.universe().n(), members);
+        // Observatory unit roster for this window, aligned with the engine's
+        // unit_times/unit_splits call order; the mask marks *started* units
+        // (repriced in-flight units re-enter every window and must not be
+        // double-credited in the ledger).
+        let mut units: Vec<(usize, Option<usize>)> = Vec::new();
+        let mut started_mask: Vec<bool> = Vec::new();
         let rt = match cfg.algorithm {
             Algorithm::FedPairing => {
                 let had_matching = pairing.matching.is_some();
@@ -248,6 +256,22 @@ pub fn simulate_async(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigError
                 let np = plan.start_pairs.len();
                 let nrp = plan.reprice_pairs.len();
                 let ns = plan.start_solos.len();
+                units.extend(
+                    plan.start_pairs
+                        .iter()
+                        .chain(plan.reprice_pairs.iter().map(|(_, p)| p))
+                        .map(|&(a, b)| (a, Some(b))),
+                );
+                units.extend(
+                    plan.start_solos
+                        .iter()
+                        .chain(plan.reprice_solos.iter().map(|(_, s)| s))
+                        .map(|&s| (s, None)),
+                );
+                started_mask.resize(np, true);
+                started_mask.resize(np + nrp, false);
+                started_mask.resize(np + nrp + ns, true);
+                started_mask.resize(units.len(), false);
                 for (k, &(a, b)) in plan.start_pairs.iter().enumerate() {
                     let mut dur = ut[k];
                     let mut fplan = None;
@@ -318,6 +342,9 @@ pub fn simulate_async(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigError
                 let mut rt =
                     engine.fl_round(&view, &profile, &sched, &channel, &cfg.compute, true);
                 rt.stages.remap_crit(&plan.view_members);
+                units.extend(plan.view_members.iter().map(|&m| (m, None)));
+                started_mask.resize(plan.start.len(), true);
+                started_mask.resize(units.len(), false);
                 let ut = engine.unit_times();
                 for (k, &m) in plan.start.iter().enumerate() {
                     let mut dur = ut[k];
@@ -359,6 +386,8 @@ pub fn simulate_async(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigError
                     server_hz,
                 );
                 rt.stages.remap_crit(&plan.start);
+                units.extend(plan.start.iter().map(|&m| (m, None)));
+                started_mask.resize(units.len(), true);
                 let ut = engine.unit_times();
                 for (k, &m) in plan.start.iter().enumerate() {
                     let mut d = ut[k];
@@ -396,6 +425,9 @@ pub fn simulate_async(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigError
                     true,
                 );
                 rt.stages.remap_crit(&plan.view_members);
+                units.extend(plan.view_members.iter().map(|&m| (m, None)));
+                started_mask.resize(plan.start.len(), true);
+                started_mask.resize(units.len(), false);
                 // Unit times are the pre-upload pipeline finishes; the
                 // FedAvg upload is charged per merge below, over the merge's
                 // actual contributors.
@@ -426,6 +458,14 @@ pub fn simulate_async(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigError
             }
         };
         telemetry.mark("engine");
+        let mk = obs.note_async_window(
+            &units,
+            &started_mask,
+            engine.unit_times(),
+            engine.unit_splits(),
+            &[],
+        );
+        obs.note_stages(&rt.stages);
         let merge = tl.advance_to_merge().ok_or_else(|| {
             ConfigError("async scheduler stalled: nothing in flight or buffered".into())
         })?;
@@ -456,11 +496,16 @@ pub fn simulate_async(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigError
         // Fault accounting for this merge window (events are stamped
         // relative to the window's simulated start).
         for d in &merge.contributors {
+            for &m in afaults.lost_of(d.id) {
+                obs.ledger.note_lost(m);
+            }
             afaults.forget(d.id);
         }
         let (wfaults, wevents) = afaults.take_window();
         faults::note_outcome(&wfaults, &wevents);
         telemetry.fault_events(&wevents, sim_total - total);
+        obs.note_fault_recovery(wfaults.recovery_s);
+        obs.note_async_event(merge.staleness_mean, merge.wait_eliminated_s);
         let event = AggregationEvent {
             seq,
             t_wall_s: sim_total,
@@ -484,6 +529,10 @@ pub fn simulate_async(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigError
             faults: wfaults,
             mean_cut: rt.mean_cut,
             stages: rt.stages,
+            mk_p50_s: mk.p50_s,
+            mk_p90_s: mk.p90_s,
+            mk_p99_s: mk.p99_s,
+            fairness: obs.ledger.jain(),
         };
         if let Some(s) = streamer.as_mut() {
             s.push(&rec)
@@ -518,6 +567,7 @@ pub fn simulate_async(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigError
             rounds: records,
             wall_s: t0.elapsed().as_secs_f64(),
             total_execs: 0,
+            observatory,
         },
         trace,
         repaired_rounds,

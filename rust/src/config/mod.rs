@@ -297,6 +297,11 @@ pub struct TelemetryConfig {
     /// (`<path>.prom`) and JSONL (`<path>.events.jsonl`) sibling outputs.
     /// `None` keeps the registry live without writing files.
     pub trace_out: Option<String>,
+    /// Prometheus text-exposition snapshot written once at run exit:
+    /// registry counters/gauges/histograms plus the distribution
+    /// observatory's quantile-sketch lanes and fairness series. `None`
+    /// writes nothing.
+    pub metrics_out: Option<String>,
     /// Trace lanes for the k slowest pairs per sampled round.
     pub top_k_pairs: usize,
 }
@@ -316,6 +321,7 @@ impl Default for TelemetryConfig {
             enabled: false,
             sample_every: 1,
             trace_out: None,
+            metrics_out: None,
             top_k_pairs: 8,
         }
     }
@@ -1326,6 +1332,13 @@ impl ExperimentConfig {
                 None => Json::Null,
             },
         );
+        tm.insert(
+            "metrics_out",
+            match &self.telemetry.metrics_out {
+                Some(p) => Json::str(p),
+                None => Json::Null,
+            },
+        );
         tm.insert("top_k_pairs", Json::num(self.telemetry.top_k_pairs as f64));
         o.insert("telemetry", Json::Obj(tm));
         o.insert("aggregation", Json::str(self.aggregation.name()));
@@ -1523,6 +1536,18 @@ impl ExperimentConfig {
                         v.as_str()
                             .ok_or_else(|| {
                                 ConfigError("telemetry trace_out must be a string or null".into())
+                            })?
+                            .to_string(),
+                    );
+                }
+            }
+            match tm.get("metrics_out") {
+                None | Some(Json::Null) => {}
+                Some(v) => {
+                    c.telemetry.metrics_out = Some(
+                        v.as_str()
+                            .ok_or_else(|| {
+                                ConfigError("telemetry metrics_out must be a string or null".into())
                             })?
                             .to_string(),
                     );
@@ -1744,6 +1769,7 @@ mod tests {
         c.telemetry.enabled = true;
         c.telemetry.sample_every = 5;
         c.telemetry.trace_out = Some("out/trace.json".into());
+        c.telemetry.metrics_out = Some("out/metrics.prom".into());
         c.telemetry.top_k_pairs = 3;
         let j = c.to_json();
         let c2 = ExperimentConfig::from_json(&j).unwrap();

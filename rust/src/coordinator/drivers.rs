@@ -30,7 +30,7 @@ use crate::sim::compute::{aggregation_weights, split_lengths};
 use crate::sim::engine::RoundEngine;
 use crate::sim::latency::{full_local_time, upload_time, Fleet, FleetView, RoundTime, Schedule};
 use crate::split::SplitCostModel;
-use crate::telemetry::{registry, Counter, Telemetry};
+use crate::telemetry::{registry, Counter, Observatory, RoundLanes, Telemetry};
 use crate::util::index::InverseIndex;
 use crate::{log_debug, log_info, log_warn};
 use anyhow::{Context, Result};
@@ -157,21 +157,27 @@ impl Experiment {
         let mut dynamics = self.dynamics();
         let mut telemetry = Telemetry::new(&self.cfg.telemetry);
         let mut streamer = streamer_for(&self.cfg).context("opening stream sink")?;
+        // Distribution observatory (DESIGN.md §12): quantile-sketch lanes +
+        // the per-client fairness ledger, fed unconditionally by every loop
+        // (feeds only read simulation state, so the RoundRecord trace stays
+        // bit-identical to a pre-observatory build).
+        let mut observatory = Observatory::new();
+        let obs = &mut observatory;
         let rounds = if self.cfg.aggregation == AggregationMode::Async {
-            self.run_async(&mut dynamics, &mut telemetry, &mut streamer)?
+            self.run_async(&mut dynamics, &mut telemetry, &mut streamer, obs)?
         } else {
             match self.cfg.algorithm {
                 Algorithm::FedPairing => {
-                    self.run_fedpairing(&mut dynamics, &mut telemetry, &mut streamer)?
+                    self.run_fedpairing(&mut dynamics, &mut telemetry, &mut streamer, obs)?
                 }
                 Algorithm::VanillaFL => {
-                    self.run_fl(&mut dynamics, &mut telemetry, &mut streamer)?
+                    self.run_fl(&mut dynamics, &mut telemetry, &mut streamer, obs)?
                 }
                 Algorithm::VanillaSL => {
-                    self.run_sl(&mut dynamics, &mut telemetry, &mut streamer)?
+                    self.run_sl(&mut dynamics, &mut telemetry, &mut streamer, obs)?
                 }
                 Algorithm::SplitFed => {
-                    self.run_splitfed(&mut dynamics, &mut telemetry, &mut streamer)?
+                    self.run_splitfed(&mut dynamics, &mut telemetry, &mut streamer, obs)?
                 }
             }
         };
@@ -187,6 +193,7 @@ impl Experiment {
             rounds,
             wall_s: t0.elapsed().as_secs_f64(),
             total_execs: self.engine.total_execs(),
+            observatory,
         })
     }
 
@@ -199,6 +206,7 @@ impl Experiment {
         dynamics: &mut FleetDynamics,
         telemetry: &mut Telemetry,
         streamer: &mut Option<RecordStreamer>,
+        obs: &mut Observatory,
     ) -> Result<Vec<RoundRecord>> {
         let w = self.engine.meta().layers;
         let profile = self.engine.meta().profile();
@@ -237,9 +245,9 @@ impl Experiment {
         // the whole pass, so fault-free traces stay bit-identical.
         let fcfg = self.cfg.faults;
         let fmodel = FaultModel::new(&fcfg, Algorithm::FedPairing, self.cfg.seed);
-        if fmodel.active() {
-            self.round_engine.set_record_units(true);
-        }
+        // Always on: the fault model replays unit times and the observatory
+        // attributes per-unit splits; recording never changes round math.
+        self.round_engine.set_record_units(true);
         for round in 1..=self.cfg.rounds {
             telemetry.begin_round(round);
             let ev = dynamics.step(round);
@@ -307,6 +315,22 @@ impl Experiment {
                 fault_lost = out.lost;
             }
             telemetry.mark("engine");
+            // Observatory feed (side-channel: reads the engine's recorded
+            // units, never writes back into the round arithmetic).
+            let units: Vec<(usize, Option<usize>)> = cpairs
+                .iter()
+                .map(|&(a, b)| (members[a], Some(members[b])))
+                .chain(csolos.iter().map(|&s| (members[s], None)))
+                .collect();
+            let mk = obs.note_sync_round(
+                &units,
+                self.round_engine.unit_times(),
+                self.round_engine.unit_splits(),
+                rt.total_s,
+                &fault_lost,
+            );
+            obs.note_stages(&rt.stages);
+            obs.note_fault_recovery(rt.faults.recovery_s);
             let round_time = rt.total_s;
             // Participants this round (pairs + solos) and their weights.
             let participants: Vec<usize> = eff
@@ -413,6 +437,8 @@ impl Experiment {
                 &rt,
                 sim_total,
                 ev.n_alive,
+                mk,
+                obs.ledger.jain(),
             )?;
             stream_push(streamer, &rec)?;
             records.push(rec);
@@ -456,6 +482,7 @@ impl Experiment {
         dynamics: &mut FleetDynamics,
         telemetry: &mut Telemetry,
         streamer: &mut Option<RecordStreamer>,
+        obs: &mut Observatory,
     ) -> Result<Vec<RoundRecord>> {
         let profile = self.engine.meta().profile();
         let sched = self.schedule();
@@ -464,9 +491,7 @@ impl Experiment {
         let mut sim_total = 0.0f64;
         let fcfg = self.cfg.faults;
         let fmodel = FaultModel::new(&fcfg, Algorithm::VanillaFL, self.cfg.seed);
-        if fmodel.active() {
-            self.round_engine.set_record_units(true);
-        }
+        self.round_engine.set_record_units(true);
         for round in 1..=self.cfg.rounds {
             telemetry.begin_round(round);
             let ev = dynamics.step(round);
@@ -493,6 +518,17 @@ impl Experiment {
                 fault_lost = out.lost;
             }
             telemetry.mark("engine");
+            let units: Vec<(usize, Option<usize>)> =
+                members.iter().map(|&m| (m, None)).collect();
+            let mk = obs.note_sync_round(
+                &units,
+                self.round_engine.unit_times(),
+                self.round_engine.unit_splits(),
+                rt.total_s,
+                &fault_lost,
+            );
+            obs.note_stages(&rt.stages);
+            obs.note_fault_recovery(rt.faults.recovery_s);
             let round_time = rt.total_s;
             let mut locals: Vec<Params> = Vec::with_capacity(members.len());
             let mut loss_sum = 0.0;
@@ -514,6 +550,8 @@ impl Experiment {
                 &rt,
                 sim_total,
                 ev.n_alive,
+                mk,
+                obs.ledger.jain(),
             )?;
             stream_push(streamer, &rec)?;
             records.push(rec);
@@ -531,6 +569,7 @@ impl Experiment {
         dynamics: &mut FleetDynamics,
         telemetry: &mut Telemetry,
         streamer: &mut Option<RecordStreamer>,
+        obs: &mut Observatory,
     ) -> Result<Vec<RoundRecord>> {
         let cut = checked_cut("sl_cut_layer", self.cfg.sl_cut_layer, self.engine.meta().layers)?;
         let profile = self.engine.meta().profile();
@@ -541,9 +580,7 @@ impl Experiment {
         let mut sim_total = 0.0f64;
         let fcfg = self.cfg.faults;
         let fmodel = FaultModel::new(&fcfg, Algorithm::VanillaSL, self.cfg.seed);
-        if fmodel.active() {
-            self.round_engine.set_record_units(true);
-        }
+        self.round_engine.set_record_units(true);
         for round in 1..=self.cfg.rounds {
             telemetry.begin_round(round);
             let ev = dynamics.step(round);
@@ -564,6 +601,7 @@ impl Experiment {
             // SL's relay mutates the shared halves in place, so a lost
             // session cannot be unwound from the model — faults here shape
             // the round time and the loss accounting only (DESIGN.md §11).
+            let mut fault_lost: Vec<usize> = Vec::new();
             if fmodel.active() {
                 let specs = faults::solo_unit_specs(
                     Algorithm::VanillaSL,
@@ -575,8 +613,20 @@ impl Experiment {
                 rt.faults = out.counters;
                 faults::note_outcome(&out.counters, &out.events);
                 telemetry.fault_events(&out.events, sim_total);
+                fault_lost = out.lost;
             }
             telemetry.mark("engine");
+            let units: Vec<(usize, Option<usize>)> =
+                members.iter().map(|&m| (m, None)).collect();
+            let mk = obs.note_sync_round(
+                &units,
+                self.round_engine.unit_times(),
+                self.round_engine.unit_splits(),
+                rt.total_s,
+                &fault_lost,
+            );
+            obs.note_stages(&rt.stages);
+            obs.note_fault_recovery(rt.faults.recovery_s);
             let round_time = rt.total_s;
             let mut loss_sum = 0.0;
             let mut steps = 0usize;
@@ -599,6 +649,8 @@ impl Experiment {
                 &rt,
                 sim_total,
                 ev.n_alive,
+                mk,
+                obs.ledger.jain(),
             )?;
             stream_push(streamer, &rec)?;
             records.push(rec);
@@ -616,6 +668,7 @@ impl Experiment {
         dynamics: &mut FleetDynamics,
         telemetry: &mut Telemetry,
         streamer: &mut Option<RecordStreamer>,
+        obs: &mut Observatory,
     ) -> Result<Vec<RoundRecord>> {
         let cut = checked_cut(
             "splitfed_cut_layer",
@@ -629,9 +682,7 @@ impl Experiment {
         let mut sim_total = 0.0f64;
         let fcfg = self.cfg.faults;
         let fmodel = FaultModel::new(&fcfg, Algorithm::SplitFed, self.cfg.seed);
-        if fmodel.active() {
-            self.round_engine.set_record_units(true);
-        }
+        self.round_engine.set_record_units(true);
         for round in 1..=self.cfg.rounds {
             telemetry.begin_round(round);
             let ev = dynamics.step(round);
@@ -669,6 +720,17 @@ impl Experiment {
                 fault_lost = out.lost;
             }
             telemetry.mark("engine");
+            let units: Vec<(usize, Option<usize>)> =
+                members.iter().map(|&m| (m, None)).collect();
+            let mk = obs.note_sync_round(
+                &units,
+                self.round_engine.unit_times(),
+                self.round_engine.unit_splits(),
+                rt.total_s,
+                &fault_lost,
+            );
+            obs.note_stages(&rt.stages);
+            obs.note_fault_recovery(rt.faults.recovery_s);
             let round_time = rt.total_s;
             let mut fronts: Vec<Params> = Vec::with_capacity(members.len());
             let mut backs: Vec<Params> = Vec::with_capacity(members.len());
@@ -699,6 +761,8 @@ impl Experiment {
                 &rt,
                 sim_total,
                 ev.n_alive,
+                mk,
+                obs.ledger.jain(),
             )?;
             stream_push(streamer, &rec)?;
             records.push(rec);
@@ -750,7 +814,9 @@ impl Experiment {
     }
 
     /// Assemble a round record (evaluating if scheduled). `rt.stages` must
-    /// already carry universe client ids (`remap_crit` at the call site).
+    /// already carry universe client ids (`remap_crit` at the call site);
+    /// `mk`/`fairness` come from the observatory feed for this round.
+    #[allow(clippy::too_many_arguments)]
     fn record(
         &mut self,
         round: usize,
@@ -759,6 +825,8 @@ impl Experiment {
         rt: &RoundTime,
         sim_total: f64,
         n_alive: usize,
+        mk: RoundLanes,
+        fairness: f64,
     ) -> Result<RoundRecord> {
         let (test_loss, test_acc) = if self.should_eval(round) {
             self.evaluate(model)?
@@ -785,6 +853,10 @@ impl Experiment {
             faults: rt.faults,
             mean_cut: rt.mean_cut,
             stages: rt.stages,
+            mk_p50_s: mk.p50_s,
+            mk_p90_s: mk.p90_s,
+            mk_p99_s: mk.p99_s,
+            fairness,
         })
     }
 
@@ -804,6 +876,7 @@ impl Experiment {
         dynamics: &mut FleetDynamics,
         telemetry: &mut Telemetry,
         streamer: &mut Option<RecordStreamer>,
+        obs: &mut Observatory,
     ) -> Result<Vec<RoundRecord>> {
         /// A trained update waiting in flight or in the buffer. FedPairing
         /// pair: `[model_i, model_j]`; FL solo: `[local]`; SplitFed:
@@ -877,6 +950,12 @@ impl Experiment {
             }
             let members = dynamics.present_members();
             inv.rebuild(dynamics.universe().n(), members);
+            // Observatory unit roster for this window, aligned with the
+            // engine's unit_times/unit_splits call order; the mask marks
+            // *started* units (repriced in-flight units re-enter every
+            // window and must not be double-credited in the ledger).
+            let mut units: Vec<(usize, Option<usize>)> = Vec::new();
+            let mut started_mask: Vec<bool> = Vec::new();
             let rt = match algo {
                 Algorithm::FedPairing => {
                     maintain_matching_session(
@@ -926,6 +1005,22 @@ impl Experiment {
                     let np = plan.start_pairs.len();
                     let nrp = plan.reprice_pairs.len();
                     let ns = plan.start_solos.len();
+                    units.extend(
+                        plan.start_pairs
+                            .iter()
+                            .chain(plan.reprice_pairs.iter().map(|(_, p)| p))
+                            .map(|&(a, b)| (a, Some(b))),
+                    );
+                    units.extend(
+                        plan.start_solos
+                            .iter()
+                            .chain(plan.reprice_solos.iter().map(|(_, s)| s))
+                            .map(|&s| (s, None)),
+                    );
+                    started_mask.resize(np, true);
+                    started_mask.resize(np + nrp, false);
+                    started_mask.resize(np + nrp + ns, true);
+                    started_mask.resize(units.len(), false);
                     for (k, &(id, _)) in plan.reprice_pairs.iter().enumerate() {
                         tl.reprice(id, afaults.reprice(id, ut[np + k]));
                     }
@@ -1076,6 +1171,9 @@ impl Experiment {
                         true,
                     );
                     rt.stages.remap_crit(&plan.view_members);
+                    units.extend(plan.view_members.iter().map(|&m| (m, None)));
+                    started_mask.resize(plan.start.len(), true);
+                    started_mask.resize(units.len(), false);
                     let ut: Vec<f64> = self.round_engine.unit_times().to_vec();
                     for (k, &(id, _)) in plan.reprice.iter().enumerate() {
                         tl.reprice(id, afaults.reprice(id, ut[plan.start.len() + k]));
@@ -1127,6 +1225,8 @@ impl Experiment {
                         server_hz,
                     );
                     rt.stages.remap_crit(&plan.start);
+                    units.extend(plan.start.iter().map(|&m| (m, None)));
+                    started_mask.resize(units.len(), true);
                     let ut: Vec<f64> = self.round_engine.unit_times().to_vec();
                     for (k, &m) in plan.start.iter().enumerate() {
                         let (l, st) = self.split_session(&mut sl_front, &mut sl_back, cut, m)?;
@@ -1174,6 +1274,9 @@ impl Experiment {
                         true,
                     );
                     rt.stages.remap_crit(&plan.view_members);
+                    units.extend(plan.view_members.iter().map(|&m| (m, None)));
+                    started_mask.resize(plan.start.len(), true);
+                    started_mask.resize(units.len(), false);
                     let ut: Vec<f64> = self.round_engine.unit_times().to_vec();
                     for (k, &(id, _)) in plan.reprice.iter().enumerate() {
                         tl.reprice(id, afaults.reprice(id, ut[plan.start.len() + k]));
@@ -1212,6 +1315,14 @@ impl Experiment {
                 }
             };
             telemetry.mark("engine");
+            let mk = obs.note_async_window(
+                &units,
+                &started_mask,
+                self.round_engine.unit_times(),
+                self.round_engine.unit_splits(),
+                &[],
+            );
+            obs.note_stages(&rt.stages);
             let merge = tl.advance_to_merge().ok_or_else(|| {
                 anyhow::anyhow!("async scheduler stalled: nothing in flight or buffered")
             })?;
@@ -1251,6 +1362,9 @@ impl Experiment {
                             loss_sum += p.loss;
                             steps += p.steps;
                         }
+                        for &m in afaults.lost_of(d.id) {
+                            obs.ledger.note_lost(m);
+                        }
                         afaults.forget(d.id);
                     }
                     // The relay already mutated the shared halves; the merge
@@ -1266,7 +1380,11 @@ impl Experiment {
                         let p = pending
                             .remove(&d.id)
                             .ok_or_else(|| anyhow::anyhow!("merged unit lost its payload"))?;
-                        let doomed = !afaults.lost_of(d.id).is_empty();
+                        let lost_members = afaults.lost_of(d.id);
+                        let doomed = !lost_members.is_empty();
+                        for &m in lost_members {
+                            obs.ledger.note_lost(m);
+                        }
                         afaults.forget(d.id);
                         loss_sum += p.loss;
                         steps += p.steps;
@@ -1327,6 +1445,9 @@ impl Experiment {
                                 agg.push(w_raw * s);
                             }
                         }
+                        for &m in doomed {
+                            obs.ledger.note_lost(m);
+                        }
                         afaults.forget(d.id);
                         loss_sum += p.loss;
                         steps += p.steps;
@@ -1356,6 +1477,8 @@ impl Experiment {
             let (wfaults, wevents) = afaults.take_window();
             faults::note_outcome(&wfaults, &wevents);
             telemetry.fault_events(&wevents, sim_total - total);
+            obs.note_fault_recovery(wfaults.recovery_s);
+            obs.note_async_event(merge.staleness_mean, merge.wait_eliminated_s);
             let event = AggregationEvent {
                 seq,
                 t_wall_s: sim_total,
@@ -1392,6 +1515,10 @@ impl Experiment {
                 faults: wfaults,
                 mean_cut: rt.mean_cut,
                 stages: rt.stages,
+                mk_p50_s: mk.p50_s,
+                mk_p90_s: mk.p90_s,
+                mk_p99_s: mk.p99_s,
+                fairness: obs.ledger.jain(),
             };
             stream_push(streamer, &rec)?;
             records.push(rec);

@@ -43,6 +43,19 @@ pub struct RoundRecord {
     /// Fault/recovery accounting for this round (all zero on fault-free
     /// runs; see `faults` and DESIGN.md §11).
     pub faults: crate::faults::FaultCounters,
+    /// Exact nearest-rank p50 of this round's work-unit makespans (pair and
+    /// solo totals; async: the merge window's units). NaN when the round
+    /// recorded no units (DES backend) — renders as an empty CSV field /
+    /// JSON null. See DESIGN.md §12.
+    pub mk_p50_s: f64,
+    /// Exact nearest-rank p90 work-unit makespan (NaN when unrecorded).
+    pub mk_p90_s: f64,
+    /// Exact nearest-rank p99 work-unit makespan (NaN when unrecorded).
+    pub mk_p99_s: f64,
+    /// Jain fairness index over cumulative per-client busy time up to and
+    /// including this round, from the run's `ClientLedger` (NaN until any
+    /// client has attributed busy time).
+    pub fairness: f64,
 }
 
 impl RoundRecord {
@@ -57,6 +70,7 @@ impl RoundRecord {
         }
         s.push_str(",t_wall_s,staleness_mean");
         s.push_str(",n_failed,n_retries,n_lost_updates,recovery_s");
+        s.push_str(",mk_p50_s,mk_p90_s,mk_p99_s,fairness");
         s
     }
 
@@ -101,6 +115,17 @@ impl RoundRecord {
             self.faults.n_lost_updates,
             self.faults.recovery_s
         ));
+        // Quantile lanes + fairness use the same shortest-exact formatting as
+        // the simulated times, so `fedpairing report` can reproduce them bit
+        // for bit from the stream; NaN (no recorded units / no ledger data)
+        // renders as an empty field.
+        for v in [self.mk_p50_s, self.mk_p90_s, self.mk_p99_s, self.fairness] {
+            if v.is_nan() {
+                s.push(',');
+            } else {
+                s.push_str(&format!(",{v}"));
+            }
+        }
         s
     }
 
@@ -122,6 +147,10 @@ impl RoundRecord {
         ro.insert("n_retries", Json::num(self.faults.n_retries as f64));
         ro.insert("n_lost_updates", Json::num(self.faults.n_lost_updates as f64));
         ro.insert("recovery_s", Json::num(self.faults.recovery_s));
+        ro.insert("mk_p50_s", Json::num(self.mk_p50_s));
+        ro.insert("mk_p90_s", Json::num(self.mk_p90_s));
+        ro.insert("mk_p99_s", Json::num(self.mk_p99_s));
+        ro.insert("fairness", Json::num(self.fairness));
         ro.insert("stages", self.stages.to_json());
         Json::Obj(ro)
     }
@@ -136,6 +165,12 @@ pub struct RunResult {
     pub wall_s: f64,
     /// Total artifact executions (runtime pressure diagnostic).
     pub total_execs: u64,
+    /// The run's distribution observatory — quantile-sketch lanes plus the
+    /// per-client fairness ledger (DESIGN.md §12). Held in memory only: it
+    /// is exported via `--metrics-out` / printed by the CLI, never
+    /// serialized into `to_csv`/`to_json` (the per-round lanes and fairness
+    /// on each [`RoundRecord`] are the persisted projection).
+    pub observatory: crate::telemetry::ledger::Observatory,
 }
 
 impl RunResult {
@@ -360,6 +395,10 @@ mod tests {
                     t_wall_s: 10.0,
                     staleness_mean: f64::NAN,
                     faults: Default::default(),
+                    mk_p50_s: f64::NAN,
+                    mk_p90_s: f64::NAN,
+                    mk_p99_s: f64::NAN,
+                    fairness: f64::NAN,
                 },
                 RoundRecord {
                     round: 2,
@@ -374,6 +413,10 @@ mod tests {
                     t_wall_s: 20.0,
                     staleness_mean: f64::NAN,
                     faults: Default::default(),
+                    mk_p50_s: 7.5,
+                    mk_p90_s: 9.25,
+                    mk_p99_s: 10.0,
+                    fairness: 0.875,
                 },
                 RoundRecord {
                     round: 3,
@@ -393,10 +436,15 @@ mod tests {
                         n_lost_updates: 1,
                         recovery_s: 3.5,
                     },
+                    mk_p50_s: 8.0,
+                    mk_p90_s: 11.5,
+                    mk_p99_s: 12.0,
+                    fairness: 0.97,
                 },
             ],
             wall_s: 1.0,
             total_execs: 42,
+            observatory: Default::default(),
         }
     }
 
@@ -443,7 +491,8 @@ mod tests {
         assert!(header.ends_with(
             "crit_a,crit_b,crit_slack_s,stage_front_fp_s,stage_act_tx_s,stage_back_compute_s,\
              stage_grad_tx_s,stage_front_upd_s,stage_uplink_s,stage_server_agg_s,\
-             t_wall_s,staleness_mean,n_failed,n_retries,n_lost_updates,recovery_s"
+             t_wall_s,staleness_mean,n_failed,n_retries,n_lost_updates,recovery_s,\
+             mk_p50_s,mk_p90_s,mk_p99_s,fairness"
         ));
         let row1: Vec<String> =
             r.to_csv().lines().nth(1).unwrap().split(',').map(str::to_string).collect();
@@ -485,10 +534,13 @@ mod tests {
     fn csv_staleness_is_empty_on_sync_rows_and_numeric_on_async() {
         let csv = result().to_csv();
         // Fixture rounds 1-2 are synchronous (NaN staleness) -> empty field;
-        // fault-free rounds render all-zero fault columns.
-        assert!(csv.lines().nth(1).unwrap().ends_with(",10,,0,0,0,0"));
+        // fault-free rounds render all-zero fault columns; round 1 has no
+        // recorded units, so its lanes/fairness are empty trailing fields.
+        assert!(csv.lines().nth(1).unwrap().ends_with(",10,,0,0,0,0,,,,"));
+        // Round 2 carries exact lanes + fairness in shortest-exact form.
+        assert!(csv.lines().nth(2).unwrap().ends_with(",7.5,9.25,10,0.875"));
         // Round 3 carries a real staleness mean and fault accounting.
-        assert!(csv.lines().nth(3).unwrap().ends_with(",32,1.250,2,5,1,3.5"));
+        assert!(csv.lines().nth(3).unwrap().ends_with(",32,1.250,2,5,1,3.5,8,11.5,12,0.97"));
         let j = result().to_json().to_string();
         let parsed = crate::util::json::Json::parse(&j).unwrap();
         let rounds = parsed.get("rounds").unwrap();
@@ -498,6 +550,10 @@ mod tests {
             rounds.at(2).unwrap().get("staleness_mean").and_then(Json::as_f64),
             Some(1.25)
         );
+        // Quantile lanes follow the same NaN -> null convention.
+        assert!(rounds.at(0).unwrap().get("mk_p50_s").unwrap().as_f64().is_none());
+        assert_eq!(rounds.at(2).unwrap().get("mk_p99_s").and_then(Json::as_f64), Some(12.0));
+        assert_eq!(rounds.at(2).unwrap().get("fairness").and_then(Json::as_f64), Some(0.97));
     }
 
     #[test]

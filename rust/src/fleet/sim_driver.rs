@@ -19,7 +19,7 @@ use crate::sim::engine::RoundEngine;
 use crate::sim::latency::{Fleet, FleetView, Schedule};
 use crate::sim::profile::ModelProfile;
 use crate::split::SplitCostModel;
-use crate::telemetry::Telemetry;
+use crate::telemetry::{Observatory, Telemetry};
 use crate::util::index::InverseIndex;
 use crate::util::rng::Rng;
 
@@ -88,9 +88,12 @@ pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigEr
     // Mid-round fault injection (DESIGN.md §11). A disarmed config skips
     // the whole pass, so fault-free traces stay bit-identical.
     let fmodel = FaultModel::new(&cfg.faults, cfg.algorithm, cfg.seed);
-    if fmodel.active() {
-        engine.set_record_units(true);
-    }
+    // Per-unit recording is always on: the fault model replays unit times,
+    // and the observatory's quantile lanes + fairness ledger land on every
+    // RoundRecord. Recording is attribution-only — it never changes the
+    // round arithmetic (pinned by `record_units_captures_aligned_splits`).
+    engine.set_record_units(true);
+    let mut observatory = Observatory::new();
     let mut inv = InverseIndex::new();
     let mut cpairs: Vec<(usize, usize)> = Vec::new();
     let mut csolos: Vec<usize> = Vec::new();
@@ -181,6 +184,7 @@ pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigEr
         // Fault pass: replay the round's units through the fault model and
         // take the recovered (retried / re-paired / deadline-clamped) finish
         // as the round time. Inactive models leave `rt` bit-untouched.
+        let mut lost_ids: Vec<usize> = Vec::new();
         if fmodel.active() {
             let specs = match cfg.algorithm {
                 Algorithm::FedPairing => {
@@ -209,9 +213,30 @@ pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigEr
             rt.faults = out.counters;
             faults::note_outcome(&out.counters, &out.events);
             telemetry.fault_events(&out.events, sim_total);
+            lost_ids = out.lost;
         }
         telemetry.mark("engine");
         sim_total += rt.total_s;
+        // Observatory feed: side-channel only — it reads the engine's
+        // recorded units and never writes back into the round arithmetic,
+        // so the RoundRecord trace is independent of the telemetry gate.
+        let units: Vec<(usize, Option<usize>)> = match cfg.algorithm {
+            Algorithm::FedPairing => cpairs
+                .iter()
+                .map(|&(a, b)| (members[a], Some(members[b])))
+                .chain(csolos.iter().map(|&s| (members[s], None)))
+                .collect(),
+            _ => members.iter().map(|&m| (m, None)).collect(),
+        };
+        let mk = observatory.note_sync_round(
+            &units,
+            engine.unit_times(),
+            engine.unit_splits(),
+            rt.total_s,
+            &lost_ids,
+        );
+        observatory.note_stages(&rt.stages);
+        observatory.note_fault_recovery(rt.faults.recovery_s);
         let rec = RoundRecord {
             round,
             n_alive: ev.n_alive,
@@ -225,6 +250,10 @@ pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigEr
             faults: rt.faults,
             mean_cut: rt.mean_cut,
             stages: rt.stages,
+            mk_p50_s: mk.p50_s,
+            mk_p90_s: mk.p90_s,
+            mk_p99_s: mk.p99_s,
+            fairness: observatory.ledger.jain(),
         };
         if let Some(s) = streamer.as_mut() {
             s.push(&rec)
@@ -259,6 +288,7 @@ pub fn simulate_scenario(cfg: &ExperimentConfig) -> Result<ScenarioRun, ConfigEr
             rounds: records,
             wall_s: t0.elapsed().as_secs_f64(),
             total_execs: 0,
+            observatory,
         },
         trace,
         repaired_rounds,
@@ -393,6 +423,33 @@ mod tests {
             .unwrap();
         let times: Vec<f64> = run.result.rounds.iter().map(|r| r.sim_round_s).collect();
         assert!(times.iter().any(|&t| t != times[0]), "round times frozen");
+    }
+
+    #[test]
+    fn rounds_carry_quantile_lanes_and_fairness() {
+        for algo in [
+            Algorithm::FedPairing,
+            Algorithm::VanillaFL,
+            Algorithm::VanillaSL,
+            Algorithm::SplitFed,
+        ] {
+            let run = simulate_scenario(&cfg(ScenarioKind::Stable, algo)).unwrap();
+            for r in &run.result.rounds {
+                assert!(r.mk_p50_s.is_finite(), "{algo:?}: no p50 lane");
+                assert!(
+                    r.mk_p50_s <= r.mk_p90_s && r.mk_p90_s <= r.mk_p99_s,
+                    "{algo:?}: lanes not monotone"
+                );
+                assert!(
+                    r.fairness > 0.0 && r.fairness <= 1.0 + 1e-12,
+                    "{algo:?}: fairness {} out of range",
+                    r.fairness
+                );
+            }
+            let obs = &run.result.observatory;
+            assert!(obs.unit_makespan.count() > 0, "{algo:?}: empty sketch");
+            assert!(!obs.ledger.is_empty(), "{algo:?}: empty ledger");
+        }
     }
 
     #[test]

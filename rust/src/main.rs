@@ -9,6 +9,7 @@
 //! fedpairing churn --scenario metro-scale --split-policy optimal --model resnet34
 //! fedpairing pair --clients 20 --strategy greedy --split-policy optimal
 //! fedpairing latency --samples 2500
+//! fedpairing report out/quick_fedpairing_iid.stream.csv
 //! fedpairing info
 //! ```
 
@@ -62,6 +63,7 @@ fn cli() -> Command {
                 .flag("stream-out", None, Some("DIR"), "stream per-round records to DIR/*.stream.{csv,jsonl}", None)
                 .flag("telemetry", None, None, "enable the metrics registry + stage counters", None)
                 .flag("trace-out", None, Some("FILE"), "Chrome trace + .prom/.jsonl sidecars; implies --telemetry", None)
+                .flag("metrics-out", None, Some("FILE"), "Prometheus snapshot (registry + observatory) at exit; implies --telemetry", None)
                 .flag("artifacts", None, Some("DIR"), "artifact directory", None)
                 .flag("out", Some('o'), Some("DIR"), "metrics output directory", None),
         )
@@ -93,6 +95,7 @@ fn cli() -> Command {
                 .flag("stream-out", None, Some("DIR"), "stream per-round records to DIR/*.stream.{csv,jsonl}", None)
                 .flag("telemetry", None, None, "enable the metrics registry + stage counters", None)
                 .flag("trace-out", None, Some("FILE"), "Chrome trace + .prom/.jsonl sidecars; implies --telemetry", None)
+                .flag("metrics-out", None, Some("FILE"), "Prometheus snapshot (registry + observatory) at exit; implies --telemetry", None)
                 .flag("out", Some('o'), Some("DIR"), "metrics output directory", None),
         )
         .subcommand(
@@ -112,6 +115,11 @@ fn cli() -> Command {
                 .flag("samples", None, Some("N"), "samples per client", Some("2500"))
                 .flag("seed", Some('s'), Some("N"), "fleet seed", Some("17"))
                 .flag("profile", None, Some("NAME"), "resnet18|resnet34|resnet10|mlp", Some("resnet18")),
+        )
+        .subcommand(
+            Command::new("report", "replay a streamed run record into a tail/fairness report")
+                .flag("json-out", None, Some("FILE"), "also write the analysis as JSON", None)
+                .positional("stream", "path to a *.stream.csv or *.stream.jsonl record stream"),
         )
         .subcommand(Command::new("info", "print the AOT manifest summary")
             .flag("artifacts", None, Some("DIR"), "artifact directory", Some("artifacts")))
@@ -140,6 +148,7 @@ fn main() {
         Some("churn") => cmd_churn(&parsed),
         Some("pair") => cmd_pair(&parsed),
         Some("latency") => cmd_latency(&parsed),
+        Some("report") => cmd_report(&parsed),
         Some("info") => cmd_info(&parsed),
         _ => {
             println!("{}", cli().help());
@@ -168,8 +177,8 @@ fn apply_engine_flags(cfg: &mut ExperimentConfig, p: &Parsed) -> anyhow::Result<
     Ok(())
 }
 
-/// Apply the shared `--telemetry` / `--trace-out` observability flags
-/// (`--trace-out` implies `--telemetry`).
+/// Apply the shared `--telemetry` / `--trace-out` / `--metrics-out`
+/// observability flags (the output flags imply `--telemetry`).
 fn apply_telemetry_flags(cfg: &mut ExperimentConfig, p: &Parsed) {
     if p.has("telemetry") {
         cfg.telemetry.enabled = true;
@@ -178,6 +187,44 @@ fn apply_telemetry_flags(cfg: &mut ExperimentConfig, p: &Parsed) {
         cfg.telemetry.enabled = true;
         cfg.telemetry.trace_out = Some(path.to_string());
     }
+    if let Some(path) = p.get("metrics-out") {
+        cfg.telemetry.enabled = true;
+        cfg.telemetry.metrics_out = Some(path.to_string());
+    }
+}
+
+/// Print the distribution observatory's end-of-run summary (fairness plus
+/// the top stragglers) and, when configured, write the Prometheus snapshot:
+/// registry series followed by the observatory's sketch histograms.
+fn finish_observatory(
+    obs: &fedpairing::telemetry::Observatory,
+    telemetry: &fedpairing::config::TelemetryConfig,
+) -> anyhow::Result<()> {
+    let jain = obs.ledger.jain();
+    if !jain.is_nan() {
+        println!("fairness (Jain, busy time): {jain:.4}");
+    }
+    let top = obs.ledger.top_stragglers(3);
+    if !top.is_empty() {
+        let rows: Vec<String> = top
+            .iter()
+            .map(|&(id, c)| format!("#{id} x{c} (crit x{})", obs.ledger.crit_of(id)))
+            .collect();
+        println!("top stragglers (> round p50): {}", rows.join(", "));
+    }
+    if let Some(path) = &telemetry.metrics_out {
+        let mut text =
+            fedpairing::telemetry::export::prometheus(&fedpairing::telemetry::registry::snapshot());
+        text.push_str(&fedpairing::telemetry::export::observatory(obs, telemetry.top_k_pairs));
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, text)?;
+        println!("metrics snapshot: {path}");
+    }
+    Ok(())
 }
 
 /// Apply the shared buffered-aggregation flags (`--aggregation`,
@@ -319,6 +366,7 @@ fn cmd_run(p: &Parsed) -> anyhow::Result<()> {
         res.wall_s,
         res.total_execs
     );
+    finish_observatory(&res.observatory, &res.config.telemetry)?;
     let (csv, json) = res.save(&res.config.out_dir.clone())?;
     println!("metrics: {csv} / {json}");
     Ok(())
@@ -424,6 +472,7 @@ fn cmd_churn(p: &Parsed) -> anyhow::Result<()> {
             run.events.len()
         );
     }
+    finish_observatory(&run.result.observatory, &cfg.telemetry)?;
     let (csv, json) = run.result.save(&cfg.out_dir)?;
     println!("metrics: {csv} / {json}");
     Ok(())
@@ -586,6 +635,26 @@ fn cmd_latency(p: &Parsed) -> anyhow::Result<()> {
         ("vanilla_sl", sl.total_s),
     ] {
         println!("  {:<10} {:>10.0} s", name, t);
+    }
+    Ok(())
+}
+
+fn cmd_report(p: &Parsed) -> anyhow::Result<()> {
+    let path = p
+        .positionals
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("report needs a stream path (*.stream.csv or *.stream.jsonl)"))?;
+    let report = fedpairing::telemetry::report::Report::load(path)
+        .map_err(|e| anyhow::anyhow!("loading {path}: {e}"))?;
+    print!("{}", report.render_text());
+    if let Some(out) = p.get("json-out") {
+        if let Some(parent) = std::path::Path::new(out).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(out, report.to_json().to_string())?;
+        println!("report json: {out}");
     }
     Ok(())
 }

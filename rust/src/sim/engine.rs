@@ -362,6 +362,9 @@ pub struct RoundEngine {
     record_units: bool,
     /// Per-unit durations of the last round (see [`RoundEngine::unit_times`]).
     unit_times: Vec<f64>,
+    /// Per-unit `[compute_a, comm_a, compute_b, comm_b]` attribution (see
+    /// [`RoundEngine::unit_splits`]).
+    unit_splits: Vec<[f64; 4]>,
     hits: u64,
     misses: u64,
 }
@@ -383,6 +386,7 @@ impl RoundEngine {
             lanes: Vec::new(),
             record_units: false,
             unit_times: Vec::new(),
+            unit_splits: Vec::new(),
             hits: 0,
             misses: 0,
         }
@@ -404,6 +408,20 @@ impl RoundEngine {
     /// while recording is off.
     pub fn unit_times(&self) -> &[f64] {
         &self.unit_times
+    }
+
+    /// Per-unit compute/communication attribution of the last analytic
+    /// round, aligned index-for-index with [`RoundEngine::unit_times`]:
+    /// `[compute_a, comm_a, compute_b, comm_b]` seconds per unit. For
+    /// FedPairing pairs the split is resource-sided — client `a`'s CPU busy
+    /// time and its transmit link (plus its own model upload when the round
+    /// uploads), likewise for `b`. Solo/FL/SL/SplitFed units fill the
+    /// a-slots and zero the b-slots (SL server compute and SplitFed's shared
+    /// FedAvg upload tail are not client-attributed). The observatory's
+    /// fairness ledger feeds on this. Empty on the DES backend or while
+    /// recording is off.
+    pub fn unit_splits(&self) -> &[[f64; 4]] {
+        &self.unit_splits
     }
 
     /// Install a split-planning config (builder style; default is `Paper`,
@@ -493,6 +511,7 @@ impl RoundEngine {
     ) -> RoundTime {
         self.lanes.clear();
         self.unit_times.clear();
+        self.unit_splits.clear();
         if self.backend == RoundBackend::Des {
             registry::count(Counter::KernelEvalsDes, 1);
             let mut rt = latency::fedpairing_round_planned(
@@ -606,10 +625,23 @@ impl RoundEngine {
             let e = &self.evals[k];
             let mut pair_total = e.makespan;
             let mut up = 0.0f64;
+            let mut up_i = 0.0f64;
+            let mut up_j = 0.0f64;
             if include_upload {
-                up = upload_time(fleet, channel, i, profile.param_bytes())
-                    .max(upload_time(fleet, channel, j, profile.param_bytes()));
+                up_i = upload_time(fleet, channel, i, profile.param_bytes());
+                up_j = upload_time(fleet, channel, j, profile.param_bytes());
+                up = up_i.max(up_j);
                 pair_total += up;
+            }
+            if self.record_units {
+                // Resource-sided attribution: each member's own CPU busy
+                // time plus its transmit link and model upload.
+                self.unit_splits.push([
+                    e.busy[0],
+                    e.busy[2] + up_i,
+                    e.busy[1],
+                    e.busy[3] + up_j,
+                ]);
             }
             total = total.max(pair_total);
             max_cpu = max_cpu.max(e.busy[0]).max(e.busy[1]);
@@ -630,6 +662,9 @@ impl RoundEngine {
         for &s in solos {
             let (compute_s, t) =
                 full_local_time(fleet, s, profile, sched, channel, comp, include_upload);
+            if self.record_units {
+                self.unit_splits.push([compute_s, (t - compute_s).max(0.0), 0.0, 0.0]);
+            }
             max_cpu = max_cpu.max(compute_s);
             total = total.max(t);
             if diag {
@@ -681,12 +716,20 @@ impl RoundEngine {
         include_upload: bool,
     ) -> RoundTime {
         self.unit_times.clear();
+        self.unit_splits.clear();
         if self.flow_diagnostics {
             let rt = latency::fl_round(fleet, profile, sched, channel, comp, include_upload);
             if self.record_units {
                 // The diagnostics path already materializes per-client finish
-                // times — they are exactly the per-unit durations.
+                // times — they are exactly the per-unit durations. The
+                // compute/comm split is recovered from the same closed form
+                // (attribution only; round arithmetic is untouched).
                 self.unit_times.extend_from_slice(&rt.flow_finish_s);
+                for i in 0..fleet.n() {
+                    let (compute_s, t) =
+                        full_local_time(fleet, i, profile, sched, channel, comp, include_upload);
+                    self.unit_splits.push([compute_s, (t - compute_s).max(0.0), 0.0, 0.0]);
+                }
             }
             return rt;
         }
@@ -698,6 +741,9 @@ impl RoundEngine {
         for i in 0..fleet.n() {
             let (compute_s, t) =
                 full_local_time(fleet, i, profile, sched, channel, comp, include_upload);
+            if self.record_units {
+                self.unit_splits.push([compute_s, (t - compute_s).max(0.0), 0.0, 0.0]);
+            }
             max_cpu = max_cpu.max(compute_s);
             if t > crit_total {
                 crit_total = t;
@@ -738,6 +784,7 @@ impl RoundEngine {
         server_freq_hz: f64,
     ) -> RoundTime {
         self.unit_times.clear();
+        self.unit_splits.clear();
         if self.backend == RoundBackend::Des {
             let mut rt =
                 latency::sl_round(fleet, profile, sched, channel, comp, cut, server_freq_hz);
@@ -788,12 +835,18 @@ impl RoundEngine {
             let mut session = t;
             // Client-model relay to the next client in the ring.
             let next = (i + 1) % n;
+            let mut relay_s = 0.0f64;
             if n > 1 {
                 let front_bytes = profile.params(0, cut) as f64 * 4.0;
-                let relay_s =
+                relay_s =
                     transmit_time(front_bytes, channel.rate(&fleet.pos(i), &fleet.pos(next)));
                 session += relay_s;
                 stages.stage_s[5] += relay_s;
+            }
+            if self.record_units {
+                // Client-side attribution: own CPU, uplink + downlink + ring
+                // relay. Server compute (busy[1]) is not client-attributed.
+                self.unit_splits.push([busy[0], busy[2] + busy[3] + relay_s, 0.0, 0.0]);
             }
             total += session;
             self.totals.push(session);
@@ -844,6 +897,7 @@ impl RoundEngine {
         include_upload: bool,
     ) -> RoundTime {
         self.unit_times.clear();
+        self.unit_splits.clear();
         if self.backend == RoundBackend::Des {
             let mut rt = latency::splitfed_round(
                 fleet,
@@ -892,6 +946,12 @@ impl RoundEngine {
             }
             max_cpu = max_cpu.max(cpu);
             max_link = max_link.max(up).max(down);
+            if self.record_units {
+                // Private-resource attribution (fleet order, aligned with the
+                // finish times recorded below); the shared FedAvg upload tail
+                // is not per-client.
+                self.unit_splits.push([cpu, up + down, 0.0, 0.0]);
+            }
             if nb > 0 {
                 // First server arrival: front-fwd then uplink.
                 let mut t = 0.0f64;
@@ -1218,6 +1278,42 @@ mod tests {
             .map(|&(i, j)| split_lengths(fleet.freqs_hz[i], fleet.freqs_hz[j], profile.w()).0)
             .sum();
         assert_eq!(rt.mean_cut, expect as f64 / pairs.len() as f64);
+    }
+
+    #[test]
+    fn record_units_captures_aligned_splits() {
+        let (fleet, profile, sched, channel, comp) = setup();
+        let pairs = pair_all(fleet.n());
+        let mut eng = engine(1);
+        eng.set_record_units(true);
+        let rt =
+            eng.fedpairing_round(&fleet, &pairs, &[9], &profile, &sched, &channel, &comp, true);
+        assert_eq!(eng.unit_times().len(), pairs.len() + 1);
+        assert_eq!(eng.unit_splits().len(), eng.unit_times().len());
+        // Solo unit: compute + comm reconstructs its total; b-slots zero.
+        let solo = eng.unit_splits()[pairs.len()];
+        let solo_t = eng.unit_times()[pairs.len()];
+        assert!((solo[0] + solo[1] - solo_t).abs() < 1e-9);
+        assert_eq!((solo[2], solo[3]), (0.0, 0.0));
+        // Pair units attribute both members.
+        let pair = eng.unit_splits()[0];
+        assert!(pair[0] > 0.0 && pair[2] > 0.0);
+        // Recording is attribution only: a non-recording engine produces a
+        // bit-identical round and no splits.
+        let mut quiet = engine(1);
+        let rt2 =
+            quiet.fedpairing_round(&fleet, &pairs, &[9], &profile, &sched, &channel, &comp, true);
+        assert_eq!(rt.total_s.to_bits(), rt2.total_s.to_bits());
+        assert!(quiet.unit_splits().is_empty());
+        // The other three kernels record one aligned split per client.
+        eng.fl_round(&fleet, &profile, &sched, &channel, &comp, true);
+        assert_eq!(eng.unit_splits().len(), fleet.n());
+        assert_eq!(eng.unit_times().len(), fleet.n());
+        eng.sl_round(&fleet, &profile, &sched, &channel, &comp, 2, 100e9);
+        assert_eq!(eng.unit_splits().len(), fleet.n());
+        eng.splitfed_round(&fleet, &profile, &sched, &channel, &comp, 2, 100e9, true);
+        assert_eq!(eng.unit_splits().len(), fleet.n());
+        assert_eq!(eng.unit_times().len(), fleet.n());
     }
 
     #[test]

@@ -1,7 +1,10 @@
 //! Prometheus-style text exposition + JSONL event-stream renderers
 //! (pillar 3 of the telemetry subsystem).
 
+use super::ledger::Observatory;
 use super::registry::Snapshot;
+use super::sketch::{bucket_high, QuantileSketch};
+use crate::telemetry::breakdown::STAGE_NAMES;
 use crate::util::json::Json;
 use std::fmt::Write as _;
 
@@ -9,8 +12,9 @@ use std::fmt::Write as _;
 const PREFIX: &str = "fedpairing";
 
 /// Render a registry snapshot in the Prometheus text exposition format:
-/// counters, gauges, the derived memo hit-rate, and log2 histograms as
-/// cumulative `_bucket{le="..."}` series (trailing all-zero buckets elided).
+/// counters, gauges, the derived memo hit-rate, log2 histograms as
+/// cumulative `_bucket{le="..."}` series (trailing all-zero buckets elided),
+/// and per-histogram top-bucket overflow counters.
 pub fn prometheus(snap: &Snapshot) -> String {
     let mut s = String::new();
     for (name, v) in &snap.counters {
@@ -34,6 +38,77 @@ pub fn prometheus(snap: &Snapshot) -> String {
         }
         let _ = writeln!(s, "{PREFIX}_{name}_bucket{{le=\"+Inf\"}} {cum}");
         let _ = writeln!(s, "{PREFIX}_{name}_count {cum}");
+    }
+    for (name, v) in &snap.histo_overflows {
+        let _ = writeln!(
+            s,
+            "# TYPE {PREFIX}_{name}_overflow_total counter\n{PREFIX}_{name}_overflow_total {v}"
+        );
+    }
+    s
+}
+
+/// Render one quantile sketch as a conformant Prometheus histogram in
+/// seconds: cumulative `_bucket{le="..."}` at each non-empty bucket's upper
+/// bound, a `+Inf` bucket, exact `_sum` and `_count`.
+fn sketch_histogram(s: &mut String, name: &str, sk: &QuantileSketch) {
+    let _ = writeln!(s, "# TYPE {PREFIX}_{name} histogram");
+    let mut cum = 0u64;
+    for (i, &c) in sk.counts().iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        cum += c;
+        let le = bucket_high(i) as f64 / 1e6;
+        let _ = writeln!(s, "{PREFIX}_{name}_bucket{{le=\"{le}\"}} {cum}");
+    }
+    let _ = writeln!(s, "{PREFIX}_{name}_bucket{{le=\"+Inf\"}} {cum}");
+    let _ = writeln!(s, "{PREFIX}_{name}_sum {}", sk.sum_secs());
+    let _ = writeln!(s, "{PREFIX}_{name}_count {}", sk.count());
+}
+
+/// Render the distribution observatory: every sketch lane as a Prometheus
+/// histogram (empty lanes elided), plus the ledger's Jain fairness gauge and
+/// per-client straggler/critical-path counts for the top-k stragglers.
+pub fn observatory(obs: &Observatory, top_k: usize) -> String {
+    let mut s = String::new();
+    let lanes: Vec<(String, &QuantileSketch)> = std::iter::once(
+        ("unit_makespan_seconds".to_string(), &obs.unit_makespan),
+    )
+    .chain(
+        STAGE_NAMES
+            .iter()
+            .zip(obs.stage.iter())
+            .map(|(n, sk)| (format!("stage_{n}_seconds"), sk)),
+    )
+    .chain([
+        ("async_staleness_rounds".to_string(), &obs.staleness),
+        ("async_wait_eliminated_seconds".to_string(), &obs.wait),
+        ("fault_recovery_seconds".to_string(), &obs.recovery),
+    ])
+    .collect();
+    for (name, sk) in &lanes {
+        if !sk.is_empty() {
+            sketch_histogram(&mut s, name, sk);
+        }
+    }
+    let jain = obs.ledger.jain();
+    if !jain.is_nan() {
+        let _ = writeln!(
+            s,
+            "# TYPE {PREFIX}_fairness_jain gauge\n{PREFIX}_fairness_jain {jain}"
+        );
+    }
+    for (id, count) in obs.ledger.top_stragglers(top_k) {
+        let _ = writeln!(
+            s,
+            "{PREFIX}_client_straggler_total{{client=\"{id}\"}} {count}"
+        );
+        let _ = writeln!(
+            s,
+            "{PREFIX}_client_critical_path_total{{client=\"{id}\"}} {}",
+            obs.ledger.crit_of(id)
+        );
     }
     s
 }
@@ -63,6 +138,7 @@ mod tests {
             counters: vec![("memo_hits_total", 3), ("memo_misses_total", 1)],
             gauges: vec![("fleet_alive", 42)],
             histos: vec![("pool_chunk_nanos", buckets)],
+            histo_overflows: vec![("pool_chunk_nanos", 5)],
         };
         let text = prometheus(&snap);
         assert!(text.contains("fedpairing_memo_hits_total 3"));
@@ -72,6 +148,39 @@ mod tests {
         assert!(text.contains("fedpairing_pool_chunk_nanos_bucket{le=\"7\"} 3"));
         assert!(text.contains("fedpairing_pool_chunk_nanos_bucket{le=\"+Inf\"} 3"));
         assert!(text.contains("fedpairing_pool_chunk_nanos_count 3"));
+        assert!(text.contains("# TYPE fedpairing_pool_chunk_nanos_overflow_total counter"));
+        assert!(text.contains("fedpairing_pool_chunk_nanos_overflow_total 5"));
+    }
+
+    #[test]
+    fn observatory_renders_sketches_with_sum_and_count() {
+        let mut obs = Observatory::new();
+        obs.unit_makespan.observe_secs(1.5);
+        obs.unit_makespan.observe_secs(2.25);
+        obs.ledger.note_member(3, 1.0, 0.5, 0.0, true);
+        obs.ledger.note_member(4, 1.0, 0.5, 0.0, false);
+        obs.ledger.note_crit(3);
+        let text = observatory(&obs, 5);
+        assert!(text.contains("# TYPE fedpairing_unit_makespan_seconds histogram"));
+        assert!(text.contains("fedpairing_unit_makespan_seconds_count 2"));
+        assert!(text.contains("fedpairing_unit_makespan_seconds_sum 3.75"));
+        assert!(text.contains("fedpairing_unit_makespan_seconds_bucket{le=\"+Inf\"} 2"));
+        // Cumulative buckets are monotone and end at the count.
+        let mut last = 0u64;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("fedpairing_unit_makespan_seconds_bucket") {
+                let v: u64 = rest.rsplit(' ').next().unwrap().parse().unwrap();
+                assert!(v >= last);
+                last = v;
+            }
+        }
+        assert_eq!(last, 2);
+        // Empty lanes (e.g. async staleness) are elided entirely.
+        assert!(!text.contains("async_staleness"));
+        // Ledger series: fairness gauge + top-k straggler labels.
+        assert!(text.contains("fedpairing_fairness_jain 1"));
+        assert!(text.contains("fedpairing_client_straggler_total{client=\"3\"} 1"));
+        assert!(text.contains("fedpairing_client_critical_path_total{client=\"3\"} 1"));
     }
 
     #[test]

@@ -1,0 +1,530 @@
+//! Per-client fairness ledger + the distribution observatory (DESIGN.md
+//! §12).
+//!
+//! [`ClientLedger`] is a compact SoA table over universe client ids:
+//! cumulative compute / communication / barrier-wait seconds, rounds
+//! participated, times on the round's critical path, times slower than the
+//! round's p50 work unit, and updates lost to faults or deadlines. From it
+//! derive the Jain fairness index over cumulative busy time and a top-k
+//! straggler table.
+//!
+//! [`Observatory`] bundles the ledger with the [`QuantileSketch`] lanes the
+//! drivers feed each round — work-unit makespans, per-stage durations,
+//! async staleness / eliminated wait, and fault recovery time — plus the
+//! exact per-round p50/p90/p99 makespan lanes carried on `RoundRecord`.
+//!
+//! Everything here follows the telemetry determinism contract
+//! (`tests/observatory.rs`): feeds only *read* simulation state, arithmetic
+//! is a deterministic function of the fed values in fed order, and merging
+//! shards is element-wise, so ledger and sketches are bit-identical at any
+//! `--threads` and the `RoundRecord` lanes are bit-identical whether the
+//! telemetry gate is on or off.
+
+use crate::telemetry::breakdown::{StageBreakdown, N_STAGES};
+use crate::telemetry::sketch::QuantileSketch;
+use crate::util::json::{Json, JsonObj};
+
+/// Exact per-round makespan quantile lanes carried on `RoundRecord`
+/// (nearest-rank over the round's work-unit times; NaN when the round
+/// recorded no units, e.g. on the DES backend).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RoundLanes {
+    pub p50_s: f64,
+    pub p90_s: f64,
+    pub p99_s: f64,
+}
+
+impl RoundLanes {
+    pub fn nan() -> RoundLanes {
+        RoundLanes { p50_s: f64::NAN, p90_s: f64::NAN, p99_s: f64::NAN }
+    }
+}
+
+/// Exact nearest-rank p50/p90/p99 over `unit_times` (sorted on a scratch
+/// copy with `total_cmp`, so the result is a pure function of the values).
+pub fn exact_lanes(unit_times: &[f64]) -> RoundLanes {
+    if unit_times.is_empty() {
+        return RoundLanes::nan();
+    }
+    let mut v = unit_times.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let n = v.len();
+    let pick = |q: f64| v[((q * n as f64).ceil() as usize).clamp(1, n) - 1];
+    RoundLanes { p50_s: pick(0.5), p90_s: pick(0.9), p99_s: pick(0.99) }
+}
+
+/// One round work unit in universe ids: a split pair or a solo/full-model
+/// participant. Aligned index-for-index with the engine's `unit_times` /
+/// `unit_splits` arrays.
+pub type UnitMembers = (usize, Option<usize>);
+
+/// Compact SoA per-client accounting table, indexed by universe client id.
+/// Grows on demand so `Default` is a valid empty ledger.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClientLedger {
+    compute_s: Vec<f64>,
+    comm_s: Vec<f64>,
+    wait_s: Vec<f64>,
+    rounds: Vec<u32>,
+    crit: Vec<u32>,
+    straggler: Vec<u32>,
+    lost: Vec<u32>,
+}
+
+impl ClientLedger {
+    pub fn new() -> ClientLedger {
+        ClientLedger::default()
+    }
+
+    /// Number of client slots (highest id noted + 1).
+    pub fn len(&self) -> usize {
+        self.rounds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rounds.is_empty()
+    }
+
+    fn grow(&mut self, n: usize) {
+        if self.rounds.len() < n {
+            self.compute_s.resize(n, 0.0);
+            self.comm_s.resize(n, 0.0);
+            self.wait_s.resize(n, 0.0);
+            self.rounds.resize(n, 0);
+            self.crit.resize(n, 0);
+            self.straggler.resize(n, 0);
+            self.lost.resize(n, 0);
+        }
+    }
+
+    /// Credit one round participation: attributed compute/comm seconds, the
+    /// barrier wait behind the round's slowest unit, and whether this
+    /// client's unit ran slower than the round's p50 unit.
+    pub fn note_member(
+        &mut self,
+        id: usize,
+        compute_s: f64,
+        comm_s: f64,
+        wait_s: f64,
+        straggler: bool,
+    ) {
+        self.grow(id + 1);
+        self.compute_s[id] += compute_s;
+        self.comm_s[id] += comm_s;
+        self.wait_s[id] += wait_s;
+        self.rounds[id] += 1;
+        if straggler {
+            self.straggler[id] += 1;
+        }
+    }
+
+    /// Credit one appearance on a round's critical path.
+    pub fn note_crit(&mut self, id: usize) {
+        self.grow(id + 1);
+        self.crit[id] += 1;
+    }
+
+    /// Credit one lost update (fault or deadline cutoff).
+    pub fn note_lost(&mut self, id: usize) {
+        self.grow(id + 1);
+        self.lost[id] += 1;
+    }
+
+    /// Cumulative busy seconds (compute + communication) for `id`.
+    pub fn busy_s(&self, id: usize) -> f64 {
+        if id < self.rounds.len() {
+            self.compute_s[id] + self.comm_s[id]
+        } else {
+            0.0
+        }
+    }
+
+    pub fn wait_of(&self, id: usize) -> f64 {
+        self.wait_s.get(id).copied().unwrap_or(0.0)
+    }
+
+    pub fn rounds_of(&self, id: usize) -> u32 {
+        self.rounds.get(id).copied().unwrap_or(0)
+    }
+
+    pub fn crit_of(&self, id: usize) -> u32 {
+        self.crit.get(id).copied().unwrap_or(0)
+    }
+
+    pub fn straggler_of(&self, id: usize) -> u32 {
+        self.straggler.get(id).copied().unwrap_or(0)
+    }
+
+    pub fn lost_of(&self, id: usize) -> u32 {
+        self.lost.get(id).copied().unwrap_or(0)
+    }
+
+    /// Jain fairness index over cumulative busy time of the clients that
+    /// participated at least once: `(Σx)² / (n·Σx²)` ∈ (0, 1], 1 = perfectly
+    /// even load. NaN when no client has participated (or all busy time is
+    /// zero, as on the DES backend, which attributes no per-unit splits).
+    pub fn jain(&self) -> f64 {
+        let mut n = 0usize;
+        let mut s = 0.0f64;
+        let mut s2 = 0.0f64;
+        for id in 0..self.rounds.len() {
+            if self.rounds[id] == 0 {
+                continue;
+            }
+            let x = self.compute_s[id] + self.comm_s[id];
+            n += 1;
+            s += x;
+            s2 += x * x;
+        }
+        if n == 0 || s2 <= 0.0 {
+            return f64::NAN;
+        }
+        (s * s) / (n as f64 * s2)
+    }
+
+    /// Top-k straggler table: `(client id, times slower than round p50)`,
+    /// most frequent first, ties broken by ascending id; clients that never
+    /// straggled are excluded.
+    pub fn top_stragglers(&self, k: usize) -> Vec<(usize, u32)> {
+        let mut v: Vec<(usize, u32)> = self
+            .straggler
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(id, &c)| (id, c))
+            .collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        v.truncate(k);
+        v
+    }
+
+    /// Element-wise merge of another ledger shard into this one.
+    pub fn merge(&mut self, other: &ClientLedger) {
+        self.grow(other.rounds.len());
+        for id in 0..other.rounds.len() {
+            self.compute_s[id] += other.compute_s[id];
+            self.comm_s[id] += other.comm_s[id];
+            self.wait_s[id] += other.wait_s[id];
+            self.rounds[id] += other.rounds[id];
+            self.crit[id] += other.crit[id];
+            self.straggler[id] += other.straggler[id];
+            self.lost[id] += other.lost[id];
+        }
+    }
+
+    /// JSON summary: fairness index plus the top-k straggler table.
+    pub fn to_json(&self, top_k: usize) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("n_clients", Json::Num(self.len() as f64));
+        o.insert("fairness_jain", Json::num(self.jain()));
+        let mut rows = Vec::new();
+        for (id, count) in self.top_stragglers(top_k) {
+            let mut r = JsonObj::new();
+            r.insert("client", Json::Num(id as f64));
+            r.insert("straggled", Json::Num(count as f64));
+            r.insert("on_critical_path", Json::Num(self.crit[id] as f64));
+            r.insert("busy_s", Json::num(self.busy_s(id)));
+            r.insert("lost_updates", Json::Num(self.lost[id] as f64));
+            rows.push(Json::Obj(r));
+        }
+        o.insert("top_stragglers", Json::Arr(rows));
+        Json::Obj(o)
+    }
+}
+
+/// The distribution observatory: quantile-sketch lanes + per-client ledger,
+/// owned by a driver for the duration of a run and carried on `RunResult`
+/// so the CLI can export/print it after the run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Observatory {
+    /// Work-unit makespans (pair/solo totals, every round).
+    pub unit_makespan: QuantileSketch,
+    /// Per-stage critical-path seconds, one observation per round per stage
+    /// with non-zero attribution (`STAGE_NAMES` order).
+    pub stage: [QuantileSketch; N_STAGES],
+    /// Async merge staleness (mean rounds per aggregation event).
+    pub staleness: QuantileSketch,
+    /// Async wait eliminated vs a synchronous barrier, seconds per event.
+    pub wait: QuantileSketch,
+    /// Fault recovery seconds, one observation per round that paid any.
+    pub recovery: QuantileSketch,
+    /// Per-client accounting.
+    pub ledger: ClientLedger,
+}
+
+impl Observatory {
+    pub fn new() -> Observatory {
+        Observatory::default()
+    }
+
+    /// Feed one synchronous round: every work unit's makespan goes to the
+    /// sketch, and every member is credited with its attributed
+    /// compute/comm split, the barrier wait behind the round total, and a
+    /// straggler mark when its unit exceeded the round's p50 unit. Returns
+    /// the exact quantile lanes for the `RoundRecord`.
+    ///
+    /// `units`, `unit_times` and `unit_splits` are aligned index-for-index;
+    /// when the engine recorded no per-unit state (DES backend) all three
+    /// are empty and only NaN lanes come back.
+    pub fn note_sync_round(
+        &mut self,
+        units: &[UnitMembers],
+        unit_times: &[f64],
+        unit_splits: &[[f64; 4]],
+        round_total_s: f64,
+        lost: &[usize],
+    ) -> RoundLanes {
+        self.note_units(units, None, unit_times, unit_splits, round_total_s, lost)
+    }
+
+    /// Feed one asynchronous merge window. Identical to
+    /// [`Observatory::note_sync_round`] except: there is no barrier, so wait
+    /// is 0, and the ledger only credits units in `started` (repriced
+    /// in-flight units re-enter every window and would be double-counted).
+    /// All unit times still feed the makespan sketch and the lanes.
+    pub fn note_async_window(
+        &mut self,
+        units: &[UnitMembers],
+        started: &[bool],
+        unit_times: &[f64],
+        unit_splits: &[[f64; 4]],
+        lost: &[usize],
+    ) -> RoundLanes {
+        self.note_units(units, Some(started), unit_times, unit_splits, 0.0, lost)
+    }
+
+    fn note_units(
+        &mut self,
+        units: &[UnitMembers],
+        started: Option<&[bool]>,
+        unit_times: &[f64],
+        unit_splits: &[[f64; 4]],
+        round_total_s: f64,
+        lost: &[usize],
+    ) -> RoundLanes {
+        let lanes = exact_lanes(unit_times);
+        for &t in unit_times {
+            self.unit_makespan.observe_secs(t);
+        }
+        let aligned = units.len() == unit_times.len() && units.len() == unit_splits.len();
+        if aligned {
+            for (u, &(a, b)) in units.iter().enumerate() {
+                if let Some(mask) = started {
+                    if !mask.get(u).copied().unwrap_or(false) {
+                        continue;
+                    }
+                }
+                let s = unit_splits[u];
+                let t = unit_times[u];
+                let wait = (round_total_s - t).max(0.0);
+                let strag = lanes.p50_s.is_finite() && t > lanes.p50_s;
+                self.ledger.note_member(a, s[0], s[1], wait, strag);
+                if let Some(b) = b {
+                    self.ledger.note_member(b, s[2], s[3], wait, strag);
+                }
+            }
+        }
+        for &id in lost {
+            self.ledger.note_lost(id);
+        }
+        lanes
+    }
+
+    /// Feed the round's stage attribution (post-`remap_crit`): each stage
+    /// with non-zero seconds gets one observation, and the critical
+    /// participant(s) are credited in the ledger.
+    pub fn note_stages(&mut self, stages: &StageBreakdown) {
+        for (i, &s) in stages.stage_s.iter().enumerate() {
+            if s > 0.0 {
+                self.stage[i].observe_secs(s);
+            }
+        }
+        if stages.crit_a >= 0 {
+            self.ledger.note_crit(stages.crit_a as usize);
+        }
+        if stages.crit_b >= 0 {
+            self.ledger.note_crit(stages.crit_b as usize);
+        }
+    }
+
+    /// Feed a round's fault recovery cost (skipped when zero: fault-free
+    /// rounds carry no recovery observation).
+    pub fn note_fault_recovery(&mut self, recovery_s: f64) {
+        if recovery_s > 0.0 {
+            self.recovery.observe_secs(recovery_s);
+        }
+    }
+
+    /// Feed one buffered-aggregation event's staleness / eliminated-wait.
+    pub fn note_async_event(&mut self, staleness_mean: f64, wait_eliminated_s: f64) {
+        if staleness_mean.is_finite() && staleness_mean >= 0.0 {
+            self.staleness.observe_secs(staleness_mean);
+        }
+        if wait_eliminated_s > 0.0 {
+            self.wait.observe_secs(wait_eliminated_s);
+        }
+    }
+
+    /// Element-wise merge of another observatory shard.
+    pub fn merge(&mut self, other: &Observatory) {
+        self.unit_makespan.merge(&other.unit_makespan);
+        for (a, b) in self.stage.iter_mut().zip(other.stage.iter()) {
+            a.merge(b);
+        }
+        self.staleness.merge(&other.staleness);
+        self.wait.merge(&other.wait);
+        self.recovery.merge(&other.recovery);
+        self.ledger.merge(&other.ledger);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_lanes_nearest_rank() {
+        let l = exact_lanes(&[]);
+        assert!(l.p50_s.is_nan() && l.p90_s.is_nan() && l.p99_s.is_nan());
+        let l = exact_lanes(&[5.0]);
+        assert_eq!((l.p50_s, l.p90_s, l.p99_s), (5.0, 5.0, 5.0));
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let l = exact_lanes(&v);
+        assert_eq!((l.p50_s, l.p90_s, l.p99_s), (50.0, 90.0, 99.0));
+        // Order independence: lanes are a pure function of the multiset.
+        let mut rev = v.clone();
+        rev.reverse();
+        let lr = exact_lanes(&rev);
+        assert_eq!((l.p50_s, l.p90_s, l.p99_s), (lr.p50_s, lr.p90_s, lr.p99_s));
+    }
+
+    #[test]
+    fn ledger_attribution_and_jain() {
+        let mut led = ClientLedger::new();
+        led.note_member(0, 1.0, 0.5, 0.0, false);
+        led.note_member(3, 1.0, 0.5, 2.0, true);
+        assert_eq!(led.len(), 4);
+        assert_eq!(led.rounds_of(0), 1);
+        assert_eq!(led.rounds_of(1), 0);
+        assert_eq!(led.straggler_of(3), 1);
+        assert_eq!(led.wait_of(3), 2.0);
+        // Equal busy → Jain = 1.
+        assert!((led.jain() - 1.0).abs() < 1e-12);
+        led.note_member(0, 3.0, 0.0, 0.0, true);
+        assert!(led.jain() < 1.0);
+        led.note_crit(3);
+        led.note_lost(7);
+        assert_eq!(led.crit_of(3), 1);
+        assert_eq!(led.lost_of(7), 1);
+        assert_eq!(led.len(), 8);
+    }
+
+    #[test]
+    fn empty_ledger_jain_is_nan() {
+        assert!(ClientLedger::new().jain().is_nan());
+    }
+
+    #[test]
+    fn stragglers_rank_by_count_then_id() {
+        let mut led = ClientLedger::new();
+        for _ in 0..3 {
+            led.note_member(5, 1.0, 0.0, 0.0, true);
+        }
+        led.note_member(2, 1.0, 0.0, 0.0, true);
+        led.note_member(9, 1.0, 0.0, 0.0, true);
+        led.note_member(1, 1.0, 0.0, 0.0, false);
+        assert_eq!(led.top_stragglers(2), vec![(5, 3), (2, 1)]);
+        assert_eq!(led.top_stragglers(10), vec![(5, 3), (2, 1), (9, 1)]);
+    }
+
+    #[test]
+    fn ledger_merge_matches_serial() {
+        let mut serial = ClientLedger::new();
+        let mut a = ClientLedger::new();
+        let mut b = ClientLedger::new();
+        for i in 0..20usize {
+            let (c, m, w) = (i as f64, 0.5 * i as f64, 0.1);
+            serial.note_member(i % 7, c, m, w, i % 3 == 0);
+            if i % 2 == 0 {
+                a.note_member(i % 7, c, m, w, i % 3 == 0);
+            } else {
+                b.note_member(i % 7, c, m, w, i % 3 == 0);
+            }
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(serial, merged);
+    }
+
+    #[test]
+    fn sync_round_feeds_sketch_and_ledger() {
+        let mut obs = Observatory::new();
+        let units: Vec<UnitMembers> = vec![(0, Some(1)), (2, None)];
+        let times = [4.0, 2.0];
+        let splits = [[1.0, 0.5, 2.0, 1.5], [1.5, 0.5, 0.0, 0.0]];
+        let lanes = obs.note_sync_round(&units, &times, &splits, 4.0, &[2]);
+        assert_eq!(lanes.p50_s, 2.0);
+        assert_eq!(lanes.p99_s, 4.0);
+        assert_eq!(obs.unit_makespan.count(), 2);
+        // Pair members straggle (4.0 > p50=2.0), solo does not.
+        assert_eq!(obs.ledger.straggler_of(0), 1);
+        assert_eq!(obs.ledger.straggler_of(1), 1);
+        assert_eq!(obs.ledger.straggler_of(2), 0);
+        // Solo waits behind the pair at the barrier.
+        assert_eq!(obs.ledger.wait_of(2), 2.0);
+        assert_eq!(obs.ledger.lost_of(2), 1);
+        assert!((obs.ledger.busy_s(0) - 1.5).abs() < 1e-12);
+        assert!((obs.ledger.busy_s(1) - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn async_window_credits_started_units_only() {
+        let mut obs = Observatory::new();
+        let units: Vec<UnitMembers> = vec![(0, None), (1, None)];
+        let times = [1.0, 3.0];
+        let splits = [[1.0, 0.0, 0.0, 0.0], [2.0, 1.0, 0.0, 0.0]];
+        let lanes = obs.note_async_window(&units, &[true, false], &times, &splits, &[]);
+        assert_eq!(lanes.p99_s, 3.0);
+        assert_eq!(obs.unit_makespan.count(), 2); // sketch sees every unit
+        assert_eq!(obs.ledger.rounds_of(0), 1);
+        assert_eq!(obs.ledger.rounds_of(1), 0); // repriced unit not credited
+        assert_eq!(obs.ledger.wait_of(0), 0.0); // no barrier in async mode
+    }
+
+    #[test]
+    fn stage_feed_skips_zero_stages_and_credits_crit() {
+        let mut obs = Observatory::new();
+        let mut stage_s = [0.0; N_STAGES];
+        stage_s[0] = 1.0;
+        let br = StageBreakdown { stage_s, crit_a: 4, ..Default::default() };
+        obs.note_stages(&br);
+        assert_eq!(obs.stage[0].count(), 1);
+        assert_eq!(obs.stage[1].count(), 0);
+        assert_eq!(obs.ledger.crit_of(4), 1);
+    }
+
+    #[test]
+    fn observatory_merge_matches_serial() {
+        let units: Vec<UnitMembers> = (0..10).map(|i| (i, None)).collect();
+        let times: Vec<f64> = (0..10).map(|i| 1.0 + i as f64).collect();
+        let splits: Vec<[f64; 4]> = times.iter().map(|&t| [t * 0.7, t * 0.3, 0.0, 0.0]).collect();
+        let mut serial = Observatory::new();
+        serial.note_sync_round(&units, &times, &splits, 10.0, &[]);
+        serial.note_fault_recovery(0.5);
+        let mut a = Observatory::new();
+        a.note_sync_round(&units[..5], &times[..5], &splits[..5], 10.0, &[]);
+        a.note_fault_recovery(0.5);
+        let mut b = Observatory::new();
+        b.note_sync_round(&units[5..], &times[5..], &splits[5..], 10.0, &[]);
+        let mut merged = a.clone();
+        merged.merge(&b);
+        // Sketch + per-client sums agree; straggler marks differ because the
+        // shards see different p50s, so compare the sketch and busy fields.
+        assert_eq!(serial.unit_makespan, merged.unit_makespan);
+        assert_eq!(serial.recovery, merged.recovery);
+        for id in 0..10 {
+            assert_eq!(serial.ledger.busy_s(id), merged.ledger.busy_s(id));
+            assert_eq!(serial.ledger.rounds_of(id), merged.ledger.rounds_of(id));
+        }
+    }
+}

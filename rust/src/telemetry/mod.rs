@@ -17,6 +17,11 @@
 //!    writer (host phase spans + simulated pair lanes for the top-k slowest
 //!    pairs), a Prometheus-style text snapshot, and a JSONL round-event
 //!    stream, all driven by [`Telemetry`] from `TelemetryConfig`.
+//! 4. **Distribution observatory** ([`sketch`], [`ledger`], [`report`]) —
+//!    deterministic mergeable quantile sketches over unit makespans /
+//!    stage durations / async staleness / fault recovery, a per-client
+//!    fairness ledger with Jain index and straggler table, and an offline
+//!    `fedpairing report` analyzer over the record streams (DESIGN.md §12).
 //!
 //! **Determinism invariant** (property-tested in `tests/telemetry.rs`):
 //! with telemetry enabled — including trace export — every driver produces
@@ -25,11 +30,16 @@
 
 pub mod breakdown;
 pub mod export;
+pub mod ledger;
 pub mod registry;
+pub mod report;
+pub mod sketch;
 pub mod trace;
 
 pub use breakdown::{StageBreakdown, N_STAGES, STAGE_NAMES};
+pub use ledger::{exact_lanes, ClientLedger, Observatory, RoundLanes};
 pub use registry::{Counter, Gauge, Histo};
+pub use sketch::QuantileSketch;
 
 use crate::config::TelemetryConfig;
 use crate::sim::latency::RoundTime;

@@ -1,0 +1,547 @@
+//! Offline run analyzer (pillar 4, DESIGN.md §12): replay a run's
+//! `.stream.csv` / `.stream.jsonl` record stream and render tail evolution,
+//! stage attribution, fault impact, and the fairness trajectory as text and
+//! machine-readable JSON — without re-running the simulation.
+//!
+//! Both stream formats use shortest-exact float formatting (Rust's default
+//! `{}`), so the per-round quantile lanes parsed here are bit-identical to
+//! the values the run computed in memory; `tests/observatory.rs` pins that
+//! round trip. The CSV loader resolves columns by header name, so streams
+//! from older builds (fewer trailing columns) still load, with the missing
+//! lanes as NaN.
+
+use super::breakdown::{N_STAGES, STAGE_NAMES};
+use super::ledger::RoundLanes;
+use crate::util::json::{Json, JsonObj};
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::io;
+
+/// One parsed stream record — the analyzer's projection of a
+/// `RoundRecord` row.
+#[derive(Clone, Debug)]
+pub struct ReportRow {
+    pub round: usize,
+    pub n_alive: usize,
+    /// Simulated seconds this round (sync) or merge window (async) took.
+    pub sim_round_s: f64,
+    /// Cumulative simulated seconds at this record's commit.
+    pub t_wall_s: f64,
+    /// Mean staleness of the merged updates (NaN on synchronous rounds).
+    pub staleness_mean: f64,
+    /// Critical-path stage seconds, indexed like [`STAGE_NAMES`].
+    pub stage_s: [f64; N_STAGES],
+    pub n_failed: u64,
+    pub n_retries: u64,
+    pub n_lost_updates: u64,
+    pub recovery_s: f64,
+    /// Exact per-round unit-makespan quantile lanes (NaN when the round
+    /// recorded no units).
+    pub lanes: RoundLanes,
+    /// Cumulative Jain fairness index at this round (NaN until any client
+    /// has attributed busy time).
+    pub fairness: f64,
+}
+
+/// A fully parsed record stream plus the derived analyses.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub rows: Vec<ReportRow>,
+}
+
+/// Parse one float CSV field: empty (the NaN encoding) or absent columns
+/// load as NaN; malformed tokens are an error, not a silent NaN.
+fn csv_f64(fields: &[&str], idx: Option<&usize>) -> Result<f64, String> {
+    match idx.and_then(|&i| fields.get(i)) {
+        Some(s) if !s.is_empty() => s
+            .parse::<f64>()
+            .map_err(|e| format!("bad float field {s:?}: {e}")),
+        _ => Ok(f64::NAN),
+    }
+}
+
+/// A float JSON field: missing keys and `null` (the NaN encoding) load as
+/// NaN.
+fn json_f64(obj: &Json, key: &str) -> f64 {
+    obj.get(key).and_then(Json::as_f64).unwrap_or(f64::NAN)
+}
+
+impl Report {
+    /// Load a stream file, dispatching on extension: `.jsonl` parses as a
+    /// JSON-lines stream, anything else as headered CSV.
+    pub fn load(path: &str) -> io::Result<Report> {
+        let text = std::fs::read_to_string(path)?;
+        let parsed = if path.ends_with(".jsonl") {
+            Report::from_jsonl(&text)
+        } else {
+            Report::from_csv(&text)
+        };
+        parsed.map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("{path}: {e}")))
+    }
+
+    /// Parse a `.stream.csv` body (header + one row per record). Columns are
+    /// resolved by header name, so trailing-column growth in either
+    /// direction is tolerated.
+    pub fn from_csv(text: &str) -> Result<Report, String> {
+        let mut lines = text.lines();
+        let header = lines.next().ok_or("empty stream: no header")?;
+        let col: HashMap<&str, usize> =
+            header.split(',').enumerate().map(|(i, n)| (n, i)).collect();
+        if !col.contains_key("round") {
+            return Err("not a record stream: header has no `round` column".into());
+        }
+        let mut rows = Vec::new();
+        for (ln, line) in lines.enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = line.split(',').collect();
+            let at = |name: &str| csv_f64(&fields, col.get(name));
+            let err = |e| format!("line {}: {e}", ln + 2);
+            let round = at("round").map_err(err)?;
+            if round.is_nan() {
+                return Err(format!("line {}: missing round number", ln + 2));
+            }
+            let mut stage_s = [0.0; N_STAGES];
+            for (k, name) in STAGE_NAMES.iter().enumerate() {
+                let v = at(&format!("stage_{name}_s")).map_err(err)?;
+                stage_s[k] = if v.is_nan() { 0.0 } else { v };
+            }
+            let count = |name: &str| -> Result<u64, String> {
+                let v = at(name).map_err(err)?;
+                Ok(if v.is_nan() { 0 } else { v as u64 })
+            };
+            rows.push(ReportRow {
+                round: round as usize,
+                n_alive: at("n_alive").map_err(err)?.max(0.0) as usize,
+                sim_round_s: at("sim_round_s").map_err(err)?,
+                t_wall_s: at("t_wall_s").map_err(err)?,
+                staleness_mean: at("staleness_mean").map_err(err)?,
+                stage_s,
+                n_failed: count("n_failed")?,
+                n_retries: count("n_retries")?,
+                n_lost_updates: count("n_lost_updates")?,
+                recovery_s: {
+                    let v = at("recovery_s").map_err(err)?;
+                    if v.is_nan() {
+                        0.0
+                    } else {
+                        v
+                    }
+                },
+                lanes: RoundLanes {
+                    p50_s: at("mk_p50_s").map_err(err)?,
+                    p90_s: at("mk_p90_s").map_err(err)?,
+                    p99_s: at("mk_p99_s").map_err(err)?,
+                },
+                fairness: at("fairness").map_err(err)?,
+            });
+        }
+        Ok(Report { rows })
+    }
+
+    /// Parse a `.stream.jsonl` body (one `RoundRecord` object per line).
+    pub fn from_jsonl(text: &str) -> Result<Report, String> {
+        let mut rows = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            let o = Json::parse(line).map_err(|e| format!("line {}: {e}", ln + 1))?;
+            let round = o
+                .get("round")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("line {}: missing round number", ln + 1))?;
+            let mut stage_s = [0.0; N_STAGES];
+            if let Some(st) = o.get("stages") {
+                for (k, name) in STAGE_NAMES.iter().enumerate() {
+                    stage_s[k] = st.get(name).and_then(Json::as_f64).unwrap_or(0.0);
+                }
+            }
+            rows.push(ReportRow {
+                round: round as usize,
+                n_alive: json_f64(&o, "n_alive").max(0.0) as usize,
+                sim_round_s: json_f64(&o, "sim_round_s"),
+                t_wall_s: json_f64(&o, "t_wall_s"),
+                staleness_mean: json_f64(&o, "staleness_mean"),
+                stage_s,
+                n_failed: o.get("n_failed").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+                n_retries: o.get("n_retries").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+                n_lost_updates: o.get("n_lost_updates").and_then(Json::as_f64).unwrap_or(0.0)
+                    as u64,
+                recovery_s: o.get("recovery_s").and_then(Json::as_f64).unwrap_or(0.0),
+                lanes: RoundLanes {
+                    p50_s: json_f64(&o, "mk_p50_s"),
+                    p90_s: json_f64(&o, "mk_p90_s"),
+                    p99_s: json_f64(&o, "mk_p99_s"),
+                },
+                fairness: json_f64(&o, "fairness"),
+            });
+        }
+        Ok(Report { rows })
+    }
+
+    /// Total simulated seconds: the last record's wall-clock commit time.
+    pub fn sim_total_s(&self) -> f64 {
+        self.rows.last().map_or(0.0, |r| r.t_wall_s)
+    }
+
+    /// The row with the worst (largest finite) p99 makespan, if any round
+    /// recorded units.
+    pub fn worst_tail(&self) -> Option<&ReportRow> {
+        self.rows
+            .iter()
+            .filter(|r| r.lanes.p99_s.is_finite())
+            .max_by(|a, b| a.lanes.p99_s.total_cmp(&b.lanes.p99_s))
+    }
+
+    /// Critical-path seconds summed per stage across the run.
+    pub fn stage_totals(&self) -> [f64; N_STAGES] {
+        let mut t = [0.0; N_STAGES];
+        for r in &self.rows {
+            for (k, v) in r.stage_s.iter().enumerate() {
+                t[k] += v;
+            }
+        }
+        t
+    }
+
+    /// Run-total fault accounting:
+    /// `(n_failed, n_retries, n_lost_updates, recovery_s)`.
+    pub fn fault_totals(&self) -> (u64, u64, u64, f64) {
+        self.rows.iter().fold((0, 0, 0, 0.0), |(f, r, l, s), row| {
+            (
+                f + row.n_failed,
+                r + row.n_retries,
+                l + row.n_lost_updates,
+                s + row.recovery_s,
+            )
+        })
+    }
+
+    /// First and last finite fairness values — the run's fairness
+    /// trajectory endpoints (`None` when no round carried a ledger value).
+    pub fn fairness_span(&self) -> Option<(f64, f64)> {
+        let first = self.rows.iter().find(|r| r.fairness.is_finite())?;
+        let last = self.rows.iter().rev().find(|r| r.fairness.is_finite())?;
+        Some((first.fairness, last.fairness))
+    }
+
+    /// Indices of up to `k` rows for the tail-evolution table: first, last,
+    /// and evenly spaced rounds between them.
+    fn sampled(&self, k: usize) -> Vec<usize> {
+        let n = self.rows.len();
+        if n <= k || k < 2 {
+            return (0..n).collect();
+        }
+        let mut idx: Vec<usize> = (0..k)
+            .map(|j| j * (n - 1) / (k - 1))
+            .collect();
+        idx.dedup();
+        idx
+    }
+
+    /// Human-readable report.
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "run: {} records, {:.3} simulated seconds",
+            self.rows.len(),
+            self.sim_total_s()
+        );
+        let fmt_lane = |v: f64| {
+            if v.is_finite() {
+                format!("{v:>9.4}")
+            } else {
+                format!("{:>9}", "-")
+            }
+        };
+        let _ = writeln!(s, "\ntail evolution (unit makespan seconds):");
+        let _ = writeln!(s, "  {:>6} {:>9} {:>9} {:>9}", "round", "p50", "p90", "p99");
+        for i in self.sampled(12) {
+            let r = &self.rows[i];
+            let _ = writeln!(
+                s,
+                "  {:>6} {} {} {}",
+                r.round,
+                fmt_lane(r.lanes.p50_s),
+                fmt_lane(r.lanes.p90_s),
+                fmt_lane(r.lanes.p99_s)
+            );
+        }
+        if let Some(w) = self.worst_tail() {
+            let _ = writeln!(
+                s,
+                "  worst tail: round {} (p99 {:.4} s, p99/p50 x{:.2})",
+                w.round,
+                w.lanes.p99_s,
+                w.lanes.p99_s / w.lanes.p50_s
+            );
+        }
+        let totals = self.stage_totals();
+        let grand: f64 = totals.iter().sum();
+        let _ = writeln!(s, "\nstage attribution (critical-path seconds):");
+        for (k, name) in STAGE_NAMES.iter().enumerate() {
+            let share = if grand > 0.0 {
+                100.0 * totals[k] / grand
+            } else {
+                0.0
+            };
+            let _ = writeln!(s, "  {:<14} {:>12.4}  ({share:>5.1}%)", name, totals[k]);
+        }
+        let (nf, nr, nl, rec) = self.fault_totals();
+        let _ = writeln!(
+            s,
+            "\nfaults: {nf} failed, {nr} retries, {nl} lost updates, {rec:.3} s recovery"
+        );
+        match self.fairness_span() {
+            Some((first, last)) => {
+                let _ = writeln!(
+                    s,
+                    "fairness (Jain, cumulative busy time): {first:.4} -> {last:.4}"
+                );
+            }
+            None => {
+                let _ = writeln!(s, "fairness (Jain): no ledger data in stream");
+            }
+        }
+        s
+    }
+
+    /// Machine-readable report. Per-round lanes are re-emitted with
+    /// shortest-exact formatting, so a report of a report is idempotent.
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("n_records", Json::num(self.rows.len() as f64));
+        o.insert("sim_total_s", Json::num(self.sim_total_s()));
+        if let Some(w) = self.worst_tail() {
+            o.insert("worst_tail_round", Json::num(w.round as f64));
+            o.insert("worst_tail_p99_s", Json::num(w.lanes.p99_s));
+        }
+        let totals = self.stage_totals();
+        let mut st = JsonObj::new();
+        for (k, name) in STAGE_NAMES.iter().enumerate() {
+            st.insert(name, Json::num(totals[k]));
+        }
+        o.insert("stage_totals_s", Json::Obj(st));
+        let (nf, nr, nl, rec) = self.fault_totals();
+        let mut fo = JsonObj::new();
+        fo.insert("n_failed", Json::num(nf as f64));
+        fo.insert("n_retries", Json::num(nr as f64));
+        fo.insert("n_lost_updates", Json::num(nl as f64));
+        fo.insert("recovery_s", Json::num(rec));
+        o.insert("faults", Json::Obj(fo));
+        if let Some((first, last)) = self.fairness_span() {
+            o.insert("fairness_first", Json::num(first));
+            o.insert("fairness_last", Json::num(last));
+        }
+        let rounds: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut ro = JsonObj::new();
+                ro.insert("round", Json::num(r.round as f64));
+                ro.insert("mk_p50_s", Json::num(r.lanes.p50_s));
+                ro.insert("mk_p90_s", Json::num(r.lanes.p90_s));
+                ro.insert("mk_p99_s", Json::num(r.lanes.p99_s));
+                ro.insert("fairness", Json::num(r.fairness));
+                Json::Obj(ro)
+            })
+            .collect();
+        o.insert("rounds", Json::Arr(rounds));
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::RoundRecord;
+    use crate::telemetry::breakdown::StageBreakdown;
+
+    fn record(round: usize, lanes: [f64; 3], fairness: f64) -> RoundRecord {
+        let mut stage_s = [0.0; N_STAGES];
+        stage_s[0] = 1.5 * round as f64;
+        stage_s[5] = 0.25;
+        RoundRecord {
+            round,
+            n_alive: 10,
+            train_loss: 1.0,
+            test_acc: f64::NAN,
+            test_loss: f64::NAN,
+            sim_round_s: 0.1 + 0.2 * round as f64,
+            sim_total_s: 10.0 * round as f64,
+            mean_cut: 4.0,
+            stages: StageBreakdown {
+                stage_s,
+                crit_a: 3,
+                crit_b: -1,
+                crit_slack_s: 0.5,
+            },
+            t_wall_s: 10.0 * round as f64,
+            staleness_mean: f64::NAN,
+            faults: crate::faults::FaultCounters {
+                n_failed: round % 2,
+                n_retries: round,
+                n_lost_updates: 0,
+                recovery_s: 0.5 * (round as f64 - 1.0),
+            },
+            mk_p50_s: lanes[0],
+            mk_p90_s: lanes[1],
+            mk_p99_s: lanes[2],
+            fairness,
+        }
+    }
+
+    fn stream() -> Vec<RoundRecord> {
+        vec![
+            record(1, [f64::NAN; 3], f64::NAN),
+            record(2, [1.0 / 3.0, 0.7, 0.9], 0.875),
+            record(3, [0.4, 0.8, 2.5], 0.9),
+            record(4, [0.35, 0.75, 1.1], 0.97),
+        ]
+    }
+
+    fn csv_of(recs: &[RoundRecord]) -> String {
+        let mut s = RoundRecord::csv_header();
+        s.push('\n');
+        for r in recs {
+            s.push_str(&r.csv_row());
+            s.push('\n');
+        }
+        s
+    }
+
+    fn jsonl_of(recs: &[RoundRecord]) -> String {
+        let mut s = String::new();
+        for r in recs {
+            s.push_str(&r.to_json_obj().to_string());
+            s.push('\n');
+        }
+        s
+    }
+
+    /// NaN-aware bit equality for lane comparisons.
+    fn same(a: f64, b: f64) -> bool {
+        a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+    }
+
+    #[test]
+    fn csv_roundtrip_reproduces_lanes_bit_exactly() {
+        let recs = stream();
+        let rep = Report::from_csv(&csv_of(&recs)).unwrap();
+        assert_eq!(rep.rows.len(), recs.len());
+        for (row, rec) in rep.rows.iter().zip(&recs) {
+            assert_eq!(row.round, rec.round);
+            assert!(same(row.lanes.p50_s, rec.mk_p50_s));
+            assert!(same(row.lanes.p90_s, rec.mk_p90_s));
+            assert!(same(row.lanes.p99_s, rec.mk_p99_s));
+            assert!(same(row.fairness, rec.fairness));
+            assert!(same(row.sim_round_s, rec.sim_round_s));
+            assert_eq!(row.stage_s[0].to_bits(), rec.stages.stage_s[0].to_bits());
+        }
+    }
+
+    #[test]
+    fn jsonl_roundtrip_matches_csv_roundtrip() {
+        let recs = stream();
+        let a = Report::from_csv(&csv_of(&recs)).unwrap();
+        let b = Report::from_jsonl(&jsonl_of(&recs)).unwrap();
+        assert_eq!(a.rows.len(), b.rows.len());
+        for (x, y) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(x.round, y.round);
+            assert_eq!(x.n_alive, y.n_alive);
+            assert!(same(x.lanes.p50_s, y.lanes.p50_s));
+            assert!(same(x.lanes.p90_s, y.lanes.p90_s));
+            assert!(same(x.lanes.p99_s, y.lanes.p99_s));
+            assert!(same(x.fairness, y.fairness));
+            assert_eq!(x.n_retries, y.n_retries);
+            assert!(same(x.recovery_s, y.recovery_s));
+        }
+    }
+
+    #[test]
+    fn analyses_cover_tail_stages_faults_fairness() {
+        let rep = Report::from_csv(&csv_of(&stream())).unwrap();
+        assert_eq!(rep.worst_tail().unwrap().round, 3);
+        assert_eq!(rep.sim_total_s(), 40.0);
+        let totals = rep.stage_totals();
+        assert!((totals[0] - 1.5 * (1.0 + 2.0 + 3.0 + 4.0)).abs() < 1e-12);
+        assert!((totals[5] - 1.0).abs() < 1e-12);
+        let (nf, nr, nl, rec) = rep.fault_totals();
+        assert_eq!((nf, nr, nl), (2, 10, 0));
+        assert!((rec - 3.0).abs() < 1e-12);
+        assert_eq!(rep.fairness_span(), Some((0.875, 0.97)));
+    }
+
+    #[test]
+    fn text_report_names_every_section() {
+        let text = Report::from_csv(&csv_of(&stream())).unwrap().render_text();
+        assert!(text.contains("tail evolution"));
+        assert!(text.contains("worst tail: round 3"));
+        assert!(text.contains("stage attribution"));
+        assert!(text.contains("front_fp"));
+        assert!(text.contains("faults: 2 failed, 10 retries"));
+        assert!(text.contains("fairness (Jain, cumulative busy time): 0.8750 -> 0.9700"));
+        // Rounds with no recorded units render dashes, not NaN.
+        assert!(text.contains('-'));
+        assert!(!text.contains("NaN"));
+    }
+
+    #[test]
+    fn json_report_is_parseable_and_complete() {
+        let j = Report::from_csv(&csv_of(&stream())).unwrap().to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("n_records").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(
+            parsed.get("worst_tail_round").and_then(Json::as_f64),
+            Some(3.0)
+        );
+        assert_eq!(
+            parsed
+                .get("stage_totals_s")
+                .and_then(|s| s.get("uplink"))
+                .and_then(Json::as_f64),
+            Some(1.0)
+        );
+        assert_eq!(
+            parsed
+                .get("faults")
+                .and_then(|f| f.get("n_retries"))
+                .and_then(Json::as_f64),
+            Some(10.0)
+        );
+        let rounds = parsed.get("rounds").unwrap().as_arr().unwrap();
+        assert_eq!(rounds.len(), 4);
+        // Round 1 had no units: lanes are null.
+        assert!(rounds[0].get("mk_p50_s").unwrap().as_f64().is_none());
+        assert_eq!(
+            rounds[1].get("mk_p50_s").and_then(Json::as_f64),
+            Some(1.0 / 3.0)
+        );
+    }
+
+    #[test]
+    fn sampling_keeps_first_and_last_rows() {
+        let recs: Vec<RoundRecord> = (1..=40)
+            .map(|r| record(r, [0.1, 0.2, 0.3], 0.9))
+            .collect();
+        let rep = Report::from_csv(&csv_of(&recs)).unwrap();
+        let idx = rep.sampled(12);
+        assert!(idx.len() <= 12);
+        assert_eq!(*idx.first().unwrap(), 0);
+        assert_eq!(*idx.last().unwrap(), 39);
+        assert!(idx.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn loaders_reject_garbage() {
+        assert!(Report::from_csv("").is_err());
+        assert!(Report::from_csv("a,b,c\n1,2,3").is_err());
+        let bad = format!("{}\nnot-a-number,1", RoundRecord::csv_header());
+        assert!(Report::from_csv(&bad).is_err());
+        assert!(Report::from_jsonl("{\"no_round\":1}").is_err());
+        assert!(Report::from_jsonl("{not json").is_err());
+    }
+}

@@ -1,0 +1,283 @@
+//! Deterministic, mergeable log-linear quantile sketches (DESIGN.md §12).
+//!
+//! An HDR-histogram-style sketch over a fixed bucket layout: values are
+//! quantised to integer microsecond ticks, ticks below 2^SUB_BITS land in
+//! exact unit-width buckets, and every power-of-two octave above that is
+//! split into 2^SUB_BITS linear sub-buckets, bounding relative quantile
+//! error by 2^-SUB_BITS ≈ 3.1 %. Because the layout is fixed and the state
+//! is exact integer counts, merging is element-wise addition — commutative
+//! and associative — so any partition of the same observation multiset
+//! produces a bit-identical sketch regardless of feed or merge order. That
+//! is the property that makes the distribution observatory safe at any
+//! `--threads`: sharded feeds merge to the same bytes as a serial feed.
+//!
+//! Quantiles are nearest-rank over the bucket counts, reported at the
+//! bucket's inclusive upper bound (clamped to the observed min/max), so a
+//! quantile of a merged sketch is a deterministic function of the counts
+//! alone.
+
+/// Sub-bucket resolution: each power-of-two octave is split into
+/// `2^SUB_BITS = 32` linear sub-buckets (relative error ≤ 1/32).
+pub const SUB_BITS: u32 = 5;
+/// Sub-buckets per octave.
+const SUB: u64 = 1 << SUB_BITS;
+/// Octaves above the exact range: values with msb ∈ [SUB_BITS, 63].
+const N_OCTAVES: usize = 64 - SUB_BITS as usize;
+/// Total buckets: `SUB` exact unit buckets + `SUB` per octave.
+pub const N_BUCKETS: usize = SUB as usize * (1 + N_OCTAVES);
+
+/// Sketches quantise seconds to integer microsecond ticks.
+const TICKS_PER_S: f64 = 1e6;
+
+/// Bucket index for a tick value. Total order: `bucket_of` is monotone
+/// non-decreasing in `ticks` and covers the full `u64` domain.
+pub fn bucket_of(ticks: u64) -> usize {
+    if ticks < SUB {
+        return ticks as usize;
+    }
+    let msb = 63 - ticks.leading_zeros(); // >= SUB_BITS
+    let shift = msb - SUB_BITS;
+    let sub = (ticks >> shift) - SUB; // in [0, SUB)
+    (SUB + (msb as u64 - SUB_BITS as u64) * SUB + sub) as usize
+}
+
+/// Inclusive upper bound (in ticks) of bucket `idx`, saturating at
+/// `u64::MAX` for the top bucket.
+pub fn bucket_high(idx: usize) -> u64 {
+    debug_assert!(idx < N_BUCKETS);
+    if idx < SUB as usize {
+        return idx as u64;
+    }
+    let oct = (idx - SUB as usize) as u64 / SUB;
+    let sub = (idx - SUB as usize) as u64 % SUB;
+    let next_low = ((SUB + sub + 1) as u128) << oct;
+    (next_low - 1).min(u64::MAX as u128) as u64
+}
+
+/// A fixed-layout log-linear quantile sketch with exact integer state.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QuantileSketch {
+    counts: Vec<u64>,
+    count: u64,
+    sum_ticks: u128,
+    min_ticks: u64,
+    max_ticks: u64,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        QuantileSketch {
+            counts: vec![0; N_BUCKETS],
+            count: 0,
+            sum_ticks: 0,
+            min_ticks: u64::MAX,
+            max_ticks: 0,
+        }
+    }
+}
+
+impl QuantileSketch {
+    pub fn new() -> QuantileSketch {
+        QuantileSketch::default()
+    }
+
+    /// Record one observation in seconds. Negative, NaN and infinite values
+    /// are ignored; values above `u64::MAX` microseconds saturate.
+    pub fn observe_secs(&mut self, v: f64) {
+        if !v.is_finite() || v < 0.0 {
+            return;
+        }
+        let t = v * TICKS_PER_S;
+        let ticks = if t >= u64::MAX as f64 { u64::MAX } else { t.round() as u64 };
+        self.observe_ticks(ticks);
+    }
+
+    /// Record one observation in ticks.
+    pub fn observe_ticks(&mut self, ticks: u64) {
+        self.counts[bucket_of(ticks)] += 1;
+        self.count += 1;
+        self.sum_ticks += ticks as u128;
+        self.min_ticks = self.min_ticks.min(ticks);
+        self.max_ticks = self.max_ticks.max(ticks);
+    }
+
+    /// Merge another sketch into this one: element-wise count addition.
+    /// Commutative and associative, so any feed/merge order over the same
+    /// observation multiset yields bit-identical state.
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum_ticks += other.sum_ticks;
+        self.min_ticks = self.min_ticks.min(other.min_ticks);
+        self.max_ticks = self.max_ticks.max(other.max_ticks);
+    }
+
+    /// Total observations recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact sum of the quantised observations, in seconds.
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_ticks as f64 / TICKS_PER_S
+    }
+
+    /// Smallest observation, in seconds (NaN when empty).
+    pub fn min_secs(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.min_ticks as f64 / TICKS_PER_S
+    }
+
+    /// Largest observation, in seconds (NaN when empty).
+    pub fn max_secs(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.max_ticks as f64 / TICKS_PER_S
+    }
+
+    /// Raw bucket counts (length [`N_BUCKETS`]).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Nearest-rank quantile estimate in seconds: the inclusive upper bound
+    /// of the bucket holding rank `ceil(q·count)`, clamped to the observed
+    /// min/max. NaN when empty.
+    pub fn quantile_secs(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= rank {
+                let est = bucket_high(i).clamp(self.min_ticks, self.max_ticks);
+                return est as f64 / TICKS_PER_S;
+            }
+        }
+        self.max_ticks as f64 / TICKS_PER_S
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_is_monotone_and_total() {
+        let mut prev = 0usize;
+        for msb in 0..64u32 {
+            for probe in [1u64 << msb, (1u64 << msb) | ((1u64 << msb) - 1)] {
+                let b = bucket_of(probe);
+                assert!(b >= prev, "bucket_of not monotone at {probe}");
+                assert!(b < N_BUCKETS);
+                prev = b;
+            }
+        }
+        assert_eq!(bucket_of(u64::MAX), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn low_range_is_exact() {
+        for t in 0..SUB {
+            assert_eq!(bucket_of(t), t as usize);
+            assert_eq!(bucket_high(t as usize), t);
+        }
+    }
+
+    #[test]
+    fn bucket_high_is_tight() {
+        for idx in 0..N_BUCKETS - 1 {
+            let hi = bucket_high(idx);
+            assert_eq!(bucket_of(hi), idx, "high bound of {idx} maps back");
+            assert_eq!(bucket_of(hi + 1), idx + 1, "bound+1 enters next bucket");
+        }
+        assert_eq!(bucket_high(N_BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn relative_error_is_bounded() {
+        let mut s = QuantileSketch::new();
+        // Deterministic pseudo-random-ish spread over several octaves.
+        let mut t = 7u64;
+        let mut vals = Vec::new();
+        for _ in 0..5000 {
+            t = t.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = (t % 50_000_000) as f64 / TICKS_PER_S; // up to 50 s
+            vals.push(v);
+            s.observe_secs(v);
+        }
+        vals.sort_by(|a, b| a.total_cmp(b));
+        for q in [0.5, 0.9, 0.99] {
+            let rank = ((q * vals.len() as f64).ceil() as usize).clamp(1, vals.len());
+            let exact = vals[rank - 1];
+            let est = s.quantile_secs(q);
+            assert!(
+                (est - exact).abs() <= exact / 32.0 + 2e-6,
+                "q={q}: est {est} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_is_order_independent_and_equals_serial() {
+        let vals: Vec<f64> = (0..1000).map(|i| (i * i % 7919) as f64 * 1e-3).collect();
+        let mut serial = QuantileSketch::new();
+        for &v in &vals {
+            serial.observe_secs(v);
+        }
+        // Shard into 4 interleaved chunks, merge in two different orders.
+        let mut shards: Vec<QuantileSketch> = (0..4).map(|_| QuantileSketch::new()).collect();
+        for (i, &v) in vals.iter().enumerate() {
+            shards[i % 4].observe_secs(v);
+        }
+        let mut fwd = QuantileSketch::new();
+        for sh in &shards {
+            fwd.merge(sh);
+        }
+        let mut rev = QuantileSketch::new();
+        for sh in shards.iter().rev() {
+            rev.merge(sh);
+        }
+        assert_eq!(serial, fwd);
+        assert_eq!(serial, rev);
+        assert_eq!(serial.count(), 1000);
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs() {
+        let mut s = QuantileSketch::new();
+        assert!(s.quantile_secs(0.5).is_nan());
+        assert!(s.min_secs().is_nan());
+        s.observe_secs(f64::NAN);
+        s.observe_secs(-1.0);
+        s.observe_secs(f64::INFINITY);
+        assert!(s.is_empty());
+        s.observe_secs(0.0);
+        assert_eq!(s.count(), 1);
+        assert_eq!(s.quantile_secs(0.99), 0.0);
+        s.observe_secs(1e30); // saturates the top bucket
+        assert_eq!(s.count(), 2);
+        assert!(s.quantile_secs(1.0) > 0.0);
+    }
+
+    #[test]
+    fn sum_is_exact_in_ticks() {
+        let mut s = QuantileSketch::new();
+        s.observe_secs(1.5);
+        s.observe_secs(2.25);
+        assert!((s.sum_secs() - 3.75).abs() < 1e-9);
+        assert_eq!(s.count(), 2);
+    }
+}

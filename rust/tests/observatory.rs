@@ -1,0 +1,208 @@
+//! Distribution-observatory integration tests (DESIGN.md §12).
+//!
+//! Pinned properties:
+//!
+//! 1. **Gate invariance** — the quantile lanes and fairness column on
+//!    `RoundRecord` are fed unconditionally, so enabling telemetry (the
+//!    registry gate + trace export) leaves every record bit-identical.
+//! 2. **Thread determinism** — the observatory (sketches + ledger) and the
+//!    per-round lanes are bit-identical at `--threads` 1 and 4, on the
+//!    stable and lossy-radio presets, for all four algorithms.
+//! 3. **Async feed** — buffered-aggregation windows populate the lanes, the
+//!    staleness/wait sketches and the ledger the same way sync rounds do.
+//! 4. **Report round trip** — `fedpairing report` replaying a streamed
+//!    `.stream.csv` / `.stream.jsonl` reproduces the in-run lanes and
+//!    fairness bit-exactly, both loaders agree, and the rendered analyses
+//!    are complete.
+
+use fedpairing::config::{
+    AggregationMode, Algorithm, ExperimentConfig, ScenarioConfig, ScenarioKind,
+};
+use fedpairing::coordinator::metrics::RoundRecord;
+use fedpairing::fleet::simulate_scenario;
+use fedpairing::telemetry::registry;
+use fedpairing::telemetry::report::Report;
+use std::sync::Mutex;
+
+/// Serializes the tests that flip the process-wide registry gate.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn cfg(kind: ScenarioKind, algo: Algorithm) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.n_clients = 24;
+    c.rounds = 12;
+    c.samples_per_client = 128;
+    c.algorithm = algo;
+    c.scenario = ScenarioConfig::preset(kind);
+    c
+}
+
+/// The observability columns of a record, as bit patterns (NaN-safe).
+type Lanes = (usize, u64, u64, u64, u64);
+
+fn lane_bits(rounds: &[RoundRecord]) -> Vec<Lanes> {
+    rounds
+        .iter()
+        .map(|r| {
+            (
+                r.round,
+                r.mk_p50_s.to_bits(),
+                r.mk_p90_s.to_bits(),
+                r.mk_p99_s.to_bits(),
+                r.fairness.to_bits(),
+            )
+        })
+        .collect()
+}
+
+/// Scratch directory for stream output (inside `target/`, never committed).
+fn out_dir() -> std::path::PathBuf {
+    let d = std::path::PathBuf::from("target/test-observatory");
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn lanes_and_fairness_ignore_the_telemetry_gate() {
+    let _g = lock();
+    for kind in [ScenarioKind::Stable, ScenarioKind::LossyRadio] {
+        let off = cfg(kind, Algorithm::FedPairing);
+        let mut on = off.clone();
+        on.telemetry.enabled = true;
+        let a = simulate_scenario(&off).unwrap();
+        let b = simulate_scenario(&on).unwrap();
+        assert_eq!(
+            lane_bits(&a.result.rounds),
+            lane_bits(&b.result.rounds),
+            "{kind:?}: the telemetry gate perturbed the observability columns"
+        );
+        assert_eq!(
+            a.result.observatory, b.result.observatory,
+            "{kind:?}: the telemetry gate perturbed the observatory"
+        );
+    }
+    registry::set_enabled(false);
+    registry::reset();
+}
+
+#[test]
+fn observatory_is_bit_identical_across_thread_counts() {
+    let _g = lock();
+    for kind in [ScenarioKind::Stable, ScenarioKind::LossyRadio] {
+        for algo in [
+            Algorithm::FedPairing,
+            Algorithm::VanillaFL,
+            Algorithm::VanillaSL,
+            Algorithm::SplitFed,
+        ] {
+            let mut one = cfg(kind, algo);
+            one.engine.threads = 1;
+            let mut four = one.clone();
+            four.engine.threads = 4;
+            let a = simulate_scenario(&one).unwrap();
+            let b = simulate_scenario(&four).unwrap();
+            assert_eq!(
+                lane_bits(&a.result.rounds),
+                lane_bits(&b.result.rounds),
+                "{kind:?}/{algo:?}: lanes diverged across thread counts"
+            );
+            assert_eq!(
+                a.result.observatory, b.result.observatory,
+                "{kind:?}/{algo:?}: observatory diverged across thread counts"
+            );
+            // The run actually produced distribution data: every round has
+            // monotone finite lanes and the sketch saw every unit.
+            for r in &a.result.rounds {
+                if r.n_alive == 0 {
+                    continue; // no units this round -> NaN lanes by contract
+                }
+                assert!(r.mk_p50_s.is_finite(), "{kind:?}/{algo:?} round {}", r.round);
+                assert!(r.mk_p50_s <= r.mk_p90_s && r.mk_p90_s <= r.mk_p99_s);
+            }
+            assert!(a.result.observatory.unit_makespan.count() > 0);
+            let last = a.result.rounds.last().unwrap();
+            assert!(last.fairness > 0.0 && last.fairness <= 1.0 + 1e-12);
+        }
+    }
+}
+
+#[test]
+fn async_windows_feed_lanes_sketches_and_ledger() {
+    let _g = lock();
+    let mut c = cfg(ScenarioKind::LossyRadio, Algorithm::FedPairing);
+    c.aggregation = AggregationMode::Async;
+    c.async_agg.buffer_size = 4;
+    c.async_agg.staleness_cap = 8;
+    let run = simulate_scenario(&c).unwrap();
+    let obs = &run.result.observatory;
+    assert!(obs.unit_makespan.count() > 0, "no units fed");
+    assert!(obs.staleness.count() > 0, "no staleness samples fed");
+    assert!(!obs.ledger.is_empty(), "ledger never credited");
+    // Some window recorded units, so some record carries finite lanes.
+    assert!(run.result.rounds.iter().any(|r| r.mk_p99_s.is_finite()));
+    // No barrier in async mode: nobody accrues wait time.
+    let any_wait = (0..obs.ledger.len()).any(|id| obs.ledger.wait_of(id) != 0.0);
+    assert!(!any_wait, "async windows must not charge barrier wait");
+    // Fairness is cumulative and lands in (0, 1].
+    let last = run.result.rounds.last().unwrap();
+    assert!(last.fairness > 0.0 && last.fairness <= 1.0 + 1e-12);
+}
+
+#[test]
+fn report_reproduces_streamed_lanes_bit_exactly() {
+    let _g = lock();
+    let dir = out_dir();
+    let mut c = cfg(ScenarioKind::LossyRadio, Algorithm::FedPairing);
+    c.name = "obsgold".into();
+    c.faults.crash_per_round = 0.05;
+    c.stream_out = Some(dir.to_string_lossy().into_owned());
+    let run = simulate_scenario(&c).unwrap();
+    let base = dir.join(format!(
+        "{}_{}_{}",
+        c.name,
+        c.algorithm.name(),
+        c.distribution.name()
+    ));
+    let base = base.to_string_lossy();
+
+    let csv = Report::load(&format!("{base}.stream.csv")).unwrap();
+    assert_eq!(csv.rows.len(), run.result.rounds.len());
+    for (row, rec) in csv.rows.iter().zip(&run.result.rounds) {
+        assert_eq!(row.round, rec.round);
+        assert_eq!(row.n_alive, rec.n_alive);
+        assert_eq!(row.lanes.p50_s.to_bits(), rec.mk_p50_s.to_bits());
+        assert_eq!(row.lanes.p90_s.to_bits(), rec.mk_p90_s.to_bits());
+        assert_eq!(row.lanes.p99_s.to_bits(), rec.mk_p99_s.to_bits());
+        assert_eq!(row.fairness.to_bits(), rec.fairness.to_bits());
+        assert_eq!(row.recovery_s.to_bits(), rec.faults.recovery_s.to_bits());
+        for (s, t) in row.stage_s.iter().zip(rec.stages.stage_s) {
+            assert_eq!(s.to_bits(), t.to_bits());
+        }
+    }
+
+    // Both stream formats load to the same analysis inputs.
+    let jsonl = Report::load(&format!("{base}.stream.jsonl")).unwrap();
+    assert_eq!(jsonl.rows.len(), csv.rows.len());
+    for (a, b) in jsonl.rows.iter().zip(&csv.rows) {
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.lanes.p99_s.to_bits(), b.lanes.p99_s.to_bits());
+        assert_eq!(a.fairness.to_bits(), b.fairness.to_bits());
+        assert_eq!(a.t_wall_s.to_bits(), b.t_wall_s.to_bits());
+    }
+
+    // The rendered analyses are complete and the JSON output parses.
+    let text = csv.render_text();
+    for section in ["tail evolution", "stage attribution", "faults:", "fairness"] {
+        assert!(text.contains(section), "missing {section:?} in:\n{text}");
+    }
+    let json = csv.to_json().to_string();
+    let parsed = fedpairing::util::json::Json::parse(&json).unwrap();
+    assert_eq!(
+        parsed.get("n_records").unwrap().as_usize().unwrap(),
+        run.result.rounds.len()
+    );
+}

@@ -1,0 +1,108 @@
+#!/usr/bin/env python3
+"""Compare the current BENCH_*.json emissions against a pinned baseline.
+
+Usage: compare_bench.py BENCH_baseline.json [--tolerance-pct N]
+
+The baseline file maps each bench JSON to the top-level metrics worth
+pinning, each with a direction and a baseline value:
+
+    {
+      "tolerance_pct": 10,
+      "metrics": {
+        "BENCH_observatory.json": {
+          "on_rounds_per_s":          {"direction": "higher", "baseline": null},
+          "observatory_overhead_pct": {"direction": "lower",  "baseline": null}
+        }
+      }
+    }
+
+Semantics:
+
+* ``baseline: null`` — record-only: the current value is printed so a
+  maintainer can pin it, but it can never fail the job.
+* ``direction: "higher"`` — bigger is better; fail when the current value
+  drops below ``baseline * (1 - tol)``.
+* ``direction: "lower"`` — smaller is better; fail when the current value
+  rises above ``baseline * (1 + tol)``.
+
+A missing bench file or metric key is a warning, not a failure, so the
+comparison degrades gracefully when a bench is skipped. Exit code 1 iff at
+least one pinned metric regressed beyond tolerance.
+"""
+
+import json
+import sys
+
+
+def load(path):
+    with open(path, "r", encoding="utf-8") as fh:
+        return json.load(fh)
+
+
+def main(argv):
+    if len(argv) < 2 or argv[1] in ("-h", "--help"):
+        print(__doc__.strip())
+        return 2
+    baseline_path = argv[1]
+    baseline = load(baseline_path)
+    tol_pct = float(baseline.get("tolerance_pct", 10))
+    for i, arg in enumerate(argv):
+        if arg == "--tolerance-pct":
+            tol_pct = float(argv[i + 1])
+    tol = tol_pct / 100.0
+
+    regressions = []
+    warnings = []
+    recorded = 0
+    checked = 0
+
+    for bench_file, metrics in sorted(baseline.get("metrics", {}).items()):
+        try:
+            current = load(bench_file)
+        except (OSError, json.JSONDecodeError) as exc:
+            warnings.append(f"{bench_file}: unreadable ({exc})")
+            continue
+        for key, spec in sorted(metrics.items()):
+            direction = spec.get("direction", "higher")
+            if direction not in ("higher", "lower"):
+                warnings.append(f"{bench_file}:{key}: bad direction {direction!r}")
+                continue
+            value = current.get(key)
+            if not isinstance(value, (int, float)):
+                warnings.append(f"{bench_file}:{key}: missing or non-numeric")
+                continue
+            pinned = spec.get("baseline")
+            if pinned is None:
+                recorded += 1
+                print(f"  record   {bench_file}:{key} = {value:.6g} ({direction} is better)")
+                continue
+            checked += 1
+            if direction == "higher":
+                limit = pinned * (1.0 - tol)
+                bad = value < limit
+            else:
+                limit = pinned * (1.0 + tol)
+                bad = value > limit
+            verdict = "REGRESSED" if bad else "ok"
+            print(
+                f"  {verdict:<8} {bench_file}:{key} = {value:.6g} "
+                f"(baseline {pinned:.6g}, limit {limit:.6g}, {direction} is better)"
+            )
+            if bad:
+                regressions.append(f"{bench_file}:{key}")
+
+    for w in warnings:
+        print(f"  warn     {w}")
+    print(
+        f"compare_bench: {checked} checked, {recorded} record-only, "
+        f"{len(warnings)} warnings, {len(regressions)} regressions "
+        f"(tolerance {tol_pct:g}%)"
+    )
+    if regressions:
+        print("REGRESSED metrics: " + ", ".join(regressions))
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
